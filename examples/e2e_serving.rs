@@ -1,0 +1,136 @@
+//! E1 (Fig. 1) — the end-to-end validation driver: boot the full FlexServe
+//! stack (3-model ensemble, shared device, dynamic batcher, REST API), put
+//! it under an open-loop Poisson load of mixed batch sizes from concurrent
+//! HTTP clients, and report latency/throughput. The numbers are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving [rate_rps] [secs]
+//! ```
+
+use flexserve::benchkit;
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::serve;
+use flexserve::http::Client;
+use flexserve::json::{self, Value};
+use flexserve::util::{Histogram, Prng, Stopwatch};
+use flexserve::workload;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rate: f64 = args.first().map(|s| s.parse()).transpose()?.unwrap_or(60.0);
+    let secs: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(10.0);
+
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into();
+    config.http_workers = 8;
+    let (handle, state) = serve(&config)?;
+    println!(
+        "e2e: {} models on shared device, batcher {:?}, target load {rate} req/s x {secs}s",
+        state.ensemble.models().len(),
+        config.batcher.map(|b| b.max_delay),
+    );
+
+    // Open-loop Poisson schedule with the paper's mixed batch sizes
+    // (single frames + small chronological bursts).
+    let mut rng = Prng::new(7);
+    let mix = [(1usize, 0.45), (2, 0.2), (4, 0.2), (8, 0.1), (16, 0.05)];
+    let schedule = workload::poisson_schedule(&mut rng, rate, secs, &mix);
+    let n_requests = schedule.len();
+    let total_rows: usize = schedule.iter().map(|a| a.batch).sum();
+
+    // Pre-generate request bodies (generation must not bottleneck the load).
+    let bodies: Vec<(usize, Vec<u8>)> = schedule
+        .iter()
+        .map(|a| {
+            let (data, _) = workload::make_batch(&mut rng, a.batch);
+            let body = json::obj([
+                ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+                ("batch", Value::from(a.batch)),
+            ]);
+            (a.batch, json::to_string(&body).into_bytes())
+        })
+        .collect();
+
+    // Fire with a small pool of keep-alive clients honoring arrival times.
+    let addr = handle.addr;
+    let latencies = Arc::new(Mutex::new(Histogram::new()));
+    let errors = Arc::new(AtomicU64::new(0));
+    let n_clients = 8;
+    let start = Stopwatch::start();
+    let mut threads = Vec::new();
+    let work: Arc<Vec<(std::time::Duration, usize, Vec<u8>)>> = Arc::new(
+        schedule
+            .iter()
+            .zip(bodies)
+            .map(|(a, (b, body))| (a.at, b, body))
+            .collect(),
+    );
+    for c in 0..n_clients {
+        let work = Arc::clone(&work);
+        let latencies = Arc::clone(&latencies);
+        let errors = Arc::clone(&errors);
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).expect("connect");
+            let mut local = Histogram::new();
+            // Strided assignment: client c takes requests c, c+n, ...
+            for (at, _batch, body) in work.iter().skip(c).step_by(n_clients) {
+                let now = std::time::Duration::from_secs_f64(start.elapsed_secs());
+                if *at > now {
+                    std::thread::sleep(*at - now);
+                }
+                let sw = Stopwatch::start();
+                match client.post("/predict", body.clone()) {
+                    Ok(resp) if resp.status == 200 => local.record(sw.elapsed_micros()),
+                    _ => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            latencies.lock().unwrap().merge(&local);
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let wall = start.elapsed_secs();
+    handle.stop();
+
+    let hist = latencies.lock().unwrap();
+    let errs = errors.load(Ordering::Relaxed);
+    println!("\nE1 (Fig. 1) — end-to-end serving under open-loop Poisson load");
+    let rows = vec![vec![
+        format!("{rate:.0} rps"),
+        format!("{n_requests}"),
+        format!("{total_rows}"),
+        format!("{errs}"),
+        flexserve::util::hist::fmt_micros(hist.p50()),
+        flexserve::util::hist::fmt_micros(hist.p95()),
+        flexserve::util::hist::fmt_micros(hist.p99()),
+        format!("{:.1}", n_requests as f64 / wall),
+        format!("{:.1}", total_rows as f64 / wall),
+    ]];
+    print!(
+        "{}",
+        benchkit::table(
+            "e2e serving",
+            &["offered", "reqs", "rows", "errs", "p50", "p95", "p99", "req/s", "rows/s"],
+            &rows,
+        )
+    );
+
+    // Server-side view.
+    let m = state.metrics.render_json();
+    println!(
+        "server: requests={} rows={} errors={} device p50={}us",
+        m.path(&["counters", "requests_total"]).and_then(Value::as_u64).unwrap_or(0),
+        m.path(&["counters", "rows_total"]).and_then(Value::as_u64).unwrap_or(0),
+        m.path(&["counters", "errors_total"]).and_then(Value::as_u64).unwrap_or(0),
+        m.path(&["latencies", "device_exec_us", "p50_us"]).and_then(Value::as_u64).unwrap_or(0),
+    );
+    anyhow::ensure!(errs == 0, "e2e run had {errs} errors");
+    println!("e2e OK — all {n_requests} requests served, zero errors");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: boot the FlexServe stack in-process, send one REST request,
+//! print the paper-format response.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::serve;
+use flexserve::http::Client;
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start the server: 3-model ensemble, shared device, batcher on.
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into(); // ephemeral port
+    let (handle, state) = serve(&config)?;
+    println!(
+        "serving ensemble [{}] at {}",
+        state.ensemble.models().join(", "),
+        handle.base_url()
+    );
+
+    // 2. Make a 4-frame batch of synthetic camera frames (known labels).
+    let mut rng = Prng::new(7);
+    let (data, labels) = workload::make_batch(&mut rng, 4);
+    println!(
+        "true labels:     {:?}",
+        labels.iter().map(|&l| workload::CLASSES[l]).collect::<Vec<_>>()
+    );
+
+    // 3. POST /predict — one request, every model answers (§2.1).
+    let mut client = Client::connect(handle.addr)?;
+    let body = json::obj([
+        ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+        ("batch", Value::from(4usize)),
+    ]);
+    let resp = client.post_json("/predict", &body)?;
+    anyhow::ensure!(resp.status == 200, "predict failed: {}", resp.status);
+    let v = resp.json_body()?;
+    for model in state.ensemble.models() {
+        let preds: Vec<&str> = v
+            .get(&format!("model_{model}"))
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Value::as_str)
+            .collect();
+        println!("model_{model:8} {preds:?}");
+    }
+
+    // 4. Same request with server-side OR-fusion for 'cross' (§2.1).
+    let body = json::obj([
+        ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+        ("batch", Value::from(4usize)),
+        ("policy", Value::from("any")),
+        ("target", Value::from("cross")),
+    ]);
+    let v = client.post_json("/predict", &body)?.json_body()?;
+    let detections: Vec<bool> = v
+        .path(&["ensemble", "detections"])
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(Value::as_bool)
+        .collect();
+    println!("OR-fusion 'cross' detections: {detections:?}");
+
+    handle.stop();
+    println!("done.");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! §2.1 experiment (E2): dynamic ensemble sensitivity via fusion policies.
+//!
+//! Recasts the 4-class task as binary target detection ("is there a cross
+//! in the frame?") and measures, over a labelled eval set, TPR / FNR / FPR
+//! for each individual model and for Any / Majority / All fusion — the
+//! client-side policy adjustment the paper describes:
+//!
+//! > "for maximum sensitivity the policy is y' = y1|y2|...|yn"
+//!
+//! Expected shape: FNR(any) ≤ FNR(majority) ≤ FNR(all), FPR ordered the
+//! other way.
+//!
+//! ```bash
+//! cargo run --release --example sensitivity
+//! ```
+
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, Confusion, Policy};
+use flexserve::http::Client;
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+
+const EVAL_N: usize = 512;
+const TARGET: &str = "cross";
+
+fn main() -> anyhow::Result<()> {
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into();
+    let (handle, state) = serve(&config)?;
+    let models = state.ensemble.models().to_vec();
+    let mut client = Client::connect(handle.addr)?;
+
+    // Labelled eval workload (same distribution as training).
+    let mut rng = Prng::new(2024);
+    let mut per_model: Vec<Confusion> = vec![Confusion::default(); models.len()];
+    let policies = [Policy::Any, Policy::Majority, Policy::All];
+    let mut per_policy: Vec<Confusion> = vec![Confusion::default(); policies.len()];
+
+    let mut served = 0;
+    while served < EVAL_N {
+        let batch = (EVAL_N - served).min(32);
+        let (data, labels) = workload::make_batch(&mut rng, batch);
+        let body = json::obj([
+            ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+            ("batch", Value::from(batch)),
+        ]);
+        let v = client.post_json("/predict", &body)?.json_body()?;
+
+        // Client-side fusion, exactly as the paper intends.
+        let votes: Vec<Vec<bool>> = models
+            .iter()
+            .map(|m| {
+                v.get(&format!("model_{m}"))
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|c| c.as_str() == Some(TARGET))
+                    .collect()
+            })
+            .collect();
+        for (row, &lbl) in labels.iter().enumerate() {
+            let actual = workload::CLASSES[lbl] == TARGET;
+            for (mi, model_votes) in votes.iter().enumerate() {
+                per_model[mi].record(model_votes[row], actual);
+            }
+            let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
+            for (pi, policy) in policies.iter().enumerate() {
+                per_policy[pi].record(policy.fuse(&row_votes)?, actual);
+            }
+        }
+        served += batch;
+    }
+    handle.stop();
+
+    println!("\nE2 (§2.1) — ensemble sensitivity under fusion policies");
+    println!("target = '{TARGET}', eval n = {EVAL_N}\n");
+    println!("{:<14} {:>7} {:>7} {:>7} {:>7}", "detector", "TPR", "FNR", "FPR", "acc");
+    println!("{}", "-".repeat(46));
+    for (m, c) in models.iter().zip(&per_model) {
+        print_row(&format!("model {m}"), c);
+    }
+    println!("{}", "-".repeat(46));
+    for (p, c) in policies.iter().zip(&per_policy) {
+        print_row(&format!("policy {p}"), c);
+    }
+
+    // Sanity: the monotone sensitivity ordering the paper relies on.
+    let fnr: Vec<f64> = per_policy.iter().map(Confusion::fnr).collect();
+    let fpr: Vec<f64> = per_policy.iter().map(Confusion::fpr).collect();
+    assert!(fnr[0] <= fnr[1] + 1e-9 && fnr[1] <= fnr[2] + 1e-9, "FNR ordering violated: {fnr:?}");
+    assert!(fpr[2] <= fpr[1] + 1e-9 && fpr[1] <= fpr[0] + 1e-9, "FPR ordering violated: {fpr:?}");
+    println!("\nordering holds: FNR any ≤ majority ≤ all; FPR all ≤ majority ≤ any");
+    Ok(())
+}
+
+fn print_row(name: &str, c: &Confusion) {
+    println!(
+        "{:<14} {:>6.1}% {:>6.1}% {:>6.1}% {:>6.1}%",
+        name,
+        c.tpr() * 100.0,
+        c.fnr() * 100.0,
+        c.fpr() * 100.0,
+        c.accuracy() * 100.0
+    );
+}

@@ -1,0 +1,218 @@
+"""AOT bridge: train the zoo, gate Pallas-vs-ref numerics, emit HLO artifacts.
+
+This is the ONLY place Python touches model bits that the Rust server will
+serve. It runs once (`make artifacts`) and produces:
+
+    artifacts/
+      <model>_b<bucket>.hlo.txt   one XLA HLO-text module per (model, batch
+                                  bucket); weights baked in as constants
+      params_<model>.npz          trained params (training cache + provenance)
+      manifest.json               the contract with rust/src/runtime: shapes,
+                                  buckets, class names, SHA-256 per artifact,
+                                  test accuracy, provenance block
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The
+text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Batch buckets: XLA executables are shape-specialized, so §2.3's "flexible
+batch size" is implemented as bucketed batching — the Rust batcher pads a
+B-sized request up to the smallest bucket >= B and truncates the output.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .model import IN_SHAPE, ZOO
+from .train import DATA_SEED, LR, MOMENTUM, STEPS, TRAIN_N, train_model
+
+BUCKETS = [1, 2, 4, 8, 16, 32]
+
+# Bump when anything that affects trained params changes (arch, data, hyper).
+TRAIN_FINGERPRINT = {
+    "train_n": TRAIN_N,
+    "steps": STEPS,
+    "lr": LR,
+    "momentum": MOMENTUM,
+    "data_seed": DATA_SEED,
+    "schema": 4,
+}
+
+
+def to_hlo_text(lowered):
+    """Lowered jax computation -> XLA HLO text (the Rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weights ARE the model — the
+    # default elides them to `constant({...})`, which parses back as garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _flatten_params(params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p.key) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_params(npz, like):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: jnp.asarray(npz["/".join(str(p.key) for p in path)]),
+        like,
+    )
+
+
+def _sha256(path):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _params_cache_valid(path, fingerprint):
+    meta_path = path + ".meta.json"
+    if not (os.path.exists(path) and os.path.exists(meta_path)):
+        return False
+    with open(meta_path) as f:
+        return json.load(f).get("fingerprint") == fingerprint
+
+
+def _get_params(mdef, out_dir, verbose):
+    """Train (or load cached) params for one model; returns (params, acc)."""
+    cache = os.path.join(out_dir, f"params_{mdef.name}.npz")
+    fingerprint = dict(
+        TRAIN_FINGERPRINT, seed=mdef.seed, label_noise=mdef.label_noise
+    )
+    if _params_cache_valid(cache, fingerprint):
+        npz = np.load(cache)
+        params = _unflatten_params(npz, mdef.init())
+        with open(cache + ".meta.json") as f:
+            acc = json.load(f)["test_acc"]
+        print(f"[aot] {mdef.name}: params cache hit (acc {acc:.4f})")
+        return params, acc
+    print(f"[aot] {mdef.name}: training ({STEPS} steps)...")
+    params, acc = train_model(mdef, verbose=verbose)
+    np.savez(cache, **_flatten_params(params))
+    with open(cache + ".meta.json", "w") as f:
+        json.dump({"fingerprint": fingerprint, "test_acc": acc}, f, indent=2)
+    print(f"[aot] {mdef.name}: trained, test acc {acc:.4f}")
+    return params, acc
+
+
+def _gate_numerics(mdef, params):
+    """Hard gate: serving graph (pallas) must match the oracle graph."""
+    x, _ = data.make_dataset(64, seed=DATA_SEED + 2)
+    x = jnp.asarray(data.normalize(x))
+    got = mdef.fwd_pallas(params, x)
+    want = mdef.fwd_ref(params, x)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(want),
+        rtol=2e-4,
+        atol=2e-4,
+        err_msg=f"{mdef.name}: pallas serving graph diverged from oracle",
+    )
+    # Gate argmax agreement too — the class decision is what gets served.
+    assert (
+        np.asarray(jnp.argmax(got, 1)) == np.asarray(jnp.argmax(want, 1))
+    ).all(), f"{mdef.name}: pallas/ref argmax disagreement"
+
+
+def _lower_bucket(mdef, params, bucket):
+    """Lower fwd_pallas with params baked in as HLO constants."""
+    fn = lambda x: (mdef.fwd_pallas(params, x),)
+    spec = jax.ShapeDtypeStruct((bucket,) + IN_SHAPE, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def build(out_dir, buckets=None, verbose=False):
+    buckets = buckets or BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+    models_entry = {}
+    for name, mdef in ZOO.items():
+        params, acc = _get_params(mdef, out_dir, verbose)
+        _gate_numerics(mdef, params)
+        bucket_entries = {}
+        for bucket in buckets:
+            fname = f"{name}_b{bucket}.hlo.txt"
+            fpath = os.path.join(out_dir, fname)
+            text = _lower_bucket(mdef, params, bucket)
+            with open(fpath, "w") as f:
+                f.write(text)
+            bucket_entries[str(bucket)] = {
+                "file": fname,
+                "sha256": _sha256(fpath),
+                "bytes": os.path.getsize(fpath),
+            }
+            print(f"[aot]   {fname}: {len(text)} chars")
+        models_entry[name] = {
+            "arch": name,
+            "seed": mdef.seed,
+            "label_noise": mdef.label_noise,
+            "param_count": mdef.param_count(params),
+            "params_file": f"params_{name}.npz",
+            "params_sha256": _sha256(os.path.join(out_dir, f"params_{name}.npz")),
+            "test_acc": acc,
+            "buckets": bucket_entries,
+        }
+
+    manifest = {
+        "format_version": 1,
+        "input_shape": list(IN_SHAPE),
+        "classes": data.CLASSES,
+        "normalize": {"mean": data.MEAN, "std": data.STD},
+        "buckets": buckets,
+        "models": models_entry,
+        "provenance": {
+            "generator": "python/compile/aot.py",
+            "jax_version": jax.__version__,
+            "train": TRAIN_FINGERPRINT,
+            "dataset": {
+                "kind": "synthetic-shapes-v1",
+                "img": data.IMG,
+                "classes": data.CLASSES,
+                "train_seed": DATA_SEED,
+            },
+            "interchange": "xla-hlo-text",
+            "pallas": "interpret=True (CPU PJRT; Mosaic unavailable)",
+        },
+    }
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {man_path} ({len(models_entry)} models x {len(buckets)} buckets)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(map(str, BUCKETS)),
+        help="comma-separated batch buckets",
+    )
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    buckets = sorted({int(b) for b in args.buckets.split(",")})
+    build(args.out, buckets, args.verbose)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Synthetic "shapes" dataset — the surveillance-style workload substrate.
+
+The paper's running use case (§2.1, §2.3) is detecting a specific object in
+images from cheap sensors. The original evaluation data is not published, so
+per the substitution rule we generate a seeded synthetic corpus that
+exercises the same code path: 16x16 grayscale frames containing one of four
+scene classes:
+
+    0 blank  — sensor noise only (no target)
+    1 square — hollow square outline
+    2 cross  — plus-sign target (the "specific object" in the sensitivity
+               experiments; see rust benches for the present/absent recast)
+    3 disc   — filled disc
+
+Shapes are jittered in position and scale, drawn at random intensity on top
+of Gaussian sensor noise, so the three model architectures genuinely disagree
+on hard frames — which is what makes the §2.1 sensitivity-policy experiment
+non-degenerate.
+"""
+
+import numpy as np
+
+IMG = 16
+CHANNELS = 1
+CLASSES = ["blank", "square", "cross", "disc"]
+NUM_CLASSES = len(CLASSES)
+
+
+def _draw_square(img, cy, cx, r, val):
+    y0, y1 = max(cy - r, 0), min(cy + r, IMG - 1)
+    x0, x1 = max(cx - r, 0), min(cx + r, IMG - 1)
+    img[y0, x0 : x1 + 1] = val
+    img[y1, x0 : x1 + 1] = val
+    img[y0 : y1 + 1, x0] = val
+    img[y0 : y1 + 1, x1] = val
+
+
+def _draw_cross(img, cy, cx, r, val):
+    y0, y1 = max(cy - r, 0), min(cy + r, IMG - 1)
+    x0, x1 = max(cx - r, 0), min(cx + r, IMG - 1)
+    img[cy, x0 : x1 + 1] = val
+    img[y0 : y1 + 1, cx] = val
+
+
+def _draw_disc(img, cy, cx, r, val):
+    yy, xx = np.mgrid[0:IMG, 0:IMG]
+    img[(yy - cy) ** 2 + (xx - cx) ** 2 <= r * r] = val
+
+
+_DRAW = {1: _draw_square, 2: _draw_cross, 3: _draw_disc}
+
+
+def make_dataset(n, seed=0, noise=0.35, jitter=4):
+    """Generate n (image, label) pairs.
+
+    Returns (x, y): x float32 (n, IMG, IMG, 1) in [0, ~1.2], y int32 (n,).
+    Deterministic in (n, seed, noise, jitter) — this tuple is recorded in the
+    artifact manifest's provenance block.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, noise, size=(n, IMG, IMG)).astype(np.float32)
+    y = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    for i in range(n):
+        cls = int(y[i])
+        if cls == 0:
+            continue
+        cy = IMG // 2 + int(rng.integers(-jitter, jitter + 1))
+        cx = IMG // 2 + int(rng.integers(-jitter, jitter + 1))
+        r = int(rng.integers(2, 6))
+        val = float(rng.uniform(0.45, 1.1))
+        _DRAW[cls](x[i], cy, cx, r, val)
+    x = np.clip(x, -1.0, 2.0)
+    return x[..., None], y
+
+
+def normalize(x):
+    """The single shared input transform (§2.2: 'only one data
+    transformation for all models in the ensemble').
+
+    Mirrored bit-for-bit by rust/src/imagepipe (same constants): the Rust
+    request path applies this exactly once per request, for all N models.
+    """
+    return ((x - MEAN) / STD).astype(np.float32)
+
+
+# Fixed normalization constants, baked into both aot-time training and the
+# Rust request path. Computed once from make_dataset(8192, seed=0) and frozen.
+MEAN = 0.1307
+STD = 0.3081
+
+
+def tracking_trace(steps=24, seed=7, noise=0.15):
+    """§2.3 workload: an object (cross) transits the field of view.
+
+    Returns (frames float32 (steps, IMG, IMG, 1), present bool (steps,)):
+    the target enters around 1/3 in and leaves around 2/3 through, moving
+    left→right. Frames outside the transit are blank/noise.
+    """
+    rng = np.random.default_rng(seed)
+    frames = rng.normal(0.0, noise, size=(steps, IMG, IMG)).astype(np.float32)
+    present = np.zeros(steps, dtype=bool)
+    t0, t1 = steps // 3, 2 * steps // 3
+    for t in range(t0, t1 + 1):
+        frac = (t - t0) / max(t1 - t0, 1)
+        cx = int(2 + frac * (IMG - 5))
+        cy = IMG // 2 + int(rng.integers(-2, 3))
+        _draw_cross(frames[t], cy, cx, 4, float(rng.uniform(0.7, 1.1)))
+        present[t] = True
+    frames = np.clip(frames, -1.0, 2.0)
+    return frames[..., None], present

@@ -1,0 +1,12 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+`fused_linear`, `conv2d_3x3`, `maxpool2` are the serving kernels; `ref`
+holds the oracles tests and training use.
+"""
+
+from .conv2d import conv2d_3x3
+from .fused_linear import fused_linear
+from .maxpool import maxpool2
+from . import ref
+
+__all__ = ["conv2d_3x3", "fused_linear", "maxpool2", "ref"]

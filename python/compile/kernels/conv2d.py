@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: 3x3 same-padding conv2d fused with bias + activation.
+
+The convolution is expressed as nine shifted GEMMs accumulated in VMEM —
+the TPU translation of the im2col+GEMM trick: instead of materializing the
+(B*H*W, 9*Cin) patch matrix in HBM (what a CUDA kernel would stage through
+shared memory), each grid step holds one image's padded activation block in
+VMEM and issues 9 (H*W, Cin) x (Cin, Cout) MXU matmuls, one per tap. The
+accumulator, bias add and activation all stay in VMEM.
+
+Grid: one step per BATCH BLOCK of `bb` images (default 32). Serving frames
+are small (16x16), so a whole block of padded activations
+(bb*(H+2)*(W+2)*Cin floats), the weights, and the accumulator
+(bb*H*W*Cout) all fit comfortably in VMEM — e.g. the largest layer here
+(cnn_m conv1, bb=32, Cout=16) is ~1.6 MiB resident, far under the ~16 MiB
+budget. Batch-blocking was the §Perf L1#1 change: it divides the number of
+grid steps (and, under interpret lowering, the number of XLA loop
+iterations) by bb versus the original per-image grid, and turns the 9 tap
+GEMMs into (bb*H*W, Cin) x (Cin, Cout) matmuls — big enough to keep the
+MXU busy. For larger images the grid would tile H as well.
+
+interpret=True is mandatory here (CPU PJRT; see fused_linear.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTIVATIONS = ("none", "relu")
+
+
+# Batch-block size: one grid step handles BB images (clamped to the batch).
+BLOCK_B = 32
+
+
+def _conv3x3_kernel(x_ref, w_ref, b_ref, o_ref, *, bb, h, w, cin, cout, activation):
+    """x_ref: (bb, h+2, w+2, cin) pre-padded; w_ref: (3,3,cin,cout)."""
+    acc = jnp.zeros((bb * h * w, cout), dtype=jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            # Static slice of the padded block: the receptive-field shift.
+            patch = x_ref[:, dy : dy + h, dx : dx + w, :].reshape(bb * h * w, cin)
+            acc += jnp.dot(
+                patch, w_ref[dy, dx], preferred_element_type=jnp.float32
+            )
+    out = acc + b_ref[...]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.reshape(bb, h, w, cout)
+
+
+@partial(jax.jit, static_argnames=("activation", "bb"))
+def conv2d_3x3(x, w, b, activation="none", bb=BLOCK_B):
+    """act(conv2d(x, w, same) + b) via the Pallas conv kernel.
+
+    Args:
+      x: (B, H, W, Cin) f32, NHWC.
+      w: (3, 3, Cin, Cout) f32, HWIO.
+      b: (Cout,) f32.
+      bb: batch-block size per grid step (perf-only; clamped to B).
+    Returns (B, H, W, Cout) f32.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    if x.ndim != 4 or w.shape[:2] != (3, 3):
+        raise ValueError(f"conv2d_3x3 expects NHWC x and 3x3 HWIO w, got {x.shape} {w.shape}")
+    bsz, h, wd, cin = x.shape
+    if w.shape[2] != cin or b.shape != (w.shape[3],):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    cout = w.shape[3]
+
+    bb = max(1, min(bb, bsz))
+    # Zero-pad the batch up to a block multiple (extra rows are discarded).
+    bpad = (-bsz) % bb
+    xp = jnp.pad(
+        x.astype(jnp.float32), ((0, bpad), (1, 1), (1, 1), (0, 0))
+    )
+
+    out = pl.pallas_call(
+        partial(
+            _conv3x3_kernel,
+            bb=bb, h=h, w=wd, cin=cin, cout=cout, activation=activation,
+        ),
+        grid=((bsz + bpad) // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, h + 2, wd + 2, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, h, wd, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz + bpad, h, wd, cout), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, w.astype(jnp.float32), b.astype(jnp.float32).reshape(1, cout))
+    return out[:bsz]

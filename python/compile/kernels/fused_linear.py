@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: tiled GEMM fused with bias add and activation.
+
+This is the serving hot-spot: every dense layer and every conv (via im2col)
+in the FlexServe model zoo bottoms out in this kernel, so the whole ensemble
+forward is dominated by it.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is
+(M/bm, N/bn, K/bk) with K innermost; each (bm, bn) output tile lives in VMEM
+across the K loop (revisiting semantics), accumulates in f32, and the bias +
+activation are applied in VMEM on the last K step so the pre-activation
+matrix never round-trips HBM. Default tiles are 128x128x128 — the MXU
+systolic array shape — giving VMEM residency of
+bm*bk + bk*bn + bm*bn floats (~192 KiB at 128³, well under the ~16 MiB VMEM
+budget, leaving room for double buffering).
+
+The kernel MUST be lowered with interpret=True in this environment: the CPU
+PJRT plugin cannot execute Mosaic custom-calls. interpret=True lowers the
+same grid/loop structure to plain HLO, which the Rust runtime executes.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped defaults. Overridable per call site; bench_micro sweeps these.
+# §Perf L1#2: BLOCK_K=256 (two 128-deep systolic passes per tile) halves the
+# K-loop trip count and measured 2.3x faster than 128 on the fc layers here;
+# VMEM residency at 128x256x128 is still only ~320 KiB.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 256
+
+_ACTIVATIONS = ("none", "relu")
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps_k, activation):
+    """One grid step: o[i,j] += x[i,k] @ w[k,j]; epilogue on the last k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps_k - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _pad_to(x, multiples):
+    """Zero-pad trailing-2D array dims up to the given multiples."""
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def fused_linear(x, w, b, activation="none", bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """act(x @ w + b) via the Pallas GEMM kernel.
+
+    Args:
+      x: (M, K) f32. w: (K, N) f32. b: (N,) f32.
+      activation: "none" | "relu".
+      bm/bn/bk: tile sizes (MXU-shaped 128 by default).
+
+    Inputs are zero-padded to tile multiples (zeros are GEMM-neutral) and the
+    output is sliced back, so arbitrary shapes — in particular arbitrary
+    serving batch sizes — are accepted.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError("fused_linear expects x:(M,K) w:(K,N) b:(N,)")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    # Clamp tiles to the (padded) problem so tiny layers don't pay 128³ pads.
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+
+    xp = _pad_to(x.astype(jnp.float32), (bm, bk))
+    wp = _pad_to(w.astype(jnp.float32), (bk, bn))
+    bp = _pad_to(b.astype(jnp.float32).reshape(1, n), (1, bn))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        partial(
+            _fused_linear_kernel, nsteps_k=grid[2], activation=activation
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _round_up(v, mult):
+    return ((v + mult - 1) // mult) * mult

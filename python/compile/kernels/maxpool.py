@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: 2x2 stride-2 max pooling.
+
+One grid step per BATCH BLOCK (bb images, default 32 — see conv2d.py §Perf
+L1#1 note); the block's feature maps sit in VMEM and the pool is a reshape
++ max-reduce over the 2x2 window axes — a pure VPU (vector unit) op on
+TPU, no MXU involvement, memory-bound. Fused into the same HLO module as
+the conv/GEMM kernels at AOT time.
+
+interpret=True is mandatory here (CPU PJRT; see fused_linear.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 32
+
+
+def _maxpool2_kernel(x_ref, o_ref, *, bb, h, w, c):
+    x = x_ref[...].reshape(bb, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(2, 4))
+
+
+@partial(jax.jit, static_argnames=("bb",))
+def maxpool2(x, bb=BLOCK_B):
+    """2x2/stride-2 max pool. x: (B, H, W, C) f32 with even H, W."""
+    if x.ndim != 4:
+        raise ValueError(f"maxpool2 expects NHWC, got {x.shape}")
+    bsz, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2 needs even H, W; got {x.shape}")
+
+    bb = max(1, min(bb, bsz))
+    bpad = (-bsz) % bb
+    xp = jnp.pad(x.astype(jnp.float32), ((0, bpad), (0, 0), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        partial(_maxpool2_kernel, bb=bb, h=h, w=w, c=c),
+        grid=((bsz + bpad) // bb,),
+        in_specs=[pl.BlockSpec((bb, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bb, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (bsz + bpad, h // 2, w // 2, c), jnp.float32
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp)
+    return out[:bsz]

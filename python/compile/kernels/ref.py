@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness anchors: python/tests/test_kernels.py sweeps
+shapes/dtypes with hypothesis and asserts allclose(kernel, ref); aot.py
+re-asserts model-level agreement before emitting artifacts; train.py uses the
+ref graph for gradients (pallas_call has no registered VJP in interpret
+mode), so kernel==ref is also what makes the trained weights valid for the
+Pallas serving graph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear_ref(x, w, b, activation="none"):
+    """act(x @ w + b). x: (M,K), w: (K,N), b: (N,)."""
+    out = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def conv2d_3x3_ref(x, w, b, activation="none"):
+    """Same-padding 3x3 conv, NHWC/HWIO, via lax.conv_general_dilated."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def maxpool2_ref(x):
+    """2x2 stride-2 max pool via reduce_window."""
+    return jax.lax.reduce_window(
+        x.astype(jnp.float32),
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

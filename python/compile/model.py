@@ -1,0 +1,170 @@
+"""L2: the FlexServe model zoo — three architectures, one param pytree each.
+
+The paper's §2.1 argument is that an ensemble of *architecturally different*
+models captures different inductive biases; FlexServe loads N of them behind
+one endpoint. We provide three:
+
+    cnn_s — 2x (3x3 conv + relu + 2x2 maxpool) -> linear head
+    cnn_m — 3x conv (wider) + 2 pools -> 2-layer MLP head
+    mlp   — flatten -> 3-layer MLP (no spatial prior at all)
+
+Every model has two forward functions over the SAME param pytree:
+
+    fwd_pallas — the serving graph; every layer bottoms out in the L1 Pallas
+                 kernels (fused_linear / conv2d_3x3 / maxpool2). This is what
+                 aot.py lowers to the HLO artifacts the Rust runtime executes.
+    fwd_ref    — the pure-jnp oracle graph used for training gradients
+                 (pallas_call in interpret mode has no VJP) and for the
+                 model-level allclose gate in aot.py / pytest.
+
+Inputs are (B, 16, 16, 1) f32, already normalized (data.normalize); outputs
+are (B, 4) logits.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import data
+from .kernels import conv2d_3x3, fused_linear, maxpool2
+from .kernels.ref import conv2d_3x3_ref, fused_linear_ref, maxpool2_ref
+
+IN_SHAPE = (data.IMG, data.IMG, data.CHANNELS)
+NUM_CLASSES = data.NUM_CLASSES
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# Layer helpers, parameterized by kernel implementation so fwd_pallas and
+# fwd_ref share one topology definition (they must stay structurally equal).
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, cin, cout):
+    kw, kb = jax.random.split(key)
+    return {
+        "w": _he(kw, (3, 3, cin, cout), 9 * cin),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _lin_init(key, nin, nout):
+    kw, kb = jax.random.split(key)
+    return {
+        "w": _he(kw, (nin, nout), nin),
+        "b": jnp.zeros((nout,), jnp.float32),
+    }
+
+
+class _Ops:
+    """Kernel dispatch table: pallas serving kernels or jnp oracles."""
+
+    def __init__(self, conv, linear, pool):
+        self.conv, self.linear, self.pool = conv, linear, pool
+
+
+_PALLAS = _Ops(conv2d_3x3, fused_linear, maxpool2)
+_REF = _Ops(conv2d_3x3_ref, fused_linear_ref, maxpool2_ref)
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+
+
+def _cnn_s_init(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "c1": _conv_init(k1, 1, 8),
+        "c2": _conv_init(k2, 8, 16),
+        "head": _lin_init(k3, 4 * 4 * 16, NUM_CLASSES),
+    }
+
+
+def _cnn_s_fwd(ops, params, x):
+    x = ops.conv(x, params["c1"]["w"], params["c1"]["b"], "relu")
+    x = ops.pool(x)
+    x = ops.conv(x, params["c2"]["w"], params["c2"]["b"], "relu")
+    x = ops.pool(x)
+    x = x.reshape(x.shape[0], -1)
+    return ops.linear(x, params["head"]["w"], params["head"]["b"], "none")
+
+
+def _cnn_m_init(key):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "c1": _conv_init(k1, 1, 16),
+        "c2": _conv_init(k2, 16, 32),
+        "c3": _conv_init(k3, 32, 32),
+        "fc1": _lin_init(k4, 4 * 4 * 32, 64),
+        "head": _lin_init(k5, 64, NUM_CLASSES),
+    }
+
+
+def _cnn_m_fwd(ops, params, x):
+    x = ops.conv(x, params["c1"]["w"], params["c1"]["b"], "relu")
+    x = ops.pool(x)
+    x = ops.conv(x, params["c2"]["w"], params["c2"]["b"], "relu")
+    x = ops.pool(x)
+    x = ops.conv(x, params["c3"]["w"], params["c3"]["b"], "relu")
+    x = x.reshape(x.shape[0], -1)
+    x = ops.linear(x, params["fc1"]["w"], params["fc1"]["b"], "relu")
+    return ops.linear(x, params["head"]["w"], params["head"]["b"], "none")
+
+
+def _mlp_init(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    nin = data.IMG * data.IMG * data.CHANNELS
+    return {
+        "fc1": _lin_init(k1, nin, 128),
+        "fc2": _lin_init(k2, 128, 64),
+        "head": _lin_init(k3, 64, NUM_CLASSES),
+    }
+
+
+def _mlp_fwd(ops, params, x):
+    x = x.reshape(x.shape[0], -1)
+    x = ops.linear(x, params["fc1"]["w"], params["fc1"]["b"], "relu")
+    x = ops.linear(x, params["fc2"]["w"], params["fc2"]["b"], "relu")
+    return ops.linear(x, params["head"]["w"], params["head"]["b"], "none")
+
+
+class ModelDef:
+    """One zoo entry: init + the two forward graphs over shared params."""
+
+    def __init__(self, name, init, fwd, seed, label_noise, lr=0.05):
+        self.name = name
+        self.seed = seed
+        self.lr = lr  # per-arch: the deeper cnn_m diverges at the zoo default
+        # Per-model label corruption rate at train time (see train.py):
+        # makes the three models disagree on hard frames, which is what the
+        # §2.1 sensitivity-policy experiment needs.
+        self.label_noise = label_noise
+        self._init = init
+        self._fwd = fwd
+
+    def init(self):
+        return self._init(jax.random.PRNGKey(self.seed))
+
+    def fwd_pallas(self, params, x):
+        return self._fwd(_PALLAS, params, x)
+
+    def fwd_ref(self, params, x):
+        return self._fwd(_REF, params, x)
+
+    def param_count(self, params=None):
+        params = self.init() if params is None else params
+        return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+ZOO = {
+    "cnn_s": ModelDef("cnn_s", _cnn_s_init, _cnn_s_fwd, seed=1, label_noise=0.06),
+    "cnn_m": ModelDef("cnn_m", _cnn_m_init, _cnn_m_fwd, seed=2, label_noise=0.03, lr=0.02),
+    "mlp": ModelDef("mlp", _mlp_init, _mlp_fwd, seed=3, label_noise=0.08),
+}
+
+MODEL_NAMES = list(ZOO)

@@ -1,0 +1,97 @@
+"""Build-time training for the model zoo.
+
+Gradients flow through the pure-jnp fwd_ref graph (pallas_call has no VJP in
+interpret mode); the trained params are then served through fwd_pallas, which
+aot.py gates with an allclose check against fwd_ref — so the kernel==oracle
+tests are what make this split sound.
+
+Per-model label noise (ModelDef.label_noise) intentionally degrades each
+model differently so the ensemble members disagree on hard frames; that is
+the raw material for the §2.1 sensitivity-policy experiment.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import ZOO
+
+TRAIN_N = 4096
+TEST_N = 1024
+BATCH = 64
+STEPS = 400
+LR = 0.05
+MOMENTUM = 0.9
+DATA_SEED = 0
+
+
+def _cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _corrupt_labels(y, rate, seed):
+    """Flip a fraction of labels uniformly — per-model training noise."""
+    rng = np.random.default_rng(seed + 1000)
+    y = y.copy()
+    flip = rng.random(y.shape[0]) < rate
+    y[flip] = rng.integers(0, data.NUM_CLASSES, size=int(flip.sum()))
+    return y
+
+
+def train_model(mdef, steps=STEPS, verbose=False):
+    """Train one zoo model; returns (params, test_accuracy)."""
+    xtr, ytr = data.make_dataset(TRAIN_N, seed=DATA_SEED)
+    xte, yte = data.make_dataset(TEST_N, seed=DATA_SEED + 1)
+    xtr, xte = data.normalize(xtr), data.normalize(xte)
+    ytr = _corrupt_labels(ytr, mdef.label_noise, mdef.seed)
+
+    params = mdef.init()
+    velocity = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    lr = mdef.lr
+
+    @jax.jit
+    def step(params, velocity, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p: _cross_entropy(mdef.fwd_ref(p, xb), yb)
+        )(params)
+        velocity = jax.tree_util.tree_map(
+            lambda v, g: MOMENTUM * v - lr * g, velocity, grads
+        )
+        params = jax.tree_util.tree_map(lambda p, v: p + v, params, velocity)
+        return params, velocity, loss
+
+    rng = np.random.default_rng(mdef.seed)
+    for i in range(steps):
+        idx = rng.integers(0, TRAIN_N, size=BATCH)
+        params, velocity, loss = step(
+            params, velocity, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx])
+        )
+        if verbose and i % 50 == 0:
+            print(f"  [{mdef.name}] step {i:4d} loss {float(loss):.4f}")
+
+    acc = test_accuracy(mdef, params, xte, yte)
+    if verbose:
+        print(f"  [{mdef.name}] test acc {acc:.4f}")
+    return params, acc
+
+
+def test_accuracy(mdef, params, xte=None, yte=None):
+    if xte is None:
+        xte, yte = data.make_dataset(TEST_N, seed=DATA_SEED + 1)
+        xte = data.normalize(xte)
+    preds = np.asarray(
+        jnp.argmax(jax.jit(mdef.fwd_ref)(params, jnp.asarray(xte)), axis=1)
+    )
+    return float((preds == np.asarray(yte)).mean())
+
+
+def train_zoo(verbose=False):
+    """Train every model; returns {name: (params, acc)}."""
+    return {
+        name: train_model(mdef, verbose=verbose) for name, mdef in ZOO.items()
+    }

@@ -1,0 +1,93 @@
+"""AOT bridge: HLO text emission, numerics gate, manifest contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data
+from compile.model import IN_SHAPE, ZOO
+
+
+def test_to_hlo_text_emits_parseable_module():
+    fn = lambda x: (x * 2.0 + 1.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+    assert text.startswith("HloModule")
+    assert "f32[2,2]" in text
+
+
+def test_hlo_text_includes_large_constants():
+    """The regression that matters: weights must NOT be elided to
+    `constant({...})` — that parses back as garbage on the Rust side."""
+    big = jnp.arange(512.0, dtype=jnp.float32).reshape(8, 64)
+    fn = lambda x: (x @ big,)
+    spec = jax.ShapeDtypeStruct((2, 8), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+    assert "constant({...})" not in text
+    assert "511" in text  # last element is printed
+
+
+def test_params_flatten_roundtrip():
+    mdef = ZOO["cnn_s"]
+    params = mdef.init()
+    flat = aot._flatten_params(params)
+    assert all(isinstance(v, np.ndarray) for v in flat.values())
+    rebuilt = aot._unflatten_params(flat, mdef.init())
+    for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(rebuilt)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gate_numerics_accepts_real_params_and_rejects_mismatch():
+    mdef = ZOO["mlp"]
+    params = mdef.init()
+    aot._gate_numerics(mdef, params)  # pallas == ref must hold
+
+    # Force a mismatch: a poisoned fwd_pallas must be caught.
+    class Poisoned:
+        name = "poisoned"
+
+        def fwd_pallas(self, p, x):
+            return mdef.fwd_pallas(p, x) + 1.0
+
+        def fwd_ref(self, p, x):
+            return mdef.fwd_ref(p, x)
+
+    with pytest.raises(AssertionError):
+        aot._gate_numerics(Poisoned(), params)
+
+
+def test_lower_bucket_embeds_batch_shape():
+    mdef = ZOO["mlp"]
+    params = mdef.init()
+    text = aot._lower_bucket(mdef, params, bucket=4)
+    assert f"f32[4,{IN_SHAPE[0]},{IN_SHAPE[1]},{IN_SHAPE[2]}]" in text
+
+
+def test_real_manifest_contract():
+    """When `make artifacts` has run, validate the manifest the Rust side
+    consumes: required keys, per-model bucket files exist, hashes present."""
+    man_path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    assert man["format_version"] == 1
+    assert man["classes"] == data.CLASSES
+    assert man["input_shape"] == list(IN_SHAPE)
+    assert set(man["models"]) == set(ZOO)
+    art_dir = os.path.dirname(man_path)
+    for name, entry in man["models"].items():
+        assert 0.5 < entry["test_acc"] <= 1.0
+        for bucket, ref in entry["buckets"].items():
+            path = os.path.join(art_dir, ref["file"])
+            assert os.path.exists(path), path
+            assert len(ref["sha256"]) == 64
+    prov = man["provenance"]
+    assert prov["interchange"] == "xla-hlo-text"
+    assert "jax_version" in prov

@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes/activations; every property asserts
+allclose(kernel, ref) — the core correctness signal for the whole stack,
+since the Rust runtime executes exactly these kernels (AOT-lowered).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_3x3, fused_linear, maxpool2
+from compile.kernels.ref import conv2d_3x3_ref, fused_linear_ref, maxpool2_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    got = fused_linear(x, w, b, act)
+    want = fused_linear_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert got.dtype == jnp.float32
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 128]),
+    bk=st.sampled_from([8, 16, 128]),
+)
+def test_fused_linear_tile_sweep(bm, bn, bk):
+    """Result must be invariant to the (perf-only) tiling choice."""
+    x = _rand(0, (33, 47), jnp.float32)
+    w = _rand(1, (47, 21), jnp.float32)
+    b = _rand(2, (21,), jnp.float32)
+    got = fused_linear(x, w, b, "relu", bm=bm, bn=bn, bk=bk)
+    want = fused_linear_ref(x, w, b, "relu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_bf16_inputs_promote():
+    x = _rand(0, (9, 12), jnp.bfloat16)
+    w = _rand(1, (12, 5), jnp.bfloat16)
+    b = _rand(2, (5,), jnp.bfloat16)
+    got = fused_linear(x, w, b)
+    want = fused_linear_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    assert got.dtype == jnp.float32  # f32 accumulation contract
+
+
+def test_fused_linear_relu_clamps():
+    x = -jnp.ones((4, 4))
+    w = jnp.eye(4)
+    b = jnp.zeros((4,))
+    assert (fused_linear(x, w, b, "relu") == 0).all()
+
+
+def test_fused_linear_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fused_linear(jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros((5,)))
+    with pytest.raises(ValueError):
+        fused_linear(jnp.zeros((2, 3)), jnp.zeros((3, 5)), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        fused_linear(jnp.zeros((2, 3)), jnp.zeros((3, 5)), jnp.zeros((5,)), "gelu")
+
+
+# ---------------------------------------------------------------------------
+# conv2d_3x3
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    hw=st.sampled_from([4, 8, 16]),
+    cin=st.sampled_from([1, 2, 8]),
+    cout=st.sampled_from([1, 8, 16]),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, hw, cin, cout, act, seed):
+    x = _rand(seed, (b, hw, hw, cin), jnp.float32)
+    w = _rand(seed + 1, (3, 3, cin, cout), jnp.float32)
+    bias = _rand(seed + 2, (cout,), jnp.float32)
+    got = conv2d_3x3(x, w, bias, act)
+    want = conv2d_3x3_ref(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_identity_kernel():
+    """A delta kernel must reproduce the input channel."""
+    x = _rand(0, (2, 8, 8, 1), jnp.float32)
+    w = jnp.zeros((3, 3, 1, 1)).at[1, 1, 0, 0].set(1.0)
+    got = conv2d_3x3(x, w, jnp.zeros((1,)))
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+def test_conv2d_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        conv2d_3x3(jnp.zeros((2, 8, 8, 1)), jnp.zeros((5, 5, 1, 4)), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        conv2d_3x3(jnp.zeros((2, 8, 8, 2)), jnp.zeros((3, 3, 1, 4)), jnp.zeros((4,)))
+
+
+# ---------------------------------------------------------------------------
+# maxpool2
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    hw=st.sampled_from([2, 4, 8, 16]),
+    c=st.sampled_from([1, 3, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(b, hw, c, seed):
+    x = _rand(seed, (b, hw, hw, c), jnp.float32)
+    np.testing.assert_allclose(maxpool2(x), maxpool2_ref(x), rtol=1e-6)
+
+
+def test_maxpool_odd_dims_rejected():
+    with pytest.raises(ValueError):
+        maxpool2(jnp.zeros((1, 7, 8, 1)))
+
+
+def test_maxpool_is_max():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    got = maxpool2(x)
+    np.testing.assert_array_equal(
+        got[0, :, :, 0], jnp.array([[5.0, 7.0], [13.0, 15.0]])
+    )

@@ -1,0 +1,73 @@
+"""L2 correctness: zoo models — shapes, pallas-vs-ref agreement, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.model import IN_SHAPE, MODEL_NAMES, NUM_CLASSES, ZOO
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = data.make_dataset(16, seed=123)
+    return jnp.asarray(data.normalize(x)), y
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_fwd_shapes(name, batch):
+    x, _ = batch
+    mdef = ZOO[name]
+    params = mdef.init()
+    out = mdef.fwd_ref(params, x)
+    assert out.shape == (x.shape[0], NUM_CLASSES)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_pallas_matches_ref(name, batch):
+    """The serving graph must agree with the training/oracle graph."""
+    x, _ = batch
+    mdef = ZOO[name]
+    params = mdef.init()
+    got = mdef.fwd_pallas(params, x)
+    want = mdef.fwd_ref(params, x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+@pytest.mark.parametrize("bsz", [1, 2, 5, 32])
+def test_batch_size_invariance(name, bsz):
+    """Row i of a batched forward == forward of row i alone (serving
+    correctness under the bucketed batcher: padding must not leak)."""
+    mdef = ZOO[name]
+    params = mdef.init()
+    x = jax.random.normal(jax.random.PRNGKey(9), (bsz,) + IN_SHAPE)
+    full = mdef.fwd_pallas(params, x)
+    one = mdef.fwd_pallas(params, x[:1])
+    np.testing.assert_allclose(full[:1], one, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_init_deterministic(name):
+    a = ZOO[name].init()
+    b = ZOO[name].init()
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(la, lb)
+
+
+def test_archs_are_distinct(batch):
+    """§2.1 premise: different architectures -> different functions."""
+    x, _ = batch
+    outs = [ZOO[n].fwd_ref(ZOO[n].init(), x) for n in MODEL_NAMES]
+    for i in range(len(outs)):
+        for j in range(i + 1, len(outs)):
+            assert not np.allclose(outs[i], outs[j])
+
+
+def test_param_counts_reasonable():
+    counts = {n: ZOO[n].param_count() for n in MODEL_NAMES}
+    assert counts["cnn_m"] > counts["cnn_s"]
+    for n, c in counts.items():
+        assert 1_000 < c < 1_000_000, (n, c)

@@ -1,0 +1,43 @@
+"""Training loop: loss decreases, accuracy beats chance, determinism."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.model import ZOO
+from compile.train import _corrupt_labels, _cross_entropy, train_model
+
+
+def test_cross_entropy_basics():
+    logits = jnp.array([[10.0, 0.0, 0.0, 0.0], [0.0, 10.0, 0.0, 0.0]])
+    labels = jnp.array([0, 1])
+    assert float(_cross_entropy(logits, labels)) < 0.01
+    wrong = jnp.array([3, 2])
+    assert float(_cross_entropy(logits, wrong)) > 5.0
+
+
+def test_corrupt_labels_rate_and_determinism():
+    y = np.zeros(2000, dtype=np.int32)
+    y1 = _corrupt_labels(y, 0.25, seed=1)
+    y2 = _corrupt_labels(y, 0.25, seed=1)
+    np.testing.assert_array_equal(y1, y2)
+    frac_changed = (y1 != y).mean()
+    # rate * (1 - 1/num_classes) expected actual change
+    assert 0.10 < frac_changed < 0.25
+    assert (_corrupt_labels(y, 0.0, seed=1) == y).all()
+
+
+@pytest.mark.parametrize("name", ["cnn_s", "mlp"])
+def test_short_training_beats_chance(name):
+    params, acc = train_model(ZOO[name], steps=60)
+    assert acc > 1.5 / data.NUM_CLASSES, f"{name}: acc {acc} barely above chance"
+
+
+def test_training_deterministic():
+    p1, a1 = train_model(ZOO["mlp"], steps=20)
+    p2, a2 = train_model(ZOO["mlp"], steps=20)
+    assert a1 == a2
+    np.testing.assert_allclose(
+        np.asarray(p1["head"]["w"]), np.asarray(p2["head"]["w"]), rtol=0, atol=0
+    )

@@ -1,0 +1,87 @@
+//! E5 (§2.3) — flexible batch sizes vs fixed-batch deployments.
+//!
+//! Sweeps the client batch size B and compares three serving strategies on
+//! identical hardware (one shared device, full 3-model ensemble):
+//!
+//!   flex      FlexServe bucketed batching: one ensemble forward on the
+//!             smallest AOT bucket ≥ B (zero-padded).
+//!   fixed-1   TFS-style fixed batch=1 deployment: B sequential forwards.
+//!   fixed-32  TFS-style fixed batch=32 deployment: always pad B up to 32.
+//!
+//! Expected shape: flex ≈ fixed-32 at B=32, strictly better below it
+//! (padding tax avoided), and far better than fixed-1 for B > 1
+//! (per-call overhead amortized).
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::coordinator::Ensemble;
+use flexserve::runtime::executor::ExecutorOptions;
+use flexserve::runtime::{ExecutorPool, Manifest};
+use flexserve::util::hist::fmt_micros;
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::sync::Arc;
+
+const ITERS: u64 = 20;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(artifact_dir())?);
+    let pool = Arc::new(ExecutorPool::spawn(
+        Arc::clone(&manifest),
+        ExecutorOptions {
+            warmup: true,
+            ..Default::default()
+        },
+        1,
+    )?);
+    let ensemble = Ensemble::new(Arc::clone(&pool), Arc::clone(&manifest));
+    let mut rng = Prng::new(1);
+    let elems = manifest.sample_elems();
+
+    let mut rows = Vec::new();
+    for batch in [1usize, 2, 3, 4, 6, 8, 12, 16, 24, 32] {
+        let (data, _) = workload::make_batch(&mut rng, batch);
+
+        // flex: one bucketed ensemble forward.
+        let flex = benchkit::measure("flex", 3, ITERS, || {
+            ensemble.forward(&data, batch).unwrap();
+        });
+
+        // fixed-1: B sequential single-frame forwards.
+        let fixed1 = benchkit::measure("fixed-1", 1, ITERS.min(10), || {
+            for i in 0..batch {
+                ensemble
+                    .forward(&data[i * elems..(i + 1) * elems], 1)
+                    .unwrap();
+            }
+        });
+
+        // fixed-32: always pad to the largest bucket.
+        let mut padded = data.clone();
+        padded.resize(32 * elems, 0.0);
+        let fixed32 = benchkit::measure("fixed-32", 1, ITERS.min(10), || {
+            ensemble.forward(&padded, 32).unwrap();
+        });
+
+        let per_img = |mean_us: f64| fmt_micros((mean_us / batch as f64) as u64);
+        rows.push(vec![
+            batch.to_string(),
+            fmt_micros(flex.hist.mean_micros() as u64),
+            fmt_micros(fixed1.hist.mean_micros() as u64),
+            fmt_micros(fixed32.hist.mean_micros() as u64),
+            per_img(flex.hist.mean_micros()),
+            format!("{:.2}x", fixed1.hist.mean_micros() / flex.hist.mean_micros()),
+            format!("{:.2}x", fixed32.hist.mean_micros() / flex.hist.mean_micros()),
+        ]);
+        eprintln!("batch {batch} done");
+    }
+    print!(
+        "{}",
+        benchkit::table(
+            "E5 (§2.3): flexible vs fixed batch — full 3-model ensemble, mean latency per request",
+            &["B", "flex", "fixed-1", "fixed-32", "flex/img", "f1/flex", "f32/flex"],
+            &rows,
+        )
+    );
+    println!("\n(fN/flex > 1 means FlexServe is faster by that factor)");
+    Ok(())
+}

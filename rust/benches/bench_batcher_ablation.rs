@@ -1,0 +1,99 @@
+//! E8 (ablation) — dynamic-batcher window sweep: the latency/throughput
+//! frontier of the FlexServe-RS extension over the paper's pass-through
+//! behaviour.
+//!
+//! 16 closed-loop client threads each send single-frame requests through
+//! the batcher with max_delay ∈ {0, 1, 2, 5, 10} ms. Larger windows
+//! coalesce more rows per device batch (higher device efficiency, higher
+//! queueing latency). max_delay = 0 is the paper's original behaviour.
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::coordinator::{Batcher, BatcherConfig, Ensemble};
+use flexserve::runtime::executor::ExecutorOptions;
+use flexserve::runtime::{ExecutorPool, Manifest};
+use flexserve::util::hist::fmt_micros;
+use flexserve::util::{Histogram, Prng, Stopwatch};
+use flexserve::workload;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const N_THREADS: usize = 16;
+const REQS_PER_THREAD: usize = 25;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(artifact_dir())?);
+    let pool = Arc::new(ExecutorPool::spawn(
+        Arc::clone(&manifest),
+        ExecutorOptions {
+            warmup: true,
+            ..Default::default()
+        },
+        1,
+    )?);
+    let ensemble = Ensemble::new(Arc::clone(&pool), Arc::clone(&manifest));
+
+    let mut rows = Vec::new();
+    for delay_ms in [0u64, 1, 2, 5, 10] {
+        let batcher = Arc::new(Batcher::spawn(
+            ensemble.clone(),
+            BatcherConfig {
+                max_batch: 32,
+                max_delay: Duration::from_millis(delay_ms),
+            },
+        )?);
+
+        let hist = Arc::new(Mutex::new(Histogram::new()));
+        let coalesced = Arc::new(AtomicU64::new(0));
+        let n_batches = Arc::new(AtomicU64::new(0));
+        let start = Stopwatch::start();
+        let threads: Vec<_> = (0..N_THREADS)
+            .map(|t| {
+                let batcher = Arc::clone(&batcher);
+                let hist = Arc::clone(&hist);
+                let coalesced = Arc::clone(&coalesced);
+                let n_batches = Arc::clone(&n_batches);
+                std::thread::spawn(move || {
+                    let mut rng = Prng::new(900 + t as u64);
+                    let mut local = Histogram::new();
+                    for _ in 0..REQS_PER_THREAD {
+                        let (data, _) = workload::make_batch(&mut rng, 1);
+                        let sw = Stopwatch::start();
+                        let (_, stats) = batcher.submit(data, 1).unwrap();
+                        local.record(sw.elapsed_micros());
+                        coalesced.fetch_add(stats.coalesced_rows as u64, Ordering::Relaxed);
+                        n_batches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    hist.lock().unwrap().merge(&local);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = start.elapsed_secs();
+        let n = (N_THREADS * REQS_PER_THREAD) as f64;
+        let h = hist.lock().unwrap();
+        let mean_coalesced =
+            coalesced.load(Ordering::Relaxed) as f64 / n_batches.load(Ordering::Relaxed) as f64;
+        rows.push(vec![
+            format!("{delay_ms}ms"),
+            format!("{:.1}", mean_coalesced),
+            fmt_micros(h.p50()),
+            fmt_micros(h.p95()),
+            fmt_micros(h.p99()),
+            format!("{:.1}/s", n / wall),
+        ]);
+        eprintln!("delay {delay_ms}ms done");
+    }
+    print!(
+        "{}",
+        benchkit::table(
+            "E8: dynamic-batcher window ablation — 16 closed-loop single-frame clients",
+            &["max_delay", "avg rows/batch", "p50", "p95", "p99", "req/s"],
+            &rows,
+        )
+    );
+    println!("\n(0ms = paper's pass-through; window trades queueing latency for device-batch efficiency)");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! E1 (Fig. 1) — end-to-end architecture under open-loop load sweep.
+//!
+//! Boots the complete stack (HTTP → router → batcher → ensemble → PJRT)
+//! and sweeps the offered Poisson rate, reporting achieved throughput and
+//! the latency distribution at each point. The knee of the latency curve
+//! is the practical capacity of this testbed.
+
+use flexserve::benchkit;
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::serve;
+use flexserve::http::Client;
+use flexserve::json::{self, Value};
+use flexserve::util::hist::fmt_micros;
+use flexserve::util::{Histogram, Prng, Stopwatch};
+use flexserve::workload;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const SECS: f64 = 6.0;
+const N_CLIENTS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into();
+    config.artifacts = benchkit::artifact_dir();
+    config.http_workers = 8;
+    let (handle, state) = serve(&config)?;
+    let addr = handle.addr;
+
+    let mix = [(1usize, 0.45), (2, 0.2), (4, 0.2), (8, 0.1), (16, 0.05)];
+    let mut rows = Vec::new();
+    for rate in [25.0, 50.0, 100.0, 200.0] {
+        let mut rng = Prng::new(rate as u64);
+        let schedule = workload::poisson_schedule(&mut rng, rate, SECS, &mix);
+        let bodies: Arc<Vec<(std::time::Duration, Vec<u8>)>> = Arc::new(
+            schedule
+                .iter()
+                .map(|a| {
+                    let (data, _) = workload::make_batch(&mut rng, a.batch);
+                    let body = json::obj([
+                        ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+                        ("batch", Value::from(a.batch)),
+                    ]);
+                    (a.at, json::to_string(&body).into_bytes())
+                })
+                .collect(),
+        );
+        let n_requests = bodies.len();
+        let total_rows: usize = schedule.iter().map(|a| a.batch).sum();
+
+        let latencies = Arc::new(Mutex::new(Histogram::new()));
+        let errors = Arc::new(AtomicU64::new(0));
+        let start = Stopwatch::start();
+        let threads: Vec<_> = (0..N_CLIENTS)
+            .map(|c| {
+                let bodies = Arc::clone(&bodies);
+                let latencies = Arc::clone(&latencies);
+                let errors = Arc::clone(&errors);
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    let mut local = Histogram::new();
+                    for (at, body) in bodies.iter().skip(c).step_by(N_CLIENTS) {
+                        let now = std::time::Duration::from_secs_f64(start.elapsed_secs());
+                        if *at > now {
+                            std::thread::sleep(*at - now);
+                        }
+                        let sw = Stopwatch::start();
+                        match client.post("/predict", body.clone()) {
+                            Ok(r) if r.status == 200 => local.record(sw.elapsed_micros()),
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    latencies.lock().unwrap().merge(&local);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = start.elapsed_secs();
+        let hist = latencies.lock().unwrap().clone();
+        rows.push(vec![
+            format!("{rate:.0}"),
+            n_requests.to_string(),
+            errors.load(Ordering::Relaxed).to_string(),
+            fmt_micros(hist.p50()),
+            fmt_micros(hist.p95()),
+            fmt_micros(hist.p99()),
+            format!("{:.1}", n_requests as f64 / wall),
+            format!("{:.1}", total_rows as f64 / wall),
+        ]);
+        eprintln!("rate {rate} done");
+    }
+    handle.stop();
+
+    print!(
+        "{}",
+        benchkit::table(
+            "E1 (Fig. 1): end-to-end serving, offered-load sweep (Poisson, mixed batch 1-16)",
+            &["offered rps", "reqs", "errs", "p50", "p95", "p99", "req/s", "rows/s"],
+            &rows,
+        )
+    );
+    let m = state.metrics.render_json();
+    println!(
+        "\nserver totals: requests={} rows={} errors={}",
+        m.path(&["counters", "requests_total"]).and_then(Value::as_u64).unwrap_or(0),
+        m.path(&["counters", "rows_total"]).and_then(Value::as_u64).unwrap_or(0),
+        m.path(&["counters", "errors_total"]).and_then(Value::as_u64).unwrap_or(0),
+    );
+    Ok(())
+}

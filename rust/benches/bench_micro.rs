@@ -1,0 +1,122 @@
+//! E9 — microbenchmarks of the request-path substrates, used to verify the
+//! coordinator is not the bottleneck (§Perf) and to steer the optimization
+//! pass: executor dispatch overhead, pad/truncate, JSON codec on predict
+//! payloads, softmax/argmax, the normalize transform.
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::imagepipe::Normalizer;
+use flexserve::json::{self, Value};
+use flexserve::runtime::executor::{ExecRequest, ExecutorOptions};
+use flexserve::runtime::tensor::{argmax_rows, pad_batch, softmax_rows};
+use flexserve::runtime::{Executor, Manifest};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(artifact_dir())?);
+    let elems = manifest.sample_elems();
+    let mut rng = Prng::new(5);
+    let mut rows = Vec::new();
+
+    // --- device path: exec vs dispatch overhead (mlp is the cheapest).
+    let exec = Executor::spawn(
+        Arc::clone(&manifest),
+        ExecutorOptions {
+            models: Some(vec!["mlp".into()]),
+            warmup: true,
+            ..Default::default()
+        },
+    )?;
+    let handle = exec.handle();
+    let (frame, _) = workload::make_batch(&mut rng, 1);
+    let mut exec_us_total = 0u64;
+    let mut exec_count = 0u64; // warmup iterations also run the closure
+    let m = benchkit::measure("mlp b1 roundtrip", 10, 100, || {
+        let r = handle
+            .infer(ExecRequest {
+                model: "mlp".into(),
+                batch: 1,
+                data: frame.clone(),
+            })
+            .unwrap();
+        exec_us_total += r.exec_micros;
+        exec_count += 1;
+    });
+    let mean_rt = m.hist.mean_micros();
+    let mean_exec = exec_us_total as f64 / exec_count as f64;
+    rows.push(vec![
+        "mlp b1: device exec".into(),
+        format!("{:.0}us", mean_exec),
+        String::new(),
+    ]);
+    rows.push(vec![
+        "mlp b1: dispatch overhead (roundtrip - exec)".into(),
+        format!("{:.0}us", mean_rt - mean_exec),
+        format!("{:.1}%", (mean_rt - mean_exec) / mean_rt * 100.0),
+    ]);
+
+    // --- pure CPU paths.
+    let (batch32, _) = workload::make_batch(&mut rng, 32);
+    let norm = Normalizer::new(manifest.norm_mean, manifest.norm_std);
+
+    let m = benchkit::measure("normalize b32", 50, 2000, || {
+        let mut d = batch32.clone();
+        norm.apply(&mut d);
+        std::hint::black_box(d);
+    });
+    rows.push(vec!["normalize b32 (incl clone)".into(), fmt(m.hist.mean_micros()), String::new()]);
+
+    let m = benchkit::measure("pad 3→32", 50, 2000, || {
+        std::hint::black_box(pad_batch(&batch32[..3 * elems], 3, 32, elems));
+    });
+    rows.push(vec!["pad batch 3→32".into(), fmt(m.hist.mean_micros()), String::new()]);
+
+    let logits: Vec<f32> = (0..32 * 4).map(|_| rng.normal() as f32).collect();
+    let m = benchkit::measure("softmax+argmax b32", 50, 5000, || {
+        let mut l = logits.clone();
+        softmax_rows(&mut l, 4);
+        std::hint::black_box(argmax_rows(&l, 4));
+    });
+    rows.push(vec!["softmax+argmax b32x4".into(), fmt(m.hist.mean_micros()), String::new()]);
+
+    // --- JSON codec on a realistic predict body (batch 8).
+    let (b8, _) = workload::make_batch(&mut rng, 8);
+    let body = json::obj([
+        ("data", Value::Arr(b8.iter().map(|&v| Value::from(v)).collect())),
+        ("batch", Value::from(8usize)),
+    ]);
+    let text = json::to_string(&body);
+    rows.push(vec!["predict body b8 size".into(), format!("{}B", text.len()), String::new()]);
+    let m = benchkit::measure("json parse b8", 50, 1000, || {
+        std::hint::black_box(json::parse(&text).unwrap());
+    });
+    rows.push(vec!["json parse b8 body".into(), fmt(m.hist.mean_micros()), String::new()]);
+    let m = benchkit::measure("json ser b8", 50, 1000, || {
+        std::hint::black_box(json::to_string(&body));
+    });
+    rows.push(vec!["json serialize b8 body".into(), fmt(m.hist.mean_micros()), String::new()]);
+    let m = benchkit::measure("f32vec b8", 50, 1000, || {
+        let v = json::parse(&text).unwrap();
+        std::hint::black_box(v.get("data").unwrap().as_f32_vec().unwrap());
+    });
+    rows.push(vec!["parse + extract f32 vec b8".into(), fmt(m.hist.mean_micros()), String::new()]);
+
+    print!(
+        "{}",
+        benchkit::table(
+            "E9: request-path microbenchmarks",
+            &["path", "mean", "note"],
+            &rows,
+        )
+    );
+    Ok(())
+}
+
+fn fmt(us: f64) -> String {
+    if us < 1000.0 {
+        format!("{us:.1}us")
+    } else {
+        format!("{:.2}ms", us / 1000.0)
+    }
+}

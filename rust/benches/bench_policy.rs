@@ -1,0 +1,114 @@
+//! E2 (§2.1) — sensitivity-policy sweep over the full policy family.
+//!
+//! Direct-ensemble variant of `examples/sensitivity.rs` with more policies
+//! (adds atleast:2 and accuracy-weighted fusion) and a larger eval set.
+//! Regenerates the §2.1 claim: OR-fusion ("any") minimizes false negatives;
+//! stricter policies trade sensitivity for specificity — the client picks
+//! its point on that curve per request, with no redeployment.
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::coordinator::{Confusion, Ensemble, Policy};
+use flexserve::runtime::executor::ExecutorOptions;
+use flexserve::runtime::{ExecutorPool, Manifest};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::sync::Arc;
+
+const EVAL_N: usize = 1024;
+const TARGET_CLASS: usize = 2; // "cross"
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(artifact_dir())?);
+    let pool = Arc::new(ExecutorPool::spawn(
+        Arc::clone(&manifest),
+        ExecutorOptions {
+            warmup: true,
+            ..Default::default()
+        },
+        1,
+    )?);
+    let ensemble = Ensemble::new(pool, Arc::clone(&manifest));
+    let models = ensemble.models().to_vec();
+
+    // Accuracy-weighted fusion: weights from the manifest's recorded test
+    // accuracies (provenance paying off), threshold = half the total.
+    let weights: Vec<f64> = models
+        .iter()
+        .map(|m| manifest.model(m).unwrap().test_acc)
+        .collect();
+    let threshold = weights.iter().sum::<f64>() / 2.0;
+    let policies: Vec<Policy> = vec![
+        Policy::Any,
+        Policy::AtLeast(2),
+        Policy::Majority,
+        Policy::All,
+        Policy::Weighted {
+            weights,
+            threshold,
+        },
+    ];
+
+    let mut per_model: Vec<Confusion> = vec![Confusion::default(); models.len()];
+    let mut per_policy: Vec<Confusion> = vec![Confusion::default(); policies.len()];
+    let mut rng = Prng::new(31337);
+    let mut served = 0;
+    while served < EVAL_N {
+        let batch = (EVAL_N - served).min(32);
+        let (data, labels) = workload::make_batch(&mut rng, batch);
+        let norm = flexserve::imagepipe::Normalizer::new(manifest.norm_mean, manifest.norm_std);
+        let normed = norm.applied(&data);
+        let out = ensemble.forward(&normed, batch)?;
+        let votes = out.votes_for_class(TARGET_CLASS);
+        for (row, &lbl) in labels.iter().enumerate() {
+            let actual = lbl == TARGET_CLASS;
+            for (mi, mv) in votes.iter().enumerate() {
+                per_model[mi].record(mv[row], actual);
+            }
+            let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
+            for (pi, p) in policies.iter().enumerate() {
+                per_policy[pi].record(p.fuse(&row_votes)?, actual);
+            }
+        }
+        served += batch;
+    }
+
+    let fmt = |c: &Confusion| {
+        vec![
+            format!("{:.1}%", c.tpr() * 100.0),
+            format!("{:.1}%", c.fnr() * 100.0),
+            format!("{:.1}%", c.fpr() * 100.0),
+            format!("{:.1}%", c.accuracy() * 100.0),
+        ]
+    };
+    let mut rows = Vec::new();
+    for (m, c) in models.iter().zip(&per_model) {
+        let mut r = vec![format!("model {m}")];
+        r.extend(fmt(c));
+        rows.push(r);
+    }
+    for (p, c) in policies.iter().zip(&per_policy) {
+        let mut r = vec![format!("policy {p}")];
+        r.extend(fmt(c));
+        rows.push(r);
+    }
+    print!(
+        "{}",
+        benchkit::table(
+            &format!(
+                "E2 (§2.1): sensitivity policies, target='{}', n={EVAL_N}",
+                manifest.classes[TARGET_CLASS]
+            ),
+            &["detector", "TPR", "FNR", "FPR", "acc"],
+            &rows,
+        )
+    );
+
+    // The §2.1 ordering claims, asserted.
+    let fnr: Vec<f64> = per_policy.iter().map(Confusion::fnr).collect();
+    assert!(
+        fnr[0] <= fnr[1] + 1e-9 && fnr[1] <= fnr[2] + 1e-9 && fnr[2] <= fnr[3] + 1e-9,
+        "FNR must be monotone any ≤ atleast:2 ≤ majority ≤ all: {fnr:?}"
+    );
+    println!("\nFNR monotone across any ≤ atleast:2 ≤ majority ≤ all: OK");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! E3 (§2.2) — one shared device vs one device client per model.
+//!
+//! For ensemble sizes n = 1..3, builds:
+//!   shared    one PJRT client hosting all n models (FlexServe layout);
+//!   unshared  n PJRT clients, one model each (one-process-per-model
+//!             layout of per-model endpoints).
+//!
+//! Memory is measured in a FRESH SUBPROCESS per layout (self-exec child
+//! mode) so one-time XLA runtime init and allocator reuse don't confound
+//! the comparison; latency/throughput are measured in-process on the same
+//! workload. Expected shape: unshared memory grows ~n× faster (client +
+//! runtime duplicated per model) with no throughput advantage on one
+//! physical device.
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::coordinator::Ensemble;
+use flexserve::runtime::executor::{ExecRequest, ExecutorOptions};
+use flexserve::runtime::{Executor, ExecutorPool, Manifest};
+use flexserve::util::hist::fmt_micros;
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::sync::Arc;
+
+const BATCH: usize = 8;
+const ITERS: u64 = 25;
+const CHILD_ENV: &str = "FLEXSERVE_E3_CHILD";
+
+fn main() -> anyhow::Result<()> {
+    if let Ok(spec) = std::env::var(CHILD_ENV) {
+        return child(&spec);
+    }
+
+    let manifest = Arc::new(Manifest::load(artifact_dir())?);
+    let all_models = manifest.model_names();
+    let mut rng = Prng::new(3);
+    let (data, _) = workload::make_batch(&mut rng, BATCH);
+    let exe = std::env::current_exe()?;
+
+    // A child that loads nothing: baseline process footprint incl. the
+    // one-time XLA/PJRT runtime init, subtracted from every measurement.
+    let base_kib = spawn_child(&exe, "none:0")?;
+
+    let mut rows = Vec::new();
+    for n in 1..=all_models.len() {
+        let models: Vec<String> = all_models[..n].to_vec();
+
+        // --- memory, each layout in a fresh process.
+        let shared_mem = spawn_child(&exe, &format!("shared:{n}"))?.saturating_sub(base_kib);
+        let unshared_mem = spawn_child(&exe, &format!("unshared:{n}"))?.saturating_sub(base_kib);
+
+        // --- latency/throughput, in-process.
+        let pool = Arc::new(ExecutorPool::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                models: Some(models.clone()),
+                warmup: true,
+                ..Default::default()
+            },
+            1,
+        )?);
+        let ensemble =
+            Ensemble::new(Arc::clone(&pool), Arc::clone(&manifest)).with_models(models.clone())?;
+        let shared = benchkit::measure("shared", 3, ITERS, || {
+            ensemble.forward(&data, BATCH).unwrap();
+        });
+        drop(ensemble);
+        drop(pool);
+
+        let executors: Vec<Executor> = models
+            .iter()
+            .map(|m| {
+                Executor::spawn(
+                    Arc::clone(&manifest),
+                    ExecutorOptions {
+                        models: Some(vec![m.clone()]),
+                        warmup: true,
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let handles: Vec<_> = executors.iter().map(|e| e.handle()).collect();
+        let unshared = benchkit::measure("unshared", 3, ITERS, || {
+            let rxs: Vec<_> = handles
+                .iter()
+                .zip(&models)
+                .map(|(h, m)| {
+                    h.infer_async(ExecRequest {
+                        model: m.clone(),
+                        batch: BATCH,
+                        data: data.clone(),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        drop(executors);
+
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.1}MiB", shared_mem as f64 / 1024.0),
+            format!("{:.1}MiB", unshared_mem as f64 / 1024.0),
+            format!("{:.2}x", unshared_mem as f64 / shared_mem.max(1) as f64),
+            fmt_micros(shared.hist.mean_micros() as u64),
+            fmt_micros(unshared.hist.mean_micros() as u64),
+            format!("{:.1}/s", shared.throughput()),
+            format!("{:.1}/s", unshared.throughput()),
+        ]);
+        eprintln!("n={n} done");
+    }
+    print!(
+        "{}",
+        benchkit::table(
+            "E3 (§2.2): shared device vs per-model clients — fresh-process memory + ensemble forward (batch 8)",
+            &["n", "mem(sh)", "mem(un)", "un/sh", "lat(sh)", "lat(un)", "fwd/s(sh)", "fwd/s(un)"],
+            &rows,
+        )
+    );
+    println!(
+        "\n(mem = RSS above a no-models child incl. one warmup; un/sh > 1 → unshared layout costs more memory)"
+    );
+    Ok(())
+}
+
+/// Child mode: load the requested layout, print peak RSS (KiB), exit.
+fn child(spec: &str) -> anyhow::Result<()> {
+    let (layout, n_str) = spec.split_once(':').expect("spec layout:n");
+    let n: usize = n_str.parse()?;
+    if layout != "none" {
+        let manifest = Arc::new(Manifest::load(artifact_dir())?);
+        let models: Vec<String> = manifest.model_names()[..n].to_vec();
+        let mut keep: Vec<Executor> = Vec::new();
+        match layout {
+            "shared" => keep.push(Executor::spawn(
+                Arc::clone(&manifest),
+                ExecutorOptions {
+                    models: Some(models),
+                    warmup: true,
+                    ..Default::default()
+                },
+            )?),
+            "unshared" => {
+                for m in models {
+                    keep.push(Executor::spawn(
+                        Arc::clone(&manifest),
+                        ExecutorOptions {
+                            models: Some(vec![m]),
+                            warmup: true,
+                            ..Default::default()
+                        },
+                    )?);
+                }
+            }
+            other => anyhow::bail!("bad layout {other}"),
+        }
+        println!("{}", benchkit::rss_kib());
+        drop(keep);
+    } else {
+        // Baseline: init a bare PJRT client only (one-time runtime cost).
+        let _client = xla_client_touch()?;
+        println!("{}", benchkit::rss_kib());
+    }
+    Ok(())
+}
+
+/// Touch the XLA runtime without loading any model.
+fn xla_client_touch() -> anyhow::Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}
+
+fn spawn_child(exe: &std::path::Path, spec: &str) -> anyhow::Result<u64> {
+    let out = std::process::Command::new(exe)
+        .env(CHILD_ENV, spec)
+        .env("FLEXSERVE_ARTIFACTS", artifact_dir())
+        .output()?;
+    anyhow::ensure!(
+        out.status.success(),
+        "child {spec} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8(out.stdout)?;
+    Ok(text
+        .lines()
+        .last()
+        .unwrap_or("0")
+        .trim()
+        .parse()
+        .unwrap_or(0))
+}

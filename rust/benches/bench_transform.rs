@@ -1,0 +1,73 @@
+//! E4 (§2.2) — "requiring only one data transformation for all models in
+//! the ensemble".
+//!
+//! FlexServe normalizes the input batch once per request; a per-model-
+//! endpoint deployment transforms once per model (and serializes the
+//! payload once per model, which we also measure — the client pays N HTTP
+//! bodies). Reports the transform + encode cost per request for N = 1..3
+//! models at several batch sizes.
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::imagepipe::Normalizer;
+use flexserve::json::{self, Value};
+use flexserve::runtime::Manifest;
+use flexserve::util::hist::fmt_micros;
+use flexserve::util::Prng;
+use flexserve::workload;
+
+const ITERS: u64 = 200;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifact_dir())?;
+    let norm = Normalizer::new(manifest.norm_mean, manifest.norm_std);
+    let mut rng = Prng::new(4);
+
+    let mut rows = Vec::new();
+    for batch in [1usize, 8, 32] {
+        let (data, _) = workload::make_batch(&mut rng, batch);
+        for n_models in 1..=3usize {
+            // FlexServe: one transform + one JSON body per request.
+            let once = benchkit::measure("once", 20, ITERS, || {
+                let mut d = data.clone();
+                norm.apply(&mut d);
+                let body = json::obj([
+                    ("data", Value::Arr(d.iter().map(|&v| Value::from(v)).collect())),
+                    ("batch", Value::from(batch)),
+                ]);
+                std::hint::black_box(json::to_string(&body));
+            });
+            // Per-model endpoints: transform + body once PER MODEL.
+            let per_model = benchkit::measure("per-model", 20, ITERS, || {
+                for _ in 0..n_models {
+                    let mut d = data.clone();
+                    norm.apply(&mut d);
+                    let body = json::obj([
+                        ("data", Value::Arr(d.iter().map(|&v| Value::from(v)).collect())),
+                        ("batch", Value::from(batch)),
+                    ]);
+                    std::hint::black_box(json::to_string(&body));
+                }
+            });
+            rows.push(vec![
+                batch.to_string(),
+                n_models.to_string(),
+                fmt_micros(once.hist.mean_micros() as u64),
+                fmt_micros(per_model.hist.mean_micros() as u64),
+                format!(
+                    "{:.2}x",
+                    per_model.hist.mean_micros() / once.hist.mean_micros()
+                ),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        benchkit::table(
+            "E4 (§2.2): transform-once vs transform-per-model (normalize + JSON encode)",
+            &["batch", "N models", "once", "per-model", "ratio"],
+            &rows,
+        )
+    );
+    println!("\n(expected ratio ≈ N: the per-model layout repeats the work N times)");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! E7 (§2.2) — "Scaling horizontally to multiple CPU cores is also
+//! possible through the use of Gunicorn workers."
+//!
+//! Sweeps the device-worker count (each worker = one PJRT client with the
+//! full ensemble resident, the analogue of one Gunicorn worker process) and
+//! measures closed-loop ensemble throughput from 8 concurrent request
+//! threads. Expected shape: near-linear scaling until core saturation.
+
+use flexserve::benchkit::{self, artifact_dir};
+use flexserve::coordinator::Ensemble;
+use flexserve::runtime::executor::ExecutorOptions;
+use flexserve::runtime::{ExecutorPool, Manifest};
+use flexserve::util::hist::fmt_micros;
+use flexserve::util::{Histogram, Prng, Stopwatch};
+use flexserve::workload;
+use std::sync::{Arc, Mutex};
+
+const BATCH: usize = 4;
+const REQS_PER_THREAD: usize = 30;
+const N_THREADS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(artifact_dir())?);
+    let mut rng = Prng::new(11);
+    let (data, _) = workload::make_batch(&mut rng, BATCH);
+
+    let mut rows = Vec::new();
+    let mut base_rate = 0.0;
+    for workers in [1usize, 2, 4] {
+        let pool = Arc::new(ExecutorPool::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                warmup: true,
+                ..Default::default()
+            },
+            workers,
+        )?);
+        let ensemble = Ensemble::new(Arc::clone(&pool), Arc::clone(&manifest));
+
+        let hist = Arc::new(Mutex::new(Histogram::new()));
+        let start = Stopwatch::start();
+        let threads: Vec<_> = (0..N_THREADS)
+            .map(|_| {
+                let ensemble = ensemble.clone();
+                let data = data.clone();
+                let hist = Arc::clone(&hist);
+                std::thread::spawn(move || {
+                    let mut local = Histogram::new();
+                    for _ in 0..REQS_PER_THREAD {
+                        let sw = Stopwatch::start();
+                        ensemble.forward(&data, BATCH).unwrap();
+                        local.record(sw.elapsed_micros());
+                    }
+                    hist.lock().unwrap().merge(&local);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = start.elapsed_secs();
+        let n = (N_THREADS * REQS_PER_THREAD) as f64;
+        let rate = n / wall;
+        if workers == 1 {
+            base_rate = rate;
+        }
+        let h = hist.lock().unwrap();
+        rows.push(vec![
+            workers.to_string(),
+            format!("{rate:.1}/s"),
+            format!("{:.2}x", rate / base_rate),
+            fmt_micros(h.p50()),
+            fmt_micros(h.p95()),
+        ]);
+        eprintln!("workers={workers} done");
+    }
+    print!(
+        "{}",
+        benchkit::table(
+            "E7 (§2.2): horizontal scaling — device workers (Gunicorn-worker analogue), closed-loop, 8 client threads",
+            &["workers", "ensemble fwd/s", "speedup", "p50", "p95"],
+            &rows,
+        )
+    );
+    Ok(())
+}

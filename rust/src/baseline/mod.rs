@@ -1,0 +1,192 @@
+//! The comparison baseline: a TensorFlow-Serving-style deployment model.
+//!
+//! The paper contrasts FlexServe against serving stacks where (a) each
+//! model sits behind its **own** endpoint, (b) batch shape is **fixed** per
+//! deployed model, and (c) the input transform runs **per model** because
+//! each endpoint owns its preprocessing. This module implements exactly
+//! that deployment so the benches can measure the difference on equal
+//! hardware:
+//!
+//! * `POST /v1/models/:name/predict` — one endpoint per model (TFS URL
+//!   shape), body `{"data": [...]}`.
+//! * Requests whose batch ≠ the deployment's `fixed_batch` are rejected
+//!   with 422 (clients must pad/loop, as with a fixed-shape TFS
+//!   SavedModel).
+//! * Each model runs on its **own** PJRT client (own device memory) —
+//!   the "unshared" memory layout of one-model-per-process serving.
+//! * The normalization transform executes inside each model's handler —
+//!   once per model, not once per request.
+
+use crate::coordinator::Metrics;
+use crate::http::{Response, Router, Server, ServerHandle};
+use crate::imagepipe::Normalizer;
+use crate::json::{self, Value};
+use crate::runtime::executor::{ExecRequest, ExecutorOptions};
+use crate::runtime::tensor::argmax_rows;
+use crate::runtime::{Executor, ExecutorHandle, Manifest};
+use crate::util::Stopwatch;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    pub addr: String,
+    pub http_workers: usize,
+    pub artifacts: PathBuf,
+    /// The one batch shape each endpoint accepts (TFS fixed-shape model).
+    pub fixed_batch: usize,
+    /// Models to deploy (None = all).
+    pub models: Option<Vec<String>>,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig {
+            addr: "127.0.0.1:8081".into(),
+            http_workers: 8,
+            artifacts: crate::runtime::manifest::default_artifact_dir(),
+            fixed_batch: 1,
+            models: None,
+        }
+    }
+}
+
+pub struct BaselineState {
+    pub manifest: Arc<Manifest>,
+    /// (model name, its own device client, its own transform).
+    pub models: Vec<(String, ExecutorHandle, Normalizer)>,
+    pub fixed_batch: usize,
+    pub metrics: Arc<Metrics>,
+    // Keep executors alive (one PJRT client per model — unshared memory).
+    _executors: Vec<Executor>,
+}
+
+/// Start the baseline server.
+pub fn serve_baseline(config: &BaselineConfig) -> Result<(ServerHandle, Arc<BaselineState>)> {
+    let manifest = Arc::new(Manifest::load(&config.artifacts)?);
+    let names = config
+        .models
+        .clone()
+        .unwrap_or_else(|| manifest.model_names());
+    let mut executors = Vec::new();
+    let mut models = Vec::new();
+    for name in names {
+        if manifest.model(&name).is_none() {
+            anyhow::bail!("unknown model '{name}'");
+        }
+        // One PJRT client per model: the unshared-device layout. Only the
+        // fixed bucket is compiled, like a fixed-shape SavedModel.
+        let exec = Executor::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                models: Some(vec![name.clone()]),
+                buckets: Some(vec![config.fixed_batch]),
+                verify_sha: false,
+                warmup: true,
+            },
+        )
+        .with_context(|| format!("spawning client for {name}"))?;
+        models.push((
+            name,
+            exec.handle(),
+            Normalizer::new(manifest.norm_mean, manifest.norm_std),
+        ));
+        executors.push(exec);
+    }
+    let state = Arc::new(BaselineState {
+        manifest,
+        models,
+        fixed_batch: config.fixed_batch,
+        metrics: Arc::new(Metrics::new()),
+        _executors: executors,
+    });
+    let router = build_baseline_router(Arc::clone(&state));
+    let handle = Server::spawn(&config.addr, config.http_workers, router.into_handler())?;
+    Ok((handle, state))
+}
+
+pub fn build_baseline_router(state: Arc<BaselineState>) -> Router {
+    let mut router = Router::new();
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/healthz", move |_, _| {
+        Response::json(
+            200,
+            &json::obj([
+                ("status", Value::from("ok")),
+                ("deployment", Value::from("baseline-fixed")),
+                ("fixed_batch", Value::from(s.fixed_batch)),
+            ]),
+        )
+    });
+
+    let s = Arc::clone(&state);
+    router.add("POST", "/v1/models/:name/predict", move |req, params| {
+        let sw = Stopwatch::start();
+        s.metrics.inc("requests_total");
+        match handle_model_predict(&s, &params["name"], req) {
+            Ok(resp) => {
+                s.metrics.observe_micros("predict_us", sw.elapsed_micros());
+                resp
+            }
+            Err(e) => {
+                s.metrics.inc("errors_total");
+                Response::error(422, &format!("{e:#}"))
+            }
+        }
+    });
+
+    router
+}
+
+fn handle_model_predict(
+    state: &BaselineState,
+    name: &str,
+    req: &crate::http::Request,
+) -> Result<Response> {
+    let (_, handle, normalizer) = state
+        .models
+        .iter()
+        .find(|(n, _, _)| n == name)
+        .ok_or_else(|| anyhow!("model '{name}' is not deployed"))?;
+    let body = req.json_body().map_err(|e| anyhow!("body must be JSON: {e}"))?;
+    let mut data = body
+        .get("data")
+        .and_then(Value::as_f32_vec)
+        .ok_or_else(|| anyhow!("missing numeric 'data'"))?;
+    let elems = state.manifest.sample_elems();
+    // Fixed-shape contract: exactly fixed_batch rows, no padding service.
+    if data.len() != state.fixed_batch * elems {
+        anyhow::bail!(
+            "this deployment serves exactly batch={} ({} floats); got {}",
+            state.fixed_batch,
+            state.fixed_batch * elems,
+            data.len()
+        );
+    }
+    // The per-model transform (runs once per model endpoint — the
+    // redundancy FlexServe's shared transform removes).
+    if !body.get("normalized").and_then(Value::as_bool).unwrap_or(false) {
+        normalizer.apply(&mut data);
+    }
+    let resp = handle.infer(ExecRequest {
+        model: name.to_string(),
+        batch: state.fixed_batch,
+        data,
+    })?;
+    let preds = argmax_rows(&resp.logits, state.manifest.num_classes());
+    let classes: Vec<Value> = preds
+        .iter()
+        .map(|(idx, _)| Value::from(state.manifest.classes[*idx].as_str()))
+        .collect();
+    Ok(Response::json(
+        200,
+        &json::obj([("predictions", Value::Arr(classes))]),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    // Covered by rust/tests/server_integration.rs (needs artifacts).
+}

@@ -1,0 +1,154 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations, latency stats, paper-style table rendering, and process
+//! memory probes for the shared-device experiment.
+
+use crate::util::{Histogram, Stopwatch};
+
+/// Result of one measured scenario.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub total_secs: f64,
+    pub hist: Histogram,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> f64 {
+        self.iters as f64 / self.total_secs
+    }
+}
+
+/// Measure `f` for `iters` iterations after `warmup` unrecorded ones.
+pub fn measure<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut hist = Histogram::new();
+    let total = Stopwatch::start();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        hist.record(sw.elapsed_micros());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        total_secs: total.elapsed_secs(),
+        hist,
+    }
+}
+
+/// Render a fixed-width table; `rows` are (label, columns).
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = format!("\n== {title} ==\n");
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let header_cells: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Artifact dir for benches/examples: `$FLEXSERVE_ARTIFACTS`, else
+/// `<crate root>/artifacts`. Panics with a clear message when missing.
+pub fn artifact_dir() -> std::path::PathBuf {
+    let dir = std::env::var_os("FLEXSERVE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing at {dir:?} — run `make artifacts` first"
+    );
+    dir
+}
+
+/// Current process resident set size in KiB (Linux /proc; 0 elsewhere).
+/// Used by the §2.2 shared-device memory comparison.
+pub fn rss_kib() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            return rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// Standard row for a latency measurement: p50/p95/p99/mean + throughput.
+pub fn stat_cells(m: &Measurement) -> Vec<String> {
+    use crate::util::hist::fmt_micros;
+    vec![
+        format!("{}", m.iters),
+        fmt_micros(m.hist.p50()),
+        fmt_micros(m.hist.p95()),
+        fmt_micros(m.hist.p99()),
+        fmt_micros(m.hist.mean_micros() as u64),
+        format!("{:.1}/s", m.throughput()),
+    ]
+}
+
+pub const STAT_HEADERS: [&str; 6] = ["iters", "p50", "p95", "p99", "mean", "rate"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts() {
+        let mut n = 0u64;
+        let m = measure("test", 5, 20, || n += 1);
+        assert_eq!(n, 25);
+        assert_eq!(m.iters, 20);
+        assert_eq!(m.hist.count(), 20);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = table(
+            "demo",
+            &["config", "p50"],
+            &[
+                vec!["a".into(), "1.0ms".into()],
+                vec!["long-config-name".into(), "2.0ms".into()],
+            ],
+        );
+        assert!(t.contains("demo"));
+        assert!(t.contains("long-config-name"));
+    }
+
+    #[test]
+    fn rss_positive_on_linux() {
+        if cfg!(target_os = "linux") {
+            assert!(rss_kib() > 0);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Server configuration: JSON config file + CLI-style overrides (clap is
+//! unavailable offline; the flag parser lives here and serves `main.rs`).
+
+use crate::coordinator::BatcherConfig;
+use crate::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Full serving configuration (defaults match `flexserve serve` docs).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address, e.g. "127.0.0.1:8080" (port 0 = ephemeral).
+    pub addr: String,
+    /// HTTP connection worker threads (Gunicorn-worker analogue).
+    pub http_workers: usize,
+    /// Device executor threads, each owning a full PJRT client + ensemble.
+    pub device_workers: usize,
+    /// Artifact directory (produced by `make artifacts`).
+    pub artifacts: PathBuf,
+    /// Verify every artifact SHA-256 against the manifest at startup.
+    pub verify_sha: bool,
+    /// Run a warmup forward per executable at startup.
+    pub warmup: bool,
+    /// Restrict the served model set (None = all models in the manifest).
+    pub models: Option<Vec<String>>,
+    /// Dynamic batcher (None = pass-through, the paper's base behaviour).
+    pub batcher: Option<BatcherConfig>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8080".into(),
+            http_workers: 8,
+            device_workers: 1, // one shared device, per the paper
+            artifacts: crate::runtime::manifest::default_artifact_dir(),
+            verify_sha: true,
+            warmup: true,
+            models: None,
+            batcher: Some(BatcherConfig::default()),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON config file.
+    pub fn from_file(path: &str) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&v)?;
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (key, val) in v.as_obj().ok_or_else(|| anyhow!("config must be an object"))? {
+            self.set(key, val)?;
+        }
+        Ok(())
+    }
+
+    fn set(&mut self, key: &str, val: &Value) -> Result<()> {
+        match key {
+            "addr" => self.addr = req_str(key, val)?.to_string(),
+            "http_workers" => self.http_workers = req_usize(key, val)?.max(1),
+            "device_workers" => self.device_workers = req_usize(key, val)?.max(1),
+            "artifacts" => self.artifacts = PathBuf::from(req_str(key, val)?),
+            "verify_sha" => self.verify_sha = req_bool(key, val)?,
+            "warmup" => self.warmup = req_bool(key, val)?,
+            "models" => {
+                let arr = val
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'models' must be an array"))?;
+                let names = arr
+                    .iter()
+                    .map(|m| {
+                        m.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow!("'models' entries must be strings"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                self.models = if names.is_empty() { None } else { Some(names) };
+            }
+            "batcher" => match val {
+                Value::Null | Value::Bool(false) => self.batcher = None,
+                Value::Bool(true) => self.batcher = Some(BatcherConfig::default()),
+                Value::Obj(_) => {
+                    let mut cfg = self.batcher.unwrap_or_default();
+                    if let Some(mb) = val.get("max_batch") {
+                        cfg.max_batch = mb
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("batcher.max_batch must be an integer"))?
+                            .max(1);
+                    }
+                    if let Some(d) = val.get("max_delay_us") {
+                        cfg.max_delay = Duration::from_micros(
+                            d.as_u64()
+                                .ok_or_else(|| anyhow!("batcher.max_delay_us must be an integer"))?,
+                        );
+                    }
+                    self.batcher = Some(cfg);
+                }
+                _ => bail!("'batcher' must be bool, null, or object"),
+            },
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` / `--key=value` CLI overrides. Recognized keys
+    /// mirror the JSON config (`--addr`, `--http-workers`,
+    /// `--device-workers`, `--artifacts`, `--models a,b`, `--no-batcher`,
+    /// `--batch-delay-us N`, `--max-batch N`, `--no-verify`, `--no-warmup`).
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            let (flag, inline) = match arg.split_once('=') {
+                Some((f, v)) => (f.to_string(), Some(v.to_string())),
+                None => (arg.clone(), None),
+            };
+            let mut take = || -> Result<String> {
+                inline.clone().or_else(|| it.next().cloned()).ok_or_else(|| {
+                    anyhow!("flag {flag} requires a value")
+                })
+            };
+            match flag.as_str() {
+                "--addr" => self.addr = take()?,
+                "--http-workers" => self.http_workers = take()?.parse::<usize>()?.max(1),
+                "--device-workers" => self.device_workers = take()?.parse::<usize>()?.max(1),
+                "--artifacts" => self.artifacts = PathBuf::from(take()?),
+                "--models" => {
+                    self.models = Some(
+                        take()?
+                            .split(',')
+                            .filter(|s| !s.is_empty())
+                            .map(str::to_string)
+                            .collect(),
+                    )
+                }
+                "--no-batcher" => self.batcher = None,
+                "--max-batch" => {
+                    let v = take()?.parse::<usize>()?.max(1);
+                    self.batcher.get_or_insert_with(Default::default).max_batch = v;
+                }
+                "--batch-delay-us" => {
+                    let v = Duration::from_micros(take()?.parse()?);
+                    self.batcher.get_or_insert_with(Default::default).max_delay = v;
+                }
+                "--no-verify" => self.verify_sha = false,
+                "--no-warmup" => self.warmup = false,
+                "--config" => {
+                    let path = take()?;
+                    let text = std::fs::read_to_string(&path)
+                        .with_context(|| format!("reading {path}"))?;
+                    self.apply_json(&json::parse(&text)?)?;
+                }
+                other => bail!("unknown flag '{other}'"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn req_str<'v>(key: &str, v: &'v Value) -> Result<&'v str> {
+    v.as_str().ok_or_else(|| anyhow!("'{key}' must be a string"))
+}
+
+fn req_usize(key: &str, v: &Value) -> Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| anyhow!("'{key}' must be a non-negative integer"))
+}
+
+fn req_bool(key: &str, v: &Value) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("'{key}' must be a bool"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = ServeConfig::default();
+        assert_eq!(c.device_workers, 1);
+        assert!(c.batcher.is_some());
+        assert!(c.verify_sha);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = ServeConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"addr":"0.0.0.0:9000","http_workers":4,
+                    "models":["cnn_s"],"batcher":{"max_batch":16,"max_delay_us":500},
+                    "verify_sha":false}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!(c.http_workers, 4);
+        assert_eq!(c.models, Some(vec!["cnn_s".to_string()]));
+        let b = c.batcher.unwrap();
+        assert_eq!(b.max_batch, 16);
+        assert_eq!(b.max_delay, Duration::from_micros(500));
+        assert!(!c.verify_sha);
+    }
+
+    #[test]
+    fn batcher_disable() {
+        let mut c = ServeConfig::default();
+        c.apply_json(&json::parse(r#"{"batcher":false}"#).unwrap()).unwrap();
+        assert!(c.batcher.is_none());
+        c.apply_json(&json::parse(r#"{"batcher":true}"#).unwrap()).unwrap();
+        assert!(c.batcher.is_some());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ServeConfig::default();
+        assert!(c.apply_json(&json::parse(r#"{"nope":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ServeConfig::default();
+        let args: Vec<String> = [
+            "--addr=127.0.0.1:0",
+            "--device-workers",
+            "2",
+            "--models",
+            "cnn_s,mlp",
+            "--batch-delay-us=1000",
+            "--no-verify",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.addr, "127.0.0.1:0");
+        assert_eq!(c.device_workers, 2);
+        assert_eq!(
+            c.models,
+            Some(vec!["cnn_s".to_string(), "mlp".to_string()])
+        );
+        assert_eq!(
+            c.batcher.unwrap().max_delay,
+            Duration::from_micros(1000)
+        );
+        assert!(!c.verify_sha);
+    }
+
+    #[test]
+    fn example_config_file_parses() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/server.example.json");
+        let c = ServeConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.addr, "0.0.0.0:8080");
+        assert_eq!(c.models.as_ref().unwrap().len(), 3);
+        assert_eq!(c.batcher.unwrap().max_delay, Duration::from_micros(2000));
+    }
+
+    #[test]
+    fn cli_no_batcher_and_bad_flag() {
+        let mut c = ServeConfig::default();
+        c.apply_cli(&["--no-batcher".to_string()]).unwrap();
+        assert!(c.batcher.is_none());
+        assert!(c.apply_cli(&["--bogus".to_string()]).is_err());
+        assert!(c.apply_cli(&["--addr".to_string()]).is_err());
+    }
+}

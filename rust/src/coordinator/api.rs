@@ -1,0 +1,410 @@
+//! The REST surface (Fig. 1): a single `/predict` endpoint serving the
+//! whole ensemble, plus introspection endpoints.
+//!
+//! Response wire format follows the paper (§2.3): one member per model,
+//! `"model_<name>": ["class", "class", ...]`, all models in one JSON
+//! object. Extensions (opt-in, absent by default so the paper format stays
+//! canonical): server-side policy fusion (`policy`/`target`) and detailed
+//! diagnostics (`detail`).
+
+use super::batcher::{Batcher, BatcherConfig, BatchStats};
+use super::ensemble::{Ensemble, EnsembleOutput};
+use super::metrics::Metrics;
+use super::policy::Policy;
+use crate::http::{Request, Response, Router};
+use crate::imagepipe::Normalizer;
+use crate::json::{self, Value};
+use crate::runtime::Manifest;
+use crate::util::Stopwatch;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Shared server state behind the router.
+pub struct ServerState {
+    pub ensemble: Ensemble,
+    pub batcher: Option<Batcher>,
+    pub manifest: Arc<Manifest>,
+    pub normalizer: Normalizer,
+    pub metrics: Arc<Metrics>,
+    pub started: std::time::Instant,
+}
+
+impl ServerState {
+    pub fn new(ensemble: Ensemble, batcher_config: Option<BatcherConfig>) -> Result<Arc<Self>> {
+        let manifest = Arc::clone(ensemble.manifest());
+        let normalizer = Normalizer::new(manifest.norm_mean, manifest.norm_std);
+        let batcher = match batcher_config {
+            Some(cfg) => Some(Batcher::spawn(ensemble.clone(), cfg)?),
+            None => None,
+        };
+        Ok(Arc::new(ServerState {
+            ensemble,
+            batcher,
+            manifest,
+            normalizer,
+            metrics: Arc::new(Metrics::new()),
+            started: std::time::Instant::now(),
+        }))
+    }
+}
+
+/// Build the FlexServe router over shared state.
+pub fn build_router(state: Arc<ServerState>) -> Router {
+    let mut router = Router::new();
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/healthz", move |_, _| {
+        Response::json(
+            200,
+            &json::obj([
+                ("status", Value::from("ok")),
+                ("models", Value::from(s.ensemble.models().len())),
+                ("uptime_s", Value::from(s.started.elapsed().as_secs())),
+            ]),
+        )
+    });
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/models", move |_, _| models_response(&s));
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/models/:name", move |_, params| {
+        match s.manifest.model(&params["name"]) {
+            None => Response::not_found(),
+            Some(m) => Response::json(200, &model_json(&s, m)),
+        }
+    });
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/metrics", move |req, _| {
+        if req.query_param("format") == Some("json") {
+            Response::json(200, &s.metrics.render_json())
+        } else {
+            Response::text(200, &s.metrics.render_text())
+        }
+    });
+
+    let s = Arc::clone(&state);
+    router.add("POST", "/predict", move |req, _| {
+        let sw = Stopwatch::start();
+        s.metrics.inc("requests_total");
+        match handle_predict(&s, req) {
+            Ok(resp) => {
+                s.metrics.observe_micros("predict_us", sw.elapsed_micros());
+                resp
+            }
+            Err(e) => {
+                s.metrics.inc("errors_total");
+                Response::error(422, &format!("{e:#}"))
+            }
+        }
+    });
+
+    router
+}
+
+fn models_response(s: &ServerState) -> Response {
+    let models: Vec<Value> = s
+        .manifest
+        .models
+        .iter()
+        .map(|m| model_json(s, m))
+        .collect();
+    Response::json(
+        200,
+        &json::obj([
+            ("models", Value::Arr(models)),
+            (
+                "classes",
+                Value::Arr(
+                    s.manifest
+                        .classes
+                        .iter()
+                        .map(|c| Value::from(c.as_str()))
+                        .collect(),
+                ),
+            ),
+            (
+                "input_shape",
+                Value::Arr(s.manifest.input_shape.iter().map(|&d| Value::from(d)).collect()),
+            ),
+            (
+                "buckets",
+                Value::Arr(s.manifest.buckets.iter().map(|&b| Value::from(b)).collect()),
+            ),
+            // The provenance the paper says cloud APIs withhold.
+            ("provenance", s.manifest.provenance.clone()),
+        ]),
+    )
+}
+
+fn model_json(s: &ServerState, m: &crate::runtime::ModelEntry) -> Value {
+    let _ = s;
+    json::obj([
+        ("name", Value::from(m.name.as_str())),
+        ("param_count", Value::from(m.param_count)),
+        ("test_acc", Value::from(m.test_acc)),
+        ("params_sha256", Value::from(m.params_sha256.as_str())),
+        (
+            "buckets",
+            Value::Arr(m.buckets.iter().map(|a| Value::from(a.bucket)).collect()),
+        ),
+    ])
+}
+
+/// Decode `pgm_b64` camera frames (§2.3 wire format: base64 binary PGM,
+/// one per frame) into the flat f32 batch. Dimensions must match the
+/// manifest's input shape.
+fn decode_pgm_frames(s: &ServerState, frames: &Value) -> Result<Vec<f32>> {
+    let arr = frames
+        .as_arr()
+        .ok_or_else(|| anyhow!("'pgm_b64' must be an array of base64 strings"))?;
+    if s.manifest.input_shape.len() != 3 || s.manifest.input_shape[2] != 1 {
+        bail!("pgm input requires single-channel models");
+    }
+    let (want_h, want_w) = (s.manifest.input_shape[0], s.manifest.input_shape[1]);
+    let mut data = Vec::with_capacity(arr.len() * want_h * want_w);
+    for (i, frame) in arr.iter().enumerate() {
+        let b64 = frame
+            .as_str()
+            .ok_or_else(|| anyhow!("pgm_b64[{i}] must be a string"))?;
+        let bytes = crate::util::base64::decode(b64)
+            .map_err(|e| anyhow!("pgm_b64[{i}]: {e}"))?;
+        let (w, h, pixels) = crate::imagepipe::decode_pgm(&bytes)
+            .map_err(|e| anyhow!("pgm_b64[{i}]: {e}"))?;
+        if (h, w) != (want_h, want_w) {
+            bail!("pgm_b64[{i}] is {w}x{h}, model expects {want_w}x{want_h}");
+        }
+        data.extend(pixels);
+    }
+    Ok(data)
+}
+
+/// Parsed `/predict` request.
+struct PredictInput {
+    data: Vec<f32>,
+    batch: usize,
+    normalized: bool,
+    models: Option<Vec<String>>,
+    policy: Option<Policy>,
+    target: Option<String>,
+    detail: bool,
+}
+
+fn parse_predict(s: &ServerState, req: &Request) -> Result<PredictInput> {
+    let body = req
+        .json_body()
+        .map_err(|e| anyhow!("body must be JSON: {e}"))?;
+    let data = match (body.get("data"), body.get("pgm_b64")) {
+        (Some(_), Some(_)) => bail!("pass either 'data' or 'pgm_b64', not both"),
+        (Some(d), None) => d
+            .as_f32_vec()
+            .ok_or_else(|| anyhow!("'data' must be a numeric array"))?,
+        (None, Some(frames)) => decode_pgm_frames(s, frames)?,
+        (None, None) => bail!(
+            "missing 'data' (flat f32 array, row-major BxHxWxC) or 'pgm_b64' \
+             (array of base64 binary-PGM frames)"
+        ),
+    };
+    if data.is_empty() {
+        bail!("'data' is empty");
+    }
+    if !data.iter().all(|v| v.is_finite()) {
+        bail!("'data' contains non-finite values");
+    }
+    let elems = s.manifest.sample_elems();
+    let batch = match body.get("batch").map(|b| {
+        b.as_usize()
+            .ok_or_else(|| anyhow!("'batch' must be a non-negative integer"))
+    }) {
+        Some(b) => b?,
+        None => {
+            if data.len() % elems != 0 {
+                bail!(
+                    "'data' length {} is not a multiple of sample size {elems}; \
+                     pass 'batch' explicitly",
+                    data.len()
+                );
+            }
+            data.len() / elems
+        }
+    };
+    if batch == 0 {
+        bail!("batch must be ≥ 1");
+    }
+    if data.len() != batch * elems {
+        bail!(
+            "'data' length {} != batch {batch} x {elems} elems",
+            data.len()
+        );
+    }
+
+    // Flags come from body, with query-param override (handy for curl).
+    let normalized = body
+        .get("normalized")
+        .and_then(Value::as_bool)
+        .unwrap_or(false);
+    let models = match req.query_param("models").map(str::to_string).or_else(|| {
+        body.get("models").and_then(Value::as_arr).map(|a| {
+            a.iter()
+                .filter_map(Value::as_str)
+                .collect::<Vec<_>>()
+                .join(",")
+        })
+    }) {
+        None => None,
+        Some(csv) => {
+            let names: Vec<String> = csv
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            if names.is_empty() {
+                None
+            } else {
+                Some(names)
+            }
+        }
+    };
+    let policy = match req
+        .query_param("policy")
+        .or_else(|| body.get("policy").and_then(Value::as_str))
+    {
+        None => None,
+        Some(p) => Some(Policy::parse(p)?),
+    };
+    let target = req
+        .query_param("target")
+        .or_else(|| body.get("target").and_then(Value::as_str))
+        .map(str::to_string);
+    if policy.is_some() && target.is_none() {
+        bail!("'policy' requires 'target' (a class name)");
+    }
+    let detail = req.query_param("detail") == Some("1")
+        || body.get("detail").and_then(Value::as_bool).unwrap_or(false);
+
+    Ok(PredictInput {
+        data,
+        batch,
+        normalized,
+        models,
+        policy,
+        target,
+        detail,
+    })
+}
+
+fn handle_predict(s: &ServerState, req: &Request) -> Result<Response> {
+    let mut input = parse_predict(s, req)?;
+    s.metrics.add("rows_total", input.batch as u64);
+
+    // §2.2: the ONE shared data transformation for the whole ensemble.
+    if !input.normalized {
+        s.normalizer.apply(&mut input.data);
+    }
+
+    // Custom model subsets bypass the shared batcher (its batches are for
+    // the default full ensemble); everything else coalesces.
+    let data = std::mem::take(&mut input.data); // move the payload, no clone
+    let (output, stats): (EnsembleOutput, Option<BatchStats>) = match (&input.models, &s.batcher) {
+        (None, Some(batcher)) => {
+            let (out, st) = batcher.submit(data, input.batch)?;
+            s.metrics
+                .observe_micros("coalesced_rows", st.coalesced_rows as u64);
+            (out, Some(st))
+        }
+        (None, None) => (s.ensemble.forward(&data, input.batch)?, None),
+        (Some(names), _) => {
+            let sub = s.ensemble.with_models(names.clone())?;
+            (sub.forward(&data, input.batch)?, None)
+        }
+    };
+
+    for m in &output.per_model {
+        s.metrics
+            .observe_micros("device_exec_us", m.exec_micros);
+    }
+
+    // Paper wire format: "model_<name>": ["class", ...].
+    let mut members: Vec<(String, Value)> = Vec::with_capacity(output.per_model.len() + 2);
+    for m in &output.per_model {
+        let names = output
+            .class_names(&s.manifest, &m.model)
+            .expect("model present in its own output");
+        members.push((
+            format!("model_{}", m.model),
+            Value::Arr(names.into_iter().map(Value::from).collect()),
+        ));
+    }
+
+    // Opt-in server-side sensitivity fusion (§2.1).
+    if let (Some(policy), Some(target)) = (&input.policy, &input.target) {
+        let target_idx = s
+            .manifest
+            .classes
+            .iter()
+            .position(|c| c == target)
+            .ok_or_else(|| anyhow!("unknown target class '{target}'"))?;
+        let votes = output.votes_for_class(target_idx); // [model][row]
+        let mut detections = Vec::with_capacity(output.batch);
+        for row in 0..output.batch {
+            let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
+            detections.push(Value::Bool(policy.fuse(&row_votes)?));
+        }
+        members.push((
+            "ensemble".to_string(),
+            json::obj([
+                ("policy", Value::from(policy.to_string())),
+                ("target", Value::from(target.as_str())),
+                ("detections", Value::Arr(detections)),
+            ]),
+        ));
+    }
+
+    if input.detail {
+        let per_model: Vec<(String, Value)> = output
+            .per_model
+            .iter()
+            .map(|m| {
+                (
+                    m.model.clone(),
+                    json::obj([
+                        (
+                            "probs",
+                            Value::Arr(m.preds.iter().map(|(_, p)| Value::from(*p)).collect()),
+                        ),
+                        (
+                            "buckets",
+                            Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
+                        ),
+                        ("exec_us", Value::from(m.exec_micros)),
+                        ("queue_us", Value::from(m.queue_micros)),
+                    ]),
+                )
+            })
+            .collect();
+        let mut detail = vec![
+            ("batch".to_string(), Value::from(output.batch)),
+            ("models".to_string(), Value::Obj(per_model)),
+        ];
+        if let Some(st) = stats {
+            detail.push((
+                "batching".to_string(),
+                json::obj([
+                    ("coalesced_rows", Value::from(st.coalesced_rows)),
+                    ("coalesced_requests", Value::from(st.coalesced_requests)),
+                    ("wait_us", Value::from(st.wait_micros)),
+                ]),
+            ));
+        }
+        members.push(("detail".to_string(), Value::Obj(detail)));
+    }
+
+    Ok(Response::json(200, &Value::Obj(members)))
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end (with a live device) in
+    // rust/tests/server_integration.rs.
+}

@@ -1,0 +1,327 @@
+//! Dynamic batcher: coalesces concurrent client requests into one ensemble
+//! forward (§2.3 taken one step further than the paper — clients send any
+//! batch size AND concurrent small requests share device batches).
+//!
+//! Shape: a single batcher thread owns a FIFO of pending requests. On the
+//! first arrival it opens a window of `max_delay`; everything that arrives
+//! inside the window coalesces, capped at `max_batch` rows. The combined
+//! batch takes ONE trip through `Ensemble::forward` (N models, §2.1) and
+//! each requester gets back exactly its rows.
+//!
+//! `max_delay = 0` degrades to pass-through (no artificial latency), which
+//! is the paper's original behaviour; `bench_batcher_ablation` sweeps the
+//! knob to map the latency/throughput frontier.
+
+use super::ensemble::{Ensemble, EnsembleOutput, ModelOutput};
+use crate::util::Stopwatch;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum coalesced rows per device batch (should be ≤ the largest
+    /// AOT bucket to avoid chunking; larger values still work via chunking).
+    pub max_batch: usize,
+    /// Batching window after the first arrival. 0 = pass-through.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Pending {
+    data: Vec<f32>,
+    batch: usize,
+    enqueued: Stopwatch,
+    reply: mpsc::Sender<Result<(EnsembleOutput, BatchStats)>>,
+}
+
+/// Per-request batching diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchStats {
+    /// Rows in the coalesced device batch this request rode in.
+    pub coalesced_rows: usize,
+    /// Requests sharing that batch.
+    pub coalesced_requests: usize,
+    /// Time this request waited in the batcher queue.
+    pub wait_micros: u64,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    arrived: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Handle to the batcher; cheap to clone. Dropping every handle shuts the
+/// batcher thread down once its queue drains.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn spawn(ensemble: Ensemble, config: BatcherConfig) -> Result<Batcher> {
+        if config.max_batch == 0 {
+            bail!("batcher max_batch must be ≥ 1");
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            arrived: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let s2 = Arc::clone(&shared);
+        let thread = thread::Builder::new()
+            .name("flexserve-batcher".into())
+            .spawn(move || batcher_thread(ensemble, config, s2))?;
+        Ok(Batcher {
+            shared,
+            thread: Some(thread),
+        })
+    }
+
+    /// Blocking submit: returns this request's rows + batching stats.
+    pub fn submit(&self, data: Vec<f32>, batch: usize) -> Result<(EnsembleOutput, BatchStats)> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Pending {
+                data,
+                batch,
+                enqueued: Stopwatch::start(),
+                reply: reply_tx,
+            });
+        }
+        self.shared.arrived.notify_one();
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("batcher dropped the request"))?
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.arrived.notify_all();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn batcher_thread(ensemble: Ensemble, config: BatcherConfig, shared: Arc<Shared>) {
+    loop {
+        // Phase 1: wait for the first request (or shutdown).
+        let mut q = shared.queue.lock().unwrap();
+        while q.is_empty() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            q = shared.arrived.wait(q).unwrap();
+        }
+
+        // Phase 2: batching window — wait until max_batch filled or the
+        // window closes. (Recheck on every wakeup; spurious OK.)
+        if !config.max_delay.is_zero() {
+            let window = Stopwatch::start();
+            loop {
+                let rows: usize = q.iter().map(|p| p.batch).sum();
+                if rows >= config.max_batch {
+                    break;
+                }
+                let elapsed = Duration::from_micros(window.elapsed_micros());
+                let Some(remaining) = config.max_delay.checked_sub(elapsed) else {
+                    break;
+                };
+                let (guard, timeout) = shared.arrived.wait_timeout(q, remaining).unwrap();
+                q = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+
+        // Phase 3: take a prefix of requests totalling ≤ max_batch rows
+        // (always at least one request, even if it alone exceeds the cap —
+        // Ensemble::forward chunks internally).
+        let mut taken: Vec<Pending> = Vec::new();
+        let mut rows = 0usize;
+        while let Some(front) = q.front() {
+            if !taken.is_empty() && rows + front.batch > config.max_batch {
+                break;
+            }
+            rows += front.batch;
+            taken.push(q.pop_front().unwrap());
+        }
+        drop(q); // run inference unlocked
+
+        // Phase 4: one ensemble forward for the coalesced batch.
+        let elems = ensemble.manifest().sample_elems();
+        let mut combined = Vec::with_capacity(rows * elems);
+        for p in &taken {
+            combined.extend_from_slice(&p.data);
+        }
+        match ensemble.forward(&combined, rows) {
+            Ok(output) => {
+                let n_req = taken.len();
+                let mut offset = 0;
+                for p in taken {
+                    let slice = slice_output(&output, offset, p.batch);
+                    offset += p.batch;
+                    let stats = BatchStats {
+                        coalesced_rows: rows,
+                        coalesced_requests: n_req,
+                        wait_micros: p.enqueued.elapsed_micros(),
+                    };
+                    let _ = p.reply.send(Ok((slice, stats)));
+                }
+            }
+            Err(e) => {
+                // Every requester in the batch sees the failure.
+                let msg = format!("{e:#}");
+                for p in taken {
+                    let _ = p.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+/// Extract rows `[offset, offset+len)` of every model's output.
+pub fn slice_output(output: &EnsembleOutput, offset: usize, len: usize) -> EnsembleOutput {
+    debug_assert!(offset + len <= output.batch);
+    let per_model = output
+        .per_model
+        .iter()
+        .map(|m| {
+            let classes = if output.batch > 0 {
+                m.logits.len() / output.batch
+            } else {
+                0
+            };
+            ModelOutput {
+                model: m.model.clone(),
+                logits: m.logits[offset * classes..(offset + len) * classes].to_vec(),
+                preds: m.preds[offset..offset + len].to_vec(),
+                buckets: m.buckets.clone(),
+                exec_micros: m.exec_micros,
+                queue_micros: m.queue_micros,
+            }
+        })
+        .collect();
+    EnsembleOutput {
+        batch: len,
+        per_model,
+    }
+}
+
+/// Pure coalescing rule (extracted for property tests): how many queued
+/// requests a drain takes, given their sizes and the row cap.
+pub fn plan_take(sizes: &[usize], max_batch: usize) -> usize {
+    let mut taken = 0;
+    let mut rows = 0;
+    for &s in sizes {
+        if taken > 0 && rows + s > max_batch {
+            break;
+        }
+        rows += s;
+        taken += 1;
+    }
+    taken
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn plan_take_basics() {
+        assert_eq!(plan_take(&[1, 1, 1], 32), 3);
+        assert_eq!(plan_take(&[16, 16, 16], 32), 2);
+        assert_eq!(plan_take(&[40], 32), 1); // oversized single → chunked later
+        assert_eq!(plan_take(&[40, 1], 32), 1);
+        assert_eq!(plan_take(&[], 32), 0);
+        assert_eq!(plan_take(&[32, 1], 32), 1);
+    }
+
+    #[test]
+    fn prop_plan_take_invariants() {
+        check("plan_take invariants", 400, |g| {
+            let n = g.int(1, 20);
+            let sizes = g.vec_usize(n, 1, 40);
+            let max_batch = g.int(1, 48);
+            let taken = plan_take(&sizes, max_batch);
+            // Always makes progress.
+            assert!(taken >= 1);
+            // FIFO prefix, never exceeds cap unless it's a single request.
+            let rows: usize = sizes[..taken].iter().sum();
+            assert!(taken == 1 || rows <= max_batch, "sizes={sizes:?} cap={max_batch}");
+            // Maximal: taking one more would exceed the cap.
+            if taken < sizes.len() {
+                assert!(rows + sizes[taken] > max_batch);
+            }
+        });
+    }
+
+    #[test]
+    fn slice_output_rows() {
+        let out = EnsembleOutput {
+            batch: 4,
+            per_model: vec![ModelOutput {
+                model: "m".into(),
+                logits: (0..8).map(|v| v as f32).collect(), // 4 rows x 2 classes
+                preds: vec![(0, 0.1), (1, 0.2), (0, 0.3), (1, 0.4)],
+                buckets: vec![4],
+                exec_micros: 5,
+                queue_micros: 0,
+            }],
+        };
+        let s = slice_output(&out, 1, 2);
+        assert_eq!(s.batch, 2);
+        assert_eq!(s.per_model[0].logits, vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.per_model[0].preds, vec![(1, 0.2), (0, 0.3)]);
+    }
+
+    #[test]
+    fn prop_slices_partition_output() {
+        check("slices partition the combined output", 200, |g| {
+            let n_req = g.int(1, 6);
+            let sizes = g.vec_usize(n_req, 1, 5);
+            let total: usize = sizes.iter().sum();
+            let classes = 3;
+            let out = EnsembleOutput {
+                batch: total,
+                per_model: vec![ModelOutput {
+                    model: "m".into(),
+                    logits: (0..total * classes).map(|v| v as f32).collect(),
+                    preds: (0..total).map(|i| (i % classes, 0.5)).collect(),
+                    buckets: vec![],
+                    exec_micros: 0,
+                    queue_micros: 0,
+                }],
+            };
+            let mut offset = 0;
+            let mut rebuilt_logits = Vec::new();
+            let mut rebuilt_preds = Vec::new();
+            for &s in &sizes {
+                let slice = slice_output(&out, offset, s);
+                offset += s;
+                rebuilt_logits.extend(slice.per_model[0].logits.clone());
+                rebuilt_preds.extend(slice.per_model[0].preds.clone());
+            }
+            assert_eq!(rebuilt_logits, out.per_model[0].logits);
+            assert_eq!(rebuilt_preds, out.per_model[0].preds);
+        });
+    }
+}

@@ -1,0 +1,177 @@
+//! Serving metrics: named counters + latency histograms with a
+//! Prometheus-style text exposition on `GET /metrics`.
+
+use crate::json::{self, Value};
+use crate::util::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide metrics registry. Cheap counters (atomics), coarse-grained
+/// mutex on histograms (request path records one sample per request).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn observe_micros(&self, name: &str, micros: u64) {
+        let mut map = self.hists.lock().unwrap();
+        map.entry(name.to_string()).or_default().record(micros);
+    }
+
+    /// Snapshot of one histogram (None if never observed).
+    pub fn hist(&self, name: &str) -> Option<Histogram> {
+        self.hists.lock().unwrap().get(name).cloned()
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "flexserve_{name} {}\n",
+                c.load(Ordering::Relaxed)
+            ));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            out.push_str(&format!("flexserve_{name}_count {}\n", h.count()));
+            out.push_str(&format!(
+                "flexserve_{name}_mean_us {:.1}\n",
+                h.mean_micros()
+            ));
+            for (q, label) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                out.push_str(&format!(
+                    "flexserve_{name}_{label}_us {}\n",
+                    h.quantile(q)
+                ));
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot (used by benches and `GET /metrics?format=json`).
+    pub fn render_json(&self) -> Value {
+        let counters: Vec<(String, Value)> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::from(v.load(Ordering::Relaxed))))
+            .collect();
+        let hists: Vec<(String, Value)> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    json::obj([
+                        ("count", Value::from(h.count())),
+                        ("mean_us", Value::from(h.mean_micros())),
+                        ("p50_us", Value::from(h.p50())),
+                        ("p95_us", Value::from(h.p95())),
+                        ("p99_us", Value::from(h.p99())),
+                        ("max_us", Value::from(h.max_micros())),
+                    ]),
+                )
+            })
+            .collect();
+        Value::Obj(vec![
+            ("counters".to_string(), Value::Obj(counters)),
+            ("latencies".to_string(), Value::Obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.inc("requests_total");
+        m.add("requests_total", 4);
+        assert_eq!(m.counter("requests_total"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histograms() {
+        let m = Metrics::new();
+        for v in [100, 200, 300] {
+            m.observe_micros("predict_us", v);
+        }
+        let h = m.hist("predict_us").unwrap();
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.mean_micros(), 200.0);
+        assert!(m.hist("missing").is_none());
+    }
+
+    #[test]
+    fn text_exposition() {
+        let m = Metrics::new();
+        m.inc("requests_total");
+        m.observe_micros("predict_us", 1500);
+        let text = m.render_text();
+        assert!(text.contains("flexserve_requests_total 1"));
+        assert!(text.contains("flexserve_predict_us_count 1"));
+        assert!(text.contains("flexserve_predict_us_p99_us"));
+    }
+
+    #[test]
+    fn json_exposition() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.observe_micros("l", 10);
+        let v = m.render_json();
+        assert_eq!(v.path(&["counters", "a"]).unwrap().as_u64(), Some(1));
+        assert_eq!(v.path(&["latencies", "l", "count"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("c");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.counter("c"), 8000);
+    }
+}

@@ -1,0 +1,66 @@
+//! L3 coordinator — the paper's system contribution:
+//!
+//! * [`ensemble`] — N models behind one forward call (`fmodels`, §2.1/2.2)
+//! * [`policy`] — sensitivity-policy fusion (§2.1)
+//! * [`batcher`] — flexible/dynamic batching (§2.3, extended to
+//!   cross-request coalescing)
+//! * [`api`] — the REST surface (Fig. 1)
+//! * [`metrics`] — counters + latency histograms (`/metrics`)
+//! * [`serve`] — one-call server bootstrap used by `main.rs` and the
+//!   examples
+
+pub mod api;
+pub mod batcher;
+pub mod ensemble;
+pub mod metrics;
+pub mod policy;
+
+pub use api::{build_router, ServerState};
+pub use batcher::{Batcher, BatcherConfig, BatchStats};
+pub use ensemble::{Ensemble, EnsembleOutput, ModelOutput};
+pub use metrics::Metrics;
+pub use policy::{Confusion, Policy};
+
+use crate::config::ServeConfig;
+use crate::http::{Server, ServerHandle};
+use crate::runtime::executor::ExecutorOptions;
+use crate::runtime::{ExecutorPool, Manifest};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Bootstrap the full FlexServe stack from a config: manifest → executor
+/// pool → ensemble → (optional) batcher → HTTP server.
+///
+/// Returns the HTTP handle and the shared state (metrics etc.). The device
+/// pool lives inside the returned state; dropping both shuts everything
+/// down.
+pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
+    let manifest = Arc::new(
+        Manifest::load(&config.artifacts).context("loading artifact manifest")?,
+    );
+    if config.verify_sha {
+        manifest.verify_all().context("artifact provenance check")?;
+    }
+    let pool = Arc::new(
+        ExecutorPool::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                models: config.models.clone(),
+                buckets: None,
+                verify_sha: false, // already done above when enabled
+                warmup: config.warmup,
+            },
+            config.device_workers,
+        )
+        .context("spawning device executors")?,
+    );
+    let mut ensemble = Ensemble::new(pool, Arc::clone(&manifest));
+    if let Some(models) = &config.models {
+        ensemble = ensemble.with_models(models.clone())?;
+    }
+    let state = ServerState::new(ensemble, config.batcher)?;
+    let router = build_router(Arc::clone(&state));
+    let handle = Server::spawn(&config.addr, config.http_workers, router.into_handler())
+        .context("starting HTTP server")?;
+    Ok((handle, state))
+}

@@ -1,0 +1,272 @@
+//! Sensitivity policies (§2.1): fuse per-model binary detections into one
+//! ensemble decision.
+//!
+//! The paper's example is OR-fusion for maximum sensitivity:
+//! `y' = y₁|y₂|…|yₙ` — "when a single model detects the target the final
+//! ensemble output is positive identification". The paper leaves the policy
+//! to the client; FlexServe-RS implements the family both client-side (see
+//! `examples/sensitivity.rs`) and as an opt-in server-side fusion field.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// A fusion policy over n model votes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// OR-fusion — the paper's maximum-sensitivity policy.
+    Any,
+    /// AND-fusion — minimum false positives.
+    All,
+    /// Strict majority (> n/2).
+    Majority,
+    /// At least k positive votes (k ≥ 1).
+    AtLeast(usize),
+    /// Weighted vote: positive iff Σ wᵢ·yᵢ ≥ threshold. Weights need not
+    /// be normalized. Useful for accuracy-weighted ensembles.
+    Weighted { weights: Vec<f64>, threshold: f64 },
+}
+
+impl Policy {
+    /// Fuse votes into the ensemble decision. `votes.len()` must be ≥ 1
+    /// (and equal to `weights.len()` for `Weighted`).
+    pub fn fuse(&self, votes: &[bool]) -> Result<bool> {
+        if votes.is_empty() {
+            bail!("policy fusion over zero votes");
+        }
+        let positives = votes.iter().filter(|v| **v).count();
+        Ok(match self {
+            Policy::Any => positives >= 1,
+            Policy::All => positives == votes.len(),
+            Policy::Majority => 2 * positives > votes.len(),
+            Policy::AtLeast(k) => {
+                if *k == 0 || *k > votes.len() {
+                    bail!("at_least k={k} out of range 1..={}", votes.len());
+                }
+                positives >= *k
+            }
+            Policy::Weighted { weights, threshold } => {
+                if weights.len() != votes.len() {
+                    bail!(
+                        "weighted policy: {} weights for {} votes",
+                        weights.len(),
+                        votes.len()
+                    );
+                }
+                let score: f64 = weights
+                    .iter()
+                    .zip(votes)
+                    .filter(|(_, v)| **v)
+                    .map(|(w, _)| *w)
+                    .sum();
+                score >= *threshold
+            }
+        })
+    }
+
+    /// Parse the wire form: `any` | `all` | `majority` | `atleast:<k>`.
+    /// (`Weighted` is constructed programmatically, not over the wire.)
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s {
+            "any" | "or" => Ok(Policy::Any),
+            "all" | "and" => Ok(Policy::All),
+            "majority" => Ok(Policy::Majority),
+            other => {
+                if let Some(k) = other.strip_prefix("atleast:") {
+                    Ok(Policy::AtLeast(k.parse()?))
+                } else {
+                    bail!("unknown policy '{other}' (any|all|majority|atleast:<k>)")
+                }
+            }
+        }
+    }
+
+    /// Minimum positive votes that can possibly yield a positive decision —
+    /// the "sensitivity rank" used to order policies in the benches.
+    pub fn min_positives(&self, n: usize) -> usize {
+        match self {
+            Policy::Any => 1,
+            Policy::All => n,
+            Policy::Majority => n / 2 + 1,
+            Policy::AtLeast(k) => *k,
+            Policy::Weighted { .. } => 1,
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Policy::Any => write!(f, "any"),
+            Policy::All => write!(f, "all"),
+            Policy::Majority => write!(f, "majority"),
+            Policy::AtLeast(k) => write!(f, "atleast:{k}"),
+            Policy::Weighted { threshold, .. } => write!(f, "weighted(t={threshold})"),
+        }
+    }
+}
+
+/// Confusion counts for a binary detector over a labelled set — the §2.1
+/// experiment reports these per policy.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn record(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    /// True-positive rate (sensitivity/recall).
+    pub fn tpr(&self) -> f64 {
+        ratio(self.tp, self.tp + self.fn_)
+    }
+
+    /// False-negative rate = 1 − TPR (what §2.1 tunes down with OR-fusion).
+    pub fn fnr(&self) -> f64 {
+        ratio(self.fn_, self.tp + self.fn_)
+    }
+
+    /// False-positive rate.
+    pub fn fpr(&self) -> f64 {
+        ratio(self.fp, self.fp + self.tn)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        ratio(self.tp + self.tn, self.tp + self.tn + self.fp + self.fn_)
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn v(bits: &[u8]) -> Vec<bool> {
+        bits.iter().map(|b| *b != 0).collect()
+    }
+
+    #[test]
+    fn paper_or_fusion() {
+        // §2.1: one positive model ⇒ ensemble positive.
+        assert!(Policy::Any.fuse(&v(&[0, 0, 1])).unwrap());
+        assert!(!Policy::Any.fuse(&v(&[0, 0, 0])).unwrap());
+    }
+
+    #[test]
+    fn all_and_majority() {
+        assert!(!Policy::All.fuse(&v(&[1, 1, 0])).unwrap());
+        assert!(Policy::All.fuse(&v(&[1, 1, 1])).unwrap());
+        assert!(Policy::Majority.fuse(&v(&[1, 1, 0])).unwrap());
+        assert!(!Policy::Majority.fuse(&v(&[1, 0, 0])).unwrap());
+        // Even n: strict majority.
+        assert!(!Policy::Majority.fuse(&v(&[1, 1, 0, 0])).unwrap());
+        assert!(Policy::Majority.fuse(&v(&[1, 1, 1, 0])).unwrap());
+    }
+
+    #[test]
+    fn at_least() {
+        assert!(Policy::AtLeast(2).fuse(&v(&[1, 1, 0])).unwrap());
+        assert!(!Policy::AtLeast(3).fuse(&v(&[1, 1, 0])).unwrap());
+        assert!(Policy::AtLeast(0).fuse(&v(&[1])).is_err());
+        assert!(Policy::AtLeast(4).fuse(&v(&[1, 1, 1])).is_err());
+    }
+
+    #[test]
+    fn weighted() {
+        let p = Policy::Weighted {
+            weights: vec![0.9, 0.7, 0.67],
+            threshold: 1.0,
+        };
+        assert!(!p.fuse(&v(&[0, 0, 1])).unwrap()); // 0.67 < 1.0
+        assert!(p.fuse(&v(&[1, 0, 1])).unwrap()); // 1.57 ≥ 1.0
+        assert!(p.fuse(&v(&[0, 1])).is_err()); // arity mismatch
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["any", "all", "majority", "atleast:2"] {
+            let p = Policy::parse(s).unwrap();
+            assert_eq!(Policy::parse(&p.to_string()).unwrap(), p);
+        }
+        assert_eq!(Policy::parse("or").unwrap(), Policy::Any);
+        assert!(Policy::parse("sometimes").is_err());
+        assert!(Policy::parse("atleast:x").is_err());
+    }
+
+    #[test]
+    fn empty_votes_rejected() {
+        assert!(Policy::Any.fuse(&[]).is_err());
+    }
+
+    #[test]
+    fn prop_sensitivity_ordering() {
+        // For any vote vector: All ⇒ Majority ⇒ Any (implication chain).
+        check("policy sensitivity ordering", 300, |g| {
+            let n = g.int(1, 9);
+            let votes: Vec<bool> = (0..n).map(|_| g.bool(0.5)).collect();
+            let any = Policy::Any.fuse(&votes).unwrap();
+            let maj = Policy::Majority.fuse(&votes).unwrap();
+            let all = Policy::All.fuse(&votes).unwrap();
+            assert!(!all || maj, "All ⇒ Majority failed on {votes:?}");
+            assert!(!maj || any, "Majority ⇒ Any failed on {votes:?}");
+        });
+    }
+
+    #[test]
+    fn prop_atleast_monotone_in_votes() {
+        // Flipping a negative vote to positive never turns a positive
+        // decision negative (monotonicity of threshold policies).
+        check("atleast monotone", 300, |g| {
+            let n = g.int(1, 8);
+            let k = g.int(1, n);
+            let mut votes: Vec<bool> = (0..n).map(|_| g.bool(0.5)).collect();
+            let before = Policy::AtLeast(k).fuse(&votes).unwrap();
+            if let Some(i) = votes.iter().position(|v| !v) {
+                votes[i] = true;
+                let after = Policy::AtLeast(k).fuse(&votes).unwrap();
+                assert!(!before || after);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_atleast_matches_count() {
+        check("atleast == count comparison", 300, |g| {
+            let n = g.int(1, 10);
+            let k = g.int(1, n);
+            let votes: Vec<bool> = (0..n).map(|_| g.bool(0.3)).collect();
+            let want = votes.iter().filter(|v| **v).count() >= k;
+            assert_eq!(Policy::AtLeast(k).fuse(&votes).unwrap(), want);
+        });
+    }
+
+    #[test]
+    fn confusion_rates() {
+        let mut c = Confusion::default();
+        for (p, a) in [(true, true), (true, false), (false, true), (false, false)] {
+            c.record(p, a);
+        }
+        assert_eq!(c.tpr(), 0.5);
+        assert_eq!(c.fnr(), 0.5);
+        assert_eq!(c.fpr(), 0.5);
+        assert_eq!(c.accuracy(), 0.5);
+        assert_eq!(Confusion::default().tpr(), 0.0); // no div-by-zero
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal blocking HTTP/1.1 client with keep-alive and auto-reconnect.
+//! Used by the examples, integration tests and the load generator.
+
+use super::{Request, Response};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+pub struct Client {
+    addr: SocketAddr,
+    stream: Option<BufReader<TcpStream>>,
+    reconnects: usize,
+    timeout: Duration,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let mut c = Client {
+            addr,
+            stream: None,
+            reconnects: 0,
+            timeout: Duration::from_secs(30),
+        };
+        c.ensure_connected()?;
+        c.reconnects = 0; // initial connect doesn't count
+        Ok(c)
+    }
+
+    /// Times a client reconnected due to a dropped keep-alive connection.
+    pub fn reconnects(&self) -> usize {
+        self.reconnects
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<Response> {
+        self.request(&Request::new("GET", path, Vec::new()))
+    }
+
+    pub fn post(&mut self, path: &str, body: Vec<u8>) -> Result<Response> {
+        let mut req = Request::new("POST", path, body);
+        req.headers
+            .push(("content-type".into(), "application/json".into()));
+        self.request(&req)
+    }
+
+    pub fn post_json(&mut self, path: &str, v: &crate::json::Value) -> Result<Response> {
+        self.post(path, crate::json::to_string(v).into_bytes())
+    }
+
+    /// Send a request, retrying once on a broken keep-alive connection.
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        match self.try_request(req) {
+            Ok(resp) => Ok(resp),
+            Err(_) => {
+                // Stale keep-alive socket (server restarted / timed out):
+                // reconnect once.
+                self.stream = None;
+                self.reconnects += 1;
+                self.try_request(req)
+            }
+        }
+    }
+
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect_timeout(&self.addr, self.timeout)
+                .with_context(|| format!("connecting {}", self.addr))?;
+            s.set_read_timeout(Some(self.timeout))?;
+            s.set_nodelay(true)?;
+            self.stream = Some(BufReader::new(s));
+        }
+        Ok(())
+    }
+
+    fn try_request(&mut self, req: &Request) -> Result<Response> {
+        self.ensure_connected()?;
+        let reader = self.stream.as_mut().unwrap();
+        let mut target = req.path.clone();
+        if !req.query.is_empty() {
+            target.push('?');
+            for (i, (k, v)) in req.query.iter().enumerate() {
+                if i > 0 {
+                    target.push('&');
+                }
+                target.push_str(k);
+                target.push('=');
+                target.push_str(v);
+            }
+        }
+        let mut head = format!(
+            "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\n",
+            req.method,
+            target,
+            self.addr,
+            req.body.len()
+        );
+        for (k, v) in &req.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        let stream = reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&req.body)?;
+        stream.flush()?;
+        read_response(reader)
+    }
+}
+
+/// Parse a response off the wire.
+pub fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        bail!("connection closed before status line");
+    }
+    let mut parts = line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad status line: {line:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("missing status code"))?
+        .parse()
+        .context("bad status code")?;
+
+    let mut resp = Response::new(status);
+    let mut content_length = 0usize;
+    let mut close = false;
+    loop {
+        let mut hline = String::new();
+        if reader.read_line(&mut hline)? == 0 {
+            bail!("eof in response headers");
+        }
+        let trimmed = hline.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().context("bad content-length")?;
+            }
+            if name == "connection" && value.eq_ignore_ascii_case("close") {
+                close = true;
+            }
+            resp.headers.push((name, value));
+        }
+    }
+    if content_length > 0 {
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        resp.body = body;
+    }
+    let _ = close; // caller's Client::request handles reconnect lazily
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in server.rs tests and rust/tests/.
+}

@@ -1,0 +1,214 @@
+//! From-scratch HTTP/1.1 substrate (hyper/tokio unavailable offline).
+//!
+//! Deliberately mirrors the paper's Flask + Gunicorn **sync-worker** stack:
+//! a blocking accept loop hands keep-alive connections to a fixed thread
+//! pool ([`server::Server`]); each worker runs a read→handle→write loop.
+//! That is exactly Gunicorn's concurrency model, minus Python.
+//!
+//! Scope: the subset of RFC 9112 a model server needs — request/status
+//! lines, headers, `Content-Length` bodies, keep-alive, 100-continue is not
+//! needed (clients here never send it). Chunked *responses* are not used;
+//! chunked request bodies are rejected with 411.
+
+pub mod client;
+pub mod router;
+pub mod server;
+
+pub use client::Client;
+pub use router::Router;
+pub use server::{Server, ServerHandle};
+
+use crate::json::{self, Value};
+use anyhow::Result;
+
+/// Maximum accepted request body (tensor payloads are ~100 KiB at bucket
+/// 32; 16 MiB leaves generous headroom while bounding hostile inputs).
+pub const MAX_BODY: usize = 16 << 20;
+/// Maximum total header block size.
+pub const MAX_HEADER: usize = 16 << 10;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, percent-decoding NOT applied (the API
+    /// uses plain ASCII paths).
+    pub path: String,
+    /// Parsed query pairs, in order.
+    pub query: Vec<(String, String)>,
+    /// Header names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn new(method: &str, path_and_query: &str, body: Vec<u8>) -> Request {
+        let (path, query) = split_query(path_and_query);
+        Request {
+            method: method.to_uppercase(),
+            path,
+            query,
+            headers: Vec::new(),
+            body,
+        }
+    }
+
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json_body(&self) -> Result<Value> {
+        let text = std::str::from_utf8(&self.body)?;
+        Ok(json::parse(text)?)
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    pub fn json(status: u16, v: &Value) -> Response {
+        let mut r = Response::new(status);
+        r.headers
+            .push(("content-type".into(), "application/json".into()));
+        r.body = json::to_string(v).into_bytes();
+        r
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        let mut r = Response::new(status);
+        r.headers
+            .push(("content-type".into(), "text/plain; charset=utf-8".into()));
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    /// Uniform error envelope: `{"error": {"code", "message"}}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(
+            status,
+            &json::obj([(
+                "error",
+                json::obj([
+                    ("code", Value::from(status as u64)),
+                    ("message", Value::from(message)),
+                ]),
+            )]),
+        )
+    }
+
+    pub fn not_found() -> Response {
+        Response::error(404, "not found")
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(&name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn json_body(&self) -> Result<Value> {
+        let text = std::str::from_utf8(&self.body)?;
+        Ok(json::parse(text)?)
+    }
+
+    pub fn status_name(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            411 => "Length Required",
+            413 => "Payload Too Large",
+            422 => "Unprocessable Entity",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+fn split_query(path_and_query: &str) -> (String, Vec<(String, String)>) {
+    match path_and_query.split_once('?') {
+        None => (path_and_query.to_string(), Vec::new()),
+        Some((path, qs)) => {
+            let query = qs
+                .split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), String::new()),
+                })
+                .collect();
+            (path.to_string(), query)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_accessors() {
+        let mut r = Request::new("post", "/predict?models=cnn_s,mlp&top=1", b"{}".to_vec());
+        r.headers.push(("content-type".into(), "application/json".into()));
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/predict");
+        assert_eq!(r.query_param("models"), Some("cnn_s,mlp"));
+        assert_eq!(r.query_param("top"), Some("1"));
+        assert_eq!(r.query_param("missing"), None);
+        assert_eq!(r.header("Content-Type"), Some("application/json"));
+        assert!(r.json_body().unwrap().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn response_error_envelope() {
+        let r = Response::error(422, "bad batch");
+        let v = r.json_body().unwrap();
+        assert_eq!(v.path(&["error", "code"]).unwrap().as_u64(), Some(422));
+        assert_eq!(
+            v.path(&["error", "message"]).unwrap().as_str(),
+            Some("bad batch")
+        );
+    }
+
+    #[test]
+    fn query_edge_cases() {
+        let r = Request::new("GET", "/x?a&b=&=c&", Vec::new());
+        assert_eq!(r.query_param("a"), Some(""));
+        assert_eq!(r.query_param("b"), Some(""));
+        assert_eq!(r.query_param(""), Some("c"));
+    }
+}

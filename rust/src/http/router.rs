@@ -1,0 +1,155 @@
+//! Tiny path router: exact segments plus `:param` captures.
+
+use super::{Request, Response};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+type RouteHandler = Arc<dyn Fn(&Request, &Params) -> Response + Send + Sync>;
+
+/// Captured `:param` values for one match.
+pub type Params = HashMap<String, String>;
+
+struct Route {
+    method: String,
+    segments: Vec<Segment>,
+    handler: RouteHandler,
+}
+
+enum Segment {
+    Literal(String),
+    Param(String),
+}
+
+/// Method+path router. Longest-registered-first is unnecessary: patterns
+/// here are disjoint; first match wins.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register a route, e.g. `router.add("GET", "/models/:name", h)`.
+    pub fn add<F>(&mut self, method: &str, pattern: &str, handler: F)
+    where
+        F: Fn(&Request, &Params) -> Response + Send + Sync + 'static,
+    {
+        let segments = pattern
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(name) = s.strip_prefix(':') {
+                    Segment::Param(name.to_string())
+                } else {
+                    Segment::Literal(s.to_string())
+                }
+            })
+            .collect();
+        self.routes.push(Route {
+            method: method.to_uppercase(),
+            segments,
+            handler: Arc::new(handler),
+        });
+    }
+
+    /// Dispatch a request; 404 when no pattern matches, 405 when the path
+    /// matches but the method doesn't.
+    pub fn dispatch(&self, req: &Request) -> Response {
+        let path_segments: Vec<&str> = req
+            .path
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect();
+        let mut path_matched = false;
+        for route in &self.routes {
+            if let Some(params) = match_segments(&route.segments, &path_segments) {
+                if route.method == req.method {
+                    return (route.handler)(req, &params);
+                }
+                path_matched = true;
+            }
+        }
+        if path_matched {
+            Response::error(405, "method not allowed")
+        } else {
+            Response::not_found()
+        }
+    }
+
+    /// Wrap into a server handler.
+    pub fn into_handler(self) -> super::server::Handler {
+        let router = Arc::new(self);
+        Arc::new(move |req: &Request| router.dispatch(req))
+    }
+}
+
+fn match_segments(pattern: &[Segment], path: &[&str]) -> Option<Params> {
+    if pattern.len() != path.len() {
+        return None;
+    }
+    let mut params = Params::new();
+    for (seg, part) in pattern.iter().zip(path) {
+        match seg {
+            Segment::Literal(lit) if lit == part => {}
+            Segment::Literal(_) => return None,
+            Segment::Param(name) => {
+                params.insert(name.clone(), part.to_string());
+            }
+        }
+    }
+    Some(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.add("GET", "/healthz", |_, _| Response::text(200, "ok"));
+        r.add("GET", "/models/:name", |_, p| {
+            Response::text(200, &format!("model={}", p["name"]))
+        });
+        r.add("POST", "/predict", |req, _| {
+            Response::text(200, &format!("len={}", req.body.len()))
+        });
+        r
+    }
+
+    fn get(path: &str) -> Request {
+        Request::new("GET", path, Vec::new())
+    }
+
+    #[test]
+    fn exact_match() {
+        assert_eq!(router().dispatch(&get("/healthz")).status, 200);
+        assert_eq!(router().dispatch(&get("/healthz/")).status, 200);
+    }
+
+    #[test]
+    fn param_capture() {
+        let resp = router().dispatch(&get("/models/cnn_s"));
+        assert_eq!(resp.body, b"model=cnn_s");
+    }
+
+    #[test]
+    fn not_found_vs_method_not_allowed() {
+        assert_eq!(router().dispatch(&get("/nope")).status, 404);
+        assert_eq!(router().dispatch(&get("/predict")).status, 405);
+        assert_eq!(
+            router().dispatch(&Request::new("POST", "/predict", b"xy".to_vec())).body,
+            b"len=2"
+        );
+    }
+
+    #[test]
+    fn length_mismatch_no_match() {
+        assert_eq!(router().dispatch(&get("/models")).status, 404);
+        assert_eq!(router().dispatch(&get("/models/a/b")).status, 404);
+    }
+}

@@ -1,0 +1,153 @@
+//! Input pipeline: decode + the single shared normalization transform.
+//!
+//! §2.2's efficiency claim: FlexServe applies **one** data transformation
+//! per request for the whole ensemble, where per-model endpoints transform
+//! once per model. This module is that transform; `bench_transform`
+//! measures the claim. The constants mirror `python/compile/data.py`
+//! (`normalize`) bit-for-bit — they also arrive via the manifest so a
+//! retrained artifact set can change them without a Rust rebuild.
+
+use anyhow::{bail, Result};
+
+/// Normalization constants for one artifact set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normalizer {
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl Normalizer {
+    pub fn new(mean: f32, std: f32) -> Self {
+        assert!(std > 0.0, "std must be positive");
+        Normalizer { mean, std }
+    }
+
+    /// Normalize in place: `x ← (x − mean) / std`.
+    pub fn apply(&self, pixels: &mut [f32]) {
+        let inv = 1.0 / self.std;
+        for p in pixels.iter_mut() {
+            *p = (*p - self.mean) * inv;
+        }
+    }
+
+    /// Allocate-and-normalize (request path uses `apply` on an owned buf).
+    pub fn applied(&self, pixels: &[f32]) -> Vec<f32> {
+        let mut out = pixels.to_vec();
+        self.apply(&mut out);
+        out
+    }
+}
+
+/// Decode a binary PGM (P5, maxval ≤ 255) into f32 pixels in [0, 1] —
+/// the "inexpensive web camera" wire format of the §2.3 use case.
+pub fn decode_pgm(bytes: &[u8]) -> Result<(usize, usize, Vec<f32>)> {
+    let mut pos = 0;
+    let mut token = || -> Result<&[u8]> {
+        // Skip whitespace and `#` comments.
+        loop {
+            while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if pos < bytes.len() && bytes[pos] == b'#' {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+                continue;
+            }
+            break;
+        }
+        let start = pos;
+        while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if start == pos {
+            bail!("truncated PGM header");
+        }
+        Ok(&bytes[start..pos])
+    };
+
+    if token()? != b"P5" {
+        bail!("not a binary PGM (P5)");
+    }
+    let width: usize = parse_ascii(token()?)?;
+    let height: usize = parse_ascii(token()?)?;
+    let maxval: usize = parse_ascii(token()?)?;
+    if maxval == 0 || maxval > 255 {
+        bail!("unsupported PGM maxval {maxval}");
+    }
+    if width == 0 || height == 0 || width * height > 1 << 24 {
+        bail!("unreasonable PGM dimensions {width}x{height}");
+    }
+    pos += 1; // single whitespace after maxval
+    let need = width * height;
+    let raster = bytes
+        .get(pos..pos + need)
+        .ok_or_else(|| anyhow::anyhow!("PGM raster truncated"))?;
+    let scale = 1.0 / maxval as f32;
+    Ok((
+        width,
+        height,
+        raster.iter().map(|&b| b as f32 * scale).collect(),
+    ))
+}
+
+/// Encode f32 pixels (clamped to [0,1]) as binary PGM — used by the
+/// workload generator and examples to produce wire-format frames.
+pub fn encode_pgm(width: usize, height: usize, pixels: &[f32]) -> Vec<u8> {
+    assert_eq!(pixels.len(), width * height);
+    let mut out = format!("P5\n{width} {height}\n255\n").into_bytes();
+    out.extend(
+        pixels
+            .iter()
+            .map(|&p| (p.clamp(0.0, 1.0) * 255.0).round() as u8),
+    );
+    out
+}
+
+fn parse_ascii(tok: &[u8]) -> Result<usize> {
+    std::str::from_utf8(tok)?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad PGM header int: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_roundtrip() {
+        let n = Normalizer::new(0.5, 2.0);
+        let mut px = vec![0.5, 2.5, -1.5];
+        n.apply(&mut px);
+        assert_eq!(px, vec![0.0, 1.0, -1.0]);
+        assert_eq!(n.applied(&[0.5]), vec![0.0]);
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let pixels: Vec<f32> = (0..64).map(|i| i as f32 / 63.0).collect();
+        let encoded = encode_pgm(8, 8, &pixels);
+        let (w, h, decoded) = decode_pgm(&encoded).unwrap();
+        assert_eq!((w, h), (8, 8));
+        for (a, b) in pixels.iter().zip(&decoded) {
+            assert!((a - b).abs() < 1.0 / 255.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pgm_with_comments() {
+        let data = b"P5 # camera 3\n# another comment\n2 2\n255\n\x00\x40\x80\xff";
+        let (w, h, px) = decode_pgm(data).unwrap();
+        assert_eq!((w, h), (2, 2));
+        assert!((px[3] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pgm_rejects_garbage() {
+        assert!(decode_pgm(b"P6 2 2 255 aaaa").is_err()); // PPM, not PGM
+        assert!(decode_pgm(b"P5 2 2 255").is_err()); // truncated raster
+        assert!(decode_pgm(b"P5 0 2 255 ").is_err()); // zero dim
+        assert!(decode_pgm(b"P5 2 2 70000 ").is_err()); // 16-bit unsupported
+        assert!(decode_pgm(b"").is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! From-scratch JSON codec (substrate — serde is unavailable offline).
+//!
+//! Implements the full RFC 8259 grammar: objects, arrays, strings with
+//! escapes (including `\uXXXX` with surrogate pairs), numbers, booleans,
+//! null. Used for the REST wire format (the paper's
+//! `{"model_i": ["class", ...]}` responses), the artifact manifest contract
+//! with `python/compile/aot.py`, and server configs.
+//!
+//! Object key order is preserved (`Vec<(String, Value)>`) so serialized
+//! responses are deterministic — important for golden tests.
+
+mod parse;
+mod ser;
+
+pub use parse::{parse, ParseError};
+pub use ser::{to_string, to_string_pretty};
+
+use std::fmt;
+
+/// A JSON document value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// All JSON numbers are f64, as in JavaScript. Integers up to 2^53
+    /// round-trip exactly, which covers every count/byte-size we serialize.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// Insertion-ordered object (no HashMap: determinism + tiny objects).
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object member lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(members) => {
+                members.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Array element lookup.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        match self {
+            Value::Arr(items) => items.get(idx),
+            _ => None,
+        }
+    }
+
+    /// Deep path lookup: `v.path(&["models", "cnn_s", "test_acc"])`.
+    pub fn path(&self, keys: &[&str]) -> Option<&Value> {
+        keys.iter().try_fold(self, |v, k| v.get(k))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Obj(members) => Some(members),
+            _ => None,
+        }
+    }
+
+    /// `[f64]` view of a numeric array (used for tensor payloads).
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(Value::as_f64).collect()
+    }
+
+    /// `f32` tensor payload view (request `"data"` fields).
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        Some(self.as_f64_vec()?.into_iter().map(|v| v as f32).collect())
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&to_string(self))
+    }
+}
+
+/// Builder sugar: `obj([("a", Value::Num(1.0))])`.
+pub fn obj<I: IntoIterator<Item = (&'static str, Value)>>(members: I) -> Value {
+    Value::Obj(
+        members
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+pub fn arr<I: IntoIterator<Item = Value>>(items: I) -> Value {
+    Value::Arr(items.into_iter().collect())
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = obj([
+            ("a", Value::from(1.5)),
+            ("b", arr([Value::from("x"), Value::from(true)])),
+            ("n", Value::Null),
+        ]);
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("b").unwrap().at(0).unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("b").unwrap().at(1).unwrap().as_bool(), Some(true));
+        assert!(v.get("n").unwrap() == &Value::Null);
+        assert!(v.get("missing").is_none());
+        assert!(v.at(0).is_none());
+    }
+
+    #[test]
+    fn path_lookup() {
+        let v = parse(r#"{"a":{"b":{"c":42}}}"#).unwrap();
+        assert_eq!(v.path(&["a", "b", "c"]).unwrap().as_u64(), Some(42));
+        assert!(v.path(&["a", "x"]).is_none());
+    }
+
+    #[test]
+    fn u64_bounds() {
+        assert_eq!(Value::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Value::Num(3.5).as_u64(), None);
+        assert_eq!(Value::Num(-1.0).as_u64(), None);
+    }
+
+    #[test]
+    fn f32_vec() {
+        let v = parse("[1, 2.5, -3]").unwrap();
+        assert_eq!(v.as_f32_vec().unwrap(), vec![1.0, 2.5, -3.0]);
+        assert!(parse(r#"[1, "x"]"#).unwrap().as_f32_vec().is_none());
+    }
+}

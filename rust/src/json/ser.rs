@@ -1,0 +1,179 @@
+//! JSON serializer: compact and pretty forms.
+//!
+//! Perf note (§Perf L3#1): numbers are written with `write!` directly into
+//! the output buffer (no per-number String allocation) and the buffer is
+//! pre-sized from a cheap size estimate — tensor payloads are arrays of
+//! thousands of floats, so both effects are material on the request path.
+
+use super::Value;
+use std::fmt::Write as _;
+
+/// Compact serialization (the wire format).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::with_capacity(estimate_size(v));
+    write_value(&mut out, v, None, 0);
+    out
+}
+
+/// Two-space-indented serialization (configs, reports).
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::with_capacity(estimate_size(v) * 2);
+    write_value(&mut out, v, Some(2), 0);
+    out
+}
+
+/// Cheap upper-ish estimate of the serialized size (avoids buffer regrow
+/// copies on large float arrays; exactness does not matter).
+fn estimate_size(v: &Value) -> usize {
+    match v {
+        Value::Null | Value::Bool(_) => 5,
+        Value::Num(_) => 12,
+        Value::Str(s) => s.len() + 8,
+        Value::Arr(items) => 2 + items.iter().map(|i| estimate_size(i) + 1).sum::<usize>(),
+        Value::Obj(members) => {
+            2 + members
+                .iter()
+                .map(|(k, val)| k.len() + 4 + estimate_size(val))
+                .sum::<usize>()
+        }
+    }
+}
+
+fn write_value(out: &mut String, v: &Value, indent: Option<usize>, level: usize) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => write_num(out, *n),
+        Value::Str(s) => write_str(out, s),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline(out, indent, level + 1);
+                write_value(out, item, indent, level + 1);
+            }
+            newline(out, indent, level);
+            out.push(']');
+        }
+        Value::Obj(members) => {
+            if members.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in members.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline(out, indent, level + 1);
+                write_str(out, k);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(out, val, indent, level + 1);
+            }
+            newline(out, indent, level);
+            out.push('}');
+        }
+    }
+}
+
+fn newline(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(width) = indent {
+        out.push('\n');
+        out.extend(std::iter::repeat(' ').take(width * level));
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; emit null like most encoders.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{arr, obj, parse, Value};
+    use super::*;
+
+    #[test]
+    fn compact() {
+        let v = obj([
+            ("a", Value::from(1usize)),
+            ("b", arr([Value::from("x"), Value::Null])),
+        ]);
+        assert_eq!(to_string(&v), r#"{"a":1,"b":["x",null]}"#);
+    }
+
+    #[test]
+    fn integers_have_no_point() {
+        assert_eq!(to_string(&Value::Num(3.0)), "3");
+        assert_eq!(to_string(&Value::Num(3.5)), "3.5");
+        assert_eq!(to_string(&Value::Num(-0.0)), "0");
+    }
+
+    #[test]
+    fn non_finite_is_null() {
+        assert_eq!(to_string(&Value::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Value::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let s = to_string(&Value::from("a\u{1}b"));
+        assert_eq!(s, "\"a\\u0001b\"");
+        assert_eq!(parse(&s).unwrap(), Value::from("a\u{1}b"));
+    }
+
+    #[test]
+    fn pretty_roundtrip() {
+        let v = obj([
+            ("models", arr([Value::from("cnn_s"), Value::from("mlp")])),
+            ("nested", obj([("k", arr([Value::from(1i64)]))])),
+            ("empty_a", arr([])),
+            ("empty_o", obj([])),
+        ]);
+        let pretty = to_string_pretty(&v);
+        assert!(pretty.contains('\n'));
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn float_precision_roundtrip() {
+        for x in [0.1, 1e-9, 123456.789, -2.5e17, f64::MIN_POSITIVE] {
+            let s = to_string(&Value::Num(x));
+            assert_eq!(parse(&s).unwrap().as_f64().unwrap(), x, "{s}");
+        }
+    }
+}

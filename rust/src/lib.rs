@@ -1,0 +1,38 @@
+//! # FlexServe-RS
+//!
+//! A reproduction of *FlexServe: Deployment of PyTorch Models as Flexible
+//! REST Endpoints* (Verenich et al., 2020) as a three-layer Rust + JAX +
+//! Pallas stack: JAX/Pallas models are AOT-lowered to XLA HLO at build time
+//! (`make artifacts`), and this crate — the Layer-3 coordinator — serves
+//! them over REST with multi-model ensembles behind a single endpoint,
+//! shared-device execution, dynamic (bucketed) batching, and sensitivity-
+//! policy fusion. Python never runs on the request path.
+//!
+//! Architecture (DESIGN.md has the full inventory):
+//!
+//! ```text
+//!  client ──HTTP──▶ http::Server ──▶ coordinator::api ──▶ coordinator::Ensemble
+//!                                          │                    │ batcher
+//!                                          ▼                    ▼
+//!                                   imagepipe (one        runtime::ExecutorPool
+//!                                   transform for          (threads owning
+//!                                   the whole ensemble)    PjRtClient + HLO
+//!                                                          executables)
+//! ```
+//!
+//! The offline build environment provides no tokio/serde/hyper/criterion, so
+//! the HTTP server, JSON codec, thread pool, metrics, property-test harness
+//! and bench harness are all first-class modules of this crate — which also
+//! mirrors the paper's own stack (Flask + Gunicorn sync workers) more
+//! faithfully than an async runtime would.
+
+pub mod baseline;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod http;
+pub mod imagepipe;
+pub mod json;
+pub mod runtime;
+pub mod util;
+pub mod workload;

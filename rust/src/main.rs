@@ -1,0 +1,225 @@
+//! FlexServe CLI — the leader entrypoint.
+//!
+//! ```text
+//! flexserve serve            start the ensemble server (Fig. 1)
+//! flexserve serve-baseline   start the TFS-style fixed-batch baseline
+//! flexserve models           print the artifact manifest + provenance
+//! flexserve verify           verify artifact SHA-256s against the manifest
+//! flexserve predict          send a synthetic batch to a running server
+//! ```
+//!
+//! Flags after the subcommand: see `config::ServeConfig::apply_cli`.
+
+use anyhow::{bail, Context, Result};
+use flexserve::baseline::{serve_baseline, BaselineConfig};
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::serve;
+use flexserve::http::Client;
+use flexserve::json::{self, Value};
+use flexserve::runtime::Manifest;
+use flexserve::util::Prng;
+use flexserve::workload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "serve-baseline" => cmd_serve_baseline(rest),
+        "models" => cmd_models(rest),
+        "verify" => cmd_verify(rest),
+        "predict" => cmd_predict(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: flexserve help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "flexserve — flexible REST deployment of AOT-compiled model ensembles\n\
+         \n\
+         USAGE: flexserve <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+           serve            start the FlexServe ensemble server\n\
+           serve-baseline   start the TFS-style fixed-batch baseline server\n\
+           models           print the artifact manifest (provenance included)\n\
+           verify           verify artifact hashes against the manifest\n\
+           predict          send a synthetic frame batch to a running server\n\
+         \n\
+         COMMON FLAGS:\n\
+           --artifacts DIR      artifact directory (default: ./artifacts)\n\
+           --addr HOST:PORT     listen/connect address\n\
+         SERVE FLAGS:\n\
+           --http-workers N --device-workers N --models a,b\n\
+           --no-batcher --max-batch N --batch-delay-us N\n\
+           --no-verify --no-warmup --config FILE\n\
+         SERVE-BASELINE FLAGS:\n\
+           --fixed-batch N (default 1)\n\
+         PREDICT FLAGS:\n\
+           --batch N --policy any|all|majority|atleast:k --target CLASS\n\
+           --detail --seed N"
+    );
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut config = ServeConfig::default();
+    config.apply_cli(args)?;
+    let (handle, state) = serve(&config)?;
+    println!(
+        "flexserve: serving {} models on http://{} ({} http workers, {} device workers, batcher {})",
+        state.ensemble.models().len(),
+        handle.addr,
+        config.http_workers,
+        config.device_workers,
+        if config.batcher.is_some() { "on" } else { "off" },
+    );
+    println!("models: {}", state.ensemble.models().join(", "));
+    println!("endpoints: POST /predict | GET /models /models/:name /metrics /healthz");
+    park_forever();
+}
+
+fn cmd_serve_baseline(args: &[String]) -> Result<()> {
+    let mut config = BaselineConfig::default();
+    // Reuse the serve flag parser for the shared flags; pull out baseline-
+    // specific ones first.
+    let mut passthrough = Vec::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--fixed-batch" => {
+                config.fixed_batch = it
+                    .next()
+                    .context("--fixed-batch needs a value")?
+                    .parse::<usize>()?
+                    .max(1)
+            }
+            _ => passthrough.push(a.clone()),
+        }
+    }
+    let mut shared = ServeConfig::default();
+    shared.addr = config.addr.clone();
+    shared.apply_cli(&passthrough)?;
+    config.addr = shared.addr;
+    config.http_workers = shared.http_workers;
+    config.artifacts = shared.artifacts;
+    config.models = shared.models;
+
+    let (handle, state) = serve_baseline(&config)?;
+    println!(
+        "baseline: {} per-model endpoints on http://{} (fixed batch {})",
+        state.models.len(),
+        handle.addr,
+        state.fixed_batch,
+    );
+    for (name, _, _) in &state.models {
+        println!("  POST /v1/models/{name}/predict");
+    }
+    park_forever();
+}
+
+fn cmd_models(args: &[String]) -> Result<()> {
+    let mut shared = ServeConfig::default();
+    shared.apply_cli(args)?;
+    let manifest = Manifest::load(&shared.artifacts)?;
+    let mut models = Vec::new();
+    for m in &manifest.models {
+        models.push((
+            m.name.clone(),
+            json::obj([
+                ("param_count", Value::from(m.param_count)),
+                ("test_acc", Value::from(m.test_acc)),
+                (
+                    "buckets",
+                    Value::Arr(m.buckets.iter().map(|a| Value::from(a.bucket)).collect()),
+                ),
+                ("params_sha256", Value::from(m.params_sha256.as_str())),
+            ]),
+        ));
+    }
+    let doc = Value::Obj(vec![
+        (
+            "classes".into(),
+            Value::Arr(manifest.classes.iter().map(|c| Value::from(c.as_str())).collect()),
+        ),
+        ("models".into(), Value::Obj(models)),
+        ("provenance".into(), manifest.provenance.clone()),
+    ]);
+    println!("{}", json::to_string_pretty(&doc));
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let mut shared = ServeConfig::default();
+    shared.apply_cli(args)?;
+    let manifest = Manifest::load(&shared.artifacts)?;
+    manifest.verify_all()?;
+    let n: usize = manifest.models.iter().map(|m| m.buckets.len()).sum();
+    println!("ok: {n} artifacts match their manifest SHA-256s");
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut batch = 4usize;
+    let mut policy: Option<String> = None;
+    let mut target: Option<String> = None;
+    let mut detail = false;
+    let mut seed = 0u64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            "--batch" => batch = it.next().context("--batch needs a value")?.parse()?,
+            "--policy" => policy = Some(it.next().context("--policy needs a value")?.clone()),
+            "--target" => target = Some(it.next().context("--target needs a value")?.clone()),
+            "--detail" => detail = true,
+            "--seed" => seed = it.next().context("--seed needs a value")?.parse()?,
+            other => bail!("unknown predict flag '{other}'"),
+        }
+    }
+    let mut rng = Prng::new(seed);
+    let (data, labels) = workload::make_batch(&mut rng, batch);
+    let mut body = vec![
+        (
+            "data".to_string(),
+            Value::Arr(data.iter().map(|&v| Value::from(v)).collect()),
+        ),
+        ("batch".to_string(), Value::from(batch)),
+    ];
+    if let Some(p) = policy {
+        body.push(("policy".into(), Value::from(p)));
+    }
+    if let Some(t) = target {
+        body.push(("target".into(), Value::from(t)));
+    }
+    if detail {
+        body.push(("detail".into(), Value::Bool(true)));
+    }
+    let mut client = Client::connect(addr.parse()?)?;
+    let resp = client.post_json("/predict", &Value::Obj(body))?;
+    println!("true labels: {:?}", labels.iter().map(|&l| workload::CLASSES[l]).collect::<Vec<_>>());
+    println!("status: {}", resp.status);
+    println!("{}", json::to_string_pretty(&resp.json_body()?));
+    Ok(())
+}
+
+fn park_forever() -> ! {
+    loop {
+        std::thread::park();
+    }
+}

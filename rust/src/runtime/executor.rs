@@ -1,0 +1,326 @@
+//! The device executor: one thread owning one `PjRtClient` and every
+//! compiled (model × bucket) executable — the Rust incarnation of the
+//! paper's `fmodels` shared-memory ensemble (§2.2).
+//!
+//! xla handles are `!Send`, so all PJRT work happens on this thread;
+//! request threads hold a cheap [`ExecutorHandle`] (`Clone + Send + Sync`)
+//! and submit [`ExecRequest`]s over a channel. Device work is therefore
+//! serialized exactly like N models sharing one GPU stream.
+
+use super::manifest::Manifest;
+use super::tensor;
+use crate::util::Stopwatch;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+/// One inference job for a single model.
+#[derive(Debug, Clone)]
+pub struct ExecRequest {
+    pub model: String,
+    /// True (unpadded) batch size; must be ≥ 1 and ≤ the model's max bucket.
+    pub batch: usize,
+    /// Row-major `(batch, H, W, C)` input, already normalized.
+    pub data: Vec<f32>,
+}
+
+/// Result of one inference job.
+#[derive(Debug, Clone)]
+pub struct ExecResponse {
+    /// Row-major `(batch, num_classes)` logits, truncated to the true batch.
+    pub logits: Vec<f32>,
+    /// Bucket the job actually ran on (≥ batch).
+    pub bucket: usize,
+    /// Time spent queued behind other device work.
+    pub queue_micros: u64,
+    /// Device execution time (pad + literal + execute + readback).
+    pub exec_micros: u64,
+}
+
+struct Job {
+    req: ExecRequest,
+    enqueued: Stopwatch,
+    reply: mpsc::Sender<Result<ExecResponse>>,
+}
+
+/// Channel protocol to the device thread. An explicit `Shutdown` message
+/// (rather than relying on channel closure) lets `Executor::drop` stop the
+/// thread even while cloned `ExecutorHandle`s still hold senders.
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Which artifacts an executor loads (subset support is what lets the
+/// benches build "one model per device" baselines).
+#[derive(Debug, Clone, Default)]
+pub struct ExecutorOptions {
+    /// Models to load; `None` = every model in the manifest.
+    pub models: Option<Vec<String>>,
+    /// Buckets to compile; `None` = every bucket in the manifest.
+    pub buckets: Option<Vec<usize>>,
+    /// Verify artifact SHA-256 against the manifest before loading.
+    pub verify_sha: bool,
+    /// Run one warmup execution per executable after compiling.
+    pub warmup: bool,
+}
+
+/// Cloneable, thread-safe handle to a device executor.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Msg>,
+    manifest: Arc<Manifest>,
+}
+
+impl ExecutorHandle {
+    /// Blocking single-model inference.
+    pub fn infer(&self, req: ExecRequest) -> Result<ExecResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Job(Job {
+                req,
+                enqueued: Stopwatch::start(),
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the job"))?
+    }
+
+    /// Submit without waiting; returns the reply receiver. Lets the
+    /// ensemble overlap N model submissions before collecting.
+    pub fn infer_async(&self, req: ExecRequest) -> Result<mpsc::Receiver<Result<ExecResponse>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Job(Job {
+                req,
+                enqueued: Stopwatch::start(),
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        Ok(reply_rx)
+    }
+
+    pub fn manifest(&self) -> &Arc<Manifest> {
+        &self.manifest
+    }
+}
+
+/// Owns the executor thread; dropping shuts it down (after queued work).
+pub struct Executor {
+    handle: ExecutorHandle,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the device thread, compile all selected artifacts, and block
+    /// until the device is ready (or compilation failed).
+    pub fn spawn(manifest: Arc<Manifest>, opts: ExecutorOptions) -> Result<Executor> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let m = Arc::clone(&manifest);
+        let thread = thread::Builder::new()
+            .name("flexserve-device".into())
+            .spawn(move || device_thread(m, opts, rx, ready_tx))
+            .context("spawning device executor thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("device thread died during startup"))??;
+        Ok(Executor {
+            handle: ExecutorHandle { tx, manifest },
+            thread: Some(thread),
+        })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // Explicit shutdown: cloned handles may still hold senders, so
+        // channel closure alone would never arrive.
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Body of the device thread: compile everything, then serve jobs forever.
+fn device_thread(
+    manifest: Arc<Manifest>,
+    opts: ExecutorOptions,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(xla::PjRtClient, HashMap<(String, usize), xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for model in &manifest.models {
+            if let Some(want) = &opts.models {
+                if !want.contains(&model.name) {
+                    continue;
+                }
+            }
+            for art in &model.buckets {
+                if let Some(want) = &opts.buckets {
+                    if !want.contains(&art.bucket) {
+                        continue;
+                    }
+                }
+                if opts.verify_sha {
+                    manifest.verify_artifact(art)?;
+                }
+                let path = manifest.artifact_path(art);
+                // HLO TEXT interchange: see aot.py / DESIGN.md — serialized
+                // protos from jax>=0.5 are rejected by xla_extension 0.5.1.
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", art.file))?;
+                executables.insert((model.name.clone(), art.bucket), exe);
+            }
+        }
+        if executables.is_empty() {
+            bail!("executor loaded zero executables (model/bucket filter too strict?)");
+        }
+        if opts.warmup {
+            let elems = manifest.sample_elems();
+            for ((name, bucket), exe) in &executables {
+                let zeros = vec![0.0f32; bucket * elems];
+                run_one(exe, &zeros, *bucket, &manifest)
+                    .with_context(|| format!("warmup {name} b{bucket}"))?;
+            }
+        }
+        Ok((client, executables))
+    })();
+
+    let (_client, executables) = match setup {
+        Ok(pair) => {
+            let _ = ready.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    // Serve until shutdown (or every handle is dropped).
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            Msg::Job(job) => job,
+            Msg::Shutdown => break,
+        };
+        let queue_micros = job.enqueued.elapsed_micros();
+        let result = execute_job(&executables, &manifest, &job.req)
+            .map(|(logits, bucket, exec_micros)| ExecResponse {
+                logits,
+                bucket,
+                queue_micros,
+                exec_micros,
+            });
+        let _ = job.reply.send(result); // receiver may have timed out; fine
+    }
+}
+
+fn execute_job(
+    executables: &HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    req: &ExecRequest,
+) -> Result<(Vec<f32>, usize, u64)> {
+    let elems = manifest.sample_elems();
+    if req.batch == 0 {
+        bail!("empty batch");
+    }
+    if req.data.len() != req.batch * elems {
+        bail!(
+            "payload size {} != batch {} x {} elems",
+            req.data.len(),
+            req.batch,
+            elems
+        );
+    }
+    let model = manifest
+        .model(&req.model)
+        .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
+    // Smallest *loaded* bucket that fits.
+    let bucket = model
+        .buckets
+        .iter()
+        .map(|a| a.bucket)
+        .filter(|b| *b >= req.batch)
+        .find(|b| executables.contains_key(&(req.model.clone(), *b)))
+        .ok_or_else(|| {
+            anyhow!(
+                "batch {} exceeds largest loaded bucket for '{}' (max {})",
+                req.batch,
+                req.model,
+                model.max_bucket()
+            )
+        })?;
+    let exe = &executables[&(req.model.clone(), bucket)];
+
+    let sw = Stopwatch::start();
+    let padded;
+    let feed: &[f32] = if bucket == req.batch {
+        &req.data
+    } else {
+        padded = tensor::pad_batch(&req.data, req.batch, bucket, elems);
+        &padded
+    };
+    let logits_full = run_one(exe, feed, bucket, manifest)?;
+    let exec_micros = sw.elapsed_micros();
+    let logits = tensor::truncate_batch(logits_full, req.batch, manifest.num_classes());
+    Ok((logits, bucket, exec_micros))
+}
+
+/// Execute one bucket-shaped forward: literal in, tuple1 literal out.
+fn run_one(
+    exe: &xla::PjRtLoadedExecutable,
+    feed: &[f32],
+    bucket: usize,
+    manifest: &Manifest,
+) -> Result<Vec<f32>> {
+    // Single-copy literal creation straight into the batched shape
+    // (§Perf L3#3: vec1+reshape copied the payload twice).
+    let mut dims: Vec<usize> = vec![bucket];
+    dims.extend(&manifest.input_shape);
+    let bytes = unsafe {
+        std::slice::from_raw_parts(feed.as_ptr() as *const u8, std::mem::size_of_val(feed))
+    };
+    let input =
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
+            .context("creating input literal")?;
+    let result = exe
+        .execute::<xla::Literal>(&[input])
+        .context("PJRT execute")?[0][0]
+        .to_literal_sync()
+        .context("device→host readback")?;
+    // aot.py lowers with return_tuple=True → 1-tuple of logits.
+    let logits = result.to_tuple1().context("unwrapping output tuple")?;
+    logits.to_vec::<f32>().context("logits to f32 vec")
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts` to have run); here we only test the pieces
+    // that don't need a device.
+    use super::*;
+
+    #[test]
+    fn options_default_loads_everything() {
+        let o = ExecutorOptions::default();
+        assert!(o.models.is_none());
+        assert!(o.buckets.is_none());
+        assert!(!o.verify_sha);
+    }
+}

@@ -1,0 +1,304 @@
+//! The artifact manifest: the contract between `python/compile/aot.py` and
+//! this runtime, including the provenance block the paper's motivation
+//! calls for (cloud APIs give you none; FlexServe-RS pins every servable
+//! byte by SHA-256).
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use sha2::{Digest, Sha256};
+use std::path::{Path, PathBuf};
+
+/// One HLO artifact (a model specialized to one batch bucket).
+#[derive(Debug, Clone)]
+pub struct ArtifactRef {
+    pub bucket: usize,
+    pub file: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+/// One servable model (all its batch buckets).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub param_count: u64,
+    pub test_acc: f64,
+    pub params_sha256: String,
+    /// Sorted ascending by bucket.
+    pub buckets: Vec<ArtifactRef>,
+}
+
+impl ModelEntry {
+    /// Smallest bucket that fits a batch of `n`, if any.
+    pub fn bucket_for(&self, n: usize) -> Option<&ArtifactRef> {
+        self.buckets.iter().find(|a| a.bucket >= n)
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        self.buckets.last().map(|a| a.bucket).unwrap_or(0)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub classes: Vec<String>,
+    pub norm_mean: f32,
+    pub norm_std: f32,
+    pub buckets: Vec<usize>,
+    pub models: Vec<ModelEntry>,
+    /// Raw provenance block (exposed verbatim on `GET /models`).
+    pub provenance: Value,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_value(dir, &v)
+    }
+
+    fn from_value(dir: PathBuf, v: &Value) -> Result<Manifest> {
+        let fmt = v
+            .get("format_version")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow!("manifest: missing format_version"))?;
+        if fmt != 1 {
+            bail!("manifest: unsupported format_version {fmt}");
+        }
+        let input_shape = v
+            .get("input_shape")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing input_shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad input_shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let classes = v
+            .get("classes")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing classes"))?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("bad class name"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let norm_mean = v
+            .path(&["normalize", "mean"])
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("manifest: missing normalize.mean"))? as f32;
+        let norm_std = v
+            .path(&["normalize", "std"])
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("manifest: missing normalize.std"))? as f32;
+        let buckets = v
+            .get("buckets")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing buckets"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut models = Vec::new();
+        for (name, m) in v
+            .get("models")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing models"))?
+        {
+            let mut bucket_refs = Vec::new();
+            for (bucket_s, b) in m
+                .get("buckets")
+                .and_then(Value::as_obj)
+                .ok_or_else(|| anyhow!("model {name}: missing buckets"))?
+            {
+                bucket_refs.push(ArtifactRef {
+                    bucket: bucket_s
+                        .parse()
+                        .with_context(|| format!("model {name}: bad bucket key"))?,
+                    file: b
+                        .get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("model {name}: missing file"))?
+                        .to_string(),
+                    sha256: b
+                        .get("sha256")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("model {name}: missing sha256"))?
+                        .to_string(),
+                    bytes: b.get("bytes").and_then(Value::as_u64).unwrap_or(0),
+                });
+            }
+            bucket_refs.sort_by_key(|a| a.bucket);
+            if bucket_refs.is_empty() {
+                bail!("model {name}: no buckets");
+            }
+            models.push(ModelEntry {
+                name: name.clone(),
+                param_count: m.get("param_count").and_then(Value::as_u64).unwrap_or(0),
+                test_acc: m.get("test_acc").and_then(Value::as_f64).unwrap_or(0.0),
+                params_sha256: m
+                    .get("params_sha256")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                buckets: bucket_refs,
+            });
+        }
+        if models.is_empty() {
+            bail!("manifest: no models");
+        }
+        models.sort_by(|a, b| a.name.cmp(&b.name));
+
+        Ok(Manifest {
+            dir,
+            input_shape,
+            classes,
+            norm_mean,
+            norm_std,
+            buckets,
+            models,
+            provenance: v.get("provenance").cloned().unwrap_or(Value::Null),
+        })
+    }
+
+    /// Elements per single input sample (e.g. 16*16*1 = 256).
+    pub fn sample_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Absolute path of one artifact file.
+    pub fn artifact_path(&self, a: &ArtifactRef) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Verify an artifact's SHA-256 against the manifest (provenance gate —
+    /// refuses to serve bytes that aren't the ones the build signed).
+    pub fn verify_artifact(&self, a: &ArtifactRef) -> Result<()> {
+        let path = self.artifact_path(a);
+        let data = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let digest = hex(&Sha256::digest(&data));
+        if digest != a.sha256 {
+            bail!(
+                "provenance violation: {} sha256 {digest} != manifest {}",
+                a.file,
+                a.sha256
+            );
+        }
+        Ok(())
+    }
+
+    /// Verify every artifact (`flexserve verify` / server startup option).
+    pub fn verify_all(&self) -> Result<()> {
+        for m in &self.models {
+            for a in &m.buckets {
+                self.verify_artifact(a)
+                    .with_context(|| format!("model {}", m.name))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Default artifact dir: `$FLEXSERVE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FLEXSERVE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_value() -> Value {
+        json::parse(
+            r#"{
+              "format_version": 1,
+              "input_shape": [16, 16, 1],
+              "classes": ["blank", "square", "cross", "disc"],
+              "normalize": {"mean": 0.1307, "std": 0.3081},
+              "buckets": [1, 4],
+              "models": {
+                "m1": {
+                  "param_count": 100,
+                  "test_acc": 0.9,
+                  "params_sha256": "ab",
+                  "buckets": {
+                    "1": {"file": "m1_b1.hlo.txt", "sha256": "x", "bytes": 10},
+                    "4": {"file": "m1_b4.hlo.txt", "sha256": "y", "bytes": 11}
+                  }
+                }
+              },
+              "provenance": {"generator": "test"}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let m = Manifest::from_value(PathBuf::from("/tmp"), &fake_manifest_value()).unwrap();
+        assert_eq!(m.sample_elems(), 256);
+        assert_eq!(m.num_classes(), 4);
+        assert_eq!(m.models.len(), 1);
+        let e = m.model("m1").unwrap();
+        assert_eq!(e.buckets.len(), 2);
+        assert_eq!(e.bucket_for(1).unwrap().bucket, 1);
+        assert_eq!(e.bucket_for(2).unwrap().bucket, 4);
+        assert_eq!(e.bucket_for(4).unwrap().bucket, 4);
+        assert!(e.bucket_for(5).is_none());
+        assert_eq!(e.max_bucket(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut v = fake_manifest_value();
+        if let Value::Obj(members) = &mut v {
+            members[0].1 = Value::Num(2.0);
+        }
+        assert!(Manifest::from_value(PathBuf::from("/tmp"), &v).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_models() {
+        let v = json::parse(
+            r#"{"format_version":1,"input_shape":[1],"classes":["a"],
+                "normalize":{"mean":0,"std":1},"buckets":[1],"models":{}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_value(PathBuf::from("/tmp"), &v).is_err());
+    }
+
+    #[test]
+    fn sha_mismatch_detected() {
+        let dir = std::env::temp_dir().join("flexserve_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m1_b1.hlo.txt"), b"content").unwrap();
+        let m = Manifest::from_value(dir.clone(), &fake_manifest_value()).unwrap();
+        let a = &m.models[0].buckets[0];
+        assert!(m.verify_artifact(a).is_err()); // sha "x" is wrong
+    }
+}

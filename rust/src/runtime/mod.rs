@@ -1,0 +1,23 @@
+//! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on XLA PJRT — the only place the `xla` crate is
+//! touched.
+//!
+//! Key design point: the xla handle types (`PjRtClient`,
+//! `PjRtLoadedExecutable`, `Literal`) wrap raw pointers and are `!Send`, so
+//! they cannot be shared across request threads. Instead a **device
+//! executor thread** owns one `PjRtClient` plus all compiled executables,
+//! and request threads talk to it over an mpsc channel
+//! ([`executor::ExecutorHandle`] is `Clone + Send + Sync`). This is also the
+//! faithful model of the paper's §2.2: one shared device, all N ensemble
+//! models resident in its memory, forward calls serialized on the device
+//! queue. Horizontal scaling (§2.2 "Gunicorn workers") is
+//! [`pool::ExecutorPool`]: W executor threads, each owning a full client.
+
+pub mod executor;
+pub mod manifest;
+pub mod pool;
+pub mod tensor;
+
+pub use executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle};
+pub use manifest::{ArtifactRef, Manifest, ModelEntry};
+pub use pool::ExecutorPool;

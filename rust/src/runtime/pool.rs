@@ -1,0 +1,59 @@
+//! Executor pool: W device executors, round-robin dispatch — the paper's
+//! "scaling horizontally to multiple CPU cores … through the use of
+//! Gunicorn workers" (§2.2), with each executor playing one Gunicorn worker
+//! that has the full ensemble resident.
+
+use super::executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, ExecutorOptions};
+use super::manifest::Manifest;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+pub struct ExecutorPool {
+    executors: Vec<Executor>,
+    next: AtomicUsize,
+}
+
+impl ExecutorPool {
+    /// Spawn `workers` executors, each compiling its own copy of the
+    /// selected artifacts (compilation is per-client in PJRT).
+    pub fn spawn(
+        manifest: Arc<Manifest>,
+        opts: ExecutorOptions,
+        workers: usize,
+    ) -> Result<ExecutorPool> {
+        assert!(workers > 0);
+        let executors = (0..workers)
+            .map(|_| Executor::spawn(Arc::clone(&manifest), opts.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExecutorPool {
+            executors,
+            next: AtomicUsize::new(0),
+        })
+    }
+
+    /// Round-robin pick of a worker handle.
+    pub fn handle(&self) -> ExecutorHandle {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.executors.len();
+        self.executors[i].handle()
+    }
+
+    /// All worker handles (for per-worker dispatch strategies).
+    pub fn handles(&self) -> Vec<ExecutorHandle> {
+        self.executors.iter().map(|e| e.handle()).collect()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.executors.len()
+    }
+
+    /// Convenience: round-robin blocking inference.
+    pub fn infer(&self, req: ExecRequest) -> Result<ExecResponse> {
+        self.handle().infer(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Device-dependent tests live in rust/tests/runtime_integration.rs.
+}

@@ -1,0 +1,98 @@
+//! Batch padding/truncation for bucketed executables (§2.3 flexible batch
+//! sizes under shape-specialized XLA AOT).
+
+/// Pad a row-major `(batch, elems)` tensor up to `bucket` rows with zeros.
+/// Returns the input unchanged when `batch == bucket`.
+pub fn pad_batch(data: &[f32], batch: usize, bucket: usize, elems: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), batch * elems, "data len mismatch");
+    debug_assert!(bucket >= batch, "bucket must fit batch");
+    let mut out = Vec::with_capacity(bucket * elems);
+    out.extend_from_slice(data);
+    out.resize(bucket * elems, 0.0);
+    out
+}
+
+/// Truncate bucket-sized output rows back down to the true batch.
+pub fn truncate_batch(mut data: Vec<f32>, batch: usize, elems: usize) -> Vec<f32> {
+    data.truncate(batch * elems);
+    data
+}
+
+/// Row-major argmax per row; returns (index, value) pairs.
+pub fn argmax_rows(data: &[f32], elems: usize) -> Vec<(usize, f32)> {
+    debug_assert!(elems > 0);
+    data.chunks_exact(elems)
+        .map(|row| {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            (best, row[best])
+        })
+        .collect()
+}
+
+/// Numerically-stable softmax per row, in place.
+pub fn softmax_rows(data: &mut [f32], elems: usize) {
+    for row in data.chunks_exact_mut(elems) {
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_truncate_roundtrip() {
+        let data = vec![1.0, 2.0, 3.0, 4.0]; // batch=2, elems=2
+        let padded = pad_batch(&data, 2, 4, 2);
+        assert_eq!(padded.len(), 8);
+        assert_eq!(&padded[..4], &data[..]);
+        assert_eq!(&padded[4..], &[0.0; 4]);
+        assert_eq!(truncate_batch(padded, 2, 2), data);
+    }
+
+    #[test]
+    fn pad_noop_when_exact() {
+        let data = vec![1.0, 2.0];
+        assert_eq!(pad_batch(&data, 1, 1, 2), data);
+    }
+
+    #[test]
+    fn argmax() {
+        let out = argmax_rows(&[0.1, 0.9, -1.0, 5.0, 4.0, 3.0], 3);
+        assert_eq!(out[0].0, 1);
+        assert_eq!(out[1].0, 0);
+        assert!((out[1].1 - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        let out = argmax_rows(&[1.0, 1.0, 1.0], 3);
+        assert_eq!(out[0].0, 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut data = vec![1.0, 2.0, 3.0, 1000.0, 1001.0, 999.0];
+        softmax_rows(&mut data, 3);
+        for row in data.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|v| v.is_finite()));
+        }
+        // Order preserved.
+        assert!(data[2] > data[1] && data[1] > data[0]);
+    }
+}

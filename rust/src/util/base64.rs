@@ -1,0 +1,108 @@
+//! Standard base64 (RFC 4648, with padding) — substrate for shipping PGM
+//! camera frames over the JSON API (`pgm_b64` requests, §2.3 use case).
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as standard padded base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = u32::from_be_bytes([0, b[0], b[1], b[2]]);
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+/// Decode standard base64 (padding required, whitespace rejected).
+pub fn decode(text: &str) -> Result<Vec<u8>, String> {
+    let bytes = text.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!("base64 length {} not a multiple of 4", bytes.len()));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, chunk) in bytes.chunks(4).enumerate() {
+        let last = i == bytes.len() / 4 - 1;
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && !last) {
+            return Err("misplaced padding".into());
+        }
+        if pad > 0 && (chunk[0] == b'=' || chunk[1] == b'=' || (pad == 2) != (chunk[2] == b'=')) {
+            return Err("misplaced padding".into());
+        }
+        let mut n: u32 = 0;
+        for &c in &chunk[..4 - pad] {
+            n = (n << 6) | value(c).ok_or_else(|| format!("bad base64 byte {c:#x}"))? as u32;
+        }
+        n <<= 6 * pad as u32;
+        let b = n.to_be_bytes();
+        out.push(b[1]);
+        if pad < 2 {
+            out.push(b[2]);
+        }
+        if pad < 1 {
+            out.push(b[3]);
+        }
+    }
+    Ok(out)
+}
+
+fn value(c: u8) -> Option<u8> {
+    match c {
+        b'A'..=b'Z' => Some(c - b'A'),
+        b'a'..=b'z' => Some(c - b'a' + 26),
+        b'0'..=b'9' => Some(c - b'0' + 52),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["a", "ab==x===", "Zm9v!bad", "====", "=AAA", "A=AA"] {
+            assert!(decode(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        check("base64 roundtrip", 300, |g| {
+            let len = g.int(0, 200);
+            let data: Vec<u8> = (0..len).map(|_| g.int(0, 255) as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data);
+        });
+    }
+}

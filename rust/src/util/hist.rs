@@ -1,0 +1,237 @@
+//! Log-bucketed latency histogram (HDR-style, fixed memory).
+//!
+//! Criterion is unavailable offline, so this + `benchkit` form the measuring
+//! substrate for every experiment: microsecond samples are recorded into
+//! log₂ buckets with 16 linear sub-buckets each, giving ≤ ~6% relative
+//! quantile error from 1 µs to ~70 s in 4 KiB of counters. Lock-free on the
+//! read path is not needed — the coordinator aggregates per-thread.
+
+/// Sub-buckets per power of two; 16 → ≤ 1/16 relative error per bucket.
+const SUBS: usize = 16;
+/// Powers of two covered (2^0 .. 2^36 µs ≈ 68 s).
+const POWERS: usize = 37;
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_micros: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; POWERS * SUBS],
+            total: 0,
+            sum_micros: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(micros: u64) -> usize {
+        let v = micros.max(1);
+        let pow = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let pow = pow.min(POWERS - 1);
+        // Linear position within [2^pow, 2^(pow+1)); clamp values above the
+        // covered range into the top bucket (u128 avoids mul overflow).
+        let base = 1u64 << pow;
+        let v = v.min(base * 2 - 1);
+        let sub = ((v - base) as u128 * SUBS as u128 / base as u128) as usize;
+        pow * SUBS + sub.min(SUBS - 1)
+    }
+
+    /// Representative (midpoint) value of a bucket, in µs.
+    fn bucket_value(idx: usize) -> u64 {
+        let pow = idx / SUBS;
+        let sub = (idx % SUBS) as u64;
+        let base = 1u64 << pow;
+        base + (sub * base + base / 2) / SUBS as u64
+    }
+
+    pub fn record(&mut self, micros: u64) {
+        self.counts[Self::index(micros)] += 1;
+        self.total += 1;
+        self.sum_micros += micros as u128;
+        self.min = self.min.min(micros);
+        self.max = self.max.max(micros);
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record((secs * 1e6).round().max(0.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_micros as f64 / self.total as f64
+    }
+
+    pub fn min_micros(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max_micros(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in µs, q in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram (per-thread aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_micros += other.sum_micros;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line human summary: `n=100 mean=1.2ms p50=1.1ms p95=2.0ms ...`.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.total,
+            fmt_micros(self.mean_micros() as u64),
+            fmt_micros(self.p50()),
+            fmt_micros(self.p95()),
+            fmt_micros(self.p99()),
+            fmt_micros(self.max_micros()),
+        )
+    }
+}
+
+/// Human-format a µs quantity (`870us`, `1.3ms`, `2.1s`).
+pub fn fmt_micros(micros: u64) -> String {
+    if micros < 1_000 {
+        format!("{micros}us")
+    } else if micros < 1_000_000 {
+        format!("{:.2}ms", micros as f64 / 1e3)
+    } else {
+        format!("{:.2}s", micros as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean_micros(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1000);
+        assert_eq!(h.p50(), 1000);
+        assert_eq!(h.min_micros(), 1000);
+        assert_eq!(h.max_micros(), 1000);
+    }
+
+    #[test]
+    fn quantile_accuracy_uniform() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        // ≤ ~7% relative error from bucketing.
+        for (q, want) in [(0.5, 5000.0), (0.95, 9500.0), (0.99, 9900.0)] {
+            let got = h.quantile(q) as f64;
+            assert!(
+                (got - want).abs() / want < 0.07,
+                "q={q} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [10, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean_micros(), 20.0);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for v in 1..500u64 {
+            if v % 2 == 0 {
+                a.record(v * 7);
+            } else {
+                b.record(v * 7);
+            }
+            all.record(v * 7);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.p50(), all.p50());
+        assert_eq!(a.p99(), all.p99());
+    }
+
+    #[test]
+    fn extremes_clamped() {
+        let mut h = Histogram::new();
+        h.record(0); // clamps to 1µs bucket
+        h.record(u64::MAX); // clamps to top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= h.quantile(0.0));
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_micros(870), "870us");
+        assert_eq!(fmt_micros(1300), "1.30ms");
+        assert_eq!(fmt_micros(2_100_000), "2.10s");
+    }
+}

@@ -1,0 +1,59 @@
+//! Shared substrates: PRNG, timing, latency histograms, thread pool, and a
+//! small property-testing harness (the `proptest` crate is unavailable in
+//! this offline environment).
+
+pub mod base64;
+pub mod hist;
+pub mod prng;
+pub mod prop;
+pub mod threadpool;
+
+pub use hist::Histogram;
+pub use prng::Prng;
+pub use threadpool::ThreadPool;
+
+/// Round `v` up to a multiple of `m` (m > 0).
+pub fn round_up(v: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    v.div_ceil(m) * m
+}
+
+/// Monotonic stopwatch returning elapsed seconds / micros.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_micros(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(31, 32), 32);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_micros() >= 1000);
+        assert!(sw.elapsed_secs() > 0.0);
+    }
+}

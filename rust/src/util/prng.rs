@@ -1,0 +1,186 @@
+//! Deterministic PRNG: SplitMix64 core with distribution helpers.
+//!
+//! Everything stochastic in the crate (workload generation, property tests,
+//! synthetic frames) flows through this so runs are reproducible from a
+//! single seed — a requirement for the EXPERIMENTS.md benches.
+
+/// SplitMix64 — tiny, fast, passes BigCrush when used as a stream.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed }
+    }
+
+    /// Independent child stream (for per-thread / per-model generators).
+    pub fn fork(&mut self) -> Prng {
+        Prng::new(self.next_u64() ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [lo, hi) — hi > lo.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Uniform float in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Poisson sample (Knuth for small lambda, normal approx above 30) —
+    /// used by the open-loop workload generator's arrival process.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let v = lambda + lambda.sqrt() * self.normal();
+            return v.max(0.0).round() as u64;
+        }
+        let limit = (-lambda).exp();
+        let mut prod = self.next_f64();
+        let mut n = 0;
+        while prod > limit {
+            n += 1;
+            prod *= self.next_f64();
+        }
+        n
+    }
+
+    /// Exponential inter-arrival gap with the given rate (events/sec).
+    pub fn exp_gap_secs(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.next_f64().max(1e-12).ln() / rate
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range(0, items.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            items.swap(i, self.range(0, i + 1));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            let v = p.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            let r = p.range(3, 9);
+            assert!((3..9).contains(&r));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut p = Prng::new(1);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| p.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut p = Prng::new(3);
+        for lambda in [0.5, 4.0, 50.0] {
+            let n = 20_000;
+            let mean =
+                (0..n).map(|_| p.poisson(lambda)).sum::<u64>() as f64 / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.06,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_gap_mean() {
+        let mut p = Prng::new(4);
+        let rate = 200.0;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| p.exp_gap_secs(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.1 / rate, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        p.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut a = Prng::new(9);
+        let mut b = a.fork();
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,156 @@
+//! Minimal property-testing harness (substrate — `proptest` unavailable
+//! offline). Seeded generation + bounded shrinking for the coordinator
+//! invariants (batcher, policy, json round-trips).
+//!
+//! Usage (`no_run`: doctest executables don't inherit the rpath to
+//! libxla_extension's libstdc++ in this offline image — compile-checked
+//! only; the same pattern runs for real in every `prop_*` test):
+//! ```no_run
+//! use flexserve::util::prop::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.int(0, 1000) as u64;
+//!     let b = g.int(0, 1000) as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! On failure, the case's seed is printed so it can be replayed with
+//! [`check_seeded`]. Shrinking is seed-level (we re-run with derived seeds
+//! and report the first failing one) — cruder than structural shrinking but
+//! enough to make failures reproducible.
+
+use super::prng::Prng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Generator handed to each property case.
+pub struct Gen {
+    rng: Prng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Prng::new(seed),
+            seed,
+        }
+    }
+
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.int(lo, hi)).collect()
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.int(0, max_len);
+        (0..len)
+            .map(|_| {
+                // Mix of ASCII, escapes-needed, and multibyte.
+                match self.int(0, 9) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => 'é',
+                    4 => '世',
+                    5 => '😀',
+                    _ => (b'a' + self.int(0, 25) as u8) as char,
+                }
+            })
+            .collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` seeded cases of `property`; panic with the failing seed.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: u64, property: F) {
+    // Fixed base seed: CI-stable. Vary by property name so different
+    // properties don't see identical streams.
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+        });
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e37_79b9));
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            property(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}): {msg}\n\
+                 replay: flexserve::util::prop::check_seeded({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seeded<F: Fn(&mut Gen)>(seed: u64, property: F) {
+    let mut g = Gen::new(seed);
+    property(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 100, |g| {
+            let x = g.f64(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            check("always fails above 90", 200, |g| {
+                let x = g.int(0, 100);
+                assert!(x <= 90, "x={x}");
+            });
+        }));
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        assert_eq!(a.vec_usize(10, 0, 99), b.vec_usize(10, 0, 99));
+        assert_eq!(a.string(20), b.string(20));
+    }
+}

@@ -1,0 +1,125 @@
+//! Fixed-size thread pool over an mpsc channel (substrate — no tokio/rayon
+//! offline). Used by the HTTP server's connection handlers; deliberately the
+//! same shape as Gunicorn's sync-worker model in the paper's stack.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (size ≥ 1).
+    pub fn new(size: usize, name: &str) -> Self {
+        assert!(size > 0, "thread pool needs at least one worker");
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only for the recv itself.
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(job) => job,
+                            Err(_) => break, // sender dropped: shut down
+                        };
+                        job();
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            sender: Some(sender),
+            workers,
+        }
+    }
+
+    /// Queue a job; panics if the pool is shut down (programming error).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool is shut down")
+            .send(Box::new(f))
+            .expect("pool workers all dead");
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the channel → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2, "drop");
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits for queued jobs
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new(4, "par");
+        let (tx, rx) = mpsc::channel();
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..4 {
+            rx.recv().unwrap();
+        }
+        // 4×50 ms serial would be 200 ms; parallel should be well under.
+        assert!(t0.elapsed() < std::time::Duration::from_millis(150));
+    }
+}

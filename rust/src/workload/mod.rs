@@ -1,0 +1,236 @@
+//! Workload substrate: synthetic labelled frames (mirroring
+//! `python/compile/data.py`'s generator distribution), the §2.3 tracking
+//! trace, and open-loop request schedules for the benches.
+//!
+//! Frames produced here are drawn from the same distribution as the
+//! training corpus (same shape family, jitter, intensity and noise ranges)
+//! but under this crate's PRNG — model accuracy transfers statistically,
+//! which is all the experiments need (they compare serving
+//! configurations, not exact Python bit-patterns).
+
+use crate::util::Prng;
+
+pub const IMG: usize = 16;
+pub const CLASSES: [&str; 4] = ["blank", "square", "cross", "disc"];
+
+/// Pixel-space constants matching python/compile/data.py.
+const NOISE: f64 = 0.35;
+const JITTER: i64 = 4;
+
+/// A labelled synthetic frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// Raw (unnormalized) pixels in row-major (IMG, IMG), range ≈ [-1, 2].
+    pub pixels: Vec<f32>,
+    /// Class index into [`CLASSES`].
+    pub label: usize,
+}
+
+fn draw_square(img: &mut [f32], cy: i64, cx: i64, r: i64, val: f32) {
+    let (y0, y1) = ((cy - r).max(0), (cy + r).min(IMG as i64 - 1));
+    let (x0, x1) = ((cx - r).max(0), (cx + r).min(IMG as i64 - 1));
+    for x in x0..=x1 {
+        img[(y0 * IMG as i64 + x) as usize] = val;
+        img[(y1 * IMG as i64 + x) as usize] = val;
+    }
+    for y in y0..=y1 {
+        img[(y * IMG as i64 + x0) as usize] = val;
+        img[(y * IMG as i64 + x1) as usize] = val;
+    }
+}
+
+fn draw_cross(img: &mut [f32], cy: i64, cx: i64, r: i64, val: f32) {
+    let (y0, y1) = ((cy - r).max(0), (cy + r).min(IMG as i64 - 1));
+    let (x0, x1) = ((cx - r).max(0), (cx + r).min(IMG as i64 - 1));
+    for x in x0..=x1 {
+        img[(cy * IMG as i64 + x) as usize] = val;
+    }
+    for y in y0..=y1 {
+        img[(y * IMG as i64 + cx) as usize] = val;
+    }
+}
+
+fn draw_disc(img: &mut [f32], cy: i64, cx: i64, r: i64, val: f32) {
+    for y in 0..IMG as i64 {
+        for x in 0..IMG as i64 {
+            if (y - cy).pow(2) + (x - cx).pow(2) <= r * r {
+                img[(y * IMG as i64 + x) as usize] = val;
+            }
+        }
+    }
+}
+
+/// Generate one frame of the given class (None = random class).
+pub fn make_frame(rng: &mut Prng, class: Option<usize>) -> Frame {
+    let label = class.unwrap_or_else(|| rng.range(0, CLASSES.len()));
+    let mut pixels: Vec<f32> = (0..IMG * IMG)
+        .map(|_| (rng.normal() * NOISE) as f32)
+        .collect();
+    if label != 0 {
+        let cy = IMG as i64 / 2 + rng.range(0, (2 * JITTER + 1) as usize) as i64 - JITTER;
+        let cx = IMG as i64 / 2 + rng.range(0, (2 * JITTER + 1) as usize) as i64 - JITTER;
+        let r = rng.range(2, 6) as i64;
+        let val = rng.uniform(0.45, 1.1) as f32;
+        match label {
+            1 => draw_square(&mut pixels, cy, cx, r, val),
+            2 => draw_cross(&mut pixels, cy, cx, r, val),
+            3 => draw_disc(&mut pixels, cy, cx, r, val),
+            _ => unreachable!(),
+        }
+    }
+    for p in pixels.iter_mut() {
+        *p = p.clamp(-1.0, 2.0);
+    }
+    Frame { pixels, label }
+}
+
+/// A labelled batch: concatenated pixels + labels.
+pub fn make_batch(rng: &mut Prng, n: usize) -> (Vec<f32>, Vec<usize>) {
+    let mut data = Vec::with_capacity(n * IMG * IMG);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let f = make_frame(rng, None);
+        data.extend_from_slice(&f.pixels);
+        labels.push(f.label);
+    }
+    (data, labels)
+}
+
+/// §2.3 tracking trace: a cross transits the field of view left→right
+/// between 1/3 and 2/3 of the trace; other frames are sensor noise.
+/// Returns (frames, present-flags).
+pub fn tracking_trace(rng: &mut Prng, steps: usize) -> (Vec<Frame>, Vec<bool>) {
+    let mut frames = Vec::with_capacity(steps);
+    let mut present = vec![false; steps];
+    let (t0, t1) = (steps / 3, 2 * steps / 3);
+    for t in 0..steps {
+        let mut f = make_frame(rng, Some(0)); // noise base
+        if t >= t0 && t <= t1 {
+            let frac = (t - t0) as f64 / (t1 - t0).max(1) as f64;
+            let cx = 2 + (frac * (IMG - 5) as f64) as i64;
+            let cy = IMG as i64 / 2 + rng.range(0, 5) as i64 - 2;
+            let val = rng.uniform(0.7, 1.1) as f32;
+            draw_cross(&mut f.pixels, cy, cx, 4, val);
+            for p in f.pixels.iter_mut() {
+                *p = p.clamp(-1.0, 2.0);
+            }
+            f.label = 2;
+            present[t] = true;
+        }
+        frames.push(f);
+    }
+    (frames, present)
+}
+
+/// One request in an open-loop schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Offset from schedule start.
+    pub at: std::time::Duration,
+    /// Batch size of this request.
+    pub batch: usize,
+}
+
+/// Open-loop Poisson arrival schedule: `rate` requests/sec for `secs`
+/// seconds, batch sizes drawn from `batch_mix` uniformly-by-weight.
+pub fn poisson_schedule(
+    rng: &mut Prng,
+    rate: f64,
+    secs: f64,
+    batch_mix: &[(usize, f64)],
+) -> Vec<Arrival> {
+    assert!(!batch_mix.is_empty());
+    let total_w: f64 = batch_mix.iter().map(|(_, w)| w).sum();
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exp_gap_secs(rate);
+        if t >= secs {
+            break;
+        }
+        let mut pick = rng.next_f64() * total_w;
+        let mut batch = batch_mix[0].0;
+        for (b, w) in batch_mix {
+            if pick < *w {
+                batch = *b;
+                break;
+            }
+            pick -= w;
+        }
+        out.push(Arrival {
+            at: std::time::Duration::from_secs_f64(t),
+            batch,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_have_expected_shape_and_range() {
+        let mut rng = Prng::new(1);
+        for cls in 0..4 {
+            let f = make_frame(&mut rng, Some(cls));
+            assert_eq!(f.pixels.len(), IMG * IMG);
+            assert_eq!(f.label, cls);
+            assert!(f.pixels.iter().all(|p| (-1.0..=2.0).contains(p)));
+        }
+    }
+
+    #[test]
+    fn shaped_frames_have_more_energy() {
+        let mut rng = Prng::new(2);
+        let mean_abs = |f: &Frame| {
+            f.pixels.iter().map(|p| p.abs()).sum::<f32>() / f.pixels.len() as f32
+        };
+        let blanks: f32 = (0..50)
+            .map(|_| mean_abs(&make_frame(&mut rng, Some(0))))
+            .sum::<f32>()
+            / 50.0;
+        let crosses: f32 = (0..50)
+            .map(|_| mean_abs(&make_frame(&mut rng, Some(2))))
+            .sum::<f32>()
+            / 50.0;
+        assert!(crosses > blanks);
+    }
+
+    #[test]
+    fn batch_concatenates() {
+        let mut rng = Prng::new(3);
+        let (data, labels) = make_batch(&mut rng, 5);
+        assert_eq!(data.len(), 5 * IMG * IMG);
+        assert_eq!(labels.len(), 5);
+    }
+
+    #[test]
+    fn tracking_trace_contiguous() {
+        let mut rng = Prng::new(4);
+        let (frames, present) = tracking_trace(&mut rng, 24);
+        assert_eq!(frames.len(), 24);
+        let idx: Vec<usize> = present
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| **p)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!idx.is_empty());
+        assert!(idx.windows(2).all(|w| w[1] == w[0] + 1), "{idx:?}");
+        for (f, p) in frames.iter().zip(&present) {
+            assert_eq!(f.label == 2, *p);
+        }
+    }
+
+    #[test]
+    fn poisson_schedule_rate() {
+        let mut rng = Prng::new(5);
+        let sched = poisson_schedule(&mut rng, 200.0, 5.0, &[(1, 0.5), (8, 0.5)]);
+        let n = sched.len() as f64;
+        assert!((n - 1000.0).abs() < 150.0, "n={n}"); // ~200/s * 5s
+        assert!(sched.windows(2).all(|w| w[0].at <= w[1].at));
+        let b1 = sched.iter().filter(|a| a.batch == 1).count();
+        assert!(b1 > 0 && b1 < sched.len());
+    }
+}

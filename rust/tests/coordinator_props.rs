@@ -1,0 +1,124 @@
+//! Property tests over coordinator invariants (no device needed): JSON
+//! round-trips, policy algebra, batcher coalescing/slicing, padding.
+
+use flexserve::coordinator::policy::Policy;
+use flexserve::json::{self, Value};
+use flexserve::runtime::tensor::{argmax_rows, pad_batch, softmax_rows, truncate_batch};
+use flexserve::util::prop::{check, Gen};
+
+fn gen_value(g: &mut Gen, depth: usize) -> Value {
+    match if depth >= 3 { g.int(0, 3) } else { g.int(0, 5) } {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool(0.5)),
+        2 => {
+            // Integers and "nice" floats survive f64 round-trips exactly.
+            if g.bool(0.5) {
+                Value::Num(g.int(0, 1_000_000) as f64 - 500_000.0)
+            } else {
+                Value::Num((g.int(0, 1000) as f64) / 64.0)
+            }
+        }
+        3 => Value::Str(g.string(12)),
+        4 => Value::Arr((0..g.int(0, 4)).map(|_| gen_value(g, depth + 1)).collect()),
+        _ => Value::Obj(
+            (0..g.int(0, 4))
+                .map(|i| (format!("k{i}_{}", g.string(4).len()), gen_value(g, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_compact_and_pretty() {
+    check("json roundtrip", 500, |g| {
+        let v = gen_value(g, 0);
+        let compact = json::to_string(&v);
+        assert_eq!(json::parse(&compact).unwrap(), v, "compact {compact}");
+        let pretty = json::to_string_pretty(&v);
+        assert_eq!(json::parse(&pretty).unwrap(), v, "pretty {pretty}");
+    });
+}
+
+#[test]
+fn prop_pad_truncate_identity() {
+    check("pad/truncate identity", 300, |g| {
+        let batch = g.int(1, 16);
+        let elems = g.int(1, 64);
+        let bucket = batch + g.int(0, 16);
+        let data = g.vec_f32(batch * elems, -10.0, 10.0);
+        let padded = pad_batch(&data, batch, bucket, elems);
+        assert_eq!(padded.len(), bucket * elems);
+        // Padding rows are zero.
+        assert!(padded[batch * elems..].iter().all(|&v| v == 0.0));
+        let back = truncate_batch(padded, batch, elems);
+        assert_eq!(back, data);
+    });
+}
+
+#[test]
+fn prop_softmax_normalizes_and_preserves_argmax() {
+    check("softmax invariants", 300, |g| {
+        let rows = g.int(1, 8);
+        let classes = g.int(2, 10);
+        let logits = g.vec_f32(rows * classes, -50.0, 50.0);
+        let arg_before = argmax_rows(&logits, classes);
+        let mut probs = logits.clone();
+        softmax_rows(&mut probs, classes);
+        let arg_after = argmax_rows(&probs, classes);
+        for row in 0..rows {
+            assert_eq!(arg_before[row].0, arg_after[row].0, "argmax changed");
+        }
+        for row in probs.chunks(classes) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+            assert!(row.iter().all(|p| (0.0..=1.0001).contains(p)));
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_policy_generalizes_atleast() {
+    // Weighted with unit weights and threshold k ≡ AtLeast(k).
+    check("weighted == atleast under unit weights", 300, |g| {
+        let n = g.int(1, 8);
+        let k = g.int(1, n);
+        let votes: Vec<bool> = (0..n).map(|_| g.bool(0.4)).collect();
+        let weighted = Policy::Weighted {
+            weights: vec![1.0; n],
+            threshold: k as f64,
+        };
+        assert_eq!(
+            weighted.fuse(&votes).unwrap(),
+            Policy::AtLeast(k).fuse(&votes).unwrap(),
+            "votes {votes:?} k {k}"
+        );
+    });
+}
+
+#[test]
+fn prop_policy_complement_duality() {
+    // All(votes) == !Any(!votes) — De Morgan over the vote vector.
+    check("policy De Morgan duality", 300, |g| {
+        let n = g.int(1, 9);
+        let votes: Vec<bool> = (0..n).map(|_| g.bool(0.5)).collect();
+        let inverted: Vec<bool> = votes.iter().map(|v| !v).collect();
+        assert_eq!(
+            Policy::All.fuse(&votes).unwrap(),
+            !Policy::Any.fuse(&inverted).unwrap()
+        );
+    });
+}
+
+#[test]
+fn prop_http_request_query_parse_total() {
+    // The query parser must never panic on arbitrary ASCII junk.
+    check("query parser total", 300, |g| {
+        let len = g.int(0, 30);
+        let junk: String = (0..len)
+            .map(|_| *g.choose(&['a', '=', '&', '?', '/', '1', '%']))
+            .collect();
+        let req = flexserve::http::Request::new("GET", &format!("/p?{junk}"), Vec::new());
+        let _ = req.query_param("a");
+        assert_eq!(req.path, "/p");
+    });
+}

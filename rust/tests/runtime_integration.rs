@@ -1,0 +1,244 @@
+//! Integration tests: the Rust runtime against the REAL artifacts built by
+//! `make artifacts`. These validate the whole AOT bridge — jax/pallas
+//! lowering → HLO text → PJRT compile → execute — with correct numerics.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests panic with a clear
+//! message otherwise.
+
+use flexserve::runtime::{ExecRequest, Executor, Manifest};
+use flexserve::runtime::executor::ExecutorOptions;
+use flexserve::runtime::tensor::argmax_rows;
+use flexserve::util::Prng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifact_dir() -> PathBuf {
+    // Tests run from the crate root.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load(artifact_dir()).expect("manifest loads"))
+}
+
+/// Synthetic frame batch shaped like the real dataset (normalized noise).
+fn noise_batch(m: &Manifest, batch: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..batch * m.sample_elems())
+        .map(|_| rng.normal() as f32 * 0.35)
+        .collect()
+}
+
+#[test]
+fn manifest_loads_and_verifies() {
+    let m = manifest();
+    assert_eq!(m.input_shape, vec![16, 16, 1]);
+    assert_eq!(m.num_classes(), 4);
+    assert_eq!(m.models.len(), 3);
+    assert!(m.buckets.contains(&1) && m.buckets.contains(&32));
+    // Full provenance gate: every artifact hash must match.
+    m.verify_all().expect("artifact hashes match manifest");
+    for model in &m.models {
+        assert!(model.test_acc > 0.5, "{} acc {}", model.name, model.test_acc);
+        assert!(model.param_count > 1_000);
+    }
+}
+
+#[test]
+fn executor_runs_every_model_and_bucket() {
+    let m = manifest();
+    let exec = Executor::spawn(
+        Arc::clone(&m),
+        ExecutorOptions {
+            verify_sha: true,
+            ..Default::default()
+        },
+    )
+    .expect("executor spawns");
+    let h = exec.handle();
+    for model in &m.models {
+        for art in &model.buckets {
+            let b = art.bucket;
+            let resp = h
+                .infer(ExecRequest {
+                    model: model.name.clone(),
+                    batch: b,
+                    data: noise_batch(&m, b, 42 + b as u64),
+                })
+                .unwrap_or_else(|e| panic!("{} b{b}: {e}", model.name));
+            assert_eq!(resp.logits.len(), b * m.num_classes());
+            assert_eq!(resp.bucket, b);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn padding_does_not_change_results() {
+    // Same rows, served at batch 3 (runs on bucket 4) vs batch 4 exact:
+    // the padded execution must return identical logits for shared rows.
+    let m = manifest();
+    let exec = Executor::spawn(Arc::clone(&m), ExecutorOptions::default()).unwrap();
+    let h = exec.handle();
+    let elems = m.sample_elems();
+    let data4 = noise_batch(&m, 4, 7);
+    let data3 = data4[..3 * elems].to_vec();
+
+    for model in m.model_names() {
+        let r4 = h
+            .infer(ExecRequest {
+                model: model.clone(),
+                batch: 4,
+                data: data4.clone(),
+            })
+            .unwrap();
+        let r3 = h
+            .infer(ExecRequest {
+                model: model.clone(),
+                batch: 3,
+                data: data3.clone(),
+            })
+            .unwrap();
+        assert_eq!(r3.bucket, 4, "batch 3 should round up to bucket 4");
+        assert_eq!(r3.logits.len(), 3 * m.num_classes());
+        for (i, (a, b)) in r3.logits.iter().zip(&r4.logits).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "{model} row elem {i}: padded {a} vs exact {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_calls() {
+    let m = manifest();
+    let exec = Executor::spawn(Arc::clone(&m), ExecutorOptions::default()).unwrap();
+    let h = exec.handle();
+    let data = noise_batch(&m, 2, 99);
+    let req = ExecRequest {
+        model: "cnn_s".into(),
+        batch: 2,
+        data,
+    };
+    let a = h.infer(req.clone()).unwrap();
+    let b = h.infer(req).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn models_disagree_on_inputs() {
+    // §2.1 premise: different architectures → different functions.
+    let m = manifest();
+    let exec = Executor::spawn(Arc::clone(&m), ExecutorOptions::default()).unwrap();
+    let h = exec.handle();
+    let data = noise_batch(&m, 8, 5);
+    let mut all_logits = Vec::new();
+    for model in m.model_names() {
+        let r = h
+            .infer(ExecRequest {
+                model,
+                batch: 8,
+                data: data.clone(),
+            })
+            .unwrap();
+        all_logits.push(r.logits);
+    }
+    assert_ne!(all_logits[0], all_logits[1]);
+    assert_ne!(all_logits[1], all_logits[2]);
+}
+
+#[test]
+fn classifies_synthetic_shapes_correctly() {
+    // The end-to-end numerics check that matters: frames generated the same
+    // way as python/compile/data.py must be classified sensibly. We draw a
+    // crisp cross and a crisp disc with low noise; a >50%-accurate model
+    // must distinguish them from blanks on average logits.
+    let m = manifest();
+    let exec = Executor::spawn(Arc::clone(&m), ExecutorOptions::default()).unwrap();
+    let h = exec.handle();
+    let img = 16usize;
+    let norm = flexserve::imagepipe::Normalizer::new(m.norm_mean, m.norm_std);
+
+    // Build: row 0 = blank, row 1 = bold cross (class 2), row 2 = disc (3).
+    let mut frames = vec![0.0f32; 3 * img * img];
+    for d in 0..img {
+        frames[img * img + 8 * img + d] = 1.0; // horizontal bar
+        frames[img * img + d * img + 8] = 1.0; // vertical bar
+    }
+    for y in 0..img {
+        for x in 0..img {
+            let (dy, dx) = (y as i32 - 8, x as i32 - 8);
+            if dy * dy + dx * dx <= 16 {
+                frames[2 * img * img + y * img + x] = 1.0;
+            }
+        }
+    }
+    norm.apply(&mut frames);
+
+    // cnn_m is the strongest model (~0.89 test acc).
+    let r = h
+        .infer(ExecRequest {
+            model: "cnn_m".into(),
+            batch: 3,
+            data: frames,
+        })
+        .unwrap();
+    let preds = argmax_rows(&r.logits, m.num_classes());
+    assert_eq!(preds[0].0, 0, "blank frame should be class 0, logits {:?}", &r.logits[0..4]);
+    assert_eq!(preds[1].0, 2, "cross frame should be class 2, logits {:?}", &r.logits[4..8]);
+    assert_eq!(preds[2].0, 3, "disc frame should be class 3, logits {:?}", &r.logits[8..12]);
+}
+
+#[test]
+fn subset_loading_and_errors() {
+    let m = manifest();
+    let exec = Executor::spawn(
+        Arc::clone(&m),
+        ExecutorOptions {
+            models: Some(vec!["mlp".into()]),
+            buckets: Some(vec![1, 8]),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let h = exec.handle();
+    // Loaded model works, batch 2 rounds up to loaded bucket 8.
+    let r = h
+        .infer(ExecRequest {
+            model: "mlp".into(),
+            batch: 2,
+            data: noise_batch(&m, 2, 1),
+        })
+        .unwrap();
+    assert_eq!(r.bucket, 8);
+    // Unloaded model errors cleanly.
+    assert!(h
+        .infer(ExecRequest {
+            model: "cnn_s".into(),
+            batch: 1,
+            data: noise_batch(&m, 1, 1),
+        })
+        .is_err());
+    // Oversized batch errors cleanly.
+    assert!(h
+        .infer(ExecRequest {
+            model: "mlp".into(),
+            batch: 9,
+            data: noise_batch(&m, 9, 1),
+        })
+        .is_err());
+    // Wrong payload size errors cleanly.
+    assert!(h
+        .infer(ExecRequest {
+            model: "mlp".into(),
+            batch: 2,
+            data: vec![0.0; 7],
+        })
+        .is_err());
+}

@@ -1,0 +1,479 @@
+//! End-to-end integration: HTTP server + coordinator + runtime + real
+//! artifacts. One shared server per test binary (device compile is ~6 s).
+
+use flexserve::baseline::{serve_baseline, BaselineConfig};
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, BatcherConfig, ServerState};
+use flexserve::http::{Client, ServerHandle};
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+fn artifact_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+struct Stack {
+    handle: ServerHandle,
+    state: Arc<ServerState>,
+}
+
+static STACK: OnceLock<Stack> = OnceLock::new();
+
+fn stack() -> &'static Stack {
+    STACK.get_or_init(|| {
+        let mut config = ServeConfig::default();
+        config.addr = "127.0.0.1:0".into();
+        config.artifacts = artifact_dir();
+        config.http_workers = 4;
+        config.device_workers = 1;
+        config.batcher = Some(BatcherConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+        });
+        let (handle, state) = serve(&config).expect("server starts");
+        Stack { handle, state }
+    })
+}
+
+fn client() -> Client {
+    Client::connect(stack().handle.addr).unwrap()
+}
+
+fn predict_body(batch: usize, seed: u64) -> Value {
+    let mut rng = Prng::new(seed);
+    let (data, _) = workload::make_batch(&mut rng, batch);
+    json::obj([
+        (
+            "data",
+            Value::Arr(data.iter().map(|&v| Value::from(v)).collect()),
+        ),
+        ("batch", Value::from(batch)),
+    ])
+}
+
+#[test]
+fn healthz_and_models() {
+    let mut c = client();
+    let r = c.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(
+        r.json_body().unwrap().get("status").unwrap().as_str(),
+        Some("ok")
+    );
+
+    let r = c.get("/models").unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("models").unwrap().as_arr().unwrap().len(), 3);
+    // Provenance is exposed (the paper's motivating requirement).
+    assert!(v.path(&["provenance", "interchange"]).is_some());
+
+    let r = c.get("/models/cnn_m").unwrap();
+    assert_eq!(r.status, 200);
+    assert!(r.json_body().unwrap().get("test_acc").unwrap().as_f64().unwrap() > 0.5);
+    assert_eq!(c.get("/models/nope").unwrap().status, 404);
+}
+
+#[test]
+fn predict_paper_wire_format() {
+    let mut c = client();
+    let r = c.post_json("/predict", &predict_body(4, 1)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    // Paper §2.3: "model_y_i": ["class", ..., "class"] for every model.
+    for model in ["cnn_s", "cnn_m", "mlp"] {
+        let preds = v
+            .get(&format!("model_{model}"))
+            .unwrap_or_else(|| panic!("missing model_{model}"))
+            .as_arr()
+            .unwrap();
+        assert_eq!(preds.len(), 4);
+        for p in preds {
+            let name = p.as_str().unwrap();
+            assert!(workload::CLASSES.contains(&name), "{name}");
+        }
+    }
+    // No opt-in fields requested → none present.
+    assert!(v.get("ensemble").is_none());
+    assert!(v.get("detail").is_none());
+}
+
+#[test]
+fn predict_all_batch_sizes_including_nonbucket() {
+    // §2.3 — any batch size works, bucket-aligned or not, even > max bucket.
+    let mut c = client();
+    for batch in [1, 2, 3, 5, 7, 8, 13, 32, 40] {
+        let r = c.post_json("/predict", &predict_body(batch, batch as u64)).unwrap();
+        assert_eq!(r.status, 200, "batch {batch}: {}", String::from_utf8_lossy(&r.body));
+        let v = r.json_body().unwrap();
+        assert_eq!(
+            v.get("model_mlp").unwrap().as_arr().unwrap().len(),
+            batch,
+            "batch {batch}"
+        );
+    }
+}
+
+#[test]
+fn predict_with_policy_fusion() {
+    let mut c = client();
+    // Build a batch with crisp crosses at rows 0 and 2 (blank row 1).
+    let mut rng = Prng::new(33);
+    let f_cross1 = workload::make_frame(&mut rng, Some(2));
+    let f_blank = workload::make_frame(&mut rng, Some(0));
+    let f_cross2 = workload::make_frame(&mut rng, Some(2));
+    let mut data = Vec::new();
+    for f in [&f_cross1, &f_blank, &f_cross2] {
+        data.extend_from_slice(&f.pixels);
+    }
+    let body = json::obj([
+        ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+        ("batch", Value::from(3usize)),
+        ("policy", Value::from("any")),
+        ("target", Value::from("cross")),
+        ("detail", Value::Bool(true)),
+    ]);
+    let r = c.post_json("/predict", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    let ens = v.get("ensemble").expect("ensemble fusion present");
+    assert_eq!(ens.get("policy").unwrap().as_str(), Some("any"));
+    let det = ens.get("detections").unwrap().as_arr().unwrap();
+    assert_eq!(det.len(), 3);
+    // Detail block present with per-model diagnostics.
+    let detail = v.get("detail").expect("detail present");
+    assert_eq!(detail.get("batch").unwrap().as_u64(), Some(3));
+    assert!(detail.path(&["models", "cnn_m", "exec_us"]).is_some());
+}
+
+#[test]
+fn predict_model_subset() {
+    let mut c = client();
+    let mut body = predict_body(2, 9);
+    if let Value::Obj(m) = &mut body {
+        m.push((
+            "models".into(),
+            Value::Arr(vec![Value::from("mlp"), Value::from("cnn_s")]),
+        ));
+    }
+    let r = c.post_json("/predict", &body).unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json_body().unwrap();
+    assert!(v.get("model_mlp").is_some());
+    assert!(v.get("model_cnn_s").is_some());
+    assert!(v.get("model_cnn_m").is_none(), "subset must exclude cnn_m");
+}
+
+#[test]
+fn predict_validation_errors() {
+    let mut c = client();
+    let cases: Vec<(&str, Value)> = vec![
+        ("no data", json::obj([("batch", Value::from(1usize))])),
+        (
+            "short data",
+            json::obj([
+                ("data", Value::Arr(vec![Value::from(1.0); 10])),
+                ("batch", Value::from(1usize)),
+            ]),
+        ),
+        (
+            "batch 0",
+            json::obj([
+                ("data", Value::Arr(vec![Value::from(1.0); 256])),
+                ("batch", Value::from(0usize)),
+            ]),
+        ),
+        (
+            "bad policy",
+            json::obj([
+                ("data", Value::Arr(vec![Value::from(1.0); 256])),
+                ("policy", Value::from("whenever")),
+                ("target", Value::from("cross")),
+            ]),
+        ),
+        (
+            "policy without target",
+            json::obj([
+                ("data", Value::Arr(vec![Value::from(1.0); 256])),
+                ("policy", Value::from("any")),
+            ]),
+        ),
+        (
+            "unknown model",
+            json::obj([
+                ("data", Value::Arr(vec![Value::from(1.0); 256])),
+                ("models", Value::Arr(vec![Value::from("resnet152")])),
+            ]),
+        ),
+        (
+            "unknown target class",
+            json::obj([
+                ("data", Value::Arr(vec![Value::from(1.0); 256])),
+                ("policy", Value::from("any")),
+                ("target", Value::from("unicorn")),
+            ]),
+        ),
+    ];
+    for (name, body) in cases {
+        let r = c.post_json("/predict", &body).unwrap();
+        assert_eq!(r.status, 422, "case '{name}' should 422");
+        let v = r.json_body().unwrap();
+        assert!(v.path(&["error", "message"]).is_some(), "case '{name}'");
+    }
+    // Non-JSON body → 422 as well.
+    let r = c.post("/predict", b"not json".to_vec()).unwrap();
+    assert_eq!(r.status, 422);
+}
+
+#[test]
+fn concurrent_requests_coalesce_in_batcher() {
+    // Fire 8 concurrent single-frame requests; the 1 ms batching window
+    // should coalesce at least some of them (asserted via metrics).
+    let addr = stack().handle.addr;
+    let before = stack().state.metrics.counter("rows_total");
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c.post_json("/predict", &predict_body(1, 100 + i)).unwrap();
+                assert_eq!(r.status, 200);
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let after = stack().state.metrics.counter("rows_total");
+    assert_eq!(after - before, 8);
+}
+
+#[test]
+fn metrics_exposed() {
+    let mut c = client();
+    let _ = c.post_json("/predict", &predict_body(1, 77)).unwrap();
+    let r = c.get("/metrics").unwrap();
+    let text = String::from_utf8(r.body.clone()).unwrap();
+    assert!(text.contains("flexserve_requests_total"));
+    assert!(text.contains("flexserve_predict_us_p99_us"));
+    let r = c.get("/metrics?format=json").unwrap();
+    let v = r.json_body().unwrap();
+    assert!(v.path(&["counters", "requests_total"]).unwrap().as_u64().unwrap() >= 1);
+}
+
+#[test]
+fn accuracy_on_labelled_workload_matches_manifest() {
+    // Serve 200 labelled frames and check each model's serving accuracy is
+    // within tolerance of its recorded test accuracy — the end-to-end
+    // "numbers are right" check through HTTP + JSON + PJRT.
+    let mut c = client();
+    let mut rng = Prng::new(4242);
+    let n_total = 200usize;
+    let mut correct = [0usize; 3];
+    let model_names = ["cnn_s", "cnn_m", "mlp"];
+    let mut served = 0usize;
+    while served < n_total {
+        let batch = (n_total - served).min(32);
+        let (data, labels) = workload::make_batch(&mut rng, batch);
+        let body = json::obj([
+            ("data", Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+            ("batch", Value::from(batch)),
+        ]);
+        let v = c.post_json("/predict", &body).unwrap().json_body().unwrap();
+        for (mi, name) in model_names.iter().enumerate() {
+            let preds = v.get(&format!("model_{name}")).unwrap().as_arr().unwrap();
+            for (p, &lbl) in preds.iter().zip(&labels) {
+                if p.as_str().unwrap() == workload::CLASSES[lbl] {
+                    correct[mi] += 1;
+                }
+            }
+        }
+        served += batch;
+    }
+    let manifest = &stack().state.manifest;
+    for (mi, name) in model_names.iter().enumerate() {
+        let acc = correct[mi] as f64 / n_total as f64;
+        let expected = manifest.model(name).unwrap().test_acc;
+        assert!(
+            (acc - expected).abs() < 0.12,
+            "{name}: served acc {acc:.3} vs manifest {expected:.3}"
+        );
+    }
+}
+
+#[test]
+fn predict_pgm_b64_frames() {
+    // §2.3 camera wire format: base64 binary-PGM frames.
+    let mut c = client();
+    let mut rng = Prng::new(55);
+    let frames: Vec<Value> = (0..3)
+        .map(|_| {
+            let f = workload::make_frame(&mut rng, Some(3));
+            let pgm = flexserve::imagepipe::encode_pgm(
+                workload::IMG,
+                workload::IMG,
+                &f.pixels,
+            );
+            Value::from(flexserve::util::base64::encode(&pgm))
+        })
+        .collect();
+    let body = json::obj([("pgm_b64", Value::Arr(frames))]);
+    let r = c.post_json("/predict", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("model_cnn_m").unwrap().as_arr().unwrap().len(), 3);
+
+    // Error paths: both inputs, bad base64, wrong dims.
+    let both = json::obj([
+        ("data", Value::Arr(vec![Value::from(0.0); 256])),
+        ("pgm_b64", Value::Arr(vec![Value::from("Zm9v")])),
+    ]);
+    assert_eq!(c.post_json("/predict", &both).unwrap().status, 422);
+    let bad = json::obj([("pgm_b64", Value::Arr(vec![Value::from("!!!")]))]);
+    assert_eq!(c.post_json("/predict", &bad).unwrap().status, 422);
+    let tiny = flexserve::imagepipe::encode_pgm(2, 2, &[0.0; 4]);
+    let wrong = json::obj([(
+        "pgm_b64",
+        Value::Arr(vec![Value::from(flexserve::util::base64::encode(&tiny))]),
+    )]);
+    assert_eq!(c.post_json("/predict", &wrong).unwrap().status, 422);
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tampered_artifact_fails_provenance_gate() {
+    // Copy artifacts, flip one byte in a weight constant, expect the
+    // SHA-256 verification to refuse to serve (the paper's provenance
+    // argument, enforced).
+    let src = artifact_dir();
+    let dst = std::env::temp_dir().join("flexserve_tampered");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+    // Tamper: append junk to one artifact.
+    let victim = dst.join("mlp_b1.hlo.txt");
+    let mut text = std::fs::read_to_string(&victim).unwrap();
+    text.push_str("\n// tampered");
+    std::fs::write(&victim, text).unwrap();
+
+    let manifest = flexserve::runtime::Manifest::load(&dst).unwrap();
+    let err = manifest.verify_all().unwrap_err();
+    assert!(format!("{err:#}").contains("provenance"), "{err:#}");
+
+    // And a server configured with verify_sha must refuse to start.
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into();
+    config.artifacts = dst.clone();
+    config.verify_sha = true;
+    assert!(serve(&config).is_err());
+    let _ = std::fs::remove_dir_all(&dst);
+}
+
+#[test]
+fn missing_manifest_is_clear_error() {
+    let err = flexserve::runtime::Manifest::load("/nonexistent/nowhere").unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+// ---------------------------------------------------------------------------
+// CLI binary
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_models_and_verify() {
+    let bin = env!("CARGO_BIN_EXE_flexserve");
+    let out = std::process::Command::new(bin)
+        .args(["models", "--artifacts"])
+        .arg(artifact_dir())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = json::parse(std::str::from_utf8(&out.stdout).unwrap()).unwrap();
+    assert!(doc.path(&["models", "cnn_m", "test_acc"]).is_some());
+
+    let out = std::process::Command::new(bin)
+        .args(["verify", "--artifacts"])
+        .arg(artifact_dir())
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("ok: 18 artifacts"));
+
+    // Unknown command exits nonzero with a helpful message.
+    let out = std::process::Command::new(bin).arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+// ---------------------------------------------------------------------------
+// Baseline (TFS-style) server
+// ---------------------------------------------------------------------------
+
+static BASELINE: OnceLock<Mutex<(ServerHandle, Arc<flexserve::baseline::BaselineState>)>> =
+    OnceLock::new();
+
+fn baseline_addr() -> std::net::SocketAddr {
+    BASELINE
+        .get_or_init(|| {
+            let config = BaselineConfig {
+                addr: "127.0.0.1:0".into(),
+                http_workers: 4,
+                artifacts: artifact_dir(),
+                fixed_batch: 4,
+                models: Some(vec!["mlp".into(), "cnn_s".into()]),
+            };
+            Mutex::new(serve_baseline(&config).expect("baseline starts"))
+        })
+        .lock()
+        .unwrap()
+        .0
+        .addr
+}
+
+#[test]
+fn baseline_fixed_batch_contract() {
+    let mut c = Client::connect(baseline_addr()).unwrap();
+    let mut rng = Prng::new(8);
+    let (data, _) = workload::make_batch(&mut rng, 4);
+    let body = json::obj([(
+        "data",
+        Value::Arr(data.iter().map(|&v| Value::from(v)).collect()),
+    )]);
+    // Exact batch works, per-model endpoint.
+    let r = c.post_json("/v1/models/mlp/predict", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("predictions").unwrap().as_arr().unwrap().len(), 4);
+
+    // Wrong batch size is REJECTED (the inflexibility FlexServe removes).
+    let (small, _) = workload::make_batch(&mut rng, 2);
+    let body = json::obj([(
+        "data",
+        Value::Arr(small.iter().map(|&v| Value::from(v)).collect()),
+    )]);
+    let r = c.post_json("/v1/models/mlp/predict", &body).unwrap();
+    assert_eq!(r.status, 422);
+
+    // Undeployed model → 422 (deployed set was restricted).
+    let (d4, _) = workload::make_batch(&mut rng, 4);
+    let body = json::obj([(
+        "data",
+        Value::Arr(d4.iter().map(|&v| Value::from(v)).collect()),
+    )]);
+    let r = c.post_json("/v1/models/cnn_m/predict", &body).unwrap();
+    assert_eq!(r.status, 422);
+}
