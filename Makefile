@@ -1,0 +1,31 @@
+# FlexServe-RS build orchestration.
+#
+#   make artifacts   train the model zoo and AOT-lower it to HLO artifacts
+#                    (rust/artifacts/manifest.json + *.hlo.txt) — the input
+#                    the Rust server compiles at boot
+#   make serve       release-build and start the ensemble server
+#   make test        tier-1 verify: release build + tests
+#
+# `artifacts` needs the python side (jax + the pallas kernels); the Rust
+# targets need only cargo. Device-backed Rust tests self-skip when
+# artifacts are missing.
+
+PYTHON ?= python3
+ARTIFACTS ?= rust/artifacts
+
+.PHONY: artifacts serve test fmt clippy
+
+artifacts:
+	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
+
+serve:
+	cd rust && cargo run --release -- serve
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy -- -D warnings

@@ -96,6 +96,38 @@ fn main() -> anyhow::Result<()> {
         t.join().unwrap();
     }
     let wall = start.elapsed_secs();
+
+    // Control-plane epilogue (§2 "flexible"): evolve the ensemble at
+    // runtime through the typed /v1 helpers — unload a model, serve
+    // degraded, load it back, then set membership explicitly.
+    let mut ctl = Client::connect(addr)?;
+    let evicted = "cnn_s";
+    let doc = ctl.unload_model(evicted)?;
+    anyhow::ensure!(
+        doc.get("status").and_then(Value::as_str) == Some("unloaded"),
+        "unexpected unload response: {doc}"
+    );
+    let (probe, _) = workload::make_batch(&mut rng, 1);
+    let body = json::obj([
+        ("data", Value::Arr(probe.iter().map(|&v| Value::from(v)).collect())),
+        ("batch", Value::from(1usize)),
+    ]);
+    let v = ctl.post_json("/v1/predict", &body)?.json_body()?;
+    anyhow::ensure!(
+        v.get(&format!("model_{evicted}")).is_none(),
+        "unloaded model still answered: {v}"
+    );
+    let doc = ctl.load_model(evicted)?;
+    anyhow::ensure!(
+        doc.get("params_sha256").and_then(Value::as_str).is_some(),
+        "load response missing provenance: {doc}"
+    );
+    let members = state.ensemble.models();
+    let doc = ctl.set_ensemble(&members.iter().map(String::as_str).collect::<Vec<_>>())?;
+    println!(
+        "control plane OK — unload/load/set_ensemble round-trip, active = {}",
+        doc.get("active").map(|a| a.to_string()).unwrap_or_default()
+    );
     handle.stop();
 
     let hist = latencies.lock().unwrap();

@@ -82,8 +82,8 @@ pub fn serve_baseline(config: &BaselineConfig) -> Result<(ServerHandle, Arc<Base
             ExecutorOptions {
                 models: Some(vec![name.clone()]),
                 buckets: Some(vec![config.fixed_batch]),
-                verify_sha: false,
                 warmup: true,
+                ..Default::default()
             },
         )
         .with_context(|| format!("spawning client for {name}"))?;

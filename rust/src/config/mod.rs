@@ -26,6 +26,8 @@ pub struct ServeConfig {
     pub models: Option<Vec<String>>,
     /// Dynamic batcher (None = pass-through, the paper's base behaviour).
     pub batcher: Option<BatcherConfig>,
+    /// Emit one access-log line per request on stderr (router middleware).
+    pub access_log: bool,
 }
 
 impl Default for ServeConfig {
@@ -39,6 +41,7 @@ impl Default for ServeConfig {
             warmup: true,
             models: None,
             batcher: Some(BatcherConfig::default()),
+            access_log: false,
         }
     }
 }
@@ -68,6 +71,7 @@ impl ServeConfig {
             "artifacts" => self.artifacts = PathBuf::from(req_str(key, val)?),
             "verify_sha" => self.verify_sha = req_bool(key, val)?,
             "warmup" => self.warmup = req_bool(key, val)?,
+            "access_log" => self.access_log = req_bool(key, val)?,
             "models" => {
                 let arr = val
                     .as_arr()
@@ -111,7 +115,8 @@ impl ServeConfig {
     /// Apply `--key value` / `--key=value` CLI overrides. Recognized keys
     /// mirror the JSON config (`--addr`, `--http-workers`,
     /// `--device-workers`, `--artifacts`, `--models a,b`, `--no-batcher`,
-    /// `--batch-delay-us N`, `--max-batch N`, `--no-verify`, `--no-warmup`).
+    /// `--batch-delay-us N`, `--max-batch N`, `--no-verify`, `--no-warmup`,
+    /// `--access-log`).
     pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
         let mut it = args.iter().peekable();
         while let Some(arg) = it.next() {
@@ -149,6 +154,7 @@ impl ServeConfig {
                 }
                 "--no-verify" => self.verify_sha = false,
                 "--no-warmup" => self.warmup = false,
+                "--access-log" => self.access_log = true,
                 "--config" => {
                     let path = take()?;
                     let text = std::fs::read_to_string(&path)

@@ -1,22 +1,43 @@
-//! The REST surface (Fig. 1): a single `/predict` endpoint serving the
-//! whole ensemble, plus introspection endpoints.
+//! The REST surface: a versioned `/v1` API with a data plane and a control
+//! plane, grown from the paper's single `/predict` endpoint (Fig. 1).
 //!
-//! Response wire format follows the paper (§2.3): one member per model,
-//! `"model_<name>": ["class", "class", ...]`, all models in one JSON
-//! object. Extensions (opt-in, absent by default so the paper format stays
-//! canonical): server-side policy fusion (`policy`/`target`) and detailed
-//! diagnostics (`detail`).
+//! Data plane:
+//! * `POST /v1/predict` — ensemble predict, paper §2.3 wire format
+//!   (`"model_<name>": ["class", ...]` per active model);
+//! * `POST /v1/models/:name/predict` — single-model fast path (skips the
+//!   ensemble fan-out and the shared batcher).
+//!
+//! Control plane (runtime model lifecycle — no restarts):
+//! * `POST /v1/models/:name/load` — compile + admit a model, provenance
+//!   (`params_sha256`) echoed;
+//! * `POST /v1/models/:name/unload` — evict a model (device memory freed);
+//! * `PUT /v1/ensemble` — set active membership atomically;
+//! * `GET /v1/ensemble` — membership snapshot.
+//!
+//! Introspection: `GET /v1/healthz`, `/v1/models`, `/v1/models/:name`,
+//! `/v1/metrics`.
+//!
+//! Legacy unversioned aliases (`/predict`, `/models`, `/models/:name`,
+//! `/metrics`, `/healthz`) share the same handlers so the paper's wire
+//! format stays byte-compatible; the legacy predict route flattens every
+//! error status to the seed's 422 while keeping the machine-readable
+//! taxonomy code (README: legacy-alias policy).
+//!
+//! Errors everywhere use `{"error": {"code", "message"}}` with stable
+//! codes from [`super::wire::ApiError`]; middleware (request-ids,
+//! per-route latency metrics, access logging) lives in the router.
 
 use super::batcher::{Batcher, BatcherConfig, BatchStats};
 use super::ensemble::{Ensemble, EnsembleOutput};
 use super::metrics::Metrics;
-use super::policy::Policy;
+use super::wire::{self, ApiError, PredictRequest};
+use crate::http::router::{Params, RequestInfo, RouteHandler, RouterObserver};
 use crate::http::{Request, Response, Router};
 use crate::imagepipe::Normalizer;
 use crate::json::{self, Value};
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, ModelEntry};
 use crate::util::Stopwatch;
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Shared server state behind the router.
@@ -27,6 +48,10 @@ pub struct ServerState {
     pub normalizer: Normalizer,
     pub metrics: Arc<Metrics>,
     pub started: std::time::Instant,
+    /// Serializes control-plane lifecycle operations (load/unload/set):
+    /// each is a check-then-act over the pool's loaded set, so concurrent
+    /// handlers could otherwise interleave into an active-but-evicted model.
+    lifecycle: std::sync::Mutex<()>,
 }
 
 impl ServerState {
@@ -44,72 +69,181 @@ impl ServerState {
             normalizer,
             metrics: Arc::new(Metrics::new()),
             started: std::time::Instant::now(),
+            lifecycle: std::sync::Mutex::new(()),
         }))
+    }
+
+    /// Hold this across every lifecycle mutation (poison-tolerant: a
+    /// panicked handler must not wedge the control plane).
+    fn lifecycle_guard(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.lifecycle
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Lifecycle status of one model: `active` (loaded + serving in the
+    /// ensemble), `loaded` (resident, not in the active set), `unloaded`.
+    fn model_status(&self, name: &str) -> &'static str {
+        if !self.ensemble.pool().is_loaded(name) {
+            "unloaded"
+        } else if self.ensemble.models().iter().any(|m| m == name) {
+            "active"
+        } else {
+            "loaded"
+        }
     }
 }
 
-/// Build the FlexServe router over shared state.
+/// Router middleware → metrics bridge: per-route latency histograms and
+/// status-class counters for every request.
+struct MetricsObserver {
+    metrics: Arc<Metrics>,
+}
+
+impl RouterObserver for MetricsObserver {
+    fn on_request(&self, info: &RequestInfo<'_>) {
+        self.metrics
+            .observe_route(info.route, info.status, info.latency_micros);
+    }
+}
+
+/// Build the FlexServe router over shared state: `/v1` routes plus legacy
+/// unversioned aliases sharing the same handlers.
 pub fn build_router(state: Arc<ServerState>) -> Router {
     let mut router = Router::new();
+    router.observe(Arc::new(MetricsObserver {
+        metrics: Arc::clone(&state.metrics),
+    }));
 
+    // ---- introspection ---------------------------------------------------
     let s = Arc::clone(&state);
-    router.add("GET", "/healthz", move |_, _| {
+    let healthz: RouteHandler = Arc::new(move |_req, _p| {
         Response::json(
             200,
             &json::obj([
                 ("status", Value::from("ok")),
                 ("models", Value::from(s.ensemble.models().len())),
+                (
+                    "loaded",
+                    Value::from(s.ensemble.pool().loaded_models().len()),
+                ),
                 ("uptime_s", Value::from(s.started.elapsed().as_secs())),
             ]),
         )
     });
+    router.add_shared("GET", "/v1/healthz", Arc::clone(&healthz));
+    router.add_shared("GET", "/healthz", healthz);
 
     let s = Arc::clone(&state);
-    router.add("GET", "/models", move |_, _| models_response(&s));
+    let models: RouteHandler = Arc::new(move |_req, _p| models_response(&s));
+    router.add_shared("GET", "/v1/models", Arc::clone(&models));
+    router.add_shared("GET", "/models", models);
 
     let s = Arc::clone(&state);
-    router.add("GET", "/models/:name", move |_, params| {
+    let model_one: RouteHandler = Arc::new(move |_req, params| {
         match s.manifest.model(&params["name"]) {
-            None => Response::not_found(),
+            None => ApiError::unknown_model(&params["name"]).to_response(),
             Some(m) => Response::json(200, &model_json(&s, m)),
         }
     });
+    router.add_shared("GET", "/v1/models/:name", Arc::clone(&model_one));
+    router.add_shared("GET", "/models/:name", model_one);
 
     let s = Arc::clone(&state);
-    router.add("GET", "/metrics", move |req, _| {
+    let metrics: RouteHandler = Arc::new(move |req, _p| {
         if req.query_param("format") == Some("json") {
             Response::json(200, &s.metrics.render_json())
         } else {
             Response::text(200, &s.metrics.render_text())
         }
     });
+    router.add_shared("GET", "/v1/metrics", Arc::clone(&metrics));
+    router.add_shared("GET", "/metrics", metrics);
+
+    // ---- data plane ------------------------------------------------------
+    router.add_shared("POST", "/v1/predict", predict_handler(Arc::clone(&state), false));
+    router.add_shared("POST", "/predict", predict_handler(Arc::clone(&state), true));
 
     let s = Arc::clone(&state);
-    router.add("POST", "/predict", move |req, _| {
+    router.add("POST", "/v1/models/:name/predict", move |req, p| {
         let sw = Stopwatch::start();
         s.metrics.inc("requests_total");
-        match handle_predict(&s, req) {
+        match handle_model_predict(&s, &p["name"], req) {
             Ok(resp) => {
                 s.metrics.observe_micros("predict_us", sw.elapsed_micros());
                 resp
             }
             Err(e) => {
                 s.metrics.inc("errors_total");
-                Response::error(422, &format!("{e:#}"))
+                e.to_response()
             }
         }
+    });
+
+    // ---- control plane ---------------------------------------------------
+    router.add_shared(
+        "POST",
+        "/v1/models/:name/load",
+        control_handler(Arc::clone(&state), |s, _req, p| handle_load(s, &p["name"])),
+    );
+    router.add_shared(
+        "POST",
+        "/v1/models/:name/unload",
+        control_handler(Arc::clone(&state), |s, _req, p| handle_unload(s, &p["name"])),
+    );
+    router.add_shared(
+        "PUT",
+        "/v1/ensemble",
+        control_handler(Arc::clone(&state), |s, req, _p| handle_set_ensemble(s, req)),
+    );
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/v1/ensemble", move |_req, _p| {
+        Response::json(200, &ensemble_snapshot(&s))
     });
 
     router
 }
 
+/// Wrap one control-plane operation with the shared error policy: render
+/// the taxonomy envelope and count `errors_total` on failure.
+fn control_handler<F>(state: Arc<ServerState>, op: F) -> RouteHandler
+where
+    F: Fn(&ServerState, &Request, &Params) -> Result<Response, ApiError> + Send + Sync + 'static,
+{
+    Arc::new(move |req, p| match op(&state, req, p) {
+        Ok(resp) => resp,
+        Err(e) => {
+            state.metrics.inc("errors_total");
+            e.to_response()
+        }
+    })
+}
+
+/// The ensemble predict handler, shared by `/v1/predict` and the legacy
+/// `/predict` alias. `legacy` selects the legacy-alias error policy:
+/// every error status flattens to the seed's 422 (the taxonomy `code`
+/// stays intact either way).
+fn predict_handler(state: Arc<ServerState>, legacy: bool) -> RouteHandler {
+    Arc::new(move |req, _p| {
+        let sw = Stopwatch::start();
+        state.metrics.inc("requests_total");
+        match handle_predict(&state, req) {
+            Ok(resp) => {
+                state.metrics.observe_micros("predict_us", sw.elapsed_micros());
+                resp
+            }
+            Err(e) => {
+                state.metrics.inc("errors_total");
+                let status = if legacy { 422 } else { e.status };
+                Response::coded_error(status, e.code, &e.message)
+            }
+        }
+    })
+}
+
 fn models_response(s: &ServerState) -> Response {
-    let models: Vec<Value> = s
-        .manifest
-        .models
-        .iter()
-        .map(|m| model_json(s, m))
-        .collect();
+    let models: Vec<Value> = s.manifest.models.iter().map(|m| model_json(s, m)).collect();
     Response::json(
         200,
         &json::obj([
@@ -138,13 +272,14 @@ fn models_response(s: &ServerState) -> Response {
     )
 }
 
-fn model_json(s: &ServerState, m: &crate::runtime::ModelEntry) -> Value {
-    let _ = s;
+fn model_json(s: &ServerState, m: &ModelEntry) -> Value {
     json::obj([
         ("name", Value::from(m.name.as_str())),
+        ("status", Value::from(s.model_status(&m.name))),
         ("param_count", Value::from(m.param_count)),
         ("test_acc", Value::from(m.test_acc)),
         ("params_sha256", Value::from(m.params_sha256.as_str())),
+        ("artifact_bytes", Value::from(m.artifact_bytes())),
         (
             "buckets",
             Value::Arr(m.buckets.iter().map(|a| Value::from(a.bucket)).collect()),
@@ -152,150 +287,52 @@ fn model_json(s: &ServerState, m: &crate::runtime::ModelEntry) -> Value {
     ])
 }
 
-/// Decode `pgm_b64` camera frames (§2.3 wire format: base64 binary PGM,
-/// one per frame) into the flat f32 batch. Dimensions must match the
-/// manifest's input shape.
-fn decode_pgm_frames(s: &ServerState, frames: &Value) -> Result<Vec<f32>> {
-    let arr = frames
-        .as_arr()
-        .ok_or_else(|| anyhow!("'pgm_b64' must be an array of base64 strings"))?;
-    if s.manifest.input_shape.len() != 3 || s.manifest.input_shape[2] != 1 {
-        bail!("pgm input requires single-channel models");
-    }
-    let (want_h, want_w) = (s.manifest.input_shape[0], s.manifest.input_shape[1]);
-    let mut data = Vec::with_capacity(arr.len() * want_h * want_w);
-    for (i, frame) in arr.iter().enumerate() {
-        let b64 = frame
-            .as_str()
-            .ok_or_else(|| anyhow!("pgm_b64[{i}] must be a string"))?;
-        let bytes = crate::util::base64::decode(b64)
-            .map_err(|e| anyhow!("pgm_b64[{i}]: {e}"))?;
-        let (w, h, pixels) = crate::imagepipe::decode_pgm(&bytes)
-            .map_err(|e| anyhow!("pgm_b64[{i}]: {e}"))?;
-        if (h, w) != (want_h, want_w) {
-            bail!("pgm_b64[{i}] is {w}x{h}, model expects {want_w}x{want_h}");
-        }
-        data.extend(pixels);
-    }
-    Ok(data)
-}
-
-/// Parsed `/predict` request.
-struct PredictInput {
-    data: Vec<f32>,
-    batch: usize,
-    normalized: bool,
-    models: Option<Vec<String>>,
-    policy: Option<Policy>,
-    target: Option<String>,
-    detail: bool,
-}
-
-fn parse_predict(s: &ServerState, req: &Request) -> Result<PredictInput> {
-    let body = req
-        .json_body()
-        .map_err(|e| anyhow!("body must be JSON: {e}"))?;
-    let data = match (body.get("data"), body.get("pgm_b64")) {
-        (Some(_), Some(_)) => bail!("pass either 'data' or 'pgm_b64', not both"),
-        (Some(d), None) => d
-            .as_f32_vec()
-            .ok_or_else(|| anyhow!("'data' must be a numeric array"))?,
-        (None, Some(frames)) => decode_pgm_frames(s, frames)?,
-        (None, None) => bail!(
-            "missing 'data' (flat f32 array, row-major BxHxWxC) or 'pgm_b64' \
-             (array of base64 binary-PGM frames)"
+/// Membership snapshot for `GET /v1/ensemble` and lifecycle responses.
+fn ensemble_snapshot(s: &ServerState) -> Value {
+    json::obj([
+        (
+            "active",
+            Value::Arr(s.ensemble.models().into_iter().map(Value::from).collect()),
         ),
-    };
-    if data.is_empty() {
-        bail!("'data' is empty");
-    }
-    if !data.iter().all(|v| v.is_finite()) {
-        bail!("'data' contains non-finite values");
-    }
-    let elems = s.manifest.sample_elems();
-    let batch = match body.get("batch").map(|b| {
-        b.as_usize()
-            .ok_or_else(|| anyhow!("'batch' must be a non-negative integer"))
-    }) {
-        Some(b) => b?,
-        None => {
-            if data.len() % elems != 0 {
-                bail!(
-                    "'data' length {} is not a multiple of sample size {elems}; \
-                     pass 'batch' explicitly",
-                    data.len()
-                );
-            }
-            data.len() / elems
-        }
-    };
-    if batch == 0 {
-        bail!("batch must be ≥ 1");
-    }
-    if data.len() != batch * elems {
-        bail!(
-            "'data' length {} != batch {batch} x {elems} elems",
-            data.len()
-        );
-    }
-
-    // Flags come from body, with query-param override (handy for curl).
-    let normalized = body
-        .get("normalized")
-        .and_then(Value::as_bool)
-        .unwrap_or(false);
-    let models = match req.query_param("models").map(str::to_string).or_else(|| {
-        body.get("models").and_then(Value::as_arr).map(|a| {
-            a.iter()
-                .filter_map(Value::as_str)
-                .collect::<Vec<_>>()
-                .join(",")
-        })
-    }) {
-        None => None,
-        Some(csv) => {
-            let names: Vec<String> = csv
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(str::to_string)
-                .collect();
-            if names.is_empty() {
-                None
-            } else {
-                Some(names)
-            }
-        }
-    };
-    let policy = match req
-        .query_param("policy")
-        .or_else(|| body.get("policy").and_then(Value::as_str))
-    {
-        None => None,
-        Some(p) => Some(Policy::parse(p)?),
-    };
-    let target = req
-        .query_param("target")
-        .or_else(|| body.get("target").and_then(Value::as_str))
-        .map(str::to_string);
-    if policy.is_some() && target.is_none() {
-        bail!("'policy' requires 'target' (a class name)");
-    }
-    let detail = req.query_param("detail") == Some("1")
-        || body.get("detail").and_then(Value::as_bool).unwrap_or(false);
-
-    Ok(PredictInput {
-        data,
-        batch,
-        normalized,
-        models,
-        policy,
-        target,
-        detail,
-    })
+        (
+            "loaded",
+            Value::Arr(
+                s.ensemble
+                    .pool()
+                    .loaded_models()
+                    .into_iter()
+                    .map(Value::from)
+                    .collect(),
+            ),
+        ),
+        (
+            "available",
+            Value::Arr(
+                s.manifest
+                    .model_names()
+                    .into_iter()
+                    .map(Value::from)
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
-fn handle_predict(s: &ServerState, req: &Request) -> Result<Response> {
-    let mut input = parse_predict(s, req)?;
+/// Lifecycle response: the state transition plus the model's provenance.
+fn lifecycle_json(s: &ServerState, entry: &ModelEntry, status: &str) -> Value {
+    json::obj([
+        ("model", Value::from(entry.name.as_str())),
+        ("status", Value::from(status)),
+        ("params_sha256", Value::from(entry.params_sha256.as_str())),
+        (
+            "active_models",
+            Value::Arr(s.ensemble.models().into_iter().map(Value::from).collect()),
+        ),
+    ])
+}
+
+fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
+    let mut input = PredictRequest::parse(&s.manifest, req)?;
     s.metrics.add("rows_total", input.batch as u64);
 
     // §2.2: the ONE shared data transformation for the whole ensemble.
@@ -303,108 +340,204 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response> {
         s.normalizer.apply(&mut input.data);
     }
 
+    // Typed membership check before any device work (the batcher path
+    // re-checks at flush time; see wire.rs for the taxonomy).
+    if input.models.is_none() && s.ensemble.models().is_empty() {
+        return Err(ApiError::ensemble_empty());
+    }
+
     // Custom model subsets bypass the shared batcher (its batches are for
-    // the default full ensemble); everything else coalesces.
+    // the current full ensemble); everything else coalesces.
     let data = std::mem::take(&mut input.data); // move the payload, no clone
     let (output, stats): (EnsembleOutput, Option<BatchStats>) = match (&input.models, &s.batcher) {
         (None, Some(batcher)) => {
-            let (out, st) = batcher.submit(data, input.batch)?;
+            let (out, st) = batcher
+                .submit(data, input.batch)
+                .map_err(ApiError::from_anyhow)?;
             s.metrics
                 .observe_micros("coalesced_rows", st.coalesced_rows as u64);
             (out, Some(st))
         }
-        (None, None) => (s.ensemble.forward(&data, input.batch)?, None),
+        (None, None) => (
+            s.ensemble
+                .forward(&data, input.batch)
+                .map_err(ApiError::from_anyhow)?,
+            None,
+        ),
         (Some(names), _) => {
-            let sub = s.ensemble.with_models(names.clone())?;
-            (sub.forward(&data, input.batch)?, None)
+            let sub = s
+                .ensemble
+                .with_models(names.clone())
+                .map_err(ApiError::from_anyhow)?;
+            (
+                sub.forward(&data, input.batch)
+                    .map_err(ApiError::from_anyhow)?,
+                None,
+            )
         }
     };
 
     for m in &output.per_model {
-        s.metrics
-            .observe_micros("device_exec_us", m.exec_micros);
+        s.metrics.observe_micros("device_exec_us", m.exec_micros);
     }
 
-    // Paper wire format: "model_<name>": ["class", ...].
-    let mut members: Vec<(String, Value)> = Vec::with_capacity(output.per_model.len() + 2);
-    for m in &output.per_model {
-        let names = output
-            .class_names(&s.manifest, &m.model)
-            .expect("model present in its own output");
-        members.push((
-            format!("model_{}", m.model),
-            Value::Arr(names.into_iter().map(Value::from).collect()),
-        ));
-    }
+    let body = wire::render_predict(&s.manifest, &input, &output, stats)?;
+    Ok(Response::json(200, &body))
+}
 
-    // Opt-in server-side sensitivity fusion (§2.1).
-    if let (Some(policy), Some(target)) = (&input.policy, &input.target) {
-        let target_idx = s
-            .manifest
-            .classes
-            .iter()
-            .position(|c| c == target)
-            .ok_or_else(|| anyhow!("unknown target class '{target}'"))?;
-        let votes = output.votes_for_class(target_idx); // [model][row]
-        let mut detections = Vec::with_capacity(output.batch);
-        for row in 0..output.batch {
-            let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
-            detections.push(Value::Bool(policy.fuse(&row_votes)?));
-        }
+/// Single-model fast path: one model, no ensemble fan-out, no shared
+/// batcher. Requires the model to be loaded (it need not be in the active
+/// ensemble).
+fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
+    let entry = s
+        .manifest
+        .model(name)
+        .ok_or_else(|| ApiError::unknown_model(name))?;
+    if !s.ensemble.pool().is_loaded(name) {
+        return Err(ApiError::model_not_loaded(name));
+    }
+    let mut input = PredictRequest::parse(&s.manifest, req)?;
+    s.metrics.add("rows_total", input.batch as u64);
+    if !input.normalized {
+        s.normalizer.apply(&mut input.data);
+    }
+    let data = std::mem::take(&mut input.data);
+    let single = s
+        .ensemble
+        .with_models(vec![name.to_string()])
+        .map_err(ApiError::from_anyhow)?;
+    let output = single
+        .forward(&data, input.batch)
+        .map_err(ApiError::from_anyhow)?;
+
+    let m = &output.per_model[0];
+    s.metrics.observe_micros("device_exec_us", m.exec_micros);
+    let predictions: Vec<Value> = m
+        .preds
+        .iter()
+        .map(|(idx, _)| Value::from(s.manifest.classes[*idx].as_str()))
+        .collect();
+    let mut members = vec![
+        ("model".to_string(), Value::from(name)),
+        ("predictions".to_string(), Value::Arr(predictions)),
+        (
+            "params_sha256".to_string(),
+            Value::from(entry.params_sha256.as_str()),
+        ),
+    ];
+    if input.detail {
         members.push((
-            "ensemble".to_string(),
+            "detail".to_string(),
             json::obj([
-                ("policy", Value::from(policy.to_string())),
-                ("target", Value::from(target.as_str())),
-                ("detections", Value::Arr(detections)),
+                ("batch", Value::from(output.batch)),
+                (
+                    "probs",
+                    Value::Arr(m.preds.iter().map(|(_, p)| Value::from(*p)).collect()),
+                ),
+                (
+                    "buckets",
+                    Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
+                ),
+                ("exec_us", Value::from(m.exec_micros)),
+                ("queue_us", Value::from(m.queue_micros)),
             ]),
         ));
     }
-
-    if input.detail {
-        let per_model: Vec<(String, Value)> = output
-            .per_model
-            .iter()
-            .map(|m| {
-                (
-                    m.model.clone(),
-                    json::obj([
-                        (
-                            "probs",
-                            Value::Arr(m.preds.iter().map(|(_, p)| Value::from(*p)).collect()),
-                        ),
-                        (
-                            "buckets",
-                            Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
-                        ),
-                        ("exec_us", Value::from(m.exec_micros)),
-                        ("queue_us", Value::from(m.queue_micros)),
-                    ]),
-                )
-            })
-            .collect();
-        let mut detail = vec![
-            ("batch".to_string(), Value::from(output.batch)),
-            ("models".to_string(), Value::Obj(per_model)),
-        ];
-        if let Some(st) = stats {
-            detail.push((
-                "batching".to_string(),
-                json::obj([
-                    ("coalesced_rows", Value::from(st.coalesced_rows)),
-                    ("coalesced_requests", Value::from(st.coalesced_requests)),
-                    ("wait_us", Value::from(st.wait_micros)),
-                ]),
-            ));
-        }
-        members.push(("detail".to_string(), Value::Obj(detail)));
-    }
-
     Ok(Response::json(200, &Value::Obj(members)))
+}
+
+/// `POST /v1/models/:name/load` — compile the model onto every device
+/// worker (idempotent) and restore it into the active ensemble.
+fn handle_load(s: &ServerState, name: &str) -> Result<Response, ApiError> {
+    let entry = s
+        .manifest
+        .model(name)
+        .ok_or_else(|| ApiError::unknown_model(name))?;
+    let _guard = s.lifecycle_guard();
+    let already = s.ensemble.pool().is_loaded(name);
+    if !already {
+        s.ensemble
+            .pool()
+            .load_model(name)
+            .map_err(|e| ApiError::load_failed(name, format!("{e:#}")))?;
+        s.metrics.inc("lifecycle_loads_total");
+    }
+    s.ensemble.activate(name);
+    Ok(Response::json(
+        200,
+        &lifecycle_json(s, entry, if already { "already_loaded" } else { "loaded" }),
+    ))
+}
+
+/// `POST /v1/models/:name/unload` — drop the model from the active set,
+/// then evict its executables from every device worker.
+fn handle_unload(s: &ServerState, name: &str) -> Result<Response, ApiError> {
+    let entry = s
+        .manifest
+        .model(name)
+        .ok_or_else(|| ApiError::unknown_model(name))?;
+    let _guard = s.lifecycle_guard();
+    if !s.ensemble.pool().is_loaded(name) {
+        return Err(ApiError::model_not_loaded(name));
+    }
+    // Leave the active set first so the batcher's next flush (and new
+    // requests) stop fanning out to the model before eviction.
+    s.ensemble.deactivate(name);
+    s.ensemble
+        .pool()
+        .unload_model(name)
+        .map_err(|e| ApiError::internal(format!("{e:#}")))?;
+    s.metrics.inc("lifecycle_unloads_total");
+    Ok(Response::json(200, &lifecycle_json(s, entry, "unloaded")))
+}
+
+/// `PUT /v1/ensemble` — atomically replace the active membership. Every
+/// requested model must be known and loaded; the swap is all-or-nothing.
+fn handle_set_ensemble(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
+    let body = req.json_body().map_err(ApiError::malformed_json)?;
+    let names: Vec<String> = body
+        .get("models")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| ApiError::bad_value("'models' must be an array of model names"))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| ApiError::bad_value("'models' entries must be strings"))
+        })
+        .collect::<Result<_, _>>()?;
+    let _guard = s.lifecycle_guard();
+    // set_active validates (non-empty, known, loaded) with typed errors;
+    // from_anyhow recovers their taxonomy codes and statuses.
+    s.ensemble
+        .set_active(names)
+        .map_err(ApiError::from_anyhow)?;
+    s.metrics.inc("lifecycle_membership_total");
+
+    // Echo membership + provenance for every now-active model.
+    let provenance: Vec<Value> = s
+        .ensemble
+        .models()
+        .iter()
+        .filter_map(|n| s.manifest.model(n))
+        .map(|m| {
+            json::obj([
+                ("name", Value::from(m.name.as_str())),
+                ("params_sha256", Value::from(m.params_sha256.as_str())),
+            ])
+        })
+        .collect();
+    let mut snapshot = match ensemble_snapshot(s) {
+        Value::Obj(members) => members,
+        _ => unreachable!("snapshot is an object"),
+    };
+    snapshot.push(("models".to_string(), Value::Arr(provenance)));
+    Ok(Response::json(200, &Value::Obj(snapshot)))
 }
 
 #[cfg(test)]
 mod tests {
     // Exercised end-to-end (with a live device) in
-    // rust/tests/server_integration.rs.
+    // rust/tests/server_integration.rs; the typed extractor and error
+    // taxonomy have device-free unit tests in wire.rs.
 }

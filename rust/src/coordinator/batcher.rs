@@ -11,6 +11,12 @@
 //! `max_delay = 0` degrades to pass-through (no artificial latency), which
 //! is the paper's original behaviour; `bench_batcher_ablation` sweeps the
 //! knob to map the latency/throughput frontier.
+//!
+//! Ensemble membership is dynamic (the `/v1` control plane): the batcher
+//! holds a clone of the shared [`Ensemble`], and every flush's
+//! `Ensemble::forward` snapshots the then-current active set — so models
+//! loaded or unloaded between flushes take effect on the next batch
+//! without restarting the batcher thread.
 
 use super::ensemble::{Ensemble, EnsembleOutput, ModelOutput};
 use crate::util::Stopwatch;
@@ -187,10 +193,18 @@ fn batcher_thread(ensemble: Ensemble, config: BatcherConfig, shared: Arc<Shared>
                 }
             }
             Err(e) => {
-                // Every requester in the batch sees the failure.
+                // Every requester in the batch sees the failure. Typed API
+                // errors (e.g. `ensemble.empty` after the last model is
+                // unloaded between flushes) survive the fan-out so the HTTP
+                // layer can render their taxonomy code and status.
+                let api = e.downcast_ref::<super::wire::ApiError>().cloned();
                 let msg = format!("{e:#}");
                 for p in taken {
-                    let _ = p.reply.send(Err(anyhow!("{msg}")));
+                    let err = match &api {
+                        Some(api) => anyhow::Error::new(api.clone()),
+                        None => anyhow!("{msg}"),
+                    };
+                    let _ = p.reply.send(Err(err));
                 }
             }
         }

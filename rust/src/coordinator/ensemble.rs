@@ -2,6 +2,13 @@
 //! models behind one logical forward call (§2.1), resident on a shared
 //! device (§2.2), accepting any batch size (§2.3).
 //!
+//! Membership is **dynamic** (the `/v1` control plane's contract): the
+//! active model set lives behind a shared `RwLock`, so clones of one
+//! ensemble — the API handlers and the [`super::batcher::Batcher`] thread —
+//! observe `load`/`unload`/`PUT /v1/ensemble` changes immediately. Every
+//! `forward()` snapshots the membership once, so a batch in flight keeps a
+//! consistent model list while the next flush picks up the new set.
+//!
 //! One `forward()` fans the (already normalized, transformed-once) batch
 //! out to every active model. Jobs are submitted asynchronously so that
 //! with multiple executor workers the per-model forwards run in parallel;
@@ -11,10 +18,11 @@
 //! Batches larger than the biggest AOT bucket are chunked transparently, so
 //! the client-visible contract remains "any batch size".
 
+use super::wire::ApiError;
 use crate::runtime::tensor::{argmax_rows, softmax_rows};
 use crate::runtime::{ExecRequest, ExecutorPool, Manifest};
-use anyhow::{bail, Context, Result};
-use std::sync::Arc;
+use anyhow::{bail, Context, Error, Result};
+use std::sync::{Arc, RwLock};
 
 /// Output of one model over the full (possibly chunked) batch.
 #[derive(Debug, Clone)]
@@ -61,53 +69,121 @@ impl EnsembleOutput {
     }
 }
 
-/// The multi-model ensemble handle. Cheap to clone.
+/// The multi-model ensemble handle. Cheap to clone; clones share the
+/// active membership (the control plane mutates it at runtime).
 #[derive(Clone)]
 pub struct Ensemble {
     pool: Arc<ExecutorPool>,
     manifest: Arc<Manifest>,
-    /// Active model names (defaults to every model in the manifest).
-    models: Vec<String>,
+    /// Active model names, manifest-ordered. Shared across clones.
+    active: Arc<RwLock<Vec<String>>>,
 }
 
 impl Ensemble {
+    /// New ensemble over every model the pool currently has loaded.
     pub fn new(pool: Arc<ExecutorPool>, manifest: Arc<Manifest>) -> Ensemble {
-        let models = manifest.model_names();
+        let active = pool.loaded_models();
         Ensemble {
             pool,
             manifest,
-            models,
+            active: Arc::new(RwLock::new(active)),
         }
     }
 
-    /// Restrict the active model set (e.g. `?models=cnn_s,mlp`).
+    /// A *fixed* subset ensemble for one request (e.g. `?models=cnn_s,mlp`)
+    /// — its membership does NOT track later control-plane changes.
+    /// Validates that every name is known and currently loaded.
     pub fn with_models(&self, models: Vec<String>) -> Result<Ensemble> {
-        if models.is_empty() {
-            bail!("ensemble needs at least one model");
-        }
-        for m in &models {
-            if self.manifest.model(m).is_none() {
-                bail!("unknown model '{m}'");
-            }
-        }
+        self.validate_members(&models)?;
         Ok(Ensemble {
             pool: Arc::clone(&self.pool),
             manifest: Arc::clone(&self.manifest),
-            models,
+            active: Arc::new(RwLock::new(models)),
         })
     }
 
-    pub fn models(&self) -> &[String] {
-        &self.models
+    fn validate_members(&self, models: &[String]) -> Result<()> {
+        if models.is_empty() {
+            return Err(Error::new(ApiError::empty_ensemble_request()));
+        }
+        for m in models {
+            if self.manifest.model(m).is_none() {
+                return Err(Error::new(ApiError::unknown_model(m)));
+            }
+            if !self.pool.is_loaded(m) {
+                return Err(Error::new(ApiError::model_not_loaded(m)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot of the active membership.
+    pub fn models(&self) -> Vec<String> {
+        self.active.read().unwrap().clone()
+    }
+
+    /// Atomically replace the active membership (`PUT /v1/ensemble`).
+    /// Order follows the manifest, de-duplicated.
+    pub fn set_active(&self, models: Vec<String>) -> Result<()> {
+        self.validate_members(&models)?;
+        let ordered = self.manifest_order(&models);
+        *self.active.write().unwrap() = ordered;
+        Ok(())
+    }
+
+    /// Add one model to the active set (idempotent, manifest-ordered).
+    pub fn activate(&self, name: &str) {
+        let mut active = self.active.write().unwrap();
+        if !active.iter().any(|m| m == name) {
+            active.push(name.to_string());
+            let snapshot = active.clone();
+            *active = self.manifest_order(&snapshot);
+        }
+    }
+
+    /// Remove one model from the active set; returns whether it was active.
+    pub fn deactivate(&self, name: &str) -> bool {
+        let mut active = self.active.write().unwrap();
+        let before = active.len();
+        active.retain(|m| m != name);
+        active.len() != before
+    }
+
+    /// De-duplicate and order names by manifest position.
+    fn manifest_order(&self, names: &[String]) -> Vec<String> {
+        let mut ordered: Vec<String> = Vec::with_capacity(names.len());
+        for entry in &self.manifest.models {
+            if names.iter().any(|n| n == &entry.name) {
+                ordered.push(entry.name.clone());
+            }
+        }
+        // Names not in the manifest can't occur post-validation; keep any
+        // stragglers anyway rather than silently dropping them.
+        for n in names {
+            if !ordered.iter().any(|o| o == n) {
+                ordered.push(n.clone());
+            }
+        }
+        ordered
     }
 
     pub fn manifest(&self) -> &Arc<Manifest> {
         &self.manifest
     }
 
+    /// The device pool behind this ensemble (the control plane loads and
+    /// unloads models through it).
+    pub fn pool(&self) -> &Arc<ExecutorPool> {
+        &self.pool
+    }
+
     /// Largest batch a single device call can take (bigger batches chunk).
     pub fn max_bucket(&self) -> usize {
-        self.models
+        self.max_bucket_of(&self.models())
+    }
+
+    fn max_bucket_of(&self, models: &[String]) -> usize {
+        models
             .iter()
             .filter_map(|m| self.manifest.model(m).map(|e| e.max_bucket()))
             .min()
@@ -117,8 +193,14 @@ impl Ensemble {
     /// One ensemble forward over an already-normalized batch.
     ///
     /// `data` is row-major `(batch, H, W, C)`. Any `batch ≥ 1` is accepted
-    /// (§2.3); batches above the largest bucket are chunked.
+    /// (§2.3); batches above the largest bucket are chunked. The active
+    /// membership is snapshotted once at entry; an empty set yields a
+    /// typed `ensemble.empty` error.
     pub fn forward(&self, data: &[f32], batch: usize) -> Result<EnsembleOutput> {
+        let models = self.models();
+        if models.is_empty() {
+            return Err(Error::new(ApiError::ensemble_empty()));
+        }
         let elems = self.manifest.sample_elems();
         if batch == 0 {
             bail!("empty batch");
@@ -127,7 +209,7 @@ impl Ensemble {
             bail!("payload is {} floats, want batch {batch} x {elems}", data.len());
         }
         let classes = self.manifest.num_classes();
-        let chunk_cap = self.max_bucket();
+        let chunk_cap = self.max_bucket_of(&models);
         debug_assert!(chunk_cap > 0);
 
         // Chunk boundaries (usually a single full-batch chunk).
@@ -142,8 +224,8 @@ impl Ensemble {
         // Submit every (model, chunk) job before collecting any reply:
         // the device queue(s) stay full and multi-worker pools overlap
         // per-model forwards.
-        let mut pending = Vec::with_capacity(self.models.len() * chunks.len());
-        for model in &self.models {
+        let mut pending = Vec::with_capacity(models.len() * chunks.len());
+        for model in &models {
             let handle = self.pool.handle(); // round-robin per model
             for &(off, len) in &chunks {
                 let rx = handle
@@ -157,8 +239,7 @@ impl Ensemble {
             }
         }
 
-        let mut per_model: Vec<ModelOutput> = self
-            .models
+        let mut per_model: Vec<ModelOutput> = models
             .iter()
             .map(|m| ModelOutput {
                 model: m.clone(),
@@ -170,16 +251,35 @@ impl Ensemble {
             })
             .collect();
 
+        let mut evicted: Vec<String> = Vec::new();
         for (model, rx) in pending {
-            let resp = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("executor dropped job for {model}"))?
-                .with_context(|| format!("inference failed for {model}"))?;
+            let resp = match rx.recv() {
+                Ok(Ok(resp)) => resp,
+                Ok(Err(e)) => {
+                    // A model unloaded between our snapshot and execution:
+                    // degrade to the remaining members instead of failing
+                    // the whole (possibly coalesced) batch. Residency is
+                    // the right test — a merely *deactivated* model that
+                    // fails for a real device reason must still surface.
+                    if !self.pool.is_loaded(&model) {
+                        evicted.push(model);
+                        continue;
+                    }
+                    return Err(e).with_context(|| format!("inference failed for {model}"));
+                }
+                Err(_) => bail!("executor dropped job for {model}"),
+            };
             let out = per_model.iter_mut().find(|m| m.model == model).unwrap();
             out.logits.extend_from_slice(&resp.logits);
             out.buckets.push(resp.bucket);
             out.exec_micros += resp.exec_micros;
             out.queue_micros += resp.queue_micros;
+        }
+        if !evicted.is_empty() {
+            per_model.retain(|m| !evicted.contains(&m.model));
+        }
+        if per_model.is_empty() {
+            return Err(Error::new(ApiError::ensemble_empty()));
         }
 
         // Post-process: probabilities + argmax per row.

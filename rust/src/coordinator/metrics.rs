@@ -50,6 +50,17 @@ impl Metrics {
         self.hists.lock().unwrap().get(name).cloned()
     }
 
+    /// Router-middleware recording: request + status-class counters, plus
+    /// one latency histogram per matched route pattern
+    /// (`/v1/predict` → `route_v1_predict_us`).
+    pub fn observe_route(&self, route: Option<&str>, status: u16, micros: u64) {
+        self.inc("http_requests_total");
+        self.inc(&format!("http_status_{}xx", status / 100));
+        if let Some(route) = route {
+            self.observe_micros(&format!("route{}_us", sanitize_route(route)), micros);
+        }
+    }
+
     /// Prometheus-style text exposition.
     pub fn render_text(&self) -> String {
         let mut out = String::new();
@@ -110,6 +121,15 @@ impl Metrics {
     }
 }
 
+/// Route pattern → metric-name fragment: every non-alphanumeric char
+/// becomes `_` (`/v1/models/:name/predict` → `_v1_models__name_predict`).
+fn sanitize_route(route: &str) -> String {
+    route
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +174,17 @@ mod tests {
         let v = m.render_json();
         assert_eq!(v.path(&["counters", "a"]).unwrap().as_u64(), Some(1));
         assert_eq!(v.path(&["latencies", "l", "count"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn route_observation() {
+        let m = Metrics::new();
+        m.observe_route(Some("/v1/predict"), 200, 150);
+        m.observe_route(None, 404, 10);
+        assert_eq!(m.counter("http_requests_total"), 2);
+        assert_eq!(m.counter("http_status_2xx"), 1);
+        assert_eq!(m.counter("http_status_4xx"), 1);
+        assert_eq!(m.hist("route_v1_predict_us").unwrap().count(), 1);
     }
 
     #[test]

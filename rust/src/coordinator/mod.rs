@@ -4,7 +4,10 @@
 //! * [`policy`] — sensitivity-policy fusion (§2.1)
 //! * [`batcher`] — flexible/dynamic batching (§2.3, extended to
 //!   cross-request coalescing)
-//! * [`api`] — the REST surface (Fig. 1)
+//! * [`api`] — the REST surface: versioned `/v1` data + control planes
+//!   with runtime model lifecycle, plus legacy aliases (Fig. 1)
+//! * [`wire`] — typed request extractors, response rendering, and the
+//!   structured error taxonomy ([`wire::ApiError`])
 //! * [`metrics`] — counters + latency histograms (`/metrics`)
 //! * [`serve`] — one-call server bootstrap used by `main.rs` and the
 //!   examples
@@ -14,12 +17,14 @@ pub mod batcher;
 pub mod ensemble;
 pub mod metrics;
 pub mod policy;
+pub mod wire;
 
 pub use api::{build_router, ServerState};
 pub use batcher::{Batcher, BatcherConfig, BatchStats};
 pub use ensemble::{Ensemble, EnsembleOutput, ModelOutput};
 pub use metrics::Metrics;
 pub use policy::{Confusion, Policy};
+pub use wire::{ApiError, PredictRequest};
 
 use crate::config::ServeConfig;
 use crate::http::{Server, ServerHandle};
@@ -38,6 +43,13 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
     let manifest = Arc::new(
         Manifest::load(&config.artifacts).context("loading artifact manifest")?,
     );
+    if let Some(models) = &config.models {
+        for m in models {
+            if manifest.model(m).is_none() {
+                anyhow::bail!("unknown model '{m}' in config (not in the manifest)");
+            }
+        }
+    }
     if config.verify_sha {
         manifest.verify_all().context("artifact provenance check")?;
     }
@@ -47,19 +59,25 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
             ExecutorOptions {
                 models: config.models.clone(),
                 buckets: None,
-                verify_sha: false, // already done above when enabled
+                // Startup verified everything above when enabled — don't
+                // hash each artifact again per worker at boot. Runtime
+                // `POST /v1/models/:name/load` still re-verifies.
+                verify_sha: false,
+                verify_on_load: config.verify_sha,
                 warmup: config.warmup,
             },
             config.device_workers,
         )
         .context("spawning device executors")?,
     );
-    let mut ensemble = Ensemble::new(pool, Arc::clone(&manifest));
-    if let Some(models) = &config.models {
-        ensemble = ensemble.with_models(models.clone())?;
-    }
+    // The ensemble's active set starts as everything the pool loaded and
+    // evolves at runtime via the `/v1` control plane.
+    let ensemble = Ensemble::new(pool, Arc::clone(&manifest));
     let state = ServerState::new(ensemble, config.batcher)?;
-    let router = build_router(Arc::clone(&state));
+    let mut router = build_router(Arc::clone(&state));
+    if config.access_log {
+        router.observe(Arc::new(crate::http::router::AccessLog));
+    }
     let handle = Server::spawn(&config.addr, config.http_workers, router.into_handler())
         .context("starting HTTP server")?;
     Ok((handle, state))

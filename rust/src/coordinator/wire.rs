@@ -1,0 +1,521 @@
+//! Typed wire layer for the `/v1` REST surface: the structured error
+//! taxonomy ([`ApiError`]), the `/predict` request extractor
+//! ([`PredictRequest`] — content negotiation for `data` / `pgm_b64`), and
+//! the paper-format response renderer. Replaces the ad-hoc `parse_predict`
+//! so the ensemble route, the single-model fast path, and the legacy
+//! aliases all share one request/response vocabulary.
+//!
+//! Every error carries a stable machine-readable code (README documents
+//! the full taxonomy):
+//!
+//! | code                        | status | meaning                         |
+//! |-----------------------------|--------|---------------------------------|
+//! | `bad_input.malformed_json`  | 400*   | body is not valid JSON          |
+//! | `bad_input.missing_input`   | 422    | neither `data` nor `pgm_b64`    |
+//! | `bad_input.shape_mismatch`  | 422    | payload length vs batch x elems |
+//! | `bad_input.bad_value`       | 422    | wrong type / empty / non-finite |
+//! | `bad_input.bad_pgm`         | 422    | undecodable `pgm_b64` frame     |
+//! | `bad_input.bad_policy`      | 422    | unparsable/inapplicable policy  |
+//! | `bad_input.unknown_target`  | 422    | `target` not a known class      |
+//! | `bad_input.empty_ensemble`  | 422    | requested empty model set       |
+//! | `model.unknown`             | 404    | model not in the manifest       |
+//! | `model.not_loaded`          | 409    | model known but not resident    |
+//! | `model.load_failed`         | 500    | runtime compile/load failure    |
+//! | `ensemble.empty`            | 503    | no active models to serve       |
+//! | `route.not_found`           | 404    | no such route                   |
+//! | `route.method_not_allowed`  | 405    | path matched, method didn't     |
+//! | `internal`                  | 500    | unexpected server failure       |
+//!
+//! (*) Legacy unversioned routes flatten every predict-path status to the
+//! seed's 422 while keeping the code — see the README legacy-alias policy.
+
+use super::batcher::BatchStats;
+use super::ensemble::EnsembleOutput;
+use super::policy::Policy;
+use crate::http::{Request, Response};
+use crate::json::{self, Value};
+use crate::runtime::Manifest;
+use std::fmt;
+
+/// A structured API failure: HTTP status + stable machine-readable code.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl ApiError {
+    fn new(status: u16, code: &'static str, message: impl Into<String>) -> ApiError {
+        ApiError {
+            status,
+            code,
+            message: message.into(),
+        }
+    }
+
+    pub fn malformed_json(detail: impl fmt::Display) -> ApiError {
+        Self::new(400, "bad_input.malformed_json", format!("body must be JSON: {detail}"))
+    }
+
+    pub fn missing_input() -> ApiError {
+        Self::new(
+            422,
+            "bad_input.missing_input",
+            "missing 'data' (flat f32 array, row-major BxHxWxC) or 'pgm_b64' \
+             (array of base64 binary-PGM frames)",
+        )
+    }
+
+    pub fn shape_mismatch(detail: impl Into<String>) -> ApiError {
+        Self::new(422, "bad_input.shape_mismatch", detail)
+    }
+
+    pub fn bad_value(detail: impl Into<String>) -> ApiError {
+        Self::new(422, "bad_input.bad_value", detail)
+    }
+
+    pub fn bad_pgm(detail: impl Into<String>) -> ApiError {
+        Self::new(422, "bad_input.bad_pgm", detail)
+    }
+
+    pub fn bad_policy(detail: impl fmt::Display) -> ApiError {
+        Self::new(422, "bad_input.bad_policy", detail.to_string())
+    }
+
+    pub fn unknown_target(target: &str) -> ApiError {
+        Self::new(
+            422,
+            "bad_input.unknown_target",
+            format!("unknown target class '{target}'"),
+        )
+    }
+
+    pub fn empty_ensemble_request() -> ApiError {
+        Self::new(
+            422,
+            "bad_input.empty_ensemble",
+            "requested model set is empty (need at least one model)",
+        )
+    }
+
+    pub fn unknown_model(name: &str) -> ApiError {
+        Self::new(404, "model.unknown", format!("unknown model '{name}'"))
+    }
+
+    pub fn model_not_loaded(name: &str) -> ApiError {
+        Self::new(
+            409,
+            "model.not_loaded",
+            format!("model '{name}' is not loaded (POST /v1/models/{name}/load first)"),
+        )
+    }
+
+    pub fn load_failed(name: &str, detail: impl fmt::Display) -> ApiError {
+        Self::new(
+            500,
+            "model.load_failed",
+            format!("loading '{name}' failed: {detail}"),
+        )
+    }
+
+    pub fn ensemble_empty() -> ApiError {
+        Self::new(
+            503,
+            "ensemble.empty",
+            "no active models in the ensemble (load a model or PUT /v1/ensemble)",
+        )
+    }
+
+    pub fn internal(detail: impl fmt::Display) -> ApiError {
+        Self::new(500, "internal", detail.to_string())
+    }
+
+    /// Recover a typed error that travelled through `anyhow` (e.g. across
+    /// the batcher's fan-out); anything untyped becomes `internal`.
+    pub fn from_anyhow(e: anyhow::Error) -> ApiError {
+        match e.downcast_ref::<ApiError>() {
+            Some(api) => api.clone(),
+            None => ApiError::internal(format!("{e:#}")),
+        }
+    }
+
+    /// Render the uniform `{"error": {"code", "message"}}` envelope.
+    pub fn to_response(&self) -> Response {
+        Response::coded_error(self.status, self.code, &self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Parsed, validated `/v1/predict` (and single-model predict) request.
+///
+/// Flag precedence is uniform for `models`, `policy`, `target`, `detail`
+/// and `normalized`: a **non-empty** query parameter overrides the body
+/// field; an empty or absent query parameter falls back to the body.
+pub struct PredictRequest {
+    /// Flat row-major `(batch, H, W, C)` input, not yet normalized unless
+    /// `normalized` is set.
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub normalized: bool,
+    /// Explicit model subset (None = the active ensemble).
+    pub models: Option<Vec<String>>,
+    pub policy: Option<Policy>,
+    /// Fusion target: `(class name, class index)`, validated at parse time.
+    pub target: Option<(String, usize)>,
+    pub detail: bool,
+}
+
+/// Query-param override rule: present AND non-empty wins; empty = unset.
+fn query_override<'r>(req: &'r Request, name: &str) -> Option<&'r str> {
+    req.query_param(name).filter(|v| !v.is_empty())
+}
+
+impl PredictRequest {
+    /// Parse + validate one predict request against the manifest contract.
+    pub fn parse(manifest: &Manifest, req: &Request) -> Result<PredictRequest, ApiError> {
+        let body = req.json_body().map_err(ApiError::malformed_json)?;
+
+        // Content negotiation: raw f32 tensor vs base64 binary-PGM frames.
+        let data = match (body.get("data"), body.get("pgm_b64")) {
+            (Some(_), Some(_)) => {
+                return Err(ApiError::bad_value(
+                    "pass either 'data' or 'pgm_b64', not both",
+                ))
+            }
+            (Some(d), None) => d
+                .as_f32_vec()
+                .ok_or_else(|| ApiError::bad_value("'data' must be a numeric array"))?,
+            (None, Some(frames)) => decode_pgm_frames(manifest, frames)?,
+            (None, None) => return Err(ApiError::missing_input()),
+        };
+        if data.is_empty() {
+            return Err(ApiError::bad_value("'data' is empty"));
+        }
+        if !data.iter().all(|v| v.is_finite()) {
+            return Err(ApiError::bad_value("'data' contains non-finite values"));
+        }
+
+        let elems = manifest.sample_elems();
+        let batch = match body.get("batch") {
+            Some(b) => b
+                .as_usize()
+                .ok_or_else(|| ApiError::bad_value("'batch' must be a non-negative integer"))?,
+            None => {
+                if data.len() % elems != 0 {
+                    return Err(ApiError::shape_mismatch(format!(
+                        "'data' length {} is not a multiple of sample size {elems}; \
+                         pass 'batch' explicitly",
+                        data.len()
+                    )));
+                }
+                data.len() / elems
+            }
+        };
+        if batch == 0 {
+            return Err(ApiError::bad_value("batch must be ≥ 1"));
+        }
+        if data.len() != batch * elems {
+            return Err(ApiError::shape_mismatch(format!(
+                "'data' length {} != batch {batch} x {elems} elems",
+                data.len()
+            )));
+        }
+
+        let normalized = match query_override(req, "normalized") {
+            Some(v) => v == "1" || v == "true",
+            None => body
+                .get("normalized")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
+        };
+
+        let models = match query_override(req, "models") {
+            Some(csv) => Some(
+                csv.split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect::<Vec<_>>(),
+            ),
+            None => match body.get("models") {
+                None => None,
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| ApiError::bad_value("'models' must be an array"))?;
+                    let names = arr
+                        .iter()
+                        .map(|m| {
+                            m.as_str().map(str::to_string).ok_or_else(|| {
+                                ApiError::bad_value("'models' entries must be strings")
+                            })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Some(names)
+                }
+            },
+        };
+        let models = models.filter(|names| !names.is_empty());
+
+        let policy = match query_override(req, "policy")
+            .or_else(|| body.get("policy").and_then(Value::as_str))
+        {
+            None => None,
+            Some(p) => Some(Policy::parse(p).map_err(ApiError::bad_policy)?),
+        };
+        let target = query_override(req, "target")
+            .or_else(|| body.get("target").and_then(Value::as_str))
+            .map(str::to_string);
+        if policy.is_some() && target.is_none() {
+            return Err(ApiError::bad_policy("'policy' requires 'target' (a class name)"));
+        }
+        let target = match target {
+            None => None,
+            Some(name) => {
+                let idx = manifest
+                    .classes
+                    .iter()
+                    .position(|c| c == &name)
+                    .ok_or_else(|| ApiError::unknown_target(&name))?;
+                Some((name, idx))
+            }
+        };
+
+        let detail = match query_override(req, "detail") {
+            Some(v) => v == "1" || v == "true",
+            None => body.get("detail").and_then(Value::as_bool).unwrap_or(false),
+        };
+
+        Ok(PredictRequest {
+            data,
+            batch,
+            normalized,
+            models,
+            policy,
+            target,
+            detail,
+        })
+    }
+}
+
+/// Decode `pgm_b64` camera frames (§2.3 wire format: base64 binary PGM,
+/// one per frame) into the flat f32 batch. Dimensions must match the
+/// manifest's input shape.
+fn decode_pgm_frames(manifest: &Manifest, frames: &Value) -> Result<Vec<f32>, ApiError> {
+    let arr = frames
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_value("'pgm_b64' must be an array of base64 strings"))?;
+    if manifest.input_shape.len() != 3 || manifest.input_shape[2] != 1 {
+        return Err(ApiError::bad_pgm("pgm input requires single-channel models"));
+    }
+    let (want_h, want_w) = (manifest.input_shape[0], manifest.input_shape[1]);
+    let mut data = Vec::with_capacity(arr.len() * want_h * want_w);
+    for (i, frame) in arr.iter().enumerate() {
+        let b64 = frame
+            .as_str()
+            .ok_or_else(|| ApiError::bad_pgm(format!("pgm_b64[{i}] must be a string")))?;
+        let bytes = crate::util::base64::decode(b64)
+            .map_err(|e| ApiError::bad_pgm(format!("pgm_b64[{i}]: {e}")))?;
+        let (w, h, pixels) = crate::imagepipe::decode_pgm(&bytes)
+            .map_err(|e| ApiError::bad_pgm(format!("pgm_b64[{i}]: {e}")))?;
+        if (h, w) != (want_h, want_w) {
+            return Err(ApiError::shape_mismatch(format!(
+                "pgm_b64[{i}] is {w}x{h}, model expects {want_w}x{want_h}"
+            )));
+        }
+        data.extend(pixels);
+    }
+    Ok(data)
+}
+
+/// Render the ensemble response in the paper's §2.3 wire format
+/// (`"model_<name>": ["class", ...]` per model), plus the opt-in
+/// server-side fusion and diagnostics blocks.
+pub fn render_predict(
+    manifest: &Manifest,
+    input: &PredictRequest,
+    output: &EnsembleOutput,
+    stats: Option<BatchStats>,
+) -> Result<Value, ApiError> {
+    let mut members: Vec<(String, Value)> = Vec::with_capacity(output.per_model.len() + 2);
+    for m in &output.per_model {
+        let names = output
+            .class_names(manifest, &m.model)
+            .expect("model present in its own output");
+        members.push((
+            format!("model_{}", m.model),
+            Value::Arr(names.into_iter().map(Value::from).collect()),
+        ));
+    }
+
+    // Opt-in server-side sensitivity fusion (§2.1).
+    if let (Some(policy), Some((target, target_idx))) = (&input.policy, &input.target) {
+        let votes = output.votes_for_class(*target_idx); // [model][row]
+        let mut detections = Vec::with_capacity(output.batch);
+        for row in 0..output.batch {
+            let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
+            detections.push(Value::Bool(
+                policy.fuse(&row_votes).map_err(ApiError::bad_policy)?,
+            ));
+        }
+        members.push((
+            "ensemble".to_string(),
+            json::obj([
+                ("policy", Value::from(policy.to_string())),
+                ("target", Value::from(target.as_str())),
+                ("detections", Value::Arr(detections)),
+            ]),
+        ));
+    }
+
+    if input.detail {
+        let per_model: Vec<(String, Value)> = output
+            .per_model
+            .iter()
+            .map(|m| {
+                (
+                    m.model.clone(),
+                    json::obj([
+                        (
+                            "probs",
+                            Value::Arr(m.preds.iter().map(|(_, p)| Value::from(*p)).collect()),
+                        ),
+                        (
+                            "buckets",
+                            Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
+                        ),
+                        ("exec_us", Value::from(m.exec_micros)),
+                        ("queue_us", Value::from(m.queue_micros)),
+                    ]),
+                )
+            })
+            .collect();
+        let mut detail = vec![
+            ("batch".to_string(), Value::from(output.batch)),
+            ("models".to_string(), Value::Obj(per_model)),
+        ];
+        if let Some(st) = stats {
+            detail.push((
+                "batching".to_string(),
+                json::obj([
+                    ("coalesced_rows", Value::from(st.coalesced_rows)),
+                    ("coalesced_requests", Value::from(st.coalesced_requests)),
+                    ("wait_us", Value::from(st.wait_micros)),
+                ]),
+            ));
+        }
+        members.push(("detail".to_string(), Value::Obj(detail)));
+    }
+
+    Ok(Value::Obj(members))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let v = json::parse(
+            r#"{
+              "format_version": 1,
+              "input_shape": [2, 2, 1],
+              "classes": ["blank", "cross"],
+              "normalize": {"mean": 0.0, "std": 1.0},
+              "buckets": [1, 4],
+              "models": {
+                "m1": {
+                  "param_count": 1, "test_acc": 0.9, "params_sha256": "ab",
+                  "buckets": {"1": {"file": "f", "sha256": "x", "bytes": 1}}
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap()
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request::new("POST", path, body.as_bytes().to_vec())
+    }
+
+    #[test]
+    fn parse_minimal_data() {
+        let m = manifest();
+        let r = PredictRequest::parse(&m, &post("/v1/predict", r#"{"data":[1,2,3,4]}"#)).unwrap();
+        assert_eq!(r.batch, 1);
+        assert!(!r.normalized && !r.detail);
+        assert!(r.models.is_none() && r.policy.is_none() && r.target.is_none());
+    }
+
+    #[test]
+    fn errors_carry_stable_codes() {
+        let m = manifest();
+        let e = PredictRequest::parse(&m, &post("/v1/predict", "nope")).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_input.malformed_json"));
+        let e = PredictRequest::parse(&m, &post("/v1/predict", "{}")).unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.missing_input"));
+        let e =
+            PredictRequest::parse(&m, &post("/v1/predict", r#"{"data":[1,2,3],"batch":1}"#))
+                .unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.shape_mismatch"));
+        let e = PredictRequest::parse(
+            &m,
+            &post("/v1/predict", r#"{"data":[1,2,3,4],"policy":"any","target":"dog"}"#),
+        )
+        .unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.unknown_target"));
+    }
+
+    #[test]
+    fn query_overrides_body_uniformly() {
+        let m = manifest();
+        let body = r#"{"data":[1,2,3,4],"models":["m1"],"policy":"all","target":"blank"}"#;
+        let r = PredictRequest::parse(
+            &m,
+            &post("/v1/predict?models=m1&policy=any&target=cross&detail=1", body),
+        )
+        .unwrap();
+        assert_eq!(r.models, Some(vec!["m1".to_string()]));
+        assert_eq!(r.policy, Some(Policy::Any));
+        assert_eq!(r.target.as_ref().unwrap().0, "cross");
+        assert!(r.detail);
+
+        // Empty query values are "unset" → the body wins for every flag.
+        let r = PredictRequest::parse(
+            &m,
+            &post("/v1/predict?models=&policy=&target=&detail=", body),
+        )
+        .unwrap();
+        assert_eq!(r.policy, Some(Policy::All));
+        assert_eq!(r.target.as_ref().unwrap().0, "blank");
+        assert!(!r.detail);
+    }
+
+    #[test]
+    fn api_error_roundtrips_through_anyhow() {
+        let e = anyhow::Error::new(ApiError::ensemble_empty());
+        let back = ApiError::from_anyhow(e);
+        assert_eq!((back.status, back.code), (503, "ensemble.empty"));
+        let back = ApiError::from_anyhow(anyhow::anyhow!("plain"));
+        assert_eq!((back.status, back.code), (500, "internal"));
+    }
+
+    #[test]
+    fn error_envelope_renders_code() {
+        let resp = ApiError::unknown_model("x").to_response();
+        assert_eq!(resp.status, 404);
+        let v = resp.json_body().unwrap();
+        assert_eq!(
+            v.path(&["error", "code"]).unwrap().as_str(),
+            Some("model.unknown")
+        );
+    }
+}

@@ -2,6 +2,7 @@
 //! Used by the examples, integration tests and the load generator.
 
 use super::{Request, Response};
+use crate::json::Value;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -45,6 +46,59 @@ impl Client {
 
     pub fn post_json(&mut self, path: &str, v: &crate::json::Value) -> Result<Response> {
         self.post(path, crate::json::to_string(v).into_bytes())
+    }
+
+    pub fn put(&mut self, path: &str, body: Vec<u8>) -> Result<Response> {
+        let mut req = Request::new("PUT", path, body);
+        req.headers
+            .push(("content-type".into(), "application/json".into()));
+        self.request(&req)
+    }
+
+    pub fn put_json(&mut self, path: &str, v: &crate::json::Value) -> Result<Response> {
+        self.put(path, crate::json::to_string(v).into_bytes())
+    }
+
+    // ---- typed /v1 control-plane helpers ---------------------------------
+    // Each returns the parsed response body on 2xx, and bails with the
+    // server's taxonomy `error.code` + message otherwise.
+
+    /// `POST /v1/models/:name/load` — compile + admit a model at runtime.
+    pub fn load_model(&mut self, name: &str) -> Result<Value> {
+        let resp = self.post(&format!("/v1/models/{name}/load"), Vec::new())?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `POST /v1/models/:name/unload` — evict a model at runtime.
+    pub fn unload_model(&mut self, name: &str) -> Result<Value> {
+        let resp = self.post(&format!("/v1/models/{name}/unload"), Vec::new())?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `PUT /v1/ensemble` — atomically set the active membership.
+    pub fn set_ensemble(&mut self, models: &[&str]) -> Result<Value> {
+        let body = crate::json::obj([(
+            "models",
+            Value::Arr(models.iter().map(|&m| Value::from(m)).collect()),
+        )]);
+        let resp = self.put_json("/v1/ensemble", &body)?;
+        Self::expect_2xx(resp)
+    }
+
+    fn expect_2xx(resp: Response) -> Result<Value> {
+        let body = resp.json_body().unwrap_or(Value::Null);
+        if (200..300).contains(&resp.status) {
+            return Ok(body);
+        }
+        let code = body
+            .path(&["error", "code"])
+            .and_then(Value::as_str)
+            .unwrap_or("unknown");
+        let message = body
+            .path(&["error", "message"])
+            .and_then(Value::as_str)
+            .unwrap_or("");
+        bail!("{code} (HTTP {}): {message}", resp.status)
     }
 
     /// Send a request, retrying once on a broken keep-alive connection.

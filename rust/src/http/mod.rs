@@ -31,8 +31,9 @@ pub const MAX_HEADER: usize = 16 << 10;
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
-    /// Path without the query string, percent-decoding NOT applied (the API
-    /// uses plain ASCII paths).
+    /// Path without the query string, as received on the wire. Percent-
+    /// decoding is applied per-segment at routing time (see
+    /// [`router::percent_decode`]), not here.
     pub path: String,
     /// Parsed query pairs, in order.
     pub query: Vec<(String, String)>,
@@ -109,7 +110,9 @@ impl Response {
         r
     }
 
-    /// Uniform error envelope: `{"error": {"code", "message"}}`.
+    /// Uniform error envelope: `{"error": {"code", "message"}}` with the
+    /// numeric status echoed as the code (legacy transport-level errors;
+    /// API-level errors use [`Response::coded_error`] with a taxonomy code).
     pub fn error(status: u16, message: &str) -> Response {
         Response::json(
             status,
@@ -117,6 +120,21 @@ impl Response {
                 "error",
                 json::obj([
                     ("code", Value::from(status as u64)),
+                    ("message", Value::from(message)),
+                ]),
+            )]),
+        )
+    }
+
+    /// Uniform error envelope with a stable machine-readable string code:
+    /// `{"error": {"code": "model.not_loaded", "message": ...}}`.
+    pub fn coded_error(status: u16, code: &str, message: &str) -> Response {
+        Response::json(
+            status,
+            &json::obj([(
+                "error",
+                json::obj([
+                    ("code", Value::from(code)),
                     ("message", Value::from(message)),
                 ]),
             )]),

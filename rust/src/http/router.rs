@@ -1,16 +1,70 @@
-//! Tiny path router: exact segments plus `:param` captures.
+//! Path router + middleware stack.
+//!
+//! Routing: exact segments plus `:param` captures, with path segments
+//! percent-decoded **before** matching (so `/v1/models/cnn%5Fs/predict`
+//! captures `cnn_s`).
+//!
+//! Middleware (applied around every dispatch, in order):
+//! 1. request-id — echo the client's `x-request-id` or generate one; the
+//!    id is set on the response and handed to observers;
+//! 2. panic guard — a panicking handler renders a uniform 500 instead of
+//!    poisoning the connection worker;
+//! 3. uniform JSON error rendering — unmatched routes answer with the
+//!    `{"error": {"code", "message"}}` envelope (`route.not_found` /
+//!    `route.method_not_allowed`);
+//! 4. observers — per-request hooks ([`RouterObserver`]) for per-route
+//!    latency/metrics recording and access logging.
 
 use super::{Request, Response};
+use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-type RouteHandler = Arc<dyn Fn(&Request, &Params) -> Response + Send + Sync>;
+/// A route handler behind an `Arc` so multiple patterns (e.g. a `/v1`
+/// route and its legacy alias) can share one implementation.
+pub type RouteHandler = Arc<dyn Fn(&Request, &Params) -> Response + Send + Sync>;
 
-/// Captured `:param` values for one match.
+/// Captured `:param` values for one match (percent-decoded).
 pub type Params = HashMap<String, String>;
+
+/// One completed request, as seen by middleware observers.
+pub struct RequestInfo<'a> {
+    pub request_id: &'a str,
+    pub method: &'a str,
+    pub path: &'a str,
+    /// Matched route pattern (`None` when no route matched).
+    pub route: Option<&'a str>,
+    pub status: u16,
+    pub latency_micros: u64,
+}
+
+/// Middleware hook invoked once per request, after the response is built.
+pub trait RouterObserver: Send + Sync {
+    fn on_request(&self, info: &RequestInfo<'_>);
+}
+
+/// Access-log middleware: one line per request on stderr.
+pub struct AccessLog;
+
+impl RouterObserver for AccessLog {
+    fn on_request(&self, info: &RequestInfo<'_>) {
+        eprintln!(
+            "{} {} {} -> {} {}us rid={}",
+            info.method,
+            info.path,
+            info.route.unwrap_or("-"),
+            info.status,
+            info.latency_micros,
+            info.request_id,
+        );
+    }
+}
 
 struct Route {
     method: String,
+    pattern: String,
     segments: Vec<Segment>,
     handler: RouteHandler,
 }
@@ -25,6 +79,7 @@ enum Segment {
 #[derive(Default)]
 pub struct Router {
     routes: Vec<Route>,
+    observers: Vec<Arc<dyn RouterObserver>>,
 }
 
 impl Router {
@@ -37,6 +92,11 @@ impl Router {
     where
         F: Fn(&Request, &Params) -> Response + Send + Sync + 'static,
     {
+        self.add_shared(method, pattern, Arc::new(handler));
+    }
+
+    /// Register a shared handler under one more pattern (route aliasing).
+    pub fn add_shared(&mut self, method: &str, pattern: &str, handler: RouteHandler) {
         let segments = pattern
             .trim_matches('/')
             .split('/')
@@ -51,33 +111,71 @@ impl Router {
             .collect();
         self.routes.push(Route {
             method: method.to_uppercase(),
+            pattern: pattern.to_string(),
             segments,
-            handler: Arc::new(handler),
+            handler,
         });
     }
 
-    /// Dispatch a request; 404 when no pattern matches, 405 when the path
-    /// matches but the method doesn't.
+    /// Register a middleware observer (metrics recorder, access log, ...).
+    pub fn observe(&mut self, observer: Arc<dyn RouterObserver>) {
+        self.observers.push(observer);
+    }
+
+    /// Dispatch a request through the middleware stack.
     pub fn dispatch(&self, req: &Request) -> Response {
-        let path_segments: Vec<&str> = req
+        let sw = Stopwatch::start();
+        let request_id = req
+            .header("x-request-id")
+            .map(str::to_string)
+            .unwrap_or_else(next_request_id);
+        let (mut resp, route) = self.route(req);
+        resp.headers
+            .push(("x-request-id".to_string(), request_id.clone()));
+        let info = RequestInfo {
+            request_id: &request_id,
+            method: &req.method,
+            path: &req.path,
+            route,
+            status: resp.status,
+            latency_micros: sw.elapsed_micros(),
+        };
+        for obs in &self.observers {
+            obs.on_request(&info);
+        }
+        resp
+    }
+
+    /// Core routing: 404/405 render the uniform JSON error envelope; a
+    /// panicking handler is caught and rendered as a 500.
+    fn route(&self, req: &Request) -> (Response, Option<&str>) {
+        let path_segments: Vec<String> = req
             .path
             .trim_matches('/')
             .split('/')
             .filter(|s| !s.is_empty())
+            .map(percent_decode)
             .collect();
         let mut path_matched = false;
         for route in &self.routes {
             if let Some(params) = match_segments(&route.segments, &path_segments) {
                 if route.method == req.method {
-                    return (route.handler)(req, &params);
+                    let resp = catch_unwind(AssertUnwindSafe(|| (route.handler)(req, &params)))
+                        .unwrap_or_else(|_| {
+                            Response::coded_error(500, "internal", "handler panicked")
+                        });
+                    return (resp, Some(route.pattern.as_str()));
                 }
                 path_matched = true;
             }
         }
         if path_matched {
-            Response::error(405, "method not allowed")
+            (
+                Response::coded_error(405, "route.method_not_allowed", "method not allowed"),
+                None,
+            )
         } else {
-            Response::not_found()
+            (Response::coded_error(404, "route.not_found", "no such route"), None)
         }
     }
 
@@ -88,7 +186,7 @@ impl Router {
     }
 }
 
-fn match_segments(pattern: &[Segment], path: &[&str]) -> Option<Params> {
+fn match_segments(pattern: &[Segment], path: &[String]) -> Option<Params> {
     if pattern.len() != path.len() {
         return None;
     }
@@ -98,16 +196,58 @@ fn match_segments(pattern: &[Segment], path: &[&str]) -> Option<Params> {
             Segment::Literal(lit) if lit == part => {}
             Segment::Literal(_) => return None,
             Segment::Param(name) => {
-                params.insert(name.clone(), part.to_string());
+                params.insert(name.clone(), part.clone());
             }
         }
     }
     Some(params)
 }
 
+/// Decode `%XX` escapes in one path segment. `+` is NOT special in paths
+/// (that's a query-string convention); malformed escapes pass through
+/// verbatim rather than failing the whole request.
+pub fn percent_decode(segment: &str) -> String {
+    let bytes = segment.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' && i + 2 < bytes.len() {
+            if let (Some(hi), Some(lo)) = (hex_val(bytes[i + 1]), hex_val(bytes[i + 2])) {
+                out.push(hi * 16 + lo);
+                i += 3;
+                continue;
+            }
+        }
+        out.push(bytes[i]);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn hex_val(b: u8) -> Option<u8> {
+    match b {
+        b'0'..=b'9' => Some(b - b'0'),
+        b'a'..=b'f' => Some(b - b'a' + 10),
+        b'A'..=b'F' => Some(b - b'A' + 10),
+        _ => None,
+    }
+}
+
+static REQUEST_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Process-unique request id: `<pid hex>-<sequence>`.
+fn next_request_id() -> String {
+    format!(
+        "{:x}-{:06}",
+        std::process::id(),
+        REQUEST_SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     fn router() -> Router {
         let mut r = Router::new();
@@ -151,5 +291,84 @@ mod tests {
     fn length_mismatch_no_match() {
         assert_eq!(router().dispatch(&get("/models")).status, 404);
         assert_eq!(router().dispatch(&get("/models/a/b")).status, 404);
+    }
+
+    #[test]
+    fn unmatched_routes_render_coded_errors() {
+        let v = router().dispatch(&get("/nope")).json_body().unwrap();
+        assert_eq!(
+            v.path(&["error", "code"]).unwrap().as_str(),
+            Some("route.not_found")
+        );
+        let v = router().dispatch(&get("/predict")).json_body().unwrap();
+        assert_eq!(
+            v.path(&["error", "code"]).unwrap().as_str(),
+            Some("route.method_not_allowed")
+        );
+    }
+
+    #[test]
+    fn percent_decoded_path_segments() {
+        // Encoded characters inside a :param capture decode before capture.
+        assert_eq!(router().dispatch(&get("/models/cnn%5Fs")).body, b"model=cnn_s");
+        assert_eq!(router().dispatch(&get("/models/a%20b")).body, b"model=a b");
+        // Literal segments decode too.
+        assert_eq!(router().dispatch(&get("/%68ealthz")).status, 200);
+        // Malformed escapes pass through verbatim.
+        assert_eq!(router().dispatch(&get("/models/a%2")).body, b"model=a%2");
+        assert_eq!(router().dispatch(&get("/models/a%zz")).body, b"model=a%zz");
+    }
+
+    #[test]
+    fn request_id_generated_and_echoed() {
+        let r = router();
+        let resp = r.dispatch(&get("/healthz"));
+        assert!(resp.header("x-request-id").is_some());
+        let mut req = get("/healthz");
+        req.headers.push(("x-request-id".into(), "rid-42".into()));
+        assert_eq!(r.dispatch(&req).header("x-request-id"), Some("rid-42"));
+    }
+
+    #[test]
+    fn observers_see_route_and_status() {
+        struct Capture(Mutex<Vec<(Option<String>, u16)>>);
+        impl RouterObserver for Capture {
+            fn on_request(&self, info: &RequestInfo<'_>) {
+                self.0
+                    .lock()
+                    .unwrap()
+                    .push((info.route.map(str::to_string), info.status));
+            }
+        }
+        let capture = Arc::new(Capture(Mutex::new(Vec::new())));
+        let mut r = router();
+        r.observe(Arc::clone(&capture) as Arc<dyn RouterObserver>);
+        r.dispatch(&get("/models/x"));
+        r.dispatch(&get("/nope"));
+        let seen = capture.0.lock().unwrap();
+        assert_eq!(seen[0], (Some("/models/:name".to_string()), 200));
+        assert_eq!(seen[1], (None, 404));
+    }
+
+    #[test]
+    fn panicking_handler_renders_500() {
+        let mut r = Router::new();
+        r.add("GET", "/boom", |_, _| panic!("kaboom"));
+        let resp = r.dispatch(&get("/boom"));
+        assert_eq!(resp.status, 500);
+        assert_eq!(
+            resp.json_body().unwrap().path(&["error", "code"]).unwrap().as_str(),
+            Some("internal")
+        );
+    }
+
+    #[test]
+    fn shared_handler_aliases() {
+        let mut r = Router::new();
+        let h: RouteHandler = Arc::new(|_, _| Response::text(200, "hi"));
+        r.add_shared("GET", "/v1/hello", Arc::clone(&h));
+        r.add_shared("GET", "/hello", h);
+        assert_eq!(r.dispatch(&get("/v1/hello")).body, b"hi");
+        assert_eq!(r.dispatch(&get("/hello")).body, b"hi");
     }
 }

@@ -83,8 +83,13 @@ fn handle_connection(stream: TcpStream, handler: Handler) -> Result<()> {
             Ok(Some(req)) => req,
             Ok(None) => return Ok(()), // clean close
             Err(e) => {
-                // Malformed request: answer 400 once, then close.
-                let resp = Response::error(400, &format!("bad request: {e}"));
+                // Malformed request: answer 400 once (uniform coded JSON
+                // envelope, like every routed error), then close.
+                let resp = Response::coded_error(
+                    400,
+                    "bad_input.malformed_request",
+                    &format!("bad request: {e}"),
+                );
                 let _ = write_response(&mut writer, &resp, false);
                 return Ok(());
             }

@@ -6,6 +6,9 @@
 //! flexserve models           print the artifact manifest + provenance
 //! flexserve verify           verify artifact SHA-256s against the manifest
 //! flexserve predict          send a synthetic batch to a running server
+//! flexserve load MODEL       load a model into a running server (/v1)
+//! flexserve unload MODEL     unload a model from a running server (/v1)
+//! flexserve ensemble a,b,c   set the active membership of a running server
 //! ```
 //!
 //! Flags after the subcommand: see `config::ServeConfig::apply_cli`.
@@ -40,6 +43,9 @@ fn run(args: &[String]) -> Result<()> {
         "models" => cmd_models(rest),
         "verify" => cmd_verify(rest),
         "predict" => cmd_predict(rest),
+        "load" => cmd_lifecycle(rest, "load"),
+        "unload" => cmd_lifecycle(rest, "unload"),
+        "ensemble" => cmd_lifecycle(rest, "ensemble"),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -60,6 +66,9 @@ fn print_usage() {
            models           print the artifact manifest (provenance included)\n\
            verify           verify artifact hashes against the manifest\n\
            predict          send a synthetic frame batch to a running server\n\
+           load MODEL       POST /v1/models/MODEL/load on a running server\n\
+           unload MODEL     POST /v1/models/MODEL/unload on a running server\n\
+           ensemble a,b,c   PUT /v1/ensemble (set active membership)\n\
          \n\
          COMMON FLAGS:\n\
            --artifacts DIR      artifact directory (default: ./artifacts)\n\
@@ -67,7 +76,7 @@ fn print_usage() {
          SERVE FLAGS:\n\
            --http-workers N --device-workers N --models a,b\n\
            --no-batcher --max-batch N --batch-delay-us N\n\
-           --no-verify --no-warmup --config FILE\n\
+           --no-verify --no-warmup --access-log --config FILE\n\
          SERVE-BASELINE FLAGS:\n\
            --fixed-batch N (default 1)\n\
          PREDICT FLAGS:\n\
@@ -89,7 +98,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if config.batcher.is_some() { "on" } else { "off" },
     );
     println!("models: {}", state.ensemble.models().join(", "));
-    println!("endpoints: POST /predict | GET /models /models/:name /metrics /healthz");
+    println!(
+        "data plane:    POST /v1/predict | POST /v1/models/:name/predict | legacy POST /predict"
+    );
+    println!(
+        "control plane: POST /v1/models/:name/load|unload | PUT/GET /v1/ensemble"
+    );
+    println!(
+        "introspection: GET /v1/models /v1/models/:name /v1/metrics /v1/healthz (+ legacy aliases)"
+    );
     park_forever();
 }
 
@@ -215,6 +232,44 @@ fn cmd_predict(args: &[String]) -> Result<()> {
     println!("true labels: {:?}", labels.iter().map(|&l| workload::CLASSES[l]).collect::<Vec<_>>());
     println!("status: {}", resp.status);
     println!("{}", json::to_string_pretty(&resp.json_body()?));
+    Ok(())
+}
+
+/// `load` / `unload` / `ensemble` — the `/v1` control plane from the CLI,
+/// via the typed client helpers.
+fn cmd_lifecycle(args: &[String], action: &str) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut positional: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            other if other.starts_with("--") => bail!("unknown {action} flag '{other}'"),
+            other => positional.push(other.to_string()),
+        }
+    }
+    let usage = || {
+        format!(
+            "usage: flexserve {action} <model{}> [--addr HOST:PORT]",
+            if action == "ensemble" { ",model,..." } else { "" }
+        )
+    };
+    if positional.len() > 1 {
+        // `ensemble a b` would silently serve only `a`; demand the CSV form.
+        bail!("unexpected extra arguments {:?} — {}", &positional[1..], usage());
+    }
+    let target = positional.first().with_context(usage)?;
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = match action {
+        "load" => client.load_model(target)?,
+        "unload" => client.unload_model(target)?,
+        "ensemble" => {
+            let names: Vec<&str> = target.split(',').filter(|s| !s.is_empty()).collect();
+            client.set_ensemble(&names)?
+        }
+        _ => unreachable!("cmd_lifecycle actions"),
+    };
+    println!("{}", json::to_string_pretty(&doc));
     Ok(())
 }
 

