@@ -5,6 +5,9 @@
 #                    the Rust server compiles at boot
 #   make serve       release-build and start the ensemble server
 #   make test        tier-1 verify: release build + tests
+#   make bench       build the bench harness and smoke it against an
+#                    in-process echo target (no artifacts needed); point
+#                    it at a live server with BENCH_FLAGS='--addr ...'
 #
 # `artifacts` needs the python side (jax + the pallas kernels); the Rust
 # targets need only cargo. Device-backed Rust tests self-skip when
@@ -13,7 +16,9 @@
 PYTHON ?= python3
 ARTIFACTS ?= rust/artifacts
 
-.PHONY: artifacts serve test fmt clippy
+BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
+
+.PHONY: artifacts serve test bench fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -23,6 +28,10 @@ serve:
 
 test:
 	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --out ../BENCH_serve.json
+	@echo "wrote BENCH_serve.json"
 
 fmt:
 	cd rust && cargo fmt --check

@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             .infer(ExecRequest {
                 model: "mlp".into(),
                 batch: 1,
-                data: frame.clone(),
+                data: frame.clone().into(),
             })
             .unwrap();
         exec_us_total += r.exec_micros;

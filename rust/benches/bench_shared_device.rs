@@ -88,7 +88,7 @@ fn main() -> anyhow::Result<()> {
                     h.infer_async(ExecRequest {
                         model: m.clone(),
                         batch: BATCH,
-                        data: data.clone(),
+                        data: data.clone().into(),
                     })
                     .unwrap()
                 })

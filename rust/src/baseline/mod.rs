@@ -150,11 +150,23 @@ fn handle_model_predict(
         .iter()
         .find(|(n, _, _)| n == name)
         .ok_or_else(|| anyhow!("model '{name}' is not deployed"))?;
-    let body = req.json_body().map_err(|e| anyhow!("body must be JSON: {e}"))?;
-    let mut data = body
-        .get("data")
-        .and_then(Value::as_f32_vec)
-        .ok_or_else(|| anyhow!("missing numeric 'data'"))?;
+    // Same streaming fast path as the FlexServe data plane (fall back to
+    // the boxed parser on any structural surprise) — the baseline should
+    // lose on architecture, not on request parsing.
+    let scanned = std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(crate::coordinator::wire::scan_predict_body);
+    let (mut data, body) = match scanned {
+        Some((data, rest)) => (data, rest),
+        None => {
+            let body = req.json_body().map_err(|e| anyhow!("body must be JSON: {e}"))?;
+            let data = body
+                .get("data")
+                .and_then(Value::as_f32_vec)
+                .ok_or_else(|| anyhow!("missing numeric 'data'"))?;
+            (data, body)
+        }
+    };
     let elems = state.manifest.sample_elems();
     // Fixed-shape contract: exactly fixed_batch rows, no padding service.
     if data.len() != state.fixed_batch * elems {
@@ -173,17 +185,15 @@ fn handle_model_predict(
     let resp = handle.infer(ExecRequest {
         model: name.to_string(),
         batch: state.fixed_batch,
-        data,
+        data: data.into(),
     })?;
     let preds = argmax_rows(&resp.logits, state.manifest.num_classes());
-    let classes: Vec<Value> = preds
-        .iter()
-        .map(|(idx, _)| Value::from(state.manifest.classes[*idx].as_str()))
-        .collect();
-    Ok(Response::json(
-        200,
-        &json::obj([("predictions", Value::Arr(classes))]),
-    ))
+    let classes = json::str_array_raw(
+        preds
+            .iter()
+            .map(|(idx, _)| state.manifest.classes[*idx].as_str()),
+    );
+    Ok(Response::json(200, &json::obj([("predictions", classes)])))
 }
 
 #[cfg(test)]

@@ -1,0 +1,431 @@
+//! Closed-loop HTTP load harness behind `flexserve bench`.
+//!
+//! K keep-alive connections, each a thread running its own closed loop:
+//! pick a batch size from the configured mix, fire a pre-rendered
+//! `/v1/predict` body, record the wall-clock latency, repeat. Bodies are
+//! rendered ONCE per (connection, batch-size, variant) through the
+//! streaming float writer so the harness measures the server, not the
+//! client's JSON encoder.
+//!
+//! Deterministic mode (`iters`) drives an exact per-connection request
+//! count — that is what the smoke test and the CI step use; wall-clock
+//! mode (`duration_secs`) is for real measurements.
+
+use crate::http::{Client, Request, Response};
+use crate::json::{self, ser, Value};
+use crate::util::{Histogram, Prng, Stopwatch};
+use crate::workload;
+use anyhow::{Context, Result};
+use std::net::SocketAddr;
+use std::sync::Barrier;
+
+/// Pre-rendered body variants per (connection, batch size): enough to
+/// defeat trivial caching anywhere on the path, few enough to stay cheap.
+const BODY_VARIANTS: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub addr: SocketAddr,
+    /// Concurrent keep-alive connections (one thread each).
+    pub connections: usize,
+    /// Wall-clock run length; ignored when `iters` is set.
+    pub duration_secs: f64,
+    /// Exact measured requests per connection (deterministic mode).
+    pub iters: Option<u64>,
+    /// Unrecorded warmup requests per connection.
+    pub warmup: u64,
+    /// `(batch size, weight)` mix, sampled per request.
+    pub batch_mix: Vec<(usize, f64)>,
+    /// Request path (default `/v1/predict`).
+    pub path: String,
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            addr: "127.0.0.1:8080".parse().unwrap(),
+            connections: 4,
+            duration_secs: 10.0,
+            iters: None,
+            warmup: 20,
+            batch_mix: vec![(1, 0.7), (8, 0.2), (32, 0.1)],
+            path: "/v1/predict".into(),
+            seed: 0,
+        }
+    }
+}
+
+/// Merged result of one closed-loop run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub requests: u64,
+    pub rows: u64,
+    /// Responses with a non-200 status.
+    pub errors: u64,
+    pub elapsed_secs: f64,
+    pub hist: Histogram,
+    pub reconnects: u64,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    pub fn throughput_rows(&self) -> f64 {
+        self.rows as f64 / self.elapsed_secs.max(1e-9)
+    }
+}
+
+struct ConnStats {
+    requests: u64,
+    rows: u64,
+    errors: u64,
+    hist: Histogram,
+    reconnects: u64,
+    /// Wall-clock of this connection's measured loop (excludes connect
+    /// and warmup).
+    measured_secs: f64,
+}
+
+/// Render one `{"data": [...], "batch": N}` body via the streaming float
+/// writer (no `Value` boxing on the client either).
+fn predict_body(rng: &mut Prng, batch: usize) -> Vec<u8> {
+    let (data, _) = workload::make_batch(rng, batch);
+    let mut out = String::with_capacity(data.len() * 12 + 32);
+    out.push_str("{\"data\":");
+    ser::write_f32_array(&mut out, data.iter().copied());
+    out.push_str(",\"batch\":");
+    out.push_str(&batch.to_string());
+    out.push('}');
+    out.into_bytes()
+}
+
+fn build_request(path: &str, body: Vec<u8>) -> Request {
+    let mut req = Request::new("POST", path, body);
+    req.headers
+        .push(("content-type".into(), "application/json".into()));
+    req
+}
+
+/// One connection's closed loop. Connect, body pre-rendering and warmup
+/// happen BEFORE the shared barrier; the measurement clock starts after
+/// it, so throughput is computed over measured traffic only and warmup
+/// never eats into `duration_secs`.
+fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> Result<ConnStats> {
+    let salt = 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(conn_id as u64 + 1);
+    let mut rng = Prng::new(cfg.seed ^ salt);
+    // Distinct batch sizes in the mix, each with a few pre-rendered bodies.
+    let mut batches: Vec<usize> = cfg.batch_mix.iter().map(|&(b, _)| b).collect();
+    batches.sort_unstable();
+    batches.dedup();
+    let requests: Vec<(usize, Vec<Request>)> = batches
+        .iter()
+        .map(|&b| {
+            let variants = (0..BODY_VARIANTS)
+                .map(|_| build_request(&cfg.path, predict_body(&mut rng, b)))
+                .collect();
+            (b, variants)
+        })
+        .collect();
+
+    let fire = |client: &mut Client, rng: &mut Prng, n: usize| -> Result<(Response, usize)> {
+        let batch = workload::pick_weighted(rng, &cfg.batch_mix);
+        let (_, variants) = requests
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .expect("batch came from the mix");
+        let resp = client.request(&variants[n % variants.len()])?;
+        Ok((resp, batch))
+    };
+
+    let setup = (|| -> Result<Client> {
+        let mut client = Client::connect(cfg.addr)
+            .with_context(|| format!("connection {conn_id} to {}", cfg.addr))?;
+        for w in 0..cfg.warmup {
+            let _ = fire(&mut client, &mut rng, w as usize)?;
+        }
+        Ok(client)
+    })();
+    // EVERY thread reaches the barrier exactly once, success or failure —
+    // a connection that failed setup must not deadlock the others.
+    start_line.wait();
+    let mut client = setup?;
+
+    let measure = Stopwatch::start();
+    let mut stats = ConnStats {
+        requests: 0,
+        rows: 0,
+        errors: 0,
+        hist: Histogram::new(),
+        reconnects: 0,
+        measured_secs: 0.0,
+    };
+    let mut n = 0u64;
+    loop {
+        match cfg.iters {
+            Some(total) => {
+                if n >= total {
+                    break;
+                }
+            }
+            None => {
+                if measure.elapsed_secs() >= cfg.duration_secs {
+                    break;
+                }
+            }
+        }
+        let sw = Stopwatch::start();
+        let (resp, batch) = fire(&mut client, &mut rng, n as usize)?;
+        stats.hist.record(sw.elapsed_micros());
+        stats.requests += 1;
+        stats.rows += batch as u64;
+        if resp.status != 200 {
+            stats.errors += 1;
+        }
+        n += 1;
+    }
+    stats.measured_secs = measure.elapsed_secs();
+    stats.reconnects = client.reconnects() as u64;
+    Ok(stats)
+}
+
+/// Run the closed loop: K connections until the duration elapses (or each
+/// connection has sent its `iters` quota), then merge per-connection stats.
+/// `elapsed_secs` is the longest measured window across connections
+/// (they start together at the post-warmup barrier), so throughput
+/// reflects measured traffic only.
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    anyhow::ensure!(cfg.connections > 0, "need at least one connection");
+    anyhow::ensure!(!cfg.batch_mix.is_empty(), "empty batch mix");
+
+    let start_line = Barrier::new(cfg.connections);
+    let results: Vec<Result<ConnStats>> = std::thread::scope(|scope| {
+        let start_line = &start_line;
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|conn_id| scope.spawn(move || drive_connection(cfg, conn_id, start_line)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("load connection thread panicked"))
+            .collect()
+    });
+
+    let mut report = LoadReport {
+        requests: 0,
+        rows: 0,
+        errors: 0,
+        elapsed_secs: 0.0,
+        hist: Histogram::new(),
+        reconnects: 0,
+    };
+    for r in results {
+        let st = r?;
+        report.requests += st.requests;
+        report.rows += st.rows;
+        report.errors += st.errors;
+        report.reconnects += st.reconnects;
+        report.hist.merge(&st.hist);
+        report.elapsed_secs = report.elapsed_secs.max(st.measured_secs);
+    }
+    Ok(report)
+}
+
+/// Scrape the server's per-stage predict breakdown (`stage_*_us`) from
+/// `GET /v1/metrics?format=json`. `None` when the target doesn't expose
+/// it (echo mode, baseline server, older builds). NOTE: these histograms
+/// are cumulative since server start — they include warmup and any
+/// traffic outside this run; the report labels them accordingly.
+pub fn fetch_stage_breakdown(addr: SocketAddr) -> Option<Value> {
+    let mut client = Client::connect(addr).ok()?;
+    let resp = client.get("/v1/metrics?format=json").ok()?;
+    if resp.status != 200 {
+        return None;
+    }
+    let v = resp.json_body().ok()?;
+    let stages: Vec<(String, Value)> = v
+        .get("latencies")?
+        .as_obj()?
+        .iter()
+        .filter(|(k, _)| k.starts_with("stage_"))
+        .cloned()
+        .collect();
+    if stages.is_empty() {
+        None
+    } else {
+        Some(Value::Obj(stages))
+    }
+}
+
+/// Render the `BENCH_serve.json` document: run config, throughput,
+/// client-side latency quantiles, and (when available) the server's
+/// per-stage parse/queue/exec/render breakdown.
+pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<&Value>) -> Value {
+    let mix = Value::Arr(
+        cfg.batch_mix
+            .iter()
+            .map(|&(b, w)| {
+                json::obj([("batch", Value::from(b)), ("weight", Value::from(w))])
+            })
+            .collect(),
+    );
+    let h = &report.hist;
+    json::obj([
+        ("bench", Value::from("flexserve-serve")),
+        (
+            "config",
+            json::obj([
+                ("addr", Value::from(cfg.addr.to_string())),
+                ("path", Value::from(cfg.path.as_str())),
+                ("connections", Value::from(cfg.connections)),
+                (
+                    "duration_secs",
+                    match cfg.iters {
+                        Some(_) => Value::Null,
+                        None => Value::from(cfg.duration_secs),
+                    },
+                ),
+                (
+                    "iters_per_connection",
+                    match cfg.iters {
+                        Some(n) => Value::from(n),
+                        None => Value::Null,
+                    },
+                ),
+                ("warmup_per_connection", Value::from(cfg.warmup)),
+                ("batch_mix", mix),
+                ("seed", Value::from(cfg.seed)),
+            ]),
+        ),
+        ("requests", Value::from(report.requests)),
+        ("rows", Value::from(report.rows)),
+        ("errors", Value::from(report.errors)),
+        ("reconnects", Value::from(report.reconnects)),
+        ("elapsed_secs", Value::from(report.elapsed_secs)),
+        ("throughput_rps", Value::from(report.throughput_rps())),
+        ("throughput_rows_per_s", Value::from(report.throughput_rows())),
+        (
+            "latency_us",
+            json::obj([
+                ("count", Value::from(h.count())),
+                ("mean", Value::from(h.mean_micros())),
+                ("p50", Value::from(h.p50())),
+                ("p95", Value::from(h.p95())),
+                ("p99", Value::from(h.p99())),
+                ("min", Value::from(h.min_micros())),
+                ("max", Value::from(h.max_micros())),
+            ]),
+        ),
+        // Cumulative since server start (quantile histograms cannot be
+        // diffed): includes warmup and any traffic outside this run.
+        (
+            "server_stages_cumulative",
+            server_stages.cloned().unwrap_or(Value::Null),
+        ),
+    ])
+}
+
+/// One-line human summary for the terminal.
+pub fn summary(report: &LoadReport) -> String {
+    use crate::util::hist::fmt_micros;
+    format!(
+        "{} reqs ({} rows) in {:.2}s — {:.1} req/s, {:.1} rows/s, \
+         p50={} p95={} p99={}, {} errors, {} reconnects",
+        report.requests,
+        report.rows,
+        report.elapsed_secs,
+        report.throughput_rps(),
+        report.throughput_rows(),
+        fmt_micros(report.hist.p50()),
+        fmt_micros(report.hist.p95()),
+        fmt_micros(report.hist.p99()),
+        report.errors,
+        report.reconnects,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{Response, Server};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    /// Bench-harness smoke: 1 warmup + a few deterministic iters per
+    /// connection against an in-process echo handler.
+    #[test]
+    fn closed_loop_smoke_against_echo() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = Arc::clone(&hits);
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |req: &crate::http::Request| {
+                h2.fetch_add(1, Ordering::Relaxed);
+                Response::json(
+                    200,
+                    &json::obj([
+                        ("ok", Value::from(true)),
+                        ("body_len", Value::from(req.body.len())),
+                    ]),
+                )
+            }),
+        )
+        .unwrap();
+
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 2,
+            iters: Some(5),
+            warmup: 1,
+            batch_mix: vec![(1, 0.5), (4, 0.5)],
+            seed: 7,
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests, 10); // 2 connections x 5 measured iters
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.hist.count(), 10);
+        assert!(report.rows >= 10, "every request carries ≥ 1 row");
+        assert_eq!(hits.load(Ordering::Relaxed), 12); // + 2x1 warmup
+        assert!(report.throughput_rps() > 0.0);
+
+        let doc = report_json(&cfg, &report, None);
+        assert_eq!(doc.path(&["requests"]).unwrap().as_u64(), Some(10));
+        assert!(doc.path(&["latency_us", "p50"]).is_some());
+        assert_eq!(doc.path(&["server_stages_cumulative"]), Some(&Value::Null));
+        assert_eq!(
+            doc.path(&["config", "iters_per_connection"]).unwrap().as_u64(),
+            Some(5)
+        );
+        // The emitted document is valid JSON end to end.
+        assert!(json::parse(&json::to_string_pretty(&doc)).is_ok());
+
+        // Echo servers expose no /v1/metrics stage histograms.
+        assert!(fetch_stage_breakdown(server.addr).is_none());
+        server.stop();
+    }
+
+    #[test]
+    fn error_statuses_are_counted() {
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|_req: &crate::http::Request| Response::error(503, "down")),
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 1,
+            iters: Some(3),
+            warmup: 0,
+            batch_mix: vec![(1, 1.0)],
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.errors, 3);
+        server.stop();
+    }
+}

@@ -1,6 +1,9 @@
 //! Bench harness (criterion is unavailable offline): warmup + timed
-//! iterations, latency stats, paper-style table rendering, and process
-//! memory probes for the shared-device experiment.
+//! iterations, latency stats, paper-style table rendering, process memory
+//! probes for the shared-device experiment, and the closed-loop HTTP load
+//! generator behind `flexserve bench` ([`load`]).
+
+pub mod load;
 
 use crate::util::{Histogram, Stopwatch};
 

@@ -30,12 +30,12 @@
 use super::batcher::{Batcher, BatcherConfig, BatchStats};
 use super::ensemble::{Ensemble, EnsembleOutput};
 use super::metrics::Metrics;
-use super::wire::{self, ApiError, PredictRequest};
+use super::wire::{self, ApiError, PredictRequest, StageMicros};
 use crate::http::router::{Params, RequestInfo, RouteHandler, RouterObserver};
 use crate::http::{Request, Response, Router};
 use crate::imagepipe::Normalizer;
 use crate::json::{self, Value};
-use crate::runtime::{Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry, TensorView};
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::Arc;
@@ -332,6 +332,7 @@ fn lifecycle_json(s: &ServerState, entry: &ModelEntry, status: &str) -> Value {
 }
 
 fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
+    let parse_sw = Stopwatch::start();
     let mut input = PredictRequest::parse(&s.manifest, req)?;
     s.metrics.add("rows_total", input.batch as u64);
 
@@ -339,6 +340,8 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> 
     if !input.normalized {
         s.normalizer.apply(&mut input.data);
     }
+    let parse_us = parse_sw.elapsed_micros();
+    s.metrics.observe_stage("stage_parse_us", parse_us);
 
     // Typed membership check before any device work (the batcher path
     // re-checks at flush time; see wire.rs for the taxonomy).
@@ -346,9 +349,13 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> 
         return Err(ApiError::ensemble_empty());
     }
 
+    // Move the payload into the shared zero-copy view: the batcher, the
+    // ensemble fan-out and the device executors all reference this one
+    // buffer from here on.
+    let data = TensorView::from(std::mem::take(&mut input.data));
+
     // Custom model subsets bypass the shared batcher (its batches are for
     // the current full ensemble); everything else coalesces.
-    let data = std::mem::take(&mut input.data); // move the payload, no clone
     let (output, stats): (EnsembleOutput, Option<BatchStats>) = match (&input.models, &s.batcher) {
         (None, Some(batcher)) => {
             let (out, st) = batcher
@@ -360,7 +367,7 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> 
         }
         (None, None) => (
             s.ensemble
-                .forward(&data, input.batch)
+                .forward(data, input.batch)
                 .map_err(ApiError::from_anyhow)?,
             None,
         ),
@@ -370,19 +377,44 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> 
                 .with_models(names.clone())
                 .map_err(ApiError::from_anyhow)?;
             (
-                sub.forward(&data, input.batch)
+                sub.forward(data, input.batch)
                     .map_err(ApiError::from_anyhow)?,
                 None,
             )
         }
     };
 
+    let stages = observe_output_stages(s, parse_us, &output, stats.as_ref());
+    let render_sw = Stopwatch::start();
+    let body = wire::render_predict(&s.manifest, &input, &output, stats, Some(stages))?;
+    let resp = Response::json(200, &body);
+    s.metrics
+        .observe_stage("stage_render_us", render_sw.elapsed_micros());
+    Ok(resp)
+}
+
+/// Fold one forward's device timings into the `stage_*` histograms and
+/// return the per-request breakdown for `detail.stages`.
+fn observe_output_stages(
+    s: &ServerState,
+    parse_us: u64,
+    output: &EnsembleOutput,
+    stats: Option<&BatchStats>,
+) -> StageMicros {
+    let mut exec_us = 0;
+    let mut queue_us = stats.map(|st| st.wait_micros).unwrap_or(0);
     for m in &output.per_model {
         s.metrics.observe_micros("device_exec_us", m.exec_micros);
+        exec_us += m.exec_micros;
+        queue_us += m.queue_micros;
     }
-
-    let body = wire::render_predict(&s.manifest, &input, &output, stats)?;
-    Ok(Response::json(200, &body))
+    s.metrics.observe_stage("stage_queue_us", queue_us);
+    s.metrics.observe_stage("stage_exec_us", exec_us);
+    StageMicros {
+        parse_us,
+        queue_us,
+        exec_us,
+    }
 }
 
 /// Single-model fast path: one model, no ensemble fan-out, no shared
@@ -396,30 +428,31 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
     if !s.ensemble.pool().is_loaded(name) {
         return Err(ApiError::model_not_loaded(name));
     }
+    let parse_sw = Stopwatch::start();
     let mut input = PredictRequest::parse(&s.manifest, req)?;
     s.metrics.add("rows_total", input.batch as u64);
     if !input.normalized {
         s.normalizer.apply(&mut input.data);
     }
-    let data = std::mem::take(&mut input.data);
+    let parse_us = parse_sw.elapsed_micros();
+    s.metrics.observe_stage("stage_parse_us", parse_us);
+    let data = TensorView::from(std::mem::take(&mut input.data));
     let single = s
         .ensemble
         .with_models(vec![name.to_string()])
         .map_err(ApiError::from_anyhow)?;
     let output = single
-        .forward(&data, input.batch)
+        .forward(data, input.batch)
         .map_err(ApiError::from_anyhow)?;
+    let stages = observe_output_stages(s, parse_us, &output, None);
 
+    let render_sw = Stopwatch::start();
     let m = &output.per_model[0];
-    s.metrics.observe_micros("device_exec_us", m.exec_micros);
-    let predictions: Vec<Value> = m
-        .preds
-        .iter()
-        .map(|(idx, _)| Value::from(s.manifest.classes[*idx].as_str()))
-        .collect();
+    let predictions =
+        json::str_array_raw(m.preds.iter().map(|(idx, _)| s.manifest.classes[*idx].as_str()));
     let mut members = vec![
         ("model".to_string(), Value::from(name)),
-        ("predictions".to_string(), Value::Arr(predictions)),
+        ("predictions".to_string(), predictions),
         (
             "params_sha256".to_string(),
             Value::from(entry.params_sha256.as_str()),
@@ -430,20 +463,21 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
             "detail".to_string(),
             json::obj([
                 ("batch", Value::from(output.batch)),
-                (
-                    "probs",
-                    Value::Arr(m.preds.iter().map(|(_, p)| Value::from(*p)).collect()),
-                ),
+                ("probs", json::f32_array_raw(m.preds.iter().map(|(_, p)| *p))),
                 (
                     "buckets",
                     Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
                 ),
                 ("exec_us", Value::from(m.exec_micros)),
                 ("queue_us", Value::from(m.queue_micros)),
+                ("stages", stages.to_json()),
             ]),
         ));
     }
-    Ok(Response::json(200, &Value::Obj(members)))
+    let resp = Response::json(200, &Value::Obj(members));
+    s.metrics
+        .observe_stage("stage_render_us", render_sw.elapsed_micros());
+    Ok(resp)
 }
 
 /// `POST /v1/models/:name/load` — compile the model onto every device

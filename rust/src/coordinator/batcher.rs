@@ -19,6 +19,7 @@
 //! without restarting the batcher thread.
 
 use super::ensemble::{Ensemble, EnsembleOutput, ModelOutput};
+use crate::runtime::TensorView;
 use crate::util::Stopwatch;
 use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
@@ -46,7 +47,7 @@ impl Default for BatcherConfig {
 }
 
 struct Pending {
-    data: Vec<f32>,
+    data: TensorView,
     batch: usize,
     enqueued: Stopwatch,
     reply: mpsc::Sender<Result<(EnsembleOutput, BatchStats)>>,
@@ -97,12 +98,16 @@ impl Batcher {
     }
 
     /// Blocking submit: returns this request's rows + batching stats.
-    pub fn submit(&self, data: Vec<f32>, batch: usize) -> Result<(EnsembleOutput, BatchStats)> {
+    pub fn submit(
+        &self,
+        data: impl Into<TensorView>,
+        batch: usize,
+    ) -> Result<(EnsembleOutput, BatchStats)> {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push_back(Pending {
-                data,
+                data: data.into(),
                 batch,
                 enqueued: Stopwatch::start(),
                 reply: reply_tx,
@@ -171,15 +176,34 @@ fn batcher_thread(ensemble: Ensemble, config: BatcherConfig, shared: Arc<Shared>
         }
         drop(q); // run inference unlocked
 
-        // Phase 4: one ensemble forward for the coalesced batch.
-        let elems = ensemble.manifest().sample_elems();
-        let mut combined = Vec::with_capacity(rows * elems);
-        for p in &taken {
-            combined.extend_from_slice(&p.data);
-        }
-        match ensemble.forward(&combined, rows) {
+        // Phase 4: one ensemble forward for the coalesced batch. A lone
+        // request (the common uncoalesced case) rides its own buffer
+        // straight through and gets the output back verbatim — no gather
+        // copy in, no `slice_output` deep copy out. Only genuinely
+        // coalesced batches pay one gather into a combined buffer.
+        let n_req = taken.len();
+        let input: TensorView = if n_req == 1 {
+            taken[0].data.clone() // refcount bump, not a float copy
+        } else {
+            let elems = ensemble.manifest().sample_elems();
+            let mut combined = Vec::with_capacity(rows * elems);
+            for p in &taken {
+                combined.extend_from_slice(&p.data);
+            }
+            TensorView::from(combined)
+        };
+        match ensemble.forward(input, rows) {
             Ok(output) => {
-                let n_req = taken.len();
+                if n_req == 1 {
+                    let p = taken.pop().unwrap();
+                    let stats = BatchStats {
+                        coalesced_rows: rows,
+                        coalesced_requests: 1,
+                        wait_micros: p.enqueued.elapsed_micros(),
+                    };
+                    let _ = p.reply.send(Ok((output, stats)));
+                    continue;
+                }
                 let mut offset = 0;
                 for p in taken {
                     let slice = slice_output(&output, offset, p.batch);

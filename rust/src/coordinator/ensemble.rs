@@ -20,7 +20,7 @@
 
 use super::wire::ApiError;
 use crate::runtime::tensor::{argmax_rows, softmax_rows};
-use crate::runtime::{ExecRequest, ExecutorPool, Manifest};
+use crate::runtime::{ExecRequest, ExecutorPool, Manifest, TensorView};
 use anyhow::{bail, Context, Error, Result};
 use std::sync::{Arc, RwLock};
 
@@ -192,11 +192,14 @@ impl Ensemble {
 
     /// One ensemble forward over an already-normalized batch.
     ///
-    /// `data` is row-major `(batch, H, W, C)`. Any `batch ≥ 1` is accepted
-    /// (§2.3); batches above the largest bucket are chunked. The active
-    /// membership is snapshotted once at entry; an empty set yields a
-    /// typed `ensemble.empty` error.
-    pub fn forward(&self, data: &[f32], batch: usize) -> Result<EnsembleOutput> {
+    /// `data` is a row-major `(batch, H, W, C)` shared view; every
+    /// (model, chunk) job fans out a sub-view of the same buffer — the
+    /// hot path performs zero tensor copies here. Any `batch ≥ 1` is
+    /// accepted (§2.3); batches above the largest bucket are chunked. The
+    /// active membership is snapshotted once at entry; an empty set
+    /// yields a typed `ensemble.empty` error.
+    pub fn forward(&self, data: impl Into<TensorView>, batch: usize) -> Result<EnsembleOutput> {
+        let data = data.into();
         let models = self.models();
         if models.is_empty() {
             return Err(Error::new(ApiError::ensemble_empty()));
@@ -223,19 +226,20 @@ impl Ensemble {
 
         // Submit every (model, chunk) job before collecting any reply:
         // the device queue(s) stay full and multi-worker pools overlap
-        // per-model forwards.
+        // per-model forwards. Jobs are tagged with the model's *position*
+        // so replies resolve by index (no name clone, no linear scan).
         let mut pending = Vec::with_capacity(models.len() * chunks.len());
-        for model in &models {
+        for (mi, model) in models.iter().enumerate() {
             let handle = self.pool.handle(); // round-robin per model
             for &(off, len) in &chunks {
                 let rx = handle
                     .infer_async(ExecRequest {
                         model: model.clone(),
                         batch: len,
-                        data: data[off * elems..(off + len) * elems].to_vec(),
+                        data: data.slice(off * elems, len * elems),
                     })
                     .with_context(|| format!("submitting {model}"))?;
-                pending.push((model.clone(), rx));
+                pending.push((mi, rx));
             }
         }
 
@@ -251,8 +255,9 @@ impl Ensemble {
             })
             .collect();
 
-        let mut evicted: Vec<String> = Vec::new();
-        for (model, rx) in pending {
+        let mut evicted = vec![false; models.len()];
+        for (mi, rx) in pending {
+            let model = &models[mi];
             let resp = match rx.recv() {
                 Ok(Ok(resp)) => resp,
                 Ok(Err(e)) => {
@@ -261,22 +266,23 @@ impl Ensemble {
                     // the whole (possibly coalesced) batch. Residency is
                     // the right test — a merely *deactivated* model that
                     // fails for a real device reason must still surface.
-                    if !self.pool.is_loaded(&model) {
-                        evicted.push(model);
+                    if !self.pool.is_loaded(model) {
+                        evicted[mi] = true;
                         continue;
                     }
                     return Err(e).with_context(|| format!("inference failed for {model}"));
                 }
                 Err(_) => bail!("executor dropped job for {model}"),
             };
-            let out = per_model.iter_mut().find(|m| m.model == model).unwrap();
+            let out = &mut per_model[mi];
             out.logits.extend_from_slice(&resp.logits);
             out.buckets.push(resp.bucket);
             out.exec_micros += resp.exec_micros;
             out.queue_micros += resp.queue_micros;
         }
-        if !evicted.is_empty() {
-            per_model.retain(|m| !evicted.contains(&m.model));
+        if evicted.iter().any(|&e| e) {
+            let mut keep = evicted.iter().map(|&e| !e);
+            per_model.retain(|_| keep.next().unwrap());
         }
         if per_model.is_empty() {
             return Err(Error::new(ApiError::ensemble_empty()));

@@ -7,6 +7,17 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// The per-stage data-plane histograms recorded by the predict handlers:
+/// request parse (+normalize), queue wait (batcher + device), device
+/// execution, and response rendering. This list is the wire contract for
+/// `flexserve bench`'s `server_stages` block in `BENCH_serve.json`.
+pub const STAGE_METRICS: [&str; 4] = [
+    "stage_parse_us",
+    "stage_queue_us",
+    "stage_exec_us",
+    "stage_render_us",
+];
+
 /// Process-wide metrics registry. Cheap counters (atomics), coarse-grained
 /// mutex on histograms (request path records one sample per request).
 #[derive(Default)]
@@ -43,6 +54,15 @@ impl Metrics {
     pub fn observe_micros(&self, name: &str, micros: u64) {
         let mut map = self.hists.lock().unwrap();
         map.entry(name.to_string()).or_default().record(micros);
+    }
+
+    /// Record one sample of a data-plane stage histogram. `stage` must be
+    /// one of [`STAGE_METRICS`] — the stable names `flexserve bench`
+    /// scrapes from `/v1/metrics?format=json` for its per-stage
+    /// parse/queue/exec/render breakdown.
+    pub fn observe_stage(&self, stage: &'static str, micros: u64) {
+        debug_assert!(STAGE_METRICS.contains(&stage), "unknown stage {stage}");
+        self.observe_micros(stage, micros);
     }
 
     /// Snapshot of one histogram (None if never observed).
@@ -174,6 +194,22 @@ mod tests {
         let v = m.render_json();
         assert_eq!(v.path(&["counters", "a"]).unwrap().as_u64(), Some(1));
         assert_eq!(v.path(&["latencies", "l", "count"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn stage_observation() {
+        let m = Metrics::new();
+        for stage in STAGE_METRICS {
+            m.observe_stage(stage, 25);
+        }
+        let v = m.render_json();
+        for stage in STAGE_METRICS {
+            assert_eq!(
+                v.path(&["latencies", stage, "count"]).unwrap().as_u64(),
+                Some(1),
+                "{stage}"
+            );
+        }
     }
 
     #[test]

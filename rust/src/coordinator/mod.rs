@@ -22,9 +22,9 @@ pub mod wire;
 pub use api::{build_router, ServerState};
 pub use batcher::{Batcher, BatcherConfig, BatchStats};
 pub use ensemble::{Ensemble, EnsembleOutput, ModelOutput};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, STAGE_METRICS};
 pub use policy::{Confusion, Policy};
-pub use wire::{ApiError, PredictRequest};
+pub use wire::{ApiError, PredictRequest, StageMicros};
 
 use crate::config::ServeConfig;
 use crate::http::{Server, ServerHandle};

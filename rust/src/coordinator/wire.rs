@@ -180,7 +180,31 @@ fn query_override<'r>(req: &'r Request, name: &str) -> Option<&'r str> {
 
 impl PredictRequest {
     /// Parse + validate one predict request against the manifest contract.
+    ///
+    /// Hot path: the streaming scanner pulls the `"data"` float array
+    /// straight out of the request bytes — no `Value` node per float. Any
+    /// structural surprise falls back to [`PredictRequest::parse_general`],
+    /// whose accept/reject behavior is identical by construction (the
+    /// differential property tests in `tests/coordinator_props.rs` pin
+    /// this down).
     pub fn parse(manifest: &Manifest, req: &Request) -> Result<PredictRequest, ApiError> {
+        if let Ok(text) = std::str::from_utf8(&req.body) {
+            if let Some((data, rest)) = scan_predict_body(text) {
+                if rest.get("pgm_b64").is_some() {
+                    return Err(ApiError::bad_value(
+                        "pass either 'data' or 'pgm_b64', not both",
+                    ));
+                }
+                return Self::validate(manifest, req, data, &rest);
+            }
+        }
+        Self::parse_general(manifest, req)
+    }
+
+    /// The general (`Value`-tree) parser path — the fast-path fallback and
+    /// the reference implementation the differential tests compare
+    /// [`PredictRequest::parse`] against.
+    pub fn parse_general(manifest: &Manifest, req: &Request) -> Result<PredictRequest, ApiError> {
         let body = req.json_body().map_err(ApiError::malformed_json)?;
 
         // Content negotiation: raw f32 tensor vs base64 binary-PGM frames.
@@ -196,6 +220,18 @@ impl PredictRequest {
             (None, Some(frames)) => decode_pgm_frames(manifest, frames)?,
             (None, None) => return Err(ApiError::missing_input()),
         };
+        Self::validate(manifest, req, data, &body)
+    }
+
+    /// Shared validation tail: shape/batch checks and flag extraction.
+    /// `body` holds every non-`data` member (the fast path never builds
+    /// `Value` nodes for the tensor itself).
+    fn validate(
+        manifest: &Manifest,
+        req: &Request,
+        data: Vec<f32>,
+        body: &Value,
+    ) -> Result<PredictRequest, ApiError> {
         if data.is_empty() {
             return Err(ApiError::bad_value("'data' is empty"));
         }
@@ -305,6 +341,117 @@ impl PredictRequest {
     }
 }
 
+/// Streaming fast path for `{"data": [...], ...}` predict bodies.
+///
+/// Walks the top-level object in one pass: the `"data"` member's floats
+/// are scanned straight into a `Vec<f32>` (zero `Value` nodes for the
+/// tensor), while every other member — `batch`, `models`, `policy`, … all
+/// small — is parsed in place with the real recursive-descent parser
+/// ([`json::value_at`]) and collected into the returned `Value::Obj`.
+///
+/// Returns `None` on ANY structural surprise (no top-level object, no
+/// `"data"` member, a duplicate `"data"`, a non-number array element,
+/// malformed syntax, trailing bytes): the caller then falls back to the
+/// general parser, so accept/reject behavior — and every error's taxonomy
+/// code — is identical between the two paths.
+pub fn scan_predict_body(text: &str) -> Option<(Vec<f32>, Value)> {
+    let bytes = text.as_bytes();
+    let mut pos = skip_ws_at(bytes, 0);
+    if bytes.get(pos).copied() != Some(b'{') {
+        return None;
+    }
+    pos += 1;
+    let mut data: Option<Vec<f32>> = None;
+    let mut rest: Vec<(String, Value)> = Vec::new();
+    pos = skip_ws_at(bytes, pos);
+    if bytes.get(pos).copied() == Some(b'}') {
+        pos += 1;
+    } else {
+        loop {
+            pos = skip_ws_at(bytes, pos);
+            let (key, after_key) = json::string_at(text, pos).ok()?;
+            pos = skip_ws_at(bytes, after_key);
+            if bytes.get(pos).copied() != Some(b':') {
+                return None;
+            }
+            pos = skip_ws_at(bytes, pos + 1);
+            if key == "data" {
+                if data.is_some() {
+                    // Duplicate "data": defer to the general path's
+                    // first-member-wins rule rather than replicating it.
+                    return None;
+                }
+                let (d, end) = scan_f32_array(text, pos)?;
+                data = Some(d);
+                pos = end;
+            } else {
+                // Members of a top-level object sit at depth 1 — matching
+                // the general parser's nesting bound exactly.
+                let (v, end) = json::value_at(text, pos, 1).ok()?;
+                rest.push((key, v));
+                pos = end;
+            }
+            pos = skip_ws_at(bytes, pos);
+            match bytes.get(pos).copied() {
+                Some(b',') => pos += 1,
+                Some(b'}') => {
+                    pos += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+    }
+    if skip_ws_at(bytes, pos) != bytes.len() {
+        return None; // trailing bytes → the general parser's error applies
+    }
+    Some((data?, Value::Obj(rest)))
+}
+
+/// Scan a JSON array of plain numbers at `pos` into f32s; `None` on any
+/// non-number element or syntax surprise.
+fn scan_f32_array(text: &str, mut pos: usize) -> Option<(Vec<f32>, usize)> {
+    let bytes = text.as_bytes();
+    if bytes.get(pos).copied() != Some(b'[') {
+        return None;
+    }
+    pos += 1;
+    // Pre-size from the array's own extent (the first ']' — nested arrays
+    // bail out below, so it is the closing bracket): elements are ≥ 2
+    // bytes ("0,"), so extent/2 never reallocs and never over-allocates
+    // beyond the array itself, even when huge members follow a tiny array.
+    let extent = bytes[pos..].iter().position(|&b| b == b']').unwrap_or(0);
+    let mut out: Vec<f32> = Vec::with_capacity(extent / 2);
+    pos = skip_ws_at(bytes, pos);
+    if bytes.get(pos).copied() == Some(b']') {
+        return Some((out, pos + 1));
+    }
+    loop {
+        pos = skip_ws_at(bytes, pos);
+        match bytes.get(pos).copied() {
+            Some(b'-' | b'0'..=b'9') => {
+                let (n, end) = json::number_at(text, pos).ok()?;
+                out.push(n as f32);
+                pos = end;
+            }
+            _ => return None, // non-number element → general path decides
+        }
+        pos = skip_ws_at(bytes, pos);
+        match bytes.get(pos).copied() {
+            Some(b',') => pos += 1,
+            Some(b']') => return Some((out, pos + 1)),
+            _ => return None,
+        }
+    }
+}
+
+fn skip_ws_at(bytes: &[u8], mut pos: usize) -> usize {
+    while matches!(bytes.get(pos).copied(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        pos += 1;
+    }
+    pos
+}
+
 /// Decode `pgm_b64` camera frames (§2.3 wire format: base64 binary PGM,
 /// one per frame) into the flat f32 batch. Dimensions must match the
 /// manifest's input shape.
@@ -335,24 +482,49 @@ fn decode_pgm_frames(manifest: &Manifest, frames: &Value) -> Result<Vec<f32>, Ap
     Ok(data)
 }
 
+/// Server-side per-stage latency breakdown for one predict request,
+/// embedded in `detail.stages` and mirrored into the `stage_*_us`
+/// histograms on `/v1/metrics`. Render time cannot time itself into the
+/// same response; it is metrics-only (`stage_render_us`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageMicros {
+    /// Request parse + input normalization.
+    pub parse_us: u64,
+    /// Batcher queue wait plus summed device queue wait across models.
+    pub queue_us: u64,
+    /// Summed device execution across models and chunks.
+    pub exec_us: u64,
+}
+
+impl StageMicros {
+    pub fn to_json(&self) -> Value {
+        json::obj([
+            ("parse_us", Value::from(self.parse_us)),
+            ("queue_us", Value::from(self.queue_us)),
+            ("exec_us", Value::from(self.exec_us)),
+        ])
+    }
+}
+
 /// Render the ensemble response in the paper's §2.3 wire format
 /// (`"model_<name>": ["class", ...]` per model), plus the opt-in
-/// server-side fusion and diagnostics blocks.
+/// server-side fusion and diagnostics blocks. Prediction and probability
+/// arrays render through the streaming writers ([`json::str_array_raw`],
+/// [`json::f32_array_raw`]) — no per-element `Value` boxing on the hot
+/// path.
 pub fn render_predict(
     manifest: &Manifest,
     input: &PredictRequest,
     output: &EnsembleOutput,
     stats: Option<BatchStats>,
+    stages: Option<StageMicros>,
 ) -> Result<Value, ApiError> {
     let mut members: Vec<(String, Value)> = Vec::with_capacity(output.per_model.len() + 2);
     for m in &output.per_model {
         let names = output
             .class_names(manifest, &m.model)
             .expect("model present in its own output");
-        members.push((
-            format!("model_{}", m.model),
-            Value::Arr(names.into_iter().map(Value::from).collect()),
-        ));
+        members.push((format!("model_{}", m.model), json::str_array_raw(names)));
     }
 
     // Opt-in server-side sensitivity fusion (§2.1).
@@ -383,10 +555,7 @@ pub fn render_predict(
                 (
                     m.model.clone(),
                     json::obj([
-                        (
-                            "probs",
-                            Value::Arr(m.preds.iter().map(|(_, p)| Value::from(*p)).collect()),
-                        ),
+                        ("probs", json::f32_array_raw(m.preds.iter().map(|(_, p)| *p))),
                         (
                             "buckets",
                             Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
@@ -401,6 +570,9 @@ pub fn render_predict(
             ("batch".to_string(), Value::from(output.batch)),
             ("models".to_string(), Value::Obj(per_model)),
         ];
+        if let Some(st) = stages {
+            detail.push(("stages".to_string(), st.to_json()));
+        }
         if let Some(st) = stats {
             detail.push((
                 "batching".to_string(),
@@ -497,6 +669,75 @@ mod tests {
         assert_eq!(r.policy, Some(Policy::All));
         assert_eq!(r.target.as_ref().unwrap().0, "blank");
         assert!(!r.detail);
+    }
+
+    #[test]
+    fn scanner_extracts_data_and_rest() {
+        let (data, rest) = scan_predict_body(
+            r#" { "batch" : 2 , "data" : [ 1, -2.5, 3e1, 0.5E-1 ] , "detail": true } "#,
+        )
+        .unwrap();
+        assert_eq!(data, vec![1.0, -2.5, 30.0, 0.05]);
+        assert_eq!(rest.get("batch").unwrap().as_usize(), Some(2));
+        assert_eq!(rest.get("detail").unwrap().as_bool(), Some(true));
+        assert!(rest.get("data").is_none());
+
+        // Keys go through the real string parser, so an escaped spelling
+        // of "data" is still the data member.
+        let (data, _) = scan_predict_body("{\"\\u0064ata\":[7]}").unwrap();
+        assert_eq!(data, vec![7.0]);
+
+        let (data, _) = scan_predict_body(r#"{"data":[]}"#).unwrap();
+        assert!(data.is_empty());
+    }
+
+    #[test]
+    fn scanner_falls_back_on_surprises() {
+        for body in [
+            "[1,2]",                       // not an object
+            r#"{"batch":1}"#,              // no data member
+            r#"{"data":[1],"data":[2]}"#,  // duplicate data
+            r#"{"data":[1,"x"]}"#,         // non-number element
+            r#"{"data":[NaN]}"#,           // not JSON
+            r#"{"data":[1,]}"#,            // trailing comma
+            r#"{"data":[1]} junk"#,        // trailing bytes
+            r#"{"data":[1"#,               // truncated
+            r#"{"data":1}"#,               // data not an array
+            "",                            // empty
+        ] {
+            assert!(scan_predict_body(body).is_none(), "should fall back on {body:?}");
+        }
+    }
+
+    #[test]
+    fn fast_and_general_paths_agree_on_basics() {
+        let m = manifest();
+        for body in [
+            r#"{"data":[1,2,3,4]}"#,
+            r#"{"data":[1,2,3,4],"batch":1,"normalized":true}"#,
+            r#"{"data":[1,2,3],"batch":1}"#,
+            r#"{"data":[1e40,0,0,0]}"#, // f32 overflow → non-finite
+            r#"{"data":[],"batch":0}"#,
+            r#"{"data":[1,2,3,4],"pgm_b64":["x"]}"#,
+        ] {
+            let req = post("/v1/predict", body);
+            let fast = PredictRequest::parse(&m, &req);
+            let slow = PredictRequest::parse_general(&m, &req);
+            match (fast, slow) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.data, b.data, "{body}");
+                    assert_eq!(a.batch, b.batch, "{body}");
+                }
+                (Err(a), Err(b)) => {
+                    assert_eq!((a.status, a.code), (b.status, b.code), "{body}");
+                }
+                (a, b) => panic!(
+                    "divergence on {body}: fast_ok={} general_ok={}",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+        }
     }
 
     #[test]

@@ -10,10 +10,10 @@
 //! responses are deterministic — important for golden tests.
 
 mod parse;
-mod ser;
+pub mod ser;
 
-pub use parse::{parse, ParseError};
-pub use ser::{to_string, to_string_pretty};
+pub use parse::{number_at, parse, string_at, value_at, ParseError};
+pub use ser::{f32_array_raw, str_array_raw, to_string, to_string_pretty};
 
 use std::fmt;
 
@@ -29,6 +29,13 @@ pub enum Value {
     Arr(Vec<Value>),
     /// Insertion-ordered object (no HashMap: determinism + tiny objects).
     Obj(Vec<(String, Value)>),
+    /// A pre-serialized JSON fragment, spliced verbatim at serialization
+    /// time. Write-only: the parser never produces it, and accessors treat
+    /// it as opaque. This is the splice point for the hot-path array
+    /// writers ([`f32_array_raw`], [`str_array_raw`]) — large tensor
+    /// arrays render straight into one buffer instead of boxing one
+    /// `Value` per element. The fragment MUST be valid JSON.
+    Raw(String),
 }
 
 impl Value {
@@ -121,6 +128,7 @@ impl Value {
             Value::Str(_) => "string",
             Value::Arr(_) => "array",
             Value::Obj(_) => "object",
+            Value::Raw(_) => "raw",
         }
     }
 }

@@ -36,6 +36,46 @@ pub fn parse(input: &str) -> Result<Value, ParseError> {
     Ok(v)
 }
 
+/// Parse a single JSON value beginning at byte `pos` of `input` (leading
+/// whitespace allowed), at nesting `depth`; returns the value and the
+/// offset one past its end. Powers the wire layer's streaming `"data"`
+/// scanner, which needs individual object members parsed with EXACTLY
+/// this parser's grammar (pass `depth = 1` for members of a top-level
+/// object so the nesting bound matches [`parse`]).
+pub fn value_at(input: &str, pos: usize, depth: usize) -> Result<(Value, usize), ParseError> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos,
+    };
+    p.skip_ws();
+    let v = p.value(depth)?;
+    Ok((v, p.pos))
+}
+
+/// Parse a JSON string beginning at `pos` (must point at `"`); returns the
+/// decoded string and the offset one past the closing quote.
+pub fn string_at(input: &str, pos: usize) -> Result<(String, usize), ParseError> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos,
+    };
+    let s = p.string()?;
+    Ok((s, p.pos))
+}
+
+/// Scan one JSON number beginning at `pos` without allocating; returns the
+/// value and the offset one past its last digit.
+pub fn number_at(input: &str, pos: usize) -> Result<(f64, usize), ParseError> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos,
+    };
+    match p.number()? {
+        Value::Num(n) => Ok((n, p.pos)),
+        _ => unreachable!("number() always yields Value::Num"),
+    }
+}
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -331,6 +371,27 @@ mod tests {
         assert!(parse(&deep).is_err());
         let ok = "[".repeat(100) + &"]".repeat(100);
         assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn positional_helpers() {
+        let doc = r#"  {"k": [1, 2]} tail"#;
+        let (v, end) = value_at(doc, 0, 0).unwrap();
+        assert_eq!(v.path(&["k"]).unwrap().at(1).unwrap().as_f64(), Some(2.0));
+        assert_eq!(&doc[end..], " tail");
+
+        let (s, end) = string_at(r#""a\nb"x"#, 0).unwrap();
+        assert_eq!(s, "a\nb");
+        assert_eq!(end, 6);
+
+        let (n, end) = number_at("-1.5e2,", 0).unwrap();
+        assert_eq!(n, -150.0);
+        assert_eq!(end, 6);
+        assert!(number_at("01", 0).is_ok()); // stops after the "0"
+        assert_eq!(number_at("01", 0).unwrap(), (0.0, 1));
+        assert!(number_at("x", 0).is_err());
+        assert!(number_at("1.", 0).is_err());
+        assert!(string_at("noquote", 0).is_err());
     }
 
     #[test]

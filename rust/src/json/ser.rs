@@ -29,6 +29,7 @@ fn estimate_size(v: &Value) -> usize {
         Value::Null | Value::Bool(_) => 5,
         Value::Num(_) => 12,
         Value::Str(s) => s.len() + 8,
+        Value::Raw(s) => s.len(),
         Value::Arr(items) => 2 + items.iter().map(|i| estimate_size(i) + 1).sum::<usize>(),
         Value::Obj(members) => {
             2 + members
@@ -46,6 +47,9 @@ fn write_value(out: &mut String, v: &Value, indent: Option<usize>, level: usize)
         Value::Bool(false) => out.push_str("false"),
         Value::Num(n) => write_num(out, *n),
         Value::Str(s) => write_str(out, s),
+        // Pre-serialized fragments splice verbatim (they stay compact even
+        // under pretty-printing; tensor arrays have no use for indentation).
+        Value::Raw(s) => out.push_str(s),
         Value::Arr(items) => {
             if items.is_empty() {
                 out.push_str("[]");
@@ -91,6 +95,48 @@ fn newline(out: &mut String, indent: Option<usize>, level: usize) {
         out.push('\n');
         out.extend(std::iter::repeat(' ').take(width * level));
     }
+}
+
+/// Stream a float array into `out` as a JSON array — no `Value` node per
+/// element. This is the tensor-payload writer for both directions of the
+/// wire: request bodies (`flexserve bench`/`predict` clients) and response
+/// diagnostics (`detail.probs`).
+pub fn write_f32_array<I: IntoIterator<Item = f32>>(out: &mut String, vals: I) {
+    out.push('[');
+    let mut first = true;
+    for v in vals {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        write_num(out, v as f64);
+    }
+    out.push(']');
+}
+
+/// A float array as a splice-ready [`Value::Raw`] fragment.
+pub fn f32_array_raw<I: IntoIterator<Item = f32>>(vals: I) -> Value {
+    let iter = vals.into_iter();
+    let mut out = String::with_capacity(iter.size_hint().0 * 12 + 2);
+    write_f32_array(&mut out, iter);
+    Value::Raw(out)
+}
+
+/// A string array as a splice-ready [`Value::Raw`] fragment — one escaped
+/// write per item, no per-item `String` boxing (class-name prediction
+/// arrays borrow straight from the manifest).
+pub fn str_array_raw<'a, I: IntoIterator<Item = &'a str>>(items: I) -> Value {
+    let mut out = String::from("[");
+    let mut first = true;
+    for s in items {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        write_str(&mut out, s);
+    }
+    out.push(']');
+    Value::Raw(out)
 }
 
 fn write_num(out: &mut String, n: f64) {
@@ -167,6 +213,38 @@ mod tests {
         let pretty = to_string_pretty(&v);
         assert!(pretty.contains('\n'));
         assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn raw_fragments_splice_verbatim() {
+        let v = obj([
+            ("data", f32_array_raw([1.0f32, 2.5, -3.0])),
+            ("names", str_array_raw(["cross", "q\"uote"])),
+            ("empty", f32_array_raw(std::iter::empty())),
+        ]);
+        let s = to_string(&v);
+        assert_eq!(s, r#"{"data":[1,2.5,-3],"names":["cross","q\"uote"],"empty":[]}"#);
+        // The spliced output is itself valid JSON and parses back to the
+        // equivalent boxed tree.
+        let back = parse(&s).unwrap();
+        assert_eq!(
+            back.get("data").unwrap().as_f32_vec().unwrap(),
+            vec![1.0, 2.5, -3.0]
+        );
+        assert_eq!(back.get("names").unwrap().at(1).unwrap().as_str(), Some("q\"uote"));
+        // Pretty mode keeps raw fragments compact but stays parseable.
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), back);
+    }
+
+    #[test]
+    fn raw_array_matches_boxed_rendering() {
+        let vals = [0.25f32, -1.5, 3.0, 0.1, 1e-9, 123456.75];
+        let boxed = to_string(&Value::Arr(vals.iter().map(|&v| Value::from(v)).collect()));
+        let raw = match f32_array_raw(vals.iter().copied()) {
+            Value::Raw(s) => s,
+            _ => unreachable!(),
+        };
+        assert_eq!(raw, boxed);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! flexserve models           print the artifact manifest + provenance
 //! flexserve verify           verify artifact SHA-256s against the manifest
 //! flexserve predict          send a synthetic batch to a running server
+//! flexserve bench            closed-loop load test → BENCH_serve.json
 //! flexserve load MODEL       load a model into a running server (/v1)
 //! flexserve unload MODEL     unload a model from a running server (/v1)
 //! flexserve ensemble a,b,c   set the active membership of a running server
@@ -15,13 +16,15 @@
 
 use anyhow::{bail, Context, Result};
 use flexserve::baseline::{serve_baseline, BaselineConfig};
+use flexserve::benchkit::load::{self, LoadConfig};
 use flexserve::config::ServeConfig;
 use flexserve::coordinator::serve;
-use flexserve::http::Client;
+use flexserve::http::{Client, Response, Server};
 use flexserve::json::{self, Value};
 use flexserve::runtime::Manifest;
 use flexserve::util::Prng;
 use flexserve::workload;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +46,7 @@ fn run(args: &[String]) -> Result<()> {
         "models" => cmd_models(rest),
         "verify" => cmd_verify(rest),
         "predict" => cmd_predict(rest),
+        "bench" => cmd_bench(rest),
         "load" => cmd_lifecycle(rest, "load"),
         "unload" => cmd_lifecycle(rest, "unload"),
         "ensemble" => cmd_lifecycle(rest, "ensemble"),
@@ -66,6 +70,7 @@ fn print_usage() {
            models           print the artifact manifest (provenance included)\n\
            verify           verify artifact hashes against the manifest\n\
            predict          send a synthetic frame batch to a running server\n\
+           bench            closed-loop load test a running server (BENCH_serve.json)\n\
            load MODEL       POST /v1/models/MODEL/load on a running server\n\
            unload MODEL     POST /v1/models/MODEL/unload on a running server\n\
            ensemble a,b,c   PUT /v1/ensemble (set active membership)\n\
@@ -81,7 +86,11 @@ fn print_usage() {
            --fixed-batch N (default 1)\n\
          PREDICT FLAGS:\n\
            --batch N --policy any|all|majority|atleast:k --target CLASS\n\
-           --detail --seed N"
+           --detail --seed N\n\
+         BENCH FLAGS:\n\
+           --connections K --duration-secs S --iters N --warmup N\n\
+           --batch-mix 1:0.7,8:0.2,32:0.1 --path /v1/predict --seed N\n\
+           --out BENCH_serve.json --echo (in-process echo target; no artifacts)"
     );
 }
 
@@ -214,7 +223,8 @@ fn cmd_predict(args: &[String]) -> Result<()> {
     let mut body = vec![
         (
             "data".to_string(),
-            Value::Arr(data.iter().map(|&v| Value::from(v)).collect()),
+            // Streaming float writer: no Value node per pixel.
+            json::f32_array_raw(data.iter().copied()),
         ),
         ("batch".to_string(), Value::from(batch)),
     ];
@@ -232,6 +242,86 @@ fn cmd_predict(args: &[String]) -> Result<()> {
     println!("true labels: {:?}", labels.iter().map(|&l| workload::CLASSES[l]).collect::<Vec<_>>());
     println!("status: {}", resp.status);
     println!("{}", json::to_string_pretty(&resp.json_body()?));
+    Ok(())
+}
+
+/// `flexserve bench` — drive a live server with the closed-loop load
+/// harness and write the `BENCH_serve.json` report (throughput, latency
+/// quantiles, and the server's per-stage parse/queue/exec/render
+/// breakdown scraped from `/v1/metrics`).
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let mut cfg = LoadConfig::default();
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut out = "BENCH_serve.json".to_string();
+    let mut echo = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut take = |flag: &str| -> Result<String> {
+            it.next()
+                .cloned()
+                .with_context(|| format!("{flag} needs a value"))
+        };
+        match a.as_str() {
+            "--addr" => addr = take("--addr")?,
+            "--connections" => cfg.connections = take("--connections")?.parse::<usize>()?.max(1),
+            "--duration-secs" => cfg.duration_secs = take("--duration-secs")?.parse()?,
+            "--iters" => cfg.iters = Some(take("--iters")?.parse()?),
+            "--warmup" => cfg.warmup = take("--warmup")?.parse()?,
+            "--batch-mix" => cfg.batch_mix = workload::parse_batch_mix(&take("--batch-mix")?)?,
+            "--path" => cfg.path = take("--path")?,
+            "--seed" => cfg.seed = take("--seed")?.parse()?,
+            "--out" => out = take("--out")?,
+            "--echo" => echo = true,
+            other => bail!("unknown bench flag '{other}'"),
+        }
+    }
+
+    // Echo mode: an in-process no-op target, so the harness itself can be
+    // exercised (CI smoke, `make bench`) with no artifacts and no device.
+    let echo_server = if echo {
+        let handle = Server::spawn(
+            "127.0.0.1:0",
+            cfg.connections.max(2),
+            Arc::new(|req: &flexserve::http::Request| {
+                Response::json(
+                    200,
+                    &json::obj([
+                        ("ok", Value::from(true)),
+                        ("body_len", Value::from(req.body.len())),
+                    ]),
+                )
+            }),
+        )?;
+        addr = handle.addr.to_string();
+        Some(handle)
+    } else {
+        None
+    };
+    cfg.addr = addr.parse().with_context(|| format!("bad --addr '{addr}'"))?;
+
+    eprintln!(
+        "bench: {} connections → {}{} ({})",
+        cfg.connections,
+        cfg.addr,
+        cfg.path,
+        match cfg.iters {
+            Some(n) => format!("{n} iters/connection"),
+            None => format!("{:.1}s", cfg.duration_secs),
+        },
+    );
+    let report = load::run(&cfg)?;
+    let stages = if echo {
+        None
+    } else {
+        load::fetch_stage_breakdown(cfg.addr)
+    };
+    let doc = load::report_json(&cfg, &report, stages.as_ref());
+    std::fs::write(&out, json::to_string_pretty(&doc)).with_context(|| format!("writing {out}"))?;
+    println!("{}", load::summary(&report));
+    println!("report: {out}");
+    if let Some(h) = echo_server {
+        h.stop();
+    }
     Ok(())
 }
 

@@ -8,10 +8,10 @@
 //! serialized exactly like N models sharing one GPU stream.
 
 use super::manifest::Manifest;
-use super::tensor;
+use super::tensor::{self, TensorView};
 use crate::util::Stopwatch;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -22,8 +22,9 @@ pub struct ExecRequest {
     pub model: String,
     /// True (unpadded) batch size; must be ≥ 1 and ≤ the model's max bucket.
     pub batch: usize,
-    /// Row-major `(batch, H, W, C)` input, already normalized.
-    pub data: Vec<f32>,
+    /// Row-major `(batch, H, W, C)` input, already normalized. A shared
+    /// view: N models × chunks all reference one request buffer.
+    pub data: TensorView,
 }
 
 /// Result of one inference job.
@@ -198,6 +199,12 @@ impl Drop for Executor {
     }
 }
 
+/// Compiled executables, nested `model name → bucket → executable`. The
+/// inner map is ordered so "smallest loaded bucket that fits" is a range
+/// query, and the outer map is queried with a borrowed `&str` — dispatch
+/// allocates no `(String, bucket)` key per request.
+type ExecutableMap = HashMap<String, BTreeMap<usize, xla::PjRtLoadedExecutable>>;
+
 /// Body of the device thread: compile everything, then serve jobs forever.
 fn device_thread(
     manifest: Arc<Manifest>,
@@ -205,9 +212,9 @@ fn device_thread(
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    let setup = (|| -> Result<(xla::PjRtClient, HashMap<(String, usize), xla::PjRtLoadedExecutable>)> {
+    let setup = (|| -> Result<(xla::PjRtClient, ExecutableMap)> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut executables = HashMap::new();
+        let mut executables = ExecutableMap::new();
         for model in &manifest.models {
             if let Some(want) = &opts.models {
                 if !want.contains(&model.name) {
@@ -261,7 +268,9 @@ fn device_thread(
                     };
                     let added =
                         compile_model(&client, &manifest, &load_opts, entry, &mut executables)?;
-                    if !executables.keys().any(|(n, _)| n == &model) {
+                    // Inner bucket maps are created only on insert, so
+                    // presence of the key means ≥ 1 executable.
+                    if !executables.contains_key(&model) {
                         bail!("bucket filter selects no artifacts for '{model}'");
                     }
                     Ok(added > 0)
@@ -269,9 +278,8 @@ fn device_thread(
                 let _ = reply.send(result);
             }
             Msg::Unload { model, reply } => {
-                let before = executables.len();
-                executables.retain(|(name, _), _| name != &model);
-                let _ = reply.send(Ok(executables.len() != before));
+                let had = executables.remove(&model).is_some();
+                let _ = reply.send(Ok(had));
             }
             Msg::Shutdown => break,
         }
@@ -286,7 +294,7 @@ fn compile_model(
     manifest: &Manifest,
     opts: &ExecutorOptions,
     model: &crate::runtime::ModelEntry,
-    executables: &mut HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    executables: &mut ExecutableMap,
 ) -> Result<usize> {
     let mut added = 0;
     for art in &model.buckets {
@@ -295,7 +303,10 @@ fn compile_model(
                 continue;
             }
         }
-        if executables.contains_key(&(model.name.clone(), art.bucket)) {
+        if executables
+            .get(&model.name)
+            .is_some_and(|b| b.contains_key(&art.bucket))
+        {
             continue;
         }
         if opts.verify_sha {
@@ -317,14 +328,17 @@ fn compile_model(
             run_one(&exe, &zeros, art.bucket, manifest)
                 .with_context(|| format!("warmup {} b{}", model.name, art.bucket))?;
         }
-        executables.insert((model.name.clone(), art.bucket), exe);
+        executables
+            .entry(model.name.clone())
+            .or_default()
+            .insert(art.bucket, exe);
         added += 1;
     }
     Ok(added)
 }
 
 fn execute_job(
-    executables: &HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    executables: &ExecutableMap,
     manifest: &Manifest,
     req: &ExecRequest,
 ) -> Result<(Vec<f32>, usize, u64)> {
@@ -343,30 +357,24 @@ fn execute_job(
     let model = manifest
         .model(&req.model)
         .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
-    if !executables.keys().any(|(n, _)| n == &req.model) {
-        bail!("model '{}' has no loaded executables (unloaded?)", req.model);
-    }
-    // Smallest *loaded* bucket that fits.
-    let bucket = model
-        .buckets
-        .iter()
-        .map(|a| a.bucket)
-        .filter(|b| *b >= req.batch)
-        .find(|b| executables.contains_key(&(req.model.clone(), *b)))
-        .ok_or_else(|| {
-            anyhow!(
-                "batch {} exceeds largest loaded bucket for '{}' (max {})",
-                req.batch,
-                req.model,
-                model.max_bucket()
-            )
-        })?;
-    let exe = &executables[&(req.model.clone(), bucket)];
+    // Borrowed `&str` lookup: the dispatch loop allocates no key strings.
+    let loaded = executables
+        .get(req.model.as_str())
+        .ok_or_else(|| anyhow!("model '{}' has no loaded executables (unloaded?)", req.model))?;
+    // Smallest *loaded* bucket that fits (the inner map is bucket-ordered).
+    let (&bucket, exe) = loaded.range(req.batch..).next().ok_or_else(|| {
+        anyhow!(
+            "batch {} exceeds largest loaded bucket for '{}' (max {})",
+            req.batch,
+            req.model,
+            model.max_bucket()
+        )
+    })?;
 
     let sw = Stopwatch::start();
     let padded;
     let feed: &[f32] = if bucket == req.batch {
-        &req.data
+        req.data.as_slice()
     } else {
         padded = tensor::pad_batch(&req.data, req.batch, bucket, elems);
         &padded

@@ -1,5 +1,96 @@
 //! Batch padding/truncation for bucketed executables (§2.3 flexible batch
-//! sizes under shape-specialized XLA AOT).
+//! sizes under shape-specialized XLA AOT), and the zero-copy payload
+//! carrier ([`TensorView`]) the whole data plane hands around.
+
+use std::sync::Arc;
+
+/// A shared, reference-counted view into a row-major f32 batch.
+///
+/// This is the zero-copy carrier of the predict hot path: the HTTP layer
+/// parses the request tensor once, wraps it, and every downstream consumer
+/// — the batcher, `Ensemble::forward`'s per-(model, chunk) fan-out, the
+/// device executors — holds a `TensorView` into the *same* buffer. Cloning
+/// and [`TensorView::slice`] are refcount bumps, never float copies.
+#[derive(Debug, Clone)]
+pub struct TensorView {
+    buf: Arc<[f32]>,
+    /// Float offset of this view's first element within `buf`.
+    offset: usize,
+    /// Float length of this view.
+    len: usize,
+}
+
+impl TensorView {
+    /// Sub-view of `len` floats starting `offset` floats into this view.
+    /// Shares the underlying buffer (no copy).
+    pub fn slice(&self, offset: usize, len: usize) -> TensorView {
+        assert!(
+            offset + len <= self.len,
+            "slice [{offset}, {}) out of view of {} floats",
+            offset + len,
+            self.len
+        );
+        TensorView {
+            buf: Arc::clone(&self.buf),
+            offset: self.offset + offset,
+            len,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf[self.offset..self.offset + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Deref for TensorView {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for TensorView {
+    /// The one conversion at the parse boundary; everything after it is
+    /// refcounted sharing.
+    fn from(v: Vec<f32>) -> TensorView {
+        let len = v.len();
+        TensorView {
+            buf: v.into(),
+            offset: 0,
+            len,
+        }
+    }
+}
+
+impl From<Arc<[f32]>> for TensorView {
+    fn from(buf: Arc<[f32]>) -> TensorView {
+        let len = buf.len();
+        TensorView { buf, offset: 0, len }
+    }
+}
+
+/// Copying conversions for offline tools (benches, tests) that hold plain
+/// slices; the serving path never goes through these.
+impl From<&[f32]> for TensorView {
+    fn from(v: &[f32]) -> TensorView {
+        TensorView::from(v.to_vec())
+    }
+}
+
+impl From<&Vec<f32>> for TensorView {
+    fn from(v: &Vec<f32>) -> TensorView {
+        TensorView::from(v.clone())
+    }
+}
 
 /// Pad a row-major `(batch, elems)` tensor up to `bucket` rows with zeros.
 /// Returns the input unchanged when `batch == bucket`.
@@ -52,6 +143,28 @@ pub fn softmax_rows(data: &mut [f32], elems: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tensor_view_shares_without_copying() {
+        let view = TensorView::from(vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let a = view.slice(0, 2);
+        let b = view.slice(2, 4);
+        assert_eq!(a.as_slice(), &[1.0, 2.0]);
+        assert_eq!(b.as_slice(), &[3.0, 4.0, 5.0, 6.0]);
+        // Sub-slicing a sub-view stays anchored to the shared buffer.
+        assert_eq!(b.slice(1, 2).as_slice(), &[4.0, 5.0]);
+        // Same backing allocation for every view.
+        assert_eq!(view.as_slice().as_ptr(), a.as_slice().as_ptr());
+        assert_eq!(unsafe { view.as_slice().as_ptr().add(2) }, b.as_slice().as_ptr());
+        assert_eq!(view.len(), 6);
+        assert!(!view.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn tensor_view_slice_bounds_checked() {
+        TensorView::from(vec![0.0f32; 4]).slice(2, 3);
+    }
 
     #[test]
     fn pad_and_truncate_roundtrip() {

@@ -131,6 +131,54 @@ pub struct Arrival {
     pub batch: usize,
 }
 
+/// Weighted draw from a `(value, weight)` mix — the batch-size sampler
+/// shared by the open-loop schedules and the `flexserve bench` closed
+/// loop. Weights need not sum to 1.
+pub fn pick_weighted(rng: &mut Prng, mix: &[(usize, f64)]) -> usize {
+    debug_assert!(!mix.is_empty());
+    let total_w: f64 = mix.iter().map(|(_, w)| w).sum();
+    let mut pick = rng.next_f64() * total_w;
+    for (v, w) in mix {
+        if pick < *w {
+            return *v;
+        }
+        pick -= w;
+    }
+    mix[0].0 // float-edge fallback
+}
+
+/// Parse a `"1:0.7,8:0.2,32:0.1"` batch-mix spec into `(batch, weight)`
+/// pairs. A bare `"8"` means a single batch size with weight 1.
+pub fn parse_batch_mix(spec: &str) -> anyhow::Result<Vec<(usize, f64)>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let (batch, weight) = match part.split_once(':') {
+            Some((b, w)) => (
+                b.parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("bad batch '{b}' in mix: {e}"))?,
+                w.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("bad weight '{w}' in mix: {e}"))?,
+            ),
+            None => (
+                part.parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("bad batch '{part}' in mix: {e}"))?,
+                1.0,
+            ),
+        };
+        if batch == 0 {
+            anyhow::bail!("batch sizes in the mix must be ≥ 1");
+        }
+        if weight.is_nan() || weight <= 0.0 {
+            anyhow::bail!("weights in the mix must be > 0");
+        }
+        mix.push((batch, weight));
+    }
+    if mix.is_empty() {
+        anyhow::bail!("empty batch mix '{spec}'");
+    }
+    Ok(mix)
+}
+
 /// Open-loop Poisson arrival schedule: `rate` requests/sec for `secs`
 /// seconds, batch sizes drawn from `batch_mix` uniformly-by-weight.
 pub fn poisson_schedule(
@@ -140,7 +188,6 @@ pub fn poisson_schedule(
     batch_mix: &[(usize, f64)],
 ) -> Vec<Arrival> {
     assert!(!batch_mix.is_empty());
-    let total_w: f64 = batch_mix.iter().map(|(_, w)| w).sum();
     let mut out = Vec::new();
     let mut t = 0.0;
     loop {
@@ -148,18 +195,9 @@ pub fn poisson_schedule(
         if t >= secs {
             break;
         }
-        let mut pick = rng.next_f64() * total_w;
-        let mut batch = batch_mix[0].0;
-        for (b, w) in batch_mix {
-            if pick < *w {
-                batch = *b;
-                break;
-            }
-            pick -= w;
-        }
         out.push(Arrival {
             at: std::time::Duration::from_secs_f64(t),
-            batch,
+            batch: pick_weighted(rng, batch_mix),
         });
     }
     out
@@ -221,6 +259,33 @@ mod tests {
         for (f, p) in frames.iter().zip(&present) {
             assert_eq!(f.label == 2, *p);
         }
+    }
+
+    #[test]
+    fn batch_mix_parses() {
+        assert_eq!(
+            parse_batch_mix("1:0.7,8:0.2,32:0.1").unwrap(),
+            vec![(1, 0.7), (8, 0.2), (32, 0.1)]
+        );
+        assert_eq!(parse_batch_mix("8").unwrap(), vec![(8, 1.0)]);
+        for bad in ["", "0:1", "1:-2", "x:1", "1:x", "1:0"] {
+            assert!(parse_batch_mix(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn weighted_pick_respects_support() {
+        let mut rng = Prng::new(9);
+        let mix = [(1usize, 0.5), (8, 0.5)];
+        let mut seen = [0u32; 2];
+        for _ in 0..200 {
+            match pick_weighted(&mut rng, &mix) {
+                1 => seen[0] += 1,
+                8 => seen[1] += 1,
+                other => panic!("picked {other}, not in mix"),
+            }
+        }
+        assert!(seen[0] > 0 && seen[1] > 0);
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Property tests over coordinator invariants (no device needed): JSON
-//! round-trips, policy algebra, batcher coalescing/slicing, padding.
+//! round-trips, policy algebra, batcher coalescing/slicing, padding, and
+//! the differential contract between the streaming `"data"` scanner and
+//! the general recursive-descent parser.
 
 use flexserve::coordinator::policy::Policy;
+use flexserve::coordinator::wire::{scan_predict_body, PredictRequest};
+use flexserve::http::Request;
 use flexserve::json::{self, Value};
 use flexserve::runtime::tensor::{argmax_rows, pad_batch, softmax_rows, truncate_batch};
+use flexserve::runtime::Manifest;
 use flexserve::util::prop::{check, Gen};
+use std::path::PathBuf;
 
 fn gen_value(g: &mut Gen, depth: usize) -> Value {
     match if depth >= 3 { g.int(0, 3) } else { g.int(0, 5) } {
@@ -106,6 +112,172 @@ fn prop_policy_complement_duality() {
             Policy::All.fuse(&votes).unwrap(),
             !Policy::Any.fuse(&inverted).unwrap()
         );
+    });
+}
+
+// ---- fast scanner ≡ general parser -------------------------------------
+
+/// A tiny manifest (2x2x1 input, 4 floats per sample) so shape validation
+/// in `PredictRequest` is exercised without artifacts.
+fn prop_manifest() -> Manifest {
+    let v = json::parse(
+        r#"{
+          "format_version": 1,
+          "input_shape": [2, 2, 1],
+          "classes": ["blank", "cross"],
+          "normalize": {"mean": 0.0, "std": 1.0},
+          "buckets": [1, 4],
+          "models": {
+            "m1": {
+              "param_count": 1, "test_acc": 0.9, "params_sha256": "ab",
+              "buckets": {"1": {"file": "f", "sha256": "x", "bytes": 1}}
+            }
+          }
+        }"#,
+    )
+    .unwrap();
+    Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap()
+}
+
+/// One array element: mostly well-formed floats in every spelling the
+/// grammar allows (ints, decimals, exponents), plus the classics the
+/// scanner must NOT accept differently (NaN/Inf words, leading zeros,
+/// bare dots, strings, nested junk).
+fn gen_float_token(g: &mut Gen) -> String {
+    match g.int(0, 11) {
+        0 => format!("{}", g.int(0, 1000)),
+        1 => format!("-{}", g.int(0, 1000)),
+        2 => format!("{}.{}", g.int(0, 50), g.int(0, 999)),
+        3 => format!("-{}.{}", g.int(0, 9), g.int(0, 99)),
+        4 => format!("{}e{}", g.int(1, 9), g.int(0, 3)),
+        5 => format!("{}.{}E-{}", g.int(0, 9), g.int(0, 9), g.int(0, 2)),
+        6 => format!("{}e+{}", g.int(1, 9), g.int(0, 2)),
+        7 => "1e999".to_string(), // f64 inf → rejected as non-finite f32
+        8 => "0".to_string(),
+        9 => format!("{}", (g.int(0, 2_000_000) as f64 - 1_000_000.0) / 977.0),
+        _ => (*g.choose(&[
+            "NaN", "Infinity", "-Inf", "01", "1.", ".5", "+1", "-", "0x1", "1e", "1e+",
+            "true", "null", "\"x\"", "[1]", "{}",
+        ]))
+        .to_string(),
+    }
+}
+
+/// Random whitespace (valid JSON separators only).
+fn gen_ws(g: &mut Gen) -> &'static str {
+    *g.choose(&["", "", "", " ", "  ", "\n", "\t ", " \r\n "])
+}
+
+/// A predict body: usually `{"data": [...]}` plus optional small members,
+/// then possibly mutated (truncation / trailing garbage / mid-body junk)
+/// so malformed inputs are covered too.
+fn gen_predict_body(g: &mut Gen) -> String {
+    let mut body = String::from("{");
+    let n = g.int(0, 10);
+    body.push_str(gen_ws(g));
+    body.push_str("\"data\"");
+    body.push_str(gen_ws(g));
+    body.push(':');
+    body.push_str(gen_ws(g));
+    body.push('[');
+    for i in 0..n {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(gen_ws(g));
+        body.push_str(&gen_float_token(g));
+        body.push_str(gen_ws(g));
+    }
+    body.push(']');
+    if g.bool(0.5) {
+        body.push_str(&format!(",{}\"batch\"{}:{}", gen_ws(g), gen_ws(g), g.int(0, 5)));
+    }
+    if g.bool(0.3) {
+        body.push_str(",\"normalized\":true");
+    }
+    if g.bool(0.25) {
+        body.push_str(",\"detail\":1"); // wrong type on purpose: both paths must agree
+    }
+    if g.bool(0.2) {
+        body.push_str(",\"models\":[\"m1\"]");
+    }
+    if g.bool(0.15) {
+        body.push_str(",\"junk\":{\"nested\":[1,{\"k\":null}]}");
+    }
+    if g.bool(0.1) {
+        body.push_str(",\"data\":[1,2]"); // duplicate member
+    }
+    if g.bool(0.1) {
+        body.push_str(",\"pgm_b64\":[\"aGk=\"]");
+    }
+    body.push('}');
+    // Structural mutations (bodies are pure ASCII, so any byte index is a
+    // char boundary).
+    match g.int(0, 11) {
+        0 => {
+            let cut = g.int(0, body.len());
+            body.truncate(cut);
+        }
+        1 => body.push_str(" junk"),
+        2 => {
+            let at = g.int(0, body.len());
+            body.insert(at, *g.choose(&['!', '}', ',', 'x']));
+        }
+        _ => {}
+    }
+    body
+}
+
+#[test]
+fn prop_fast_parse_matches_general_parse() {
+    let manifest = prop_manifest();
+    check("fast predict parse ≡ general parse", 800, |g| {
+        let body = gen_predict_body(g);
+        let req = Request::new("POST", "/v1/predict", body.clone().into_bytes());
+        let fast = PredictRequest::parse(&manifest, &req);
+        let slow = PredictRequest::parse_general(&manifest, &req);
+        match (fast, slow) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.data, b.data, "data mismatch for {body:?}");
+                assert_eq!(a.batch, b.batch, "batch mismatch for {body:?}");
+                assert_eq!(a.normalized, b.normalized, "{body:?}");
+                assert_eq!(a.models, b.models, "{body:?}");
+                assert_eq!(a.detail, b.detail, "{body:?}");
+            }
+            (Err(a), Err(b)) => assert_eq!(
+                (a.status, a.code),
+                (b.status, b.code),
+                "error mismatch for {body:?}: '{a}' vs '{b}'"
+            ),
+            (a, b) => panic!(
+                "accept/reject divergence for {body:?}: fast_ok={} general_ok={}",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_scanner_agrees_with_value_tree() {
+    check("scanner floats ≡ Value-tree floats", 600, |g| {
+        let body = gen_predict_body(g);
+        let Some((data, rest)) = scan_predict_body(&body) else {
+            return; // fallback case — covered by the differential test
+        };
+        // Anything the scanner accepts, the general parser must accept…
+        let v = json::parse(&body)
+            .unwrap_or_else(|e| panic!("scanner accepted, parser rejected {body:?}: {e}"));
+        // …with bit-identical floats…
+        let tree = v
+            .get("data")
+            .and_then(Value::as_f32_vec)
+            .unwrap_or_else(|| panic!("scanner accepted non-numeric data in {body:?}"));
+        assert_eq!(data, tree, "{body:?}");
+        // …and identical non-data members.
+        for key in ["batch", "normalized", "detail", "models", "junk", "pgm_b64"] {
+            assert_eq!(rest.get(key), v.get(key), "member '{key}' of {body:?}");
+        }
     });
 }
 

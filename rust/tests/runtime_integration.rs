@@ -80,7 +80,7 @@ fn executor_runs_every_model_and_bucket() {
                 .infer(ExecRequest {
                     model: model.name.clone(),
                     batch: b,
-                    data: noise_batch(&m, b, 42 + b as u64),
+                    data: noise_batch(&m, b, 42 + b as u64).into(),
                 })
                 .unwrap_or_else(|e| panic!("{} b{b}: {e}", model.name));
             assert_eq!(resp.logits.len(), b * m.num_classes());
@@ -107,14 +107,14 @@ fn padding_does_not_change_results() {
             .infer(ExecRequest {
                 model: model.clone(),
                 batch: 4,
-                data: data4.clone(),
+                data: data4.clone().into(),
             })
             .unwrap();
         let r3 = h
             .infer(ExecRequest {
                 model: model.clone(),
                 batch: 3,
-                data: data3.clone(),
+                data: data3.clone().into(),
             })
             .unwrap();
         assert_eq!(r3.bucket, 4, "batch 3 should round up to bucket 4");
@@ -138,7 +138,7 @@ fn deterministic_across_calls() {
     let req = ExecRequest {
         model: "cnn_s".into(),
         batch: 2,
-        data,
+        data: data.into(),
     };
     let a = h.infer(req.clone()).unwrap();
     let b = h.infer(req).unwrap();
@@ -159,7 +159,7 @@ fn models_disagree_on_inputs() {
             .infer(ExecRequest {
                 model,
                 batch: 8,
-                data: data.clone(),
+                data: data.clone().into(),
             })
             .unwrap();
         all_logits.push(r.logits);
@@ -202,7 +202,7 @@ fn classifies_synthetic_shapes_correctly() {
         .infer(ExecRequest {
             model: "cnn_m".into(),
             batch: 3,
-            data: frames,
+            data: frames.into(),
         })
         .unwrap();
     let preds = argmax_rows(&r.logits, m.num_classes());
@@ -230,7 +230,7 @@ fn subset_loading_and_errors() {
         .infer(ExecRequest {
             model: "mlp".into(),
             batch: 2,
-            data: noise_batch(&m, 2, 1),
+            data: noise_batch(&m, 2, 1).into(),
         })
         .unwrap();
     assert_eq!(r.bucket, 8);
@@ -239,7 +239,7 @@ fn subset_loading_and_errors() {
         .infer(ExecRequest {
             model: "cnn_s".into(),
             batch: 1,
-            data: noise_batch(&m, 1, 1),
+            data: noise_batch(&m, 1, 1).into(),
         })
         .is_err());
     // Oversized batch errors cleanly.
@@ -247,7 +247,7 @@ fn subset_loading_and_errors() {
         .infer(ExecRequest {
             model: "mlp".into(),
             batch: 9,
-            data: noise_batch(&m, 9, 1),
+            data: noise_batch(&m, 9, 1).into(),
         })
         .is_err());
     // Wrong payload size errors cleanly.
@@ -255,7 +255,7 @@ fn subset_loading_and_errors() {
         .infer(ExecRequest {
             model: "mlp".into(),
             batch: 2,
-            data: vec![0.0; 7],
+            data: vec![0.0f32; 7].into(),
         })
         .is_err());
 }
@@ -278,7 +278,7 @@ fn runtime_load_unload_roundtrip() {
     let probe = || ExecRequest {
         model: "cnn_s".into(),
         batch: 1,
-        data: noise_batch(&m, 1, 2),
+        data: noise_batch(&m, 1, 2).into(),
     };
     // Not resident at boot.
     assert!(h.infer(probe()).is_err());
