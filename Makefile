@@ -8,6 +8,8 @@
 #   make bench       build the bench harness and smoke it against an
 #                    in-process echo target (no artifacts needed); point
 #                    it at a live server with BENCH_FLAGS='--addr ...'
+#   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs
+#                    drift from the README "Protocols" matrix
 #
 # `artifacts` needs the python side (jax + the pallas kernels); the Rust
 # targets need only cargo. Device-backed Rust tests self-skip when
@@ -18,7 +20,7 @@ ARTIFACTS ?= rust/artifacts
 
 BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
 
-.PHONY: artifacts serve test bench fmt clippy
+.PHONY: artifacts serve test bench check-docs fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -32,6 +34,16 @@ test:
 bench:
 	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --out ../BENCH_serve.json
 	@echo "wrote BENCH_serve.json"
+
+# Every quoted "/v2..." string in v2.rs is a route pattern (the module
+# keeps other /v2 spellings out of string literals); each must appear
+# verbatim in the README's Protocols section.
+check-docs:
+	@ok=1; \
+	for r in $$(grep -oE '"/v2[^"]*"' rust/src/coordinator/v2.rs | tr -d '"' | sort -u); do \
+		grep -qF -- "$$r" README.md || { echo "check-docs: README.md is missing v2 route $$r"; ok=0; }; \
+	done; \
+	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route in v2.rs"
 
 fmt:
 	cd rust && cargo fmt --check

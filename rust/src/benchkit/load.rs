@@ -1,11 +1,17 @@
 //! Closed-loop HTTP load harness behind `flexserve bench`.
 //!
 //! K keep-alive connections, each a thread running its own closed loop:
-//! pick a batch size from the configured mix, fire a pre-rendered
-//! `/v1/predict` body, record the wall-clock latency, repeat. Bodies are
-//! rendered ONCE per (connection, batch-size, variant) through the
-//! streaming float writer so the harness measures the server, not the
-//! client's JSON encoder.
+//! pick a batch size from the configured mix, fire a pre-rendered predict
+//! body, record the wall-clock latency, repeat. Bodies are rendered ONCE
+//! per (connection, batch-size, variant) through the streaming float
+//! writer so the harness measures the server, not the client's JSON
+//! encoder.
+//!
+//! The harness speaks both wire protocols ([`Protocol`]): `v1` fires the
+//! paper-format `/v1/predict` body, `v2` fires an Open-Inference-Protocol
+//! `/v2/models/_ensemble/infer` body — same tensors, different codec — so
+//! `BENCH_serve.json` runs (which record `"protocol"`) can compare codec
+//! overhead across the perf trajectory.
 //!
 //! Deterministic mode (`iters`) drives an exact per-connection request
 //! count — that is what the smoke test and the CI step use; wall-clock
@@ -15,9 +21,43 @@ use crate::http::{Client, Request, Response};
 use crate::json::{self, ser, Value};
 use crate::util::{Histogram, Prng, Stopwatch};
 use crate::workload;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
 use std::sync::Barrier;
+
+/// Which wire protocol the generated load speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// Paper-format `POST /v1/predict` bodies.
+    V1,
+    /// Open-Inference-Protocol `POST /v2/models/_ensemble/infer` bodies.
+    V2,
+}
+
+impl Protocol {
+    pub fn parse(s: &str) -> Result<Protocol> {
+        match s {
+            "v1" => Ok(Protocol::V1),
+            "v2" => Ok(Protocol::V2),
+            other => bail!("unknown protocol '{other}' (expected v1 or v2)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Protocol::V1 => "v1",
+            Protocol::V2 => "v2",
+        }
+    }
+
+    /// The predict endpoint this protocol drives unless `--path` overrides.
+    pub fn default_path(self) -> &'static str {
+        match self {
+            Protocol::V1 => "/v1/predict",
+            Protocol::V2 => "/v2/models/_ensemble/infer",
+        }
+    }
+}
 
 /// Pre-rendered body variants per (connection, batch size): enough to
 /// defeat trivial caching anywhere on the path, few enough to stay cheap.
@@ -36,9 +76,19 @@ pub struct LoadConfig {
     pub warmup: u64,
     /// `(batch size, weight)` mix, sampled per request.
     pub batch_mix: Vec<(usize, f64)>,
-    /// Request path (default `/v1/predict`).
-    pub path: String,
+    /// Wire protocol the generated bodies speak.
+    pub protocol: Protocol,
+    /// Request path override (`None` = the protocol's predict endpoint).
+    pub path: Option<String>,
     pub seed: u64,
+}
+
+impl LoadConfig {
+    /// The path requests are fired at: the explicit override, or the
+    /// protocol's default predict endpoint.
+    pub fn effective_path(&self) -> &str {
+        self.path.as_deref().unwrap_or(self.protocol.default_path())
+    }
 }
 
 impl Default for LoadConfig {
@@ -50,7 +100,8 @@ impl Default for LoadConfig {
             iters: None,
             warmup: 20,
             batch_mix: vec![(1, 0.7), (8, 0.2), (32, 0.1)],
-            path: "/v1/predict".into(),
+            protocol: Protocol::V1,
+            path: None,
             seed: 0,
         }
     }
@@ -89,16 +140,29 @@ struct ConnStats {
     measured_secs: f64,
 }
 
-/// Render one `{"data": [...], "batch": N}` body via the streaming float
-/// writer (no `Value` boxing on the client either).
-fn predict_body(rng: &mut Prng, batch: usize) -> Vec<u8> {
+/// Render one protocol-correct predict body via the streaming float
+/// writer (no `Value` boxing on the client either): the paper-format
+/// `{"data": [...], "batch": N}` for v1, an Open-Inference-Protocol
+/// tensor document for v2.
+fn predict_body(protocol: Protocol, rng: &mut Prng, batch: usize) -> Vec<u8> {
     let (data, _) = workload::make_batch(rng, batch);
-    let mut out = String::with_capacity(data.len() * 12 + 32);
-    out.push_str("{\"data\":");
-    ser::write_f32_array(&mut out, data.iter().copied());
-    out.push_str(",\"batch\":");
-    out.push_str(&batch.to_string());
-    out.push('}');
+    let mut out = String::with_capacity(data.len() * 12 + 128);
+    match protocol {
+        Protocol::V1 => {
+            out.push_str("{\"data\":");
+            ser::write_f32_array(&mut out, data.iter().copied());
+            out.push_str(",\"batch\":");
+            out.push_str(&batch.to_string());
+            out.push('}');
+        }
+        Protocol::V2 => {
+            out.push_str("{\"inputs\":[{\"name\":\"input\",\"datatype\":\"FP32\",\"shape\":[");
+            out.push_str(&batch.to_string());
+            out.push_str(&format!(",{},{},1],\"data\":", workload::IMG, workload::IMG));
+            ser::write_f32_array(&mut out, data.iter().copied());
+            out.push_str("}]}");
+        }
+    }
     out.into_bytes()
 }
 
@@ -124,7 +188,12 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
         .iter()
         .map(|&b| {
             let variants = (0..BODY_VARIANTS)
-                .map(|_| build_request(&cfg.path, predict_body(&mut rng, b)))
+                .map(|_| {
+                    build_request(
+                        cfg.effective_path(),
+                        predict_body(cfg.protocol, &mut rng, b),
+                    )
+                })
                 .collect();
             (b, variants)
         })
@@ -277,7 +346,8 @@ pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<
             "config",
             json::obj([
                 ("addr", Value::from(cfg.addr.to_string())),
-                ("path", Value::from(cfg.path.as_str())),
+                ("protocol", Value::from(cfg.protocol.as_str())),
+                ("path", Value::from(cfg.effective_path())),
                 ("connections", Value::from(cfg.connections)),
                 (
                     "duration_secs",
@@ -405,6 +475,64 @@ mod tests {
         // Echo servers expose no /v1/metrics stage histograms.
         assert!(fetch_stage_breakdown(server.addr).is_none());
         server.stop();
+    }
+
+    #[test]
+    fn v2_protocol_renders_oip_bodies_and_records_protocol() {
+        // Bodies are protocol-correct OIP tensor documents.
+        let mut rng = crate::util::Prng::new(3);
+        let body = predict_body(Protocol::V2, &mut rng, 2);
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let t = v.get("inputs").unwrap().at(0).unwrap();
+        assert_eq!(t.get("name").unwrap().as_str(), Some("input"));
+        assert_eq!(t.get("datatype").unwrap().as_str(), Some("FP32"));
+        let shape: Vec<usize> = t
+            .get("shape")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        assert_eq!(shape, vec![2, workload::IMG, workload::IMG, 1]);
+        assert_eq!(
+            t.get("data").unwrap().as_f32_vec().unwrap().len(),
+            2 * workload::IMG * workload::IMG
+        );
+
+        // The closed loop drives the v2 path and the report records it.
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: &crate::http::Request| {
+                assert_eq!(req.path, "/v2/models/_ensemble/infer");
+                Response::json(200, &json::obj([("ok", Value::from(true))]))
+            }),
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 1,
+            iters: Some(3),
+            warmup: 0,
+            batch_mix: vec![(1, 1.0)],
+            protocol: Protocol::V2,
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!((report.requests, report.errors), (3, 0));
+        let doc = report_json(&cfg, &report, None);
+        assert_eq!(doc.path(&["config", "protocol"]).unwrap().as_str(), Some("v2"));
+        assert_eq!(
+            doc.path(&["config", "path"]).unwrap().as_str(),
+            Some("/v2/models/_ensemble/infer")
+        );
+        server.stop();
+
+        // v1 stays the default.
+        assert_eq!(LoadConfig::default().protocol, Protocol::V1);
+        assert_eq!(LoadConfig::default().effective_path(), "/v1/predict");
+        assert!(Protocol::parse("v3").is_err());
     }
 
     #[test]

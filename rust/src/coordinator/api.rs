@@ -26,16 +26,21 @@
 //! Errors everywhere use `{"error": {"code", "message"}}` with stable
 //! codes from [`super::wire::ApiError`]; middleware (request-ids,
 //! per-route latency metrics, access logging) lives in the router.
+//!
+//! Both predict handlers lower into the protocol-agnostic inference core
+//! ([`super::infer`]), which also backs the `/v2` Open Inference Protocol
+//! surface ([`super::v2`]) registered alongside these routes.
 
-use super::batcher::{Batcher, BatcherConfig, BatchStats};
-use super::ensemble::{Ensemble, EnsembleOutput};
+use super::batcher::{Batcher, BatcherConfig};
+use super::ensemble::Ensemble;
+use super::infer;
 use super::metrics::Metrics;
-use super::wire::{self, ApiError, PredictRequest, StageMicros};
+use super::wire::{self, ApiError, PredictRequest};
 use crate::http::router::{Params, RequestInfo, RouteHandler, RouterObserver};
 use crate::http::{Request, Response, Router};
 use crate::imagepipe::Normalizer;
 use crate::json::{self, Value};
-use crate::runtime::{Manifest, ModelEntry, TensorView};
+use crate::runtime::{Manifest, ModelEntry};
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::Arc;
@@ -83,7 +88,7 @@ impl ServerState {
 
     /// Lifecycle status of one model: `active` (loaded + serving in the
     /// ensemble), `loaded` (resident, not in the active set), `unloaded`.
-    fn model_status(&self, name: &str) -> &'static str {
+    pub(crate) fn model_status(&self, name: &str) -> &'static str {
         if !self.ensemble.pool().is_loaded(name) {
             "unloaded"
         } else if self.ensemble.models().iter().any(|m| m == name) {
@@ -151,10 +156,23 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
 
     let s = Arc::clone(&state);
     let metrics: RouteHandler = Arc::new(move |req, _p| {
-        if req.query_param("format") == Some("json") {
-            Response::json(200, &s.metrics.render_json())
-        } else {
-            Response::text(200, &s.metrics.render_text())
+        // Exposition selection: explicit `?format=` wins; with no format,
+        // an `Accept` header naming text/plain selects the Prometheus
+        // exposition (what scrapers send); default stays the legacy text.
+        match req.query_param("format") {
+            Some("json") => Response::json(200, &s.metrics.render_json()),
+            Some("prometheus") => prometheus_response(&s.metrics),
+            Some(_) => Response::text(200, &s.metrics.render_text()),
+            None => {
+                let accepts_plain = req
+                    .header("accept")
+                    .is_some_and(|a| a.contains("text/plain"));
+                if accepts_plain {
+                    prometheus_response(&s.metrics)
+                } else {
+                    Response::text(200, &s.metrics.render_text())
+                }
+            }
         }
     });
     router.add_shared("GET", "/v1/metrics", Arc::clone(&metrics));
@@ -202,7 +220,21 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
         Response::json(200, &ensemble_snapshot(&s))
     });
 
+    // ---- /v2: Open Inference Protocol over the same core -----------------
+    super::v2::add_routes(&mut router, Arc::clone(&state));
+
     router
+}
+
+/// Prometheus text-exposition response (`text/plain; version=0.0.4`).
+fn prometheus_response(metrics: &Metrics) -> Response {
+    let mut resp = Response::new(200);
+    resp.headers.push((
+        "content-type".into(),
+        "text/plain; version=0.0.4; charset=utf-8".into(),
+    ));
+    resp.body = metrics.render_prometheus().into_bytes();
+    resp
 }
 
 /// Wrap one control-plane operation with the shared error policy: render
@@ -333,88 +365,23 @@ fn lifecycle_json(s: &ServerState, entry: &ModelEntry, status: &str) -> Value {
 
 fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
     let parse_sw = Stopwatch::start();
-    let mut input = PredictRequest::parse(&s.manifest, req)?;
-    s.metrics.add("rows_total", input.batch as u64);
+    let input = PredictRequest::parse(&s.manifest, req)?;
+    // Lower into the protocol-agnostic IR and run the shared core; the
+    // paper-format rendering below is the only /v1-specific part left.
+    let done = infer::execute(s, input.into_inference(&s.manifest), None, parse_sw)?;
 
-    // §2.2: the ONE shared data transformation for the whole ensemble.
-    if !input.normalized {
-        s.normalizer.apply(&mut input.data);
-    }
-    let parse_us = parse_sw.elapsed_micros();
-    s.metrics.observe_stage("stage_parse_us", parse_us);
-
-    // Typed membership check before any device work (the batcher path
-    // re-checks at flush time; see wire.rs for the taxonomy).
-    if input.models.is_none() && s.ensemble.models().is_empty() {
-        return Err(ApiError::ensemble_empty());
-    }
-
-    // Move the payload into the shared zero-copy view: the batcher, the
-    // ensemble fan-out and the device executors all reference this one
-    // buffer from here on.
-    let data = TensorView::from(std::mem::take(&mut input.data));
-
-    // Custom model subsets bypass the shared batcher (its batches are for
-    // the current full ensemble); everything else coalesces.
-    let (output, stats): (EnsembleOutput, Option<BatchStats>) = match (&input.models, &s.batcher) {
-        (None, Some(batcher)) => {
-            let (out, st) = batcher
-                .submit(data, input.batch)
-                .map_err(ApiError::from_anyhow)?;
-            s.metrics
-                .observe_micros("coalesced_rows", st.coalesced_rows as u64);
-            (out, Some(st))
-        }
-        (None, None) => (
-            s.ensemble
-                .forward(data, input.batch)
-                .map_err(ApiError::from_anyhow)?,
-            None,
-        ),
-        (Some(names), _) => {
-            let sub = s
-                .ensemble
-                .with_models(names.clone())
-                .map_err(ApiError::from_anyhow)?;
-            (
-                sub.forward(data, input.batch)
-                    .map_err(ApiError::from_anyhow)?,
-                None,
-            )
-        }
-    };
-
-    let stages = observe_output_stages(s, parse_us, &output, stats.as_ref());
     let render_sw = Stopwatch::start();
-    let body = wire::render_predict(&s.manifest, &input, &output, stats, Some(stages))?;
+    let body = wire::render_predict(
+        &s.manifest,
+        &done.params,
+        &done.output,
+        done.stats,
+        Some(done.stages),
+    )?;
     let resp = Response::json(200, &body);
     s.metrics
         .observe_stage("stage_render_us", render_sw.elapsed_micros());
     Ok(resp)
-}
-
-/// Fold one forward's device timings into the `stage_*` histograms and
-/// return the per-request breakdown for `detail.stages`.
-fn observe_output_stages(
-    s: &ServerState,
-    parse_us: u64,
-    output: &EnsembleOutput,
-    stats: Option<&BatchStats>,
-) -> StageMicros {
-    let mut exec_us = 0;
-    let mut queue_us = stats.map(|st| st.wait_micros).unwrap_or(0);
-    for m in &output.per_model {
-        s.metrics.observe_micros("device_exec_us", m.exec_micros);
-        exec_us += m.exec_micros;
-        queue_us += m.queue_micros;
-    }
-    s.metrics.observe_stage("stage_queue_us", queue_us);
-    s.metrics.observe_stage("stage_exec_us", exec_us);
-    StageMicros {
-        parse_us,
-        queue_us,
-        exec_us,
-    }
 }
 
 /// Single-model fast path: one model, no ensemble fan-out, no shared
@@ -429,25 +396,11 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
         return Err(ApiError::model_not_loaded(name));
     }
     let parse_sw = Stopwatch::start();
-    let mut input = PredictRequest::parse(&s.manifest, req)?;
-    s.metrics.add("rows_total", input.batch as u64);
-    if !input.normalized {
-        s.normalizer.apply(&mut input.data);
-    }
-    let parse_us = parse_sw.elapsed_micros();
-    s.metrics.observe_stage("stage_parse_us", parse_us);
-    let data = TensorView::from(std::mem::take(&mut input.data));
-    let single = s
-        .ensemble
-        .with_models(vec![name.to_string()])
-        .map_err(ApiError::from_anyhow)?;
-    let output = single
-        .forward(data, input.batch)
-        .map_err(ApiError::from_anyhow)?;
-    let stages = observe_output_stages(s, parse_us, &output, None);
+    let input = PredictRequest::parse(&s.manifest, req)?;
+    let done = infer::execute(s, input.into_inference(&s.manifest), Some(name), parse_sw)?;
 
     let render_sw = Stopwatch::start();
-    let m = &output.per_model[0];
+    let m = &done.output.per_model[0];
     let predictions =
         json::str_array_raw(m.preds.iter().map(|(idx, _)| s.manifest.classes[*idx].as_str()));
     let mut members = vec![
@@ -458,11 +411,11 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
             Value::from(entry.params_sha256.as_str()),
         ),
     ];
-    if input.detail {
+    if done.params.detail {
         members.push((
             "detail".to_string(),
             json::obj([
-                ("batch", Value::from(output.batch)),
+                ("batch", Value::from(done.output.batch)),
                 ("probs", json::f32_array_raw(m.preds.iter().map(|(_, p)| *p))),
                 (
                     "buckets",
@@ -470,7 +423,7 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
                 ),
                 ("exec_us", Value::from(m.exec_micros)),
                 ("queue_us", Value::from(m.queue_micros)),
-                ("stages", stages.to_json()),
+                ("stages", done.stages.to_json()),
             ]),
         ));
     }

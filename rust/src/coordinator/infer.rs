@@ -1,0 +1,257 @@
+//! The protocol-agnostic inference core: a wire-neutral request IR
+//! ([`InferenceRequest`]) plus the one execution path
+//! ([`execute`]) that every protocol surface lowers into.
+//!
+//! Both codecs are thin layers over this module:
+//!
+//! * the `/v1` extractor ([`super::wire::PredictRequest`]) lowers the
+//!   paper-format body into an [`InferenceRequest`] via
+//!   `PredictRequest::into_inference`;
+//! * the `/v2` Open-Inference-Protocol codec ([`super::v2`]) parses named,
+//!   typed, shaped tensors into the same IR (converting non-f32 dtypes to
+//!   the device's f32 storage at the boundary).
+//!
+//! [`execute`] owns everything protocol-independent: normalization, the
+//! batcher-vs-direct-vs-subset routing, the single-model fast path, and
+//! the per-stage metrics. Response *rendering* stays with each protocol
+//! (paper wire format in `wire.rs`/`api.rs`, OIP JSON in `v2.rs`).
+
+use super::api::ServerState;
+use super::batcher::BatchStats;
+use super::ensemble::EnsembleOutput;
+use super::policy::Policy;
+use super::wire::{ApiError, StageMicros};
+use crate::runtime::{DType, Manifest, TensorView};
+use crate::util::Stopwatch;
+
+/// One named, typed, shaped input tensor, already converted to the
+/// device's f32 storage. `dtype` records the *wire* element type the
+/// client declared (so codecs can echo it); `data` is always f32.
+#[derive(Debug, Clone)]
+pub struct NamedTensor {
+    pub name: String,
+    pub dtype: DType,
+    /// Logical shape, `[batch, ...sample dims]`.
+    pub shape: Vec<usize>,
+    /// Flat row-major payload (f32 post-conversion).
+    pub data: Vec<f32>,
+}
+
+/// Protocol-independent execution knobs, extracted by either codec.
+#[derive(Debug, Clone, Default)]
+pub struct InferParams {
+    /// Explicit model subset (None = the active ensemble).
+    pub models: Option<Vec<String>>,
+    pub policy: Option<Policy>,
+    /// Fusion target: `(class name, class index)`, resolved at parse time.
+    pub target: Option<(String, usize)>,
+    pub detail: bool,
+    /// Input is already normalized (skip the shared transformation).
+    pub normalized: bool,
+}
+
+/// The wire-neutral inference request both protocol codecs lower into.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    /// Input tensors. The current model family takes exactly one; the
+    /// extractors enforce that with protocol-appropriate errors.
+    pub inputs: Vec<NamedTensor>,
+    /// Rows in the batch (the leading shape dimension).
+    pub batch: usize,
+    pub params: InferParams,
+}
+
+/// The wire-neutral result: model outputs plus execution diagnostics.
+/// `params` travels back so renderers see the flags (`detail`, `policy`,
+/// `target`) without re-parsing the request.
+pub struct InferenceResponse {
+    pub output: EnsembleOutput,
+    pub stats: Option<BatchStats>,
+    pub stages: StageMicros,
+    pub params: InferParams,
+}
+
+/// Run one inference through the shared serving stack.
+///
+/// `single` selects the single-model fast path (no ensemble fan-out, no
+/// shared batcher) used by `POST /v1/models/:name/predict` and
+/// `POST /v2/models/:name/infer`; `None` is the ensemble path
+/// (`POST /v1/predict`, `POST /v2/models/_ensemble/infer`), which
+/// coalesces through the batcher unless the request names an explicit
+/// model subset.
+///
+/// `parse_sw` is the stopwatch the handler started before parsing; the
+/// normalization pass counts into the same `stage_parse_us` bucket, so
+/// stage accounting is identical across protocols.
+pub fn execute(
+    s: &ServerState,
+    ir: InferenceRequest,
+    single: Option<&str>,
+    parse_sw: Stopwatch,
+) -> Result<InferenceResponse, ApiError> {
+    let InferenceRequest {
+        mut inputs,
+        batch,
+        params,
+    } = ir;
+    // The extractors enforce single-input with protocol-flavored errors;
+    // this is the core's own guard.
+    if inputs.len() != 1 {
+        return Err(ApiError::bad_value(format!(
+            "expected exactly 1 input tensor, got {}",
+            inputs.len()
+        )));
+    }
+    let mut tensor = inputs.pop().expect("length checked above");
+    s.metrics.add("rows_total", batch as u64);
+
+    // §2.2: the ONE shared data transformation for the whole ensemble.
+    if !params.normalized {
+        s.normalizer.apply(&mut tensor.data);
+    }
+    let parse_us = parse_sw.elapsed_micros();
+    s.metrics.observe_stage("stage_parse_us", parse_us);
+
+    // Move the payload into the shared zero-copy view: the batcher, the
+    // ensemble fan-out and the device executors all reference this one
+    // buffer from here on. The view keeps the tensor's logical shape.
+    let data = TensorView::from(std::mem::take(&mut tensor.data)).with_shape(&tensor.shape);
+
+    let (output, stats): (EnsembleOutput, Option<BatchStats>) = match single {
+        // Single-model fast path: one fixed-membership ensemble, no
+        // shared batcher (its batches are for the full active set).
+        Some(name) => {
+            let sub = s
+                .ensemble
+                .with_models(vec![name.to_string()])
+                .map_err(ApiError::from_anyhow)?;
+            (
+                sub.forward(data, batch).map_err(ApiError::from_anyhow)?,
+                None,
+            )
+        }
+        None => {
+            // Typed membership check before any device work (the batcher
+            // path re-checks at flush time).
+            if params.models.is_none() && s.ensemble.models().is_empty() {
+                return Err(ApiError::ensemble_empty());
+            }
+            match (&params.models, &s.batcher) {
+                (None, Some(batcher)) => {
+                    let (out, st) = batcher
+                        .submit(data, batch)
+                        .map_err(ApiError::from_anyhow)?;
+                    s.metrics
+                        .observe_micros("coalesced_rows", st.coalesced_rows as u64);
+                    (out, Some(st))
+                }
+                (None, None) => (
+                    s.ensemble
+                        .forward(data, batch)
+                        .map_err(ApiError::from_anyhow)?,
+                    None,
+                ),
+                (Some(names), _) => {
+                    let sub = s
+                        .ensemble
+                        .with_models(names.clone())
+                        .map_err(ApiError::from_anyhow)?;
+                    (
+                        sub.forward(data, batch).map_err(ApiError::from_anyhow)?,
+                        None,
+                    )
+                }
+            }
+        }
+    };
+
+    let stages = observe_output_stages(s, parse_us, &output, stats.as_ref());
+    Ok(InferenceResponse {
+        output,
+        stats,
+        stages,
+        params,
+    })
+}
+
+/// Resolve the raw `policy`/`target` strings a codec extracted into their
+/// typed forms, with the shared validation order (unparsable policy →
+/// `bad_policy`; policy without target → `bad_policy`; unknown target →
+/// `unknown_target`). Both codecs call this one implementation so the
+/// error strings can never diverge between `/v1` and `/v2`.
+pub fn resolve_policy_target(
+    manifest: &Manifest,
+    policy: Option<&str>,
+    target: Option<&str>,
+) -> Result<(Option<Policy>, Option<(String, usize)>), ApiError> {
+    let policy = match policy {
+        None => None,
+        Some(p) => Some(Policy::parse(p).map_err(ApiError::bad_policy)?),
+    };
+    let target = target.map(str::to_string);
+    if policy.is_some() && target.is_none() {
+        return Err(ApiError::bad_policy("'policy' requires 'target' (a class name)"));
+    }
+    let target = match target {
+        None => None,
+        Some(name) => {
+            let idx = manifest
+                .classes
+                .iter()
+                .position(|c| c == &name)
+                .ok_or_else(|| ApiError::unknown_target(&name))?;
+            Some((name, idx))
+        }
+    };
+    Ok((policy, target))
+}
+
+/// Row-wise sensitivity fusion (§2.1): whether the ensemble detects the
+/// target class on each row under `policy`. Fusion is execution
+/// semantics, not wire formatting, so BOTH protocol renderers call this
+/// one implementation — the v1≡v2 prediction guarantee depends on it.
+pub fn fuse_detections(
+    output: &EnsembleOutput,
+    policy: &Policy,
+    target_idx: usize,
+) -> Result<Vec<bool>, ApiError> {
+    let votes = output.votes_for_class(target_idx); // [model][row]
+    let mut detections = Vec::with_capacity(output.batch);
+    for row in 0..output.batch {
+        let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
+        detections.push(policy.fuse(&row_votes).map_err(ApiError::bad_policy)?);
+    }
+    Ok(detections)
+}
+
+/// Fold one forward's device timings into the `stage_*` histograms and
+/// return the per-request breakdown for the protocols' diagnostics blocks.
+fn observe_output_stages(
+    s: &ServerState,
+    parse_us: u64,
+    output: &EnsembleOutput,
+    stats: Option<&BatchStats>,
+) -> StageMicros {
+    let mut exec_us = 0;
+    let mut queue_us = stats.map(|st| st.wait_micros).unwrap_or(0);
+    for m in &output.per_model {
+        s.metrics.observe_micros("device_exec_us", m.exec_micros);
+        exec_us += m.exec_micros;
+        queue_us += m.queue_micros;
+    }
+    s.metrics.observe_stage("stage_queue_us", queue_us);
+    s.metrics.observe_stage("stage_exec_us", exec_us);
+    StageMicros {
+        parse_us,
+        queue_us,
+        exec_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // `execute` needs a live device; it is exercised end-to-end by both
+    // protocol surfaces in rust/tests/server_integration.rs and
+    // rust/tests/v2_integration.rs. The IR lowering is covered device-free
+    // by wire.rs unit tests and the v2 differential tests.
+}

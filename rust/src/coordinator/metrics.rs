@@ -106,6 +106,44 @@ impl Metrics {
         out
     }
 
+    /// Standard Prometheus text exposition (format version 0.0.4), served
+    /// on `GET /v1/metrics?format=prometheus` (and via `Accept:
+    /// text/plain` negotiation) so off-the-shelf scrapers work: counters
+    /// carry `# TYPE ... counter`, and each latency histogram exposes as a
+    /// summary (`{quantile=...}` samples plus `_sum`/`_count`, in
+    /// microseconds as the `_us` name says).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let v = c.load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "# HELP flexserve_{name} FlexServe counter\n\
+                 # TYPE flexserve_{name} counter\n\
+                 flexserve_{name} {v}\n"
+            ));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            // Unit lives in the metric name (`*_us` = microseconds;
+            // others, e.g. `coalesced_rows`, are unitless counts).
+            out.push_str(&format!(
+                "# HELP flexserve_{name} FlexServe summary\n\
+                 # TYPE flexserve_{name} summary\n"
+            ));
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                out.push_str(&format!(
+                    "flexserve_{name}{{quantile=\"{q}\"}} {}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!(
+                "flexserve_{name}_sum {:.0}\n",
+                h.mean_micros() * h.count() as f64
+            ));
+            out.push_str(&format!("flexserve_{name}_count {}\n", h.count()));
+        }
+        out
+    }
+
     /// JSON snapshot (used by benches and `GET /metrics?format=json`).
     pub fn render_json(&self) -> Value {
         let counters: Vec<(String, Value)> = self
@@ -184,6 +222,27 @@ mod tests {
         assert!(text.contains("flexserve_requests_total 1"));
         assert!(text.contains("flexserve_predict_us_count 1"));
         assert!(text.contains("flexserve_predict_us_p99_us"));
+    }
+
+    #[test]
+    fn prometheus_exposition() {
+        let m = Metrics::new();
+        m.inc("requests_total");
+        for v in [100, 200, 300, 400] {
+            m.observe_micros("predict_us", v);
+        }
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE flexserve_requests_total counter"), "{text}");
+        assert!(text.contains("flexserve_requests_total 1"), "{text}");
+        assert!(text.contains("# TYPE flexserve_predict_us summary"), "{text}");
+        assert!(text.contains("flexserve_predict_us{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("flexserve_predict_us{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("flexserve_predict_us_count 4"), "{text}");
+        assert!(text.contains("flexserve_predict_us_sum 1000"), "{text}");
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "{line}");
+        }
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //!   cross-request coalescing)
 //! * [`api`] — the REST surface: versioned `/v1` data + control planes
 //!   with runtime model lifecycle, plus legacy aliases (Fig. 1)
-//! * [`wire`] — typed request extractors, response rendering, and the
-//!   structured error taxonomy ([`wire::ApiError`])
+//! * [`infer`] — the protocol-agnostic inference core: the wire-neutral
+//!   IR ([`infer::InferenceRequest`]) both protocol codecs lower into,
+//!   and the one execution path behind every predict/infer route
+//! * [`wire`] — the `/v1` codec: typed request extractors, paper-format
+//!   rendering, and the structured error taxonomy ([`wire::ApiError`])
+//! * [`v2`] — the `/v2` codec: the KServe/Triton Open Inference Protocol
+//!   (named/typed/shaped tensors, metadata, readiness) over the same core
 //! * [`metrics`] — counters + latency histograms (`/metrics`)
 //! * [`serve`] — one-call server bootstrap used by `main.rs` and the
 //!   examples
@@ -15,13 +20,16 @@
 pub mod api;
 pub mod batcher;
 pub mod ensemble;
+pub mod infer;
 pub mod metrics;
 pub mod policy;
+pub mod v2;
 pub mod wire;
 
 pub use api::{build_router, ServerState};
 pub use batcher::{Batcher, BatcherConfig, BatchStats};
 pub use ensemble::{Ensemble, EnsembleOutput, ModelOutput};
+pub use infer::{InferParams, InferenceRequest, InferenceResponse, NamedTensor};
 pub use metrics::{Metrics, STAGE_METRICS};
 pub use policy::{Confusion, Policy};
 pub use wire::{ApiError, PredictRequest, StageMicros};

@@ -1,0 +1,984 @@
+//! The `/v2` surface: the KServe/Triton **Open Inference Protocol** (OIP)
+//! served over the same protocol-agnostic core as `/v1`
+//! ([`super::infer`]) — a genuine second wire protocol, not an alias.
+//!
+//! Routes (the README "Protocols" matrix mirrors this list; `make
+//! check-docs` keeps them in sync):
+//!
+//! * `GET  /v2`                      — server metadata
+//! * `GET  /v2/health/live`          — liveness
+//! * `GET  /v2/health/ready`         — readiness (≥ 1 active model)
+//! * `GET  /v2/models/:name`         — model metadata (named inputs and
+//!   outputs with datatypes and shapes; `params_sha256` as a custom field)
+//! * `GET  /v2/models/:name/ready`   — per-model readiness
+//! * `POST /v2/models/:name/infer`   — inference
+//!
+//! The ensemble is addressable as the pseudo-model **`_ensemble`**
+//! (`POST /v2/models/_ensemble/infer` fans out to the active set exactly
+//! like `POST /v1/predict`); real model names may not start with `_`.
+//!
+//! Inputs are OIP tensors — named, typed (`FP32`, `INT64`, `UINT8`),
+//! shaped, with flat *or* nested `data`. Non-f32 dtypes are converted to
+//! the device's f32 storage at this boundary; unsupported combinations
+//! are rejected with the `bad_input.dtype` taxonomy code. Outputs are
+//! `classes` (`BYTES` class names, always), `probs` (`FP32`, with
+//! `parameters.detail` or when requested explicitly via `outputs`), and
+//! `detections` (`BOOL`, when a fusion `policy`/`target` is set on the
+//! ensemble); on the `_ensemble` model, per-model outputs are prefixed
+//! `<model>.`.
+//!
+//! Errors render in the protocol's `{"error": "..."}` shape. The string
+//! is `<taxonomy code>: <message>`, reusing [`ApiError`] internally, so
+//! v2 clients still get stable machine-readable prefixes and the HTTP
+//! statuses match `/v1` exactly.
+
+use super::api::ServerState;
+use super::infer::{self, InferParams, InferenceRequest, InferenceResponse, NamedTensor};
+use super::wire::ApiError;
+use crate::http::router::Router;
+use crate::http::{Request, Response};
+use crate::json::{self, Value};
+use crate::runtime::{DType, Manifest};
+use crate::util::Stopwatch;
+use std::sync::Arc;
+
+/// The pseudo-model name addressing the whole active ensemble.
+pub const ENSEMBLE_MODEL: &str = "_ensemble";
+
+/// Per-request codec options that don't affect execution: the echoed
+/// request `id` and the optional `outputs` selection.
+#[derive(Debug, Clone, Default)]
+pub struct InferOptions {
+    pub id: Option<String>,
+    /// Requested output names, in order (`None` = the default set).
+    pub outputs: Option<Vec<String>>,
+}
+
+/// Register the `/v2` route family on the shared router.
+pub fn add_routes(router: &mut Router, state: Arc<ServerState>) {
+    router.add("GET", "/v2", move |_req, _p| {
+        Response::json(
+            200,
+            &json::obj([
+                ("name", Value::from("flexserve")),
+                ("version", Value::from(env!("CARGO_PKG_VERSION"))),
+                ("extensions", Value::Arr(Vec::new())),
+            ]),
+        )
+    });
+
+    router.add("GET", "/v2/health/live", |_req, _p| {
+        Response::json(200, &json::obj([("live", Value::Bool(true))]))
+    });
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/v2/health/ready", move |_req, _p| {
+        ready_response(!s.ensemble.models().is_empty(), None)
+    });
+
+    // Introspection routes count neither requests_total nor errors_total
+    // (matching /v1's introspection); the router middleware still records
+    // per-route latency and status-class counters for them.
+    let s = Arc::clone(&state);
+    router.add("GET", "/v2/models/:name", move |_req, p| {
+        match model_metadata(&s, &p["name"]) {
+            Ok(doc) => Response::json(200, &doc),
+            Err(e) => v2_error(&e),
+        }
+    });
+
+    let s = Arc::clone(&state);
+    router.add("GET", "/v2/models/:name/ready", move |_req, p| {
+        let name = p["name"].as_str();
+        if name == ENSEMBLE_MODEL {
+            return ready_response(!s.ensemble.models().is_empty(), Some(name));
+        }
+        match s.manifest.model(name) {
+            None => v2_error(&ApiError::unknown_model(name)),
+            Some(_) => ready_response(s.ensemble.pool().is_loaded(name), Some(name)),
+        }
+    });
+
+    let s = Arc::clone(&state);
+    router.add("POST", "/v2/models/:name/infer", move |req, p| {
+        let sw = Stopwatch::start();
+        s.metrics.inc("requests_total");
+        match handle_infer(&s, &p["name"], req) {
+            Ok(resp) => {
+                s.metrics.observe_micros("predict_us", sw.elapsed_micros());
+                resp
+            }
+            Err(e) => {
+                s.metrics.inc("errors_total");
+                v2_error(&e)
+            }
+        }
+    });
+}
+
+/// Render an [`ApiError`] in the protocol's `{"error": "..."}` shape; the
+/// string leads with the stable taxonomy code.
+pub fn v2_error(e: &ApiError) -> Response {
+    Response::json(
+        e.status,
+        &json::obj([("error", Value::from(format!("{}: {}", e.code, e.message)))]),
+    )
+}
+
+/// OIP readiness document; un-ready is 503 so orchestrators' HTTP probes
+/// work without parsing the body.
+fn ready_response(ready: bool, name: Option<&str>) -> Response {
+    let mut members: Vec<(String, Value)> = Vec::new();
+    if let Some(n) = name {
+        members.push(("name".to_string(), Value::from(n)));
+    }
+    members.push(("ready".to_string(), Value::Bool(ready)));
+    Response::json(if ready { 200 } else { 503 }, &Value::Obj(members))
+}
+
+/// `POST /v2/models/:name/infer` — parse the OIP body into the shared IR,
+/// run the core, render the OIP response.
+fn handle_infer(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
+    let ensemble_route = name == ENSEMBLE_MODEL;
+    if !ensemble_route {
+        if s.manifest.model(name).is_none() {
+            return Err(ApiError::unknown_model(name));
+        }
+        if !s.ensemble.pool().is_loaded(name) {
+            return Err(ApiError::model_not_loaded(name));
+        }
+    }
+    let parse_sw = Stopwatch::start();
+    let (ir, opts) = parse_infer(&s.manifest, req, ensemble_route)?;
+    // Fast-fail an unknown `outputs` selection before any device work;
+    // render_infer re-resolves against the actual forward output.
+    validate_output_names(s, ensemble_route, &ir, &opts)?;
+    let single = (!ensemble_route).then_some(name);
+    let done = infer::execute(s, ir, single, parse_sw)?;
+
+    let render_sw = Stopwatch::start();
+    let body = render_infer(s, name, &done, &opts)?;
+    let resp = Response::json(200, &body);
+    s.metrics
+        .observe_stage("stage_render_us", render_sw.elapsed_micros());
+    Ok(resp)
+}
+
+/// Parse an Open-Inference-Protocol infer body into the wire-neutral IR.
+///
+/// Device-free and deterministic: the differential tests pin that a valid
+/// v2 body and the equivalent `/v1` body lower to the same tensor, and
+/// that every malformed dtype/shape/data-length case yields a stable
+/// error string.
+pub fn parse_infer(
+    manifest: &Manifest,
+    req: &Request,
+    ensemble_route: bool,
+) -> Result<(InferenceRequest, InferOptions), ApiError> {
+    let body = req.json_body().map_err(ApiError::malformed_json)?;
+    if body.as_obj().is_none() {
+        return Err(ApiError::bad_value("request body must be a JSON object"));
+    }
+
+    let id = match body.get("id") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| ApiError::bad_value("'id' must be a string"))?,
+        ),
+    };
+
+    // ---- the input tensor -------------------------------------------------
+    let inputs = body
+        .get("inputs")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| ApiError::bad_value("'inputs' must be an array of tensors"))?;
+    if inputs.len() != 1 {
+        return Err(ApiError::bad_value(format!(
+            "expected exactly 1 input tensor, got {}",
+            inputs.len()
+        )));
+    }
+    let tensor = &inputs[0];
+    let name = tensor
+        .get("name")
+        .and_then(Value::as_str)
+        .ok_or_else(|| ApiError::bad_value("input tensor missing 'name'"))?;
+    let dt_name = tensor
+        .get("datatype")
+        .and_then(Value::as_str)
+        .ok_or_else(|| ApiError::bad_value(format!("tensor '{name}': missing 'datatype'")))?;
+    let dtype = DType::from_v2(dt_name).ok_or_else(|| {
+        ApiError::bad_dtype(format!(
+            "tensor '{name}': unsupported datatype '{dt_name}' (supported: FP32, INT64, UINT8)"
+        ))
+    })?;
+    if dtype == DType::Bytes {
+        return Err(ApiError::bad_dtype(format!(
+            "tensor '{name}': BYTES input is not supported (model takes a numeric tensor)"
+        )));
+    }
+    let shape = tensor
+        .get("shape")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| ApiError::bad_value(format!("tensor '{name}': missing 'shape'")))?
+        .iter()
+        .map(|d| {
+            d.as_usize().ok_or_else(|| {
+                ApiError::bad_value(format!(
+                    "tensor '{name}': shape dimensions must be non-negative integers"
+                ))
+            })
+        })
+        .collect::<Result<Vec<usize>, _>>()?;
+    let batch = check_shape(manifest, name, &shape)?;
+
+    let data_v = tensor
+        .get("data")
+        .ok_or_else(|| ApiError::bad_value(format!("tensor '{name}': missing 'data'")))?;
+    let elems = manifest.sample_elems();
+    let total = batch.checked_mul(elems).ok_or_else(|| {
+        ApiError::shape_mismatch(format!(
+            "tensor '{name}': shape {} is too large",
+            fmt_shape(&shape)
+        ))
+    })?;
+    // Pre-size from what the request body could possibly contain (every
+    // JSON element is ≥ 2 bytes), never from the client-declared shape —
+    // a hostile shape must not drive a huge allocation before the
+    // data-length check below rejects it.
+    let mut data: Vec<f32> = Vec::with_capacity(total.min(req.body.len() / 2 + 1));
+    extend_data(name, dtype, data_v, &mut data)?;
+    if data.len() != total {
+        return Err(ApiError::shape_mismatch(format!(
+            "tensor '{name}': {} data elements do not match shape {} ({total} elements)",
+            data.len(),
+            fmt_shape(&shape),
+        )));
+    }
+    if !data.iter().all(|v| v.is_finite()) {
+        return Err(ApiError::bad_value(format!(
+            "tensor '{name}': data contains non-finite values"
+        )));
+    }
+
+    // ---- execution parameters --------------------------------------------
+    let params_v = match body.get("parameters") {
+        None => None,
+        Some(v) => {
+            if v.as_obj().is_none() {
+                return Err(ApiError::bad_value("'parameters' must be an object"));
+            }
+            Some(v)
+        }
+    };
+
+    let normalized = param_bool(params_v, "normalized")?;
+    let detail = param_bool(params_v, "detail")?;
+    let models = match param_str(params_v, "models")? {
+        None => None,
+        Some(_) if !ensemble_route => {
+            return Err(ApiError::bad_value(format!(
+                "parameter 'models' is only valid for the '{ENSEMBLE_MODEL}' model"
+            )));
+        }
+        Some(csv) => {
+            let names: Vec<String> = csv
+                .split(',')
+                .filter(|m| !m.is_empty())
+                .map(str::to_string)
+                .collect();
+            if names.is_empty() {
+                None
+            } else {
+                Some(names)
+            }
+        }
+    };
+    // Shared with the /v1 extractor: identical validation order and
+    // error strings by construction.
+    let (policy, target) = infer::resolve_policy_target(
+        manifest,
+        param_str(params_v, "policy")?,
+        param_str(params_v, "target")?,
+    )?;
+
+    // ---- requested outputs -----------------------------------------------
+    let outputs = match body.get("outputs") {
+        None => None,
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| ApiError::bad_value("'outputs' must be an array"))?;
+            let names = arr
+                .iter()
+                .map(|o| {
+                    o.get("name")
+                        .and_then(Value::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| {
+                            ApiError::bad_value("'outputs' entries must be objects with a 'name'")
+                        })
+                })
+                .collect::<Result<Vec<String>, _>>()?;
+            Some(names)
+        }
+    };
+
+    let ir = InferenceRequest {
+        inputs: vec![NamedTensor {
+            name: name.to_string(),
+            dtype,
+            shape,
+            data,
+        }],
+        batch,
+        params: InferParams {
+            models,
+            policy,
+            target,
+            detail,
+            normalized,
+        },
+    };
+    Ok((ir, InferOptions { id, outputs }))
+}
+
+/// Pre-execution check of an explicit `outputs` selection against the
+/// names this route can possibly produce (from the membership snapshot
+/// or the request's subset), so a typo'd output name fails with its 422
+/// before burning a device forward. Uses the same [`output_catalog`]
+/// builder as `render_infer`, which performs the authoritative lookup
+/// against the actual output (membership can shift between this snapshot
+/// and the forward).
+fn validate_output_names(
+    s: &ServerState,
+    ensemble_route: bool,
+    ir: &InferenceRequest,
+    opts: &InferOptions,
+) -> Result<(), ApiError> {
+    let Some(names) = &opts.outputs else {
+        return Ok(());
+    };
+    let members: Vec<String> = if ensemble_route {
+        match &ir.params.models {
+            Some(subset) => subset.clone(),
+            None => s.ensemble.models(),
+        }
+    } else {
+        // Single-model routes use unprefixed output names; one entry
+        // stands in for the route model (the name itself is unused).
+        vec![String::new()]
+    };
+    let fusion = ir.params.policy.is_some() && ir.params.target.is_some();
+    let catalog = output_catalog(ensemble_route, &members, true, fusion);
+    for want in names {
+        if !catalog.iter().any(|(name, _, _)| name == want) {
+            return Err(ApiError::bad_value(format!("unknown output '{want}'")));
+        }
+    }
+    Ok(())
+}
+
+/// A boolean request parameter (absent = false; wrong type is typed).
+fn param_bool(params: Option<&Value>, key: &str) -> Result<bool, ApiError> {
+    match params.and_then(|p| p.get(key)) {
+        None => Ok(false),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| ApiError::bad_value(format!("parameter '{key}' must be a boolean"))),
+    }
+}
+
+/// A string request parameter (absent = None; wrong type is typed).
+fn param_str<'v>(params: Option<&'v Value>, key: &str) -> Result<Option<&'v str>, ApiError> {
+    match params.and_then(|p| p.get(key)) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| ApiError::bad_value(format!("parameter '{key}' must be a string"))),
+    }
+}
+
+/// Validate an OIP shape against the manifest contract and return the
+/// batch size. Accepts `[N, ...input_shape]` or the flattened `[N, elems]`.
+fn check_shape(manifest: &Manifest, name: &str, shape: &[usize]) -> Result<usize, ApiError> {
+    if shape.is_empty() {
+        return Err(ApiError::shape_mismatch(format!(
+            "tensor '{name}': shape must have a leading batch dimension"
+        )));
+    }
+    let batch = shape[0];
+    if batch == 0 {
+        return Err(ApiError::bad_value(format!(
+            "tensor '{name}': batch dimension must be ≥ 1"
+        )));
+    }
+    let elems = manifest.sample_elems();
+    let sample_ok = shape[1..] == manifest.input_shape[..]
+        || (shape.len() == 2 && shape[1] == elems);
+    if !sample_ok {
+        let mut want: Vec<usize> = Vec::with_capacity(manifest.input_shape.len() + 1);
+        want.push(batch);
+        want.extend(&manifest.input_shape);
+        return Err(ApiError::shape_mismatch(format!(
+            "tensor '{name}': shape {} does not match model input {} (or [{batch}, {elems}])",
+            fmt_shape(shape),
+            fmt_shape(&want)
+        )));
+    }
+    Ok(batch)
+}
+
+/// `[2, 16, 16, 1]` — the shape spelling used in v2 error strings.
+fn fmt_shape(shape: &[usize]) -> String {
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    format!("[{}]", dims.join(", "))
+}
+
+/// Flatten OIP `data` (flat or nested arrays) into f32s, converting per
+/// the declared dtype with stable per-dtype validation errors.
+fn extend_data(name: &str, dtype: DType, v: &Value, out: &mut Vec<f32>) -> Result<(), ApiError> {
+    match v {
+        Value::Arr(items) => {
+            for item in items {
+                extend_data(name, dtype, item, out)?;
+            }
+            Ok(())
+        }
+        Value::Num(n) => {
+            out.push(convert_element(name, dtype, *n)?);
+            Ok(())
+        }
+        other => Err(ApiError::bad_value(format!(
+            "tensor '{name}': data must contain only numbers, found {}",
+            other.type_name()
+        ))),
+    }
+}
+
+fn convert_element(name: &str, dtype: DType, n: f64) -> Result<f32, ApiError> {
+    match dtype {
+        DType::F32 => Ok(n as f32),
+        DType::I64 => {
+            if n.fract() == 0.0 {
+                Ok(n as f32)
+            } else {
+                Err(ApiError::bad_value(format!(
+                    "tensor '{name}': INT64 data contains non-integer value {n}"
+                )))
+            }
+        }
+        DType::U8 => {
+            if n.fract() != 0.0 {
+                Err(ApiError::bad_value(format!(
+                    "tensor '{name}': UINT8 data contains non-integer value {n}"
+                )))
+            } else if !(0.0..=255.0).contains(&n) {
+                Err(ApiError::bad_value(format!(
+                    "tensor '{name}': UINT8 data contains out-of-range value {n}"
+                )))
+            } else {
+                Ok(n as f32)
+            }
+        }
+        // Rejected before data parsing begins.
+        DType::Bytes => unreachable!("BYTES rejected at dtype validation"),
+    }
+}
+
+/// One OIP output-tensor document.
+fn tensor_doc(name: &str, datatype: &str, batch: usize, data: Value) -> Value {
+    json::obj([
+        ("name", Value::from(name)),
+        ("datatype", Value::from(datatype)),
+        ("shape", Value::Arr(vec![Value::from(batch)])),
+        ("data", data),
+    ])
+}
+
+/// What an output-tensor entry renders from (rendering is deferred until
+/// selection, so unselected tensors — e.g. `probs` without `detail` on
+/// the hot path — cost nothing).
+enum OutputKind {
+    /// Class-name predictions of `per_model[i]`.
+    Classes(usize),
+    /// Argmax probabilities of `per_model[i]`.
+    Probs(usize),
+    /// Policy-fused detections across the ensemble.
+    Detections,
+}
+
+/// The single source of truth for the output-tensor name universe of one
+/// infer: `(name, in default selection, kind)` per available output.
+/// Shared by pre-execution validation and rendering so the two can never
+/// drift. `models` are the per-model entries in order (ensemble routes
+/// prefix their outputs `<model>.`; single-model routes leave names
+/// bare); fusion adds the ensemble-level `detections`.
+fn output_catalog(
+    ensemble: bool,
+    models: &[String],
+    detail: bool,
+    fusion: bool,
+) -> Vec<(String, bool, OutputKind)> {
+    let mut catalog: Vec<(String, bool, OutputKind)> = Vec::with_capacity(models.len() * 2 + 1);
+    for (mi, m) in models.iter().enumerate() {
+        let prefix = if ensemble {
+            format!("{m}.")
+        } else {
+            String::new()
+        };
+        catalog.push((format!("{prefix}classes"), true, OutputKind::Classes(mi)));
+        catalog.push((format!("{prefix}probs"), detail, OutputKind::Probs(mi)));
+    }
+    // Fusion is an ensemble-level output (README: "on the ensemble");
+    // single-model routes accept-and-ignore policy/target exactly like
+    // /v1's single-model predict does.
+    if ensemble && fusion {
+        catalog.push(("detections".to_string(), true, OutputKind::Detections));
+    }
+    catalog
+}
+
+/// Render the OIP infer response: `model_name`, `model_version`, the
+/// echoed `id`, custom `parameters` (provenance + per-stage timings) and
+/// the `outputs` tensors.
+fn render_infer(
+    s: &ServerState,
+    route_model: &str,
+    done: &InferenceResponse,
+    opts: &InferOptions,
+) -> Result<Value, ApiError> {
+    let ensemble = route_model == ENSEMBLE_MODEL;
+    let batch = done.output.batch;
+
+    // Catalog the actual forward's outputs (deterministic,
+    // manifest-ordered) WITHOUT rendering them.
+    let model_names: Vec<String> = done
+        .output
+        .per_model
+        .iter()
+        .map(|m| m.model.clone())
+        .collect();
+    let fusion = done.params.policy.is_some() && done.params.target.is_some();
+    let catalog = output_catalog(ensemble, &model_names, done.params.detail, fusion);
+
+    let chosen: Vec<&(String, bool, OutputKind)> = match &opts.outputs {
+        None => catalog.iter().filter(|(_, keep, _)| *keep).collect(),
+        Some(names) => names
+            .iter()
+            .map(|want| {
+                catalog
+                    .iter()
+                    .find(|(name, _, _)| name == want)
+                    .ok_or_else(|| ApiError::bad_value(format!("unknown output '{want}'")))
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+
+    // Render only the selected tensors.
+    let mut selected: Vec<Value> = Vec::with_capacity(chosen.len());
+    for (name, _, kind) in chosen {
+        let doc = match kind {
+            OutputKind::Classes(mi) => {
+                let m = &done.output.per_model[*mi];
+                tensor_doc(
+                    name,
+                    "BYTES",
+                    batch,
+                    json::str_array_raw(
+                        m.preds
+                            .iter()
+                            .map(|(idx, _)| s.manifest.classes[*idx].as_str()),
+                    ),
+                )
+            }
+            OutputKind::Probs(mi) => {
+                let m = &done.output.per_model[*mi];
+                tensor_doc(
+                    name,
+                    "FP32",
+                    batch,
+                    json::f32_array_raw(m.preds.iter().map(|(_, p)| *p)),
+                )
+            }
+            OutputKind::Detections => {
+                let (policy, target_idx) = match (&done.params.policy, &done.params.target) {
+                    (Some(p), Some((_, idx))) => (p, *idx),
+                    _ => unreachable!("detections cataloged only with policy+target"),
+                };
+                let detections: Vec<Value> =
+                    infer::fuse_detections(&done.output, policy, target_idx)?
+                        .into_iter()
+                        .map(Value::Bool)
+                        .collect();
+                tensor_doc(name, "BOOL", batch, Value::Arr(detections))
+            }
+        };
+        selected.push(doc);
+    }
+
+    let mut members: Vec<(String, Value)> = vec![
+        ("model_name".to_string(), Value::from(route_model)),
+        ("model_version".to_string(), Value::from("1")),
+    ];
+    if let Some(id) = &opts.id {
+        members.push(("id".to_string(), Value::from(id.as_str())));
+    }
+    let mut parameters: Vec<(&'static str, Value)> = Vec::new();
+    if let Some(entry) = s.manifest.model(route_model) {
+        parameters.push(("params_sha256", Value::from(entry.params_sha256.as_str())));
+    }
+    if done.params.detail {
+        parameters.push(("parse_us", Value::from(done.stages.parse_us)));
+        parameters.push(("queue_us", Value::from(done.stages.queue_us)));
+        parameters.push(("exec_us", Value::from(done.stages.exec_us)));
+    }
+    if !parameters.is_empty() {
+        members.push(("parameters".to_string(), json::obj(parameters)));
+    }
+    members.push(("outputs".to_string(), Value::Arr(selected)));
+    Ok(Value::Obj(members))
+}
+
+/// `GET /v2/models/:name` — OIP model metadata derived from the manifest:
+/// named inputs/outputs with datatypes and dynamic-batch shapes, plus the
+/// provenance the paper argues cloud APIs withhold (`params_sha256`).
+fn model_metadata(s: &ServerState, name: &str) -> Result<Value, ApiError> {
+    // Dynamic batch renders as -1, per OIP convention.
+    let mut input_shape: Vec<Value> = vec![Value::from(-1i64)];
+    input_shape.extend(s.manifest.input_shape.iter().map(|&d| Value::from(d)));
+    let inputs = Value::Arr(vec![json::obj([
+        ("name", Value::from("input")),
+        ("datatype", Value::from("FP32")),
+        ("shape", Value::Arr(input_shape)),
+    ])]);
+    let output_doc = |name: &str, datatype: &str| -> Value {
+        json::obj([
+            ("name", Value::from(name)),
+            ("datatype", Value::from(datatype)),
+            ("shape", Value::Arr(vec![Value::from(-1i64)])),
+        ])
+    };
+
+    let (outputs, parameters): (Vec<Value>, Value) = if name == ENSEMBLE_MODEL {
+        let active = s.ensemble.models();
+        let mut outs = Vec::with_capacity(active.len() * 2 + 1);
+        for m in &active {
+            outs.push(output_doc(&format!("{m}.classes"), "BYTES"));
+            outs.push(output_doc(&format!("{m}.probs"), "FP32"));
+        }
+        outs.push(output_doc("detections", "BOOL"));
+        (
+            outs,
+            json::obj([
+                ("ensemble", Value::Bool(true)),
+                ("models", Value::from(active.join(","))),
+            ]),
+        )
+    } else {
+        let entry = s
+            .manifest
+            .model(name)
+            .ok_or_else(|| ApiError::unknown_model(name))?;
+        (
+            vec![output_doc("classes", "BYTES"), output_doc("probs", "FP32")],
+            json::obj([
+                ("params_sha256", Value::from(entry.params_sha256.as_str())),
+                ("state", Value::from(s.model_status(name))),
+                ("test_acc", Value::from(entry.test_acc)),
+            ]),
+        )
+    };
+
+    Ok(json::obj([
+        ("name", Value::from(name)),
+        ("versions", Value::Arr(vec![Value::from("1")])),
+        ("platform", Value::from("flexserve-xla-pjrt")),
+        ("inputs", inputs),
+        ("outputs", Value::Arr(outputs)),
+        ("parameters", parameters),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::Policy;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let v = json::parse(
+            r#"{
+              "format_version": 1,
+              "input_shape": [2, 2, 1],
+              "classes": ["blank", "cross"],
+              "normalize": {"mean": 0.0, "std": 1.0},
+              "buckets": [1, 4],
+              "models": {
+                "m1": {
+                  "param_count": 1, "test_acc": 0.9, "params_sha256": "ab",
+                  "buckets": {"1": {"file": "f", "sha256": "x", "bytes": 1}}
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap()
+    }
+
+    // Path is irrelevant to the codec (and kept /v2-free so `make
+    // check-docs`'s route extraction only sees real route patterns).
+    fn post(body: &str) -> Request {
+        Request::new("POST", "/infer", body.as_bytes().to_vec())
+    }
+
+    fn parse(body: &str) -> Result<(InferenceRequest, InferOptions), ApiError> {
+        parse_infer(&manifest(), &post(body), false)
+    }
+
+    fn parse_ens(body: &str) -> Result<(InferenceRequest, InferOptions), ApiError> {
+        parse_infer(&manifest(), &post(body), true)
+    }
+
+    fn err_string(e: &ApiError) -> String {
+        format!("{}: {}", e.code, e.message)
+    }
+
+    #[test]
+    fn parses_minimal_fp32_tensor() {
+        let (ir, opts) = parse(
+            r#"{"inputs":[{"name":"input","datatype":"FP32","shape":[1,2,2,1],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ir.batch, 1);
+        let t = &ir.inputs[0];
+        assert_eq!(t.name, "input");
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.shape, vec![1, 2, 2, 1]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(!ir.params.normalized && !ir.params.detail);
+        assert!(opts.id.is_none() && opts.outputs.is_none());
+    }
+
+    #[test]
+    fn accepts_flattened_and_nested_shapes() {
+        // [N, elems] flattened spelling.
+        let (ir, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[2,4],"data":[1,2,3,4,5,6,7,8]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ir.batch, 2);
+        assert_eq!(ir.inputs[0].data.len(), 8);
+        // Nested data flattens row-major, same result as flat.
+        let (nested, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[2,4],
+                "data":[[1,2,3,4],[5,6,7,8]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(nested.inputs[0].data, ir.inputs[0].data);
+    }
+
+    #[test]
+    fn int64_and_uint8_convert_at_boundary() {
+        let (ir, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"INT64","shape":[1,4],"data":[0,1,-2,300]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ir.inputs[0].dtype, DType::I64);
+        assert_eq!(ir.inputs[0].data, vec![0.0, 1.0, -2.0, 300.0]);
+
+        let (ir, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"UINT8","shape":[1,4],"data":[0,128,255,7]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ir.inputs[0].dtype, DType::U8);
+        assert_eq!(ir.inputs[0].data, vec![0.0, 128.0, 255.0, 7.0]);
+    }
+
+    #[test]
+    fn dtype_rejections_have_stable_strings() {
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP64","shape":[1,4],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.dtype"));
+        assert_eq!(
+            err_string(&e),
+            "bad_input.dtype: tensor 'x': unsupported datatype 'FP64' \
+             (supported: FP32, INT64, UINT8)"
+        );
+
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"BYTES","shape":[1,4],"data":["a","b","c","d"]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.dtype: tensor 'x': BYTES input is not supported \
+             (model takes a numeric tensor)"
+        );
+
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"INT64","shape":[1,4],"data":[1,2.5,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.bad_value: tensor 'x': INT64 data contains non-integer value 2.5"
+        );
+
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"UINT8","shape":[1,4],"data":[1,2,3,256]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.bad_value: tensor 'x': UINT8 data contains out-of-range value 256"
+        );
+    }
+
+    #[test]
+    fn shape_and_length_rejections_have_stable_strings() {
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,3,3],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.shape_mismatch"));
+        assert_eq!(
+            err_string(&e),
+            "bad_input.shape_mismatch: tensor 'x': shape [1, 3, 3] does not match \
+             model input [1, 2, 2, 1] (or [1, 4])"
+        );
+
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[2,4],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.shape_mismatch: tensor 'x': 4 data elements do not match \
+             shape [2, 4] (8 elements)"
+        );
+
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[],"data":[]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.shape_mismatch: tensor 'x': shape must have a leading batch dimension"
+        );
+
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[0,4],"data":[]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.bad_value: tensor 'x': batch dimension must be ≥ 1"
+        );
+    }
+
+    #[test]
+    fn hostile_declared_shapes_reject_without_allocating() {
+        // A huge declared batch with a tiny body must fail the length
+        // check — the parser's allocation is bounded by the body size,
+        // never by the client's shape claim.
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32",
+                "shape":[1000000000000,4],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.shape_mismatch"));
+        assert!(e.message.contains("4 data elements"), "{}", e.message);
+    }
+
+    #[test]
+    fn structural_rejections() {
+        let e = parse("not json").unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_input.malformed_json"));
+        let e = parse("{}").unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.bad_value"));
+        let e = parse(r#"{"inputs":[]}"#).unwrap_err();
+        assert_eq!(e.message, "expected exactly 1 input tensor, got 0");
+        let e = parse(
+            r#"{"inputs":[
+                {"name":"a","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]},
+                {"name":"b","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.message, "expected exactly 1 input tensor, got 2");
+        let e = parse(
+            r#"{"inputs":[{"datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.message, "input tensor missing 'name'");
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,[2,"y"],3,4]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.bad_value: tensor 'x': data must contain only numbers, found string"
+        );
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1e999,0,0,0]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err_string(&e),
+            "bad_input.bad_value: tensor 'x': data contains non-finite values"
+        );
+    }
+
+    #[test]
+    fn parameters_lower_into_infer_params() {
+        let (ir, opts) = parse_ens(
+            r#"{"id":"req-7",
+                "inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}],
+                "parameters":{"normalized":true,"detail":true,"policy":"any",
+                              "target":"cross","models":"m1"},
+                "outputs":[{"name":"m1.classes"}]}"#,
+        )
+        .unwrap();
+        assert!(ir.params.normalized && ir.params.detail);
+        assert_eq!(ir.params.models, Some(vec!["m1".to_string()]));
+        assert_eq!(ir.params.policy, Some(Policy::Any));
+        assert_eq!(ir.params.target.as_ref().unwrap().0, "cross");
+        assert_eq!(opts.id.as_deref(), Some("req-7"));
+        assert_eq!(opts.outputs, Some(vec!["m1.classes".to_string()]));
+
+        // 'models' is ensemble-only; unknown targets are typed.
+        let e = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}],
+                "parameters":{"models":"m1"}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.message,
+            "parameter 'models' is only valid for the '_ensemble' model"
+        );
+        let e = parse_ens(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}],
+                "parameters":{"policy":"any","target":"dog"}}"#,
+        )
+        .unwrap_err();
+        assert_eq!((e.status, e.code), (422, "bad_input.unknown_target"));
+    }
+
+    #[test]
+    fn v2_error_envelope_is_protocol_shaped() {
+        let resp = v2_error(&ApiError::unknown_model("nope"));
+        assert_eq!(resp.status, 404);
+        let v = resp.json_body().unwrap();
+        assert_eq!(
+            v.get("error").unwrap().as_str(),
+            Some("model.unknown: unknown model 'nope'")
+        );
+        // No nested {code, message} object — the OIP error is one string.
+        assert!(v.path(&["error", "code"]).is_none());
+    }
+}

@@ -16,6 +16,7 @@
 //! | `bad_input.bad_value`       | 422    | wrong type / empty / non-finite |
 //! | `bad_input.bad_pgm`         | 422    | undecodable `pgm_b64` frame     |
 //! | `bad_input.bad_policy`      | 422    | unparsable/inapplicable policy  |
+//! | `bad_input.dtype`           | 422    | unsupported tensor datatype     |
 //! | `bad_input.unknown_target`  | 422    | `target` not a known class      |
 //! | `bad_input.empty_ensemble`  | 422    | requested empty model set       |
 //! | `model.unknown`             | 404    | model not in the manifest       |
@@ -31,10 +32,11 @@
 
 use super::batcher::BatchStats;
 use super::ensemble::EnsembleOutput;
+use super::infer::{InferParams, InferenceRequest, NamedTensor};
 use super::policy::Policy;
 use crate::http::{Request, Response};
 use crate::json::{self, Value};
-use crate::runtime::Manifest;
+use crate::runtime::{DType, Manifest};
 use std::fmt;
 
 /// A structured API failure: HTTP status + stable machine-readable code.
@@ -87,6 +89,12 @@ impl ApiError {
 
     pub fn bad_policy(detail: impl fmt::Display) -> ApiError {
         Self::new(422, "bad_input.bad_policy", detail.to_string())
+    }
+
+    /// Unsupported or inapplicable tensor element type (the `/v2` codec's
+    /// rejection for dtype/model combinations the runtime can't serve).
+    pub fn bad_dtype(detail: impl Into<String>) -> ApiError {
+        Self::new(422, "bad_input.dtype", detail)
     }
 
     pub fn unknown_target(target: &str) -> ApiError {
@@ -300,29 +308,13 @@ impl PredictRequest {
         };
         let models = models.filter(|names| !names.is_empty());
 
-        let policy = match query_override(req, "policy")
-            .or_else(|| body.get("policy").and_then(Value::as_str))
-        {
-            None => None,
-            Some(p) => Some(Policy::parse(p).map_err(ApiError::bad_policy)?),
-        };
-        let target = query_override(req, "target")
-            .or_else(|| body.get("target").and_then(Value::as_str))
-            .map(str::to_string);
-        if policy.is_some() && target.is_none() {
-            return Err(ApiError::bad_policy("'policy' requires 'target' (a class name)"));
-        }
-        let target = match target {
-            None => None,
-            Some(name) => {
-                let idx = manifest
-                    .classes
-                    .iter()
-                    .position(|c| c == &name)
-                    .ok_or_else(|| ApiError::unknown_target(&name))?;
-                Some((name, idx))
-            }
-        };
+        // Typed policy/target resolution is shared with the /v2 codec
+        // (identical validation order and error strings by construction).
+        let (policy, target) = super::infer::resolve_policy_target(
+            manifest,
+            query_override(req, "policy").or_else(|| body.get("policy").and_then(Value::as_str)),
+            query_override(req, "target").or_else(|| body.get("target").and_then(Value::as_str)),
+        )?;
 
         let detail = match query_override(req, "detail") {
             Some(v) => v == "1" || v == "true",
@@ -338,6 +330,31 @@ impl PredictRequest {
             target,
             detail,
         })
+    }
+
+    /// Lower this parsed `/v1` body into the protocol-agnostic inference
+    /// IR: one anonymous f32 tensor shaped `[batch, ...input_shape]` plus
+    /// the execution flags. Consumes `self` (the tensor moves, no copy).
+    pub fn into_inference(self, manifest: &Manifest) -> InferenceRequest {
+        let mut shape = Vec::with_capacity(manifest.input_shape.len() + 1);
+        shape.push(self.batch);
+        shape.extend(&manifest.input_shape);
+        InferenceRequest {
+            inputs: vec![NamedTensor {
+                name: "input".to_string(),
+                dtype: DType::F32,
+                shape,
+                data: self.data,
+            }],
+            batch: self.batch,
+            params: InferParams {
+                models: self.models,
+                policy: self.policy,
+                target: self.target,
+                detail: self.detail,
+                normalized: self.normalized,
+            },
+        }
     }
 }
 
@@ -514,7 +531,7 @@ impl StageMicros {
 /// path.
 pub fn render_predict(
     manifest: &Manifest,
-    input: &PredictRequest,
+    params: &InferParams,
     output: &EnsembleOutput,
     stats: Option<BatchStats>,
     stages: Option<StageMicros>,
@@ -527,16 +544,13 @@ pub fn render_predict(
         members.push((format!("model_{}", m.model), json::str_array_raw(names)));
     }
 
-    // Opt-in server-side sensitivity fusion (§2.1).
-    if let (Some(policy), Some((target, target_idx))) = (&input.policy, &input.target) {
-        let votes = output.votes_for_class(*target_idx); // [model][row]
-        let mut detections = Vec::with_capacity(output.batch);
-        for row in 0..output.batch {
-            let row_votes: Vec<bool> = votes.iter().map(|m| m[row]).collect();
-            detections.push(Value::Bool(
-                policy.fuse(&row_votes).map_err(ApiError::bad_policy)?,
-            ));
-        }
+    // Opt-in server-side sensitivity fusion (§2.1) — computed by the
+    // shared core helper so the /v1 and /v2 renderers can never diverge.
+    if let (Some(policy), Some((target, target_idx))) = (&params.policy, &params.target) {
+        let detections: Vec<Value> = super::infer::fuse_detections(output, policy, *target_idx)?
+            .into_iter()
+            .map(Value::Bool)
+            .collect();
         members.push((
             "ensemble".to_string(),
             json::obj([
@@ -547,7 +561,7 @@ pub fn render_predict(
         ));
     }
 
-    if input.detail {
+    if params.detail {
         let per_model: Vec<(String, Value)> = output
             .per_model
             .iter()
@@ -738,6 +752,29 @@ mod tests {
                 ),
             }
         }
+    }
+
+    #[test]
+    fn v1_body_lowers_into_inference_ir() {
+        let m = manifest();
+        let r = PredictRequest::parse(
+            &m,
+            &post(
+                "/v1/predict",
+                r#"{"data":[1,2,3,4,5,6,7,8],"batch":2,"normalized":true,"detail":true}"#,
+            ),
+        )
+        .unwrap();
+        let ir = r.into_inference(&m);
+        assert_eq!(ir.batch, 2);
+        assert_eq!(ir.inputs.len(), 1);
+        let t = &ir.inputs[0];
+        assert_eq!(t.name, "input");
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.shape, vec![2, 2, 2, 1]); // [batch] + input_shape
+        assert_eq!(t.data.len(), 8);
+        assert!(ir.params.normalized && ir.params.detail);
+        assert!(ir.params.models.is_none() && ir.params.policy.is_none());
     }
 
     #[test]

@@ -85,10 +85,53 @@ impl Client {
         Self::expect_2xx(resp)
     }
 
+    // ---- typed /v2 (Open Inference Protocol) helpers ---------------------
+
+    /// `POST /v2/models/:name/infer` with one f32 tensor. `shape` is the
+    /// OIP shape (`[batch, ...sample dims]`); use model `"_ensemble"` for
+    /// the whole active ensemble.
+    pub fn v2_infer(&mut self, model: &str, shape: &[usize], data: &[f32]) -> Result<Value> {
+        let resp = self.post_json(
+            &format!("/v2/models/{model}/infer"),
+            &v2_infer_body(shape, data),
+        )?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `GET /v2/models/:name` — OIP model metadata.
+    pub fn v2_model_metadata(&mut self, model: &str) -> Result<Value> {
+        let resp = self.get(&format!("/v2/models/{model}"))?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `GET /v2/health/ready` (model `None`) or `GET /v2/models/:name/ready`.
+    /// `Ok(false)` is a well-formed not-ready answer (503 + body); other
+    /// failures (unknown model, transport) are errors.
+    pub fn v2_ready(&mut self, model: Option<&str>) -> Result<bool> {
+        let path = match model {
+            None => "/v2/health/ready".to_string(),
+            Some(m) => format!("/v2/models/{m}/ready"),
+        };
+        let resp = self.get(&path)?;
+        let body = resp.json_body().unwrap_or(Value::Null);
+        match body.get("ready").and_then(Value::as_bool) {
+            Some(ready) => Ok(ready),
+            None => {
+                Self::expect_2xx(resp)?;
+                bail!("readiness response carried no 'ready' field")
+            }
+        }
+    }
+
     fn expect_2xx(resp: Response) -> Result<Value> {
         let body = resp.json_body().unwrap_or(Value::Null);
         if (200..300).contains(&resp.status) {
             return Ok(body);
+        }
+        // /v2 (Open Inference Protocol) errors are one string; /v1 errors
+        // are the {code, message} envelope.
+        if let Some(msg) = body.get("error").and_then(Value::as_str) {
+            bail!("HTTP {}: {msg}", resp.status)
         }
         let code = body
             .path(&["error", "code"])
@@ -161,6 +204,24 @@ impl Client {
         stream.flush()?;
         read_response(reader)
     }
+}
+
+/// Build an Open-Inference-Protocol infer body for one flat f32 tensor
+/// (the input tensor is named `input`; `data` renders through the
+/// streaming float writer).
+pub fn v2_infer_body(shape: &[usize], data: &[f32]) -> Value {
+    crate::json::obj([(
+        "inputs",
+        Value::Arr(vec![crate::json::obj([
+            ("name", Value::from("input")),
+            ("datatype", Value::from("FP32")),
+            (
+                "shape",
+                Value::Arr(shape.iter().map(|&d| Value::from(d)).collect()),
+            ),
+            ("data", crate::json::f32_array_raw(data.iter().copied())),
+        ])]),
+    )])
 }
 
 /// Parse a response off the wire.

@@ -146,8 +146,9 @@ impl Router {
         resp
     }
 
-    /// Core routing: 404/405 render the uniform JSON error envelope; a
-    /// panicking handler is caught and rendered as a 500.
+    /// Core routing: 404/405 render the uniform JSON error envelope (a 405
+    /// carries an `Allow` header listing every method registered for the
+    /// path); a panicking handler is caught and rendered as a 500.
     fn route(&self, req: &Request) -> (Response, Option<&str>) {
         let path_segments: Vec<String> = req
             .path
@@ -156,7 +157,9 @@ impl Router {
             .filter(|s| !s.is_empty())
             .map(percent_decode)
             .collect();
-        let mut path_matched = false;
+        // Methods registered for this path (only populated until a full
+        // match dispatches).
+        let mut allowed: Vec<&str> = Vec::new();
         for route in &self.routes {
             if let Some(params) = match_segments(&route.segments, &path_segments) {
                 if route.method == req.method {
@@ -166,14 +169,21 @@ impl Router {
                         });
                     return (resp, Some(route.pattern.as_str()));
                 }
-                path_matched = true;
+                if !allowed.contains(&route.method.as_str()) {
+                    allowed.push(&route.method);
+                }
             }
         }
-        if path_matched {
-            (
-                Response::coded_error(405, "route.method_not_allowed", "method not allowed"),
-                None,
-            )
+        if !allowed.is_empty() {
+            allowed.sort_unstable();
+            let allow = allowed.join(", ");
+            let mut resp = Response::coded_error(
+                405,
+                "route.method_not_allowed",
+                &format!("method {} not allowed (allow: {allow})", req.method),
+            );
+            resp.headers.push(("allow".to_string(), allow));
+            (resp, None)
         } else {
             (Response::coded_error(404, "route.not_found", "no such route"), None)
         }
@@ -280,10 +290,43 @@ mod tests {
     #[test]
     fn not_found_vs_method_not_allowed() {
         assert_eq!(router().dispatch(&get("/nope")).status, 404);
-        assert_eq!(router().dispatch(&get("/predict")).status, 405);
+        let resp = router().dispatch(&get("/predict"));
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("allow"), Some("POST"));
         assert_eq!(
             router().dispatch(&Request::new("POST", "/predict", b"xy".to_vec())).body,
             b"len=2"
+        );
+        // A 404 carries no Allow header — nothing is allowed on that path.
+        assert!(router().dispatch(&get("/nope")).header("allow").is_none());
+    }
+
+    #[test]
+    fn allow_header_lists_every_method_on_v1_and_v2_routes() {
+        let mut r = Router::new();
+        r.add("PUT", "/v1/ensemble", |_, _| Response::text(200, "put"));
+        r.add("GET", "/v1/ensemble", |_, _| Response::text(200, "get"));
+        r.add("POST", "/v2/models/:name/infer", |_, _| Response::text(200, "infer"));
+
+        // Multiple methods on one path: all listed, sorted, deduped.
+        let resp = r.dispatch(&Request::new("DELETE", "/v1/ensemble", Vec::new()));
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("allow"), Some("GET, PUT"));
+        assert_eq!(
+            resp.json_body().unwrap().path(&["error", "code"]).unwrap().as_str(),
+            Some("route.method_not_allowed")
+        );
+
+        // Param routes 405 correctly too (GET on a POST-only /v2 route).
+        let resp = r.dispatch(&get("/v2/models/mlp/infer"));
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("allow"), Some("POST"));
+
+        // Matching methods still dispatch.
+        assert_eq!(r.dispatch(&Request::new("PUT", "/v1/ensemble", Vec::new())).body, b"put");
+        assert_eq!(
+            r.dispatch(&Request::new("POST", "/v2/models/x/infer", Vec::new())).body,
+            b"infer"
         );
     }
 

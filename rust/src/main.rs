@@ -6,6 +6,7 @@
 //! flexserve models           print the artifact manifest + provenance
 //! flexserve verify           verify artifact SHA-256s against the manifest
 //! flexserve predict          send a synthetic batch to a running server
+//! flexserve infer [MODEL]    send a synthetic batch via the /v2 protocol
 //! flexserve bench            closed-loop load test → BENCH_serve.json
 //! flexserve load MODEL       load a model into a running server (/v1)
 //! flexserve unload MODEL     unload a model from a running server (/v1)
@@ -46,6 +47,7 @@ fn run(args: &[String]) -> Result<()> {
         "models" => cmd_models(rest),
         "verify" => cmd_verify(rest),
         "predict" => cmd_predict(rest),
+        "infer" => cmd_infer(rest),
         "bench" => cmd_bench(rest),
         "load" => cmd_lifecycle(rest, "load"),
         "unload" => cmd_lifecycle(rest, "unload"),
@@ -70,6 +72,8 @@ fn print_usage() {
            models           print the artifact manifest (provenance included)\n\
            verify           verify artifact hashes against the manifest\n\
            predict          send a synthetic frame batch to a running server\n\
+           infer [MODEL]    send a synthetic batch via the /v2 Open Inference\n\
+                            Protocol (default model: _ensemble)\n\
            bench            closed-loop load test a running server (BENCH_serve.json)\n\
            load MODEL       POST /v1/models/MODEL/load on a running server\n\
            unload MODEL     POST /v1/models/MODEL/unload on a running server\n\
@@ -87,9 +91,11 @@ fn print_usage() {
          PREDICT FLAGS:\n\
            --batch N --policy any|all|majority|atleast:k --target CLASS\n\
            --detail --seed N\n\
+         INFER FLAGS:\n\
+           --batch N --seed N (plus --addr)\n\
          BENCH FLAGS:\n\
            --connections K --duration-secs S --iters N --warmup N\n\
-           --batch-mix 1:0.7,8:0.2,32:0.1 --path /v1/predict --seed N\n\
+           --batch-mix 1:0.7,8:0.2,32:0.1 --protocol v1|v2 --path PATH --seed N\n\
            --out BENCH_serve.json --echo (in-process echo target; no artifacts)"
     );
 }
@@ -115,6 +121,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     println!(
         "introspection: GET /v1/models /v1/models/:name /v1/metrics /v1/healthz (+ legacy aliases)"
+    );
+    println!(
+        "v2 (OIP):      POST /v2/models/:name/infer (ensemble alias: _ensemble) | \
+         GET /v2 /v2/health/live|ready /v2/models/:name[/ready]"
     );
     park_forever();
 }
@@ -245,6 +255,37 @@ fn cmd_predict(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `flexserve infer` — send one synthetic batch through the `/v2` Open
+/// Inference Protocol via the typed v2 client (model `_ensemble` fans out
+/// to the whole active set, like `flexserve predict` does over `/v1`).
+fn cmd_infer(args: &[String]) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut batch = 4usize;
+    let mut seed = 0u64;
+    let mut model = "_ensemble".to_string();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            "--batch" => batch = it.next().context("--batch needs a value")?.parse()?,
+            "--seed" => seed = it.next().context("--seed needs a value")?.parse()?,
+            other if other.starts_with("--") => bail!("unknown infer flag '{other}'"),
+            other => model = other.to_string(),
+        }
+    }
+    let mut rng = Prng::new(seed);
+    let (data, labels) = workload::make_batch(&mut rng, batch);
+    let shape = [batch, workload::IMG, workload::IMG, 1];
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = client.v2_infer(&model, &shape, &data)?;
+    println!(
+        "true labels: {:?}",
+        labels.iter().map(|&l| workload::CLASSES[l]).collect::<Vec<_>>()
+    );
+    println!("{}", json::to_string_pretty(&doc));
+    Ok(())
+}
+
 /// `flexserve bench` — drive a live server with the closed-loop load
 /// harness and write the `BENCH_serve.json` report (throughput, latency
 /// quantiles, and the server's per-stage parse/queue/exec/render
@@ -268,7 +309,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "--iters" => cfg.iters = Some(take("--iters")?.parse()?),
             "--warmup" => cfg.warmup = take("--warmup")?.parse()?,
             "--batch-mix" => cfg.batch_mix = workload::parse_batch_mix(&take("--batch-mix")?)?,
-            "--path" => cfg.path = take("--path")?,
+            "--protocol" => cfg.protocol = load::Protocol::parse(&take("--protocol")?)?,
+            "--path" => cfg.path = Some(take("--path")?),
             "--seed" => cfg.seed = take("--seed")?.parse()?,
             "--out" => out = take("--out")?,
             "--echo" => echo = true,
@@ -300,10 +342,11 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     cfg.addr = addr.parse().with_context(|| format!("bad --addr '{addr}'"))?;
 
     eprintln!(
-        "bench: {} connections → {}{} ({})",
+        "bench: {} connections → {}{} [{}] ({})",
         cfg.connections,
         cfg.addr,
-        cfg.path,
+        cfg.effective_path(),
+        cfg.protocol.as_str(),
         match cfg.iters {
             Some(n) => format!("{n} iters/connection"),
             None => format!("{:.1}s", cfg.duration_secs),

@@ -119,6 +119,11 @@ impl Manifest {
             .and_then(Value::as_obj)
             .ok_or_else(|| anyhow!("manifest: missing models"))?
         {
+            // Leading underscores are reserved for protocol pseudo-models
+            // (the /v2 `_ensemble` alias would silently shadow one).
+            if name.starts_with('_') {
+                bail!("model name '{name}' is reserved (names may not start with '_')");
+            }
             let mut bucket_refs = Vec::new();
             for (bucket_s, b) in m
                 .get("buckets")
@@ -287,6 +292,21 @@ mod tests {
             members[0].1 = Value::Num(2.0);
         }
         assert!(Manifest::from_value(PathBuf::from("/tmp"), &v).is_err());
+    }
+
+    #[test]
+    fn rejects_reserved_underscore_names() {
+        // '_'-prefixed names are protocol pseudo-models (/v2 `_ensemble`).
+        let v = json::parse(
+            r#"{"format_version":1,"input_shape":[1],"classes":["a"],
+                "normalize":{"mean":0,"std":1},"buckets":[1],
+                "models":{"_ensemble":{"param_count":1,"test_acc":0.5,
+                  "params_sha256":"x",
+                  "buckets":{"1":{"file":"f","sha256":"s","bytes":1}}}}}"#,
+        )
+        .unwrap();
+        let err = Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap_err();
+        assert!(format!("{err:#}").contains("reserved"), "{err:#}");
     }
 
     #[test]

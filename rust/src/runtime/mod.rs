@@ -21,4 +21,4 @@ pub mod tensor;
 pub use executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle};
 pub use manifest::{ArtifactRef, Manifest, ModelEntry};
 pub use pool::ExecutorPool;
-pub use tensor::TensorView;
+pub use tensor::{DType, TensorView};

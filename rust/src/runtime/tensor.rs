@@ -1,8 +1,58 @@
 //! Batch padding/truncation for bucketed executables (§2.3 flexible batch
-//! sizes under shape-specialized XLA AOT), and the zero-copy payload
+//! sizes under shape-specialized XLA AOT), the element-type vocabulary
+//! shared with the protocol codecs ([`DType`]), and the zero-copy payload
 //! carrier ([`TensorView`]) the whole data plane hands around.
 
 use std::sync::Arc;
+
+/// Element types the serving stack speaks on the wire. Device storage is
+/// f32-only today: non-f32 inputs are converted at the protocol boundary
+/// (the `/v2` codec), so everything past the extractors carries
+/// [`DType::F32`]. The enum exists so the wire layers, the inference IR
+/// and the tensor carrier agree on one vocabulary — including the names
+/// the Open Inference Protocol uses (`FP32`, `INT64`, `UINT8`, `BYTES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I64,
+    U8,
+    /// Variable-length byte/string elements (v2 `BYTES`); used for class
+    /// name *outputs* only — models take numeric inputs.
+    Bytes,
+}
+
+impl DType {
+    /// Parse an Open-Inference-Protocol datatype name.
+    pub fn from_v2(name: &str) -> Option<DType> {
+        match name {
+            "FP32" => Some(DType::F32),
+            "INT64" => Some(DType::I64),
+            "UINT8" => Some(DType::U8),
+            "BYTES" => Some(DType::Bytes),
+            _ => None,
+        }
+    }
+
+    /// The Open-Inference-Protocol name of this dtype.
+    pub fn v2_name(self) -> &'static str {
+        match self {
+            DType::F32 => "FP32",
+            DType::I64 => "INT64",
+            DType::U8 => "UINT8",
+            DType::Bytes => "BYTES",
+        }
+    }
+
+    /// Bytes per element (`None` for variable-length [`DType::Bytes`]).
+    pub fn size_bytes(self) -> Option<usize> {
+        match self {
+            DType::F32 => Some(4),
+            DType::I64 => Some(8),
+            DType::U8 => Some(1),
+            DType::Bytes => None,
+        }
+    }
+}
 
 /// A shared, reference-counted view into a row-major f32 batch.
 ///
@@ -11,6 +61,12 @@ use std::sync::Arc;
 /// — the batcher, `Ensemble::forward`'s per-(model, chunk) fan-out, the
 /// device executors — holds a `TensorView` into the *same* buffer. Cloning
 /// and [`TensorView::slice`] are refcount bumps, never float copies.
+///
+/// A view also carries its element type and (optionally) its logical
+/// shape, so typed, shaped protocol tensors flow through
+/// `ExecRequest`/`Ensemble::forward`/the batcher unchanged. Storage is
+/// f32 today — non-f32 wire inputs are converted at the protocol boundary
+/// — so `dtype` is [`DType::F32`] everywhere past the extractors.
 #[derive(Debug, Clone)]
 pub struct TensorView {
     buf: Arc<[f32]>,
@@ -18,11 +74,18 @@ pub struct TensorView {
     offset: usize,
     /// Float length of this view.
     len: usize,
+    /// Element type of the stored data (post-conversion).
+    dtype: DType,
+    /// Logical shape, when the producer declared one (`None` = flat).
+    /// Shared, so cloning a shaped view stays allocation-free.
+    shape: Option<Arc<[usize]>>,
 }
 
 impl TensorView {
     /// Sub-view of `len` floats starting `offset` floats into this view.
-    /// Shares the underlying buffer (no copy).
+    /// Shares the underlying buffer (no copy). The sub-view keeps the
+    /// dtype but drops the logical shape (a row range of a shaped batch
+    /// has a different leading dimension).
     pub fn slice(&self, offset: usize, len: usize) -> TensorView {
         assert!(
             offset + len <= self.len,
@@ -34,7 +97,32 @@ impl TensorView {
             buf: Arc::clone(&self.buf),
             offset: self.offset + offset,
             len,
+            dtype: self.dtype,
+            shape: None,
         }
+    }
+
+    /// Attach a logical shape (e.g. `[batch, H, W, C]`); the product must
+    /// match the view's length.
+    pub fn with_shape(mut self, shape: &[usize]) -> TensorView {
+        debug_assert_eq!(
+            shape.iter().product::<usize>(),
+            self.len,
+            "shape {shape:?} does not cover {} floats",
+            self.len
+        );
+        self.shape = Some(shape.into());
+        self
+    }
+
+    /// Element type of the stored data.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Logical shape, if the producer declared one (empty slice = flat).
+    pub fn shape(&self) -> &[usize] {
+        self.shape.as_deref().unwrap_or(&[])
     }
 
     pub fn as_slice(&self) -> &[f32] {
@@ -67,6 +155,8 @@ impl From<Vec<f32>> for TensorView {
             buf: v.into(),
             offset: 0,
             len,
+            dtype: DType::F32,
+            shape: None,
         }
     }
 }
@@ -74,7 +164,13 @@ impl From<Vec<f32>> for TensorView {
 impl From<Arc<[f32]>> for TensorView {
     fn from(buf: Arc<[f32]>) -> TensorView {
         let len = buf.len();
-        TensorView { buf, offset: 0, len }
+        TensorView {
+            buf,
+            offset: 0,
+            len,
+            dtype: DType::F32,
+            shape: None,
+        }
     }
 }
 
@@ -164,6 +260,33 @@ mod tests {
     #[should_panic(expected = "out of view")]
     fn tensor_view_slice_bounds_checked() {
         TensorView::from(vec![0.0f32; 4]).slice(2, 3);
+    }
+
+    #[test]
+    fn tensor_view_carries_dtype_and_shape() {
+        let view = TensorView::from(vec![0.0f32; 8]).with_shape(&[2, 2, 2, 1]);
+        assert_eq!(view.dtype(), DType::F32);
+        assert_eq!(view.shape(), &[2, 2, 2, 1]);
+        // Cloning shares the shape; slicing keeps dtype but goes flat.
+        assert_eq!(view.clone().shape(), &[2, 2, 2, 1]);
+        let sub = view.slice(4, 4);
+        assert_eq!(sub.dtype(), DType::F32);
+        assert!(sub.shape().is_empty());
+        // Flat views report an empty shape.
+        assert!(TensorView::from(vec![1.0f32]).shape().is_empty());
+    }
+
+    #[test]
+    fn dtype_v2_names_roundtrip() {
+        for dt in [DType::F32, DType::I64, DType::U8, DType::Bytes] {
+            assert_eq!(DType::from_v2(dt.v2_name()), Some(dt));
+        }
+        assert_eq!(DType::from_v2("FP64"), None);
+        assert_eq!(DType::from_v2("fp32"), None); // v2 names are uppercase
+        assert_eq!(DType::F32.size_bytes(), Some(4));
+        assert_eq!(DType::I64.size_bytes(), Some(8));
+        assert_eq!(DType::U8.size_bytes(), Some(1));
+        assert_eq!(DType::Bytes.size_bytes(), None);
     }
 
     #[test]

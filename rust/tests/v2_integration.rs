@@ -1,0 +1,512 @@
+//! End-to-end `/v2` (Open Inference Protocol) integration: metadata,
+//! readiness, the infer data plane, the `_ensemble` alias, and the
+//! differential guarantee that `/v2` serves IDENTICAL predictions to
+//! `/v1` for the same tensor. One shared server per test binary (device
+//! compile is ~6 s); membership-mutating tests take the write side of a
+//! shared RwLock so read-only tests never observe a partial ensemble.
+
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, BatcherConfig, ServerState};
+use flexserve::http::client::v2_infer_body;
+use flexserve::http::{Client, Request, ServerHandle};
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn has_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !has_artifacts() {
+            eprintln!("skipping: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+struct Stack {
+    handle: ServerHandle,
+    state: Arc<ServerState>,
+}
+
+static STACK: OnceLock<Stack> = OnceLock::new();
+/// Read for tests that assume the full 3-model membership; write for
+/// tests that mutate it (and restore before releasing).
+static MEMBERSHIP: RwLock<()> = RwLock::new(());
+
+fn stack() -> &'static Stack {
+    STACK.get_or_init(|| {
+        let mut config = ServeConfig::default();
+        config.addr = "127.0.0.1:0".into();
+        config.artifacts = artifact_dir();
+        config.http_workers = 4;
+        config.device_workers = 1;
+        config.warmup = false;
+        config.batcher = Some(BatcherConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+        });
+        let (handle, state) = serve(&config).expect("server starts");
+        Stack { handle, state }
+    })
+}
+
+fn client() -> Client {
+    Client::connect(stack().handle.addr).unwrap()
+}
+
+fn make_tensor(batch: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    let (data, _) = workload::make_batch(&mut rng, batch);
+    data
+}
+
+fn v2_error_string(r: &flexserve::http::Response) -> String {
+    r.json_body()
+        .unwrap()
+        .get("error")
+        .and_then(Value::as_str)
+        .unwrap_or("<none>")
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Metadata + readiness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v2_server_metadata_and_health() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.read().unwrap();
+    let mut c = client();
+
+    let r = c.get("/v2").unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("name").unwrap().as_str(), Some("flexserve"));
+    assert!(v.get("version").unwrap().as_str().is_some());
+    assert!(v.get("extensions").unwrap().as_arr().is_some());
+
+    let r = c.get("/v2/health/live").unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json_body().unwrap().get("live").unwrap().as_bool(), Some(true));
+
+    assert!(c.v2_ready(None).unwrap(), "3 active models → server ready");
+}
+
+#[test]
+fn v2_model_metadata_names_typed_shaped_io() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.read().unwrap();
+    let mut c = client();
+
+    let v = c.v2_model_metadata("cnn_m").unwrap();
+    assert_eq!(v.get("name").unwrap().as_str(), Some("cnn_m"));
+    assert_eq!(v.get("platform").unwrap().as_str(), Some("flexserve-xla-pjrt"));
+    // Input: FP32, dynamic batch + the manifest's sample shape.
+    let input = v.get("inputs").unwrap().at(0).unwrap();
+    assert_eq!(input.get("name").unwrap().as_str(), Some("input"));
+    assert_eq!(input.get("datatype").unwrap().as_str(), Some("FP32"));
+    let shape: Vec<i64> = input
+        .get("shape")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|d| d.as_f64().unwrap() as i64)
+        .collect();
+    assert_eq!(shape, vec![-1, 16, 16, 1]);
+    // Outputs: class names (BYTES) + probabilities (FP32).
+    let outs = v.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outs[0].get("name").unwrap().as_str(), Some("classes"));
+    assert_eq!(outs[0].get("datatype").unwrap().as_str(), Some("BYTES"));
+    assert_eq!(outs[1].get("name").unwrap().as_str(), Some("probs"));
+    assert_eq!(outs[1].get("datatype").unwrap().as_str(), Some("FP32"));
+    // Provenance rides as a custom field (the paper's motivating ask).
+    assert!(!v
+        .path(&["parameters", "params_sha256"])
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .is_empty());
+    assert_eq!(v.path(&["parameters", "state"]).unwrap().as_str(), Some("active"));
+
+    // The ensemble pseudo-model lists per-model outputs.
+    let v = c.v2_model_metadata("_ensemble").unwrap();
+    let out_names: Vec<&str> = v
+        .get("outputs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|o| o.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for model in ["cnn_m", "cnn_s", "mlp"] {
+        assert!(out_names.contains(&format!("{model}.classes").as_str()), "{out_names:?}");
+    }
+    assert_eq!(v.path(&["parameters", "ensemble"]).unwrap().as_bool(), Some(true));
+
+    // Unknown model: protocol-shaped error string with the taxonomy code.
+    let r = c.get("/v2/models/resnet152").unwrap();
+    assert_eq!(r.status, 404);
+    assert_eq!(
+        v2_error_string(&r),
+        "model.unknown: unknown model 'resnet152'"
+    );
+}
+
+#[test]
+fn v2_model_readiness_tracks_lifecycle() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.write().unwrap();
+    let mut c = client();
+
+    assert!(c.v2_ready(Some("cnn_s")).unwrap());
+    assert!(c.v2_ready(Some("_ensemble")).unwrap());
+    // Unknown model is a 404 error, not a false.
+    assert!(c.v2_ready(Some("resnet152")).is_err());
+
+    // Unload → 503 + ready:false; reload → ready again.
+    c.unload_model("cnn_s").unwrap();
+    assert!(!c.v2_ready(Some("cnn_s")).unwrap());
+    let r = c.get("/v2/models/cnn_s/ready").unwrap();
+    assert_eq!(r.status, 503);
+    c.load_model("cnn_s").unwrap();
+    assert!(c.v2_ready(Some("cnn_s")).unwrap());
+}
+
+// ---------------------------------------------------------------------------
+// Infer data plane
+// ---------------------------------------------------------------------------
+
+/// The acceptance-criterion differential: `/v2` infer and `/v1` predict
+/// return identical predictions for the same f32 tensor — single model
+/// and ensemble alias both.
+#[test]
+fn v2_infer_matches_v1_predict_for_the_same_tensor() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.read().unwrap();
+    let mut c = client();
+
+    for batch in [1, 3, 8] {
+        let data = make_tensor(batch, 1000 + batch as u64);
+        let shape = [batch, workload::IMG, workload::IMG, 1];
+
+        // Single-model fast path.
+        let v1_body = json::obj([
+            ("data", json::f32_array_raw(data.iter().copied())),
+            ("batch", Value::from(batch)),
+        ]);
+        let v1 = c
+            .post_json("/v1/models/mlp/predict", &v1_body)
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let v1_preds: Vec<String> = v1
+            .get("predictions")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_str().unwrap().to_string())
+            .collect();
+
+        let v2 = c.v2_infer("mlp", &shape, &data).unwrap();
+        assert_eq!(v2.get("model_name").unwrap().as_str(), Some("mlp"));
+        let out = v2.get("outputs").unwrap().at(0).unwrap();
+        assert_eq!(out.get("name").unwrap().as_str(), Some("classes"));
+        assert_eq!(out.get("datatype").unwrap().as_str(), Some("BYTES"));
+        assert_eq!(
+            out.get("shape").unwrap().as_arr().unwrap()[0].as_usize(),
+            Some(batch)
+        );
+        let v2_preds: Vec<String> = out
+            .get("data")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(v1_preds, v2_preds, "batch {batch}: v1 and v2 must agree");
+
+        // Ensemble: /v1/predict vs the _ensemble alias, every model.
+        let v1 = c
+            .post_json("/v1/predict", &v1_body)
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let v2 = c.v2_infer("_ensemble", &shape, &data).unwrap();
+        assert_eq!(v2.get("model_name").unwrap().as_str(), Some("_ensemble"));
+        let outs = v2.get("outputs").unwrap().as_arr().unwrap();
+        for model in ["cnn_m", "cnn_s", "mlp"] {
+            let v1_preds: Vec<&str> = v1
+                .get(&format!("model_{model}"))
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| p.as_str().unwrap())
+                .collect();
+            let out = outs
+                .iter()
+                .find(|o| o.get("name").unwrap().as_str() == Some(&format!("{model}.classes")))
+                .unwrap_or_else(|| panic!("missing {model}.classes output"));
+            let v2_preds: Vec<&str> = out
+                .get("data")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| p.as_str().unwrap())
+                .collect();
+            assert_eq!(v1_preds, v2_preds, "{model} batch {batch}");
+        }
+    }
+}
+
+#[test]
+fn v2_infer_dtypes_convert_at_the_boundary() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.read().unwrap();
+    let mut c = client();
+    let batch = 2;
+    let elems = workload::IMG * workload::IMG;
+    // An integral-valued tensor is expressible in all three dtypes.
+    let data: Vec<f32> = (0..batch * elems).map(|i| (i % 3) as f32).collect();
+    let shape_doc = |dims: &[usize]| {
+        Value::Arr(dims.iter().map(|&d| Value::from(d)).collect())
+    };
+    let body = |dtype: &str| {
+        json::obj([(
+            "inputs",
+            Value::Arr(vec![json::obj([
+                ("name", Value::from("input")),
+                ("datatype", Value::from(dtype)),
+                ("shape", shape_doc(&[batch, workload::IMG, workload::IMG, 1])),
+                ("data", json::f32_array_raw(data.iter().copied())),
+            ])]),
+        )])
+    };
+    let preds_of = |v: &Value| -> Vec<String> {
+        v.get("outputs")
+            .unwrap()
+            .at(0)
+            .unwrap()
+            .get("data")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_str().unwrap().to_string())
+            .collect()
+    };
+
+    let fp32 = c
+        .post_json("/v2/models/mlp/infer", &body("FP32"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    for dtype in ["INT64", "UINT8"] {
+        let r = c.post_json("/v2/models/mlp/infer", &body(dtype)).unwrap();
+        assert_eq!(r.status, 200, "{dtype}: {}", String::from_utf8_lossy(&r.body));
+        assert_eq!(
+            preds_of(&r.json_body().unwrap()),
+            preds_of(&fp32),
+            "{dtype} must predict identically to FP32 for integral data"
+        );
+    }
+
+    // BYTES and unknown dtypes reject with the bad_input.dtype code.
+    let bad = json::obj([(
+        "inputs",
+        Value::Arr(vec![json::obj([
+            ("name", Value::from("input")),
+            ("datatype", Value::from("BYTES")),
+            ("shape", shape_doc(&[1, elems])),
+            ("data", Value::Arr(vec![Value::from("x"); elems])),
+        ])]),
+    )]);
+    let r = c.post_json("/v2/models/mlp/infer", &bad).unwrap();
+    assert_eq!(r.status, 422);
+    assert_eq!(
+        v2_error_string(&r),
+        "bad_input.dtype: tensor 'input': BYTES input is not supported \
+         (model takes a numeric tensor)"
+    );
+}
+
+#[test]
+fn v2_infer_parameters_outputs_and_id() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.read().unwrap();
+    let mut c = client();
+    let data = make_tensor(2, 77);
+    let body = json::obj([
+        ("id", Value::from("req-42")),
+        (
+            "inputs",
+            Value::Arr(vec![json::obj([
+                ("name", Value::from("input")),
+                ("datatype", Value::from("FP32")),
+                (
+                    "shape",
+                    Value::Arr(vec![
+                        Value::from(2usize),
+                        Value::from(workload::IMG),
+                        Value::from(workload::IMG),
+                        Value::from(1usize),
+                    ]),
+                ),
+                ("data", json::f32_array_raw(data.iter().copied())),
+            ])]),
+        ),
+        (
+            "parameters",
+            json::obj([
+                ("detail", Value::Bool(true)),
+                ("policy", Value::from("any")),
+                ("target", Value::from("cross")),
+            ]),
+        ),
+    ]);
+    let r = c.post_json("/v2/models/_ensemble/infer", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("id").unwrap().as_str(), Some("req-42"));
+    // detail → per-stage timings in the response parameters.
+    assert!(v.path(&["parameters", "exec_us"]).is_some());
+    let outs = v.get("outputs").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = outs
+        .iter()
+        .map(|o| o.get("name").unwrap().as_str().unwrap())
+        .collect();
+    // detail adds per-model probs; policy+target adds BOOL detections.
+    assert!(names.contains(&"mlp.probs"), "{names:?}");
+    let det = outs
+        .iter()
+        .find(|o| o.get("name").unwrap().as_str() == Some("detections"))
+        .expect("detections output present");
+    assert_eq!(det.get("datatype").unwrap().as_str(), Some("BOOL"));
+    assert_eq!(det.get("data").unwrap().as_arr().unwrap().len(), 2);
+
+    // Output selection: only the requested tensor comes back.
+    let mut sel = match body {
+        Value::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    sel.push((
+        "outputs".to_string(),
+        Value::Arr(vec![json::obj([("name", Value::from("mlp.classes"))])]),
+    ));
+    let v = c
+        .post_json("/v2/models/_ensemble/infer", &Value::Obj(sel))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let outs = v.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].get("name").unwrap().as_str(), Some("mlp.classes"));
+
+    // Unknown requested output is a typed 422.
+    let data2 = make_tensor(1, 5);
+    let mut bad = match v2_infer_body(&[1, workload::IMG, workload::IMG, 1], &data2) {
+        Value::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    bad.push((
+        "outputs".to_string(),
+        Value::Arr(vec![json::obj([("name", Value::from("nope"))])]),
+    ));
+    let r = c
+        .post_json("/v2/models/_ensemble/infer", &Value::Obj(bad))
+        .unwrap();
+    assert_eq!(r.status, 422);
+    assert_eq!(v2_error_string(&r), "bad_input.bad_value: unknown output 'nope'");
+}
+
+#[test]
+fn v2_infer_errors_are_protocol_shaped() {
+    require_artifacts!();
+    let _g = MEMBERSHIP.read().unwrap();
+    let mut c = client();
+    let data = make_tensor(1, 9);
+
+    // Unknown model → 404; same status taxonomy as /v1, OIP error shape.
+    let r = c.post_json(
+        "/v2/models/resnet152/infer",
+        &v2_infer_body(&[1, workload::IMG, workload::IMG, 1], &data),
+    );
+    let r = r.unwrap();
+    assert_eq!(r.status, 404);
+    assert!(v2_error_string(&r).starts_with("model.unknown: "));
+
+    // Malformed JSON → 400.
+    let r = c.post("/v2/models/mlp/infer", b"not json".to_vec()).unwrap();
+    assert_eq!(r.status, 400);
+    assert!(v2_error_string(&r).starts_with("bad_input.malformed_json: "));
+
+    // Shape mismatch → 422 with the stable string.
+    let r = c
+        .post_json("/v2/models/mlp/infer", &v2_infer_body(&[1, 3, 3], &data))
+        .unwrap();
+    assert_eq!(r.status, 422);
+    assert!(v2_error_string(&r).starts_with("bad_input.shape_mismatch: "));
+
+    // Method mismatch on a /v2 route → 405 with an Allow header.
+    let r = c.get("/v2/models/mlp/infer").unwrap();
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("POST"));
+    // And on /v1 (multi-method path): PUT+GET /v1/ensemble.
+    let r = c
+        .request(&Request::new("DELETE", "/v1/ensemble", Vec::new()))
+        .unwrap();
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("GET, PUT"));
+}
+
+#[test]
+fn v2_requests_feed_the_shared_metrics_and_prometheus_exposition() {
+    require_artifacts!();
+    // Write side: the rows_total before/after window must not race other
+    // tests' data-plane traffic.
+    let _g = MEMBERSHIP.write().unwrap();
+    let mut c = client();
+    let data = make_tensor(1, 31);
+    let before = stack().state.metrics.counter("rows_total");
+    let _ = c
+        .v2_infer("mlp", &[1, workload::IMG, workload::IMG, 1], &data)
+        .unwrap();
+    assert_eq!(stack().state.metrics.counter("rows_total"), before + 1);
+
+    // The Prometheus exposition serves scrapers (explicit format or
+    // Accept negotiation) while the default text stays byte-stable.
+    let r = c.get("/v1/metrics?format=prometheus").unwrap();
+    assert_eq!(r.status, 200);
+    assert!(r.header("content-type").unwrap().contains("version=0.0.4"));
+    let text = String::from_utf8(r.body).unwrap();
+    assert!(text.contains("# TYPE flexserve_requests_total counter"), "{text}");
+    assert!(text.contains("quantile=\"0.99\""), "{text}");
+    assert!(text.contains("flexserve_route_v2_models__name_infer_us_count"), "{text}");
+
+    let mut req = Request::new("GET", "/v1/metrics", Vec::new());
+    req.headers
+        .push(("accept".into(), "text/plain;version=0.0.4".into()));
+    let r = c.request(&req).unwrap();
+    assert!(String::from_utf8(r.body).unwrap().contains("# TYPE"), "Accept negotiation");
+
+    // Legacy default exposition unchanged (no comment lines).
+    let r = c.get("/v1/metrics").unwrap();
+    let text = String::from_utf8(r.body).unwrap();
+    assert!(!text.contains("# TYPE"), "default stays the legacy text");
+    assert!(text.contains("flexserve_requests_total"));
+}

@@ -1,0 +1,206 @@
+//! Device-free differential tests for the `/v2` Open-Inference-Protocol
+//! codec: a valid v2 infer body and the equivalent `/v1` predict body must
+//! lower to the SAME protocol-agnostic IR tensor (so the core serves
+//! identical predictions for identical inputs), and every malformed
+//! dtype/shape/data-length case must reject with a stable, typed error.
+//! The full-stack counterpart (real device, real outputs) lives in
+//! `v2_integration.rs`.
+
+use flexserve::coordinator::v2::{self, parse_infer};
+use flexserve::coordinator::wire::PredictRequest;
+use flexserve::http::Request;
+use flexserve::json::{self, ser};
+use flexserve::runtime::{DType, Manifest};
+use flexserve::util::prop::check;
+use std::path::PathBuf;
+
+/// The same tiny manifest the wire-layer tests use (2x2x1 input, 4 floats
+/// per sample) so shape validation runs without artifacts.
+fn manifest() -> Manifest {
+    let v = json::parse(
+        r#"{
+          "format_version": 1,
+          "input_shape": [2, 2, 1],
+          "classes": ["blank", "cross"],
+          "normalize": {"mean": 0.0, "std": 1.0},
+          "buckets": [1, 4],
+          "models": {
+            "m1": {
+              "param_count": 1, "test_acc": 0.9, "params_sha256": "ab",
+              "buckets": {"1": {"file": "f", "sha256": "x", "bytes": 1}}
+            }
+          }
+        }"#,
+    )
+    .unwrap();
+    Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap()
+}
+
+fn v1_request(body: String) -> Request {
+    Request::new("POST", "/v1/predict", body.into_bytes())
+}
+
+fn v2_request(body: String) -> Request {
+    Request::new("POST", "/v2/models/_ensemble/infer", body.into_bytes())
+}
+
+/// Render the v2 body for one tensor, optionally with nested data.
+fn v2_body(datatype: &str, shape: &[usize], data: &[f32], nested: bool) -> String {
+    let mut out = String::from(r#"{"inputs":[{"name":"input","datatype":""#);
+    out.push_str(datatype);
+    out.push_str(r#"","shape":"#);
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    out.push_str(&format!("[{}]", dims.join(",")));
+    out.push_str(r#","data":"#);
+    if nested {
+        // One nested array per row: [[row0...],[row1...]].
+        let elems = data.len() / shape[0];
+        out.push('[');
+        for (i, row) in data.chunks(elems).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            ser::write_f32_array(&mut out, row.iter().copied());
+        }
+        out.push(']');
+    } else {
+        ser::write_f32_array(&mut out, data.iter().copied());
+    }
+    out.push_str("}]}");
+    out
+}
+
+#[test]
+fn prop_v2_and_v1_bodies_lower_to_the_same_tensor() {
+    let m = manifest();
+    let elems = m.sample_elems();
+    check("v2 infer body ≡ v1 predict body in the IR", 300, |g| {
+        let batch = g.int(1, 5);
+        // Integral values so FP32/INT64/UINT8 spellings describe the same
+        // tensor (UINT8 additionally needs the 0..=255 range).
+        let data: Vec<f32> = (0..batch * elems).map(|_| g.int(0, 255) as f32).collect();
+        let dtype = *g.choose(&["FP32", "INT64", "UINT8"]);
+        let nested = g.bool(0.4);
+        // v2 accepts the full shape or the flattened [N, elems] spelling.
+        let full_shape = [batch, 2, 2, 1];
+        let flat_shape = [batch, elems];
+        let shape: &[usize] = if g.bool(0.5) { &full_shape } else { &flat_shape };
+
+        let (ir, _) = parse_infer(&m, &v2_request(v2_body(dtype, shape, &data, nested)), true)
+            .unwrap_or_else(|e| panic!("valid v2 body rejected ({e}): dtype={dtype}"));
+
+        let mut v1 = String::from(r#"{"data":"#);
+        ser::write_f32_array(&mut v1, data.iter().copied());
+        v1.push_str(&format!(r#","batch":{batch}}}"#));
+        let parsed = PredictRequest::parse(&m, &v1_request(v1)).unwrap();
+        let v1_ir = parsed.into_inference(&m);
+
+        assert_eq!(ir.batch, v1_ir.batch);
+        assert_eq!(ir.inputs[0].data, v1_ir.inputs[0].data, "dtype={dtype}");
+        assert_eq!(ir.inputs[0].dtype, DType::from_v2(dtype).unwrap());
+        // Both spell a [batch, ...] shape whose product covers the data.
+        assert_eq!(ir.inputs[0].shape[0], batch);
+        assert_eq!(
+            ir.inputs[0].shape.iter().product::<usize>(),
+            batch * elems
+        );
+    });
+}
+
+#[test]
+fn prop_malformed_v2_bodies_reject_with_typed_errors() {
+    let m = manifest();
+    check("malformed v2 bodies reject, never panic", 300, |g| {
+        let batch = g.int(1, 4);
+        let elems = m.sample_elems();
+        let good: Vec<f32> = (0..batch * elems).map(|_| g.int(0, 9) as f32).collect();
+        let (body, want_code) = match g.int(0, 5) {
+            // Wrong per-sample dims.
+            0 => (
+                v2_body("FP32", &[batch, 3, 3], &good, false),
+                "bad_input.shape_mismatch",
+            ),
+            // Data length disagrees with the shape.
+            1 => (
+                v2_body("FP32", &[batch + 1, elems], &good, false),
+                "bad_input.shape_mismatch",
+            ),
+            // Unsupported datatype.
+            2 => (
+                v2_body("FP64", &[batch, elems], &good, false),
+                "bad_input.dtype",
+            ),
+            // BYTES is rejected for numeric models.
+            3 => (
+                v2_body("BYTES", &[batch, elems], &good, false),
+                "bad_input.dtype",
+            ),
+            // Zero batch dimension.
+            4 => (v2_body("FP32", &[0, elems], &[], false), "bad_input.bad_value"),
+            // Non-integer data under an integer dtype.
+            _ => {
+                let mut data = good.clone();
+                data[0] = 0.5;
+                (
+                    v2_body("INT64", &[batch, elems], &data, false),
+                    "bad_input.bad_value",
+                )
+            }
+        };
+        let err = parse_infer(&m, &v2_request(body.clone()), true)
+            .err()
+            .unwrap_or_else(|| panic!("malformed body accepted: {body}"));
+        assert_eq!(err.code, want_code, "{body}");
+        assert_eq!(err.status, 422, "{body}");
+        // The rendered protocol error is the stable `code: message` string.
+        let resp = v2::v2_error(&err);
+        let rendered = resp.json_body().unwrap();
+        let s = rendered.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(s.starts_with(&format!("{}: ", want_code)), "{s}");
+    });
+}
+
+#[test]
+fn v2_error_strings_are_stable_across_equivalent_requests() {
+    // The same malformed request must produce byte-identical error strings
+    // on repeat — clients can match on them.
+    let m = manifest();
+    let body = v2_body("FP64", &[1, 4], &[1.0, 2.0, 3.0, 4.0], false);
+    let first = parse_infer(&m, &v2_request(body.clone()), true).unwrap_err();
+    for _ in 0..3 {
+        let again = parse_infer(&m, &v2_request(body.clone()), true).unwrap_err();
+        assert_eq!(
+            (again.status, again.code, again.message.clone()),
+            (first.status, first.code, first.message.clone())
+        );
+    }
+}
+
+#[test]
+fn v2_client_body_builder_parses_back() {
+    // The typed client's body builder emits exactly what the codec accepts.
+    let m = manifest();
+    let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+    let body = flexserve::http::client::v2_infer_body(&[2, 2, 2, 1], &data);
+    let req = v2_request(json::to_string(&body));
+    let (ir, _) = parse_infer(&m, &req, true).unwrap();
+    assert_eq!(ir.batch, 2);
+    assert_eq!(ir.inputs[0].data, data);
+    assert_eq!(ir.inputs[0].dtype, DType::F32);
+}
+
+#[test]
+fn v2_output_filter_and_params_survive_lowering() {
+    let m = manifest();
+    let body = r#"{"id":"abc",
+        "inputs":[{"name":"input","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}],
+        "parameters":{"detail":true,"normalized":true},
+        "outputs":[{"name":"m1.classes"},{"name":"m1.probs"}]}"#;
+    let (ir, opts) = parse_infer(&m, &v2_request(body.to_string()), true).unwrap();
+    assert!(ir.params.detail && ir.params.normalized);
+    assert_eq!(opts.id.as_deref(), Some("abc"));
+    assert_eq!(
+        opts.outputs,
+        Some(vec!["m1.classes".to_string(), "m1.probs".to_string()])
+    );
+}
