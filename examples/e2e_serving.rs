@@ -1,5 +1,5 @@
 //! E1 (Fig. 1) — the end-to-end validation driver: boot the full FlexServe
-//! stack (3-model ensemble, shared device, dynamic batcher, REST API), put
+//! stack (3-model ensemble, shared device, scheduler, REST API), put
 //! it under an open-loop Poisson load of mixed batch sizes from concurrent
 //! HTTP clients, and report latency/throughput. The numbers are recorded in
 //! EXPERIMENTS.md.
@@ -28,9 +28,9 @@ fn main() -> anyhow::Result<()> {
     config.http_workers = 8;
     let (handle, state) = serve(&config)?;
     println!(
-        "e2e: {} models on shared device, batcher {:?}, target load {rate} req/s x {secs}s",
+        "e2e: {} models on shared device, scheduler window {:?}, target load {rate} req/s x {secs}s",
         state.ensemble.models().len(),
-        config.batcher.map(|b| b.max_delay),
+        config.scheduler.map(|s| s.max_delay),
     );
 
     // Open-loop Poisson schedule with the paper's mixed batch sizes

@@ -13,7 +13,7 @@ use flexserve::util::Prng;
 use flexserve::workload;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Start the server: 3-model ensemble, shared device, batcher on.
+    // 1. Start the server: 3-model ensemble, shared device, scheduler on.
     let mut config = ServeConfig::default();
     config.addr = "127.0.0.1:0".into(); // ephemeral port
     let (handle, state) = serve(&config)?;

@@ -1,14 +1,16 @@
-//! E8 (ablation) — dynamic-batcher window sweep: the latency/throughput
+//! E8 (ablation) — scheduler window sweep: the latency/throughput
 //! frontier of the FlexServe-RS extension over the paper's pass-through
 //! behaviour.
 //!
 //! 16 closed-loop client threads each send single-frame requests through
-//! the batcher with max_delay ∈ {0, 1, 2, 5, 10} ms. Larger windows
-//! coalesce more rows per device batch (higher device efficiency, higher
-//! queueing latency). max_delay = 0 is the paper's original behaviour.
+//! the scheduler (fixed window, so the sweep measures the knob rather
+//! than the adaptive controller) with max_delay ∈ {0, 1, 2, 5, 10} ms.
+//! Larger windows coalesce more rows per device batch (higher device
+//! efficiency, higher queueing latency). max_delay = 0 is the paper's
+//! original behaviour.
 
 use flexserve::benchkit::{self, artifact_dir};
-use flexserve::coordinator::{Batcher, BatcherConfig, Ensemble};
+use flexserve::coordinator::{Ensemble, Metrics, SchedConfig, Scheduler, TargetKey};
 use flexserve::runtime::executor::ExecutorOptions;
 use flexserve::runtime::{ExecutorPool, Manifest};
 use flexserve::util::hist::fmt_micros;
@@ -35,12 +37,15 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for delay_ms in [0u64, 1, 2, 5, 10] {
-        let batcher = Arc::new(Batcher::spawn(
+        let batcher = Arc::new(Scheduler::spawn(
             ensemble.clone(),
-            BatcherConfig {
+            SchedConfig {
                 max_batch: 32,
                 max_delay: Duration::from_millis(delay_ms),
+                adaptive: false,
+                ..Default::default()
             },
+            Arc::new(Metrics::new()),
         )?);
 
         let hist = Arc::new(Mutex::new(Histogram::new()));
@@ -59,7 +64,8 @@ fn main() -> anyhow::Result<()> {
                     for _ in 0..REQS_PER_THREAD {
                         let (data, _) = workload::make_batch(&mut rng, 1);
                         let sw = Stopwatch::start();
-                        let (_, stats) = batcher.submit(data, 1).unwrap();
+                        let (_, stats) =
+                            batcher.submit(TargetKey::Ensemble, data, 1, None).unwrap();
                         local.record(sw.elapsed_micros());
                         coalesced.fetch_add(stats.coalesced_rows as u64, Ordering::Relaxed);
                         n_batches.fetch_add(1, Ordering::Relaxed);
@@ -89,7 +95,7 @@ fn main() -> anyhow::Result<()> {
     print!(
         "{}",
         benchkit::table(
-            "E8: dynamic-batcher window ablation — 16 closed-loop single-frame clients",
+            "E8: scheduler window ablation — 16 closed-loop single-frame clients",
             &["max_delay", "avg rows/batch", "p50", "p95", "p99", "req/s"],
             &rows,
         )

@@ -22,6 +22,7 @@ use crate::json::{self, ser, Value};
 use crate::util::{Histogram, Prng, Stopwatch};
 use crate::workload;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::net::SocketAddr;
 use std::sync::Barrier;
 
@@ -114,6 +115,14 @@ pub struct LoadReport {
     pub rows: u64,
     /// Responses with a non-200 status.
     pub errors: u64,
+    /// Non-2xx responses bucketed by status code (429/504/... under
+    /// overload) — an overloaded server inflates `throughput_rps` with
+    /// cheap sheds, so the report separates successful work out.
+    pub status_counts: BTreeMap<u16, u64>,
+    /// Machine-readable error codes of non-2xx responses (the `/v1`
+    /// `error.code` member or the `/v2` `"code: message"` prefix), e.g.
+    /// `server.overloaded` / `server.deadline_exceeded`.
+    pub error_codes: BTreeMap<String, u64>,
     pub elapsed_secs: f64,
     pub hist: Histogram,
     pub reconnects: u64,
@@ -127,17 +136,47 @@ impl LoadReport {
     pub fn throughput_rows(&self) -> f64 {
         self.rows as f64 / self.elapsed_secs.max(1e-9)
     }
+
+    /// Requests that actually succeeded (2xx).
+    pub fn ok_requests(&self) -> u64 {
+        self.requests - self.errors
+    }
+
+    /// Successful-request throughput — the honest number under overload.
+    pub fn throughput_ok_rps(&self) -> f64 {
+        self.ok_requests() as f64 / self.elapsed_secs.max(1e-9)
+    }
 }
 
 struct ConnStats {
     requests: u64,
     rows: u64,
     errors: u64,
+    status_counts: BTreeMap<u16, u64>,
+    error_codes: BTreeMap<String, u64>,
     hist: Histogram,
     reconnects: u64,
     /// Wall-clock of this connection's measured loop (excludes connect
     /// and warmup).
     measured_secs: f64,
+}
+
+/// Extract the stable machine-readable code from an error response body:
+/// `/v1` envelopes carry `{"error": {"code": ...}}`, `/v2` (OIP) carries
+/// `{"error": "code: message"}`. `None` when the body is neither (echo
+/// targets, proxies).
+pub fn error_code_of(resp: &Response) -> Option<String> {
+    let v = resp.json_body().ok()?;
+    match v.get("error")? {
+        Value::Str(s) => Some(s.split(':').next().unwrap_or("").trim().to_string()),
+        obj => {
+            let code = obj.get("code")?;
+            code.as_str()
+                .map(str::to_string)
+                // Transport-level envelopes echo the numeric status.
+                .or_else(|| code.as_u64().map(|c| c.to_string()))
+        }
+    }
 }
 
 /// Render one protocol-correct predict body via the streaming float
@@ -227,6 +266,8 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
         requests: 0,
         rows: 0,
         errors: 0,
+        status_counts: BTreeMap::new(),
+        error_codes: BTreeMap::new(),
         hist: Histogram::new(),
         reconnects: 0,
         measured_secs: 0.0,
@@ -252,6 +293,10 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
         stats.rows += batch as u64;
         if resp.status != 200 {
             stats.errors += 1;
+            *stats.status_counts.entry(resp.status).or_insert(0) += 1;
+            if let Some(code) = error_code_of(&resp) {
+                *stats.error_codes.entry(code).or_insert(0) += 1;
+            }
         }
         n += 1;
     }
@@ -285,6 +330,8 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         requests: 0,
         rows: 0,
         errors: 0,
+        status_counts: BTreeMap::new(),
+        error_codes: BTreeMap::new(),
         elapsed_secs: 0.0,
         hist: Histogram::new(),
         reconnects: 0,
@@ -294,6 +341,12 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         report.requests += st.requests;
         report.rows += st.rows;
         report.errors += st.errors;
+        for (status, n) in st.status_counts {
+            *report.status_counts.entry(status).or_insert(0) += n;
+        }
+        for (code, n) in st.error_codes {
+            *report.error_codes.entry(code).or_insert(0) += n;
+        }
         report.reconnects += st.reconnects;
         report.hist.merge(&st.hist);
         report.elapsed_secs = report.elapsed_secs.max(st.measured_secs);
@@ -369,11 +422,36 @@ pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<
             ]),
         ),
         ("requests", Value::from(report.requests)),
+        ("ok_requests", Value::from(report.ok_requests())),
         ("rows", Value::from(report.rows)),
         ("errors", Value::from(report.errors)),
+        // Non-2xx responses by status and by taxonomy code, so an
+        // overloaded run's cheap 429/504 sheds are visible instead of
+        // masquerading as throughput.
+        (
+            "status_counts",
+            Value::Obj(
+                report
+                    .status_counts
+                    .iter()
+                    .map(|(s, n)| (s.to_string(), Value::from(*n)))
+                    .collect(),
+            ),
+        ),
+        (
+            "error_codes",
+            Value::Obj(
+                report
+                    .error_codes
+                    .iter()
+                    .map(|(c, n)| (c.clone(), Value::from(*n)))
+                    .collect(),
+            ),
+        ),
         ("reconnects", Value::from(report.reconnects)),
         ("elapsed_secs", Value::from(report.elapsed_secs)),
         ("throughput_rps", Value::from(report.throughput_rps())),
+        ("throughput_ok_rps", Value::from(report.throughput_ok_rps())),
         ("throughput_rows_per_s", Value::from(report.throughput_rows())),
         (
             "latency_us",
@@ -399,20 +477,31 @@ pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<
 /// One-line human summary for the terminal.
 pub fn summary(report: &LoadReport) -> String {
     use crate::util::hist::fmt_micros;
-    format!(
-        "{} reqs ({} rows) in {:.2}s — {:.1} req/s, {:.1} rows/s, \
+    let mut line = format!(
+        "{} reqs ({} ok, {} rows) in {:.2}s — {:.1} req/s ({:.1} ok/s), {:.1} rows/s, \
          p50={} p95={} p99={}, {} errors, {} reconnects",
         report.requests,
+        report.ok_requests(),
         report.rows,
         report.elapsed_secs,
         report.throughput_rps(),
+        report.throughput_ok_rps(),
         report.throughput_rows(),
         fmt_micros(report.hist.p50()),
         fmt_micros(report.hist.p95()),
         fmt_micros(report.hist.p99()),
         report.errors,
         report.reconnects,
-    )
+    );
+    if !report.error_codes.is_empty() {
+        let codes: Vec<String> = report
+            .error_codes
+            .iter()
+            .map(|(c, n)| format!("{c}x{n}"))
+            .collect();
+        line.push_str(&format!(" [{}]", codes.join(", ")));
+    }
+    line
 }
 
 #[cfg(test)]
@@ -554,6 +643,63 @@ mod tests {
         let report = run(&cfg).unwrap();
         assert_eq!(report.requests, 3);
         assert_eq!(report.errors, 3);
+        assert_eq!(report.ok_requests(), 0);
+        assert_eq!(report.status_counts.get(&503), Some(&3));
+        server.stop();
+    }
+
+    #[test]
+    fn shed_codes_recorded_per_status_and_taxonomy() {
+        // Alternating typed 429 (v1 envelope) / 504 (v2 OIP envelope)
+        // responses — the report must bucket both spellings by code.
+        let flip = Arc::new(AtomicU64::new(0));
+        let f2 = Arc::clone(&flip);
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            1,
+            Arc::new(move |_req: &crate::http::Request| {
+                if f2.fetch_add(1, Ordering::Relaxed) % 2 == 0 {
+                    Response::coded_error(429, "server.overloaded", "queue is full")
+                } else {
+                    Response::json(
+                        504,
+                        &json::obj([(
+                            "error",
+                            Value::from("server.deadline_exceeded: expired in queue"),
+                        )]),
+                    )
+                }
+            }),
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 1,
+            iters: Some(4),
+            warmup: 0,
+            batch_mix: vec![(1, 1.0)],
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.errors, 4);
+        assert_eq!(report.status_counts.get(&429), Some(&2));
+        assert_eq!(report.status_counts.get(&504), Some(&2));
+        assert_eq!(report.error_codes.get("server.overloaded"), Some(&2));
+        assert_eq!(report.error_codes.get("server.deadline_exceeded"), Some(&2));
+        assert_eq!(report.throughput_ok_rps(), 0.0);
+
+        let doc = report_json(&cfg, &report, None);
+        assert_eq!(
+            doc.path(&["status_counts", "429"]).unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(
+            doc.path(&["error_codes", "server.overloaded"]).unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(doc.path(&["ok_requests"]).unwrap().as_u64(), Some(0));
+        let text = summary(&report);
+        assert!(text.contains("server.overloaded"), "{text}");
         server.stop();
     }
 }

@@ -1,7 +1,7 @@
 //! Server configuration: JSON config file + CLI-style overrides (clap is
 //! unavailable offline; the flag parser lives here and serves `main.rs`).
 
-use crate::coordinator::BatcherConfig;
+use crate::coordinator::SchedConfig;
 use crate::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
@@ -24,8 +24,10 @@ pub struct ServeConfig {
     pub warmup: bool,
     /// Restrict the served model set (None = all models in the manifest).
     pub models: Option<Vec<String>>,
-    /// Dynamic batcher (None = pass-through, the paper's base behaviour).
-    pub batcher: Option<BatcherConfig>,
+    /// The scheduling plane: per-target flexible batching, adaptive
+    /// windows, admission control, deadlines (None = pass-through, the
+    /// paper's base behaviour).
+    pub scheduler: Option<SchedConfig>,
     /// Emit one access-log line per request on stderr (router middleware).
     pub access_log: bool,
 }
@@ -40,7 +42,7 @@ impl Default for ServeConfig {
             verify_sha: true,
             warmup: true,
             models: None,
-            batcher: Some(BatcherConfig::default()),
+            scheduler: Some(SchedConfig::default()),
             access_log: false,
         }
     }
@@ -86,26 +88,44 @@ impl ServeConfig {
                     .collect::<Result<Vec<_>>>()?;
                 self.models = if names.is_empty() { None } else { Some(names) };
             }
-            "batcher" => match val {
-                Value::Null | Value::Bool(false) => self.batcher = None,
-                Value::Bool(true) => self.batcher = Some(BatcherConfig::default()),
+            // "batcher" is the legacy spelling of the scheduler block (it
+            // only ever carried the batching knobs).
+            "scheduler" | "batcher" => match val {
+                Value::Null | Value::Bool(false) => self.scheduler = None,
+                Value::Bool(true) => self.scheduler = Some(SchedConfig::default()),
                 Value::Obj(_) => {
-                    let mut cfg = self.batcher.unwrap_or_default();
+                    let mut cfg = self.scheduler.unwrap_or_default();
                     if let Some(mb) = val.get("max_batch") {
                         cfg.max_batch = mb
                             .as_usize()
-                            .ok_or_else(|| anyhow!("batcher.max_batch must be an integer"))?
+                            .ok_or_else(|| anyhow!("{key}.max_batch must be an integer"))?
                             .max(1);
                     }
                     if let Some(d) = val.get("max_delay_us") {
                         cfg.max_delay = Duration::from_micros(
                             d.as_u64()
-                                .ok_or_else(|| anyhow!("batcher.max_delay_us must be an integer"))?,
+                                .ok_or_else(|| anyhow!("{key}.max_delay_us must be an integer"))?,
                         );
                     }
-                    self.batcher = Some(cfg);
+                    if let Some(c) = val.get("queue_cap") {
+                        cfg.queue_cap = c
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("{key}.queue_cap must be an integer (0 = unbounded)"))?;
+                    }
+                    if let Some(d) = val.get("deadline_ms") {
+                        let ms = d
+                            .as_u64()
+                            .ok_or_else(|| anyhow!("{key}.deadline_ms must be an integer (0 = none)"))?;
+                        cfg.deadline = (ms > 0).then(|| Duration::from_millis(ms));
+                    }
+                    if let Some(a) = val.get("adaptive") {
+                        cfg.adaptive = a
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("{key}.adaptive must be a bool"))?;
+                    }
+                    self.scheduler = Some(cfg);
                 }
-                _ => bail!("'batcher' must be bool, null, or object"),
+                _ => bail!("'{key}' must be bool, null, or object"),
             },
             other => bail!("unknown config key '{other}'"),
         }
@@ -115,8 +135,9 @@ impl ServeConfig {
     /// Apply `--key value` / `--key=value` CLI overrides. Recognized keys
     /// mirror the JSON config (`--addr`, `--http-workers`,
     /// `--device-workers`, `--artifacts`, `--models a,b`, `--no-batcher`,
-    /// `--batch-delay-us N`, `--max-batch N`, `--no-verify`, `--no-warmup`,
-    /// `--access-log`).
+    /// `--batch-delay-us N`, `--max-batch N`, `--queue-cap N`,
+    /// `--deadline-ms N`, `--adaptive-window on|off`, `--no-verify`,
+    /// `--no-warmup`, `--access-log`).
     pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
         let mut it = args.iter().peekable();
         while let Some(arg) = it.next() {
@@ -143,14 +164,27 @@ impl ServeConfig {
                             .collect(),
                     )
                 }
-                "--no-batcher" => self.batcher = None,
+                "--no-batcher" | "--no-scheduler" => self.scheduler = None,
                 "--max-batch" => {
                     let v = take()?.parse::<usize>()?.max(1);
-                    self.batcher.get_or_insert_with(Default::default).max_batch = v;
+                    self.scheduler.get_or_insert_with(Default::default).max_batch = v;
                 }
                 "--batch-delay-us" => {
                     let v = Duration::from_micros(take()?.parse()?);
-                    self.batcher.get_or_insert_with(Default::default).max_delay = v;
+                    self.scheduler.get_or_insert_with(Default::default).max_delay = v;
+                }
+                "--queue-cap" => {
+                    let v = take()?.parse::<usize>()?;
+                    self.scheduler.get_or_insert_with(Default::default).queue_cap = v;
+                }
+                "--deadline-ms" => {
+                    let ms = take()?.parse::<u64>()?;
+                    self.scheduler.get_or_insert_with(Default::default).deadline =
+                        (ms > 0).then(|| Duration::from_millis(ms));
+                }
+                "--adaptive-window" => {
+                    let v = parse_bool_flag("--adaptive-window", &take()?)?;
+                    self.scheduler.get_or_insert_with(Default::default).adaptive = v;
                 }
                 "--no-verify" => self.verify_sha = false,
                 "--no-warmup" => self.warmup = false,
@@ -165,6 +199,14 @@ impl ServeConfig {
             }
         }
         Ok(())
+    }
+}
+
+fn parse_bool_flag(flag: &str, v: &str) -> Result<bool> {
+    match v {
+        "1" | "true" | "on" => Ok(true),
+        "0" | "false" | "off" => Ok(false),
+        other => bail!("{flag} expects on|off (got '{other}')"),
     }
 }
 
@@ -189,7 +231,10 @@ mod tests {
     fn defaults() {
         let c = ServeConfig::default();
         assert_eq!(c.device_workers, 1);
-        assert!(c.batcher.is_some());
+        let s = c.scheduler.unwrap();
+        assert_eq!(s.queue_cap, 0, "default admission is unbounded");
+        assert!(s.deadline.is_none(), "no default deadline");
+        assert!(s.adaptive, "adaptive window is the default");
         assert!(c.verify_sha);
     }
 
@@ -199,7 +244,9 @@ mod tests {
         c.apply_json(
             &json::parse(
                 r#"{"addr":"0.0.0.0:9000","http_workers":4,
-                    "models":["cnn_s"],"batcher":{"max_batch":16,"max_delay_us":500},
+                    "models":["cnn_s"],
+                    "scheduler":{"max_batch":16,"max_delay_us":500,
+                                 "queue_cap":64,"deadline_ms":250,"adaptive":false},
                     "verify_sha":false}"#,
             )
             .unwrap(),
@@ -208,19 +255,39 @@ mod tests {
         assert_eq!(c.addr, "0.0.0.0:9000");
         assert_eq!(c.http_workers, 4);
         assert_eq!(c.models, Some(vec!["cnn_s".to_string()]));
-        let b = c.batcher.unwrap();
-        assert_eq!(b.max_batch, 16);
-        assert_eq!(b.max_delay, Duration::from_micros(500));
+        let s = c.scheduler.unwrap();
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.max_delay, Duration::from_micros(500));
+        assert_eq!(s.queue_cap, 64);
+        assert_eq!(s.deadline, Some(Duration::from_millis(250)));
+        assert!(!s.adaptive);
         assert!(!c.verify_sha);
     }
 
     #[test]
-    fn batcher_disable() {
+    fn legacy_batcher_key_still_parses() {
         let mut c = ServeConfig::default();
+        c.apply_json(
+            &json::parse(r#"{"batcher":{"max_batch":16,"max_delay_us":500}}"#).unwrap(),
+        )
+        .unwrap();
+        let s = c.scheduler.unwrap();
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.max_delay, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn scheduler_disable() {
+        let mut c = ServeConfig::default();
+        c.apply_json(&json::parse(r#"{"scheduler":false}"#).unwrap()).unwrap();
+        assert!(c.scheduler.is_none());
         c.apply_json(&json::parse(r#"{"batcher":false}"#).unwrap()).unwrap();
-        assert!(c.batcher.is_none());
-        c.apply_json(&json::parse(r#"{"batcher":true}"#).unwrap()).unwrap();
-        assert!(c.batcher.is_some());
+        assert!(c.scheduler.is_none());
+        c.apply_json(&json::parse(r#"{"scheduler":true}"#).unwrap()).unwrap();
+        assert!(c.scheduler.is_some());
+        // deadline_ms 0 = no deadline.
+        c.apply_json(&json::parse(r#"{"scheduler":{"deadline_ms":0}}"#).unwrap()).unwrap();
+        assert!(c.scheduler.unwrap().deadline.is_none());
     }
 
     #[test]
@@ -239,6 +306,10 @@ mod tests {
             "--models",
             "cnn_s,mlp",
             "--batch-delay-us=1000",
+            "--queue-cap=8",
+            "--deadline-ms",
+            "500",
+            "--adaptive-window=off",
             "--no-verify",
         ]
         .iter()
@@ -251,11 +322,15 @@ mod tests {
             c.models,
             Some(vec!["cnn_s".to_string(), "mlp".to_string()])
         );
-        assert_eq!(
-            c.batcher.unwrap().max_delay,
-            Duration::from_micros(1000)
-        );
+        let s = c.scheduler.unwrap();
+        assert_eq!(s.max_delay, Duration::from_micros(1000));
+        assert_eq!(s.queue_cap, 8);
+        assert_eq!(s.deadline, Some(Duration::from_millis(500)));
+        assert!(!s.adaptive);
         assert!(!c.verify_sha);
+        assert!(ServeConfig::default()
+            .apply_cli(&["--adaptive-window=maybe".to_string()])
+            .is_err());
     }
 
     #[test]
@@ -265,14 +340,17 @@ mod tests {
         let c = ServeConfig::from_file(path.to_str().unwrap()).unwrap();
         assert_eq!(c.addr, "0.0.0.0:8080");
         assert_eq!(c.models.as_ref().unwrap().len(), 3);
-        assert_eq!(c.batcher.unwrap().max_delay, Duration::from_micros(2000));
+        let s = c.scheduler.unwrap();
+        assert_eq!(s.max_delay, Duration::from_micros(2000));
+        assert_eq!(s.queue_cap, 1024);
+        assert!(s.adaptive);
     }
 
     #[test]
     fn cli_no_batcher_and_bad_flag() {
         let mut c = ServeConfig::default();
         c.apply_cli(&["--no-batcher".to_string()]).unwrap();
-        assert!(c.batcher.is_none());
+        assert!(c.scheduler.is_none());
         assert!(c.apply_cli(&["--bogus".to_string()]).is_err());
         assert!(c.apply_cli(&["--addr".to_string()]).is_err());
     }

@@ -5,7 +5,8 @@
 //! * `POST /v1/predict` — ensemble predict, paper §2.3 wire format
 //!   (`"model_<name>": ["class", ...]` per active model);
 //! * `POST /v1/models/:name/predict` — single-model fast path (skips the
-//!   ensemble fan-out and the shared batcher).
+//!   ensemble fan-out; coalesces with same-model traffic in its own
+//!   scheduler queue).
 //!
 //! Control plane (runtime model lifecycle — no restarts):
 //! * `POST /v1/models/:name/load` — compile + admit a model, provenance
@@ -31,10 +32,10 @@
 //! ([`super::infer`]), which also backs the `/v2` Open Inference Protocol
 //! surface ([`super::v2`]) registered alongside these routes.
 
-use super::batcher::{Batcher, BatcherConfig};
 use super::ensemble::Ensemble;
 use super::infer;
 use super::metrics::Metrics;
+use super::sched::{SchedConfig, Scheduler};
 use super::wire::{self, ApiError, PredictRequest};
 use crate::http::router::{Params, RequestInfo, RouteHandler, RouterObserver};
 use crate::http::{Request, Response, Router};
@@ -48,7 +49,8 @@ use std::sync::Arc;
 /// Shared server state behind the router.
 pub struct ServerState {
     pub ensemble: Ensemble,
-    pub batcher: Option<Batcher>,
+    /// The adaptive scheduling plane (None = pass-through forwards).
+    pub scheduler: Option<Scheduler>,
     pub manifest: Arc<Manifest>,
     pub normalizer: Normalizer,
     pub metrics: Arc<Metrics>,
@@ -60,19 +62,22 @@ pub struct ServerState {
 }
 
 impl ServerState {
-    pub fn new(ensemble: Ensemble, batcher_config: Option<BatcherConfig>) -> Result<Arc<Self>> {
+    pub fn new(ensemble: Ensemble, sched_config: Option<SchedConfig>) -> Result<Arc<Self>> {
         let manifest = Arc::clone(ensemble.manifest());
         let normalizer = Normalizer::new(manifest.norm_mean, manifest.norm_std);
-        let batcher = match batcher_config {
-            Some(cfg) => Some(Batcher::spawn(ensemble.clone(), cfg)?),
+        // The scheduler records its shed/flush/depth series into the same
+        // registry the handlers use, so both live in every exposition.
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = match sched_config {
+            Some(cfg) => Some(Scheduler::spawn(ensemble.clone(), cfg, Arc::clone(&metrics))?),
             None => None,
         };
         Ok(Arc::new(ServerState {
             ensemble,
-            batcher,
+            scheduler,
             manifest,
             normalizer,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             started: std::time::Instant::now(),
             lifecycle: std::sync::Mutex::new(()),
         }))
@@ -268,7 +273,7 @@ fn predict_handler(state: Arc<ServerState>, legacy: bool) -> RouteHandler {
             Err(e) => {
                 state.metrics.inc("errors_total");
                 let status = if legacy { 422 } else { e.status };
-                Response::coded_error(status, e.code, &e.message)
+                e.to_response_with_status(status)
             }
         }
     })
@@ -384,9 +389,10 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> 
     Ok(resp)
 }
 
-/// Single-model fast path: one model, no ensemble fan-out, no shared
-/// batcher. Requires the model to be loaded (it need not be in the active
-/// ensemble).
+/// Single-model fast path: one model, no ensemble fan-out. Routed through
+/// the scheduler's per-model queue so concurrent same-model requests
+/// coalesce. Requires the model to be loaded (it need not be in the
+/// active ensemble).
 fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
     let entry = s
         .manifest
@@ -412,20 +418,33 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
         ),
     ];
     if done.params.detail {
-        members.push((
-            "detail".to_string(),
-            json::obj([
-                ("batch", Value::from(done.output.batch)),
-                ("probs", json::f32_array_raw(m.preds.iter().map(|(_, p)| *p))),
-                (
-                    "buckets",
-                    Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
-                ),
-                ("exec_us", Value::from(m.exec_micros)),
-                ("queue_us", Value::from(m.queue_micros)),
-                ("stages", done.stages.to_json()),
-            ]),
-        ));
+        let mut detail = vec![
+            ("batch".to_string(), Value::from(done.output.batch)),
+            (
+                "probs".to_string(),
+                json::f32_array_raw(m.preds.iter().map(|(_, p)| *p)),
+            ),
+            (
+                "buckets".to_string(),
+                Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
+            ),
+            ("exec_us".to_string(), Value::from(m.exec_micros)),
+            ("queue_us".to_string(), Value::from(m.queue_micros)),
+            ("stages".to_string(), done.stages.to_json()),
+        ];
+        // The fast path rides the shared scheduler now, so concurrent
+        // same-model requests coalesce too — surface the evidence.
+        if let Some(st) = done.stats {
+            detail.push((
+                "batching".to_string(),
+                json::obj([
+                    ("coalesced_rows", Value::from(st.coalesced_rows)),
+                    ("coalesced_requests", Value::from(st.coalesced_requests)),
+                    ("wait_us", Value::from(st.wait_micros)),
+                ]),
+            ));
+        }
+        members.push(("detail".to_string(), Value::Obj(detail)));
     }
     let resp = Response::json(200, &Value::Obj(members));
     s.metrics
@@ -467,7 +486,7 @@ fn handle_unload(s: &ServerState, name: &str) -> Result<Response, ApiError> {
     if !s.ensemble.pool().is_loaded(name) {
         return Err(ApiError::model_not_loaded(name));
     }
-    // Leave the active set first so the batcher's next flush (and new
+    // Leave the active set first so the scheduler's next flush (and new
     // requests) stop fanning out to the model before eviction.
     s.ensemble.deactivate(name);
     s.ensemble

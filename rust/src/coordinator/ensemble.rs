@@ -4,7 +4,7 @@
 //!
 //! Membership is **dynamic** (the `/v1` control plane's contract): the
 //! active model set lives behind a shared `RwLock`, so clones of one
-//! ensemble — the API handlers and the [`super::batcher::Batcher`] thread —
+//! ensemble — the API handlers and the [`super::sched::Scheduler`] thread —
 //! observe `load`/`unload`/`PUT /v1/ensemble` changes immediately. Every
 //! `forward()` snapshots the membership once, so a batch in flight keeps a
 //! consistent model list while the next flush picks up the new set.
@@ -230,7 +230,10 @@ impl Ensemble {
         // so replies resolve by index (no name clone, no linear scan).
         let mut pending = Vec::with_capacity(models.len() * chunks.len());
         for (mi, model) in models.iter().enumerate() {
-            let handle = self.pool.handle(); // round-robin per model
+            // Least-loaded per model: each pick sees the rows already
+            // submitted in this loop, so a backed-up worker is skipped
+            // instead of receiving every Nth model blind.
+            let handle = self.pool.least_loaded();
             for &(off, len) in &chunks {
                 let rx = handle
                     .infer_async(ExecRequest {

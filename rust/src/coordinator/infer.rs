@@ -12,17 +12,18 @@
 //!   the device's f32 storage at the boundary).
 //!
 //! [`execute`] owns everything protocol-independent: normalization, the
-//! batcher-vs-direct-vs-subset routing, the single-model fast path, and
+//! per-target scheduler routing, the single-model fast path, and
 //! the per-stage metrics. Response *rendering* stays with each protocol
 //! (paper wire format in `wire.rs`/`api.rs`, OIP JSON in `v2.rs`).
 
 use super::api::ServerState;
-use super::batcher::BatchStats;
 use super::ensemble::EnsembleOutput;
 use super::policy::Policy;
+use super::sched::{BatchStats, TargetKey};
 use super::wire::{ApiError, StageMicros};
 use crate::runtime::{DType, Manifest, TensorView};
 use crate::util::Stopwatch;
+use std::time::Duration;
 
 /// One named, typed, shaped input tensor, already converted to the
 /// device's f32 storage. `dtype` records the *wire* element type the
@@ -48,6 +49,9 @@ pub struct InferParams {
     pub detail: bool,
     /// Input is already normalized (skip the shared transformation).
     pub normalized: bool,
+    /// Per-request in-queue deadline (`timeout_ms` in v1 params /
+    /// v2 parameters); `None` falls back to the server-wide default.
+    pub timeout: Option<Duration>,
 }
 
 /// The wire-neutral inference request both protocol codecs lower into.
@@ -73,12 +77,13 @@ pub struct InferenceResponse {
 
 /// Run one inference through the shared serving stack.
 ///
-/// `single` selects the single-model fast path (no ensemble fan-out, no
-/// shared batcher) used by `POST /v1/models/:name/predict` and
-/// `POST /v2/models/:name/infer`; `None` is the ensemble path
-/// (`POST /v1/predict`, `POST /v2/models/_ensemble/infer`), which
-/// coalesces through the batcher unless the request names an explicit
-/// model subset.
+/// `single` selects the single-model fast path (no ensemble fan-out) used
+/// by `POST /v1/models/:name/predict` and `POST /v2/models/:name/infer`;
+/// `None` is the ensemble path (`POST /v1/predict`,
+/// `POST /v2/models/_ensemble/infer`). With the scheduler enabled, every
+/// shape routes through its own per-target queue — full-ensemble traffic,
+/// explicit `models=` subsets, and single-model requests each coalesce
+/// with their own kind and inherit admission control and deadlines.
 ///
 /// `parse_sw` is the stopwatch the handler started before parsing; the
 /// normalization pass counts into the same `stage_parse_us` bucket, so
@@ -112,56 +117,77 @@ pub fn execute(
     let parse_us = parse_sw.elapsed_micros();
     s.metrics.observe_stage("stage_parse_us", parse_us);
 
-    // Move the payload into the shared zero-copy view: the batcher, the
+    // Move the payload into the shared zero-copy view: the scheduler, the
     // ensemble fan-out and the device executors all reference this one
     // buffer from here on. The view keeps the tensor's logical shape.
     let data = TensorView::from(std::mem::take(&mut tensor.data)).with_shape(&tensor.shape);
 
-    let (output, stats): (EnsembleOutput, Option<BatchStats>) = match single {
-        // Single-model fast path: one fixed-membership ensemble, no
-        // shared batcher (its batches are for the full active set).
-        Some(name) => {
-            let sub = s
-                .ensemble
-                .with_models(vec![name.to_string()])
+    // Typed membership check before any device work (the scheduler path
+    // re-checks at flush time).
+    if single.is_none() && params.models.is_none() && s.ensemble.models().is_empty() {
+        return Err(ApiError::ensemble_empty());
+    }
+
+    // Resolve which per-target queue this request coalesces in. Only
+    // same-target requests can share a device batch, so each shape keys
+    // its own queue; without a scheduler every shape degrades to the
+    // direct pass-through forward.
+    let target = match (single, &params.models) {
+        (Some(name), _) => TargetKey::Single(name.to_string()),
+        (None, Some(names)) => TargetKey::Subset(names.clone()),
+        (None, None) => TargetKey::Ensemble,
+    };
+    // Duplicate names in a subset are rejected up front: they would render
+    // duplicate `model_<name>` response members, and — because every
+    // distinct spelling is its own queue key — `[a,a,b]`, `[a,a,a,b]`, …
+    // would otherwise mint unboundedly many queues under `queue_cap`.
+    if let TargetKey::Subset(names) = &target {
+        let mut seen = std::collections::HashSet::with_capacity(names.len());
+        if let Some(dup) = names.iter().find(|n| !seen.insert(n.as_str())) {
+            return Err(ApiError::bad_value(format!(
+                "'models' lists '{dup}' more than once"
+            )));
+        }
+    }
+    let (output, stats): (EnsembleOutput, Option<BatchStats>) = match &s.scheduler {
+        Some(sched) => {
+            // Subset requests validate their model names HERE, before
+            // enqueue: unknown/unloaded names must fail fast on the
+            // handler thread, and — since every distinct list is its own
+            // TargetKey — bogus lists must not mint fresh queues that
+            // sidestep the per-queue admission bound. (Single-model
+            // routes already validate residency in their handlers; the
+            // flush re-resolves against the then-current loaded set.)
+            if let TargetKey::Subset(names) = &target {
+                s.ensemble
+                    .with_models(names.clone())
+                    .map_err(ApiError::from_anyhow)?;
+            }
+            let (out, st) = sched
+                .submit(target, data, batch, params.timeout)
                 .map_err(ApiError::from_anyhow)?;
-            (
-                sub.forward(data, batch).map_err(ApiError::from_anyhow)?,
-                None,
-            )
+            s.metrics
+                .observe_micros("coalesced_rows", st.coalesced_rows as u64);
+            (out, Some(st))
         }
         None => {
-            // Typed membership check before any device work (the batcher
-            // path re-checks at flush time).
-            if params.models.is_none() && s.ensemble.models().is_empty() {
-                return Err(ApiError::ensemble_empty());
-            }
-            match (&params.models, &s.batcher) {
-                (None, Some(batcher)) => {
-                    let (out, st) = batcher
-                        .submit(data, batch)
-                        .map_err(ApiError::from_anyhow)?;
-                    s.metrics
-                        .observe_micros("coalesced_rows", st.coalesced_rows as u64);
-                    (out, Some(st))
-                }
-                (None, None) => (
-                    s.ensemble
-                        .forward(data, batch)
-                        .map_err(ApiError::from_anyhow)?,
-                    None,
-                ),
-                (Some(names), _) => {
-                    let sub = s
-                        .ensemble
-                        .with_models(names.clone())
-                        .map_err(ApiError::from_anyhow)?;
-                    (
-                        sub.forward(data, batch).map_err(ApiError::from_anyhow)?,
-                        None,
-                    )
-                }
-            }
+            let target_ensemble = match &target {
+                TargetKey::Ensemble => s.ensemble.clone(),
+                TargetKey::Subset(names) => s
+                    .ensemble
+                    .with_models(names.clone())
+                    .map_err(ApiError::from_anyhow)?,
+                TargetKey::Single(name) => s
+                    .ensemble
+                    .with_models(vec![name.clone()])
+                    .map_err(ApiError::from_anyhow)?,
+            };
+            (
+                target_ensemble
+                    .forward(data, batch)
+                    .map_err(ApiError::from_anyhow)?,
+                None,
+            )
         }
     };
 

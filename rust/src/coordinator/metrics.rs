@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// The per-stage data-plane histograms recorded by the predict handlers:
-/// request parse (+normalize), queue wait (batcher + device), device
+/// request parse (+normalize), queue wait (scheduler + device), device
 /// execution, and response rendering. This list is the wire contract for
 /// `flexserve bench`'s `server_stages` block in `BENCH_serve.json`.
 pub const STAGE_METRICS: [&str; 4] = [
@@ -18,11 +18,13 @@ pub const STAGE_METRICS: [&str; 4] = [
     "stage_render_us",
 ];
 
-/// Process-wide metrics registry. Cheap counters (atomics), coarse-grained
-/// mutex on histograms (request path records one sample per request).
+/// Process-wide metrics registry. Cheap counters and gauges (atomics),
+/// coarse-grained mutex on histograms (request path records one sample
+/// per request).
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, AtomicU64>>,
     hists: Mutex<BTreeMap<String, Histogram>>,
 }
 
@@ -48,6 +50,24 @@ impl Metrics {
             .unwrap()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Set a point-in-time gauge (e.g. `sched_queue_depth`). Unlike
+    /// counters, gauges move both ways.
+    pub fn set_gauge(&self, name: &str, value: u64) {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .store(value, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|g| g.load(Ordering::Relaxed))
             .unwrap_or(0)
     }
 
@@ -90,6 +110,12 @@ impl Metrics {
                 c.load(Ordering::Relaxed)
             ));
         }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "flexserve_{name} {}\n",
+                g.load(Ordering::Relaxed)
+            ));
+        }
         for (name, h) in self.hists.lock().unwrap().iter() {
             out.push_str(&format!("flexserve_{name}_count {}\n", h.count()));
             out.push_str(&format!(
@@ -119,6 +145,14 @@ impl Metrics {
             out.push_str(&format!(
                 "# HELP flexserve_{name} FlexServe counter\n\
                  # TYPE flexserve_{name} counter\n\
+                 flexserve_{name} {v}\n"
+            ));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let v = g.load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "# HELP flexserve_{name} FlexServe gauge\n\
+                 # TYPE flexserve_{name} gauge\n\
                  flexserve_{name} {v}\n"
             ));
         }
@@ -153,6 +187,13 @@ impl Metrics {
             .iter()
             .map(|(k, v)| (k.clone(), Value::from(v.load(Ordering::Relaxed))))
             .collect();
+        let gauges: Vec<(String, Value)> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::from(v.load(Ordering::Relaxed))))
+            .collect();
         let hists: Vec<(String, Value)> = self
             .hists
             .lock()
@@ -174,6 +215,7 @@ impl Metrics {
             .collect();
         Value::Obj(vec![
             ("counters".to_string(), Value::Obj(counters)),
+            ("gauges".to_string(), Value::Obj(gauges)),
             ("latencies".to_string(), Value::Obj(hists)),
         ])
     }
@@ -199,6 +241,25 @@ mod tests {
         m.add("requests_total", 4);
         assert_eq!(m.counter("requests_total"), 5);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_move_both_ways_and_render_everywhere() {
+        let m = Metrics::new();
+        m.set_gauge("sched_queue_depth", 7);
+        assert_eq!(m.gauge("sched_queue_depth"), 7);
+        m.set_gauge("sched_queue_depth", 2);
+        assert_eq!(m.gauge("sched_queue_depth"), 2);
+        assert_eq!(m.gauge("missing"), 0);
+        assert!(m.render_text().contains("flexserve_sched_queue_depth 2"));
+        let prom = m.render_prometheus();
+        assert!(prom.contains("# TYPE flexserve_sched_queue_depth gauge"), "{prom}");
+        assert!(prom.contains("flexserve_sched_queue_depth 2"), "{prom}");
+        let v = m.render_json();
+        assert_eq!(
+            v.path(&["gauges", "sched_queue_depth"]).unwrap().as_u64(),
+            Some(2)
+        );
     }
 
     #[test]

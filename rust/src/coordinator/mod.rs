@@ -2,8 +2,10 @@
 //!
 //! * [`ensemble`] — N models behind one forward call (`fmodels`, §2.1/2.2)
 //! * [`policy`] — sensitivity-policy fusion (§2.1)
-//! * [`batcher`] — flexible/dynamic batching (§2.3, extended to
-//!   cross-request coalescing)
+//! * [`sched`] — the adaptive scheduling plane (§2.3 grown into a
+//!   production scheduler): per-target queues with flexible batching,
+//!   adaptive windows, least-loaded dispatch, and admission control with
+//!   backpressure
 //! * [`api`] — the REST surface: versioned `/v1` data + control planes
 //!   with runtime model lifecycle, plus legacy aliases (Fig. 1)
 //! * [`infer`] — the protocol-agnostic inference core: the wire-neutral
@@ -18,20 +20,20 @@
 //!   examples
 
 pub mod api;
-pub mod batcher;
 pub mod ensemble;
 pub mod infer;
 pub mod metrics;
 pub mod policy;
+pub mod sched;
 pub mod v2;
 pub mod wire;
 
 pub use api::{build_router, ServerState};
-pub use batcher::{Batcher, BatcherConfig, BatchStats};
 pub use ensemble::{Ensemble, EnsembleOutput, ModelOutput};
 pub use infer::{InferParams, InferenceRequest, InferenceResponse, NamedTensor};
 pub use metrics::{Metrics, STAGE_METRICS};
 pub use policy::{Confusion, Policy};
+pub use sched::{BatchStats, SchedConfig, Scheduler, TargetKey};
 pub use wire::{ApiError, PredictRequest, StageMicros};
 
 use crate::config::ServeConfig;
@@ -42,7 +44,7 @@ use anyhow::{Context, Result};
 use std::sync::Arc;
 
 /// Bootstrap the full FlexServe stack from a config: manifest → executor
-/// pool → ensemble → (optional) batcher → HTTP server.
+/// pool → ensemble → (optional) scheduler → HTTP server.
 ///
 /// Returns the HTTP handle and the shared state (metrics etc.). The device
 /// pool lives inside the returned state; dropping both shuts everything
@@ -81,7 +83,7 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
     // The ensemble's active set starts as everything the pool loaded and
     // evolves at runtime via the `/v1` control plane.
     let ensemble = Ensemble::new(pool, Arc::clone(&manifest));
-    let state = ServerState::new(ensemble, config.batcher)?;
+    let state = ServerState::new(ensemble, config.scheduler)?;
     let mut router = build_router(Arc::clone(&state));
     if config.access_log {
         router.observe(Arc::new(crate::http::router::AccessLog));

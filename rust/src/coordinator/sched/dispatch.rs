@@ -1,0 +1,99 @@
+//! Flush dispatch: turn one planned [`Flush`] into one ensemble forward
+//! and fan the results (or the typed failure) back to every requester.
+//!
+//! Target resolution happens here, at flush time: the `Ensemble` key
+//! re-snapshots the live active set (control-plane changes apply between
+//! batches), while `Subset`/`Single` keys build a fixed-membership
+//! ensemble — validation failures (unknown / unloaded models) fan out to
+//! every coalesced requester with their taxonomy codes intact.
+//!
+//! Worker selection below this layer is least-loaded: `Ensemble::forward`
+//! picks the executor with the fewest in-flight rows per model
+//! (`ExecutorPool::least_loaded`), so one slow worker no longer backs up
+//! every Nth batch the way blind round-robin did.
+
+use super::super::ensemble::Ensemble;
+use super::queue::{slice_output, Dequeued, Flush, TargetKey};
+use super::BatchStats;
+use crate::runtime::TensorView;
+use anyhow::anyhow;
+
+/// Execute one flush against its target and deliver every reply. Never
+/// panics on send failures (a requester may have given up).
+pub fn flush(ensemble: &Ensemble, key: &TargetKey, flush: Flush) {
+    let Flush { mut items, rows } = flush;
+    if items.is_empty() {
+        return;
+    }
+
+    // Resolve the target set NOW (not at enqueue): the shared ensemble
+    // tracks membership changes, fixed keys validate against the current
+    // loaded set.
+    let target = match key {
+        TargetKey::Ensemble => Ok(ensemble.clone()),
+        TargetKey::Subset(names) => ensemble.with_models(names.clone()),
+        TargetKey::Single(name) => ensemble.with_models(vec![name.clone()]),
+    };
+    let target = match target {
+        Ok(t) => t,
+        Err(e) => return fail_all(items, &e),
+    };
+
+    // A lone request (the common uncoalesced case) rides its own buffer
+    // straight through — no gather copy in, no slice copy out. Only
+    // genuinely coalesced batches pay one gather into a combined buffer.
+    let n_req = items.len();
+    let input: TensorView = if n_req == 1 {
+        items[0].data.clone() // refcount bump, not a float copy
+    } else {
+        let elems = ensemble.manifest().sample_elems();
+        let mut combined = Vec::with_capacity(rows * elems);
+        for p in &items {
+            combined.extend_from_slice(&p.data);
+        }
+        TensorView::from(combined)
+    };
+
+    match target.forward(input, rows) {
+        Ok(output) => {
+            if n_req == 1 {
+                let p = items.pop().expect("n_req == 1");
+                let stats = BatchStats {
+                    coalesced_rows: rows,
+                    coalesced_requests: 1,
+                    wait_micros: p.wait_us,
+                };
+                let _ = p.reply.send(Ok((output, stats)));
+                return;
+            }
+            let mut offset = 0;
+            for p in items {
+                let slice = slice_output(&output, offset, p.batch);
+                offset += p.batch;
+                let stats = BatchStats {
+                    coalesced_rows: rows,
+                    coalesced_requests: n_req,
+                    wait_micros: p.wait_us,
+                };
+                let _ = p.reply.send(Ok((slice, stats)));
+            }
+        }
+        Err(e) => fail_all(items, &e),
+    }
+}
+
+/// Every requester in the batch sees the failure. Typed API errors (e.g.
+/// `ensemble.empty` after the last model is unloaded between flushes)
+/// survive the fan-out so the HTTP layer can render their taxonomy code
+/// and status.
+fn fail_all(items: Vec<Dequeued>, e: &anyhow::Error) {
+    let api = e.downcast_ref::<super::super::wire::ApiError>().cloned();
+    let msg = format!("{e:#}");
+    for p in items {
+        let err = match &api {
+            Some(api) => anyhow::Error::new(api.clone()),
+            None => anyhow!("{msg}"),
+        };
+        let _ = p.reply.send(Err(err));
+    }
+}

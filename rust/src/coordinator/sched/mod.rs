@@ -1,0 +1,388 @@
+//! The adaptive scheduling plane (§2.3 grown into a production scheduler):
+//! every request shape — full-ensemble, explicit subset, single-model —
+//! routes through one [`Scheduler`] that owns per-target queues, an
+//! adaptive batching window, bounded admission, deadlines, and drain-on-
+//! shutdown. It replaces the seed's single global FIFO batcher.
+//!
+//! * [`queue`] — one bounded FIFO per [`TargetKey`] (only same-target
+//!   requests can share a device batch), with the admission rule, the
+//!   deadline shed, and dequeue-time wait capture;
+//! * [`policy`] — the adaptive window: a per-queue EWMA of inter-arrival
+//!   gaps shrinks the window toward pass-through when traffic is sparse
+//!   and widens it toward `max_delay` under load;
+//! * [`dispatch`] — flush execution: resolve the target at flush time,
+//!   one `Ensemble::forward` per batch, fan replies (or the typed
+//!   failure) back to every coalesced requester. Batches run on a
+//!   flush-worker pool sized to the device pool, so distinct target
+//!   queues flush in parallel; when every slot is busy the planner holds
+//!   off and arrivals keep coalescing.
+//!
+//! Overload semantics (the backpressure contract, README "Scheduling &
+//! backpressure"): a full queue sheds NEW work with `429
+//! server.overloaded` (+ `Retry-After`) instead of growing without bound;
+//! a queued request that outlives its deadline (`timeout_ms` param or the
+//! server-wide `--deadline-ms`) sheds with `504 server.deadline_exceeded`;
+//! shutdown drains queues — every accepted request is answered.
+//!
+//! The window is measured from the **oldest pending request's enqueue
+//! time**: a flush in progress can no longer silently extend the next
+//! batch's wait (the seed restarted the window when its thread got back
+//! around to the queue).
+
+pub mod dispatch;
+pub mod policy;
+pub mod queue;
+
+pub use queue::{admit, plan_take, slice_output, TargetKey};
+
+use super::ensemble::{Ensemble, EnsembleOutput};
+use super::metrics::Metrics;
+use super::wire::ApiError;
+use crate::runtime::TensorView;
+use crate::util::ThreadPool;
+use anyhow::{anyhow, bail, Error, Result};
+use queue::TargetQueue;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Scheduling-plane knobs (`--max-batch --batch-delay-us --queue-cap
+/// --deadline-ms --adaptive-window`, or the config file's `scheduler`
+/// block).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// Maximum coalesced rows per device batch (should be ≤ the largest
+    /// AOT bucket to avoid chunking; larger values still work via chunking).
+    pub max_batch: usize,
+    /// Upper bound on the batching window after the oldest request's
+    /// arrival. 0 = pass-through.
+    pub max_delay: Duration,
+    /// Per-target-queue pending-request cap; 0 = unbounded. Overflow is
+    /// shed with `429 server.overloaded` + `Retry-After`.
+    pub queue_cap: usize,
+    /// Default in-queue deadline for requests that don't set `timeout_ms`;
+    /// `None` = wait forever. Expired requests shed with
+    /// `504 server.deadline_exceeded`.
+    pub deadline: Option<Duration>,
+    /// Adapt the window per queue from the EWMA inter-arrival gap (the
+    /// default); `false` pins every window at `max_delay` (the seed's
+    /// fixed-window behaviour).
+    pub adaptive: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 0,
+            deadline: None,
+            adaptive: true,
+        }
+    }
+}
+
+/// Per-request batching diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchStats {
+    /// Rows in the coalesced device batch this request rode in.
+    pub coalesced_rows: usize,
+    /// Requests sharing that batch.
+    pub coalesced_requests: usize,
+    /// Time this request waited in the scheduler queue (captured at
+    /// dequeue — excludes device execution).
+    pub wait_micros: u64,
+}
+
+struct Shared {
+    queues: Mutex<HashMap<TargetKey, TargetQueue>>,
+    arrived: Condvar,
+    shutdown: AtomicBool,
+    config: SchedConfig,
+    metrics: Arc<Metrics>,
+    /// Flush concurrency bound — one slot per device worker, so distinct
+    /// target queues flush in parallel across the pool, while a saturated
+    /// pool makes new arrivals keep coalescing in their queues instead of
+    /// spraying tiny flushes into the executor backlog.
+    flush_slots: usize,
+    in_flight_flushes: AtomicUsize,
+}
+
+impl Shared {
+    /// Refresh the queue-depth gauges (planner-thread path — it already
+    /// holds the queues lock and has no peers to contend with).
+    fn observe_depth(&self, queues: &HashMap<TargetKey, TargetQueue>) {
+        let depth: usize = queues.values().map(TargetQueue::len).sum();
+        self.publish_depth(depth as u64, queues.len() as u64);
+    }
+
+    fn publish_depth(&self, depth: u64, queues: u64) {
+        self.metrics.set_gauge("sched_queue_depth", depth);
+        self.metrics.set_gauge("sched_queues", queues);
+    }
+}
+
+/// Handle to the scheduling plane; submit from any thread. Dropping the
+/// handle drains every queue (accepted requests still get answers) and
+/// stops the scheduler thread.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    thread: Option<thread::JoinHandle<()>>,
+    /// Flush workers. Held so the LAST owner's drop (after the planner
+    /// thread is joined) blocks until every dispatched flush has answered
+    /// its requesters — the drain guarantee covers in-flight batches too.
+    _flushers: Arc<ThreadPool>,
+}
+
+impl Scheduler {
+    pub fn spawn(ensemble: Ensemble, config: SchedConfig, metrics: Arc<Metrics>) -> Result<Scheduler> {
+        if config.max_batch == 0 {
+            bail!("scheduler max_batch must be ≥ 1");
+        }
+        let flush_slots = ensemble.pool().workers().max(1);
+        let flushers = Arc::new(ThreadPool::new(flush_slots, "flexserve-flush"));
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            arrived: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            config,
+            metrics,
+            flush_slots,
+            in_flight_flushes: AtomicUsize::new(0),
+        });
+        let s2 = Arc::clone(&shared);
+        let f2 = Arc::clone(&flushers);
+        let thread = thread::Builder::new()
+            .name("flexserve-sched".into())
+            .spawn(move || scheduler_thread(ensemble, s2, f2))?;
+        Ok(Scheduler {
+            shared,
+            thread: Some(thread),
+            _flushers: flushers,
+        })
+    }
+
+    /// Blocking submit: admission-checked enqueue onto `target`'s queue,
+    /// returns this request's rows + batching stats once its batch runs.
+    ///
+    /// `timeout` is the per-request in-queue budget (`timeout_ms` on the
+    /// wire); `None` falls back to the configured server-wide deadline.
+    pub fn submit(
+        &self,
+        target: TargetKey,
+        data: impl Into<TensorView>,
+        batch: usize,
+        timeout: Option<Duration>,
+    ) -> Result<(EnsembleOutput, BatchStats)> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let (depth, n_queues) = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            // Checked under the queues lock, mirroring the scheduler
+            // thread's exit condition (shutdown AND empty, same lock): a
+            // request admitted here is guaranteed to be drained.
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return Err(anyhow!("scheduler is shutting down"));
+            }
+            let cap = self.shared.config.queue_cap;
+            let q = queues.entry(target).or_default();
+            if !queue::admit(q.len(), cap) {
+                self.shared.metrics.inc("sched_shed_overload_total");
+                return Err(Error::new(ApiError::overloaded(format!(
+                    "queue is full ({cap} pending requests); retry later"
+                ))));
+            }
+            let deadline = timeout.or(self.shared.config.deadline);
+            q.push(data.into(), batch, deadline, reply_tx);
+            let depth: usize = queues.values().map(TargetQueue::len).sum();
+            (depth as u64, queues.len() as u64)
+        };
+        self.shared.arrived.notify_one();
+        // Gauge publication happens OFF the queues lock: the metrics
+        // registry has its own mutex and per-call allocations that must
+        // not serialize every HTTP worker's admission path.
+        self.shared.publish_depth(depth, n_queues);
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler dropped the request"))?
+    }
+
+    /// Begin shutdown without blocking: new submissions are refused,
+    /// every window collapses to zero, and queued requests flush. `Drop`
+    /// joins the thread once the drain completes.
+    pub fn drain(&self) {
+        // The store races benignly with in-progress submits: admission
+        // re-checks under the queues lock, and the thread only exits once
+        // the queues are empty under that same lock.
+        let _lock = self.shared.queues.lock().unwrap();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.arrived.notify_all();
+    }
+
+    /// Total pending requests across every target queue (introspection).
+    pub fn queue_depth(&self) -> usize {
+        self.shared
+            .queues
+            .lock()
+            .unwrap()
+            .values()
+            .map(TargetQueue::len)
+            .sum()
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.drain();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The flush the planner picked (or how long to sleep until one ripens).
+enum Plan {
+    Flush { key: TargetKey, window_us: u64 },
+    Sleep(Duration),
+}
+
+/// Decide the next action over the current queues. A queue is ripe when
+/// it holds `max_batch` rows or its oldest request has waited out the
+/// queue's window; among ripe queues the longest-waiting front wins
+/// (FIFO fairness across targets). `draining` collapses every window to
+/// zero so shutdown flushes everything.
+fn plan(
+    queues: &HashMap<TargetKey, TargetQueue>,
+    config: &SchedConfig,
+    draining: bool,
+) -> Plan {
+    let mut best: Option<(TargetKey, u64, u64)> = None; // (key, oldest_wait, window)
+    let mut earliest: Option<u64> = None; // µs until the soonest window expiry
+    for (key, q) in queues.iter() {
+        let Some(oldest) = q.oldest_wait_us() else {
+            continue;
+        };
+        let window = if draining {
+            0
+        } else {
+            q.window_us(config.max_delay.as_micros() as u64, config.adaptive)
+        };
+        if q.rows() >= config.max_batch || oldest >= window {
+            if best.as_ref().map_or(true, |&(_, w, _)| oldest > w) {
+                best = Some((key.clone(), oldest, window));
+            }
+        } else {
+            // Sleep no longer than the window NOR than the soonest
+            // pending deadline — an expired request's 504 must not wait
+            // out the batching window (clamped ≥ 1µs so an
+            // about-to-expire deadline can't spin the planner).
+            let mut remaining = window - oldest;
+            if let Some(d) = q.next_deadline_us() {
+                remaining = remaining.min(d.max(1));
+            }
+            if earliest.map_or(true, |e| remaining < e) {
+                earliest = Some(remaining);
+            }
+        }
+    }
+    match best {
+        Some((key, _, window_us)) => Plan::Flush { key, window_us },
+        // No queue ripe: sleep until the nearest window expires (the
+        // fallback only guards against a race where every queue emptied
+        // between the phase-1 check and here).
+        None => Plan::Sleep(Duration::from_micros(earliest.unwrap_or(1000))),
+    }
+}
+
+fn scheduler_thread(ensemble: Ensemble, shared: Arc<Shared>, flushers: Arc<ThreadPool>) {
+    loop {
+        // Phase 1: wait for work; exit only when shut down AND drained.
+        let mut queues = shared.queues.lock().unwrap();
+        loop {
+            if queues.values().any(|q| !q.is_empty()) {
+                break;
+            }
+            if shared.shutdown.load(Ordering::SeqCst) {
+                // In-flight flushes finish under the flusher pool's drop
+                // (joined after this thread), so exiting here never drops
+                // an accepted request.
+                return;
+            }
+            queues = shared.arrived.wait(queues).unwrap();
+        }
+        let draining = shared.shutdown.load(Ordering::SeqCst);
+
+        // Phase 2: shed deadline-expired requests (their typed 504s go
+        // out immediately — mpsc sends never block, so doing it under the
+        // lock is safe) and prune long-idle queue bookkeeping.
+        let mut expired: Vec<queue::Shed> = Vec::new();
+        for q in queues.values_mut() {
+            expired.extend(q.shed_expired());
+        }
+        queues.retain(|_, q| !q.is_stale());
+        if !expired.is_empty() {
+            shared
+                .metrics
+                .add("sched_shed_deadline_total", expired.len() as u64);
+            shared.observe_depth(&queues);
+            fail_expired(expired);
+        }
+
+        // Phase 3 gate: with every flush slot busy (one per device
+        // worker), dispatching more batches would only pile tiny flushes
+        // into the executor backlog — hold off so new arrivals coalesce;
+        // a completing flush notifies `arrived`. The nap is capped by the
+        // soonest pending deadline so 504s stay on time even while the
+        // pool is saturated.
+        if shared.in_flight_flushes.load(Ordering::SeqCst) >= shared.flush_slots && !draining {
+            let nap = queues
+                .values()
+                .filter_map(TargetQueue::next_deadline_us)
+                .min()
+                .map_or(Duration::from_millis(5), |d| {
+                    Duration::from_micros(d.max(1)).min(Duration::from_millis(5))
+                });
+            let (guard, _) = shared.arrived.wait_timeout(queues, nap).unwrap();
+            drop(guard);
+            continue;
+        }
+
+        // Phase 3: hand the ripest queue to a flush worker, or sleep
+        // until one ripens.
+        match plan(&queues, &shared.config, draining) {
+            Plan::Flush { key, window_us } => {
+                let flush = queues
+                    .get_mut(&key)
+                    .expect("planned key exists")
+                    .take(shared.config.max_batch);
+                shared.observe_depth(&queues);
+                shared.metrics.observe_micros("sched_window_us", window_us);
+                shared.metrics.inc("sched_flushes_total");
+                shared.in_flight_flushes.fetch_add(1, Ordering::SeqCst);
+                drop(queues); // run inference unlocked
+                let ens = ensemble.clone();
+                let sh = Arc::clone(&shared);
+                flushers.execute(move || {
+                    dispatch::flush(&ens, &key, flush);
+                    sh.in_flight_flushes.fetch_sub(1, Ordering::SeqCst);
+                    sh.arrived.notify_all(); // a slot freed — re-plan
+                });
+            }
+            Plan::Sleep(d) => {
+                let (guard, _) = shared.arrived.wait_timeout(queues, d).unwrap();
+                drop(guard);
+            }
+        }
+    }
+}
+
+/// Deliver the typed 504 to every deadline-shed requester.
+fn fail_expired(expired: Vec<queue::Shed>) {
+    for s in expired {
+        let _ = s.reply.send(Err(Error::new(ApiError::deadline_exceeded(format!(
+            "request spent {} ms queued, past its deadline",
+            s.waited_us / 1000
+        )))));
+    }
+}

@@ -1,0 +1,114 @@
+//! Batching policy: how long a queue should hold its oldest request
+//! waiting for coalescing company.
+//!
+//! The scheduler keeps one EWMA of inter-arrival gaps per target queue and
+//! derives the batching window from it with [`adaptive_window_us`]: when
+//! requests arrive slower than `max_delay` there is nothing to coalesce
+//! with, so the window collapses to pass-through (no artificial latency);
+//! as the arrival rate climbs the window widens toward `max_delay`, which
+//! is where coalescing pays. Everything here is a pure function of its
+//! arguments — the device-free property tests in `tests/sched_props.rs`
+//! pin the bounds and monotonicity.
+
+/// EWMA smoothing factor for inter-arrival gaps. Small enough to ride out
+/// one odd gap, large enough to track a load shift within ~a dozen
+/// arrivals.
+pub const EWMA_ALPHA: f64 = 0.2;
+
+/// Sentinel for "no inter-arrival gap observed yet" (a fresh queue): the
+/// adaptive window treats it as an infinitely slow arrival rate, i.e.
+/// pass-through.
+pub const NO_ESTIMATE: f64 = f64::INFINITY;
+
+/// Fold one observed inter-arrival gap (µs) into the EWMA estimate. The
+/// first observation seeds the estimate directly.
+pub fn ewma_update(prev_us: f64, gap_us: f64) -> f64 {
+    let gap_us = gap_us.max(0.0);
+    if !prev_us.is_finite() {
+        return gap_us;
+    }
+    EWMA_ALPHA * gap_us + (1.0 - EWMA_ALPHA) * prev_us
+}
+
+/// The adaptive batching window for a queue whose EWMA inter-arrival gap
+/// is `ewma_gap_us`, bounded by the configured `max_delay_us`.
+///
+/// A window is worth holding only when the expected next arrival lands
+/// INSIDE it — `window = max_delay − gap` must exceed the gap itself,
+/// i.e. `gap < max_delay / 2`. So:
+///
+/// * gap ≥ `max_delay / 2` → `0` (the expected company arrives after the
+///   window would already have closed — e.g. one closed-loop client whose
+///   cycle time is near the window: holding is pure latency);
+/// * gap → 0 → `max_delay` (heavy load: the window fills with company);
+/// * linear in between (`max_delay - gap`), so the window always covers
+///   at least one expected extra arrival whenever it is non-zero.
+pub fn adaptive_window_us(ewma_gap_us: f64, max_delay_us: u64) -> u64 {
+    if max_delay_us == 0 || !ewma_gap_us.is_finite() {
+        return 0;
+    }
+    let gap = ewma_gap_us.max(0.0);
+    let max = max_delay_us as f64;
+    if 2.0 * gap >= max {
+        0
+    } else {
+        (max - gap) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn window_limits() {
+        assert_eq!(adaptive_window_us(NO_ESTIMATE, 2000), 0);
+        assert_eq!(adaptive_window_us(0.0, 2000), 2000);
+        assert_eq!(adaptive_window_us(2000.0, 2000), 0);
+        assert_eq!(adaptive_window_us(5000.0, 2000), 0);
+        assert_eq!(adaptive_window_us(500.0, 2000), 1500);
+        // At/after the half-way point the expected next arrival would land
+        // outside the window — pass through instead of holding.
+        assert_eq!(adaptive_window_us(1000.0, 2000), 0);
+        assert_eq!(adaptive_window_us(1200.0, 2000), 0);
+        assert_eq!(adaptive_window_us(999.0, 2000), 1001);
+        assert_eq!(adaptive_window_us(0.0, 0), 0);
+    }
+
+    #[test]
+    fn ewma_seeds_and_smooths() {
+        let e = ewma_update(NO_ESTIMATE, 100.0);
+        assert_eq!(e, 100.0);
+        let e2 = ewma_update(e, 200.0);
+        assert!(e2 > 100.0 && e2 < 200.0);
+        // Negative gaps (clock quirks) clamp to zero rather than poisoning
+        // the estimate.
+        assert!(ewma_update(100.0, -5.0) < 100.0);
+    }
+
+    #[test]
+    fn prop_window_bounded_and_monotone() {
+        check("adaptive window bounds + monotonicity", 400, |g| {
+            let max_delay = g.int(0, 10_000) as u64;
+            let a = g.f64(0.0, 20_000.0);
+            let b = g.f64(0.0, 20_000.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let w_lo = adaptive_window_us(lo, max_delay);
+            let w_hi = adaptive_window_us(hi, max_delay);
+            assert!(w_lo <= max_delay && w_hi <= max_delay);
+            // Slower arrivals never get a LONGER window.
+            assert!(w_hi <= w_lo, "gap {lo}->{hi}, window {w_lo}->{w_hi}");
+        });
+    }
+
+    #[test]
+    fn prop_ewma_stays_within_observed_range() {
+        check("ewma bounded by inputs", 400, |g| {
+            let prev = g.f64(0.0, 10_000.0);
+            let gap = g.f64(0.0, 10_000.0);
+            let next = ewma_update(prev, gap);
+            assert!(next >= prev.min(gap) - 1e-9 && next <= prev.max(gap) + 1e-9);
+        });
+    }
+}

@@ -1,0 +1,388 @@
+//! Per-target pending queues: the scheduler keeps one [`TargetQueue`] per
+//! resolved target set ([`TargetKey`]), so the single-model fast path and
+//! explicit `models=` subsets coalesce with their own kind instead of
+//! bypassing batching entirely (only same-target requests can share a
+//! device batch).
+//!
+//! The queue also owns the overload story: admission is bounded
+//! ([`admit`] — overflow sheds with a typed 429 before any state is
+//! touched), queued requests carry an optional deadline
+//! ([`Pending::expired`] — expired entries shed with a typed 504 at the
+//! next scheduler pass), and dequeuing captures each request's queue wait
+//! **at dequeue time** ([`TargetQueue::take`]) so reported wait never
+//! includes device execution.
+
+use super::super::ensemble::{EnsembleOutput, ModelOutput};
+use super::{policy, BatchStats};
+use crate::runtime::TensorView;
+use crate::util::Stopwatch;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Which resolved model set a request targets. Requests coalesce only
+/// within one key: batching across different model sets would execute the
+/// wrong models for someone.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum TargetKey {
+    /// The dynamic active ensemble — membership is re-snapshotted at every
+    /// flush, so control-plane changes apply between batches.
+    Ensemble,
+    /// An explicit fixed subset, in request order (order is part of the
+    /// wire contract: the response renders models in request order).
+    Subset(Vec<String>),
+    /// The single-model fast path.
+    Single(String),
+}
+
+/// A completed (or failed) scheduled request.
+pub type Reply = anyhow::Result<(EnsembleOutput, BatchStats)>;
+
+struct Pending {
+    data: TensorView,
+    batch: usize,
+    enqueued: Stopwatch,
+    /// In-queue time budget (request `timeout_ms` or the server default);
+    /// `None` = wait forever.
+    deadline: Option<Duration>,
+    reply: mpsc::Sender<Reply>,
+}
+
+impl Pending {
+    fn expired(&self) -> bool {
+        self.deadline
+            .is_some_and(|d| self.enqueued.elapsed_micros() > d.as_micros() as u64)
+    }
+}
+
+/// One dequeued request, its queue wait frozen at dequeue time.
+pub struct Dequeued {
+    pub data: TensorView,
+    pub batch: usize,
+    /// Queue wait in µs, captured when the request left the queue — device
+    /// execution after this point does NOT count (the seed read the
+    /// stopwatch after `Ensemble::forward`, inflating reported wait by the
+    /// batch's execution time).
+    pub wait_us: u64,
+    pub reply: mpsc::Sender<Reply>,
+}
+
+/// A planned device batch: the dequeued requests and their total rows.
+pub struct Flush {
+    pub items: Vec<Dequeued>,
+    pub rows: usize,
+}
+
+/// A request shed from the queue (admission or deadline); carries enough
+/// to send the typed failure.
+pub struct Shed {
+    pub waited_us: u64,
+    pub reply: mpsc::Sender<Reply>,
+}
+
+/// Pure admission rule: may a request enter a queue already holding
+/// `depth` pending requests under `cap`? `cap == 0` means unbounded.
+pub fn admit(depth: usize, cap: usize) -> bool {
+    cap == 0 || depth < cap
+}
+
+/// One target's FIFO of pending requests plus its arrival-rate estimate.
+pub struct TargetQueue {
+    pending: VecDeque<Pending>,
+    /// Running total of pending rows (kept incrementally so the planner's
+    /// per-pass `rows()` reads are O(1), not O(pending)).
+    rows_total: usize,
+    /// EWMA of inter-arrival gaps (µs); [`policy::NO_ESTIMATE`] until two
+    /// arrivals have been observed.
+    ewma_gap_us: f64,
+    last_arrival: Option<Stopwatch>,
+}
+
+/// Empty queues older than this are pruned (their EWMA is stale anyway —
+/// the first gap after a long idle period collapses the window to
+/// pass-through, which is also what a fresh queue does).
+const STALE_AFTER_SECS: f64 = 10.0;
+
+impl TargetQueue {
+    pub fn new() -> TargetQueue {
+        TargetQueue {
+            pending: VecDeque::new(),
+            rows_total: 0,
+            ewma_gap_us: policy::NO_ESTIMATE,
+            last_arrival: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        debug_assert_eq!(
+            self.rows_total,
+            self.pending.iter().map(|p| p.batch).sum::<usize>()
+        );
+        self.rows_total
+    }
+
+    /// µs the oldest pending request has already waited (None if empty).
+    /// The batching window is measured against THIS — i.e. it starts at
+    /// enqueue time, not when the scheduler thread next observes the
+    /// queue, so a flush-in-progress cannot silently extend the next
+    /// batch's wait.
+    pub fn oldest_wait_us(&self) -> Option<u64> {
+        self.pending.front().map(|p| p.enqueued.elapsed_micros())
+    }
+
+    /// Current EWMA inter-arrival estimate (µs).
+    pub fn ewma_gap_us(&self) -> f64 {
+        self.ewma_gap_us
+    }
+
+    /// µs until the soonest pending deadline expires (`None` when no
+    /// pending request carries one). The scheduler caps its sleep with
+    /// this so a 504 is delivered when the deadline passes, not when the
+    /// batching window happens to close.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.pending
+            .iter()
+            .filter_map(|p| {
+                p.deadline.map(|d| {
+                    (d.as_micros() as u64).saturating_sub(p.enqueued.elapsed_micros())
+                })
+            })
+            .min()
+    }
+
+    /// The batching window this queue currently earns.
+    pub fn window_us(&self, max_delay_us: u64, adaptive: bool) -> u64 {
+        if adaptive {
+            policy::adaptive_window_us(self.ewma_gap_us, max_delay_us)
+        } else {
+            max_delay_us
+        }
+    }
+
+    /// Enqueue one admitted request, folding its arrival into the EWMA.
+    pub fn push(
+        &mut self,
+        data: TensorView,
+        batch: usize,
+        deadline: Option<Duration>,
+        reply: mpsc::Sender<Reply>,
+    ) {
+        if let Some(last) = self.last_arrival {
+            self.ewma_gap_us = policy::ewma_update(self.ewma_gap_us, last.elapsed_micros() as f64);
+        }
+        self.last_arrival = Some(Stopwatch::start());
+        self.rows_total += batch;
+        self.pending.push_back(Pending {
+            data,
+            batch,
+            enqueued: Stopwatch::start(),
+            deadline,
+            reply,
+        });
+    }
+
+    /// Remove every deadline-expired request (they get the typed 504).
+    pub fn shed_expired(&mut self) -> Vec<Shed> {
+        if !self.pending.iter().any(Pending::expired) {
+            return Vec::new();
+        }
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        let mut shed = Vec::new();
+        for p in self.pending.drain(..) {
+            if p.expired() {
+                self.rows_total -= p.batch;
+                shed.push(Shed {
+                    waited_us: p.enqueued.elapsed_micros(),
+                    reply: p.reply,
+                });
+            } else {
+                kept.push_back(p);
+            }
+        }
+        self.pending = kept;
+        shed
+    }
+
+    /// Dequeue a FIFO prefix totalling ≤ `max_batch` rows (always at least
+    /// one request — an oversized single request chunks downstream). Each
+    /// item's `wait_us` is captured here, at dequeue.
+    pub fn take(&mut self, max_batch: usize) -> Flush {
+        let sizes: Vec<usize> = self.pending.iter().map(|p| p.batch).collect();
+        let n = plan_take(&sizes, max_batch);
+        let mut items = Vec::with_capacity(n);
+        let mut rows = 0;
+        for _ in 0..n {
+            let p = self.pending.pop_front().expect("plan_take ≤ queue len");
+            rows += p.batch;
+            self.rows_total -= p.batch;
+            items.push(Dequeued {
+                data: p.data,
+                batch: p.batch,
+                wait_us: p.enqueued.elapsed_micros(),
+                reply: p.reply,
+            });
+        }
+        Flush { items, rows }
+    }
+
+    /// Should the scheduler drop this queue's bookkeeping? (Empty and idle
+    /// long enough that the arrival estimate says nothing useful.)
+    pub fn is_stale(&self) -> bool {
+        self.pending.is_empty()
+            && self
+                .last_arrival
+                .map_or(true, |s| s.elapsed_secs() > STALE_AFTER_SECS)
+    }
+}
+
+impl Default for TargetQueue {
+    fn default() -> Self {
+        TargetQueue::new()
+    }
+}
+
+/// Pure coalescing rule (extracted for property tests): how many queued
+/// requests a drain takes, given their sizes and the row cap.
+pub fn plan_take(sizes: &[usize], max_batch: usize) -> usize {
+    let mut taken = 0;
+    let mut rows = 0;
+    for &s in sizes {
+        if taken > 0 && rows + s > max_batch {
+            break;
+        }
+        rows += s;
+        taken += 1;
+    }
+    taken
+}
+
+/// Extract rows `[offset, offset+len)` of every model's output.
+pub fn slice_output(output: &EnsembleOutput, offset: usize, len: usize) -> EnsembleOutput {
+    debug_assert!(offset + len <= output.batch);
+    let per_model = output
+        .per_model
+        .iter()
+        .map(|m| {
+            let classes = if output.batch > 0 {
+                m.logits.len() / output.batch
+            } else {
+                0
+            };
+            ModelOutput {
+                model: m.model.clone(),
+                logits: m.logits[offset * classes..(offset + len) * classes].to_vec(),
+                preds: m.preds[offset..offset + len].to_vec(),
+                buckets: m.buckets.clone(),
+                exec_micros: m.exec_micros,
+                queue_micros: m.queue_micros,
+            }
+        })
+        .collect();
+    EnsembleOutput {
+        batch: len,
+        per_model,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn plan_take_basics() {
+        assert_eq!(plan_take(&[1, 1, 1], 32), 3);
+        assert_eq!(plan_take(&[16, 16, 16], 32), 2);
+        assert_eq!(plan_take(&[40], 32), 1); // oversized single → chunked later
+        assert_eq!(plan_take(&[40, 1], 32), 1);
+        assert_eq!(plan_take(&[], 32), 0);
+        assert_eq!(plan_take(&[32, 1], 32), 1);
+    }
+
+    #[test]
+    fn prop_plan_take_invariants() {
+        check("plan_take invariants", 400, |g| {
+            let n = g.int(1, 20);
+            let sizes = g.vec_usize(n, 1, 40);
+            let max_batch = g.int(1, 48);
+            let taken = plan_take(&sizes, max_batch);
+            // Always makes progress.
+            assert!(taken >= 1);
+            // FIFO prefix, never exceeds cap unless it's a single request.
+            let rows: usize = sizes[..taken].iter().sum();
+            assert!(taken == 1 || rows <= max_batch, "sizes={sizes:?} cap={max_batch}");
+            // Maximal: taking one more would exceed the cap.
+            if taken < sizes.len() {
+                assert!(rows + sizes[taken] > max_batch);
+            }
+        });
+    }
+
+    #[test]
+    fn admit_rule() {
+        assert!(admit(0, 0) && admit(1000, 0), "cap 0 = unbounded");
+        assert!(admit(0, 1));
+        assert!(!admit(1, 1));
+        assert!(admit(7, 8));
+        assert!(!admit(8, 8));
+    }
+
+    #[test]
+    fn slice_output_rows() {
+        let out = EnsembleOutput {
+            batch: 4,
+            per_model: vec![ModelOutput {
+                model: "m".into(),
+                logits: (0..8).map(|v| v as f32).collect(), // 4 rows x 2 classes
+                preds: vec![(0, 0.1), (1, 0.2), (0, 0.3), (1, 0.4)],
+                buckets: vec![4],
+                exec_micros: 5,
+                queue_micros: 0,
+            }],
+        };
+        let s = slice_output(&out, 1, 2);
+        assert_eq!(s.batch, 2);
+        assert_eq!(s.per_model[0].logits, vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.per_model[0].preds, vec![(1, 0.2), (0, 0.3)]);
+    }
+
+    #[test]
+    fn prop_slices_partition_output() {
+        check("slices partition the combined output", 200, |g| {
+            let n_req = g.int(1, 6);
+            let sizes = g.vec_usize(n_req, 1, 5);
+            let total: usize = sizes.iter().sum();
+            let classes = 3;
+            let out = EnsembleOutput {
+                batch: total,
+                per_model: vec![ModelOutput {
+                    model: "m".into(),
+                    logits: (0..total * classes).map(|v| v as f32).collect(),
+                    preds: (0..total).map(|i| (i % classes, 0.5)).collect(),
+                    buckets: vec![],
+                    exec_micros: 0,
+                    queue_micros: 0,
+                }],
+            };
+            let mut offset = 0;
+            let mut rebuilt_logits = Vec::new();
+            let mut rebuilt_preds = Vec::new();
+            for &s in &sizes {
+                let slice = slice_output(&out, offset, s);
+                offset += s;
+                rebuilt_logits.extend(slice.per_model[0].logits.clone());
+                rebuilt_preds.extend(slice.per_model[0].preds.clone());
+            }
+            assert_eq!(rebuilt_logits, out.per_model[0].logits);
+            assert_eq!(rebuilt_preds, out.per_model[0].preds);
+        });
+    }
+}

@@ -41,6 +41,7 @@ use crate::json::{self, Value};
 use crate::runtime::{DType, Manifest};
 use crate::util::Stopwatch;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// The pseudo-model name addressing the whole active ensemble.
 pub const ENSEMBLE_MODEL: &str = "_ensemble";
@@ -117,12 +118,17 @@ pub fn add_routes(router: &mut Router, state: Arc<ServerState>) {
 }
 
 /// Render an [`ApiError`] in the protocol's `{"error": "..."}` shape; the
-/// string leads with the stable taxonomy code.
+/// string leads with the stable taxonomy code. Transport hints like
+/// `Retry-After` (overload sheds) travel as headers, same as `/v1`.
 pub fn v2_error(e: &ApiError) -> Response {
-    Response::json(
+    let mut resp = Response::json(
         e.status,
         &json::obj([("error", Value::from(format!("{}: {}", e.code, e.message)))]),
-    )
+    );
+    if let Some(secs) = e.retry_after {
+        resp.headers.push(("retry-after".into(), secs.to_string()));
+    }
+    resp
 }
 
 /// OIP readiness document; un-ready is 503 so orchestrators' HTTP probes
@@ -304,6 +310,20 @@ pub fn parse_infer(
         param_str(params_v, "target")?,
     )?;
 
+    // In-queue deadline: `parameters.timeout_ms`, same semantics as the
+    // /v1 `timeout_ms` param (expired requests shed with a typed 504).
+    let timeout = match params_v.and_then(|p| p.get("timeout_ms")) {
+        None => None,
+        Some(v) => {
+            let ms = v.as_u64().filter(|&ms| ms >= 1).ok_or_else(|| {
+                ApiError::bad_value(
+                    "parameter 'timeout_ms' must be a positive integer (milliseconds)",
+                )
+            })?;
+            Some(Duration::from_millis(ms))
+        }
+    };
+
     // ---- requested outputs -----------------------------------------------
     let outputs = match body.get("outputs") {
         None => None,
@@ -340,6 +360,7 @@ pub fn parse_infer(
             target,
             detail,
             normalized,
+            timeout,
         },
     };
     Ok((ir, InferOptions { id, outputs }))
@@ -967,6 +988,38 @@ mod tests {
         )
         .unwrap_err();
         assert_eq!((e.status, e.code), (422, "bad_input.unknown_target"));
+    }
+
+    #[test]
+    fn timeout_ms_parameter_lowers_and_rejects_typed() {
+        let (ir, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}],
+                "parameters":{"timeout_ms":250}}"#,
+        )
+        .unwrap();
+        assert_eq!(ir.params.timeout, Some(Duration::from_millis(250)));
+        for params in [r#"{"timeout_ms":0}"#, r#"{"timeout_ms":"fast"}"#, r#"{"timeout_ms":1.5}"#] {
+            let e = parse(&format!(
+                r#"{{"inputs":[{{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}}],
+                    "parameters":{params}}}"#,
+            ))
+            .unwrap_err();
+            assert_eq!((e.status, e.code), (422, "bad_input.bad_value"), "{params}");
+        }
+    }
+
+    #[test]
+    fn overload_error_carries_retry_after_in_oip_shape() {
+        let resp = v2_error(&ApiError::overloaded("queue is full"));
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        let v = resp.json_body().unwrap();
+        assert!(v
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("server.overloaded:"));
     }
 
     #[test]

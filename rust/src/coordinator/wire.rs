@@ -23,6 +23,8 @@
 //! | `model.not_loaded`          | 409    | model known but not resident    |
 //! | `model.load_failed`         | 500    | runtime compile/load failure    |
 //! | `ensemble.empty`            | 503    | no active models to serve       |
+//! | `server.overloaded`         | 429    | queue full — shed + Retry-After |
+//! | `server.deadline_exceeded`  | 504    | request expired in queue        |
 //! | `route.not_found`           | 404    | no such route                   |
 //! | `route.method_not_allowed`  | 405    | path matched, method didn't     |
 //! | `internal`                  | 500    | unexpected server failure       |
@@ -30,14 +32,15 @@
 //! (*) Legacy unversioned routes flatten every predict-path status to the
 //! seed's 422 while keeping the code — see the README legacy-alias policy.
 
-use super::batcher::BatchStats;
 use super::ensemble::EnsembleOutput;
 use super::infer::{InferParams, InferenceRequest, NamedTensor};
 use super::policy::Policy;
+use super::sched::BatchStats;
 use crate::http::{Request, Response};
 use crate::json::{self, Value};
 use crate::runtime::{DType, Manifest};
 use std::fmt;
+use std::time::Duration;
 
 /// A structured API failure: HTTP status + stable machine-readable code.
 #[derive(Debug, Clone)]
@@ -45,6 +48,9 @@ pub struct ApiError {
     pub status: u16,
     pub code: &'static str,
     pub message: String,
+    /// Advisory client back-off in seconds, rendered as a `Retry-After`
+    /// header (set on `server.overloaded` sheds).
+    pub retry_after: Option<u64>,
 }
 
 impl fmt::Display for ApiError {
@@ -59,6 +65,7 @@ impl ApiError {
             status,
             code,
             message: message.into(),
+            retry_after: None,
         }
     }
 
@@ -141,12 +148,27 @@ impl ApiError {
         )
     }
 
+    /// Admission-control shed: the target queue is at `queue_cap`. Carries
+    /// a `Retry-After` hint so well-behaved clients back off.
+    pub fn overloaded(detail: impl Into<String>) -> ApiError {
+        ApiError {
+            retry_after: Some(1),
+            ..Self::new(429, "server.overloaded", detail)
+        }
+    }
+
+    /// Deadline shed: the request outlived its in-queue budget
+    /// (`timeout_ms` param or the server-wide `--deadline-ms`).
+    pub fn deadline_exceeded(detail: impl Into<String>) -> ApiError {
+        Self::new(504, "server.deadline_exceeded", detail)
+    }
+
     pub fn internal(detail: impl fmt::Display) -> ApiError {
         Self::new(500, "internal", detail.to_string())
     }
 
     /// Recover a typed error that travelled through `anyhow` (e.g. across
-    /// the batcher's fan-out); anything untyped becomes `internal`.
+    /// the scheduler's fan-out); anything untyped becomes `internal`.
     pub fn from_anyhow(e: anyhow::Error) -> ApiError {
         match e.downcast_ref::<ApiError>() {
             Some(api) => api.clone(),
@@ -156,7 +178,18 @@ impl ApiError {
 
     /// Render the uniform `{"error": {"code", "message"}}` envelope.
     pub fn to_response(&self) -> Response {
-        Response::coded_error(self.status, self.code, &self.message)
+        self.to_response_with_status(self.status)
+    }
+
+    /// Same envelope under an overridden status (the legacy `/predict`
+    /// alias flattens to 422) — transport hints like `Retry-After` still
+    /// apply.
+    pub fn to_response_with_status(&self, status: u16) -> Response {
+        let mut resp = Response::coded_error(status, self.code, &self.message);
+        if let Some(secs) = self.retry_after {
+            resp.headers.push(("retry-after".into(), secs.to_string()));
+        }
+        resp
     }
 }
 
@@ -179,6 +212,9 @@ pub struct PredictRequest {
     /// Fusion target: `(class name, class index)`, validated at parse time.
     pub target: Option<(String, usize)>,
     pub detail: bool,
+    /// In-queue deadline (`timeout_ms`); expired requests shed with a
+    /// typed 504 instead of waiting forever.
+    pub timeout: Option<Duration>,
 }
 
 /// Query-param override rule: present AND non-empty wins; empty = unset.
@@ -321,6 +357,19 @@ impl PredictRequest {
             None => body.get("detail").and_then(Value::as_bool).unwrap_or(false),
         };
 
+        let timeout_ms = match query_override(req, "timeout_ms") {
+            Some(v) => Some(v.parse::<u64>().map_err(|_| bad_timeout())?),
+            None => match body.get("timeout_ms") {
+                None => None,
+                Some(v) => Some(v.as_u64().ok_or_else(bad_timeout)?),
+            },
+        };
+        let timeout = match timeout_ms {
+            Some(0) => return Err(bad_timeout()),
+            Some(ms) => Some(Duration::from_millis(ms)),
+            None => None,
+        };
+
         Ok(PredictRequest {
             data,
             batch,
@@ -329,6 +378,7 @@ impl PredictRequest {
             policy,
             target,
             detail,
+            timeout,
         })
     }
 
@@ -353,9 +403,15 @@ impl PredictRequest {
                 target: self.target,
                 detail: self.detail,
                 normalized: self.normalized,
+                timeout: self.timeout,
             },
         }
     }
+}
+
+/// The shared `timeout_ms` rejection (query and body spellings must agree).
+fn bad_timeout() -> ApiError {
+    ApiError::bad_value("'timeout_ms' must be a positive integer (milliseconds)")
 }
 
 /// Streaming fast path for `{"data": [...], ...}` predict bodies.
@@ -639,6 +695,59 @@ mod tests {
         assert_eq!(r.batch, 1);
         assert!(!r.normalized && !r.detail);
         assert!(r.models.is_none() && r.policy.is_none() && r.target.is_none());
+        assert!(r.timeout.is_none());
+    }
+
+    #[test]
+    fn timeout_ms_parses_from_body_and_query() {
+        let m = manifest();
+        let r = PredictRequest::parse(
+            &m,
+            &post("/v1/predict", r#"{"data":[1,2,3,4],"timeout_ms":250}"#),
+        )
+        .unwrap();
+        assert_eq!(r.timeout, Some(std::time::Duration::from_millis(250)));
+        // Non-empty query wins over the body (the uniform precedence rule).
+        let r = PredictRequest::parse(
+            &m,
+            &post(
+                "/v1/predict?timeout_ms=50",
+                r#"{"data":[1,2,3,4],"timeout_ms":250}"#,
+            ),
+        )
+        .unwrap();
+        assert_eq!(r.timeout, Some(std::time::Duration::from_millis(50)));
+        // Zero and junk are typed rejections on both spellings.
+        for req in [
+            post("/v1/predict", r#"{"data":[1,2,3,4],"timeout_ms":0}"#),
+            post("/v1/predict", r#"{"data":[1,2,3,4],"timeout_ms":"fast"}"#),
+            post("/v1/predict?timeout_ms=nope", r#"{"data":[1,2,3,4]}"#),
+        ] {
+            let e = PredictRequest::parse(&m, &req).unwrap_err();
+            assert_eq!((e.status, e.code), (422, "bad_input.bad_value"));
+        }
+    }
+
+    #[test]
+    fn overload_errors_carry_retry_after() {
+        let e = ApiError::overloaded("queue is full");
+        assert_eq!((e.status, e.code), (429, "server.overloaded"));
+        let resp = e.to_response();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        // The legacy alias flattens the status but keeps the hint + code.
+        let legacy = e.to_response_with_status(422);
+        assert_eq!(legacy.status, 422);
+        assert_eq!(legacy.header("retry-after"), Some("1"));
+        let v = legacy.json_body().unwrap();
+        assert_eq!(
+            v.path(&["error", "code"]).unwrap().as_str(),
+            Some("server.overloaded")
+        );
+
+        let e = ApiError::deadline_exceeded("expired");
+        assert_eq!((e.status, e.code), (504, "server.deadline_exceeded"));
+        assert!(e.to_response().header("retry-after").is_none());
     }
 
     #[test]

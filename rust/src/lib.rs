@@ -12,7 +12,7 @@
 //!
 //! ```text
 //!  client ──HTTP──▶ http::Server ──▶ coordinator::api ──▶ coordinator::Ensemble
-//!                                          │                    │ batcher
+//!                                          │                    │ sched
 //!                                          ▼                    ▼
 //!                                   imagepipe (one        runtime::ExecutorPool
 //!                                   transform for          (threads owning

@@ -85,6 +85,7 @@ fn print_usage() {
          SERVE FLAGS:\n\
            --http-workers N --device-workers N --models a,b\n\
            --no-batcher --max-batch N --batch-delay-us N\n\
+           --queue-cap N --deadline-ms N --adaptive-window on|off\n\
            --no-verify --no-warmup --access-log --config FILE\n\
          SERVE-BASELINE FLAGS:\n\
            --fixed-batch N (default 1)\n\
@@ -96,7 +97,11 @@ fn print_usage() {
          BENCH FLAGS:\n\
            --connections K --duration-secs S --iters N --warmup N\n\
            --batch-mix 1:0.7,8:0.2,32:0.1 --protocol v1|v2 --path PATH --seed N\n\
-           --out BENCH_serve.json --echo (in-process echo target; no artifacts)"
+           --concurrency-sweep 1,2,4,8 (one report record per step)\n\
+           --out BENCH_serve.json --echo (in-process echo target; no artifacts)\n\
+           --echo-queue-cap N --echo-delay-us N (echo admission gate: sheds\n\
+           with typed 429s + Retry-After and exposes /v1/metrics, for\n\
+           overload smoke tests without artifacts)"
     );
 }
 
@@ -105,12 +110,24 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     config.apply_cli(args)?;
     let (handle, state) = serve(&config)?;
     println!(
-        "flexserve: serving {} models on http://{} ({} http workers, {} device workers, batcher {})",
+        "flexserve: serving {} models on http://{} ({} http workers, {} device workers, scheduler {})",
         state.ensemble.models().len(),
         handle.addr,
         config.http_workers,
         config.device_workers,
-        if config.batcher.is_some() { "on" } else { "off" },
+        match &config.scheduler {
+            None => "off".to_string(),
+            Some(s) => format!(
+                "on ({} window ≤ {}µs, queue cap {}, deadline {})",
+                if s.adaptive { "adaptive" } else { "fixed" },
+                s.max_delay.as_micros(),
+                if s.queue_cap == 0 { "∞".to_string() } else { s.queue_cap.to_string() },
+                match s.deadline {
+                    Some(d) => format!("{}ms", d.as_millis()),
+                    None => "none".to_string(),
+                },
+            ),
+        },
     );
     println!("models: {}", state.ensemble.models().join(", "));
     println!(
@@ -295,6 +312,9 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let mut addr = "127.0.0.1:8080".to_string();
     let mut out = "BENCH_serve.json".to_string();
     let mut echo = false;
+    let mut echo_queue_cap = 0usize;
+    let mut echo_delay_us = 0u64;
+    let mut sweep: Option<Vec<usize>> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut take = |flag: &str| -> Result<String> {
@@ -314,26 +334,37 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "--seed" => cfg.seed = take("--seed")?.parse()?,
             "--out" => out = take("--out")?,
             "--echo" => echo = true,
+            "--echo-queue-cap" => echo_queue_cap = take("--echo-queue-cap")?.parse()?,
+            "--echo-delay-us" => echo_delay_us = take("--echo-delay-us")?.parse()?,
+            "--concurrency-sweep" => {
+                let steps = take("--concurrency-sweep")?
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse::<usize>().map(|v| v.max(1)).map_err(Into::into))
+                    .collect::<Result<Vec<usize>>>()?;
+                if steps.is_empty() {
+                    bail!("--concurrency-sweep needs at least one step (e.g. 1,2,4,8)");
+                }
+                sweep = Some(steps);
+            }
             other => bail!("unknown bench flag '{other}'"),
         }
     }
 
-    // Echo mode: an in-process no-op target, so the harness itself can be
+    // Echo mode: an in-process target, so the harness itself can be
     // exercised (CI smoke, `make bench`) with no artifacts and no device.
+    // With `--echo-queue-cap` the target grows a real admission gate — the
+    // scheduler's `admit` rule over an in-flight counter, typed
+    // `server.overloaded` sheds with `Retry-After`, shed counters, and a
+    // `/v1/metrics` endpoint — so the overload loop (bench error-code
+    // accounting + Prometheus shed series) smokes end to end without
+    // artifacts.
     let echo_server = if echo {
-        let handle = Server::spawn(
-            "127.0.0.1:0",
-            cfg.connections.max(2),
-            Arc::new(|req: &flexserve::http::Request| {
-                Response::json(
-                    200,
-                    &json::obj([
-                        ("ok", Value::from(true)),
-                        ("body_len", Value::from(req.body.len())),
-                    ]),
-                )
-            }),
-        )?;
+        let max_conns = sweep
+            .as_ref()
+            .map(|s| s.iter().copied().max().unwrap_or(1))
+            .unwrap_or(cfg.connections);
+        let handle = spawn_echo_target(max_conns.max(2), echo_queue_cap, echo_delay_us)?;
         addr = handle.addr.to_string();
         Some(handle)
     } else {
@@ -341,31 +372,112 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     };
     cfg.addr = addr.parse().with_context(|| format!("bad --addr '{addr}'"))?;
 
-    eprintln!(
-        "bench: {} connections → {}{} [{}] ({})",
-        cfg.connections,
-        cfg.addr,
-        cfg.effective_path(),
-        cfg.protocol.as_str(),
-        match cfg.iters {
-            Some(n) => format!("{n} iters/connection"),
-            None => format!("{:.1}s", cfg.duration_secs),
-        },
-    );
-    let report = load::run(&cfg)?;
-    let stages = if echo {
-        None
-    } else {
-        load::fetch_stage_breakdown(cfg.addr)
+    let steps: Vec<usize> = sweep.clone().unwrap_or_else(|| vec![cfg.connections]);
+    let mut records: Vec<Value> = Vec::with_capacity(steps.len());
+    for step in &steps {
+        let mut step_cfg = cfg.clone();
+        step_cfg.connections = *step;
+        eprintln!(
+            "bench: {} connections → {}{} [{}] ({})",
+            step_cfg.connections,
+            step_cfg.addr,
+            step_cfg.effective_path(),
+            step_cfg.protocol.as_str(),
+            match step_cfg.iters {
+                Some(n) => format!("{n} iters/connection"),
+                None => format!("{:.1}s", step_cfg.duration_secs),
+            },
+        );
+        let report = load::run(&step_cfg)?;
+        let stages = if echo {
+            None
+        } else {
+            load::fetch_stage_breakdown(step_cfg.addr)
+        };
+        records.push(load::report_json(&step_cfg, &report, stages.as_ref()));
+        println!("{}", load::summary(&report));
+    }
+    // Single runs keep the flat BENCH_serve.json document; a sweep wraps
+    // one record per step.
+    let doc = match (sweep.is_some(), records) {
+        (false, mut one) => one.pop().expect("one record"),
+        (true, many) => json::obj([
+            ("bench", Value::from("flexserve-serve-sweep")),
+            ("sweep", Value::Arr(many)),
+        ]),
     };
-    let doc = load::report_json(&cfg, &report, stages.as_ref());
     std::fs::write(&out, json::to_string_pretty(&doc)).with_context(|| format!("writing {out}"))?;
-    println!("{}", load::summary(&report));
     println!("report: {out}");
+
     if let Some(h) = echo_server {
+        // Surface the gate's metrics for the CI overload smoke (greppable
+        // shed counters in the standard exposition).
+        if echo_queue_cap > 0 {
+            let mut c = Client::connect(h.addr)?;
+            let resp = c.get("/v1/metrics?format=prometheus")?;
+            print!("{}", String::from_utf8_lossy(&resp.body));
+        }
         h.stop();
     }
     Ok(())
+}
+
+/// The `--echo` target: a no-op predict endpoint, optionally behind a
+/// bounded admission gate (`queue_cap` > 0) with an artificial per-request
+/// service delay so concurrency can actually exceed capacity. Exposes
+/// `GET /v1/metrics` (text/prometheus/json) over the same registry the
+/// real server uses, with the same `sched_shed_overload_total` counter
+/// and `sched_queue_depth` gauge names.
+fn spawn_echo_target(
+    http_workers: usize,
+    queue_cap: usize,
+    delay_us: u64,
+) -> Result<flexserve::http::ServerHandle> {
+    use flexserve::coordinator::{sched, ApiError, Metrics};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let metrics = Arc::new(Metrics::new());
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    Server::spawn(
+        "127.0.0.1:0",
+        http_workers,
+        Arc::new(move |req: &flexserve::http::Request| {
+            if req.method == "GET" && req.path.ends_with("/metrics") {
+                return match req.query_param("format") {
+                    Some("prometheus") => Response::text(200, &metrics.render_prometheus()),
+                    Some("json") => Response::json(200, &metrics.render_json()),
+                    _ => Response::text(200, &metrics.render_text()),
+                };
+            }
+            if queue_cap > 0 {
+                let depth = in_flight.fetch_add(1, Ordering::SeqCst);
+                if !sched::admit(depth, queue_cap) {
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    metrics.inc("sched_shed_overload_total");
+                    return ApiError::overloaded(format!(
+                        "echo gate is full ({queue_cap} in flight); retry later"
+                    ))
+                    .to_response();
+                }
+                metrics.set_gauge("sched_queue_depth", (depth + 1) as u64);
+            }
+            if delay_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(delay_us));
+            }
+            let resp = Response::json(
+                200,
+                &json::obj([
+                    ("ok", Value::from(true)),
+                    ("body_len", Value::from(req.body.len())),
+                ]),
+            );
+            if queue_cap > 0 {
+                let now = in_flight.fetch_sub(1, Ordering::SeqCst) - 1;
+                metrics.set_gauge("sched_queue_depth", now as u64);
+            }
+            resp
+        }),
+    )
 }
 
 /// `load` / `unload` / `ensemble` — the `/v1` control plane from the CLI,

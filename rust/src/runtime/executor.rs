@@ -12,6 +12,7 @@ use super::tensor::{self, TensorView};
 use crate::util::Stopwatch;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -89,20 +90,16 @@ pub struct ExecutorOptions {
 pub struct ExecutorHandle {
     tx: mpsc::Sender<Msg>,
     manifest: Arc<Manifest>,
+    /// Rows submitted to this device but not yet executed — the load
+    /// signal behind the pool's least-loaded dispatch. Incremented at
+    /// submit, decremented by the device thread when the job finishes.
+    in_flight_rows: Arc<AtomicUsize>,
 }
 
 impl ExecutorHandle {
     /// Blocking single-model inference.
     pub fn infer(&self, req: ExecRequest) -> Result<ExecResponse> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Job(Job {
-                req,
-                enqueued: Stopwatch::start(),
-                reply: reply_tx,
-            }))
-            .map_err(|_| anyhow!("executor thread is gone"))?;
-        reply_rx
+        self.infer_async(req)?
             .recv()
             .map_err(|_| anyhow!("executor dropped the job"))?
     }
@@ -111,20 +108,43 @@ impl ExecutorHandle {
     /// ensemble overlap N model submissions before collecting.
     pub fn infer_async(&self, req: ExecRequest) -> Result<mpsc::Receiver<Result<ExecResponse>>> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
+        // Count the rows BEFORE the send so concurrent least-loaded picks
+        // already see this job; the device thread pairs the decrement.
+        let rows = req.batch;
+        self.in_flight_rows.fetch_add(rows, Ordering::Relaxed);
+        if self
+            .tx
             .send(Msg::Job(Job {
                 req,
                 enqueued: Stopwatch::start(),
                 reply: reply_tx,
             }))
-            .map_err(|_| anyhow!("executor thread is gone"))?;
+            .is_err()
+        {
+            self.in_flight_rows.fetch_sub(rows, Ordering::Relaxed);
+            return Err(anyhow!("executor thread is gone"));
+        }
         Ok(reply_rx)
+    }
+
+    /// Rows currently submitted-but-unfinished on this device.
+    pub fn in_flight_rows(&self) -> usize {
+        self.in_flight_rows.load(Ordering::Relaxed)
     }
 
     /// Compile `model`'s artifacts into this device at runtime (subject to
     /// the executor's bucket filter and SHA verification options).
     /// `Ok(true)` = newly compiled, `Ok(false)` = already fully loaded.
     pub fn load_model(&self, model: &str) -> Result<bool> {
+        self.load_model_async(model)?
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the load request"))?
+    }
+
+    /// Submit a runtime load without waiting; returns the reply receiver.
+    /// The pool broadcasts loads this way so W workers compile
+    /// concurrently (boot-parity) instead of W× sequentially.
+    pub fn load_model_async(&self, model: &str) -> Result<mpsc::Receiver<Result<bool>>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Msg::Load {
@@ -132,9 +152,7 @@ impl ExecutorHandle {
                 reply: reply_tx,
             })
             .map_err(|_| anyhow!("executor thread is gone"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("executor dropped the load request"))?
+        Ok(reply_rx)
     }
 
     /// Evict every executable of `model` from this device, freeing its
@@ -170,21 +188,32 @@ impl Executor {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let m = Arc::clone(&manifest);
+        let in_flight_rows = Arc::new(AtomicUsize::new(0));
+        let in_flight2 = Arc::clone(&in_flight_rows);
         let thread = thread::Builder::new()
             .name("flexserve-device".into())
-            .spawn(move || device_thread(m, opts, rx, ready_tx))
+            .spawn(move || device_thread(m, opts, rx, ready_tx, in_flight2))
             .context("spawning device executor thread")?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("device thread died during startup"))??;
         Ok(Executor {
-            handle: ExecutorHandle { tx, manifest },
+            handle: ExecutorHandle {
+                tx,
+                manifest,
+                in_flight_rows,
+            },
             thread: Some(thread),
         })
     }
 
     pub fn handle(&self) -> ExecutorHandle {
         self.handle.clone()
+    }
+
+    /// Rows currently submitted-but-unfinished on this device.
+    pub fn in_flight_rows(&self) -> usize {
+        self.handle.in_flight_rows()
     }
 }
 
@@ -211,6 +240,7 @@ fn device_thread(
     opts: ExecutorOptions,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
+    in_flight_rows: Arc<AtomicUsize>,
 ) {
     let setup = (|| -> Result<(xla::PjRtClient, ExecutableMap)> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -252,6 +282,9 @@ fn device_thread(
                         queue_micros,
                         exec_micros,
                     });
+                // Pair the submit-side increment whether the job succeeded
+                // or not — the rows are no longer ahead of anyone.
+                in_flight_rows.fetch_sub(job.req.batch, Ordering::Relaxed);
                 let _ = job.reply.send(result); // receiver may have timed out; fine
             }
             Msg::Load { model, reply } => {

@@ -1,12 +1,19 @@
-//! Executor pool: W device executors, round-robin dispatch — the paper's
-//! "scaling horizontally to multiple CPU cores … through the use of
-//! Gunicorn workers" (§2.2), with each executor playing one Gunicorn worker
-//! that has the full ensemble resident.
+//! Executor pool: W device executors — the paper's "scaling horizontally
+//! to multiple CPU cores … through the use of Gunicorn workers" (§2.2),
+//! with each executor playing one Gunicorn worker that has the full
+//! ensemble resident.
+//!
+//! Dispatch is **least-loaded**: every worker tracks its in-flight row
+//! count and [`ExecutorPool::least_loaded`] picks the emptiest one (ties
+//! rotate), so one slow worker no longer backs up every Nth request the
+//! way blind round-robin did. Round-robin ([`ExecutorPool::handle`])
+//! remains for callers that want deterministic spread.
 //!
 //! The pool is also the runtime model-lifecycle authority for the `/v1`
 //! control plane: `load_model`/`unload_model` broadcast to every worker
-//! (each owns its own PJRT client and executables) and the pool tracks
-//! which models are currently resident.
+//! (each owns its own PJRT client and executables; loads compile on all
+//! workers concurrently) and the pool tracks which models are currently
+//! resident.
 
 use super::executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, ExecutorOptions};
 use super::manifest::Manifest;
@@ -58,6 +65,19 @@ impl ExecutorPool {
         self.executors[i].handle()
     }
 
+    /// Pick the worker with the fewest in-flight rows (ties rotate via the
+    /// round-robin cursor so an idle pool still spreads work).
+    pub fn least_loaded(&self) -> ExecutorHandle {
+        let loads: Vec<usize> = self.executors.iter().map(Executor::in_flight_rows).collect();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % self.executors.len();
+        self.executors[pick_least_loaded(&loads, start)].handle()
+    }
+
+    /// Per-worker in-flight row counts (diagnostics / tests).
+    pub fn in_flight_rows(&self) -> Vec<usize> {
+        self.executors.iter().map(Executor::in_flight_rows).collect()
+    }
+
     /// All worker handles (for per-worker dispatch strategies).
     pub fn handles(&self) -> Vec<ExecutorHandle> {
         self.executors.iter().map(|e| e.handle()).collect()
@@ -89,23 +109,39 @@ impl ExecutorPool {
     }
 
     /// Compile `name` on every worker (idempotent). `Ok(true)` = at least
-    /// one worker newly compiled it. On a mid-broadcast failure, workers
-    /// that already compiled the model roll back so the pool stays uniform.
+    /// one worker newly compiled it. The broadcast is concurrent — every
+    /// worker compiles at once, so a runtime load costs one compile of
+    /// wall-clock instead of W (boot-parity). On any failure the workers
+    /// that did compile roll back so the pool stays uniform.
     pub fn load_model(&self, name: &str) -> Result<bool> {
         if self.manifest.model(name).is_none() {
             bail!("unknown model '{name}'");
         }
+        // Fan the Load message out to every device thread first…
+        let receivers = self
+            .executors
+            .iter()
+            .map(|e| e.handle().load_model_async(name))
+            .collect::<Result<Vec<_>>>()?;
+        // …then collect ALL outcomes (never bail mid-collect: rollback
+        // must wait until every worker has finished compiling or failing).
         let mut newly = false;
-        for (i, e) in self.executors.iter().enumerate() {
-            match e.handle().load_model(name) {
-                Ok(n) => newly |= n,
-                Err(err) => {
-                    for done in &self.executors[..=i] {
-                        let _ = done.handle().unload_model(name);
-                    }
-                    return Err(err.context(format!("loading '{name}' onto worker {i}")));
+        let mut failure: Option<(usize, anyhow::Error)> = None;
+        for (i, rx) in receivers.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(Ok(n)) => newly |= n,
+                Ok(Err(err)) => failure = failure.or(Some((i, err))),
+                Err(_) => {
+                    failure =
+                        failure.or(Some((i, anyhow::anyhow!("executor dropped the load request"))))
                 }
             }
+        }
+        if let Some((i, err)) = failure {
+            for e in &self.executors {
+                let _ = e.handle().unload_model(name);
+            }
+            return Err(err.context(format!("loading '{name}' onto worker {i}")));
         }
         self.loaded.write().unwrap().insert(name.to_string());
         Ok(newly)
@@ -123,8 +159,50 @@ impl ExecutorPool {
     }
 }
 
+/// Pure least-loaded selection: the index with the minimum load, scanning
+/// from `start` so equal loads rotate instead of pinning worker 0.
+pub fn pick_least_loaded(loads: &[usize], start: usize) -> usize {
+    debug_assert!(!loads.is_empty());
+    let n = loads.len();
+    let mut best = start % n;
+    for off in 1..n {
+        let i = (start + off) % n;
+        if loads[i] < loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     // Device-dependent tests live in rust/tests/runtime_integration.rs and
-    // rust/tests/server_integration.rs (runtime load/unload lifecycle).
+    // rust/tests/server_integration.rs (runtime load/unload lifecycle +
+    // parallel-broadcast rollback); the selection rule is pure:
+    use super::*;
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        assert_eq!(pick_least_loaded(&[5, 0, 3], 0), 1);
+        assert_eq!(pick_least_loaded(&[0, 0, 7], 2), 0); // skips the busy one
+        assert_eq!(pick_least_loaded(&[9], 4), 0);
+    }
+
+    #[test]
+    fn ties_rotate_with_start() {
+        // All-equal loads: the pick follows the rotating cursor.
+        assert_eq!(pick_least_loaded(&[2, 2, 2], 0), 0);
+        assert_eq!(pick_least_loaded(&[2, 2, 2], 1), 1);
+        assert_eq!(pick_least_loaded(&[2, 2, 2], 5), 2);
+    }
+
+    #[test]
+    fn one_slow_worker_never_wins() {
+        // The round-robin failure mode this replaces: worker 1 is stuck
+        // with a deep backlog, yet round-robin would still hand it every
+        // Nth request. Least-loaded never does.
+        for start in 0..8 {
+            assert_ne!(pick_least_loaded(&[0, 1000, 0, 0], start), 1);
+        }
+    }
 }

@@ -58,13 +58,13 @@ impl DType {
 ///
 /// This is the zero-copy carrier of the predict hot path: the HTTP layer
 /// parses the request tensor once, wraps it, and every downstream consumer
-/// — the batcher, `Ensemble::forward`'s per-(model, chunk) fan-out, the
+/// — the scheduler, `Ensemble::forward`'s per-(model, chunk) fan-out, the
 /// device executors — holds a `TensorView` into the *same* buffer. Cloning
 /// and [`TensorView::slice`] are refcount bumps, never float copies.
 ///
 /// A view also carries its element type and (optionally) its logical
 /// shape, so typed, shaped protocol tensors flow through
-/// `ExecRequest`/`Ensemble::forward`/the batcher unchanged. Storage is
+/// `ExecRequest`/`Ensemble::forward`/the scheduler unchanged. Storage is
 /// f32 today — non-f32 wire inputs are converted at the protocol boundary
 /// — so `dtype` is [`DType::F32`] everywhere past the extractors.
 #[derive(Debug, Clone)]

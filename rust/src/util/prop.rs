@@ -1,6 +1,6 @@
 //! Minimal property-testing harness (substrate — `proptest` unavailable
 //! offline). Seeded generation + bounded shrinking for the coordinator
-//! invariants (batcher, policy, json round-trips).
+//! invariants (scheduler, policy, json round-trips).
 //!
 //! Usage (`no_run`: doctest executables don't inherit the rpath to
 //! libxla_extension's libstdc++ in this offline image — compile-checked

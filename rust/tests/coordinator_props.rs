@@ -204,6 +204,14 @@ fn gen_predict_body(g: &mut Gen) -> String {
     if g.bool(0.15) {
         body.push_str(",\"junk\":{\"nested\":[1,{\"k\":null}]}");
     }
+    if g.bool(0.2) {
+        // Sometimes valid, sometimes the typed zero/junk rejections —
+        // both paths must agree either way.
+        body.push_str(&format!(
+            ",\"timeout_ms\":{}",
+            g.choose(&["250", "1", "0", "-5", "\"fast\"", "2.5"])
+        ));
+    }
     if g.bool(0.1) {
         body.push_str(",\"data\":[1,2]"); // duplicate member
     }
@@ -243,6 +251,7 @@ fn prop_fast_parse_matches_general_parse() {
                 assert_eq!(a.normalized, b.normalized, "{body:?}");
                 assert_eq!(a.models, b.models, "{body:?}");
                 assert_eq!(a.detail, b.detail, "{body:?}");
+                assert_eq!(a.timeout, b.timeout, "{body:?}");
             }
             (Err(a), Err(b)) => assert_eq!(
                 (a.status, a.code),

@@ -5,8 +5,8 @@
 //! Requires `artifacts/` (run `make artifacts`); tests panic with a clear
 //! message otherwise.
 
-use flexserve::runtime::{ExecRequest, Executor, Manifest};
 use flexserve::runtime::executor::ExecutorOptions;
+use flexserve::runtime::{ExecRequest, Executor, ExecutorPool, Manifest};
 use flexserve::runtime::tensor::argmax_rows;
 use flexserve::util::Prng;
 use std::path::PathBuf;
@@ -293,4 +293,75 @@ fn runtime_load_unload_roundtrip() {
     assert!(h.infer(probe()).is_err());
     // Unknown models are rejected.
     assert!(h.load_model("resnet152").is_err());
+}
+
+#[test]
+fn pool_parallel_load_broadcast_and_least_loaded_dispatch() {
+    // Pool-level lifecycle: a runtime load broadcasts to BOTH workers
+    // concurrently (one compile of wall-clock, not W) and the pool stays
+    // uniform; dispatch accounting tracks in-flight rows per worker.
+    require_artifacts!();
+    let m = manifest();
+    let pool = ExecutorPool::spawn(
+        Arc::clone(&m),
+        ExecutorOptions {
+            models: Some(vec!["mlp".into()]),
+            ..Default::default()
+        },
+        2,
+    )
+    .unwrap();
+    assert_eq!(pool.workers(), 2);
+    assert!(!pool.is_loaded("cnn_s"));
+
+    // Concurrent broadcast lands on every worker.
+    assert!(pool.load_model("cnn_s").unwrap(), "first load compiles");
+    assert!(!pool.load_model("cnn_s").unwrap(), "second load is a no-op");
+    assert!(pool.is_loaded("cnn_s"));
+    for h in pool.handles() {
+        let r = h
+            .infer(ExecRequest {
+                model: "cnn_s".into(),
+                batch: 1,
+                data: noise_batch(&m, 1, 3).into(),
+            })
+            .expect("loaded on this worker");
+        assert_eq!(r.logits.len(), m.num_classes());
+    }
+    // Unknown models fail without touching residency.
+    assert!(pool.load_model("resnet152").is_err());
+
+    // In-flight accounting: idle pool reads zero everywhere, and every
+    // submit-side increment pairs with the device thread's decrement once
+    // the jobs drain (the steering rule itself is pinned device-free by
+    // `pick_least_loaded`'s unit tests).
+    assert_eq!(pool.in_flight_rows(), vec![0, 0]);
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            pool.least_loaded()
+                .infer_async(ExecRequest {
+                    model: "mlp".into(),
+                    batch: 4,
+                    data: noise_batch(&m, 4, 40 + i).into(),
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(pool.in_flight_rows(), vec![0, 0], "accounting pairs up");
+
+    // Unload evicts from every worker.
+    assert!(pool.unload_model("cnn_s").unwrap());
+    assert!(!pool.is_loaded("cnn_s"));
+    for h in pool.handles() {
+        assert!(h
+            .infer(ExecRequest {
+                model: "cnn_s".into(),
+                batch: 1,
+                data: noise_batch(&m, 1, 5).into(),
+            })
+            .is_err());
+    }
 }

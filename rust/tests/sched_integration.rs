@@ -1,0 +1,274 @@
+//! Overload / backpressure integration: a live server with a TINY queue
+//! cap and a long fixed window, so admission control, deadlines, and
+//! drain-on-shutdown are deterministic. Device-backed (self-skips without
+//! artifacts); tests share one server and serialize on a guard because
+//! each one manipulates the global queue state.
+
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, Metrics, SchedConfig, Scheduler, ServerState, TargetKey};
+use flexserve::http::{Client, ServerHandle};
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn has_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !has_artifacts() {
+            eprintln!("skipping: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+struct Stack {
+    handle: ServerHandle,
+    state: Arc<ServerState>,
+}
+
+static STACK: OnceLock<Stack> = OnceLock::new();
+/// Every test here fills/drains the shared queues — strictly one at a time.
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Long fixed window + 2-slot queue: requests stay queued long enough to
+/// observe admission decisions deterministically.
+const WINDOW: Duration = Duration::from_millis(800);
+
+fn stack() -> &'static Stack {
+    STACK.get_or_init(|| {
+        let mut config = ServeConfig::default();
+        config.addr = "127.0.0.1:0".into();
+        config.artifacts = artifact_dir();
+        config.http_workers = 8;
+        config.device_workers = 1;
+        config.warmup = false;
+        config.models = Some(vec!["mlp".to_string()]); // one model: fast compile
+        config.scheduler = Some(SchedConfig {
+            max_batch: 32,
+            max_delay: WINDOW,
+            queue_cap: 2,
+            deadline: None,
+            adaptive: false,
+        });
+        let (handle, state) = serve(&config).expect("overload server starts");
+        Stack { handle, state }
+    })
+}
+
+fn predict_body(batch: usize, seed: u64) -> Value {
+    let mut rng = Prng::new(seed);
+    let (data, _) = workload::make_batch(&mut rng, batch);
+    json::obj([
+        ("data", json::f32_array_raw(data.iter().copied())),
+        ("batch", Value::from(batch)),
+    ])
+}
+
+fn error_code(v: &Value) -> &str {
+    v.path(&["error", "code"]).and_then(Value::as_str).unwrap_or("")
+}
+
+/// Park two requests in the ensemble queue (fills the 2-slot cap) and run
+/// `probe` while they wait; both parked requests must still succeed.
+fn with_full_queue(probe: impl FnOnce()) {
+    let addr = stack().handle.addr;
+    let occupants: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.post_json("/v1/predict", &predict_body(1, 10 + i)).unwrap()
+            })
+        })
+        .collect();
+    // Let both occupants enqueue (the window holds them for 800 ms).
+    std::thread::sleep(Duration::from_millis(100));
+    probe();
+    for t in occupants {
+        let r = t.join().unwrap();
+        assert_eq!(
+            r.status,
+            200,
+            "queued request must drain OK: {}",
+            String::from_utf8_lossy(&r.body)
+        );
+    }
+}
+
+#[test]
+fn full_queue_sheds_429_with_retry_after_on_both_protocols() {
+    require_artifacts!();
+    let _guard = GUARD.lock().unwrap();
+    let st = stack();
+    with_full_queue(|| {
+        // /v1: typed envelope + Retry-After.
+        let mut c = Client::connect(st.handle.addr).unwrap();
+        let r = c.post_json("/v1/predict", &predict_body(1, 77)).unwrap();
+        assert_eq!(r.status, 429, "{}", String::from_utf8_lossy(&r.body));
+        assert_eq!(error_code(&r.json_body().unwrap()), "server.overloaded");
+        assert_eq!(r.header("retry-after"), Some("1"));
+
+        // /v2 (OIP): one-string error leading with the same code, same
+        // header, same queue (the `_ensemble` route shares TargetKey::Ensemble).
+        let frame = vec![0.5f32; workload::IMG * workload::IMG];
+        let body = flexserve::http::client::v2_infer_body(
+            &[1, workload::IMG, workload::IMG, 1],
+            &frame,
+        );
+        let r = c
+            .post_json("/v2/models/_ensemble/infer", &body)
+            .unwrap();
+        assert_eq!(r.status, 429, "{}", String::from_utf8_lossy(&r.body));
+        let msg = r.json_body().unwrap();
+        assert!(
+            msg.get("error").unwrap().as_str().unwrap().starts_with("server.overloaded:"),
+            "{msg:?}"
+        );
+        assert_eq!(r.header("retry-after"), Some("1"));
+
+        // Bogus subset names fail fast with their own taxonomy (404) —
+        // they must NOT mint fresh per-subset queues that sidestep the
+        // admission bound, nor wait out the batching window.
+        let mut bogus = predict_body(1, 78);
+        if let Value::Obj(m) = &mut bogus {
+            m.push(("models".into(), Value::Arr(vec![Value::from("bogus")])));
+        }
+        let r = c.post_json("/v1/predict", &bogus).unwrap();
+        assert_eq!(r.status, 404, "{}", String::from_utf8_lossy(&r.body));
+        assert_eq!(error_code(&r.json_body().unwrap()), "model.unknown");
+
+        // Duplicate names in a subset are a typed 422 before enqueue —
+        // `[mlp,mlp]`, `[mlp,mlp,mlp]`, … are distinct spellings that
+        // would each mint their own queue under the admission cap.
+        let mut dup = predict_body(1, 79);
+        if let Value::Obj(m) = &mut dup {
+            m.push((
+                "models".into(),
+                Value::Arr(vec![Value::from("mlp"), Value::from("mlp")]),
+            ));
+        }
+        let r = c.post_json("/v1/predict", &dup).unwrap();
+        assert_eq!(r.status, 422, "{}", String::from_utf8_lossy(&r.body));
+        assert_eq!(error_code(&r.json_body().unwrap()), "bad_input.bad_value");
+    });
+
+    // The sheds surface in both metrics expositions.
+    assert!(st.state.metrics.counter("sched_shed_overload_total") >= 2);
+    let mut c = Client::connect(st.handle.addr).unwrap();
+    let prom = c.get("/v1/metrics?format=prometheus").unwrap();
+    let text = String::from_utf8(prom.body.clone()).unwrap();
+    assert!(text.contains("flexserve_sched_shed_overload_total"), "{text}");
+    assert!(text.contains("# TYPE flexserve_sched_queue_depth gauge"), "{text}");
+    assert!(text.contains("flexserve_sched_window_us"), "{text}");
+    let legacy = c.get("/v1/metrics").unwrap();
+    let text = String::from_utf8(legacy.body.clone()).unwrap();
+    assert!(text.contains("flexserve_sched_shed_overload_total"), "{text}");
+    assert!(text.contains("flexserve_sched_queue_depth"), "{text}");
+}
+
+#[test]
+fn expired_in_queue_request_sheds_504() {
+    require_artifacts!();
+    let _guard = GUARD.lock().unwrap();
+    let st = stack();
+    let addr = st.handle.addr;
+    let before = st.state.metrics.counter("sched_shed_deadline_total");
+
+    // Occupant opens the 800 ms window; the probe's 1 ms budget expires
+    // while it queues behind it.
+    let occupant = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.post_json("/v1/predict", &predict_body(1, 31)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut c = Client::connect(addr).unwrap();
+    let mut body = predict_body(1, 32);
+    if let Value::Obj(m) = &mut body {
+        m.push(("timeout_ms".into(), Value::from(1u64)));
+    }
+    let r = c.post_json("/v1/predict", &body).unwrap();
+    assert_eq!(r.status, 504, "{}", String::from_utf8_lossy(&r.body));
+    assert_eq!(error_code(&r.json_body().unwrap()), "server.deadline_exceeded");
+
+    assert_eq!(occupant.join().unwrap().status, 200);
+    assert!(st.state.metrics.counter("sched_shed_deadline_total") > before);
+}
+
+#[test]
+fn legacy_alias_flattens_shed_status_but_keeps_code_and_hint() {
+    require_artifacts!();
+    let _guard = GUARD.lock().unwrap();
+    let st = stack();
+    with_full_queue(|| {
+        // The unversioned /predict flattens every status to the seed's 422
+        // but the taxonomy code and the Retry-After hint survive.
+        let mut c = Client::connect(st.handle.addr).unwrap();
+        let r = c.post_json("/predict", &predict_body(1, 99)).unwrap();
+        assert_eq!(r.status, 422, "{}", String::from_utf8_lossy(&r.body));
+        assert_eq!(error_code(&r.json_body().unwrap()), "server.overloaded");
+        assert_eq!(r.header("retry-after"), Some("1"));
+    });
+}
+
+#[test]
+fn shutdown_drains_queued_requests() {
+    require_artifacts!();
+    let _guard = GUARD.lock().unwrap();
+    // A scheduler of our own (over the same live ensemble) so dropping it
+    // doesn't disturb the shared server.
+    let ensemble = stack().state.ensemble.clone();
+    let sched = Arc::new(
+        Scheduler::spawn(
+            ensemble,
+            SchedConfig {
+                max_batch: 32,
+                max_delay: Duration::from_secs(5), // far longer than the test
+                adaptive: false,
+                ..Default::default()
+            },
+            Arc::new(Metrics::new()),
+        )
+        .unwrap(),
+    );
+    let s2 = Arc::clone(&sched);
+    let submitter = std::thread::spawn(move || {
+        let mut rng = Prng::new(5);
+        let (data, _) = workload::make_batch(&mut rng, 1);
+        s2.submit(TargetKey::Ensemble, data, 1, None)
+    });
+    // Wait until the request is parked inside the 5 s window…
+    for _ in 0..200 {
+        if sched.queue_depth() > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(sched.queue_depth() > 0, "request never enqueued");
+    // …then begin shutdown. Drain semantics: the queued request must be
+    // ANSWERED (flushed through the ensemble), not dropped — and long
+    // before its 5 s window would have fired.
+    let sw = std::time::Instant::now();
+    sched.drain();
+    let result = submitter.join().unwrap();
+    let (output, stats) = result.expect("drained request succeeds");
+    assert_eq!(output.batch, 1);
+    assert_eq!(stats.coalesced_requests, 1);
+    assert!(
+        sw.elapsed() < Duration::from_secs(4),
+        "drain waited out the window instead of flushing"
+    );
+    // Post-drain submissions are refused, not silently queued forever.
+    let mut rng = Prng::new(6);
+    let (data, _) = workload::make_batch(&mut rng, 1);
+    assert!(sched.submit(TargetKey::Ensemble, data, 1, None).is_err());
+}

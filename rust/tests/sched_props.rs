@@ -1,0 +1,200 @@
+//! Device-free tests over the scheduling plane's pure logic: the adaptive
+//! window, the admission rule, deadline shedding, and the dequeue-time
+//! wait capture. No artifacts, no PJRT — everything here runs in CI.
+
+use flexserve::coordinator::sched::policy::{adaptive_window_us, ewma_update, NO_ESTIMATE};
+use flexserve::coordinator::sched::queue::{admit, plan_take, Reply, TargetQueue};
+use flexserve::coordinator::sched::TargetKey;
+use flexserve::runtime::TensorView;
+use flexserve::util::prop::check;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn view(n: usize) -> TensorView {
+    TensorView::from(vec![0.0f32; n])
+}
+
+fn reply() -> (mpsc::Sender<Reply>, mpsc::Receiver<Reply>) {
+    mpsc::channel()
+}
+
+#[test]
+fn prop_admission_is_exact() {
+    check("admit iff depth < cap (cap 0 unbounded)", 400, |g| {
+        let depth = g.int(0, 100);
+        let cap = g.int(0, 100);
+        assert_eq!(admit(depth, cap), cap == 0 || depth < cap);
+    });
+}
+
+#[test]
+fn prop_adaptive_window_expected_company() {
+    // Whenever the window is non-zero, the EXPECTED next arrival (one
+    // EWMA gap away) lands inside it — a window that cannot attract
+    // company is pure latency and must collapse to pass-through.
+    check("non-zero window expects company", 400, |g| {
+        let max_delay = g.int(1, 10_000) as u64;
+        let gap = g.f64(0.0, 20_000.0);
+        let w = adaptive_window_us(gap, max_delay);
+        assert!(w <= max_delay);
+        if w > 0 {
+            assert!(w as f64 + 1.0 >= gap, "next arrival outside window: gap {gap} w {w}");
+            assert!(w as f64 + gap >= max_delay as f64 - 1.0, "gap {gap} w {w}");
+        } else {
+            // Zero window only when the expected arrival would miss it
+            // (gap ≥ max_delay/2, modulo truncation slack).
+            assert!(2.0 * gap >= max_delay as f64 - 2.0, "gap {gap} max {max_delay}");
+        }
+    });
+}
+
+#[test]
+fn prop_ewma_converges_toward_steady_rate() {
+    check("ewma converges", 100, |g| {
+        let steady = g.f64(10.0, 5_000.0);
+        let mut e = NO_ESTIMATE;
+        for _ in 0..60 {
+            e = ewma_update(e, steady);
+        }
+        assert!((e - steady).abs() < 1e-6 * steady.max(1.0), "e {e} steady {steady}");
+    });
+}
+
+#[test]
+fn fresh_queue_is_pass_through_then_widens_under_load() {
+    let mut q = TargetQueue::new();
+    // No arrivals yet: the window must be zero (no startup latency tax).
+    assert_eq!(q.window_us(2000, true), 0);
+    assert_eq!(q.ewma_gap_us(), NO_ESTIMATE);
+    // A burst of back-to-back arrivals produces a finite gap estimate and
+    // therefore a non-zero window against any generous-enough max_delay
+    // (thresholds stay loose — CI wall clocks hiccup).
+    for _ in 0..50 {
+        let (tx, _rx) = reply();
+        q.push(view(4), 1, None, tx);
+    }
+    let ewma = q.ewma_gap_us();
+    assert!(ewma.is_finite(), "burst must seed the estimate");
+    assert!(
+        q.window_us(10_000_000, true) > 0,
+        "tight burst (ewma {ewma}µs) must earn a window under a 10s cap"
+    );
+    assert!(q.window_us(2000, true) <= 2000, "window bounded by max_delay");
+    // The fixed-window spelling ignores the estimate entirely.
+    assert_eq!(q.window_us(2000, false), 2000);
+}
+
+#[test]
+fn wait_is_captured_at_dequeue_not_after_execution() {
+    // The seed's bug: BatchStats::wait_micros was read AFTER
+    // Ensemble::forward returned, so reported queue wait included device
+    // execution. Pin the fix: the wait is frozen AT dequeue — it can
+    // never exceed the wall clock measured right after `take`, no matter
+    // how long the "device forward" takes afterwards.
+    let enqueue_clock = flexserve::util::Stopwatch::start();
+    let mut q = TargetQueue::new();
+    let (tx, _rx) = reply();
+    q.push(view(4), 1, None, tx);
+    std::thread::sleep(Duration::from_millis(20));
+    let flush = q.take(32);
+    let upper = enqueue_clock.elapsed_micros(); // wall clock at dequeue
+    assert_eq!(flush.items.len(), 1);
+    let wait = flush.items[0].wait_us;
+    assert!(wait >= 15_000, "queued ~20ms, saw {wait}µs");
+    std::thread::sleep(Duration::from_millis(80)); // the "device forward"
+    assert!(
+        flush.items[0].wait_us == wait && wait <= upper,
+        "wait {}µs inflated past the dequeue-time wall clock {upper}µs",
+        flush.items[0].wait_us
+    );
+}
+
+#[test]
+fn take_respects_plan_take_prefix() {
+    let mut q = TargetQueue::new();
+    for batch in [16usize, 16, 16] {
+        let (tx, _rx) = reply();
+        q.push(view(batch * 4), batch, None, tx);
+    }
+    let flush = q.take(32);
+    assert_eq!(flush.items.len(), 2);
+    assert_eq!(flush.rows, 32);
+    assert_eq!(q.len(), 1, "third request stays queued");
+    assert_eq!(plan_take(&[16, 16, 16], 32), 2, "same rule, same answer");
+}
+
+#[test]
+fn expired_requests_shed_and_fresh_ones_survive() {
+    let mut q = TargetQueue::new();
+    let (tx_dead, rx_dead) = reply();
+    let (tx_live, _rx_live) = reply();
+    q.push(view(4), 1, Some(Duration::from_millis(1)), tx_dead);
+    q.push(view(4), 1, Some(Duration::from_secs(60)), tx_live);
+    std::thread::sleep(Duration::from_millis(10));
+    let shed = q.shed_expired();
+    assert_eq!(shed.len(), 1, "only the 1 ms deadline expired");
+    assert!(shed[0].waited_us >= 1_000);
+    assert_eq!(q.len(), 1, "the 60 s deadline survives");
+    assert_eq!(q.rows(), 1, "row accounting follows the shed");
+    // No-deadline requests never expire.
+    let mut q2 = TargetQueue::new();
+    let (tx, _rx) = reply();
+    q2.push(view(4), 1, None, tx);
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(q2.shed_expired().is_empty());
+    drop(rx_dead);
+}
+
+#[test]
+fn next_deadline_tracks_soonest_pending() {
+    let mut q = TargetQueue::new();
+    let (tx1, _r1) = reply();
+    let (tx2, _r2) = reply();
+    let (tx3, _r3) = reply();
+    q.push(view(4), 1, None, tx1);
+    assert!(q.next_deadline_us().is_none(), "no deadlines pending");
+    q.push(view(4), 1, Some(Duration::from_secs(60)), tx2);
+    q.push(view(4), 1, Some(Duration::from_millis(50)), tx3);
+    let d = q.next_deadline_us().expect("deadlines pending");
+    assert!(d <= 50_000, "soonest wins: {d}µs");
+    assert!(d > 0, "fresh 50ms deadline is not yet expired");
+}
+
+#[test]
+fn target_keys_separate_coalescing_domains() {
+    // Same-shape requests with different targets must never share a key
+    // (and therefore never a batch); same targets must.
+    let ens = TargetKey::Ensemble;
+    let single_a = TargetKey::Single("a".into());
+    let single_b = TargetKey::Single("b".into());
+    let sub_ab = TargetKey::Subset(vec!["a".into(), "b".into()]);
+    let sub_ba = TargetKey::Subset(vec!["b".into(), "a".into()]);
+    assert_eq!(ens, TargetKey::Ensemble);
+    assert_eq!(single_a, TargetKey::Single("a".into()));
+    assert_ne!(single_a, single_b);
+    assert_ne!(TargetKey::Subset(vec!["a".into()]), single_a);
+    // Order is part of the wire contract (response renders in request
+    // order), so differently-ordered subsets keep separate queues.
+    assert_ne!(sub_ab, sub_ba);
+}
+
+#[test]
+fn prop_queue_rows_track_pushes() {
+    check("queue rows == sum of pushed batches", 100, |g| {
+        let n = g.int(1, 12);
+        let sizes = g.vec_usize(n, 1, 9);
+        let mut q = TargetQueue::new();
+        let mut receivers = Vec::new();
+        for &b in &sizes {
+            let (tx, rx) = reply();
+            receivers.push(rx);
+            q.push(view(b), b, None, tx);
+        }
+        assert_eq!(q.rows(), sizes.iter().sum::<usize>());
+        assert_eq!(q.len(), sizes.len());
+        let cap = g.int(1, 40);
+        let flush = q.take(cap);
+        assert_eq!(flush.rows, sizes[..flush.items.len()].iter().sum::<usize>());
+        assert_eq!(q.len(), sizes.len() - flush.items.len());
+    });
+}

@@ -3,7 +3,7 @@
 
 use flexserve::baseline::{serve_baseline, BaselineConfig};
 use flexserve::config::ServeConfig;
-use flexserve::coordinator::{serve, BatcherConfig, ServerState};
+use flexserve::coordinator::{serve, SchedConfig, ServerState};
 use flexserve::http::{Client, Request, ServerHandle};
 use flexserve::json::{self, Value};
 use flexserve::util::Prng;
@@ -46,9 +46,13 @@ fn stack() -> &'static Stack {
         config.artifacts = artifact_dir();
         config.http_workers = 4;
         config.device_workers = 1;
-        config.batcher = Some(BatcherConfig {
+        // Fixed 5 ms window: the coalescing tests need deterministic
+        // batching behaviour, not the adaptive ramp.
+        config.scheduler = Some(SchedConfig {
             max_batch: 32,
-            max_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
+            adaptive: false,
+            ..Default::default()
         });
         let (handle, state) = serve(&config).expect("server starts");
         Stack { handle, state }
@@ -272,6 +276,58 @@ fn concurrent_requests_coalesce_in_batcher() {
     }
     let after = stack().state.metrics.counter("rows_total");
     assert_eq!(after - before, 8);
+}
+
+/// Fire `n` concurrent POSTs of `body` at `path` and return the max
+/// `detail.batching.coalesced_requests` observed across the 200s.
+fn max_coalesced(path: &'static str, body: &Value, n: usize) -> u64 {
+    let addr = stack().handle.addr;
+    let threads: Vec<_> = (0..n)
+        .map(|_| {
+            let body = body.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c.post_json(path, &body).unwrap();
+                assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+                r.json_body()
+                    .unwrap()
+                    .path(&["detail", "batching", "coalesced_requests"])
+                    .expect("batching stats present in detail")
+                    .as_u64()
+                    .unwrap()
+            })
+        })
+        .collect();
+    threads.into_iter().map(|t| t.join().unwrap()).max().unwrap()
+}
+
+#[test]
+fn single_model_requests_coalesce_in_their_own_queue() {
+    // The fast path rides the scheduler now: 16 concurrent same-model
+    // requests inside a 5 ms fixed window must share device batches —
+    // the seed bypassed batching entirely here.
+    require_artifacts!();
+    let mut body = predict_body(1, 321);
+    if let Value::Obj(m) = &mut body {
+        m.push(("detail".into(), Value::Bool(true)));
+    }
+    let max = max_coalesced("/v1/models/cnn_s/predict", &body, 16);
+    assert!(max > 1, "no single-model coalescing observed (max {max})");
+}
+
+#[test]
+fn subset_requests_coalesce_in_their_own_queue() {
+    require_artifacts!();
+    let mut body = predict_body(1, 654);
+    if let Value::Obj(m) = &mut body {
+        m.push((
+            "models".into(),
+            Value::Arr(vec![Value::from("cnn_s"), Value::from("mlp")]),
+        ));
+        m.push(("detail".into(), Value::Bool(true)));
+    }
+    let max = max_coalesced("/v1/predict", &body, 16);
+    assert!(max > 1, "no subset coalescing observed (max {max})");
 }
 
 #[test]
@@ -651,9 +707,11 @@ fn lifecycle_stack() -> &'static Stack {
         config.http_workers = 4;
         config.device_workers = 1;
         config.warmup = false;
-        config.batcher = Some(BatcherConfig {
+        config.scheduler = Some(SchedConfig {
             max_batch: 32,
             max_delay: Duration::from_millis(1),
+            adaptive: false,
+            ..Default::default()
         });
         let (handle, state) = serve(&config).expect("lifecycle server starts");
         Stack { handle, state }

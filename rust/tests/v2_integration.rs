@@ -6,7 +6,7 @@
 //! shared RwLock so read-only tests never observe a partial ensemble.
 
 use flexserve::config::ServeConfig;
-use flexserve::coordinator::{serve, BatcherConfig, ServerState};
+use flexserve::coordinator::{serve, SchedConfig, ServerState};
 use flexserve::http::client::v2_infer_body;
 use flexserve::http::{Client, Request, ServerHandle};
 use flexserve::json::{self, Value};
@@ -51,9 +51,11 @@ fn stack() -> &'static Stack {
         config.http_workers = 4;
         config.device_workers = 1;
         config.warmup = false;
-        config.batcher = Some(BatcherConfig {
+        config.scheduler = Some(SchedConfig {
             max_batch: 32,
             max_delay: Duration::from_millis(1),
+            adaptive: false,
+            ..Default::default()
         });
         let (handle, state) = serve(&config).expect("server starts");
         Stack { handle, state }
