@@ -128,6 +128,37 @@ fn main() -> anyhow::Result<()> {
         "control plane OK — unload/load/set_ensemble round-trip, active = {}",
         doc.get("active").map(|a| a.to_string()).unwrap_or_default()
     );
+
+    // Registry plane: rollout state, registry table, and the audit trail
+    // (the unload/load round-trip above must be on it) via the typed
+    // client helpers.
+    let roll = ctl.get_rollout(evicted)?;
+    anyhow::ensure!(
+        roll.get("mode").and_then(Value::as_str) == Some("pin")
+            && roll.get("active_version").and_then(Value::as_u64) == Some(1),
+        "unexpected rollout state: {roll}"
+    );
+    let table = ctl.models()?;
+    let n_models = table.get("models").and_then(Value::as_arr).map_or(0, |m| m.len());
+    anyhow::ensure!(n_models >= 1, "registry table is empty: {table}");
+    let audit = ctl.audit(20)?;
+    let events: Vec<&str> = audit
+        .get("audit")
+        .and_then(Value::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|e| e.get("event").and_then(Value::as_str))
+                .collect()
+        })
+        .unwrap_or_default();
+    anyhow::ensure!(
+        events.contains(&"load") && events.contains(&"unload"),
+        "audit trail missing the lifecycle round-trip: {events:?}"
+    );
+    println!(
+        "registry OK — {n_models} models pinned at v1, audit trail holds {} records",
+        events.len()
+    );
     handle.stop();
 
     let hist = latencies.lock().unwrap();

@@ -81,6 +81,12 @@ pub struct LoadConfig {
     pub protocol: Protocol,
     /// Request path override (`None` = the protocol's predict endpoint).
     pub path: Option<String>,
+    /// Record the served version distribution (`served_versions` in
+    /// `BENCH_serve.json`, keyed `model@version`) so canary splits show
+    /// up in perf trajectories. v1 bodies gain `"detail": true` (the
+    /// served version rides in `detail.models.*.version`), so leave this
+    /// off for pure-throughput runs.
+    pub record_versions: bool,
     pub seed: u64,
 }
 
@@ -103,6 +109,7 @@ impl Default for LoadConfig {
             batch_mix: vec![(1, 0.7), (8, 0.2), (32, 0.1)],
             protocol: Protocol::V1,
             path: None,
+            record_versions: false,
             seed: 0,
         }
     }
@@ -126,6 +133,9 @@ pub struct LoadReport {
     pub elapsed_secs: f64,
     pub hist: Histogram,
     pub reconnects: u64,
+    /// Served version distribution keyed `model@version` (populated only
+    /// with `record_versions`; canary splits become visible here).
+    pub served_versions: BTreeMap<String, u64>,
 }
 
 impl LoadReport {
@@ -156,6 +166,7 @@ struct ConnStats {
     error_codes: BTreeMap<String, u64>,
     hist: Histogram,
     reconnects: u64,
+    served_versions: BTreeMap<String, u64>,
     /// Wall-clock of this connection's measured loop (excludes connect
     /// and warmup).
     measured_secs: f64,
@@ -179,11 +190,33 @@ pub fn error_code_of(resp: &Response) -> Option<String> {
     }
 }
 
+/// Extract the served versions out of one 200 response into `counts`
+/// (keys `model@version`): v1 `detail.models.*.version`, v2 (OIP) the
+/// ensemble's `parameters.served_versions` custom field.
+fn count_served_versions(resp: &Response, counts: &mut BTreeMap<String, u64>) {
+    let Ok(v) = resp.json_body() else { return };
+    if let Some(models) = v.path(&["detail", "models"]).and_then(Value::as_obj) {
+        for (name, m) in models {
+            if let Some(ver) = m.get("version").and_then(Value::as_u64) {
+                *counts.entry(format!("{name}@{ver}")).or_insert(0) += 1;
+            }
+        }
+        return;
+    }
+    if let Some(s) = v.path(&["parameters", "served_versions"]).and_then(Value::as_str) {
+        for pair in s.split(',').filter(|p| !p.is_empty()) {
+            if let Some((name, ver)) = pair.rsplit_once(':') {
+                *counts.entry(format!("{name}@{ver}")).or_insert(0) += 1;
+            }
+        }
+    }
+}
+
 /// Render one protocol-correct predict body via the streaming float
 /// writer (no `Value` boxing on the client either): the paper-format
 /// `{"data": [...], "batch": N}` for v1, an Open-Inference-Protocol
 /// tensor document for v2.
-fn predict_body(protocol: Protocol, rng: &mut Prng, batch: usize) -> Vec<u8> {
+fn predict_body(protocol: Protocol, rng: &mut Prng, batch: usize, detail: bool) -> Vec<u8> {
     let (data, _) = workload::make_batch(rng, batch);
     let mut out = String::with_capacity(data.len() * 12 + 128);
     match protocol {
@@ -192,6 +225,9 @@ fn predict_body(protocol: Protocol, rng: &mut Prng, batch: usize) -> Vec<u8> {
             ser::write_f32_array(&mut out, data.iter().copied());
             out.push_str(",\"batch\":");
             out.push_str(&batch.to_string());
+            if detail {
+                out.push_str(",\"detail\":true");
+            }
             out.push('}');
         }
         Protocol::V2 => {
@@ -230,7 +266,7 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
                 .map(|_| {
                     build_request(
                         cfg.effective_path(),
-                        predict_body(cfg.protocol, &mut rng, b),
+                        predict_body(cfg.protocol, &mut rng, b, cfg.record_versions),
                     )
                 })
                 .collect();
@@ -270,6 +306,7 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
         error_codes: BTreeMap::new(),
         hist: Histogram::new(),
         reconnects: 0,
+        served_versions: BTreeMap::new(),
         measured_secs: 0.0,
     };
     let mut n = 0u64;
@@ -297,6 +334,8 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
             if let Some(code) = error_code_of(&resp) {
                 *stats.error_codes.entry(code).or_insert(0) += 1;
             }
+        } else if cfg.record_versions {
+            count_served_versions(&resp, &mut stats.served_versions);
         }
         n += 1;
     }
@@ -335,6 +374,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         elapsed_secs: 0.0,
         hist: Histogram::new(),
         reconnects: 0,
+        served_versions: BTreeMap::new(),
     };
     for r in results {
         let st = r?;
@@ -346,6 +386,9 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         }
         for (code, n) in st.error_codes {
             *report.error_codes.entry(code).or_insert(0) += n;
+        }
+        for (key, n) in st.served_versions {
+            *report.served_versions.entry(key).or_insert(0) += n;
         }
         report.reconnects += st.reconnects;
         report.hist.merge(&st.hist);
@@ -445,6 +488,18 @@ pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<
                     .error_codes
                     .iter()
                     .map(|(c, n)| (c.clone(), Value::from(*n)))
+                    .collect(),
+            ),
+        ),
+        // Served version distribution (canary splits in perf numbers);
+        // empty unless `--record-versions` asked responses to carry it.
+        (
+            "served_versions",
+            Value::Obj(
+                report
+                    .served_versions
+                    .iter()
+                    .map(|(k, n)| (k.clone(), Value::from(*n)))
                     .collect(),
             ),
         ),
@@ -570,7 +625,7 @@ mod tests {
     fn v2_protocol_renders_oip_bodies_and_records_protocol() {
         // Bodies are protocol-correct OIP tensor documents.
         let mut rng = crate::util::Prng::new(3);
-        let body = predict_body(Protocol::V2, &mut rng, 2);
+        let body = predict_body(Protocol::V2, &mut rng, 2, false);
         let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         let t = v.get("inputs").unwrap().at(0).unwrap();
         assert_eq!(t.get("name").unwrap().as_str(), Some("input"));
@@ -622,6 +677,65 @@ mod tests {
         assert_eq!(LoadConfig::default().protocol, Protocol::V1);
         assert_eq!(LoadConfig::default().effective_path(), "/v1/predict");
         assert!(Protocol::parse("v3").is_err());
+    }
+
+    #[test]
+    fn served_versions_parse_from_both_protocols() {
+        // v1 detail shape → model@version counts.
+        let resp = Response::json(
+            200,
+            &json::parse(
+                r#"{"model_mlp":["a"],
+                    "detail":{"models":{"mlp":{"version":2},"cnn":{"version":1}}}}"#,
+            )
+            .unwrap(),
+        );
+        let mut counts = BTreeMap::new();
+        count_served_versions(&resp, &mut counts);
+        assert_eq!(counts.get("mlp@2"), Some(&1));
+        assert_eq!(counts.get("cnn@1"), Some(&1));
+        // v2 OIP shape: the ensemble's served_versions custom parameter.
+        let resp = Response::json(
+            200,
+            &json::parse(
+                r#"{"model_name":"_ensemble",
+                    "parameters":{"served_versions":"mlp:2,cnn:1"}}"#,
+            )
+            .unwrap(),
+        );
+        count_served_versions(&resp, &mut counts);
+        assert_eq!(counts.get("mlp@2"), Some(&2));
+        assert_eq!(counts.get("cnn@1"), Some(&2));
+        // Responses with neither shape count nothing.
+        let resp = Response::json(200, &json::parse(r#"{"ok":true}"#).unwrap());
+        count_served_versions(&resp, &mut counts);
+        assert_eq!(counts.len(), 2);
+
+        // `record_versions` turns on v1 detail in the generated bodies.
+        let mut rng = crate::util::Prng::new(1);
+        let body = predict_body(Protocol::V1, &mut rng, 1, true);
+        assert!(std::str::from_utf8(&body).unwrap().contains("\"detail\":true"));
+        let body = predict_body(Protocol::V1, &mut rng, 1, false);
+        assert!(!std::str::from_utf8(&body).unwrap().contains("detail"));
+        // The report renders the distribution.
+        let cfg = LoadConfig { record_versions: true, ..Default::default() };
+        let mut report = LoadReport {
+            requests: 1,
+            rows: 1,
+            errors: 0,
+            status_counts: BTreeMap::new(),
+            error_codes: BTreeMap::new(),
+            elapsed_secs: 1.0,
+            hist: Histogram::new(),
+            reconnects: 0,
+            served_versions: counts,
+        };
+        report.served_versions.insert("mlp@2".into(), 5);
+        let doc = report_json(&cfg, &report, None);
+        assert_eq!(
+            doc.path(&["served_versions", "mlp@2"]).unwrap().as_u64(),
+            Some(5)
+        );
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::coordinator::SchedConfig;
 use crate::json::{self, Value};
+use crate::registry::RegistryConfig;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -28,6 +29,9 @@ pub struct ServeConfig {
     /// windows, admission control, deadlines (None = pass-through, the
     /// paper's base behaviour).
     pub scheduler: Option<SchedConfig>,
+    /// The model registry: durable audit trail + auto-rollback guardrail
+    /// defaults (`registry` JSON block; `--audit-log`, `--guardrail-*`).
+    pub registry: RegistryConfig,
     /// Emit one access-log line per request on stderr (router middleware).
     pub access_log: bool,
 }
@@ -43,6 +47,7 @@ impl Default for ServeConfig {
             warmup: true,
             models: None,
             scheduler: Some(SchedConfig::default()),
+            registry: RegistryConfig::default(),
             access_log: false,
         }
     }
@@ -127,6 +132,36 @@ impl ServeConfig {
                 }
                 _ => bail!("'{key}' must be bool, null, or object"),
             },
+            "registry" => {
+                if val.as_obj().is_none() {
+                    bail!("'registry' must be an object");
+                }
+                if let Some(p) = val.get("audit_log") {
+                    self.registry.audit_log = match p {
+                        Value::Null => None,
+                        _ => Some(PathBuf::from(req_str("registry.audit_log", p)?)),
+                    };
+                }
+                if let Some(r) = val.get("max_error_rate") {
+                    let rate = r
+                        .as_f64()
+                        .filter(|r| (0.0..=1.0).contains(r))
+                        .ok_or_else(|| anyhow!("registry.max_error_rate must be in 0..=1"))?;
+                    self.registry.guardrails.max_error_rate = rate;
+                }
+                if let Some(p) = val.get("max_p95_ms") {
+                    self.registry.guardrails.max_p95_us = p
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("registry.max_p95_ms must be an integer (0 = off)"))?
+                        * 1000;
+                }
+                if let Some(s) = val.get("min_samples") {
+                    self.registry.guardrails.min_samples = s
+                        .as_usize()
+                        .filter(|&s| s >= 1)
+                        .ok_or_else(|| anyhow!("registry.min_samples must be >= 1"))?;
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -189,6 +224,20 @@ impl ServeConfig {
                 "--no-verify" => self.verify_sha = false,
                 "--no-warmup" => self.warmup = false,
                 "--access-log" => self.access_log = true,
+                "--audit-log" => self.registry.audit_log = Some(PathBuf::from(take()?)),
+                "--guardrail-error-rate" => {
+                    let rate = take()?.parse::<f64>()?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        bail!("--guardrail-error-rate expects 0..=1 (got {rate})");
+                    }
+                    self.registry.guardrails.max_error_rate = rate;
+                }
+                "--guardrail-p95-ms" => {
+                    self.registry.guardrails.max_p95_us = take()?.parse::<u64>()? * 1000;
+                }
+                "--guardrail-min-samples" => {
+                    self.registry.guardrails.min_samples = take()?.parse::<usize>()?.max(1);
+                }
                 "--config" => {
                     let path = take()?;
                     let text = std::fs::read_to_string(&path)
@@ -334,6 +383,50 @@ mod tests {
     }
 
     #[test]
+    fn registry_block_and_flags_parse() {
+        let mut c = ServeConfig::default();
+        assert!(c.registry.audit_log.is_none(), "audit file is opt-in");
+        c.apply_json(
+            &json::parse(
+                r#"{"registry":{"audit_log":"/tmp/audit.jsonl","max_error_rate":0.25,
+                    "max_p95_ms":40,"min_samples":8}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            c.registry.audit_log.as_deref(),
+            Some(std::path::Path::new("/tmp/audit.jsonl"))
+        );
+        assert!((c.registry.guardrails.max_error_rate - 0.25).abs() < 1e-9);
+        assert_eq!(c.registry.guardrails.max_p95_us, 40_000);
+        assert_eq!(c.registry.guardrails.min_samples, 8);
+        // audit_log: null turns the file sink back off.
+        c.apply_json(&json::parse(r#"{"registry":{"audit_log":null}}"#).unwrap()).unwrap();
+        assert!(c.registry.audit_log.is_none());
+
+        let mut c = ServeConfig::default();
+        c.apply_cli(
+            &["--audit-log=/tmp/a.jsonl", "--guardrail-error-rate", "0.1",
+              "--guardrail-p95-ms=25", "--guardrail-min-samples", "5"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert!(c.registry.audit_log.is_some());
+        assert!((c.registry.guardrails.max_error_rate - 0.1).abs() < 1e-9);
+        assert_eq!(c.registry.guardrails.max_p95_us, 25_000);
+        assert_eq!(c.registry.guardrails.min_samples, 5);
+        assert!(ServeConfig::default()
+            .apply_cli(&["--guardrail-error-rate=7".to_string()])
+            .is_err());
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"registry":{"max_error_rate":7}}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
     fn example_config_file_parses() {
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("configs/server.example.json");
@@ -344,6 +437,11 @@ mod tests {
         assert_eq!(s.max_delay, Duration::from_micros(2000));
         assert_eq!(s.queue_cap, 1024);
         assert!(s.adaptive);
+        assert_eq!(
+            c.registry.audit_log.as_deref(),
+            Some(std::path::Path::new("flexserve_audit.jsonl"))
+        );
+        assert_eq!(c.registry.guardrails.min_samples, 20);
     }
 
     #[test]

@@ -9,14 +9,22 @@
 //!   scheduler queue).
 //!
 //! Control plane (runtime model lifecycle — no restarts):
-//! * `POST /v1/models/:name/load` — compile + admit a model, provenance
-//!   (`params_sha256`) echoed;
-//! * `POST /v1/models/:name/unload` — evict a model (device memory freed);
+//! * `POST /v1/models/:name/load[?version=N]` — compile + admit one model
+//!   version (sha256 provenance gate; `params_sha256` echoed);
+//! * `POST /v1/models/:name/unload[?version=N]` — evict one version (or
+//!   every loaded version), freeing device memory;
 //! * `PUT /v1/ensemble` — set active membership atomically;
 //! * `GET /v1/ensemble` — membership snapshot.
 //!
-//! Introspection: `GET /v1/healthz`, `/v1/models`, `/v1/models/:name`,
-//! `/v1/metrics`.
+//! Registry plane (versioned rollouts — see `crate::registry`):
+//! * `GET/PUT /v1/models/:name/rollout` — the pin/canary/shadow state
+//!   machine with auto-rollback guardrails;
+//! * `POST /v1/models/:name/promote` — candidate becomes the pin;
+//! * `POST /v1/models/:name/rollback` — return to the stable/previous pin;
+//! * `GET /v1/audit` — the append-only transition trail.
+//!
+//! Introspection: `GET /v1/healthz`, `/v1/models` (per-version status +
+//! rollout state), `/v1/models/:name`, `/v1/metrics`.
 //!
 //! Legacy unversioned aliases (`/predict`, `/models`, `/models/:name`,
 //! `/metrics`, `/healthz`) share the same handlers so the paper's wire
@@ -41,7 +49,8 @@ use crate::http::router::{Params, RequestInfo, RouteHandler, RouterObserver};
 use crate::http::{Request, Response, Router};
 use crate::imagepipe::Normalizer;
 use crate::json::{self, Value};
-use crate::runtime::{Manifest, ModelEntry};
+use crate::registry::{Registry, RegistryConfig, Store};
+use crate::runtime::Manifest;
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::Arc;
@@ -51,36 +60,67 @@ pub struct ServerState {
     pub ensemble: Ensemble,
     /// The adaptive scheduling plane (None = pass-through forwards).
     pub scheduler: Option<Scheduler>,
+    /// The model registry: version catalog, rollout state machine, audit
+    /// trail. Every predict/infer routes through it.
+    pub registry: Arc<Registry>,
+    /// The merged manifest (every version a slot) the pool compiles from.
     pub manifest: Arc<Manifest>,
     pub normalizer: Normalizer,
     pub metrics: Arc<Metrics>,
     pub started: std::time::Instant,
-    /// Serializes control-plane lifecycle operations (load/unload/set):
-    /// each is a check-then-act over the pool's loaded set, so concurrent
-    /// handlers could otherwise interleave into an active-but-evicted model.
+    /// Serializes control-plane lifecycle operations (load/unload/set/
+    /// rollout): each is a check-then-act over the pool's loaded set, so
+    /// concurrent handlers could otherwise interleave into an
+    /// active-but-evicted model.
     lifecycle: std::sync::Mutex<()>,
+    /// Bounded shadow-mirror workers for the no-scheduler configuration
+    /// (with a scheduler, mirrors ride its flush pool instead). Lazy: the
+    /// thread only exists once a shadow rollout actually mirrors.
+    shadow_pool: std::sync::OnceLock<crate::util::ThreadPool>,
+    /// Queued + in-flight shadow mirrors. Shadow is *sampling*: past the
+    /// cap new mirrors are dropped (`shadow_dropped_total`) instead of
+    /// growing an unbounded backlog of pinned request buffers under load.
+    pub(crate) shadow_backlog: Arc<std::sync::atomic::AtomicUsize>,
 }
 
 impl ServerState {
-    pub fn new(ensemble: Ensemble, sched_config: Option<SchedConfig>) -> Result<Arc<Self>> {
+    pub fn new(
+        ensemble: Ensemble,
+        sched_config: Option<SchedConfig>,
+        store: Store,
+        registry_config: RegistryConfig,
+    ) -> Result<Arc<Self>> {
         let manifest = Arc::clone(ensemble.manifest());
         let normalizer = Normalizer::new(manifest.norm_mean, manifest.norm_std);
-        // The scheduler records its shed/flush/depth series into the same
-        // registry the handlers use, so both live in every exposition.
+        // The scheduler and the registry record into the same metrics
+        // registry the handlers use, so everything lives in every
+        // exposition.
         let metrics = Arc::new(Metrics::new());
         let scheduler = match sched_config {
             Some(cfg) => Some(Scheduler::spawn(ensemble.clone(), cfg, Arc::clone(&metrics))?),
             None => None,
         };
+        let registry = Arc::new(Registry::new(store, registry_config, Arc::clone(&metrics))?);
         Ok(Arc::new(ServerState {
             ensemble,
             scheduler,
+            registry,
             manifest,
             normalizer,
             metrics,
             started: std::time::Instant::now(),
             lifecycle: std::sync::Mutex::new(()),
+            shadow_pool: std::sync::OnceLock::new(),
+            shadow_backlog: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
         }))
+    }
+
+    /// The mirror workers shadow rollouts fall back to when there is no
+    /// scheduler flush pool — one bounded worker, never a thread per
+    /// request.
+    pub(crate) fn shadow_pool(&self) -> &crate::util::ThreadPool {
+        self.shadow_pool
+            .get_or_init(|| crate::util::ThreadPool::new(1, "flexserve-shadow"))
     }
 
     /// Hold this across every lifecycle mutation (poison-tolerant: a
@@ -91,16 +131,23 @@ impl ServerState {
             .unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    /// Lifecycle status of one model: `active` (loaded + serving in the
-    /// ensemble), `loaded` (resident, not in the active set), `unloaded`.
+    /// Lifecycle status of one model: `active` (some version loaded +
+    /// serving in the ensemble), `loaded` (resident, not in the active
+    /// set), `unloaded` (no version resident).
     pub(crate) fn model_status(&self, name: &str) -> &'static str {
-        if !self.ensemble.pool().is_loaded(name) {
+        if !self.ensemble.pool().any_version_loaded(name) {
             "unloaded"
         } else if self.ensemble.models().iter().any(|m| m == name) {
             "active"
         } else {
             "loaded"
         }
+    }
+
+    /// The actor string audited for a control-plane request (`x-actor`
+    /// header, default "api").
+    fn actor(req: &Request) -> String {
+        req.header("x-actor").unwrap_or("api").to_string()
     }
 }
 
@@ -151,9 +198,9 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
 
     let s = Arc::clone(&state);
     let model_one: RouteHandler = Arc::new(move |_req, params| {
-        match s.manifest.model(&params["name"]) {
+        match model_json(&s, &params["name"]) {
             None => ApiError::unknown_model(&params["name"]).to_response(),
-            Some(m) => Response::json(200, &model_json(&s, m)),
+            Some(doc) => Response::json(200, &doc),
         }
     });
     router.add_shared("GET", "/v1/models/:name", Arc::clone(&model_one));
@@ -207,12 +254,14 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
     router.add_shared(
         "POST",
         "/v1/models/:name/load",
-        control_handler(Arc::clone(&state), |s, _req, p| handle_load(s, &p["name"])),
+        control_handler(Arc::clone(&state), |s, req, p| handle_load(s, &p["name"], req)),
     );
     router.add_shared(
         "POST",
         "/v1/models/:name/unload",
-        control_handler(Arc::clone(&state), |s, _req, p| handle_unload(s, &p["name"])),
+        control_handler(Arc::clone(&state), |s, req, p| {
+            handle_unload(s, &p["name"], req)
+        }),
     );
     router.add_shared(
         "PUT",
@@ -223,6 +272,68 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
     let s = Arc::clone(&state);
     router.add("GET", "/v1/ensemble", move |_req, _p| {
         Response::json(200, &ensemble_snapshot(&s))
+    });
+
+    // ---- registry plane: versioned rollouts ------------------------------
+    let s = Arc::clone(&state);
+    router.add("GET", "/v1/models/:name/rollout", move |_req, p| {
+        match s.registry.rollout_doc(&p["name"]) {
+            Ok(doc) => Response::json(200, &doc),
+            Err(e) => e.to_response(),
+        }
+    });
+    router.add_shared(
+        "PUT",
+        "/v1/models/:name/rollout",
+        control_handler(Arc::clone(&state), |s, req, p| {
+            handle_rollout_put(s, &p["name"], req)
+        }),
+    );
+    router.add_shared(
+        "POST",
+        "/v1/models/:name/promote",
+        control_handler(Arc::clone(&state), |s, req, p| {
+            let _guard = s.lifecycle_guard();
+            let doc = s.registry.promote(&p["name"], &ServerState::actor(req))?;
+            Ok(Response::json(200, &doc))
+        }),
+    );
+    router.add_shared(
+        "POST",
+        "/v1/models/:name/rollback",
+        control_handler(Arc::clone(&state), |s, req, p| {
+            let _guard = s.lifecycle_guard();
+            let pool = s.ensemble.pool();
+            let loaded = |slot: &str| pool.is_loaded(slot);
+            let doc = s.registry.rollback(
+                &p["name"],
+                &ServerState::actor(req),
+                "operator request",
+                &loaded,
+            )?;
+            Ok(Response::json(200, &doc))
+        }),
+    );
+    let s = Arc::clone(&state);
+    router.add("GET", "/v1/audit", move |req, _p| {
+        let n = req
+            .query_param("n")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(50);
+        let entries = s.registry.audit().tail(n.clamp(1, 512));
+        Response::json(
+            200,
+            &json::obj([
+                ("audit", Value::Arr(entries)),
+                (
+                    "log_path",
+                    match s.registry.audit().path() {
+                        Some(p) => Value::from(p.display().to_string()),
+                        None => Value::Null,
+                    },
+                ),
+            ]),
+        )
     });
 
     // ---- /v2: Open Inference Protocol over the same core -----------------
@@ -280,7 +391,14 @@ fn predict_handler(state: Arc<ServerState>, legacy: bool) -> RouteHandler {
 }
 
 fn models_response(s: &ServerState) -> Response {
-    let models: Vec<Value> = s.manifest.models.iter().map(|m| model_json(s, m)).collect();
+    // One entry per bare model (the registry groups versions under it) —
+    // the registry table `flexserve models --addr` renders for humans.
+    let models: Vec<Value> = s
+        .registry
+        .model_names()
+        .iter()
+        .filter_map(|name| model_json(s, name))
+        .collect();
     Response::json(
         200,
         &json::obj([
@@ -309,10 +427,54 @@ fn models_response(s: &ServerState) -> Response {
     )
 }
 
-fn model_json(s: &ServerState, m: &ModelEntry) -> Value {
-    json::obj([
-        ("name", Value::from(m.name.as_str())),
-        ("status", Value::from(s.model_status(&m.name))),
+/// Serving status of one (model, version) for the registry views.
+fn version_status(s: &ServerState, name: &str, version: u32) -> &'static str {
+    if !s.ensemble.pool().is_version_loaded(name, version) {
+        return "unloaded";
+    }
+    match s.registry.version_role(name, version) {
+        "canary" => "canary",
+        "shadow" => "shadow",
+        "active" if s.ensemble.models().iter().any(|m| m == name) => "active",
+        _ => "loaded",
+    }
+}
+
+/// The registry view of one model: top-level fields describe the version
+/// that currently serves (real, not a placeholder), `versions` lists the
+/// whole catalog with per-version status + provenance, and `rollout` is
+/// the live state machine snapshot. None = unknown model.
+fn model_json(s: &ServerState, name: &str) -> Option<Value> {
+    let catalog = s.registry.store().versions(name)?;
+    let active_v = s.registry.active_version(name).unwrap_or(1);
+    // Describe the serving version; fall back to v1 if the pin points at
+    // a version that has since vanished from the catalog.
+    let m = s
+        .registry
+        .store()
+        .entry(name, active_v)
+        .or_else(|| s.manifest.model(name))?;
+    let versions: Vec<Value> = catalog
+        .iter()
+        .filter_map(|&v| {
+            let e = s.registry.store().entry(name, v)?;
+            Some(json::obj([
+                ("version", Value::from(v as u64)),
+                ("status", Value::from(version_status(s, name, v))),
+                ("params_sha256", Value::from(e.params_sha256.as_str())),
+                ("test_acc", Value::from(e.test_acc)),
+                ("artifact_bytes", Value::from(e.artifact_bytes())),
+                (
+                    "buckets",
+                    Value::Arr(e.buckets.iter().map(|a| Value::from(a.bucket)).collect()),
+                ),
+            ]))
+        })
+        .collect();
+    Some(json::obj([
+        ("name", Value::from(name)),
+        ("status", Value::from(s.model_status(name))),
+        ("version", Value::from(active_v as u64)),
         ("param_count", Value::from(m.param_count)),
         ("test_acc", Value::from(m.test_acc)),
         ("params_sha256", Value::from(m.params_sha256.as_str())),
@@ -321,7 +483,9 @@ fn model_json(s: &ServerState, m: &ModelEntry) -> Value {
             "buckets",
             Value::Arr(m.buckets.iter().map(|a| Value::from(a.bucket)).collect()),
         ),
-    ])
+        ("versions", Value::Arr(versions)),
+        ("rollout", s.registry.rollout_doc(name).unwrap_or(Value::Null)),
+    ]))
 }
 
 /// Membership snapshot for `GET /v1/ensemble` and lifecycle responses.
@@ -345,7 +509,7 @@ fn ensemble_snapshot(s: &ServerState) -> Value {
         (
             "available",
             Value::Arr(
-                s.manifest
+                s.registry
                     .model_names()
                     .into_iter()
                     .map(Value::from)
@@ -355,17 +519,27 @@ fn ensemble_snapshot(s: &ServerState) -> Value {
     ])
 }
 
-/// Lifecycle response: the state transition plus the model's provenance.
-fn lifecycle_json(s: &ServerState, entry: &ModelEntry, status: &str) -> Value {
+/// Lifecycle response: the state transition plus the version's provenance.
+fn lifecycle_json(s: &ServerState, name: &str, version: u32, sha: &str, status: &str) -> Value {
     json::obj([
-        ("model", Value::from(entry.name.as_str())),
+        ("model", Value::from(name)),
+        ("version", Value::from(version as u64)),
         ("status", Value::from(status)),
-        ("params_sha256", Value::from(entry.params_sha256.as_str())),
+        ("params_sha256", Value::from(sha)),
         (
             "active_models",
             Value::Arr(s.ensemble.models().into_iter().map(Value::from).collect()),
         ),
     ])
+}
+
+/// Parse the optional `?version=N` lifecycle query parameter (shared
+/// wire-layer parse, so every spelling rejects identically).
+fn version_param(req: &Request) -> Result<Option<u32>, ApiError> {
+    match req.query_param("version").filter(|v| !v.is_empty()) {
+        None => Ok(None),
+        Some(v) => wire::parse_version_str(v).map(Some),
+    }
 }
 
 fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
@@ -394,11 +568,12 @@ fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> 
 /// coalesce. Requires the model to be loaded (it need not be in the
 /// active ensemble).
 fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
-    let entry = s
-        .manifest
-        .model(name)
-        .ok_or_else(|| ApiError::unknown_model(name))?;
-    if !s.ensemble.pool().is_loaded(name) {
+    if s.registry.store().versions(name).is_none() {
+        return Err(ApiError::unknown_model(name));
+    }
+    // ANY resident version can serve (the registry picks which); explicit
+    // `version` pins fail typed inside the core's resolution.
+    if !s.ensemble.pool().any_version_loaded(name) {
         return Err(ApiError::model_not_loaded(name));
     }
     let parse_sw = Stopwatch::start();
@@ -409,16 +584,21 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
     let m = &done.output.per_model[0];
     let predictions =
         json::str_array_raw(m.preds.iter().map(|(idx, _)| s.manifest.classes[*idx].as_str()));
+    // Provenance of the version that actually served this request.
+    let sha = s
+        .registry
+        .store()
+        .entry(name, m.version)
+        .map(|e| e.params_sha256.clone())
+        .unwrap_or_default();
     let mut members = vec![
         ("model".to_string(), Value::from(name)),
         ("predictions".to_string(), predictions),
-        (
-            "params_sha256".to_string(),
-            Value::from(entry.params_sha256.as_str()),
-        ),
+        ("params_sha256".to_string(), Value::from(sha)),
     ];
     if done.params.detail {
         let mut detail = vec![
+            ("version".to_string(), Value::from(m.version as u64)),
             ("batch".to_string(), Value::from(done.output.batch)),
             (
                 "probs".to_string(),
@@ -452,49 +632,142 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
     Ok(resp)
 }
 
-/// `POST /v1/models/:name/load` — compile the model onto every device
-/// worker (idempotent) and restore it into the active ensemble.
-fn handle_load(s: &ServerState, name: &str) -> Result<Response, ApiError> {
+/// `POST /v1/models/:name/load[?version=N]` — verify the version's
+/// provenance (sha256 vs manifest — typed `model.provenance` on
+/// mismatch), compile it onto every device worker (idempotent), and
+/// restore the model into the active ensemble. Default version: 1.
+fn handle_load(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
+    if s.registry.store().versions(name).is_none() {
+        return Err(ApiError::unknown_model(name));
+    }
+    let version = version_param(req)?.unwrap_or(1);
     let entry = s
-        .manifest
-        .model(name)
-        .ok_or_else(|| ApiError::unknown_model(name))?;
+        .registry
+        .store()
+        .entry(name, version)
+        .ok_or_else(|| ApiError::version_unknown(name, version, "not in the registry"))?;
+    let slot = entry.name.clone();
+    let sha = entry.params_sha256.clone();
     let _guard = s.lifecycle_guard();
-    let already = s.ensemble.pool().is_loaded(name);
+    let already = s.ensemble.pool().is_loaded(&slot);
     if !already {
+        // The provenance gate: refuse to serve bytes the build didn't
+        // sign, with the typed taxonomy code (not a 500).
+        s.registry
+            .store()
+            .verify_version(name, version)
+            .map_err(|e| ApiError::provenance(name, format!("{e:#}")))?;
         s.ensemble
             .pool()
-            .load_model(name)
+            .load_model(&slot)
             .map_err(|e| ApiError::load_failed(name, format!("{e:#}")))?;
         s.metrics.inc("lifecycle_loads_total");
+        s.registry.note_load(name, version, &ServerState::actor(req));
     }
     s.ensemble.activate(name);
+    // A reload after a full unload may find the rollout pinned at a
+    // version that is no longer resident — repin so "active" means
+    // "serves by default".
+    s.registry.repin_if_unserveable(
+        name,
+        &s.ensemble.pool().loaded_versions(name),
+        &ServerState::actor(req),
+    );
     Ok(Response::json(
         200,
-        &lifecycle_json(s, entry, if already { "already_loaded" } else { "loaded" }),
+        &lifecycle_json(
+            s,
+            name,
+            version,
+            &sha,
+            if already { "already_loaded" } else { "loaded" },
+        ),
     ))
 }
 
-/// `POST /v1/models/:name/unload` — drop the model from the active set,
-/// then evict its executables from every device worker.
-fn handle_unload(s: &ServerState, name: &str) -> Result<Response, ApiError> {
-    let entry = s
-        .manifest
-        .model(name)
-        .ok_or_else(|| ApiError::unknown_model(name))?;
-    let _guard = s.lifecycle_guard();
-    if !s.ensemble.pool().is_loaded(name) {
-        return Err(ApiError::model_not_loaded(name));
+/// `POST /v1/models/:name/unload[?version=N]` — evict one version (or,
+/// with no `version`, every loaded version) from the device workers. The
+/// model leaves the active set once nothing of it remains resident; an
+/// unloaded rollout candidate sheds its rollout (audited).
+fn handle_unload(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
+    if s.registry.store().versions(name).is_none() {
+        return Err(ApiError::unknown_model(name));
     }
-    // Leave the active set first so the scheduler's next flush (and new
-    // requests) stop fanning out to the model before eviction.
-    s.ensemble.deactivate(name);
-    s.ensemble
-        .pool()
-        .unload_model(name)
-        .map_err(|e| ApiError::internal(format!("{e:#}")))?;
+    let version = version_param(req)?;
+    let actor = ServerState::actor(req);
+    let _guard = s.lifecycle_guard();
+    let pool = s.ensemble.pool();
+    let (unloaded, sha) = match version {
+        Some(v) => {
+            let entry = s
+                .registry
+                .store()
+                .entry(name, v)
+                .ok_or_else(|| ApiError::version_unknown(name, v, "not in the registry"))?;
+            if !pool.is_version_loaded(name, v) {
+                return Err(ApiError::model_not_loaded(name));
+            }
+            // Refuse to yank the serving version out from under a live
+            // rollout (typed 409; candidates shed instead).
+            s.registry.check_unload(name, v)?;
+            let sha = entry.params_sha256.clone();
+            // If this was the last resident version, stop fanning out to
+            // the model BEFORE eviction (same ordering as a full unload).
+            if pool.loaded_versions(name) == vec![v] {
+                s.ensemble.deactivate(name);
+            }
+            pool.unload_version(name, v)
+                .map_err(|e| ApiError::internal(format!("{e:#}")))?;
+            s.registry.note_unload(name, v, &actor);
+            // If the unloaded version was the serving pin/stable while
+            // other versions stay resident, repin onto one of them so the
+            // still-active model keeps answering default traffic.
+            s.registry
+                .repin_if_unserveable(name, &pool.loaded_versions(name), &actor);
+            (v, sha)
+        }
+        None => {
+            let versions = pool.loaded_versions(name);
+            if versions.is_empty() {
+                return Err(ApiError::model_not_loaded(name));
+            }
+            // Leave the active set first so the scheduler's next flush
+            // (and new requests) stop fanning out to the model.
+            s.ensemble.deactivate(name);
+            for &v in &versions {
+                pool.unload_version(name, v)
+                    .map_err(|e| ApiError::internal(format!("{e:#}")))?;
+                s.registry.note_unload(name, v, &actor);
+            }
+            let active = s.registry.active_version(name).unwrap_or(1);
+            let sha = s
+                .registry
+                .store()
+                .entry(name, active)
+                .map(|e| e.params_sha256.clone())
+                .unwrap_or_default();
+            (active, sha)
+        }
+    };
     s.metrics.inc("lifecycle_unloads_total");
-    Ok(Response::json(200, &lifecycle_json(s, entry, "unloaded")))
+    Ok(Response::json(
+        200,
+        &lifecycle_json(s, name, unloaded, &sha, "unloaded"),
+    ))
+}
+
+/// `PUT /v1/models/:name/rollout` — drive the pin/canary/shadow state
+/// machine. Validation, the transition, and the audit record live in the
+/// registry; this glue supplies the pool's loaded-oracle and the actor.
+fn handle_rollout_put(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
+    let body = req.json_body().map_err(ApiError::malformed_json)?;
+    let _guard = s.lifecycle_guard();
+    let pool = s.ensemble.pool();
+    let loaded = |slot: &str| pool.is_loaded(slot);
+    let doc = s
+        .registry
+        .apply_rollout(name, &body, &ServerState::actor(req), &loaded)?;
+    Ok(Response::json(200, &doc))
 }
 
 /// `PUT /v1/ensemble` — atomically replace the active membership. Every
@@ -512,6 +785,16 @@ fn handle_set_ensemble(s: &ServerState, req: &Request) -> Result<Response, ApiEr
                 .ok_or_else(|| ApiError::bad_value("'models' entries must be strings"))
         })
         .collect::<Result<_, _>>()?;
+    // Membership is model *identities*; version slots ("mlp@2") live in
+    // the merged manifest (so raw set_active would accept them) but the
+    // registry routes by bare name — a slot member would 404 every
+    // subsequent predict. Versions are selected via rollouts, not here.
+    if let Some(bad) = names.iter().find(|n| n.contains('@')) {
+        return Err(ApiError::bad_value(format!(
+            "'{bad}' is a version slot, not a model; ensemble members are bare model names \
+             (pick versions with PUT /v1/models/:name/rollout)"
+        )));
+    }
     let _guard = s.lifecycle_guard();
     // set_active validates (non-empty, known, loaded) with typed errors;
     // from_anyhow recovers their taxonomy codes and statuses.
@@ -520,17 +803,20 @@ fn handle_set_ensemble(s: &ServerState, req: &Request) -> Result<Response, ApiEr
         .map_err(ApiError::from_anyhow)?;
     s.metrics.inc("lifecycle_membership_total");
 
-    // Echo membership + provenance for every now-active model.
+    // Echo membership + provenance for every now-active model — the sha
+    // of the version the registry actually serves, not whatever v1 is.
     let provenance: Vec<Value> = s
         .ensemble
         .models()
         .iter()
-        .filter_map(|n| s.manifest.model(n))
-        .map(|m| {
-            json::obj([
-                ("name", Value::from(m.name.as_str())),
-                ("params_sha256", Value::from(m.params_sha256.as_str())),
-            ])
+        .filter_map(|n| {
+            let v = s.registry.active_version(n)?;
+            let e = s.registry.store().entry(n, v)?;
+            Some(json::obj([
+                ("name", Value::from(n.as_str())),
+                ("version", Value::from(v as u64)),
+                ("params_sha256", Value::from(e.params_sha256.as_str())),
+            ]))
         })
         .collect();
     let mut snapshot = match ensemble_snapshot(s) {

@@ -27,7 +27,11 @@ use std::sync::{Arc, RwLock};
 /// Output of one model over the full (possibly chunked) batch.
 #[derive(Debug, Clone)]
 pub struct ModelOutput {
+    /// Bare model name (the pool slot's version suffix is split off into
+    /// `version`, so renderers keep the paper's `model_<name>` members).
     pub model: String,
+    /// Registry version that served these rows (1 for the flat layout).
+    pub version: u32,
     /// Row-major `(batch, num_classes)` logits.
     pub logits: Vec<f32>,
     /// Per-row `(argmax class index, softmax probability)`.
@@ -110,7 +114,12 @@ impl Ensemble {
             if self.manifest.model(m).is_none() {
                 return Err(Error::new(ApiError::unknown_model(m)));
             }
-            if !self.pool.is_loaded(m) {
+            // Members arrive in two spellings: exact pool slots ("mlp@2",
+            // the scheduler's resolved subsets — the slot itself must be
+            // resident) and bare model identities ("mlp", the control
+            // plane's membership — servable as long as ANY version is
+            // resident; the registry routes to it).
+            if !(self.pool.is_loaded(m) || self.pool.any_version_loaded(m)) {
                 return Err(Error::new(ApiError::model_not_loaded(m)));
             }
         }
@@ -248,13 +257,20 @@ impl Ensemble {
 
         let mut per_model: Vec<ModelOutput> = models
             .iter()
-            .map(|m| ModelOutput {
-                model: m.clone(),
-                logits: Vec::with_capacity(batch * classes),
-                preds: Vec::new(),
-                buckets: Vec::new(),
-                exec_micros: 0,
-                queue_micros: 0,
+            .map(|m| {
+                // Slots carry the version dimension ("m@2"); outputs
+                // report the bare name + version so wire formats stay
+                // keyed by model identity.
+                let (bare, version) = crate::runtime::split_slot(m);
+                ModelOutput {
+                    model: bare.to_string(),
+                    version,
+                    logits: Vec::with_capacity(batch * classes),
+                    preds: Vec::new(),
+                    buckets: Vec::new(),
+                    exec_micros: 0,
+                    queue_micros: 0,
+                }
             })
             .collect();
 
@@ -315,6 +331,7 @@ mod tests {
             per_model: vec![
                 ModelOutput {
                     model: "a".into(),
+                    version: 1,
                     logits: vec![],
                     preds: vec![(2, 0.9), (0, 0.8), (2, 0.7)],
                     buckets: vec![4],
@@ -323,6 +340,7 @@ mod tests {
                 },
                 ModelOutput {
                     model: "b".into(),
+                    version: 1,
                     logits: vec![],
                     preds: vec![(1, 0.6), (2, 0.5), (2, 0.9)],
                     buckets: vec![4],

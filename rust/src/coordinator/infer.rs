@@ -52,6 +52,13 @@ pub struct InferParams {
     /// Per-request in-queue deadline (`timeout_ms` in v1 params /
     /// v2 parameters); `None` falls back to the server-wide default.
     pub timeout: Option<Duration>,
+    /// Pin inference to one registry version (`version` in v1 params/query
+    /// and v2 `parameters`), bypassing the rollout split; applies to every
+    /// model the request touches.
+    pub version: Option<u32>,
+    /// The client's `x-request-id` — the deterministic canary hash-split
+    /// key (a given id always lands on the same version).
+    pub request_id: Option<String>,
 }
 
 /// The wire-neutral inference request both protocol codecs lower into.
@@ -128,20 +135,11 @@ pub fn execute(
         return Err(ApiError::ensemble_empty());
     }
 
-    // Resolve which per-target queue this request coalesces in. Only
-    // same-target requests can share a device batch, so each shape keys
-    // its own queue; without a scheduler every shape degrades to the
-    // direct pass-through forward.
-    let target = match (single, &params.models) {
-        (Some(name), _) => TargetKey::Single(name.to_string()),
-        (None, Some(names)) => TargetKey::Subset(names.clone()),
-        (None, None) => TargetKey::Ensemble,
-    };
     // Duplicate names in a subset are rejected up front: they would render
     // duplicate `model_<name>` response members, and — because every
     // distinct spelling is its own queue key — `[a,a,b]`, `[a,a,a,b]`, …
     // would otherwise mint unboundedly many queues under `queue_cap`.
-    if let TargetKey::Subset(names) = &target {
+    if let Some(names) = &params.models {
         let mut seen = std::collections::HashSet::with_capacity(names.len());
         if let Some(dup) = names.iter().find(|n| !seen.insert(n.as_str())) {
             return Err(ApiError::bad_value(format!(
@@ -149,7 +147,70 @@ pub fn execute(
             )));
         }
     }
-    let (output, stats): (EnsembleOutput, Option<BatchStats>) = match &s.scheduler {
+
+    // Registry routing: every requested model resolves to the version
+    // slot that serves THIS request — the rollout pin, the deterministic
+    // canary split on the request id, or an explicit `version` pin — plus
+    // any shadow mirror target. Resolution happens before enqueue because
+    // only same-slot requests may share a device batch (a canary request
+    // routed to v2 must never coalesce with v1 traffic).
+    let rid = params.request_id.as_deref();
+    let mut routed: Vec<(String, u32)> = Vec::new(); // (bare model, version)
+    let mut shadows: Vec<(String, String, u32)> = Vec::new(); // (model, slot, v)
+
+    // Resolve which per-target queue this request coalesces in. Only
+    // same-target requests can share a device batch, so each shape keys
+    // its own queue; without a scheduler every shape degrades to the
+    // direct pass-through forward.
+    let target = match (single, &params.models) {
+        (Some(name), _) => TargetKey::Single(resolve_one(
+            s,
+            name,
+            params.version,
+            rid,
+            &mut routed,
+            &mut shadows,
+        )?),
+        (None, Some(names)) => {
+            let slots = names
+                .iter()
+                .map(|n| resolve_one(s, n, params.version, rid, &mut routed, &mut shadows))
+                .collect::<Result<Vec<_>, _>>()?;
+            TargetKey::Subset(slots)
+        }
+        (None, None) => {
+            let members = s.ensemble.models();
+            // Fast path: no explicit pin and every member on the default
+            // pin@1 (no rollout in flight) — the dominant case stays on
+            // the dynamic Ensemble queue without materializing any slot
+            // strings (PR 2's allocation-light contract).
+            if params.version.is_none()
+                && members.iter().all(|m| s.registry.is_default_route(m))
+            {
+                routed.extend(members.into_iter().map(|m| (m, 1)));
+                TargetKey::Ensemble
+            } else {
+                let slots = members
+                    .iter()
+                    .map(|n| resolve_one(s, n, params.version, rid, &mut routed, &mut shadows))
+                    .collect::<Result<Vec<_>, _>>()?;
+                // Any non-default route pins this request's slots; an
+                // all-default resolution keeps the shared Ensemble queue
+                // (membership re-snapshots at every flush).
+                if slots == members && shadows.is_empty() {
+                    TargetKey::Ensemble
+                } else {
+                    TargetKey::Subset(slots)
+                }
+            }
+        }
+    };
+
+    // Shadow mirrors reuse the request buffer (refcount bump, no copy).
+    let mirror_data = (!shadows.is_empty()).then(|| data.clone());
+
+    let dispatch_sw = Stopwatch::start();
+    let dispatched: Result<(EnsembleOutput, Option<BatchStats>), ApiError> = match &s.scheduler {
         Some(sched) => {
             // Subset requests validate their model names HERE, before
             // enqueue: unknown/unloaded names must fail fast on the
@@ -158,38 +219,68 @@ pub fn execute(
             // sidestep the per-queue admission bound. (Single-model
             // routes already validate residency in their handlers; the
             // flush re-resolves against the then-current loaded set.)
-            if let TargetKey::Subset(names) = &target {
-                s.ensemble
-                    .with_models(names.clone())
-                    .map_err(ApiError::from_anyhow)?;
-            }
-            let (out, st) = sched
-                .submit(target, data, batch, params.timeout)
-                .map_err(ApiError::from_anyhow)?;
-            s.metrics
-                .observe_micros("coalesced_rows", st.coalesced_rows as u64);
-            (out, Some(st))
-        }
-        None => {
-            let target_ensemble = match &target {
-                TargetKey::Ensemble => s.ensemble.clone(),
+            let pre = match &target {
                 TargetKey::Subset(names) => s
                     .ensemble
                     .with_models(names.clone())
-                    .map_err(ApiError::from_anyhow)?,
-                TargetKey::Single(name) => s
-                    .ensemble
-                    .with_models(vec![name.clone()])
-                    .map_err(ApiError::from_anyhow)?,
+                    .map(|_| ())
+                    .map_err(ApiError::from_anyhow),
+                _ => Ok(()),
             };
-            (
-                target_ensemble
-                    .forward(data, batch)
-                    .map_err(ApiError::from_anyhow)?,
-                None,
-            )
+            match pre {
+                Err(e) => Err(e),
+                Ok(()) => sched
+                    .submit(target, data, batch, params.timeout)
+                    .map(|(out, st)| {
+                        s.metrics
+                            .observe_micros("coalesced_rows", st.coalesced_rows as u64);
+                        (out, Some(st))
+                    })
+                    .map_err(ApiError::from_anyhow),
+            }
+        }
+        None => {
+            let target_ensemble = match &target {
+                TargetKey::Ensemble => Ok(s.ensemble.clone()),
+                TargetKey::Subset(names) => s.ensemble.with_models(names.clone()),
+                TargetKey::Single(name) => s.ensemble.with_models(vec![name.clone()]),
+            };
+            target_ensemble
+                .and_then(|t| t.forward(data, batch))
+                .map(|out| (out, None))
+                .map_err(ApiError::from_anyhow)
         }
     };
+    // Per-version health: every routed (model, version) records this
+    // request's outcome + wall latency — the sliding window behind the
+    // canary guardrails, and the per-version series in `/v1/metrics`.
+    // Two attribution rules keep the guardrails honest: admission/
+    // deadline sheds are the scheduler's verdict on the queue (counting
+    // them would let an overload spike auto-roll back a healthy
+    // candidate), and a multi-model flush failure may be any member's
+    // fault — errors only count when exactly one model was routed.
+    let dispatch_us = dispatch_sw.elapsed_micros();
+    let outcome = match &dispatched {
+        Ok(_) => Some(true),
+        Err(e) if e.code.starts_with("server.") => None,
+        Err(_) => Some(false),
+    };
+    if let Some(ok) = outcome {
+        if ok || routed.len() == 1 {
+            for (model, version) in &routed {
+                s.registry.record_outcome(model, *version, ok, dispatch_us);
+            }
+        }
+    }
+    let (output, stats) = dispatched?;
+
+    // Shadow rollouts: mirror the request to the candidate off the hot
+    // path (flush-worker pool), compare predictions, and feed the
+    // candidate's guardrail window — the client response is already
+    // determined and never waits on the mirror.
+    if let Some(mirror) = mirror_data {
+        spawn_shadow_mirrors(s, shadows, mirror, batch, &output);
+    }
 
     let stages = observe_output_stages(s, parse_us, &output, stats.as_ref());
     Ok(InferenceResponse {
@@ -198,6 +289,91 @@ pub fn execute(
         stages,
         params,
     })
+}
+
+/// Mirror one request to every shadow candidate, off the hot path.
+///
+/// Each mirror runs a direct forward on the candidate's slot, compares
+/// its argmax predictions against the primary output for the same model,
+/// and feeds the candidate's guardrail window + per-version metrics (so a
+/// shadow rollout can auto-roll back on error rate or latency without
+/// ever having served a client). Jobs ride the scheduler's flush-worker
+/// pool; without a scheduler they share one bounded mirror worker.
+/// Resolve one requested model through the registry, collecting its
+/// routed (model, version) for outcome accounting and any shadow mirror
+/// target; returns the pool slot the request executes on.
+fn resolve_one(
+    s: &ServerState,
+    model: &str,
+    pin: Option<u32>,
+    request_id: Option<&str>,
+    routed: &mut Vec<(String, u32)>,
+    shadows: &mut Vec<(String, String, u32)>,
+) -> Result<String, ApiError> {
+    let loaded = |slot: &str| s.ensemble.pool().is_loaded(slot);
+    let route = s.registry.resolve(model, pin, request_id, &loaded)?;
+    routed.push((model.to_string(), route.version));
+    if let Some((slot, v)) = route.shadow {
+        shadows.push((model.to_string(), slot, v));
+    }
+    Ok(route.slot)
+}
+
+/// At most this many shadow mirrors queued + in flight at once. Each
+/// queued mirror pins a whole request buffer, so the backlog must be
+/// bounded: past the cap new mirrors are dropped and counted — shadow is
+/// statistical sampling, and overload is exactly when it must yield.
+const SHADOW_BACKLOG_CAP: usize = 16;
+
+fn spawn_shadow_mirrors(
+    s: &ServerState,
+    shadows: Vec<(String, String, u32)>,
+    data: TensorView,
+    batch: usize,
+    primary: &EnsembleOutput,
+) {
+    use std::sync::atomic::Ordering;
+    for (model, slot, version) in shadows {
+        let backlog = std::sync::Arc::clone(&s.shadow_backlog);
+        if backlog.fetch_add(1, Ordering::Relaxed) >= SHADOW_BACKLOG_CAP {
+            backlog.fetch_sub(1, Ordering::Relaxed);
+            s.metrics.inc("shadow_dropped_total");
+            continue;
+        }
+        let primary_classes: Option<Vec<usize>> = primary
+            .per_model
+            .iter()
+            .find(|m| m.model == model)
+            .map(|m| m.preds.iter().map(|(c, _)| *c).collect());
+        let ensemble = s.ensemble.clone();
+        let registry = std::sync::Arc::clone(&s.registry);
+        let data = data.clone();
+        let job = move || {
+            let sw = Stopwatch::start();
+            let result = ensemble
+                .with_models(vec![slot])
+                .and_then(|e| e.forward(data, batch));
+            let latency_us = sw.elapsed_micros();
+            match result {
+                Ok(out) => {
+                    let mirror_classes: Vec<usize> =
+                        out.per_model[0].preds.iter().map(|(c, _)| *c).collect();
+                    let mismatch = primary_classes
+                        .map(|p| p != mirror_classes)
+                        .unwrap_or(false);
+                    registry.record_shadow(&model, version, true, mismatch, latency_us);
+                }
+                Err(_) => registry.record_shadow(&model, version, false, false, latency_us),
+            }
+            backlog.fetch_sub(1, Ordering::Relaxed);
+        };
+        match &s.scheduler {
+            Some(sched) => sched.offload(job),
+            // No flush pool to ride: a bounded dedicated worker (never a
+            // thread per request — shadow traffic scales with load).
+            None => s.shadow_pool().execute(job),
+        }
+    }
 }
 
 /// Resolve the raw `policy`/`target` strings a codec extracted into their

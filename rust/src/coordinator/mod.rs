@@ -38,36 +38,52 @@ pub use wire::{ApiError, PredictRequest, StageMicros};
 
 use crate::config::ServeConfig;
 use crate::http::{Server, ServerHandle};
+use crate::registry::Store;
 use crate::runtime::executor::ExecutorOptions;
-use crate::runtime::{ExecutorPool, Manifest};
+use crate::runtime::ExecutorPool;
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
-/// Bootstrap the full FlexServe stack from a config: manifest → executor
-/// pool → ensemble → (optional) scheduler → HTTP server.
+/// Bootstrap the full FlexServe stack from a config: version store →
+/// executor pool → ensemble → (optional) scheduler → registry → HTTP
+/// server.
 ///
 /// Returns the HTTP handle and the shared state (metrics etc.). The device
 /// pool lives inside the returned state; dropping both shuts everything
 /// down.
 pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
-    let manifest = Arc::new(
-        Manifest::load(&config.artifacts).context("loading artifact manifest")?,
-    );
+    // The store discovers every model *version* (the flat layout loads as
+    // version 1) and merges them into one pool-facing manifest of slots.
+    let store = Store::discover(&config.artifacts).context("discovering artifact store")?;
+    let manifest = Arc::clone(&store.manifest);
     if let Some(models) = &config.models {
         for m in models {
-            if manifest.model(m).is_none() {
+            if store.versions(m).is_none() {
                 anyhow::bail!("unknown model '{m}' in config (not in the manifest)");
             }
         }
     }
     if config.verify_sha {
+        // Every version in the catalog passes the provenance gate, not
+        // just what boots: a tampered candidate must fail NOW, not when a
+        // rollout later loads it.
         manifest.verify_all().context("artifact provenance check")?;
     }
+    // Boot compiles the version-1 slots only; later versions compile on
+    // demand through `POST /v1/models/:name/load?version=N`.
+    let boot_models: Vec<String> = store
+        .v1_slots()
+        .into_iter()
+        .filter(|m| match &config.models {
+            Some(want) => want.contains(m),
+            None => true,
+        })
+        .collect();
     let pool = Arc::new(
         ExecutorPool::spawn(
             Arc::clone(&manifest),
             ExecutorOptions {
-                models: config.models.clone(),
+                models: Some(boot_models),
                 buckets: None,
                 // Startup verified everything above when enabled — don't
                 // hash each artifact again per worker at boot. Runtime
@@ -83,7 +99,7 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
     // The ensemble's active set starts as everything the pool loaded and
     // evolves at runtime via the `/v1` control plane.
     let ensemble = Ensemble::new(pool, Arc::clone(&manifest));
-    let state = ServerState::new(ensemble, config.scheduler)?;
+    let state = ServerState::new(ensemble, config.scheduler, store, config.registry.clone())?;
     let mut router = build_router(Arc::clone(&state));
     if config.access_log {
         router.observe(Arc::new(crate::http::router::AccessLog));

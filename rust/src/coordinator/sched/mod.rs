@@ -133,7 +133,7 @@ pub struct Scheduler {
     /// Flush workers. Held so the LAST owner's drop (after the planner
     /// thread is joined) blocks until every dispatched flush has answered
     /// its requesters — the drain guarantee covers in-flight batches too.
-    _flushers: Arc<ThreadPool>,
+    flushers: Arc<ThreadPool>,
 }
 
 impl Scheduler {
@@ -160,8 +160,16 @@ impl Scheduler {
         Ok(Scheduler {
             shared,
             thread: Some(thread),
-            _flushers: flushers,
+            flushers,
         })
+    }
+
+    /// Run a background job on the flush-worker pool — off the request hot
+    /// path, bounded by the same worker count as batch flushes. The
+    /// registry's shadow-rollout mirror traffic rides here so it competes
+    /// with batch dispatch rather than with request threads.
+    pub fn offload(&self, job: impl FnOnce() + Send + 'static) {
+        self.flushers.execute(job);
     }
 
     /// Blocking submit: admission-checked enqueue onto `target`'s queue,

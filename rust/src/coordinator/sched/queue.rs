@@ -278,6 +278,7 @@ pub fn slice_output(output: &EnsembleOutput, offset: usize, len: usize) -> Ensem
             };
             ModelOutput {
                 model: m.model.clone(),
+                version: m.version,
                 logits: m.logits[offset * classes..(offset + len) * classes].to_vec(),
                 preds: m.preds[offset..offset + len].to_vec(),
                 buckets: m.buckets.clone(),
@@ -341,6 +342,7 @@ mod tests {
             batch: 4,
             per_model: vec![ModelOutput {
                 model: "m".into(),
+                version: 2,
                 logits: (0..8).map(|v| v as f32).collect(), // 4 rows x 2 classes
                 preds: vec![(0, 0.1), (1, 0.2), (0, 0.3), (1, 0.4)],
                 buckets: vec![4],
@@ -352,6 +354,7 @@ mod tests {
         assert_eq!(s.batch, 2);
         assert_eq!(s.per_model[0].logits, vec![2.0, 3.0, 4.0, 5.0]);
         assert_eq!(s.per_model[0].preds, vec![(1, 0.2), (0, 0.3)]);
+        assert_eq!(s.per_model[0].version, 2, "served version survives slicing");
     }
 
     #[test]
@@ -365,6 +368,7 @@ mod tests {
                 batch: total,
                 per_model: vec![ModelOutput {
                     model: "m".into(),
+                    version: 1,
                     logits: (0..total * classes).map(|v| v as f32).collect(),
                     preds: (0..total).map(|i| (i % classes, 0.5)).collect(),
                     buckets: vec![],

@@ -94,9 +94,10 @@ pub fn add_routes(router: &mut Router, state: Arc<ServerState>) {
         if name == ENSEMBLE_MODEL {
             return ready_response(!s.ensemble.models().is_empty(), Some(name));
         }
-        match s.manifest.model(name) {
+        match s.registry.store().versions(name) {
             None => v2_error(&ApiError::unknown_model(name)),
-            Some(_) => ready_response(s.ensemble.pool().is_loaded(name), Some(name)),
+            // Ready = some version can serve (the registry routes to it).
+            Some(_) => ready_response(s.ensemble.pool().any_version_loaded(name), Some(name)),
         }
     });
 
@@ -147,10 +148,13 @@ fn ready_response(ready: bool, name: Option<&str>) -> Response {
 fn handle_infer(s: &ServerState, name: &str, req: &Request) -> Result<Response, ApiError> {
     let ensemble_route = name == ENSEMBLE_MODEL;
     if !ensemble_route {
-        if s.manifest.model(name).is_none() {
+        if s.registry.store().versions(name).is_none() {
             return Err(ApiError::unknown_model(name));
         }
-        if !s.ensemble.pool().is_loaded(name) {
+        // ANY resident version can serve (the registry routes to the
+        // right one); explicit `parameters.version` misses fail typed in
+        // the core's resolution.
+        if !s.ensemble.pool().any_version_loaded(name) {
             return Err(ApiError::model_not_loaded(name));
         }
     }
@@ -324,6 +328,14 @@ pub fn parse_infer(
         }
     };
 
+    // Registry version pin: `parameters.version`, same semantics (and
+    // the same shared parse) as the /v1 `version` param — bypasses the
+    // rollout split; typed `model.version_unknown` when it cannot serve.
+    let version = match params_v.and_then(|p| p.get("version")) {
+        None => None,
+        Some(v) => Some(super::wire::parse_version_num(v)?),
+    };
+
     // ---- requested outputs -----------------------------------------------
     let outputs = match body.get("outputs") {
         None => None,
@@ -361,6 +373,8 @@ pub fn parse_infer(
             detail,
             normalized,
             timeout,
+            version,
+            request_id: req.header("x-request-id").map(str::to_string),
         },
     };
     Ok((ir, InferOptions { id, outputs }))
@@ -641,16 +655,40 @@ fn render_infer(
         selected.push(doc);
     }
 
+    // `model_version` reports the version that actually served (the
+    // seed hardcoded "1"); the ensemble pseudo-model spells out each
+    // member's served version in a custom parameter instead.
+    let model_version = if ensemble {
+        "1".to_string()
+    } else {
+        done.output
+            .per_model
+            .first()
+            .map(|m| m.version.to_string())
+            .unwrap_or_else(|| "1".to_string())
+    };
     let mut members: Vec<(String, Value)> = vec![
         ("model_name".to_string(), Value::from(route_model)),
-        ("model_version".to_string(), Value::from("1")),
+        ("model_version".to_string(), Value::from(model_version)),
     ];
     if let Some(id) = &opts.id {
         members.push(("id".to_string(), Value::from(id.as_str())));
     }
     let mut parameters: Vec<(&'static str, Value)> = Vec::new();
-    if let Some(entry) = s.manifest.model(route_model) {
-        parameters.push(("params_sha256", Value::from(entry.params_sha256.as_str())));
+    if ensemble {
+        let served: Vec<String> = done
+            .output
+            .per_model
+            .iter()
+            .map(|m| format!("{}:{}", m.model, m.version))
+            .collect();
+        parameters.push(("served_versions", Value::from(served.join(","))));
+    } else if let Some(m) = done.output.per_model.first() {
+        // Provenance of the version that served, not whatever v1 happens
+        // to be in the manifest.
+        if let Some(entry) = s.registry.store().entry(&m.model, m.version) {
+            parameters.push(("params_sha256", Value::from(entry.params_sha256.as_str())));
+        }
     }
     if done.params.detail {
         parameters.push(("parse_us", Value::from(done.stages.parse_us)));
@@ -684,39 +722,56 @@ fn model_metadata(s: &ServerState, name: &str) -> Result<Value, ApiError> {
         ])
     };
 
-    let (outputs, parameters): (Vec<Value>, Value) = if name == ENSEMBLE_MODEL {
-        let active = s.ensemble.models();
-        let mut outs = Vec::with_capacity(active.len() * 2 + 1);
-        for m in &active {
-            outs.push(output_doc(&format!("{m}.classes"), "BYTES"));
-            outs.push(output_doc(&format!("{m}.probs"), "FP32"));
-        }
-        outs.push(output_doc("detections", "BOOL"));
-        (
-            outs,
-            json::obj([
-                ("ensemble", Value::Bool(true)),
-                ("models", Value::from(active.join(","))),
-            ]),
-        )
-    } else {
-        let entry = s
-            .manifest
-            .model(name)
-            .ok_or_else(|| ApiError::unknown_model(name))?;
-        (
-            vec![output_doc("classes", "BYTES"), output_doc("probs", "FP32")],
-            json::obj([
-                ("params_sha256", Value::from(entry.params_sha256.as_str())),
-                ("state", Value::from(s.model_status(name))),
-                ("test_acc", Value::from(entry.test_acc)),
-            ]),
-        )
-    };
+    let (versions, outputs, parameters): (Vec<Value>, Vec<Value>, Value) =
+        if name == ENSEMBLE_MODEL {
+            let active = s.ensemble.models();
+            let mut outs = Vec::with_capacity(active.len() * 2 + 1);
+            for m in &active {
+                outs.push(output_doc(&format!("{m}.classes"), "BYTES"));
+                outs.push(output_doc(&format!("{m}.probs"), "FP32"));
+            }
+            outs.push(output_doc("detections", "BOOL"));
+            (
+                vec![Value::from("1")],
+                outs,
+                json::obj([
+                    ("ensemble", Value::Bool(true)),
+                    ("models", Value::from(active.join(","))),
+                ]),
+            )
+        } else {
+            // Real registry versions (the seed hardcoded ["1"]): the full
+            // catalog, plus which one serves and its provenance.
+            let catalog = s
+                .registry
+                .store()
+                .versions(name)
+                .ok_or_else(|| ApiError::unknown_model(name))?;
+            let active_v = s.registry.active_version(name).unwrap_or(1);
+            let entry = s
+                .registry
+                .store()
+                .entry(name, active_v)
+                .or_else(|| s.manifest.model(name))
+                .ok_or_else(|| ApiError::unknown_model(name))?;
+            (
+                catalog
+                    .iter()
+                    .map(|v| Value::from(v.to_string()))
+                    .collect(),
+                vec![output_doc("classes", "BYTES"), output_doc("probs", "FP32")],
+                json::obj([
+                    ("params_sha256", Value::from(entry.params_sha256.as_str())),
+                    ("state", Value::from(s.model_status(name))),
+                    ("active_version", Value::from(active_v as u64)),
+                    ("test_acc", Value::from(entry.test_acc)),
+                ]),
+            )
+        };
 
     Ok(json::obj([
         ("name", Value::from(name)),
-        ("versions", Value::Arr(vec![Value::from("1")])),
+        ("versions", Value::Arr(versions)),
         ("platform", Value::from("flexserve-xla-pjrt")),
         ("inputs", inputs),
         ("outputs", Value::Arr(outputs)),
@@ -1006,6 +1061,59 @@ mod tests {
             .unwrap_err();
             assert_eq!((e.status, e.code), (422, "bad_input.bad_value"), "{params}");
         }
+    }
+
+    #[test]
+    fn version_parameter_lowers_and_rejects_typed() {
+        let (ir, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}],
+                "parameters":{"version":2}}"#,
+        )
+        .unwrap();
+        assert_eq!(ir.params.version, Some(2));
+        let (ir, _) = parse(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap();
+        assert!(ir.params.version.is_none() && ir.params.request_id.is_none());
+        for params in [r#"{"version":0}"#, r#"{"version":"two"}"#, r#"{"version":1.5}"#] {
+            let e = parse(&format!(
+                r#"{{"inputs":[{{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}}],
+                    "parameters":{params}}}"#,
+            ))
+            .unwrap_err();
+            assert_eq!((e.status, e.code), (422, "bad_input.bad_value"), "{params}");
+        }
+        // The request id (the canary split key) rides in from the header.
+        let mut req = post(
+            r#"{"inputs":[{"name":"x","datatype":"FP32","shape":[1,4],"data":[1,2,3,4]}]}"#,
+        );
+        req.headers.push(("x-request-id".into(), "rid-9".into()));
+        let (ir, _) = parse_infer(&manifest(), &req, false).unwrap();
+        assert_eq!(ir.params.request_id.as_deref(), Some("rid-9"));
+    }
+
+    #[test]
+    fn registry_errors_render_protocol_shaped() {
+        // The new taxonomy codes keep the OIP one-string error shape.
+        let resp = v2_error(&ApiError::version_unknown("m1", 3, "not loaded"));
+        assert_eq!(resp.status, 404);
+        let v = resp.json_body().unwrap();
+        assert!(v
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("model.version_unknown:"));
+        let resp = v2_error(&ApiError::provenance("m1", "sha mismatch"));
+        assert_eq!(resp.status, 409);
+        let v = resp.json_body().unwrap();
+        assert!(v
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("model.provenance:"));
     }
 
     #[test]

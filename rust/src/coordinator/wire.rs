@@ -21,6 +21,9 @@
 //! | `bad_input.empty_ensemble`  | 422    | requested empty model set       |
 //! | `model.unknown`             | 404    | model not in the manifest       |
 //! | `model.not_loaded`          | 409    | model known but not resident    |
+//! | `model.version_unknown`     | 404    | version absent or not loaded    |
+//! | `model.provenance`          | 409    | artifact sha256 != manifest     |
+//! | `model.rollout_conflict`    | 409    | lifecycle op vs live rollout    |
 //! | `model.load_failed`         | 500    | runtime compile/load failure    |
 //! | `ensemble.empty`            | 503    | no active models to serve       |
 //! | `server.overloaded`         | 429    | queue full — shed + Retry-After |
@@ -132,6 +135,32 @@ impl ApiError {
         )
     }
 
+    /// A registry version that cannot serve: absent from the catalog, or
+    /// present but not loaded (e.g. unloaded mid-rollout).
+    pub fn version_unknown(name: &str, version: u32, why: &str) -> ApiError {
+        Self::new(
+            404,
+            "model.version_unknown",
+            format!("version {version} of model '{name}' cannot serve: {why}"),
+        )
+    }
+
+    /// Artifact bytes don't match the manifest's SHA-256 — the provenance
+    /// gate refusing a runtime load of tampered/corrupted artifacts.
+    pub fn provenance(name: &str, detail: impl fmt::Display) -> ApiError {
+        Self::new(
+            409,
+            "model.provenance",
+            format!("provenance check failed for '{name}': {detail}"),
+        )
+    }
+
+    /// A lifecycle request that conflicts with an in-progress rollout
+    /// (e.g. unloading the stable version mid-canary).
+    pub fn rollout_conflict(detail: impl Into<String>) -> ApiError {
+        Self::new(409, "model.rollout_conflict", detail)
+    }
+
     pub fn load_failed(name: &str, detail: impl fmt::Display) -> ApiError {
         Self::new(
             500,
@@ -215,6 +244,12 @@ pub struct PredictRequest {
     /// In-queue deadline (`timeout_ms`); expired requests shed with a
     /// typed 504 instead of waiting forever.
     pub timeout: Option<Duration>,
+    /// Pin inference to one registry version (`version` in body/query),
+    /// bypassing the rollout split. Applies to every requested model.
+    pub version: Option<u32>,
+    /// The client's `x-request-id`, when sent — the canary hash-split key
+    /// (a given id always lands on the same version).
+    pub request_id: Option<String>,
 }
 
 /// Query-param override rule: present AND non-empty wins; empty = unset.
@@ -370,6 +405,14 @@ impl PredictRequest {
             None => None,
         };
 
+        let version = match query_override(req, "version") {
+            Some(v) => Some(parse_version_str(v)?),
+            None => match body.get("version") {
+                None => None,
+                Some(v) => Some(parse_version_num(v)?),
+            },
+        };
+
         Ok(PredictRequest {
             data,
             batch,
@@ -379,6 +422,8 @@ impl PredictRequest {
             target,
             detail,
             timeout,
+            version,
+            request_id: req.header("x-request-id").map(str::to_string),
         })
     }
 
@@ -404,6 +449,8 @@ impl PredictRequest {
                 detail: self.detail,
                 normalized: self.normalized,
                 timeout: self.timeout,
+                version: self.version,
+                request_id: self.request_id,
             },
         }
     }
@@ -412,6 +459,26 @@ impl PredictRequest {
 /// The shared `timeout_ms` rejection (query and body spellings must agree).
 fn bad_timeout() -> ApiError {
     ApiError::bad_value("'timeout_ms' must be a positive integer (milliseconds)")
+}
+
+/// The shared `version` rejection (every codec spelling must agree).
+fn bad_version() -> ApiError {
+    ApiError::bad_value("'version' must be a positive integer (a registry model version)")
+}
+
+/// Parse a `version` value from its query-string spelling (u32 >= 1) —
+/// the one implementation behind the v1 body/query, the v2 parameter and
+/// the lifecycle `?version=` so they can never drift.
+pub(crate) fn parse_version_str(v: &str) -> Result<u32, ApiError> {
+    v.parse::<u32>().ok().filter(|&v| v >= 1).ok_or_else(bad_version)
+}
+
+/// Parse a `version` value from its JSON spelling (u32 >= 1).
+pub(crate) fn parse_version_num(v: &Value) -> Result<u32, ApiError> {
+    v.as_u64()
+        .and_then(|v| u32::try_from(v).ok())
+        .filter(|&v| v >= 1)
+        .ok_or_else(bad_version)
 }
 
 /// Streaming fast path for `{"data": [...], ...}` predict bodies.
@@ -625,6 +692,9 @@ pub fn render_predict(
                 (
                     m.model.clone(),
                     json::obj([
+                        // The registry version that actually served this
+                        // model's rows (canary splits surface here).
+                        ("version", Value::from(m.version as u64)),
                         ("probs", json::f32_array_raw(m.preds.iter().map(|(_, p)| *p))),
                         (
                             "buckets",
@@ -726,6 +796,50 @@ mod tests {
             let e = PredictRequest::parse(&m, &req).unwrap_err();
             assert_eq!((e.status, e.code), (422, "bad_input.bad_value"));
         }
+    }
+
+    #[test]
+    fn version_parses_from_body_query_and_header_rides_along() {
+        let m = manifest();
+        let r = PredictRequest::parse(&m, &post("/v1/predict", r#"{"data":[1,2,3,4]}"#)).unwrap();
+        assert!(r.version.is_none() && r.request_id.is_none());
+        let r = PredictRequest::parse(
+            &m,
+            &post("/v1/predict", r#"{"data":[1,2,3,4],"version":2}"#),
+        )
+        .unwrap();
+        assert_eq!(r.version, Some(2));
+        // Non-empty query wins over the body (the uniform precedence rule).
+        let r = PredictRequest::parse(
+            &m,
+            &post("/v1/predict?version=3", r#"{"data":[1,2,3,4],"version":2}"#),
+        )
+        .unwrap();
+        assert_eq!(r.version, Some(3));
+        // Zero and junk are typed rejections on both spellings.
+        for req in [
+            post("/v1/predict", r#"{"data":[1,2,3,4],"version":0}"#),
+            post("/v1/predict", r#"{"data":[1,2,3,4],"version":"two"}"#),
+            post("/v1/predict?version=nope", r#"{"data":[1,2,3,4]}"#),
+        ] {
+            let e = PredictRequest::parse(&m, &req).unwrap_err();
+            assert_eq!((e.status, e.code), (422, "bad_input.bad_value"));
+        }
+        // The request id (the canary split key) rides into the IR.
+        let mut req = post("/v1/predict", r#"{"data":[1,2,3,4],"version":2}"#);
+        req.headers.push(("x-request-id".into(), "rid-7".into()));
+        let ir = PredictRequest::parse(&m, &req).unwrap().into_inference(&m);
+        assert_eq!(ir.params.version, Some(2));
+        assert_eq!(ir.params.request_id.as_deref(), Some("rid-7"));
+    }
+
+    #[test]
+    fn registry_errors_carry_stable_codes() {
+        let e = ApiError::version_unknown("cnn_s", 4, "not loaded");
+        assert_eq!((e.status, e.code), (404, "model.version_unknown"));
+        assert!(e.message.contains("version 4") && e.message.contains("not loaded"));
+        let e = ApiError::provenance("cnn_s", "sha256 mismatch on cnn_s_b1.hlo.txt");
+        assert_eq!((e.status, e.code), (409, "model.provenance"));
     }
 
     #[test]

@@ -85,6 +85,72 @@ impl Client {
         Self::expect_2xx(resp)
     }
 
+    // ---- typed registry helpers (versioned rollouts) ---------------------
+
+    /// `GET /v1/models` — the registry table (per-model versions, rollout
+    /// state, provenance).
+    pub fn models(&mut self) -> Result<Value> {
+        let resp = self.get("/v1/models")?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `POST /v1/models/:name/load?version=N` — compile one version.
+    pub fn load_model_version(&mut self, name: &str, version: u32) -> Result<Value> {
+        let resp = self.post(&format!("/v1/models/{name}/load?version={version}"), Vec::new())?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `POST /v1/models/:name/unload?version=N` — evict one version.
+    pub fn unload_model_version(&mut self, name: &str, version: u32) -> Result<Value> {
+        let resp =
+            self.post(&format!("/v1/models/{name}/unload?version={version}"), Vec::new())?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `GET /v1/models/:name/rollout` — the rollout state machine snapshot.
+    pub fn get_rollout(&mut self, name: &str) -> Result<Value> {
+        let resp = self.get(&format!("/v1/models/{name}/rollout"))?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `PUT /v1/models/:name/rollout` — start a pin/canary/shadow rollout.
+    /// `percent` applies to canary mode only.
+    pub fn set_rollout(
+        &mut self,
+        name: &str,
+        mode: &str,
+        version: u32,
+        percent: Option<u8>,
+    ) -> Result<Value> {
+        let mut body = vec![
+            ("mode".to_string(), Value::from(mode)),
+            ("version".to_string(), Value::from(version as u64)),
+        ];
+        if let Some(p) = percent {
+            body.push(("percent".to_string(), Value::from(p as u64)));
+        }
+        let resp = self.put_json(&format!("/v1/models/{name}/rollout"), &Value::Obj(body))?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `POST /v1/models/:name/promote` — the candidate becomes the pin.
+    pub fn promote(&mut self, name: &str) -> Result<Value> {
+        let resp = self.post(&format!("/v1/models/{name}/promote"), Vec::new())?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `POST /v1/models/:name/rollback` — return to the stable/previous pin.
+    pub fn rollback(&mut self, name: &str) -> Result<Value> {
+        let resp = self.post(&format!("/v1/models/{name}/rollback"), Vec::new())?;
+        Self::expect_2xx(resp)
+    }
+
+    /// `GET /v1/audit?n=N` — the most recent audit-trail records.
+    pub fn audit(&mut self, n: usize) -> Result<Value> {
+        let resp = self.get(&format!("/v1/audit?n={n}"))?;
+        Self::expect_2xx(resp)
+    }
+
     // ---- typed /v2 (Open Inference Protocol) helpers ---------------------
 
     /// `POST /v2/models/:name/infer` with one f32 tensor. `shape` is the
@@ -123,7 +189,9 @@ impl Client {
         }
     }
 
-    fn expect_2xx(resp: Response) -> Result<Value> {
+    /// Parse a 2xx response body, or bail with the server's taxonomy code
+    /// + message (understands both the /v1 envelope and the /v2 string).
+    pub fn expect_2xx(resp: Response) -> Result<Value> {
         let body = resp.json_body().unwrap_or(Value::Null);
         if (200..300).contains(&resp.status) {
             return Ok(body);

@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod http;
 pub mod imagepipe;
 pub mod json;
+pub mod registry;
 pub mod runtime;
 pub mod util;
 pub mod workload;

@@ -8,9 +8,14 @@
 //! flexserve predict          send a synthetic batch to a running server
 //! flexserve infer [MODEL]    send a synthetic batch via the /v2 protocol
 //! flexserve bench            closed-loop load test → BENCH_serve.json
-//! flexserve load MODEL       load a model into a running server (/v1)
-//! flexserve unload MODEL     unload a model from a running server (/v1)
+//! flexserve load MODEL       load a model (version) into a running server
+//! flexserve unload MODEL     unload a model (version) from a running server
 //! flexserve ensemble a,b,c   set the active membership of a running server
+//! flexserve rollout MODEL    inspect / drive the pin|canary|shadow rollout
+//! flexserve promote MODEL    promote the rollout candidate to the pin
+//! flexserve rollback MODEL   roll back to the stable/previous version
+//! flexserve audit            print the registry's audit trail
+//! flexserve rollout-smoke    device-free canary→rollback→promote cycle
 //! ```
 //!
 //! Flags after the subcommand: see `config::ServeConfig::apply_cli`.
@@ -20,7 +25,7 @@ use flexserve::baseline::{serve_baseline, BaselineConfig};
 use flexserve::benchkit::load::{self, LoadConfig};
 use flexserve::config::ServeConfig;
 use flexserve::coordinator::serve;
-use flexserve::http::{Client, Response, Server};
+use flexserve::http::{Client, Request, Response, Server};
 use flexserve::json::{self, Value};
 use flexserve::runtime::Manifest;
 use flexserve::util::Prng;
@@ -52,6 +57,11 @@ fn run(args: &[String]) -> Result<()> {
         "load" => cmd_lifecycle(rest, "load"),
         "unload" => cmd_lifecycle(rest, "unload"),
         "ensemble" => cmd_lifecycle(rest, "ensemble"),
+        "rollout" => cmd_rollout(rest),
+        "promote" => cmd_promote_rollback(rest, "promote"),
+        "rollback" => cmd_promote_rollback(rest, "rollback"),
+        "audit" => cmd_audit(rest),
+        "rollout-smoke" => cmd_rollout_smoke(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -76,8 +86,18 @@ fn print_usage() {
                             Protocol (default model: _ensemble)\n\
            bench            closed-loop load test a running server (BENCH_serve.json)\n\
            load MODEL       POST /v1/models/MODEL/load on a running server\n\
+                            (--version N loads one registry version)\n\
            unload MODEL     POST /v1/models/MODEL/unload on a running server\n\
+                            (--version N unloads one registry version)\n\
            ensemble a,b,c   PUT /v1/ensemble (set active membership)\n\
+           models --addr A  render a running server's registry table\n\
+           rollout MODEL    GET the rollout state; --pin N | --canary N\n\
+                            [--percent P] | --shadow N drive a transition\n\
+           promote MODEL    promote the rollout candidate to the pin\n\
+           rollback MODEL   roll back to the stable/previous version\n\
+           audit            GET /v1/audit (--n N records)\n\
+           rollout-smoke    drive a canary→auto-rollback→promote cycle on a\n\
+                            device-free in-process registry (CI smoke)\n\
          \n\
          COMMON FLAGS:\n\
            --artifacts DIR      artifact directory (default: ./artifacts)\n\
@@ -86,6 +106,8 @@ fn print_usage() {
            --http-workers N --device-workers N --models a,b\n\
            --no-batcher --max-batch N --batch-delay-us N\n\
            --queue-cap N --deadline-ms N --adaptive-window on|off\n\
+           --audit-log FILE --guardrail-error-rate F --guardrail-p95-ms N\n\
+           --guardrail-min-samples N\n\
            --no-verify --no-warmup --access-log --config FILE\n\
          SERVE-BASELINE FLAGS:\n\
            --fixed-batch N (default 1)\n\
@@ -97,6 +119,7 @@ fn print_usage() {
          BENCH FLAGS:\n\
            --connections K --duration-secs S --iters N --warmup N\n\
            --batch-mix 1:0.7,8:0.2,32:0.1 --protocol v1|v2 --path PATH --seed N\n\
+           --record-versions (served version distribution → BENCH_serve.json)\n\
            --concurrency-sweep 1,2,4,8 (one report record per step)\n\
            --out BENCH_serve.json --echo (in-process echo target; no artifacts)\n\
            --echo-queue-cap N --echo-delay-us N (echo admission gate: sheds\n\
@@ -186,6 +209,19 @@ fn cmd_serve_baseline(args: &[String]) -> Result<()> {
 }
 
 fn cmd_models(args: &[String]) -> Result<()> {
+    // Remote mode: `--addr` renders a running server's registry table
+    // (GET /v1/models) for humans; without it the local manifest prints,
+    // as it always has.
+    if let Some(i) = args.iter().position(|a| a == "--addr" || a.starts_with("--addr=")) {
+        let addr = match args[i].strip_prefix("--addr=") {
+            Some(v) => v.to_string(),
+            None => args
+                .get(i + 1)
+                .context("--addr needs a value")?
+                .clone(),
+        };
+        return cmd_models_remote(&addr);
+    }
     let mut shared = ServeConfig::default();
     shared.apply_cli(args)?;
     let manifest = Manifest::load(&shared.artifacts)?;
@@ -216,12 +252,75 @@ fn cmd_models(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The human-readable registry table behind `flexserve models --addr`.
+fn cmd_models_remote(addr: &str) -> Result<()> {
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = client.models()?;
+    let models = doc
+        .get("models")
+        .and_then(Value::as_arr)
+        .context("GET /v1/models returned no 'models' array")?;
+    let mut rows = Vec::new();
+    for m in models {
+        let name = m.get("name").and_then(Value::as_str).unwrap_or("?");
+        let status = m.get("status").and_then(Value::as_str).unwrap_or("?");
+        let active = m.get("version").and_then(Value::as_u64).unwrap_or(1);
+        let rollout = match m.path(&["rollout", "mode"]).and_then(Value::as_str) {
+            Some("canary") => format!(
+                "canary v{} @{}%",
+                m.path(&["rollout", "candidate"]).and_then(Value::as_u64).unwrap_or(0),
+                m.path(&["rollout", "percent"]).and_then(Value::as_u64).unwrap_or(0),
+            ),
+            Some("shadow") => format!(
+                "shadow v{}",
+                m.path(&["rollout", "candidate"]).and_then(Value::as_u64).unwrap_or(0),
+            ),
+            _ => "pin".to_string(),
+        };
+        let versions: Vec<String> = m
+            .get("versions")
+            .and_then(Value::as_arr)
+            .map(|vs| {
+                vs.iter()
+                    .map(|v| {
+                        format!(
+                            "v{}:{}",
+                            v.get("version").and_then(Value::as_u64).unwrap_or(0),
+                            v.get("status").and_then(Value::as_str).unwrap_or("?"),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let sha = m.get("params_sha256").and_then(Value::as_str).unwrap_or("");
+        rows.push(vec![
+            name.to_string(),
+            status.to_string(),
+            format!("v{active}"),
+            rollout,
+            versions.join(" "),
+            sha.chars().take(12).collect(),
+        ]);
+    }
+    print!(
+        "{}",
+        flexserve::benchkit::table(
+            "model registry",
+            &["model", "status", "serving", "rollout", "versions", "sha256[:12]"],
+            &rows,
+        )
+    );
+    Ok(())
+}
+
 fn cmd_verify(args: &[String]) -> Result<()> {
     let mut shared = ServeConfig::default();
     shared.apply_cli(args)?;
-    let manifest = Manifest::load(&shared.artifacts)?;
-    manifest.verify_all()?;
-    let n: usize = manifest.models.iter().map(|m| m.buckets.len()).sum();
+    // Verify the whole version store, not just the flat layout: every
+    // version subdirectory passes the same provenance gate.
+    let store = flexserve::registry::Store::discover(&shared.artifacts)?;
+    store.manifest.verify_all()?;
+    let n: usize = store.manifest.models.iter().map(|m| m.buckets.len()).sum();
     println!("ok: {n} artifacts match their manifest SHA-256s");
     Ok(())
 }
@@ -331,6 +430,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "--batch-mix" => cfg.batch_mix = workload::parse_batch_mix(&take("--batch-mix")?)?,
             "--protocol" => cfg.protocol = load::Protocol::parse(&take("--protocol")?)?,
             "--path" => cfg.path = Some(take("--path")?),
+            "--record-versions" => cfg.record_versions = true,
             "--seed" => cfg.seed = take("--seed")?.parse()?,
             "--out" => out = take("--out")?,
             "--echo" => echo = true,
@@ -481,14 +581,19 @@ fn spawn_echo_target(
 }
 
 /// `load` / `unload` / `ensemble` — the `/v1` control plane from the CLI,
-/// via the typed client helpers.
+/// via the typed client helpers (`--version N` targets one registry
+/// version of the model).
 fn cmd_lifecycle(args: &[String], action: &str) -> Result<()> {
     let mut addr = "127.0.0.1:8080".to_string();
+    let mut version: Option<u32> = None;
     let mut positional: Vec<String> = Vec::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
             "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            "--version" if action != "ensemble" => {
+                version = Some(it.next().context("--version needs a value")?.parse()?)
+            }
             other if other.starts_with("--") => bail!("unknown {action} flag '{other}'"),
             other => positional.push(other.to_string()),
         }
@@ -505,10 +610,12 @@ fn cmd_lifecycle(args: &[String], action: &str) -> Result<()> {
     }
     let target = positional.first().with_context(usage)?;
     let mut client = Client::connect(addr.parse()?)?;
-    let doc = match action {
-        "load" => client.load_model(target)?,
-        "unload" => client.unload_model(target)?,
-        "ensemble" => {
+    let doc = match (action, version) {
+        ("load", None) => client.load_model(target)?,
+        ("load", Some(v)) => client.load_model_version(target, v)?,
+        ("unload", None) => client.unload_model(target)?,
+        ("unload", Some(v)) => client.unload_model_version(target, v)?,
+        ("ensemble", _) => {
             let names: Vec<&str> = target.split(',').filter(|s| !s.is_empty()).collect();
             client.set_ensemble(&names)?
         }
@@ -516,6 +623,325 @@ fn cmd_lifecycle(args: &[String], action: &str) -> Result<()> {
     };
     println!("{}", json::to_string_pretty(&doc));
     Ok(())
+}
+
+/// A control-plane request carrying the CLI's actor identity (the audit
+/// trail records who drove each transition).
+fn cli_request(
+    client: &mut Client,
+    method: &str,
+    path: &str,
+    body: Option<&Value>,
+) -> Result<Value> {
+    let bytes = body.map(|v| json::to_string(v).into_bytes()).unwrap_or_default();
+    let mut req = Request::new(method, path, bytes);
+    req.headers.push(("x-actor".into(), "cli".into()));
+    if body.is_some() {
+        req.headers.push(("content-type".into(), "application/json".into()));
+    }
+    let resp = client.request(&req)?;
+    Client::expect_2xx(resp)
+}
+
+/// `flexserve rollout MODEL` — inspect (no mode flag) or drive the
+/// rollout state machine (`--pin N` / `--canary N [--percent P]` /
+/// `--shadow N`).
+fn cmd_rollout(args: &[String]) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut mode: Option<(&str, u32)> = None;
+    let mut percent: Option<u64> = None;
+    let mut positional: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut take = |flag: &str| -> Result<String> {
+            it.next().cloned().with_context(|| format!("{flag} needs a value"))
+        };
+        match a.as_str() {
+            "--addr" => addr = take("--addr")?,
+            "--pin" => mode = Some(("pin", take("--pin")?.parse()?)),
+            "--canary" => mode = Some(("canary", take("--canary")?.parse()?)),
+            "--shadow" => mode = Some(("shadow", take("--shadow")?.parse()?)),
+            "--percent" => percent = Some(take("--percent")?.parse()?),
+            other if other.starts_with("--") => bail!("unknown rollout flag '{other}'"),
+            other => positional.push(other.to_string()),
+        }
+    }
+    let model = positional.first().context(
+        "usage: flexserve rollout MODEL [--pin N | --canary N [--percent P] | --shadow N]",
+    )?;
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = match mode {
+        None => client.get_rollout(model)?,
+        Some((kind, version)) => {
+            let mut body = vec![
+                ("mode".to_string(), Value::from(kind)),
+                ("version".to_string(), Value::from(version as u64)),
+            ];
+            if let Some(p) = percent {
+                body.push(("percent".to_string(), Value::from(p)));
+            }
+            cli_request(
+                &mut client,
+                "PUT",
+                &format!("/v1/models/{model}/rollout"),
+                Some(&Value::Obj(body)),
+            )?
+        }
+    };
+    println!("{}", json::to_string_pretty(&doc));
+    Ok(())
+}
+
+/// `flexserve promote MODEL` / `flexserve rollback MODEL`.
+fn cmd_promote_rollback(args: &[String], action: &str) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut positional: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            other if other.starts_with("--") => bail!("unknown {action} flag '{other}'"),
+            other => positional.push(other.to_string()),
+        }
+    }
+    let model = positional
+        .first()
+        .with_context(|| format!("usage: flexserve {action} MODEL [--addr HOST:PORT]"))?;
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = cli_request(
+        &mut client,
+        "POST",
+        &format!("/v1/models/{model}/{action}"),
+        None,
+    )?;
+    println!("{}", json::to_string_pretty(&doc));
+    Ok(())
+}
+
+/// `flexserve audit [--n N]` — print the registry audit trail.
+fn cmd_audit(args: &[String]) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut n = 50usize;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            "--n" => n = it.next().context("--n needs a value")?.parse()?,
+            other => bail!("unknown audit flag '{other}'"),
+        }
+    }
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = client.audit(n)?;
+    println!("{}", json::to_string_pretty(&doc));
+    Ok(())
+}
+
+/// The device-free rollout smoke (CI): a real [`flexserve::registry`]
+/// over a synthetic 2-version catalog served by an echo HTTP handler —
+/// drives canary → deterministic split check → injected failures →
+/// auto-rollback → canary again → promote → explicit rollback, then
+/// prints the audit trail and the per-version Prometheus counters for
+/// the workflow to grep. Exits nonzero on any assertion failure.
+fn cmd_rollout_smoke(args: &[String]) -> Result<()> {
+    use flexserve::coordinator::Metrics;
+    use flexserve::registry::{canary_pick, Guardrails, Registry, RegistryConfig, Store};
+
+    let mut audit_log: Option<std::path::PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--audit-log" => {
+                audit_log = Some(it.next().context("--audit-log needs a value")?.into())
+            }
+            other => bail!("unknown rollout-smoke flag '{other}'"),
+        }
+    }
+
+    let metrics = Arc::new(Metrics::new());
+    let registry = Arc::new(Registry::new(
+        Store::synthetic(&[("echo", 2)]),
+        RegistryConfig {
+            audit_log,
+            guardrails: Guardrails {
+                max_error_rate: 0.5,
+                max_p95_us: 0,
+                min_samples: 10,
+            },
+        },
+        Arc::clone(&metrics),
+    )?);
+    let handle = spawn_registry_echo(Arc::clone(&registry), Arc::clone(&metrics))?;
+    let mut c = Client::connect(handle.addr)?;
+
+    // Fresh registries pin version 1.
+    let doc = c.get_rollout("echo")?;
+    anyhow::ensure!(
+        doc.get("mode").and_then(Value::as_str) == Some("pin")
+            && doc.get("active_version").and_then(Value::as_u64) == Some(1),
+        "unexpected initial rollout state: {doc}"
+    );
+
+    // Canary v2 at 25%: the split must match the pure hash rule, id by id.
+    const PERCENT: u8 = 25;
+    c.set_rollout("echo", "canary", 2, Some(PERCENT))?;
+    let served_version = |c: &mut Client, rid: &str, fail: bool| -> Result<(u16, u64)> {
+        let mut req = Request::new("POST", "/v1/predict", b"{}".to_vec());
+        req.headers.push(("x-request-id".into(), rid.into()));
+        if fail {
+            req.headers.push(("x-inject-fail".into(), "1".into()));
+        }
+        let resp = c.request(&req)?;
+        let v = resp
+            .json_body()
+            .ok()
+            .and_then(|b| b.get("version").and_then(Value::as_u64))
+            .unwrap_or(0);
+        Ok((resp.status, v))
+    };
+    let (mut v1_hits, mut v2_hits) = (0u32, 0u32);
+    for i in 0..200 {
+        let rid = format!("req-{i}");
+        let (status, version) = served_version(&mut c, &rid, false)?;
+        anyhow::ensure!(status == 200, "predict {rid} failed with {status}");
+        let expect = if canary_pick(&rid, PERCENT) { 2 } else { 1 };
+        anyhow::ensure!(
+            version == expect,
+            "{rid}: served v{version}, hash split says v{expect}"
+        );
+        if version == 2 { v2_hits += 1 } else { v1_hits += 1 }
+        // Determinism: the same id re-sent lands on the same version.
+        let (_, again) = served_version(&mut c, &rid, false)?;
+        anyhow::ensure!(again == version, "{rid}: split not deterministic");
+    }
+    anyhow::ensure!(v1_hits > 0 && v2_hits > 0, "degenerate split {v1_hits}/{v2_hits}");
+    println!("canary split over 200 ids: v1={v1_hits} v2={v2_hits} (target ~{PERCENT}%)");
+
+    // Restart the canary with a clean window, then fail candidate-routed
+    // requests until the error-rate guardrail trips auto-rollback.
+    c.set_rollout("echo", "canary", 2, Some(PERCENT))?;
+    let mut injected = 0;
+    let mut i = 0;
+    while injected < 12 {
+        let rid = format!("fail-{i}");
+        i += 1;
+        anyhow::ensure!(i < 10_000, "could not find candidate-routed ids");
+        if !canary_pick(&rid, PERCENT) {
+            continue;
+        }
+        let (status, _) = served_version(&mut c, &rid, true)?;
+        anyhow::ensure!(status == 500, "injected failure returned {status}");
+        injected += 1;
+    }
+    let doc = c.get_rollout("echo")?;
+    anyhow::ensure!(
+        doc.get("mode").and_then(Value::as_str) == Some("pin")
+            && doc.get("active_version").and_then(Value::as_u64) == Some(1),
+        "guardrail did not auto-roll back: {doc}"
+    );
+    println!("auto-rollback tripped after {injected} injected candidate failures");
+
+    // A healthy second attempt promotes, then rolls back explicitly.
+    c.set_rollout("echo", "canary", 2, Some(PERCENT))?;
+    let doc = c.promote("echo")?;
+    anyhow::ensure!(
+        doc.get("active_version").and_then(Value::as_u64) == Some(2),
+        "promote did not pin v2: {doc}"
+    );
+    let doc = c.rollback("echo")?;
+    anyhow::ensure!(
+        doc.get("active_version").and_then(Value::as_u64) == Some(1),
+        "rollback did not return to v1: {doc}"
+    );
+
+    // Evidence for the CI greps: the audit trail and the per-version
+    // counters in the standard Prometheus exposition.
+    let audit = c.audit(50)?;
+    println!("audit trail:\n{}", json::to_string_pretty(&audit));
+    let resp = c.get("/v1/metrics?format=prometheus")?;
+    print!("{}", String::from_utf8_lossy(&resp.body));
+    handle.stop();
+    println!("rollout-smoke OK");
+    Ok(())
+}
+
+/// The `--echo`-style device-free server behind `rollout-smoke`: the REAL
+/// registry (resolution, guardrails, audit, per-version metrics) with a
+/// no-op "device" — predicts echo the version the registry routed them
+/// to, and `x-inject-fail` turns one request into a candidate failure.
+fn spawn_registry_echo(
+    registry: Arc<flexserve::registry::Registry>,
+    metrics: Arc<flexserve::coordinator::Metrics>,
+) -> Result<flexserve::http::ServerHandle> {
+    use flexserve::coordinator::ApiError;
+    let render = |r: std::result::Result<Value, ApiError>| match r {
+        Ok(doc) => Response::json(200, &doc),
+        Err(e) => e.to_response(),
+    };
+    Server::spawn(
+        "127.0.0.1:0",
+        4,
+        Arc::new(move |req: &flexserve::http::Request| {
+            let path = req.path.as_str();
+            let actor = req.header("x-actor").unwrap_or("smoke").to_string();
+            if req.method == "GET" && path == "/v1/metrics" {
+                return match req.query_param("format") {
+                    Some("prometheus") => Response::text(200, &metrics.render_prometheus()),
+                    Some("json") => Response::json(200, &metrics.render_json()),
+                    _ => Response::text(200, &metrics.render_text()),
+                };
+            }
+            if req.method == "GET" && path == "/v1/audit" {
+                return Response::json(
+                    200,
+                    &json::obj([("audit", Value::Arr(registry.audit().tail(100)))]),
+                );
+            }
+            if let Some(rest) = path.strip_prefix("/v1/models/") {
+                if let Some(model) = rest.strip_suffix("/rollout") {
+                    return match req.method.as_str() {
+                        "GET" => render(registry.rollout_doc(model)),
+                        "PUT" => match req.json_body() {
+                            Err(e) => ApiError::malformed_json(e).to_response(),
+                            Ok(body) => {
+                                render(registry.apply_rollout(model, &body, &actor, &|_| true))
+                            }
+                        },
+                        _ => Response::coded_error(405, "route.method_not_allowed", "GET or PUT"),
+                    };
+                }
+                if let Some(model) = rest.strip_suffix("/promote") {
+                    return render(registry.promote(model, &actor));
+                }
+                if let Some(model) = rest.strip_suffix("/rollback") {
+                    return render(registry.rollback(model, &actor, "operator request", &|_| true));
+                }
+            }
+            if req.method == "POST" {
+                // Any other POST is a "predict": route it through the real
+                // registry and record the outcome it would have had.
+                return match registry.resolve("echo", None, req.header("x-request-id"), &|_| true)
+                {
+                    Err(e) => e.to_response(),
+                    Ok(route) => {
+                        let fail = req.header("x-inject-fail").is_some();
+                        registry.record_outcome("echo", route.version, !fail, 100);
+                        if fail {
+                            ApiError::internal("injected candidate failure").to_response()
+                        } else {
+                            Response::json(
+                                200,
+                                &json::obj([
+                                    ("version", Value::from(route.version as u64)),
+                                    ("slot", Value::from(route.slot)),
+                                ]),
+                            )
+                        }
+                    }
+                };
+            }
+            Response::coded_error(404, "route.not_found", "no such route")
+        }),
+    )
 }
 
 fn park_forever() -> ! {

@@ -1,0 +1,181 @@
+//! Append-only audit trail for the model registry: every lifecycle and
+//! rollout transition (load, unload, pin, canary, shadow, promote,
+//! rollback, shed) is recorded with the actor, a wall-clock timestamp, and
+//! the provenance (`params_sha256`) of both versions involved — the
+//! paper's "control over model evolution" made inspectable.
+//!
+//! Records land in two places: an in-memory ring (served on
+//! `GET /v1/audit`, always on) and, when configured, a JSONL file (one
+//! compact JSON object per line, append-only — `flexserve audit` and the
+//! CI rollout smoke read it).
+
+use crate::json::{self, Value};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// One transition, pre-rendering. `from`/`to` carry `(version, sha256)`;
+/// events that involve a single version (load/unload) use `to` only.
+pub struct Event<'a> {
+    /// `load` | `unload` | `pin` | `canary` | `shadow` | `promote` |
+    /// `rollback` | `shed`.
+    pub event: &'a str,
+    pub model: &'a str,
+    /// Who drove the transition (`x-actor` header, `cli`, `api`, ...).
+    pub actor: &'a str,
+    pub from: Option<(u32, &'a str)>,
+    pub to: Option<(u32, &'a str)>,
+    /// Free-form context (guardrail breach reason, canary percent, ...).
+    pub detail: &'a str,
+}
+
+/// How many records the in-memory ring retains for `GET /v1/audit`.
+const RING_CAP: usize = 512;
+
+pub struct AuditLog {
+    ring: Mutex<VecDeque<Value>>,
+    file: Option<Mutex<std::fs::File>>,
+    path: Option<PathBuf>,
+}
+
+impl AuditLog {
+    /// Open the audit log; `path = None` keeps the in-memory ring only.
+    /// The file is opened in append mode (restarts extend the trail).
+    pub fn open(path: Option<PathBuf>) -> anyhow::Result<AuditLog> {
+        let file = match &path {
+            None => None,
+            Some(p) => Some(Mutex::new(
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(p)
+                    .map_err(|e| anyhow::anyhow!("opening audit log {p:?}: {e}"))?,
+            )),
+        };
+        Ok(AuditLog {
+            ring: Mutex::new(VecDeque::with_capacity(64)),
+            file,
+            path,
+        })
+    }
+
+    /// Where the durable trail lives (None = memory only).
+    pub fn path(&self) -> Option<&PathBuf> {
+        self.path.as_ref()
+    }
+
+    /// Record one transition (never fails the caller: a full disk must not
+    /// take the control plane down — the ring keeps the recent history).
+    pub fn record(&self, ev: Event<'_>) {
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut members: Vec<(String, Value)> = vec![
+            ("ts_ms".into(), Value::from(ts_ms)),
+            ("event".into(), Value::from(ev.event)),
+            ("model".into(), Value::from(ev.model)),
+            ("actor".into(), Value::from(ev.actor)),
+        ];
+        if let Some((v, sha)) = ev.from {
+            members.push(("from_version".into(), Value::from(v as u64)));
+            members.push(("from_sha256".into(), Value::from(sha)));
+        }
+        if let Some((v, sha)) = ev.to {
+            members.push(("to_version".into(), Value::from(v as u64)));
+            members.push(("to_sha256".into(), Value::from(sha)));
+        }
+        if !ev.detail.is_empty() {
+            members.push(("detail".into(), Value::from(ev.detail)));
+        }
+        let doc = Value::Obj(members);
+        if let Some(file) = &self.file {
+            let line = json::to_string(&doc);
+            let mut f = file.lock().unwrap();
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(doc);
+    }
+
+    /// The most recent `n` records, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<Value> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Total records seen this process (ring may have evicted older ones).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev<'a>(event: &'a str, model: &'a str) -> Event<'a> {
+        Event {
+            event,
+            model,
+            actor: "test",
+            from: Some((1, "sha-old")),
+            to: Some((2, "sha-new")),
+            detail: "because",
+        }
+    }
+
+    #[test]
+    fn records_ring_and_tail() {
+        let log = AuditLog::open(None).unwrap();
+        assert!(log.is_empty());
+        log.record(ev("canary", "m"));
+        log.record(ev("promote", "m"));
+        let tail = log.tail(10);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[0].get("event").unwrap().as_str(), Some("canary"));
+        assert_eq!(tail[1].get("event").unwrap().as_str(), Some("promote"));
+        assert_eq!(tail[1].get("from_version").unwrap().as_u64(), Some(1));
+        assert_eq!(tail[1].get("to_sha256").unwrap().as_str(), Some("sha-new"));
+        assert_eq!(tail[1].get("actor").unwrap().as_str(), Some("test"));
+        assert!(tail[1].get("ts_ms").unwrap().as_u64().is_some());
+        // tail(1) returns only the newest.
+        assert_eq!(log.tail(1)[0].get("event").unwrap().as_str(), Some("promote"));
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let path = std::env::temp_dir().join("flexserve_audit_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = AuditLog::open(Some(path.clone())).unwrap();
+        log.record(ev("load", "m"));
+        log.record(ev("rollback", "m"));
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        // Every line is one complete JSON object with the stable fields.
+        for line in &lines {
+            let v = json::parse(line).unwrap();
+            assert!(v.get("ts_ms").is_some() && v.get("event").is_some());
+        }
+        assert!(lines[1].contains(r#""event":"rollback""#), "{}", lines[1]);
+        // Append mode: a reopened log extends, never truncates.
+        let log = AuditLog::open(Some(path.clone())).unwrap();
+        log.record(ev("pin", "m"));
+        drop(log);
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+}

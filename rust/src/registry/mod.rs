@@ -1,0 +1,1086 @@
+//! The model registry: versioned serving with controlled evolution — the
+//! paper's motivating complaint ("insufficient information regarding
+//! underlying model provenance and the lack of control over model
+//! evolution") answered as a subsystem.
+//!
+//! * [`store`] — discovers the versioned artifact layout
+//!   (`artifacts/<model>/<version>/`, SHA-256-pinned; the flat layout is
+//!   version 1) and merges every version into one pool-facing manifest of
+//!   slots;
+//! * [`rollout`] — the traffic-split state machine: `pin` one version,
+//!   `canary` a deterministic hash split by request id, or `shadow`-mirror
+//!   traffic off the hot path, with sliding-window guardrails;
+//! * [`audit`] — the append-only JSONL trail every transition lands in,
+//!   with actor, timestamp, and both versions' `params_sha256`.
+//!
+//! The [`Registry`] ties them together and owns the side effects: request
+//! routing ([`Registry::resolve`]), per-version metrics, guardrail
+//! evaluation with **auto-rollback**, and transition bookkeeping. It is
+//! deliberately device-free — the coordinator glues it to the
+//! `ExecutorPool` through a `loaded` oracle, and device-free harnesses
+//! (`flexserve rollout-smoke`, unit tests) drive the same code over a
+//! synthetic catalog.
+
+pub mod audit;
+pub mod rollout;
+pub mod store;
+
+pub use audit::AuditLog;
+pub use rollout::{canary_pick, Guardrails, Mode, WindowStats};
+pub use store::Store;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::wire::ApiError;
+use crate::json::{self, Value};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Registry knobs (`server.example.json`'s `registry` block; CLI
+/// `--audit-log` / `--guardrail-*`).
+#[derive(Debug, Clone, Default)]
+pub struct RegistryConfig {
+    /// Durable JSONL audit trail (None = in-memory ring only, still
+    /// served on `GET /v1/audit`).
+    pub audit_log: Option<PathBuf>,
+    /// Default auto-rollback guardrails (per-rollout overrides via the
+    /// `PUT .../rollout` body).
+    pub guardrails: Guardrails,
+}
+
+/// One resolved request route: which slot serves it, plus the shadow
+/// mirror target when a shadow rollout is underway. (Provenance is not
+/// carried here — renderers that need the served version's sha fetch it
+/// from the store; the hot path must not clone it per request.)
+#[derive(Debug, Clone)]
+pub struct Route {
+    /// Pool slot the request executes on (`"m"` / `"m@2"`).
+    pub slot: String,
+    pub version: u32,
+    /// `(slot, version)` to mirror this request to off the hot path.
+    pub shadow: Option<(String, u32)>,
+}
+
+struct ModelState {
+    mode: Mode,
+    /// The version that was active before the current mode took effect —
+    /// what an explicit `rollback` after a promote returns to.
+    previous: u32,
+    guardrails: Guardrails,
+}
+
+/// Pre-rendered per-version metric names (`ver_<model>_v<N>_*`) — the
+/// catalog is fixed at discovery, so the predict hot path never formats
+/// or sanitizes a name.
+struct VersionSeries {
+    requests: String,
+    errors: String,
+    latency: String,
+    shadow_requests: String,
+    shadow_mismatch: String,
+}
+
+pub struct Registry {
+    store: Store,
+    state: RwLock<HashMap<String, ModelState>>,
+    /// Sliding-window health per (model, candidate version).
+    stats: Mutex<HashMap<(String, u32), WindowStats>>,
+    /// One entry per catalog (model, version); tiny, scanned linearly.
+    series: Vec<(String, u32, VersionSeries)>,
+    audit: AuditLog,
+    metrics: Arc<Metrics>,
+    default_guardrails: Guardrails,
+}
+
+/// Fallback canary assignment for requests without an `x-request-id`.
+static CANARY_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl Registry {
+    pub fn new(
+        store: Store,
+        config: RegistryConfig,
+        metrics: Arc<Metrics>,
+    ) -> anyhow::Result<Registry> {
+        let mut series = Vec::new();
+        for model in store.model_names() {
+            for &v in store.versions(&model).unwrap_or(&[]) {
+                let name = |kind: &str| metric_name(&model, v, kind);
+                series.push((
+                    model.clone(),
+                    v,
+                    VersionSeries {
+                        requests: name("requests_total"),
+                        errors: name("errors_total"),
+                        latency: name("latency_us"),
+                        shadow_requests: name("shadow_requests_total"),
+                        shadow_mismatch: name("shadow_mismatch_total"),
+                    },
+                ));
+            }
+        }
+        Ok(Registry {
+            store,
+            state: RwLock::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+            series,
+            audit: AuditLog::open(config.audit_log)?,
+            metrics,
+            default_guardrails: config.guardrails,
+        })
+    }
+
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    pub fn audit(&self) -> &AuditLog {
+        &self.audit
+    }
+
+    /// Bare model names, manifest-ordered.
+    pub fn model_names(&self) -> Vec<String> {
+        self.store.model_names()
+    }
+
+    /// The version client traffic is primarily served from (pin target /
+    /// canary-shadow stable). None = unknown model.
+    pub fn active_version(&self, model: &str) -> Option<u32> {
+        self.store.versions(model)?;
+        Some(self.mode_of(model).active())
+    }
+
+    /// Current rollout mode (unknown models report the default pin@1; the
+    /// callers gate on model existence first).
+    pub fn mode_of(&self, model: &str) -> Mode {
+        self.state
+            .read()
+            .unwrap()
+            .get(model)
+            .map(|st| st.mode)
+            .unwrap_or(Mode::Pin { version: 1 })
+    }
+
+    fn sha_of(&self, model: &str, version: u32) -> String {
+        self.store
+            .entry(model, version)
+            .map(|e| e.params_sha256.clone())
+            .unwrap_or_default()
+    }
+
+    /// The precomputed metric names of one catalog (model, version).
+    fn series(&self, model: &str, version: u32) -> Option<&VersionSeries> {
+        self.series
+            .iter()
+            .find(|(m, v, _)| *v == version && m == model)
+            .map(|(_, _, s)| s)
+    }
+
+    // ---- request routing -------------------------------------------------
+
+    /// Resolve which version serves one request.
+    ///
+    /// `pin` is the client's explicit `version` parameter — it bypasses
+    /// the rollout split and fails typed (`model.version_unknown`) when
+    /// the version is absent or not loaded. Without a pin the rollout
+    /// mode decides: canary assignment hashes `request_id` so a given id
+    /// always lands on the same version (requests without an id draw from
+    /// a process-wide sequence, matching the split in expectation).
+    /// `loaded` is the pool oracle (slot → resident?).
+    pub fn resolve(
+        &self,
+        model: &str,
+        pin: Option<u32>,
+        request_id: Option<&str>,
+        loaded: &dyn Fn(&str) -> bool,
+    ) -> Result<Route, ApiError> {
+        if self.store.versions(model).is_none() {
+            return Err(ApiError::unknown_model(model));
+        }
+        let route = |e: &crate::runtime::ModelEntry, shadow: Option<(String, u32)>| Route {
+            slot: e.name.clone(),
+            version: e.version,
+            shadow,
+        };
+        if let Some(v) = pin {
+            let e = self
+                .store
+                .entry(model, v)
+                .ok_or_else(|| ApiError::version_unknown(model, v, "not in the registry"))?;
+            if !loaded(&e.name) {
+                return Err(ApiError::version_unknown(model, v, "not loaded"));
+            }
+            return Ok(route(e, None));
+        }
+        // Default routing failures keep the bare-model taxonomy
+        // (`model.not_loaded`): the client asked for the model, not a
+        // specific version.
+        let serve = |v: u32| -> Result<&crate::runtime::ModelEntry, ApiError> {
+            let e = self
+                .store
+                .entry(model, v)
+                .ok_or_else(|| ApiError::model_not_loaded(model))?;
+            if !loaded(&e.name) {
+                return Err(ApiError::model_not_loaded(model));
+            }
+            Ok(e)
+        };
+        match self.mode_of(model) {
+            Mode::Pin { version } => Ok(route(serve(version)?, None)),
+            Mode::Canary { stable, candidate, percent } => {
+                let pick_candidate = match request_id {
+                    Some(id) => canary_pick(id, percent),
+                    None => (CANARY_SEQ.fetch_add(1, Ordering::Relaxed) % 100) < percent as u64,
+                };
+                if pick_candidate {
+                    // A candidate unloaded out from under an in-flight
+                    // canary degrades to stable (the unload hook sheds the
+                    // rollout; this covers the race window).
+                    if let Some(e) = self.store.entry(model, candidate).filter(|e| loaded(&e.name))
+                    {
+                        return Ok(route(e, None));
+                    }
+                }
+                Ok(route(serve(stable)?, None))
+            }
+            Mode::Shadow { stable, candidate } => {
+                let e = serve(stable)?;
+                let shadow = self
+                    .store
+                    .entry(model, candidate)
+                    .filter(|c| loaded(&c.name))
+                    .map(|c| (c.name.clone(), candidate));
+                Ok(route(e, shadow))
+            }
+        }
+    }
+
+    // ---- outcome recording + auto-rollback -------------------------------
+
+    /// Record one served (or mirrored) request outcome against a version:
+    /// per-version counters/latency land in the metrics registry, and —
+    /// when `version` is the in-flight rollout candidate — the sliding
+    /// window updates and the guardrails run. A breach rolls the model
+    /// back to its stable version immediately (audited, metered).
+    pub fn record_outcome(&self, model: &str, version: u32, ok: bool, latency_us: u64) {
+        if let Some(series) = self.series(model, version) {
+            self.metrics.inc(&series.requests);
+            if !ok {
+                self.metrics.inc(&series.errors);
+            }
+            self.metrics.observe_micros(&series.latency, latency_us);
+        }
+
+        let (is_candidate, guardrails, stable) = {
+            let state = self.state.read().unwrap();
+            match state.get(model) {
+                Some(st) => (
+                    st.mode.candidate() == Some(version),
+                    st.guardrails,
+                    st.mode.active(),
+                ),
+                None => return,
+            }
+        };
+        if !is_candidate {
+            return;
+        }
+        let reason = {
+            let mut stats = self.stats.lock().unwrap();
+            let w = stats
+                .entry((model.to_string(), version))
+                .or_insert_with(|| WindowStats::new(rollout::WINDOW_CAP));
+            w.record(ok, latency_us);
+            rollout::breach(w, &guardrails)
+        };
+        if let Some(reason) = reason {
+            self.auto_rollback(model, version, stable, &reason);
+        }
+    }
+
+    /// Record one shadow-mirror outcome: dedicated mirror counters (plus
+    /// output-comparison mismatches) on top of the normal per-version
+    /// window/guardrail accounting.
+    pub fn record_shadow(
+        &self,
+        model: &str,
+        version: u32,
+        ok: bool,
+        mismatch: bool,
+        latency_us: u64,
+    ) {
+        if let Some(series) = self.series(model, version) {
+            self.metrics.inc(&series.shadow_requests);
+            if mismatch {
+                self.metrics.inc(&series.shadow_mismatch);
+            }
+        }
+        self.record_outcome(model, version, ok, latency_us);
+    }
+
+    fn auto_rollback(&self, model: &str, candidate: u32, stable: u32, reason: &str) {
+        {
+            let mut state = self.state.write().unwrap();
+            let Some(st) = state.get_mut(model) else { return };
+            // Another thread may have transitioned first.
+            if st.mode.candidate() != Some(candidate) {
+                return;
+            }
+            st.mode = Mode::Pin { version: stable };
+            st.previous = stable;
+        }
+        self.clear_window(model, candidate);
+        self.metrics.inc("rollout_rollbacks_total");
+        let (from_sha, to_sha) = (self.sha_of(model, candidate), self.sha_of(model, stable));
+        self.audit.record(audit::Event {
+            event: "rollback",
+            model,
+            actor: "guardrail",
+            from: Some((candidate, &from_sha)),
+            to: Some((stable, &to_sha)),
+            detail: reason,
+        });
+    }
+
+    fn clear_window(&self, model: &str, version: u32) {
+        self.stats
+            .lock()
+            .unwrap()
+            .remove(&(model.to_string(), version));
+    }
+
+    // ---- transitions -----------------------------------------------------
+
+    /// Apply a `PUT /v1/models/:name/rollout` body:
+    /// `{"mode": "pin"|"canary"|"shadow", "version": V, "percent": P,
+    ///   "guardrails": {"max_error_rate", "max_p95_ms", "min_samples"}}`.
+    /// Returns the post-transition rollout document.
+    pub fn apply_rollout(
+        &self,
+        model: &str,
+        body: &Value,
+        actor: &str,
+        loaded: &dyn Fn(&str) -> bool,
+    ) -> Result<Value, ApiError> {
+        if self.store.versions(model).is_none() {
+            return Err(ApiError::unknown_model(model));
+        }
+        let mode_s = body
+            .get("mode")
+            .and_then(Value::as_str)
+            .ok_or_else(|| ApiError::bad_value("'mode' must be 'pin', 'canary' or 'shadow'"))?;
+        let version: u32 = body
+            .get("version")
+            .and_then(Value::as_u64)
+            .and_then(|v| u32::try_from(v).ok())
+            .filter(|&v| v >= 1)
+            .ok_or_else(|| ApiError::bad_value("'version' must be a positive integer"))?;
+        let entry = self
+            .store
+            .entry(model, version)
+            .ok_or_else(|| ApiError::version_unknown(model, version, "not in the registry"))?;
+        if !loaded(&entry.name) {
+            return Err(ApiError::version_unknown(
+                model,
+                version,
+                &format!("not loaded (POST /v1/models/{model}/load?version={version} first)"),
+            ));
+        }
+        let guardrails = parse_guardrails(body.get("guardrails"), self.default_guardrails)?;
+        let stable = self.active_version(model).unwrap_or(1);
+        let (mode, event, detail) = match mode_s {
+            "pin" => (Mode::Pin { version }, "pin", String::new()),
+            "canary" => {
+                if version == stable {
+                    return Err(ApiError::bad_value(
+                        "canary candidate must differ from the active version",
+                    ));
+                }
+                let percent = match body.get("percent") {
+                    None => 10,
+                    Some(p) => p
+                        .as_u64()
+                        .and_then(|v| u8::try_from(v).ok())
+                        .filter(|&v| (1..=99).contains(&v))
+                        .ok_or_else(|| ApiError::bad_value("'percent' must be 1..=99"))?,
+                };
+                (
+                    Mode::Canary { stable, candidate: version, percent },
+                    "canary",
+                    format!("percent={percent}"),
+                )
+            }
+            "shadow" => {
+                if version == stable {
+                    return Err(ApiError::bad_value(
+                        "shadow candidate must differ from the active version",
+                    ));
+                }
+                (Mode::Shadow { stable, candidate: version }, "shadow", String::new())
+            }
+            other => {
+                return Err(ApiError::bad_value(format!(
+                    "unknown rollout mode '{other}' (pin, canary, shadow)"
+                )))
+            }
+        };
+        {
+            let mut state = self.state.write().unwrap();
+            let st = state.entry(model.to_string()).or_insert(ModelState {
+                mode: Mode::Pin { version: 1 },
+                previous: 1,
+                guardrails: self.default_guardrails,
+            });
+            st.previous = stable;
+            st.mode = mode;
+            st.guardrails = guardrails;
+        }
+        // A fresh rollout starts with a clean candidate window.
+        if let Some(c) = mode.candidate() {
+            self.clear_window(model, c);
+        }
+        let (from_sha, to_sha) = (self.sha_of(model, stable), self.sha_of(model, version));
+        self.audit.record(audit::Event {
+            event,
+            model,
+            actor,
+            from: Some((stable, &from_sha)),
+            to: Some((version, &to_sha)),
+            detail: &detail,
+        });
+        self.rollout_doc(model)
+    }
+
+    /// Promote the in-flight candidate to the pinned serving version.
+    pub fn promote(&self, model: &str, actor: &str) -> Result<Value, ApiError> {
+        if self.store.versions(model).is_none() {
+            return Err(ApiError::unknown_model(model));
+        }
+        let (stable, candidate) = {
+            let state = self.state.read().unwrap();
+            let mode = state
+                .get(model)
+                .map(|st| st.mode)
+                .unwrap_or(Mode::Pin { version: 1 });
+            match mode.candidate() {
+                Some(c) => (mode.active(), c),
+                None => {
+                    return Err(ApiError::bad_value(format!(
+                        "no rollout in progress for '{model}': nothing to promote"
+                    )))
+                }
+            }
+        };
+        {
+            let mut state = self.state.write().unwrap();
+            let Some(st) = state.get_mut(model) else {
+                return Err(ApiError::bad_value(format!(
+                    "no rollout in progress for '{model}': nothing to promote"
+                )));
+            };
+            if st.mode.candidate() != Some(candidate) {
+                return Err(ApiError::bad_value(format!(
+                    "rollout for '{model}' changed underfoot; re-check GET .../rollout"
+                )));
+            }
+            st.previous = stable;
+            st.mode = Mode::Pin { version: candidate };
+        }
+        self.clear_window(model, candidate);
+        self.metrics.inc("rollout_promotes_total");
+        let (from_sha, to_sha) = (self.sha_of(model, stable), self.sha_of(model, candidate));
+        self.audit.record(audit::Event {
+            event: "promote",
+            model,
+            actor,
+            from: Some((stable, &from_sha)),
+            to: Some((candidate, &to_sha)),
+            detail: "",
+        });
+        self.rollout_doc(model)
+    }
+
+    /// Roll back: mid-rollout → abandon the candidate and pin stable;
+    /// after a promote → pin the previously-active version. The target
+    /// must still be loaded (`loaded` is the pool oracle): the emergency
+    /// control must never pin a model onto a version that cannot serve.
+    pub fn rollback(
+        &self,
+        model: &str,
+        actor: &str,
+        reason: &str,
+        loaded: &dyn Fn(&str) -> bool,
+    ) -> Result<Value, ApiError> {
+        if self.store.versions(model).is_none() {
+            return Err(ApiError::unknown_model(model));
+        }
+        let (from, target) = {
+            let mut state = self.state.write().unwrap();
+            let st = state.entry(model.to_string()).or_insert(ModelState {
+                mode: Mode::Pin { version: 1 },
+                previous: 1,
+                guardrails: self.default_guardrails,
+            });
+            let (from, target) = match st.mode {
+                Mode::Canary { stable, candidate, .. } | Mode::Shadow { stable, candidate } => {
+                    (candidate, stable)
+                }
+                Mode::Pin { version } if st.previous != version => (version, st.previous),
+                Mode::Pin { version } => {
+                    return Err(ApiError::bad_value(format!(
+                        "'{model}' is pinned at version {version} with no previous version: \
+                         nothing to roll back"
+                    )))
+                }
+            };
+            let entry = self
+                .store
+                .entry(model, target)
+                .ok_or_else(|| ApiError::version_unknown(model, target, "not in the registry"))?;
+            if !loaded(&entry.name) {
+                return Err(ApiError::version_unknown(
+                    model,
+                    target,
+                    &format!(
+                        "rollback target is not loaded \
+                         (POST /v1/models/{model}/load?version={target} first)"
+                    ),
+                ));
+            }
+            st.mode = Mode::Pin { version: target };
+            st.previous = target;
+            (from, target)
+        };
+        self.clear_window(model, from);
+        self.metrics.inc("rollout_rollbacks_total");
+        let (from_sha, to_sha) = (self.sha_of(model, from), self.sha_of(model, target));
+        self.audit.record(audit::Event {
+            event: "rollback",
+            model,
+            actor,
+            from: Some((from, &from_sha)),
+            to: Some((target, &to_sha)),
+            detail: reason,
+        });
+        self.rollout_doc(model)
+    }
+
+    /// True when default traffic to `model` takes the no-rollout route
+    /// (pin at version 1, nothing in flight) — the hot path's license to
+    /// skip per-request slot resolution entirely.
+    pub fn is_default_route(&self, model: &str) -> bool {
+        self.mode_of(model) == Mode::Pin { version: 1 }
+    }
+
+    // ---- lifecycle hooks -------------------------------------------------
+
+    /// Gate a version unload against the rollout state: yanking the
+    /// *serving* (stable) version mid-canary/shadow would silently dump
+    /// 100% of traffic onto the unproven candidate with its guardrail
+    /// window cleared — refuse with a typed conflict instead (promote or
+    /// roll back first). Unloading the candidate stays legal (it sheds
+    /// the rollout, see [`Registry::note_unload`]).
+    pub fn check_unload(&self, model: &str, version: u32) -> Result<(), ApiError> {
+        let mode = self.mode_of(model);
+        if mode.candidate().is_some() && mode.active() == version {
+            return Err(ApiError::rollout_conflict(format!(
+                "version {version} of '{model}' is the {} rollout's serving version; \
+                 promote or rollback before unloading it",
+                mode.kind()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Audit one successful runtime load.
+    pub fn note_load(&self, model: &str, version: u32, actor: &str) {
+        let sha = self.sha_of(model, version);
+        self.audit.record(audit::Event {
+            event: "load",
+            model,
+            actor,
+            from: None,
+            to: Some((version, &sha)),
+            detail: "",
+        });
+    }
+
+    /// Audit one unload; an unloaded rollout *candidate* sheds the rollout
+    /// (back to pin-stable) so the split never routes into a hole.
+    pub fn note_unload(&self, model: &str, version: u32, actor: &str) {
+        let sha = self.sha_of(model, version);
+        self.audit.record(audit::Event {
+            event: "unload",
+            model,
+            actor,
+            from: Some((version, &sha)),
+            to: None,
+            detail: "",
+        });
+        let shed = {
+            let mut state = self.state.write().unwrap();
+            match state.get_mut(model) {
+                Some(st) if st.mode.candidate() == Some(version) => {
+                    let stable = st.mode.active();
+                    st.mode = Mode::Pin { version: stable };
+                    st.previous = stable;
+                    Some(stable)
+                }
+                _ => None,
+            }
+        };
+        if let Some(stable) = shed {
+            self.clear_window(model, version);
+            self.metrics.inc("rollout_sheds_total");
+            let (from_sha, to_sha) = (self.sha_of(model, version), self.sha_of(model, stable));
+            self.audit.record(audit::Event {
+                event: "shed",
+                model,
+                actor,
+                from: Some((version, &from_sha)),
+                to: Some((stable, &to_sha)),
+                detail: "candidate unloaded mid-rollout",
+            });
+        }
+    }
+
+    /// Keep the "an active model serves by default" invariant across
+    /// lifecycle churn: when the version the rollout currently serves is
+    /// no longer loaded but other versions are, repin to the highest
+    /// loaded version (audited as a `pin`). Without this, unloading the
+    /// pinned version while e.g. a canary candidate stays resident would
+    /// leave default traffic 409ing against a pin that points at nothing.
+    /// The control plane calls this after every load/unload.
+    pub fn repin_if_unserveable(&self, model: &str, loaded_versions: &[u32], actor: &str) {
+        let Some(&target) = loaded_versions.iter().max() else { return };
+        if self.store.versions(model).is_none() {
+            return;
+        }
+        let (from, candidate) = {
+            let mut state = self.state.write().unwrap();
+            let st = state.entry(model.to_string()).or_insert(ModelState {
+                mode: Mode::Pin { version: 1 },
+                previous: 1,
+                guardrails: self.default_guardrails,
+            });
+            if loaded_versions.contains(&st.mode.active()) {
+                return;
+            }
+            let from = st.mode.active();
+            let candidate = st.mode.candidate();
+            st.previous = from;
+            st.mode = Mode::Pin { version: target };
+            (from, candidate)
+        };
+        if let Some(c) = candidate {
+            self.clear_window(model, c);
+        }
+        let (from_sha, to_sha) = (self.sha_of(model, from), self.sha_of(model, target));
+        self.audit.record(audit::Event {
+            event: "pin",
+            model,
+            actor,
+            from: Some((from, &from_sha)),
+            to: Some((target, &to_sha)),
+            detail: "serving version no longer loaded",
+        });
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    /// The `GET /v1/models/:name/rollout` document.
+    pub fn rollout_doc(&self, model: &str) -> Result<Value, ApiError> {
+        if self.store.versions(model).is_none() {
+            return Err(ApiError::unknown_model(model));
+        }
+        let (mode, previous, guardrails) = {
+            let state = self.state.read().unwrap();
+            match state.get(model) {
+                Some(st) => (st.mode, st.previous, st.guardrails),
+                None => (Mode::Pin { version: 1 }, 1, self.default_guardrails),
+            }
+        };
+        let active = mode.active();
+        let mut members = vec![
+            ("model".to_string(), Value::from(model)),
+            ("mode".to_string(), Value::from(mode.kind())),
+            ("active_version".to_string(), Value::from(active as u64)),
+            (
+                "active_sha256".to_string(),
+                Value::from(self.sha_of(model, active)),
+            ),
+            ("previous_version".to_string(), Value::from(previous as u64)),
+        ];
+        match mode {
+            Mode::Pin { .. } => members.push(("candidate".to_string(), Value::Null)),
+            Mode::Canary { candidate, percent, .. } => {
+                members.push(("candidate".to_string(), Value::from(candidate as u64)));
+                members.push((
+                    "candidate_sha256".to_string(),
+                    Value::from(self.sha_of(model, candidate)),
+                ));
+                members.push(("percent".to_string(), Value::from(percent as u64)));
+            }
+            Mode::Shadow { candidate, .. } => {
+                members.push(("candidate".to_string(), Value::from(candidate as u64)));
+                members.push((
+                    "candidate_sha256".to_string(),
+                    Value::from(self.sha_of(model, candidate)),
+                ));
+            }
+        }
+        members.push((
+            "guardrails".to_string(),
+            json::obj([
+                ("max_error_rate", Value::from(guardrails.max_error_rate)),
+                ("max_p95_ms", Value::from(guardrails.max_p95_us / 1000)),
+                ("min_samples", Value::from(guardrails.min_samples)),
+            ]),
+        ));
+        if let Some(c) = mode.candidate() {
+            let stats = self.stats.lock().unwrap();
+            let window = match stats.get(&(model.to_string(), c)) {
+                None => Value::Null,
+                Some(w) => json::obj([
+                    ("samples", Value::from(w.samples())),
+                    ("error_rate", Value::from(w.error_rate())),
+                    ("p95_us", Value::from(w.p95_us())),
+                ]),
+            };
+            members.push(("candidate_window".to_string(), window));
+        }
+        Ok(Value::Obj(members))
+    }
+
+    /// Role of one version in its model's rollout ("" = none).
+    pub fn version_role(&self, model: &str, version: u32) -> &'static str {
+        let mode = self.mode_of(model);
+        if mode.candidate() == Some(version) {
+            match mode {
+                Mode::Canary { .. } => "canary",
+                Mode::Shadow { .. } => "shadow",
+                Mode::Pin { .. } => "",
+            }
+        } else if mode.active() == version {
+            "active"
+        } else {
+            ""
+        }
+    }
+}
+
+/// `ver_<model>_v<version>_<kind>` — the per-version series name (all
+/// three metric expositions render whatever lands in the registry).
+/// Computed once per catalog entry at construction.
+fn metric_name(model: &str, version: u32, kind: &str) -> String {
+    let safe: String = model
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("ver_{safe}_v{version}_{kind}")
+}
+
+/// Parse a guardrails override object over `base`.
+fn parse_guardrails(v: Option<&Value>, base: Guardrails) -> Result<Guardrails, ApiError> {
+    let Some(v) = v else { return Ok(base) };
+    if v.as_obj().is_none() {
+        return Err(ApiError::bad_value("'guardrails' must be an object"));
+    }
+    let mut g = base;
+    if let Some(r) = v.get("max_error_rate") {
+        g.max_error_rate = r
+            .as_f64()
+            .filter(|r| (0.0..=1.0).contains(r))
+            .ok_or_else(|| ApiError::bad_value("'guardrails.max_error_rate' must be in 0..=1"))?;
+    }
+    if let Some(p) = v.get("max_p95_ms") {
+        g.max_p95_us = p
+            .as_u64()
+            .ok_or_else(|| ApiError::bad_value("'guardrails.max_p95_ms' must be an integer"))?
+            * 1000;
+    }
+    if let Some(s) = v.get("min_samples") {
+        g.min_samples = s
+            .as_usize()
+            .filter(|&s| s >= 1)
+            .ok_or_else(|| ApiError::bad_value("'guardrails.min_samples' must be >= 1"))?;
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        Registry::new(
+            Store::synthetic(&[("echo", 3), ("other", 1)]),
+            RegistryConfig::default(),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap()
+    }
+
+    fn all_loaded(_: &str) -> bool {
+        true
+    }
+
+    fn put(reg: &Registry, model: &str, body: &str) -> Result<Value, ApiError> {
+        reg.apply_rollout(model, &json::parse(body).unwrap(), "test", &all_loaded)
+    }
+
+    #[test]
+    fn default_route_is_pin_v1() {
+        let reg = registry();
+        let r = reg.resolve("echo", None, Some("rid"), &all_loaded).unwrap();
+        assert_eq!((r.slot.as_str(), r.version), ("echo", 1));
+        assert!(r.shadow.is_none());
+        assert_eq!(reg.active_version("echo"), Some(1));
+        let doc = reg.rollout_doc("echo").unwrap();
+        assert_eq!(doc.get("mode").unwrap().as_str(), Some("pin"));
+        assert_eq!(doc.get("active_version").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn explicit_version_pins_and_fails_typed() {
+        let reg = registry();
+        let r = reg.resolve("echo", Some(2), None, &all_loaded).unwrap();
+        assert_eq!((r.slot.as_str(), r.version), ("echo@2", 2));
+        // Unknown version.
+        let e = reg.resolve("echo", Some(9), None, &all_loaded).unwrap_err();
+        assert_eq!((e.status, e.code), (404, "model.version_unknown"));
+        // Known but unloaded version (the mid-rollout-unload taxonomy).
+        let only_v1 = |slot: &str| !slot.contains('@');
+        let e = reg.resolve("echo", Some(2), None, &only_v1).unwrap_err();
+        assert_eq!((e.status, e.code), (404, "model.version_unknown"));
+        // Unknown model stays the bare-model taxonomy.
+        let e = reg.resolve("nope", None, None, &all_loaded).unwrap_err();
+        assert_eq!((e.status, e.code), (404, "model.unknown"));
+        // Default route with nothing loaded is a bare-model 409.
+        let none = |_: &str| false;
+        let e = reg.resolve("echo", None, None, &none).unwrap_err();
+        assert_eq!((e.status, e.code), (409, "model.not_loaded"));
+    }
+
+    #[test]
+    fn canary_splits_deterministically_and_promotes() {
+        let reg = registry();
+        put(&reg, "echo", r#"{"mode":"canary","version":2,"percent":30}"#).unwrap();
+        let mut candidate_hits = 0;
+        for i in 0..200 {
+            let id = format!("req-{i}");
+            let r = reg.resolve("echo", None, Some(&id), &all_loaded).unwrap();
+            let expect = if canary_pick(&id, 30) { 2 } else { 1 };
+            assert_eq!(r.version, expect, "{id}");
+            // Same id → same version, every time.
+            let again = reg.resolve("echo", None, Some(&id), &all_loaded).unwrap();
+            assert_eq!(again.version, r.version);
+            if r.version == 2 {
+                candidate_hits += 1;
+            }
+        }
+        assert!(candidate_hits > 0 && candidate_hits < 200);
+
+        let doc = reg.promote("echo", "test").unwrap();
+        assert_eq!(doc.get("mode").unwrap().as_str(), Some("pin"));
+        assert_eq!(doc.get("active_version").unwrap().as_u64(), Some(2));
+        // Every request now serves v2.
+        let r = reg.resolve("echo", None, Some("req-0"), &all_loaded).unwrap();
+        assert_eq!(r.version, 2);
+        // Explicit rollback returns to the previously-active version.
+        let doc = reg.rollback("echo", "test", "operator", &all_loaded).unwrap();
+        assert_eq!(doc.get("active_version").unwrap().as_u64(), Some(1));
+        // Audit recorded the full cycle with both shas.
+        let tail = reg.audit.tail(10);
+        let events: Vec<&str> = tail
+            .iter()
+            .map(|e| e.get("event").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(events, vec!["canary", "promote", "rollback"]);
+        assert_eq!(
+            tail[1].get("from_sha256").unwrap().as_str(),
+            Some("sha-echo-v1")
+        );
+        assert_eq!(
+            tail[1].get("to_sha256").unwrap().as_str(),
+            Some("sha-echo-v2")
+        );
+    }
+
+    #[test]
+    fn shadow_mirrors_without_touching_the_serving_version() {
+        let reg = registry();
+        put(&reg, "echo", r#"{"mode":"shadow","version":3}"#).unwrap();
+        let r = reg.resolve("echo", None, Some("rid"), &all_loaded).unwrap();
+        assert_eq!(r.version, 1, "shadow never changes the served version");
+        assert_eq!(r.shadow, Some(("echo@3".to_string(), 3)));
+        // Candidate unloaded → mirror silently skipped.
+        let only_v1 = |slot: &str| !slot.contains('@');
+        let r = reg.resolve("echo", None, Some("rid"), &only_v1).unwrap();
+        assert!(r.shadow.is_none());
+    }
+
+    #[test]
+    fn guardrail_breach_auto_rolls_back() {
+        let reg = registry();
+        put(
+            &reg,
+            "echo",
+            r#"{"mode":"canary","version":2,"percent":50,
+                "guardrails":{"max_error_rate":0.4,"min_samples":5}}"#,
+        )
+        .unwrap();
+        // Healthy candidate traffic: no rollback.
+        for _ in 0..10 {
+            reg.record_outcome("echo", 2, true, 100);
+        }
+        assert_eq!(reg.mode_of("echo").kind(), "canary");
+        // Failure burst trips the error-rate guardrail.
+        for _ in 0..10 {
+            reg.record_outcome("echo", 2, false, 100);
+        }
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 1 });
+        let tail = reg.audit.tail(1);
+        assert_eq!(tail[0].get("event").unwrap().as_str(), Some("rollback"));
+        assert_eq!(tail[0].get("actor").unwrap().as_str(), Some("guardrail"));
+        assert!(tail[0]
+            .get("detail")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("error rate"));
+        // Stable-version outcomes never count against a rollout.
+        reg.record_outcome("echo", 1, false, 100);
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 1 });
+    }
+
+    #[test]
+    fn latency_guardrail_rolls_back() {
+        let reg = registry();
+        put(
+            &reg,
+            "echo",
+            r#"{"mode":"shadow","version":2,
+                "guardrails":{"max_error_rate":1.0,"max_p95_ms":1,"min_samples":5}}"#,
+        )
+        .unwrap();
+        for _ in 0..6 {
+            reg.record_outcome("echo", 2, true, 5_000); // 5 ms > 1 ms p95 rail
+        }
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 1 });
+    }
+
+    #[test]
+    fn candidate_unload_sheds_the_rollout() {
+        let reg = registry();
+        put(&reg, "echo", r#"{"mode":"canary","version":2,"percent":10}"#).unwrap();
+        reg.note_unload("echo", 2, "test");
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 1 });
+        let events: Vec<String> = reg
+            .audit
+            .tail(10)
+            .iter()
+            .map(|e| e.get("event").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(events, vec!["canary", "unload", "shed"]);
+        // Unloading a non-candidate version audits but sheds nothing.
+        reg.note_unload("other", 1, "test");
+        assert_eq!(reg.mode_of("other"), Mode::Pin { version: 1 });
+    }
+
+    #[test]
+    fn repin_when_serving_version_unloads() {
+        let reg = registry();
+        put(&reg, "echo", r#"{"mode":"canary","version":2,"percent":10}"#).unwrap();
+        // The stable version vanishes while v2/v3 stay resident: the
+        // model must repin to a loaded version instead of 409ing forever.
+        reg.repin_if_unserveable("echo", &[2, 3], "test");
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 3 });
+        let tail = reg.audit.tail(1);
+        assert_eq!(tail[0].get("event").unwrap().as_str(), Some("pin"));
+        assert_eq!(
+            tail[0].get("detail").unwrap().as_str(),
+            Some("serving version no longer loaded")
+        );
+        // Serving version still loaded → no-op (no extra audit record).
+        reg.repin_if_unserveable("echo", &[3], "test");
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 3 });
+        assert_eq!(reg.audit.tail(10).len(), 2, "canary + pin only");
+        // Nothing loaded → no-op (the model leaves the active set anyway).
+        reg.repin_if_unserveable("echo", &[], "test");
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 3 });
+    }
+
+    #[test]
+    fn rollout_put_validation() {
+        let reg = registry();
+        for (body, frag) in [
+            (r#"{"version":2}"#, "'mode'"),
+            (r#"{"mode":"canary"}"#, "'version'"),
+            (r#"{"mode":"warp","version":2}"#, "unknown rollout mode"),
+            (r#"{"mode":"canary","version":1}"#, "must differ"),
+            (r#"{"mode":"canary","version":2,"percent":0}"#, "'percent'"),
+            (r#"{"mode":"canary","version":2,"percent":100}"#, "'percent'"),
+            (
+                r#"{"mode":"canary","version":2,"guardrails":{"max_error_rate":7}}"#,
+                "max_error_rate",
+            ),
+        ] {
+            let e = put(&reg, "echo", body).unwrap_err();
+            assert_eq!(e.status, 422, "{body}");
+            assert!(e.message.contains(frag), "{body}: {}", e.message);
+        }
+        let e = put(&reg, "echo", r#"{"mode":"pin","version":9}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (404, "model.version_unknown"));
+        // Promote with no rollout in progress is typed.
+        let e = reg.promote("echo", "t").unwrap_err();
+        assert_eq!(e.status, 422);
+        // Rollback with no history is typed.
+        let e = reg.rollback("echo", "t", "r", &all_loaded).unwrap_err();
+        assert_eq!(e.status, 422);
+        // Rollback refuses a target that is no longer loaded.
+        put(&reg, "echo", r#"{"mode":"canary","version":2}"#).unwrap();
+        let only_v2 = |slot: &str| slot == "echo@2";
+        let e = reg.rollback("echo", "t", "r", &only_v2).unwrap_err();
+        assert_eq!((e.status, e.code), (404, "model.version_unknown"));
+        assert_eq!(reg.mode_of("echo").kind(), "canary", "refusal must not transition");
+        // Unloading the stable serving version mid-rollout is a typed 409.
+        let e = reg.check_unload("echo", 1).unwrap_err();
+        assert_eq!((e.status, e.code), (409, "model.rollout_conflict"));
+        // Candidate unloads (shed path) and pinned-mode unloads stay legal.
+        reg.check_unload("echo", 2).unwrap();
+        reg.check_unload("other", 1).unwrap();
+    }
+
+    #[test]
+    fn per_version_metrics_land_in_the_registry() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = Registry::new(
+            Store::synthetic(&[("echo", 2)]),
+            RegistryConfig::default(),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        reg.record_outcome("echo", 1, true, 120);
+        reg.record_outcome("echo", 2, false, 80);
+        assert_eq!(metrics.counter("ver_echo_v1_requests_total"), 1);
+        assert_eq!(metrics.counter("ver_echo_v2_requests_total"), 1);
+        assert_eq!(metrics.counter("ver_echo_v2_errors_total"), 1);
+        assert_eq!(metrics.counter("ver_echo_v1_errors_total"), 0);
+        assert_eq!(metrics.hist("ver_echo_v1_latency_us").unwrap().count(), 1);
+        let prom = metrics.render_prometheus();
+        assert!(prom.contains("flexserve_ver_echo_v2_requests_total"), "{prom}");
+    }
+
+    #[test]
+    fn version_roles_reported() {
+        let reg = registry();
+        assert_eq!(reg.version_role("echo", 1), "active");
+        assert_eq!(reg.version_role("echo", 2), "");
+        put(&reg, "echo", r#"{"mode":"canary","version":2}"#).unwrap();
+        assert_eq!(reg.version_role("echo", 1), "active");
+        assert_eq!(reg.version_role("echo", 2), "canary");
+        put(&reg, "echo", r#"{"mode":"shadow","version":3}"#).unwrap();
+        assert_eq!(reg.version_role("echo", 3), "shadow");
+    }
+}

@@ -1,0 +1,259 @@
+//! Rollout mechanics: the per-model traffic-split state machine
+//! ([`Mode`]), the deterministic canary hash split ([`canary_pick`]), and
+//! the sliding-window candidate health stats ([`WindowStats`]) that the
+//! auto-rollback guardrails ([`Guardrails`], [`breach`]) evaluate.
+//!
+//! Everything here is pure and device-free — the [`super::Registry`] owns
+//! the state and the side effects (audit, metrics, transitions).
+
+/// How one model's traffic splits across its versions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Serve exactly one version.
+    Pin { version: u32 },
+    /// Deterministic percentage split: requests whose id hashes under
+    /// `percent` serve `candidate`, the rest serve `stable`. A given
+    /// request id always lands on the same version.
+    Canary { stable: u32, candidate: u32, percent: u8 },
+    /// Serve `stable`; mirror every request to `candidate` off the hot
+    /// path (flush-worker pool), compare outputs, never touch the client
+    /// response.
+    Shadow { stable: u32, candidate: u32 },
+}
+
+impl Mode {
+    /// The version real client traffic is (primarily) served from.
+    pub fn active(&self) -> u32 {
+        match *self {
+            Mode::Pin { version } => version,
+            Mode::Canary { stable, .. } | Mode::Shadow { stable, .. } => stable,
+        }
+    }
+
+    /// The in-flight candidate, if a rollout is underway.
+    pub fn candidate(&self) -> Option<u32> {
+        match *self {
+            Mode::Pin { .. } => None,
+            Mode::Canary { candidate, .. } | Mode::Shadow { candidate, .. } => Some(candidate),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Mode::Pin { .. } => "pin",
+            Mode::Canary { .. } => "canary",
+            Mode::Shadow { .. } => "shadow",
+        }
+    }
+}
+
+/// Auto-rollback thresholds over the candidate's sliding window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Guardrails {
+    /// Roll back when the window error rate exceeds this (0..=1).
+    pub max_error_rate: f64,
+    /// Roll back when the window p95 latency exceeds this (µs; 0 = off).
+    pub max_p95_us: u64,
+    /// Evaluate only once the window holds at least this many samples
+    /// (a single early failure must not kill a rollout).
+    pub min_samples: usize,
+}
+
+impl Default for Guardrails {
+    fn default() -> Self {
+        Guardrails {
+            max_error_rate: 0.5,
+            max_p95_us: 0,
+            min_samples: 20,
+        }
+    }
+}
+
+/// Deterministic canary assignment: FNV-1a over the request id, modulo
+/// 100, compared against the split percentage. Pure — the integration
+/// tests (and clients) can predict which version a request id lands on.
+pub fn canary_pick(request_id: &str, percent: u8) -> bool {
+    (fnv1a(request_id.as_bytes()) % 100) < percent as u64
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Sliding window of one version's recent outcomes (ring buffer).
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    outcomes: Vec<(bool, u64)>, // (ok, latency_us)
+    next: usize,
+    cap: usize,
+}
+
+impl WindowStats {
+    pub fn new(cap: usize) -> WindowStats {
+        WindowStats {
+            outcomes: Vec::new(),
+            next: 0,
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn record(&mut self, ok: bool, latency_us: u64) {
+        if self.outcomes.len() < self.cap {
+            self.outcomes.push((ok, latency_us));
+        } else {
+            self.outcomes[self.next] = (ok, latency_us);
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    pub fn samples(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Fraction of failed outcomes in the window (0.0 when empty).
+    pub fn error_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let errs = self.outcomes.iter().filter(|(ok, _)| !ok).count();
+        errs as f64 / self.outcomes.len() as f64
+    }
+
+    /// p95 latency over the window (µs; 0 when empty). The window is a
+    /// few hundred entries at most, so a sort per evaluation is cheap.
+    pub fn p95_us(&self) -> u64 {
+        if self.outcomes.is_empty() {
+            return 0;
+        }
+        let mut lats: Vec<u64> = self.outcomes.iter().map(|&(_, l)| l).collect();
+        lats.sort_unstable();
+        let idx = ((lats.len() as f64) * 0.95).ceil() as usize;
+        lats[idx.clamp(1, lats.len()) - 1]
+    }
+}
+
+/// Default window capacity (per candidate version).
+pub const WINDOW_CAP: usize = 256;
+
+/// Evaluate the guardrails over one window; `Some(reason)` = roll back.
+pub fn breach(stats: &WindowStats, g: &Guardrails) -> Option<String> {
+    if stats.samples() < g.min_samples.max(1) {
+        return None;
+    }
+    let rate = stats.error_rate();
+    if rate > g.max_error_rate {
+        return Some(format!(
+            "error rate {rate:.3} > {:.3} over {} samples",
+            g.max_error_rate,
+            stats.samples()
+        ));
+    }
+    let p95 = stats.p95_us();
+    if g.max_p95_us > 0 && p95 > g.max_p95_us {
+        return Some(format!(
+            "p95 {p95}us > {}us over {} samples",
+            g.max_p95_us,
+            stats.samples()
+        ));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canary_pick_is_deterministic_and_bounded() {
+        for id in ["req-1", "req-2", "abc", ""] {
+            assert_eq!(canary_pick(id, 30), canary_pick(id, 30), "{id}");
+        }
+        // 0% never picks the candidate; 100% always does.
+        for i in 0..50 {
+            let id = format!("req-{i}");
+            assert!(!canary_pick(&id, 0));
+            assert!(canary_pick(&id, 100));
+        }
+        // A 25% split lands a plausible fraction of distinct ids on the
+        // candidate (loose bounds; the hash is fixed so this is stable).
+        let hits = (0..1000)
+            .filter(|i| canary_pick(&format!("req-{i}"), 25))
+            .count();
+        assert!((150..=350).contains(&hits), "25% split picked {hits}/1000");
+    }
+
+    #[test]
+    fn window_stats_rates_and_quantiles() {
+        let mut w = WindowStats::new(8);
+        assert_eq!(w.error_rate(), 0.0);
+        assert_eq!(w.p95_us(), 0);
+        for i in 0..4 {
+            w.record(true, 100 + i);
+        }
+        w.record(false, 10_000);
+        assert_eq!(w.samples(), 5);
+        assert!((w.error_rate() - 0.2).abs() < 1e-9);
+        assert_eq!(w.p95_us(), 10_000);
+        // Ring wrap: old entries age out.
+        for _ in 0..8 {
+            w.record(true, 50);
+        }
+        assert_eq!(w.samples(), 8);
+        assert_eq!(w.error_rate(), 0.0);
+        assert_eq!(w.p95_us(), 50);
+    }
+
+    #[test]
+    fn guardrails_respect_min_samples_and_thresholds() {
+        let g = Guardrails {
+            max_error_rate: 0.3,
+            max_p95_us: 0,
+            min_samples: 10,
+        };
+        let mut w = WindowStats::new(64);
+        for _ in 0..5 {
+            w.record(false, 100);
+        }
+        // 100% errors but below min_samples → no breach yet.
+        assert!(breach(&w, &g).is_none());
+        for _ in 0..5 {
+            w.record(false, 100);
+        }
+        let reason = breach(&w, &g).expect("breach at 10 samples");
+        assert!(reason.contains("error rate"), "{reason}");
+
+        // Latency guardrail.
+        let g = Guardrails {
+            max_error_rate: 1.0,
+            max_p95_us: 500,
+            min_samples: 4,
+        };
+        let mut w = WindowStats::new(64);
+        for _ in 0..4 {
+            w.record(true, 900);
+        }
+        let reason = breach(&w, &g).expect("p95 breach");
+        assert!(reason.contains("p95"), "{reason}");
+        // Healthy window → no breach.
+        let mut w = WindowStats::new(64);
+        for _ in 0..20 {
+            w.record(true, 100);
+        }
+        assert!(breach(&w, &Guardrails::default()).is_none());
+    }
+
+    #[test]
+    fn mode_accessors() {
+        assert_eq!(Mode::Pin { version: 3 }.active(), 3);
+        assert_eq!(Mode::Pin { version: 3 }.candidate(), None);
+        let c = Mode::Canary { stable: 1, candidate: 2, percent: 10 };
+        assert_eq!((c.active(), c.candidate(), c.kind()), (1, Some(2), "canary"));
+        let s = Mode::Shadow { stable: 1, candidate: 2 };
+        assert_eq!((s.active(), s.candidate(), s.kind()), (1, Some(2), "shadow"));
+    }
+}

@@ -1,0 +1,346 @@
+//! The version store: discovers the versioned artifact layout and merges
+//! it into one pool-facing [`Manifest`].
+//!
+//! Layout contract:
+//!
+//! ```text
+//! artifacts/
+//!   manifest.json            # the flat layout — every model's VERSION 1
+//!   cnn_s_b1.hlo.txt ...     # version-1 artifacts (unchanged)
+//!   cnn_s/
+//!     2/manifest.json        # version 2 of cnn_s (same manifest format,
+//!     2/cnn_s_b1.hlo.txt     #   exactly the one model, its own artifacts)
+//!     3/manifest.json ...
+//! ```
+//!
+//! The flat manifest stays the source of truth for the model *set* and the
+//! shared tensor contract (input shape, classes, normalization); numeric
+//! subdirectories `>= 2` add versions of a model that already exists.
+//! Every merged entry keeps its artifacts addressable from the base dir
+//! (`file` paths are rewritten to `<model>/<version>/<file>`), so SHA-256
+//! provenance verification and executor compilation work unchanged — a
+//! version is just another pool slot ([`slot_name`]).
+
+use crate::json;
+use crate::runtime::{slot_name, ArtifactRef, Manifest, ModelEntry};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// The discovered catalog: one merged manifest (every version a slot) plus
+/// the per-model version index.
+pub struct Store {
+    /// Merged manifest: version-1 entries under their bare names, later
+    /// versions under `"<model>@<version>"` slots.
+    pub manifest: Arc<Manifest>,
+    /// model name → ascending versions (always starts with 1).
+    versions: BTreeMap<String, Vec<u32>>,
+}
+
+impl Store {
+    /// Discover the versioned layout under `dir` (see module docs). The
+    /// flat layout with no version subdirectories loads as "every model at
+    /// version 1" — byte-compatible with the pre-registry worldview.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Store> {
+        let base = Manifest::load(dir.as_ref())?;
+        let mut merged = base.clone();
+        let mut versions: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+        let names: Vec<String> = base.models.iter().map(|m| m.name.clone()).collect();
+        for name in &names {
+            let mut found = vec![1u32];
+            let model_dir = base.dir.join(name);
+            if model_dir.is_dir() {
+                let mut dir_versions: Vec<u32> = std::fs::read_dir(&model_dir)
+                    .with_context(|| format!("scanning {model_dir:?}"))?
+                    .filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().to_str().and_then(|s| s.parse::<u32>().ok()))
+                    .collect();
+                dir_versions.sort_unstable();
+                for v in dir_versions {
+                    let vdir = model_dir.join(v.to_string());
+                    if !vdir.join("manifest.json").is_file() {
+                        continue;
+                    }
+                    if v < 2 {
+                        bail!(
+                            "model {name}: version directory {vdir:?} must be >= 2 \
+                             (version 1 is the flat manifest)"
+                        );
+                    }
+                    let entry = load_version_entry(&base, name, v, &vdir)?;
+                    merged.models.push(entry);
+                    found.push(v);
+                }
+            }
+            versions.insert(name.clone(), found);
+        }
+        merged.models.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Store {
+            manifest: Arc::new(merged),
+            versions,
+        })
+    }
+
+    /// Bare model names (version-1 identities), manifest-ordered.
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest
+            .models
+            .iter()
+            .filter(|m| m.version == 1)
+            .map(|m| m.name.clone())
+            .collect()
+    }
+
+    /// Ascending versions of one model (None = unknown model).
+    pub fn versions(&self, model: &str) -> Option<&[u32]> {
+        self.versions.get(model).map(Vec::as_slice)
+    }
+
+    /// The merged-manifest entry of one (model, version).
+    pub fn entry(&self, model: &str, version: u32) -> Option<&ModelEntry> {
+        self.versions
+            .get(model)?
+            .contains(&version)
+            .then(|| self.manifest.model(&slot_name(model, version)))?
+    }
+
+    /// Slots every model serves at version 1 — the boot-time load set (new
+    /// versions compile on demand through the control plane, not at boot).
+    pub fn v1_slots(&self) -> Vec<String> {
+        self.model_names()
+    }
+
+    /// Verify one version's artifact SHA-256s against the manifest (the
+    /// provenance gate runtime loads pass through).
+    pub fn verify_version(&self, model: &str, version: u32) -> Result<()> {
+        let entry = self
+            .entry(model, version)
+            .with_context(|| format!("unknown version {version} of '{model}'"))?;
+        for a in &entry.buckets {
+            self.manifest
+                .verify_artifact(a)
+                .with_context(|| format!("model {model} version {version}"))?;
+        }
+        Ok(())
+    }
+
+    /// A device-free synthetic catalog (`(model, highest version)` pairs)
+    /// for harnesses and tests that exercise the rollout plane without
+    /// artifacts or a device — `flexserve rollout-smoke` runs on this.
+    pub fn synthetic(models: &[(&str, u32)]) -> Store {
+        let mut entries = Vec::new();
+        let mut versions = BTreeMap::new();
+        for &(name, top) in models {
+            let mut found = Vec::new();
+            for v in 1..=top.max(1) {
+                entries.push(ModelEntry {
+                    name: slot_name(name, v),
+                    version: v,
+                    param_count: 0,
+                    test_acc: 0.0,
+                    params_sha256: format!("sha-{name}-v{v}"),
+                    buckets: vec![ArtifactRef {
+                        bucket: 1,
+                        file: format!("{name}-v{v}.hlo.txt"),
+                        sha256: "0".into(),
+                        bytes: 0,
+                    }],
+                });
+                found.push(v);
+            }
+            versions.insert(name.to_string(), found);
+        }
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        Store {
+            manifest: Arc::new(Manifest {
+                dir: std::path::PathBuf::from("/nonexistent"),
+                input_shape: vec![1],
+                classes: vec!["a".into(), "b".into()],
+                norm_mean: 0.0,
+                norm_std: 1.0,
+                buckets: vec![1],
+                models: entries,
+                provenance: crate::json::Value::Null,
+            }),
+            versions,
+        }
+    }
+}
+
+/// Parse one per-version manifest and lift its model entry into the merged
+/// manifest's coordinate system (slot name, base-relative artifact paths).
+fn load_version_entry(
+    base: &Manifest,
+    model: &str,
+    version: u32,
+    vdir: &Path,
+) -> Result<ModelEntry> {
+    let path = vdir.join("manifest.json");
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+    let v = json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+    let sub = Manifest::from_value(vdir.to_path_buf(), &v)
+        .with_context(|| format!("version manifest {path:?}"))?;
+    // The tensor contract is ensemble-wide: a version may not change the
+    // input shape or the class vocabulary out from under the other models.
+    if sub.input_shape != base.input_shape {
+        bail!(
+            "model {model} version {version}: input_shape {:?} != base {:?}",
+            sub.input_shape,
+            base.input_shape
+        );
+    }
+    if sub.classes != base.classes {
+        bail!("model {model} version {version}: classes differ from the base manifest");
+    }
+    if sub.models.len() != 1 || sub.models[0].name != model {
+        bail!(
+            "model {model} version {version}: manifest must define exactly the model '{model}'"
+        );
+    }
+    let src = &sub.models[0];
+    Ok(ModelEntry {
+        name: slot_name(model, version),
+        version,
+        param_count: src.param_count,
+        test_acc: src.test_acc,
+        params_sha256: src.params_sha256.clone(),
+        buckets: src
+            .buckets
+            .iter()
+            .map(|a| ArtifactRef {
+                bucket: a.bucket,
+                // Re-anchor on the base dir so one merged manifest serves
+                // every version through the same artifact_path/verify path.
+                file: format!("{model}/{version}/{}", a.file),
+                sha256: a.sha256.clone(),
+                bytes: a.bytes,
+            })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use sha2::{Digest, Sha256};
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn write_manifest(dir: &Path, models: &[(&str, &str)]) {
+        // One bucket-1 artifact per model, real content + real sha.
+        let entries: Vec<String> = models
+            .iter()
+            .map(|(name, sha_tag)| {
+                let file = format!("{name}_b1.hlo.txt");
+                let content = format!("hlo for {name} {sha_tag}");
+                std::fs::write(dir.join(&file), &content).unwrap();
+                let sha = hex(&Sha256::digest(content.as_bytes()));
+                format!(
+                    r#""{name}": {{"param_count": 1, "test_acc": 0.9,
+                        "params_sha256": "{sha_tag}",
+                        "buckets": {{"1": {{"file": "{file}", "sha256": "{sha}", "bytes": 1}}}}}}"#
+                )
+            })
+            .collect();
+        let doc = format!(
+            r#"{{"format_version": 1, "input_shape": [2], "classes": ["a", "b"],
+                "normalize": {{"mean": 0, "std": 1}}, "buckets": [1],
+                "models": {{{}}}}}"#,
+            entries.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+    }
+
+    fn temp_store(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("flexserve_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn flat_layout_is_version_1() {
+        let dir = temp_store("flat");
+        write_manifest(&dir, &[("m1", "p1"), ("m2", "p2")]);
+        let store = Store::discover(&dir).unwrap();
+        assert_eq!(store.model_names(), vec!["m1", "m2"]);
+        assert_eq!(store.versions("m1"), Some(&[1u32][..]));
+        assert_eq!(store.entry("m1", 1).unwrap().name, "m1");
+        assert!(store.entry("m1", 2).is_none());
+        assert!(store.versions("nope").is_none());
+        assert_eq!(store.manifest.models.len(), 2);
+        store.verify_version("m1", 1).unwrap();
+    }
+
+    #[test]
+    fn versioned_subdirs_merge_as_slots() {
+        let dir = temp_store("versioned");
+        write_manifest(&dir, &[("m1", "p1"), ("m2", "p2")]);
+        let v2dir = dir.join("m1").join("2");
+        std::fs::create_dir_all(&v2dir).unwrap();
+        write_manifest(&v2dir, &[("m1", "p1v2")]);
+        let store = Store::discover(&dir).unwrap();
+        assert_eq!(store.versions("m1"), Some(&[1u32, 2][..]));
+        assert_eq!(store.versions("m2"), Some(&[1u32][..]));
+        let e = store.entry("m1", 2).unwrap();
+        assert_eq!(e.name, "m1@2");
+        assert_eq!(e.version, 2);
+        assert_eq!(e.params_sha256, "p1v2");
+        // Artifact paths re-anchor on the base dir — verification works
+        // through the merged manifest.
+        assert_eq!(e.buckets[0].file, "m1/2/m1_b1.hlo.txt");
+        store.verify_version("m1", 2).unwrap();
+        store.manifest.verify_all().unwrap();
+        // The merged manifest serves the slot by name.
+        assert!(store.manifest.model("m1@2").is_some());
+        // Boot loads version-1 slots only.
+        assert_eq!(store.v1_slots(), vec!["m1", "m2"]);
+    }
+
+    #[test]
+    fn corrupted_version_fails_provenance() {
+        let dir = temp_store("corrupt");
+        write_manifest(&dir, &[("m1", "p1")]);
+        let v2dir = dir.join("m1").join("2");
+        std::fs::create_dir_all(&v2dir).unwrap();
+        write_manifest(&v2dir, &[("m1", "p1v2")]);
+        // Tamper with the v2 artifact after its manifest signed it.
+        std::fs::write(v2dir.join("m1_b1.hlo.txt"), "tampered").unwrap();
+        let store = Store::discover(&dir).unwrap();
+        store.verify_version("m1", 1).unwrap();
+        let err = store.verify_version("m1", 2).unwrap_err();
+        assert!(format!("{err:#}").contains("provenance"), "{err:#}");
+    }
+
+    #[test]
+    fn version_manifest_contract_violations_rejected() {
+        // Wrong model name inside the version dir.
+        let dir = temp_store("wrongname");
+        write_manifest(&dir, &[("m1", "p1")]);
+        let v2dir = dir.join("m1").join("2");
+        std::fs::create_dir_all(&v2dir).unwrap();
+        write_manifest(&v2dir, &[("other", "x")]);
+        let err = Store::discover(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("exactly the model"), "{err:#}");
+
+        // Version 1 subdirectory conflicts with the flat manifest.
+        let dir = temp_store("v1dir");
+        write_manifest(&dir, &[("m1", "p1")]);
+        let v1dir = dir.join("m1").join("1");
+        std::fs::create_dir_all(&v1dir).unwrap();
+        write_manifest(&v1dir, &[("m1", "dup")]);
+        let err = Store::discover(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains(">= 2"), "{err:#}");
+    }
+
+    #[test]
+    fn synthetic_catalog_is_device_free() {
+        let store = Store::synthetic(&[("echo", 2)]);
+        assert_eq!(store.model_names(), vec!["echo"]);
+        assert_eq!(store.versions("echo"), Some(&[1u32, 2][..]));
+        assert_eq!(store.entry("echo", 2).unwrap().params_sha256, "sha-echo-v2");
+    }
+}

@@ -17,10 +17,16 @@ pub struct ArtifactRef {
     pub bytes: u64,
 }
 
-/// One servable model (all its batch buckets).
+/// One servable model *version* (all its batch buckets). `name` is the
+/// pool-facing **slot**: version 1 keeps the bare model name (the legacy
+/// flat layout is byte-compatible), later versions are `"<model>@<v>"`
+/// ([`slot_name`]). The registry store is the only producer of entries
+/// with `version > 1`.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub name: String,
+    /// Registry version this entry serves (1 = the flat-layout manifest).
+    pub version: u32,
     pub param_count: u64,
     pub test_acc: f64,
     pub params_sha256: String,
@@ -124,6 +130,11 @@ impl Manifest {
             if name.starts_with('_') {
                 bail!("model name '{name}' is reserved (names may not start with '_')");
             }
+            // '@' is the registry's version-slot separator ("cnn_s@2"); a
+            // literal '@' in a model name would collide with those slots.
+            if name.contains('@') {
+                bail!("model name '{name}' is reserved (names may not contain '@')");
+            }
             let mut bucket_refs = Vec::new();
             for (bucket_s, b) in m
                 .get("buckets")
@@ -153,6 +164,7 @@ impl Manifest {
             }
             models.push(ModelEntry {
                 name: name.clone(),
+                version: 1,
                 param_count: m.get("param_count").and_then(Value::as_u64).unwrap_or(0),
                 test_acc: m.get("test_acc").and_then(Value::as_f64).unwrap_or(0.0),
                 params_sha256: m
@@ -232,6 +244,31 @@ impl Manifest {
 
 fn hex(bytes: &[u8]) -> String {
     bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// The pool-facing slot id of one (model, version). Version 1 is the bare
+/// model name so the legacy flat layout (and every `/v1` wire byte) stays
+/// identical; later versions append `@<version>`.
+pub fn slot_name(name: &str, version: u32) -> String {
+    if version <= 1 {
+        name.to_string()
+    } else {
+        format!("{name}@{version}")
+    }
+}
+
+/// Inverse of [`slot_name`]: `(bare model name, version)`. Bare names are
+/// version 1; malformed suffixes fall back to treating the whole string as
+/// a bare name (manifest load rejects '@' in real model names, so this
+/// only happens on strings that never were slots).
+pub fn split_slot(slot: &str) -> (&str, u32) {
+    match slot.rsplit_once('@') {
+        Some((name, v)) => match v.parse::<u32>() {
+            Ok(n) if n >= 2 && !name.is_empty() => (name, n),
+            _ => (slot, 1),
+        },
+        None => (slot, 1),
+    }
 }
 
 /// Default artifact dir: `$FLEXSERVE_ARTIFACTS` or `./artifacts`.
@@ -317,6 +354,35 @@ mod tests {
         )
         .unwrap();
         assert!(Manifest::from_value(PathBuf::from("/tmp"), &v).is_err());
+    }
+
+    #[test]
+    fn slot_names_round_trip() {
+        assert_eq!(slot_name("cnn_s", 1), "cnn_s");
+        assert_eq!(slot_name("cnn_s", 2), "cnn_s@2");
+        assert_eq!(split_slot("cnn_s"), ("cnn_s", 1));
+        assert_eq!(split_slot("cnn_s@2"), ("cnn_s", 2));
+        assert_eq!(split_slot("cnn_s@17"), ("cnn_s", 17));
+        // Degenerate suffixes fall back to bare names.
+        assert_eq!(split_slot("a@0"), ("a@0", 1));
+        assert_eq!(split_slot("a@1"), ("a@1", 1));
+        assert_eq!(split_slot("a@x"), ("a@x", 1));
+        assert_eq!(split_slot("@2"), ("@2", 1));
+    }
+
+    #[test]
+    fn rejects_at_sign_names() {
+        // '@' is the registry's version-slot separator.
+        let v = json::parse(
+            r#"{"format_version":1,"input_shape":[1],"classes":["a"],
+                "normalize":{"mean":0,"std":1},"buckets":[1],
+                "models":{"m@2":{"param_count":1,"test_acc":0.5,
+                  "params_sha256":"x",
+                  "buckets":{"1":{"file":"f","sha256":"s","bytes":1}}}}}"#,
+        )
+        .unwrap();
+        let err = Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap_err();
+        assert!(format!("{err:#}").contains("reserved"), "{err:#}");
     }
 
     #[test]

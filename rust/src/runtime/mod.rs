@@ -19,6 +19,6 @@ pub mod pool;
 pub mod tensor;
 
 pub use executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle};
-pub use manifest::{ArtifactRef, Manifest, ModelEntry};
+pub use manifest::{slot_name, split_slot, ArtifactRef, Manifest, ModelEntry};
 pub use pool::ExecutorPool;
 pub use tensor::{DType, TensorView};

@@ -16,7 +16,7 @@
 //! resident.
 
 use super::executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, ExecutorOptions};
-use super::manifest::Manifest;
+use super::manifest::{slot_name, split_slot, Manifest};
 use anyhow::{bail, Result};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -156,6 +156,51 @@ impl ExecutorPool {
         }
         let tracked = self.loaded.write().unwrap().remove(name);
         Ok(had || tracked)
+    }
+
+    // ---- version-aware lifecycle (registry slots) ------------------------
+    // Pool keys carry a version dimension as slots ("m" = v1, "m@2" = v2):
+    // the same Msg::Load/Unload broadcast — with its concurrent compile and
+    // rollback-on-any-failure semantics — moves one (model, version) at a
+    // time, so multiple versions of a model stay resident concurrently.
+
+    /// Compile one (model, version) onto every worker (idempotent).
+    pub fn load_version(&self, name: &str, version: u32) -> Result<bool> {
+        self.load_model(&slot_name(name, version))
+    }
+
+    /// Evict one (model, version) from every worker.
+    pub fn unload_version(&self, name: &str, version: u32) -> Result<bool> {
+        self.unload_model(&slot_name(name, version))
+    }
+
+    /// Is this exact (model, version) resident on the workers?
+    pub fn is_version_loaded(&self, name: &str, version: u32) -> bool {
+        self.is_loaded(&slot_name(name, version))
+    }
+
+    /// Currently-loaded versions of one model, ascending.
+    pub fn loaded_versions(&self, name: &str) -> Vec<u32> {
+        let loaded = self.loaded.read().unwrap();
+        let mut versions: Vec<u32> = loaded
+            .iter()
+            .filter_map(|slot| {
+                let (bare, v) = split_slot(slot);
+                (bare == name).then_some(v)
+            })
+            .collect();
+        versions.sort_unstable();
+        versions
+    }
+
+    /// Is ANY version of `name` resident? (The bare-model lifecycle and
+    /// readiness views care about servability, not a specific version.)
+    pub fn any_version_loaded(&self, name: &str) -> bool {
+        self.loaded
+            .read()
+            .unwrap()
+            .iter()
+            .any(|slot| split_slot(slot).0 == name)
     }
 }
 

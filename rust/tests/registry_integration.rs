@@ -1,0 +1,517 @@
+//! Registry integration: the full versioned-rollout lifecycle on a live
+//! server (device + real artifacts). Builds a temp *versioned* artifact
+//! layout out of the flat one (`<model>/2/` with its own manifest and a
+//! distinct `params_sha256`), then drives: load v2 alongside v1 → 10%
+//! canary with a deterministic per-request-id hash split → injected
+//! failures tripping auto-rollback → promote → v1 unloads cleanly while
+//! v2 keeps serving — with every transition (and both versions' shas) on
+//! the audit trail, and the flat-layout wire format intact throughout.
+//!
+//! Tests share one server and serialize on GUARD (rollout state is
+//! per-model global).
+
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, SchedConfig, ServerState};
+use flexserve::http::{Client, Request, ServerHandle};
+use flexserve::json::{self, Value};
+use flexserve::registry::canary_pick;
+use flexserve::runtime::Manifest;
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn has_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !has_artifacts() {
+            eprintln!("skipping: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+/// The versioned temp layout: a copy of the flat artifacts plus
+/// `mlp/2/` and `cnn_s/2/` version directories re-using the real HLO
+/// bytes under fresh `params_sha256` tags.
+fn versioned_layout() -> PathBuf {
+    let src = artifact_dir();
+    let dst = std::env::temp_dir().join("flexserve_registry_itest");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        if entry.path().is_file() {
+            std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+        }
+    }
+    let base = Manifest::load(&dst).unwrap();
+    write_version(&base, &dst, "mlp", 2, "v2-mlp-params-sha");
+    write_version(&base, &dst, "cnn_s", 2, "v2-cnn-s-params-sha");
+    dst
+}
+
+/// Write `<dst>/<model>/<version>/` with copies of the model's artifacts
+/// and a per-version manifest carrying `params_sha` as its provenance.
+fn write_version(base: &Manifest, dst: &Path, model: &str, version: u32, params_sha: &str) {
+    let entry = base.model(model).unwrap();
+    let vdir = dst.join(model).join(version.to_string());
+    std::fs::create_dir_all(&vdir).unwrap();
+    let mut buckets: Vec<(String, Value)> = Vec::new();
+    for a in &entry.buckets {
+        std::fs::copy(base.dir.join(&a.file), vdir.join(&a.file)).unwrap();
+        buckets.push((
+            a.bucket.to_string(),
+            json::obj([
+                ("file", Value::from(a.file.as_str())),
+                ("sha256", Value::from(a.sha256.as_str())),
+                ("bytes", Value::from(a.bytes)),
+            ]),
+        ));
+    }
+    let doc = json::obj([
+        ("format_version", Value::from(1u64)),
+        (
+            "input_shape",
+            Value::Arr(base.input_shape.iter().map(|&d| Value::from(d)).collect()),
+        ),
+        (
+            "classes",
+            Value::Arr(base.classes.iter().map(|c| Value::from(c.as_str())).collect()),
+        ),
+        (
+            "normalize",
+            json::obj([
+                ("mean", Value::from(base.norm_mean as f64)),
+                ("std", Value::from(base.norm_std as f64)),
+            ]),
+        ),
+        (
+            "buckets",
+            Value::Arr(base.buckets.iter().map(|&b| Value::from(b)).collect()),
+        ),
+        (
+            "models",
+            Value::Obj(vec![(
+                model.to_string(),
+                json::obj([
+                    ("param_count", Value::from(entry.param_count)),
+                    ("test_acc", Value::from(entry.test_acc)),
+                    ("params_sha256", Value::from(params_sha)),
+                    ("buckets", Value::Obj(buckets)),
+                ]),
+            )]),
+        ),
+    ]);
+    std::fs::write(vdir.join("manifest.json"), json::to_string_pretty(&doc)).unwrap();
+}
+
+struct Stack {
+    handle: ServerHandle,
+    state: Arc<ServerState>,
+    audit_path: PathBuf,
+}
+
+static STACK: OnceLock<Stack> = OnceLock::new();
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn stack() -> &'static Stack {
+    STACK.get_or_init(|| {
+        let dir = versioned_layout();
+        let audit_path = dir.join("audit.jsonl");
+        let mut config = ServeConfig::default();
+        config.addr = "127.0.0.1:0".into();
+        config.artifacts = dir;
+        config.http_workers = 4;
+        config.device_workers = 1;
+        config.warmup = false;
+        config.scheduler = Some(SchedConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+            adaptive: false,
+            ..Default::default()
+        });
+        config.registry.audit_log = Some(audit_path.clone());
+        config.registry.guardrails.min_samples = 10;
+        let (handle, state) = serve(&config).expect("registry server starts");
+        Stack { handle, state, audit_path }
+    })
+}
+
+fn client() -> Client {
+    Client::connect(stack().handle.addr).unwrap()
+}
+
+fn predict_body(batch: usize, seed: u64) -> Value {
+    let mut rng = Prng::new(seed);
+    let (data, _) = workload::make_batch(&mut rng, batch);
+    json::obj([
+        (
+            "data",
+            Value::Arr(data.iter().map(|&v| Value::from(v)).collect()),
+        ),
+        ("batch", Value::from(batch)),
+    ])
+}
+
+/// Single-model predict with detail + an explicit request id; returns
+/// `(status, detail.version, params_sha256)`.
+fn predict_mlp(c: &mut Client, rid: &str, version: Option<u32>) -> (u16, u64, String) {
+    let mut body = predict_body(1, 7);
+    if let Value::Obj(m) = &mut body {
+        m.push(("detail".into(), Value::Bool(true)));
+        if let Some(v) = version {
+            m.push(("version".into(), Value::from(v as u64)));
+        }
+    }
+    let mut req = Request::new(
+        "POST",
+        "/v1/models/mlp/predict",
+        json::to_string(&body).into_bytes(),
+    );
+    req.headers.push(("content-type".into(), "application/json".into()));
+    req.headers.push(("x-request-id".into(), rid.into()));
+    let resp = c.request(&req).unwrap();
+    let doc = resp.json_body().unwrap_or(Value::Null);
+    let served = doc.path(&["detail", "version"]).and_then(Value::as_u64).unwrap_or(0);
+    let sha = doc
+        .get("params_sha256")
+        .and_then(Value::as_str)
+        .unwrap_or("")
+        .to_string();
+    (resp.status, served, sha)
+}
+
+fn error_code(r: &flexserve::http::Response) -> String {
+    r.json_body()
+        .unwrap()
+        .path(&["error", "code"])
+        .and_then(Value::as_str)
+        .unwrap_or("<none>")
+        .to_string()
+}
+
+fn audit_events(c: &mut Client) -> Vec<(String, String)> {
+    c.audit(100)
+        .unwrap()
+        .get("audit")
+        .and_then(Value::as_arr)
+        .map(|a| {
+            a.iter()
+                .map(|e| {
+                    (
+                        e.get("event").and_then(Value::as_str).unwrap_or("").to_string(),
+                        e.get("actor").and_then(Value::as_str).unwrap_or("").to_string(),
+                    )
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[test]
+fn full_rollout_lifecycle_canary_autorollback_promote() {
+    require_artifacts!();
+    let _g = GUARD.lock().unwrap();
+    let st = stack();
+    let mut c = client();
+
+    // ---- the versioned catalog is visible; v1 serves byte-compatibly ----
+    let models = c.models().unwrap();
+    let mlp = models
+        .get("models")
+        .and_then(Value::as_arr)
+        .unwrap()
+        .iter()
+        .find(|m| m.get("name").and_then(Value::as_str) == Some("mlp"))
+        .expect("mlp in the registry table")
+        .clone();
+    let versions = mlp.get("versions").and_then(Value::as_arr).unwrap();
+    assert_eq!(versions.len(), 2, "flat layout = v1, subdir = v2");
+    assert_eq!(versions[0].get("status").unwrap().as_str(), Some("active"));
+    assert_eq!(versions[1].get("status").unwrap().as_str(), Some("unloaded"));
+    assert_eq!(mlp.get("version").unwrap().as_u64(), Some(1));
+    assert_eq!(
+        versions[1].get("params_sha256").unwrap().as_str(),
+        Some("v2-mlp-params-sha")
+    );
+    let v1_sha = versions[0]
+        .get("params_sha256")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    // Legacy alias and /v1 serve identical bytes, version members absent
+    // (the flat wire contract survives the registry).
+    let body = predict_body(2, 3);
+    let legacy = c.post_json("/predict", &body).unwrap();
+    let v1 = c.post_json("/v1/predict", &body).unwrap();
+    assert_eq!(legacy.status, 200, "{}", String::from_utf8_lossy(&legacy.body));
+    assert_eq!(legacy.body, v1.body, "legacy alias must stay byte-compatible");
+    let doc = legacy.json_body().unwrap();
+    assert!(doc.get("model_mlp").is_some() && doc.get("model_mlp@2").is_none());
+
+    // ---- load v2 alongside v1 ----
+    let doc = c.load_model_version("mlp", 2).unwrap();
+    assert_eq!(doc.get("status").unwrap().as_str(), Some("loaded"));
+    assert_eq!(doc.get("version").unwrap().as_u64(), Some(2));
+    assert_eq!(doc.get("params_sha256").unwrap().as_str(), Some("v2-mlp-params-sha"));
+    // Both versions resident concurrently.
+    assert!(st.state.ensemble.pool().is_version_loaded("mlp", 1));
+    assert!(st.state.ensemble.pool().is_version_loaded("mlp", 2));
+
+    // Version slots are not ensemble members (membership is model
+    // identity; versions are a rollout concern).
+    let r = c
+        .put_json(
+            "/v1/ensemble",
+            &json::obj([(
+                "models",
+                Value::Arr(vec![Value::from("mlp"), Value::from("mlp@2")]),
+            )]),
+        )
+        .unwrap();
+    assert_eq!((r.status, error_code(&r)), (422, "bad_input.bad_value".to_string()));
+
+    // Version-pinned inference on both codecs; unknown pins fail typed.
+    let (status, served, sha) = predict_mlp(&mut c, "pin-check", Some(2));
+    assert_eq!((status, served), (200, 2));
+    assert_eq!(sha, "v2-mlp-params-sha");
+    let (status, served, sha) = predict_mlp(&mut c, "pin-check", Some(1));
+    assert_eq!((status, served), (200, 1));
+    assert_eq!(sha, v1_sha);
+    let (status, _, _) = predict_mlp(&mut c, "pin-check", Some(9));
+    assert_eq!(status, 404);
+    let mut rng = Prng::new(5);
+    let (data, _) = workload::make_batch(&mut rng, 1);
+    let shape = [1, workload::IMG, workload::IMG, 1];
+    let v2_doc = c.v2_infer("mlp", &shape, &data).unwrap();
+    assert_eq!(v2_doc.get("model_version").unwrap().as_str(), Some("1"));
+    let v2_body = json::parse(&format!(
+        r#"{{"inputs":[{{"name":"input","datatype":"FP32","shape":[1,{e}],
+            "data":{data}}}],"parameters":{{"version":2}}}}"#,
+        e = workload::IMG * workload::IMG,
+        data = json::to_string(&Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+    ))
+    .unwrap();
+    let resp = c.post_json("/v2/models/mlp/infer", &v2_body).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let doc = resp.json_body().unwrap();
+    assert_eq!(doc.get("model_version").unwrap().as_str(), Some("2"));
+    assert_eq!(
+        doc.path(&["parameters", "params_sha256"]).unwrap().as_str(),
+        Some("v2-mlp-params-sha")
+    );
+
+    // ---- 10% canary: the hash split is deterministic per request id ----
+    c.set_rollout("mlp", "canary", 2, Some(10)).unwrap();
+    let roll = c.get_rollout("mlp").unwrap();
+    assert_eq!(roll.get("mode").unwrap().as_str(), Some("canary"));
+    assert_eq!(roll.get("percent").unwrap().as_u64(), Some(10));
+    let (mut stable_seen, mut canary_seen) = (0u32, 0u32);
+    let mut i = 0;
+    while (stable_seen < 3 || canary_seen < 3) && i < 500 {
+        let rid = format!("canary-rid-{i}");
+        i += 1;
+        let (status, served, _) = predict_mlp(&mut c, &rid, None);
+        assert_eq!(status, 200);
+        let expect = if canary_pick(&rid, 10) { 2 } else { 1 };
+        assert_eq!(served, expect, "{rid}: split must follow the pure hash rule");
+        // Same id re-sent lands on the same version.
+        let (_, again, _) = predict_mlp(&mut c, &rid, None);
+        assert_eq!(again, served, "{rid}: split must be deterministic");
+        if served == 2 { canary_seen += 1 } else { stable_seen += 1 }
+    }
+    assert!(stable_seen >= 3 && canary_seen >= 3, "degenerate split after {i} ids");
+
+    // ---- injected failures trip auto-rollback ----
+    // Restart the canary so the candidate window is clean, then feed it
+    // failing outcomes (the guardrail input) until the error rate rail
+    // (>0.5 over ≥10 samples) fires.
+    c.set_rollout("mlp", "canary", 2, Some(10)).unwrap();
+    for _ in 0..12 {
+        st.state.registry.record_outcome("mlp", 2, false, 2_000);
+    }
+    let roll = c.get_rollout("mlp").unwrap();
+    assert_eq!(roll.get("mode").unwrap().as_str(), Some("pin"), "{roll}");
+    assert_eq!(roll.get("active_version").unwrap().as_u64(), Some(1));
+    // All traffic back on v1, including previously-canaried ids.
+    let rid_on_candidate = (0..500)
+        .map(|i| format!("canary-rid-{i}"))
+        .find(|rid| canary_pick(rid, 10))
+        .unwrap();
+    let (_, served, _) = predict_mlp(&mut c, &rid_on_candidate, None);
+    assert_eq!(served, 1, "rollback must stop the canary split");
+
+    // ---- promote, then v1 unloads cleanly while v2 keeps serving ----
+    c.set_rollout("mlp", "canary", 2, Some(10)).unwrap();
+    let doc = c.promote("mlp").unwrap();
+    assert_eq!(doc.get("active_version").unwrap().as_u64(), Some(2));
+    let (_, served, sha) = predict_mlp(&mut c, "post-promote", None);
+    assert_eq!((served, sha.as_str()), (2, "v2-mlp-params-sha"));
+
+    let doc = c.unload_model_version("mlp", 1).unwrap();
+    assert_eq!(doc.get("status").unwrap().as_str(), Some("unloaded"));
+    assert!(!st.state.ensemble.pool().is_version_loaded("mlp", 1));
+    assert!(st.state.ensemble.pool().is_version_loaded("mlp", 2));
+    // v2 still serves the model — single-model, ensemble, and /v2 routes.
+    let (status, served, _) = predict_mlp(&mut c, "post-unload", None);
+    assert_eq!((status, served), (200, 2));
+    let resp = c.post_json("/v1/predict", &predict_body(2, 11)).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let doc = resp.json_body().unwrap();
+    assert_eq!(doc.get("model_mlp").unwrap().as_arr().unwrap().len(), 2);
+    assert!(c.v2_ready(Some("mlp")).unwrap(), "v2 still ready via version 2");
+
+    // Mid-rollout unloaded version → typed model.version_unknown on BOTH
+    // codecs (not a 500).
+    let (status, _, _) = predict_mlp(&mut c, "gone-pin", Some(1));
+    assert_eq!(status, 404);
+    let mut body = predict_body(1, 13);
+    if let Value::Obj(m) = &mut body {
+        m.push(("version".into(), Value::from(1u64)));
+    }
+    let resp = c.post_json("/v1/models/mlp/predict", &body).unwrap();
+    assert_eq!((resp.status, error_code(&resp)), (404, "model.version_unknown".to_string()));
+    let v2_body = json::parse(&format!(
+        r#"{{"inputs":[{{"name":"input","datatype":"FP32","shape":[1,{e}],
+            "data":{data}}}],"parameters":{{"version":1}}}}"#,
+        e = workload::IMG * workload::IMG,
+        data = json::to_string(&Value::Arr(data.iter().map(|&v| Value::from(v)).collect())),
+    ))
+    .unwrap();
+    let resp = c.post_json("/v2/models/mlp/infer", &v2_body).unwrap();
+    assert_eq!(resp.status, 404);
+    let err = resp
+        .json_body()
+        .unwrap()
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert!(err.starts_with("model.version_unknown:"), "{err}");
+
+    // ---- shadow mode mirrors off the hot path ----
+    c.load_model_version("mlp", 1).unwrap();
+    let body = json::obj([
+        ("mode", Value::from("shadow")),
+        ("version", Value::from(1u64)),
+    ]);
+    let resp = c.put_json("/v1/models/mlp/rollout", &body).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let before = st.state.metrics.counter("ver_mlp_v1_shadow_requests_total");
+    for i in 0..4 {
+        let (status, served, _) = predict_mlp(&mut c, &format!("shadow-{i}"), None);
+        assert_eq!((status, served), (200, 2), "shadow never changes the response");
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while st.state.metrics.counter("ver_mlp_v1_shadow_requests_total") == before
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(
+        st.state.metrics.counter("ver_mlp_v1_shadow_requests_total") > before,
+        "shadow mirror never executed"
+    );
+    c.rollback("mlp").unwrap(); // abandon the shadow, stay pinned at v2
+
+    // ---- the audit trail recorded every transition with both shas ----
+    let events = audit_events(&mut c);
+    let names: Vec<&str> = events.iter().map(|(e, _)| e.as_str()).collect();
+    for expected in ["load", "canary", "rollback", "promote", "unload", "shadow"] {
+        assert!(names.contains(&expected), "audit missing '{expected}': {names:?}");
+    }
+    // The guardrail rollback is attributed to the guardrail, not a human.
+    assert!(
+        events.iter().any(|(e, a)| e == "rollback" && a == "guardrail"),
+        "{events:?}"
+    );
+    // The durable JSONL trail carries the same records with both shas.
+    let text = std::fs::read_to_string(&st.audit_path).unwrap();
+    let promote_line = text
+        .lines()
+        .find(|l| l.contains(r#""event":"promote""#))
+        .expect("promote in the audit file");
+    assert!(promote_line.contains(&v1_sha), "{promote_line}");
+    assert!(promote_line.contains("v2-mlp-params-sha"), "{promote_line}");
+    for line in text.lines() {
+        let v = json::parse(line).expect("every audit line is one JSON object");
+        assert!(v.get("ts_ms").is_some() && v.get("actor").is_some());
+    }
+
+    // ---- per-version series in the metrics expositions ----
+    let resp = c.get("/v1/metrics?format=prometheus").unwrap();
+    let prom = String::from_utf8(resp.body).unwrap();
+    assert!(prom.contains("flexserve_ver_mlp_v1_requests_total"), "{prom}");
+    assert!(prom.contains("flexserve_ver_mlp_v2_requests_total"), "{prom}");
+
+    // Leave the model pinned at v2 with both versions loaded; the other
+    // test uses cnn_s only.
+}
+
+#[test]
+fn corrupted_version_load_is_typed_provenance_error() {
+    require_artifacts!();
+    let _g = GUARD.lock().unwrap();
+    let st = stack();
+    let mut c = client();
+
+    // Tamper with cnn_s v2 AFTER boot verification passed.
+    let victim = st
+        .state
+        .manifest
+        .dir
+        .join("cnn_s")
+        .join("2")
+        .join(
+            st.state
+                .registry
+                .store()
+                .entry("cnn_s", 2)
+                .unwrap()
+                .buckets[0]
+                .file
+                .rsplit('/')
+                .next()
+                .unwrap(),
+        );
+    let mut text = std::fs::read_to_string(&victim).unwrap();
+    text.push_str("\n// tampered");
+    std::fs::write(&victim, text).unwrap();
+
+    let resp = c.post("/v1/models/cnn_s/load?version=2", Vec::new()).unwrap();
+    assert_eq!(
+        (resp.status, error_code(&resp)),
+        (409, "model.provenance".to_string()),
+        "{}",
+        String::from_utf8_lossy(&resp.body)
+    );
+    // The rejected version never became loadable or servable.
+    assert!(!st.state.ensemble.pool().is_version_loaded("cnn_s", 2));
+    let mut body = predict_body(1, 17);
+    if let Value::Obj(m) = &mut body {
+        m.push(("version".into(), Value::from(2u64)));
+    }
+    let resp = c.post_json("/v1/models/cnn_s/predict", &body).unwrap();
+    assert_eq!((resp.status, error_code(&resp)), (404, "model.version_unknown".to_string()));
+    // v1 keeps serving untouched.
+    let resp = c.post_json("/v1/models/cnn_s/predict", &predict_body(1, 19)).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+
+    // Unknown-version lifecycle requests are typed too.
+    let resp = c.post("/v1/models/cnn_s/load?version=7", Vec::new()).unwrap();
+    assert_eq!((resp.status, error_code(&resp)), (404, "model.version_unknown".to_string()));
+    let resp = c.post("/v1/models/cnn_s/unload?version=7", Vec::new()).unwrap();
+    assert_eq!((resp.status, error_code(&resp)), (404, "model.version_unknown".to_string()));
+}
