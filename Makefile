@@ -8,6 +8,8 @@
 #   make bench       build the bench harness and smoke it against an
 #                    in-process echo target (no artifacts needed); point
 #                    it at a live server with BENCH_FLAGS='--addr ...'
+#   make gateway-smoke  device-free gateway cycle: stickiness, kill,
+#                    ejection, rerouting over in-process echo replicas
 #   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs
 #                    drift from the README "Protocols" matrix
 #
@@ -20,7 +22,7 @@ ARTIFACTS ?= rust/artifacts
 
 BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
 
-.PHONY: artifacts serve test bench check-docs fmt clippy
+.PHONY: artifacts serve test bench gateway-smoke check-docs fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -34,6 +36,9 @@ test:
 bench:
 	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --out ../BENCH_serve.json
 	@echo "wrote BENCH_serve.json"
+
+gateway-smoke:
+	cd rust && cargo run --release -- gateway-smoke
 
 # Every quoted "/v2..." string in v2.rs is a route pattern (the module
 # keeps other /v2 spellings out of string literals); each must appear

@@ -423,10 +423,40 @@ pub fn fetch_stage_breakdown(addr: SocketAddr) -> Option<Value> {
     }
 }
 
+/// Scrape a gateway tier's ring + membership state (`GET /v1/gateway`)
+/// when the bench target is a gateway rather than a plain backend. `None`
+/// when the target doesn't speak the route (backends, echo targets) or
+/// doesn't identify as the gateway tier.
+pub fn fetch_gateway_breakdown(addr: SocketAddr) -> Option<Value> {
+    let mut client = Client::connect(addr).ok()?;
+    let resp = client.get("/v1/gateway").ok()?;
+    if resp.status != 200 {
+        return None;
+    }
+    let v = resp.json_body().ok()?;
+    if v.get("tier").and_then(Value::as_str) != Some("gateway") {
+        return None;
+    }
+    Some(v)
+}
+
 /// Render the `BENCH_serve.json` document: run config, throughput,
 /// client-side latency quantiles, and (when available) the server's
-/// per-stage parse/queue/exec/render breakdown.
+/// per-stage parse/queue/exec/render breakdown. When the target was a
+/// gateway tier, its ring/membership snapshot rides along so fleet
+/// topology is recorded next to the numbers it produced.
 pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<&Value>) -> Value {
+    report_json_with_gateway(cfg, report, server_stages, None)
+}
+
+/// [`report_json`] plus an optional gateway-tier snapshot (see
+/// [`fetch_gateway_breakdown`]).
+pub fn report_json_with_gateway(
+    cfg: &LoadConfig,
+    report: &LoadReport,
+    server_stages: Option<&Value>,
+    gateway: Option<&Value>,
+) -> Value {
     let mix = Value::Arr(
         cfg.batch_mix
             .iter()
@@ -526,6 +556,9 @@ pub fn report_json(cfg: &LoadConfig, report: &LoadReport, server_stages: Option<
             "server_stages_cumulative",
             server_stages.cloned().unwrap_or(Value::Null),
         ),
+        // Ring + membership snapshot when the target was a gateway tier
+        // (`fetch_gateway_breakdown`); Null for direct backend runs.
+        ("gateway", gateway.cloned().unwrap_or(Value::Null)),
     ])
 }
 
@@ -616,8 +649,19 @@ mod tests {
         // The emitted document is valid JSON end to end.
         assert!(json::parse(&json::to_string_pretty(&doc)).is_ok());
 
-        // Echo servers expose no /v1/metrics stage histograms.
+        // Echo servers expose no /v1/metrics stage histograms and are not
+        // a gateway tier; the report records both absences as Null.
         assert!(fetch_stage_breakdown(server.addr).is_none());
+        assert!(fetch_gateway_breakdown(server.addr).is_none());
+        assert_eq!(doc.path(&["gateway"]), Some(&Value::Null));
+
+        // A gateway snapshot embeds verbatim when one was scraped.
+        let snap = json::obj([("tier", Value::from("gateway"))]);
+        let doc = report_json_with_gateway(&cfg, &report, None, Some(&snap));
+        assert_eq!(
+            doc.path(&["gateway", "tier"]).unwrap().as_str(),
+            Some("gateway")
+        );
         server.stop();
     }
 

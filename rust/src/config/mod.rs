@@ -162,6 +162,14 @@ impl ServeConfig {
                         .ok_or_else(|| anyhow!("registry.min_samples must be >= 1"))?;
                 }
             }
+            // A combined cluster config file may carry a `gateway` block
+            // (consumed by `GatewayConfig::from_file`); the serve side
+            // validates the shape and otherwise ignores it.
+            "gateway" => {
+                if val.as_obj().is_none() {
+                    bail!("'gateway' must be an object");
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -248,6 +256,170 @@ impl ServeConfig {
             }
         }
         Ok(())
+    }
+}
+
+/// Configuration of the `flexserve gateway` routing tier.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Gateway listen address (port 0 = ephemeral).
+    pub addr: String,
+    /// HTTP connection worker threads.
+    pub http_workers: usize,
+    /// Backend replicas as `(id, addr)` pairs. The id is the routing
+    /// identity — ring placement hashes it, metrics embed it — so keep it
+    /// stable across backend restarts (`name=host:port` spelling); bare
+    /// `host:port` uses the address as the id.
+    pub backends: Vec<(String, String)>,
+    /// Virtual nodes per backend on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Health probe cadence and per-probe connect/read timeout.
+    pub probe_interval: Duration,
+    pub probe_timeout: Duration,
+    /// Consecutive failed probes before a backend goes Down (ejected).
+    pub fail_after: u32,
+    /// Consecutive healthy probes before a backend (re-)admits as Up.
+    pub rise_after: u32,
+    /// Per-backend concurrent in-flight cap (0 = unbounded). At the cap
+    /// the proxy skips to the next replica instead of queueing.
+    pub inflight_cap: usize,
+    /// Extra attempts after the first on 429/503/transport failure.
+    pub retry_budget: u32,
+    /// Emit one access-log line per proxied request on stderr.
+    pub access_log: bool,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:8081".into(),
+            http_workers: 8,
+            backends: Vec::new(),
+            vnodes: 64,
+            probe_interval: Duration::from_millis(500),
+            probe_timeout: Duration::from_millis(500),
+            fail_after: 3,
+            rise_after: 2,
+            inflight_cap: 64,
+            retry_budget: 1,
+            access_log: false,
+        }
+    }
+}
+
+impl GatewayConfig {
+    /// Load from a JSON config file: the `gateway` block of a combined
+    /// cluster config, or a bare gateway object.
+    pub fn from_file(path: &str) -> Result<GatewayConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let block = v.get("gateway").unwrap_or(&v);
+        let mut cfg = GatewayConfig::default();
+        cfg.apply_json(block)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (key, val) in v.as_obj().ok_or_else(|| anyhow!("gateway config must be an object"))? {
+            match key.as_str() {
+                "addr" => self.addr = req_str(key, val)?.to_string(),
+                "http_workers" => self.http_workers = req_usize(key, val)?.max(1),
+                "backends" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("'backends' must be an array of strings"))?;
+                    self.backends = arr
+                        .iter()
+                        .map(|b| {
+                            b.as_str()
+                                .map(parse_backend)
+                                .ok_or_else(|| anyhow!("'backends' entries must be strings"))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "vnodes" => self.vnodes = req_usize(key, val)?.max(1),
+                "probe_interval_ms" => {
+                    self.probe_interval = Duration::from_millis(
+                        val.as_u64()
+                            .ok_or_else(|| anyhow!("'{key}' must be an integer"))?
+                            .max(1),
+                    )
+                }
+                "probe_timeout_ms" => {
+                    self.probe_timeout = Duration::from_millis(
+                        val.as_u64()
+                            .ok_or_else(|| anyhow!("'{key}' must be an integer"))?
+                            .max(1),
+                    )
+                }
+                "fail_after" => self.fail_after = req_usize(key, val)?.max(1) as u32,
+                "rise_after" => self.rise_after = req_usize(key, val)?.max(1) as u32,
+                "inflight_cap" => self.inflight_cap = req_usize(key, val)?,
+                "retry_budget" => self.retry_budget = req_usize(key, val)? as u32,
+                "access_log" => self.access_log = req_bool(key, val)?,
+                other => bail!("unknown gateway config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` / `--key=value` CLI overrides (same flag shape
+    /// as `ServeConfig::apply_cli`).
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            let (flag, inline) = match arg.split_once('=') {
+                Some((f, v)) => (f.to_string(), Some(v.to_string())),
+                None => (arg.clone(), None),
+            };
+            let mut take = || -> Result<String> {
+                inline.clone().or_else(|| it.next().cloned()).ok_or_else(|| {
+                    anyhow!("flag {flag} requires a value")
+                })
+            };
+            match flag.as_str() {
+                "--addr" => self.addr = take()?,
+                "--http-workers" => self.http_workers = take()?.parse::<usize>()?.max(1),
+                "--backends" => {
+                    self.backends = take()?
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(parse_backend)
+                        .collect();
+                }
+                "--vnodes" => self.vnodes = take()?.parse::<usize>()?.max(1),
+                "--probe-interval-ms" => {
+                    self.probe_interval = Duration::from_millis(take()?.parse::<u64>()?.max(1))
+                }
+                "--probe-timeout-ms" => {
+                    self.probe_timeout = Duration::from_millis(take()?.parse::<u64>()?.max(1))
+                }
+                "--fail-after" => self.fail_after = take()?.parse::<u32>()?.max(1),
+                "--rise-after" => self.rise_after = take()?.parse::<u32>()?.max(1),
+                "--inflight-cap" => self.inflight_cap = take()?.parse::<usize>()?,
+                "--retry-budget" => self.retry_budget = take()?.parse::<u32>()?,
+                "--access-log" => self.access_log = true,
+                "--config" => {
+                    let path = take()?;
+                    let text = std::fs::read_to_string(&path)
+                        .with_context(|| format!("reading {path}"))?;
+                    let v = json::parse(&text)?;
+                    let block = v.get("gateway").unwrap_or(&v);
+                    self.apply_json(block)?;
+                }
+                other => bail!("unknown gateway flag '{other}'"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse one backend spec: `name=host:port` or bare `host:port` (the
+/// address doubles as the id).
+fn parse_backend(spec: &str) -> (String, String) {
+    match spec.split_once('=') {
+        Some((name, addr)) => (name.trim().to_string(), addr.trim().to_string()),
+        None => (spec.trim().to_string(), spec.trim().to_string()),
     }
 }
 
@@ -442,6 +614,65 @@ mod tests {
             Some(std::path::Path::new("flexserve_audit.jsonl"))
         );
         assert_eq!(c.registry.guardrails.min_samples, 20);
+    }
+
+    #[test]
+    fn gateway_json_and_cli_parse() {
+        let mut g = GatewayConfig::default();
+        g.apply_json(
+            &json::parse(
+                r#"{"addr":"0.0.0.0:8081","backends":["a=127.0.0.1:9001","127.0.0.1:9002"],
+                    "vnodes":128,"probe_interval_ms":250,"probe_timeout_ms":100,
+                    "fail_after":2,"rise_after":1,"inflight_cap":32,"retry_budget":3}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(g.addr, "0.0.0.0:8081");
+        assert_eq!(
+            g.backends,
+            vec![
+                ("a".to_string(), "127.0.0.1:9001".to_string()),
+                ("127.0.0.1:9002".to_string(), "127.0.0.1:9002".to_string()),
+            ]
+        );
+        assert_eq!(g.vnodes, 128);
+        assert_eq!(g.probe_interval, Duration::from_millis(250));
+        assert_eq!(g.fail_after, 2);
+        assert_eq!(g.rise_after, 1);
+        assert_eq!(g.inflight_cap, 32);
+        assert_eq!(g.retry_budget, 3);
+        assert!(g
+            .apply_json(&json::parse(r#"{"nope":1}"#).unwrap())
+            .is_err());
+
+        let mut g = GatewayConfig::default();
+        g.apply_cli(
+            &["--addr=127.0.0.1:0", "--backends", "b1=127.0.0.1:9001,b2=127.0.0.1:9002",
+              "--retry-budget=2", "--probe-interval-ms", "100"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert_eq!(g.backends.len(), 2);
+        assert_eq!(g.backends[0].0, "b1");
+        assert_eq!(g.retry_budget, 2);
+        assert_eq!(g.probe_interval, Duration::from_millis(100));
+        assert!(GatewayConfig::default()
+            .apply_cli(&["--bogus".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn gateway_block_from_combined_config_file() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/server.example.json");
+        let g = GatewayConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert!(!g.backends.is_empty(), "example config lists backends");
+        // And the serve side tolerates the same file (gateway block ignored).
+        let c = ServeConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.addr, "0.0.0.0:8080");
     }
 
     #[test]

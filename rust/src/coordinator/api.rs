@@ -173,21 +173,27 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
     }));
 
     // ---- introspection ---------------------------------------------------
+    // Liveness vs readiness: `/livez` answers 200 as soon as the process
+    // accepts connections (restart signal for a supervisor); `/healthz` is
+    // *readiness* — 503 with a typed body until every active-ensemble
+    // member has a loaded version, and the ready doc carries scheduler
+    // queue depth + the loaded-version summary so a gateway can score
+    // degradation instead of only up/down.
     let s = Arc::clone(&state);
-    let healthz: RouteHandler = Arc::new(move |_req, _p| {
+    let livez: RouteHandler = Arc::new(move |_req, _p| {
         Response::json(
             200,
             &json::obj([
-                ("status", Value::from("ok")),
-                ("models", Value::from(s.ensemble.models().len())),
-                (
-                    "loaded",
-                    Value::from(s.ensemble.pool().loaded_models().len()),
-                ),
+                ("status", Value::from("alive")),
                 ("uptime_s", Value::from(s.started.elapsed().as_secs())),
             ]),
         )
     });
+    router.add_shared("GET", "/v1/livez", Arc::clone(&livez));
+    router.add_shared("GET", "/livez", livez);
+
+    let s = Arc::clone(&state);
+    let healthz: RouteHandler = Arc::new(move |_req, _p| readiness_response(&s));
     router.add_shared("GET", "/v1/healthz", Arc::clone(&healthz));
     router.add_shared("GET", "/healthz", healthz);
 
@@ -340,6 +346,73 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
     super::v2::add_routes(&mut router, Arc::clone(&state));
 
     router
+}
+
+/// The readiness document behind `GET /v1/healthz`. Ready means every
+/// active-ensemble member has at least one loaded version; until then the
+/// same doc ships inside a typed 503 (`server.not_ready`) so gateway
+/// health probes can distinguish "booting" from "dead". The legacy keys
+/// (`status`/`models`/`loaded`/`uptime_s`) are preserved verbatim; the
+/// additions (`ready`, `active`, `versions`, `scheduler`) feed gateway
+/// degradation scoring.
+fn readiness_response(s: &ServerState) -> Response {
+    let active = s.ensemble.models();
+    let pool = s.ensemble.pool();
+    let ready = !active.is_empty() && active.iter().all(|m| pool.any_version_loaded(m));
+    let versions = Value::Obj(
+        active
+            .iter()
+            .map(|m| {
+                let vs = pool
+                    .loaded_versions(m)
+                    .into_iter()
+                    .map(|v| Value::from(v as u64))
+                    .collect();
+                (m.clone(), Value::Arr(vs))
+            })
+            .collect(),
+    );
+    let scheduler = match &s.scheduler {
+        None => Value::Null,
+        Some(sched) => json::obj([("queue_depth", Value::from(sched.queue_depth()))]),
+    };
+    let mut doc = vec![
+        (
+            "status".to_string(),
+            Value::from(if ready { "ok" } else { "starting" }),
+        ),
+        ("ready".to_string(), Value::from(ready)),
+        ("models".to_string(), Value::from(active.len())),
+        (
+            "loaded".to_string(),
+            Value::from(pool.loaded_models().len()),
+        ),
+        (
+            "active".to_string(),
+            Value::Arr(active.iter().map(|m| Value::from(m.as_str())).collect()),
+        ),
+        ("versions".to_string(), versions),
+        ("scheduler".to_string(), scheduler),
+        (
+            "uptime_s".to_string(),
+            Value::from(s.started.elapsed().as_secs()),
+        ),
+    ];
+    if ready {
+        Response::json(200, &Value::Obj(doc))
+    } else {
+        doc.push((
+            "error".to_string(),
+            json::obj([
+                ("code", Value::from("server.not_ready")),
+                (
+                    "message",
+                    Value::from("boot ensemble not fully loaded yet"),
+                ),
+            ]),
+        ));
+        Response::json(503, &Value::Obj(doc))
+    }
 }
 
 /// Prometheus text-exposition response (`text/plain; version=0.0.4`).

@@ -17,7 +17,7 @@
 //! (paper wire format in `wire.rs`/`api.rs`, OIP JSON in `v2.rs`).
 
 use super::api::ServerState;
-use super::ensemble::EnsembleOutput;
+use super::ensemble::{EnsembleOutput, ModelOutput};
 use super::policy::Policy;
 use super::sched::{BatchStats, TargetKey};
 use super::wire::{ApiError, StageMicros};
@@ -424,6 +424,49 @@ pub fn fuse_detections(
         detections.push(policy.fuse(&row_votes).map_err(ApiError::bad_policy)?);
     }
     Ok(detections)
+}
+
+/// Gateway re-fusion entry point: fuse per-model *class-name* rows (as
+/// they appear on the wire) instead of device outputs. The gateway merges
+/// scatter-gather subsets from other processes, where only rendered names
+/// are available — it builds a synthetic [`EnsembleOutput`] whose per-row
+/// prediction is index 1 iff the name equals `target`, then routes
+/// through [`fuse_detections`] so the fused booleans are produced by the
+/// same code path as a single-process response (never a reimplementation
+/// of the policy semantics).
+pub fn fuse_named_votes(
+    per_model: &[(String, Vec<String>)],
+    policy: &Policy,
+    target: &str,
+) -> Result<Vec<bool>, ApiError> {
+    let batch = per_model.first().map(|(_, rows)| rows.len()).unwrap_or(0);
+    for (name, rows) in per_model {
+        if rows.len() != batch {
+            return Err(ApiError::internal(format!(
+                "scatter merge: model '{name}' returned {} rows, expected {batch}",
+                rows.len()
+            )));
+        }
+    }
+    let output = EnsembleOutput {
+        batch,
+        per_model: per_model
+            .iter()
+            .map(|(name, rows)| ModelOutput {
+                model: name.clone(),
+                version: 0,
+                logits: Vec::new(),
+                preds: rows
+                    .iter()
+                    .map(|class| (if class == target { 1 } else { 0 }, 1.0))
+                    .collect(),
+                buckets: Vec::new(),
+                exec_micros: 0,
+                queue_micros: 0,
+            })
+            .collect(),
+    };
+    fuse_detections(&output, policy, 1)
 }
 
 /// Fold one forward's device timings into the `stage_*` histograms and

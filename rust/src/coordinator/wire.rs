@@ -192,6 +192,16 @@ impl ApiError {
         Self::new(504, "server.deadline_exceeded", detail)
     }
 
+    /// Gateway-tier shed: no healthy backend remained for the routing key
+    /// after the retry budget. Carries a `Retry-After` hint — membership
+    /// can recover on the next probe cycle.
+    pub fn no_backend(detail: impl Into<String>) -> ApiError {
+        ApiError {
+            retry_after: Some(1),
+            ..Self::new(503, "gateway.no_backend", detail)
+        }
+    }
+
     pub fn internal(detail: impl fmt::Display) -> ApiError {
         Self::new(500, "internal", detail.to_string())
     }

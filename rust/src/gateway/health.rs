@@ -1,0 +1,418 @@
+//! Health-driven membership: active probing of backend `/v1/healthz`.
+//!
+//! One poller thread probes every backend on a fixed interval over a
+//! *fresh* connection (a pooled keep-alive socket to a dead peer can look
+//! alive until its next write; a fresh connect to a stopped listener
+//! fails immediately). Probe outcomes drive a per-backend state machine:
+//!
+//! ```text
+//!           rise_after consecutive Healthy
+//!   Down ────────────────────────────────────▶ Up
+//!    ▲                                          │
+//!    │ fail_after consecutive Unreachable       │ answers 503 / ready:false
+//!    │                                          ▼
+//!    └──────────────────────────────────── Degraded
+//! ```
+//!
+//! `Up` backends take traffic first; `Degraded` (alive but unready or
+//! shedding) are used only when no `Up` replica remains for a key; `Down`
+//! backends are ejected from routing entirely until they re-admit by
+//! rising. Ring membership itself never changes — health only gates which
+//! preference-walk candidates are eligible, which is what keeps placement
+//! stable (bounded movement) across flaps.
+//!
+//! The transition function is pure and unit-tested device-free; the
+//! poller is a thin loop around it.
+
+use crate::http::Client;
+use crate::json::Value;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Routing eligibility of one backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendState {
+    /// Probes healthy: first-choice candidate.
+    Up,
+    /// Alive but unready/shedding (healthz answered, but 503 or
+    /// `ready:false`): last-resort candidate.
+    Degraded,
+    /// Ejected: consecutive transport failures; skipped by routing.
+    Down,
+}
+
+impl BackendState {
+    /// Gauge encoding used in the metric expositions (2=up 1=degraded
+    /// 0=down — larger is healthier).
+    pub fn as_gauge(self) -> u64 {
+        match self {
+            BackendState::Up => 2,
+            BackendState::Degraded => 1,
+            BackendState::Down => 0,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendState::Up => "up",
+            BackendState::Degraded => "degraded",
+            BackendState::Down => "down",
+        }
+    }
+}
+
+/// What one probe observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeOutcome {
+    /// 2xx with `ready != false`.
+    Healthy,
+    /// The backend answered, but it is booting or shedding (503 body,
+    /// `ready: false`).
+    Unready,
+    /// Connect/read failed: the process is gone or unreachable.
+    Unreachable,
+}
+
+/// Consecutive-outcome counters feeding the transition function.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProbeCounts {
+    pub consecutive_ok: u32,
+    pub consecutive_fail: u32,
+}
+
+/// Pure state transition: fold one probe outcome into (state, counts).
+/// `fail_after` probes must fail to eject; `rise_after` must succeed to
+/// (re-)admit — asymmetric thresholds so one lost probe doesn't flap a
+/// serving backend out of the fleet.
+pub fn next_state(
+    state: BackendState,
+    counts: ProbeCounts,
+    outcome: ProbeOutcome,
+    fail_after: u32,
+    rise_after: u32,
+) -> (BackendState, ProbeCounts) {
+    let mut c = counts;
+    match outcome {
+        ProbeOutcome::Healthy => {
+            c.consecutive_fail = 0;
+            c.consecutive_ok = c.consecutive_ok.saturating_add(1);
+            if c.consecutive_ok >= rise_after.max(1) {
+                (BackendState::Up, c)
+            } else {
+                // Not enough evidence yet: a Down backend stays ejected
+                // until it rises; Up/Degraded keep their state.
+                (state, c)
+            }
+        }
+        ProbeOutcome::Unready => {
+            // The process answered — it is not Down — but it should only
+            // serve as a last resort. Degrade immediately.
+            c.consecutive_ok = 0;
+            c.consecutive_fail = 0;
+            (BackendState::Degraded, c)
+        }
+        ProbeOutcome::Unreachable => {
+            c.consecutive_ok = 0;
+            c.consecutive_fail = c.consecutive_fail.saturating_add(1);
+            if c.consecutive_fail >= fail_after.max(1) {
+                (BackendState::Down, c)
+            } else {
+                (state, c)
+            }
+        }
+    }
+}
+
+/// Shared, poller-updated view of one backend's health.
+pub struct BackendHealth {
+    /// `BackendState::as_gauge` encoding (atomic so the hot routing path
+    /// reads state without a lock).
+    state: AtomicU64,
+    counts: Mutex<ProbeCounts>,
+    /// Model names this backend reported active (healthz `active` array).
+    active: Mutex<Vec<String>>,
+    /// Last scheduler queue depth the backend reported (degradation
+    /// signal; 0 when unscheduled or unknown).
+    pub queue_depth: AtomicUsize,
+    pub probes_total: AtomicU64,
+    pub probe_failures: AtomicU64,
+    last_error: Mutex<Option<String>>,
+}
+
+impl BackendHealth {
+    /// Backends start Up so a gateway is routable the instant it binds;
+    /// the first probe cycle corrects optimism within `probe_interval`.
+    pub fn new() -> BackendHealth {
+        BackendHealth {
+            state: AtomicU64::new(BackendState::Up.as_gauge()),
+            counts: Mutex::new(ProbeCounts::default()),
+            active: Mutex::new(Vec::new()),
+            queue_depth: AtomicUsize::new(0),
+            probes_total: AtomicU64::new(0),
+            probe_failures: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+        }
+    }
+
+    pub fn state(&self) -> BackendState {
+        match self.state.load(Ordering::Relaxed) {
+            2 => BackendState::Up,
+            1 => BackendState::Degraded,
+            _ => BackendState::Down,
+        }
+    }
+
+    pub fn set_state(&self, s: BackendState) {
+        self.state.store(s.as_gauge(), Ordering::Relaxed);
+    }
+
+    pub fn active_models(&self) -> Vec<String> {
+        self.active.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    pub fn last_error(&self) -> Option<String> {
+        self.last_error
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    /// Fold one probe result in (poller thread only).
+    pub fn observe(&self, outcome: ProbeOutcome, fail_after: u32, rise_after: u32) -> BackendState {
+        self.probes_total.fetch_add(1, Ordering::Relaxed);
+        if outcome != ProbeOutcome::Healthy {
+            self.probe_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
+        let (next, c) = next_state(self.state(), *counts, outcome, fail_after, rise_after);
+        *counts = c;
+        self.set_state(next);
+        next
+    }
+
+    fn record_doc(&self, doc: &Value) {
+        if let Some(models) = doc.get("active").and_then(|v| v.as_arr()) {
+            let names: Vec<String> = models
+                .iter()
+                .filter_map(|m| m.as_str().map(str::to_string))
+                .collect();
+            *self.active.lock().unwrap_or_else(|p| p.into_inner()) = names;
+        }
+        let depth = doc
+            .path(&["scheduler", "queue_depth"])
+            .and_then(Value::as_u64)
+            .unwrap_or(0);
+        self.queue_depth.store(depth as usize, Ordering::Relaxed);
+    }
+
+    fn record_error(&self, e: Option<String>) {
+        *self.last_error.lock().unwrap_or_else(|p| p.into_inner()) = e;
+    }
+}
+
+/// Probe one backend once over a fresh connection. Classification:
+/// transport failure → Unreachable; HTTP answer with 2xx + `ready != false`
+/// → Healthy; any other answer (503 boot doc, shedding) → Unready.
+pub fn probe_backend(addr: SocketAddr, timeout: Duration) -> (ProbeOutcome, Option<Value>, Option<String>) {
+    let mut client = match Client::connect_with_timeout(addr, timeout) {
+        Ok(c) => c,
+        Err(e) => return (ProbeOutcome::Unreachable, None, Some(format!("connect: {e:#}"))),
+    };
+    match client.get("/v1/healthz") {
+        Err(e) => (ProbeOutcome::Unreachable, None, Some(format!("probe: {e:#}"))),
+        Ok(resp) => {
+            let doc = resp.json_body().ok();
+            let ready = doc
+                .as_ref()
+                .and_then(|d| d.get("ready"))
+                .and_then(Value::as_bool)
+                // Legacy backends without the readiness split answer a
+                // plain 200 {"status":"ok"} — treat 2xx as ready.
+                .unwrap_or((200..300).contains(&resp.status));
+            if (200..300).contains(&resp.status) && ready {
+                (ProbeOutcome::Healthy, doc, None)
+            } else {
+                let why = doc
+                    .as_ref()
+                    .and_then(|d| d.path(&["error", "code"]))
+                    .and_then(Value::as_str)
+                    .unwrap_or("unready")
+                    .to_string();
+                (ProbeOutcome::Unready, doc, Some(format!("HTTP {}: {why}", resp.status)))
+            }
+        }
+    }
+}
+
+/// Spawn the poller thread over a backend set. Returns the stop flag;
+/// flip it to wind the thread down (it exits within one interval).
+pub fn spawn_prober(
+    backends: Vec<(String, SocketAddr, Arc<BackendHealth>)>,
+    interval: Duration,
+    timeout: Duration,
+    fail_after: u32,
+    rise_after: u32,
+    metrics: Arc<crate::coordinator::Metrics>,
+    on_update: impl Fn() + Send + 'static,
+) -> Arc<AtomicBool> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    std::thread::Builder::new()
+        .name("flexserve-gw-probe".into())
+        .spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                for (id, addr, health) in &backends {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let (outcome, doc, err) = probe_backend(*addr, timeout);
+                    if let Some(doc) = &doc {
+                        health.record_doc(doc);
+                    }
+                    health.record_error(err);
+                    let state = health.observe(outcome, fail_after, rise_after);
+                    metrics.set_gauge(
+                        &format!("gw_backend_{}_state", sanitize(id)),
+                        state.as_gauge(),
+                    );
+                }
+                let up = backends
+                    .iter()
+                    .filter(|(_, _, h)| h.state() == BackendState::Up)
+                    .count();
+                metrics.set_gauge("gw_backends_up", up as u64);
+                on_update();
+                std::thread::sleep(interval);
+            }
+        })
+        .expect("spawning gateway probe thread");
+    stop
+}
+
+/// Metric-name-safe backend id (Prometheus label-less naming: the id is
+/// embedded in the series name, so it must be `[a-zA-Z0-9_]`).
+pub fn sanitize(id: &str) -> String {
+    id.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FAIL: u32 = 3;
+    const RISE: u32 = 2;
+
+    fn run(
+        start: BackendState,
+        outcomes: &[ProbeOutcome],
+    ) -> (BackendState, ProbeCounts) {
+        let mut st = start;
+        let mut c = ProbeCounts::default();
+        for &o in outcomes {
+            let (n, nc) = next_state(st, c, o, FAIL, RISE);
+            st = n;
+            c = nc;
+        }
+        (st, c)
+    }
+
+    #[test]
+    fn stays_up_through_single_blip() {
+        let (st, _) = run(
+            BackendState::Up,
+            &[ProbeOutcome::Unreachable, ProbeOutcome::Healthy, ProbeOutcome::Healthy],
+        );
+        assert_eq!(st, BackendState::Up, "one lost probe must not eject");
+    }
+
+    #[test]
+    fn ejects_after_fail_threshold() {
+        let (st, _) = run(BackendState::Up, &[ProbeOutcome::Unreachable; 3]);
+        assert_eq!(st, BackendState::Down);
+        // One more failure keeps it down (saturating, no overflow).
+        let (st, _) = run(BackendState::Up, &[ProbeOutcome::Unreachable; 10]);
+        assert_eq!(st, BackendState::Down);
+    }
+
+    #[test]
+    fn readmits_after_rise_threshold() {
+        let seq = [
+            ProbeOutcome::Unreachable,
+            ProbeOutcome::Unreachable,
+            ProbeOutcome::Unreachable, // → Down
+            ProbeOutcome::Healthy,     // 1 ok: still Down
+            ProbeOutcome::Healthy,     // 2 ok: rises
+        ];
+        let (st, _) = run(BackendState::Up, &seq[..4]);
+        assert_eq!(st, BackendState::Down, "one healthy probe must not readmit");
+        let (st, _) = run(BackendState::Up, &seq);
+        assert_eq!(st, BackendState::Up);
+    }
+
+    #[test]
+    fn unready_degrades_immediately_and_recovers() {
+        let (st, _) = run(BackendState::Up, &[ProbeOutcome::Unready]);
+        assert_eq!(st, BackendState::Degraded, "shedding backend degrades at once");
+        // Unready resets the ok streak: recovery needs RISE fresh successes.
+        let (st, _) = run(
+            BackendState::Up,
+            &[ProbeOutcome::Unready, ProbeOutcome::Healthy],
+        );
+        assert_eq!(st, BackendState::Degraded);
+        let (st, _) = run(
+            BackendState::Up,
+            &[ProbeOutcome::Unready, ProbeOutcome::Healthy, ProbeOutcome::Healthy],
+        );
+        assert_eq!(st, BackendState::Up);
+    }
+
+    #[test]
+    fn unready_interrupts_fail_streak() {
+        // Unreachable ×2, then an answer: the process is alive, the eject
+        // counter must reset.
+        let (st, c) = run(
+            BackendState::Up,
+            &[
+                ProbeOutcome::Unreachable,
+                ProbeOutcome::Unreachable,
+                ProbeOutcome::Unready,
+                ProbeOutcome::Unreachable,
+            ],
+        );
+        assert_eq!(st, BackendState::Degraded);
+        assert_eq!(c.consecutive_fail, 1);
+    }
+
+    #[test]
+    fn gauge_encoding_orders_by_health() {
+        assert!(BackendState::Up.as_gauge() > BackendState::Degraded.as_gauge());
+        assert!(BackendState::Degraded.as_gauge() > BackendState::Down.as_gauge());
+    }
+
+    #[test]
+    fn sanitize_backend_ids() {
+        assert_eq!(sanitize("127.0.0.1:9001"), "127_0_0_1_9001");
+        assert_eq!(sanitize("replica-a"), "replica_a");
+        assert_eq!(sanitize("b1"), "b1");
+    }
+
+    #[test]
+    fn backend_health_observe_roundtrip() {
+        let h = BackendHealth::new();
+        assert_eq!(h.state(), BackendState::Up);
+        for _ in 0..FAIL {
+            h.observe(ProbeOutcome::Unreachable, FAIL, RISE);
+        }
+        assert_eq!(h.state(), BackendState::Down);
+        assert_eq!(h.probes_total.load(Ordering::Relaxed), 3);
+        assert_eq!(h.probe_failures.load(Ordering::Relaxed), 3);
+        for _ in 0..RISE {
+            h.observe(ProbeOutcome::Healthy, FAIL, RISE);
+        }
+        assert_eq!(h.state(), BackendState::Up);
+    }
+}

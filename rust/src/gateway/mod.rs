@@ -1,0 +1,88 @@
+//! The gateway tier: a stateless consistent-hash routing layer fronting N
+//! backend `flexserve serve` processes.
+//!
+//! One process is not a story for heavy traffic; the gateway makes the
+//! single-process server a fleet node. It owns no models and no device —
+//! only membership (`--backends`), health (active `/v1/healthz` probing
+//! with up/degraded/down transitions, ejection, re-admission), placement
+//! (a virtual-node consistent-hash ring over `model@version` keys),
+//! failover (bounded retries honoring backend `Retry-After`, per-backend
+//! in-flight caps), and scatter-gather (ensembles spanning shards fan out
+//! concurrently and merge through the coordinator's fusion path,
+//! preserving both wire formats).
+//!
+//! Submodules: [`ring`] (pure placement), [`health`] (membership state
+//! machine + prober), [`proxy`] (routing/failover/introspection),
+//! [`scatter`] (pure split/merge).
+
+pub mod health;
+pub mod proxy;
+pub mod ring;
+pub mod scatter;
+
+pub use health::{BackendHealth, BackendState, ProbeOutcome};
+pub use proxy::Gateway;
+pub use ring::Ring;
+
+use crate::config::GatewayConfig;
+use crate::http::{Server, ServerHandle};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running gateway: HTTP server + health poller.
+pub struct GatewayHandle {
+    pub server: ServerHandle,
+    pub gateway: Arc<Gateway>,
+    prober_stop: Arc<AtomicBool>,
+}
+
+impl GatewayHandle {
+    /// Stop accepting connections and wind the prober down.
+    pub fn stop(&self) {
+        self.prober_stop.store(true, Ordering::SeqCst);
+        self.server.stop();
+    }
+}
+
+/// Bind the gateway and start probing its backends.
+pub fn spawn(cfg: GatewayConfig) -> Result<GatewayHandle> {
+    if cfg.backends.is_empty() {
+        bail!("gateway needs at least one backend (--backends host:port[,host:port...])");
+    }
+    let addr = cfg.addr.clone();
+    let http_workers = cfg.http_workers;
+    let probe_interval = cfg.probe_interval;
+    let probe_timeout = cfg.probe_timeout;
+    let fail_after = cfg.fail_after;
+    let rise_after = cfg.rise_after;
+    let gateway = Arc::new(Gateway::new(cfg)?);
+
+    let probe_set: Vec<_> = gateway
+        .backends
+        .iter()
+        .map(|b| (b.id.clone(), b.addr, Arc::clone(&b.health)))
+        .collect();
+    let prober_stop = health::spawn_prober(
+        probe_set,
+        probe_interval,
+        probe_timeout,
+        fail_after,
+        rise_after,
+        Arc::clone(&gateway.metrics),
+        || {},
+    );
+
+    let g = Arc::clone(&gateway);
+    let server = Server::spawn(&addr, http_workers, Arc::new(move |req| g.handle(req)))?;
+    eprintln!(
+        "flexserve gateway on http://{} fronting {} backend(s)",
+        server.addr,
+        gateway.backends.len()
+    );
+    Ok(GatewayHandle {
+        server,
+        gateway,
+        prober_stop,
+    })
+}

@@ -1,0 +1,684 @@
+//! The gateway proxy: routing, failover, in-flight caps, scatter-gather
+//! orchestration, and the gateway's own introspection routes.
+//!
+//! Request lifecycle:
+//! 1. Gateway-local routes (`/livez`, `/healthz`, `/metrics`,
+//!    `/v1/gateway`) answer from gateway state without touching a backend.
+//! 2. Model-keyed routes (`/v1/models/:name/...`, `/v2/models/:name/...`)
+//!    hash `model@version` to a shard and forward with replica failover.
+//! 3. Ensemble data-plane routes (`POST /v1/predict`, `/predict`,
+//!    `POST /v2/models/_ensemble/infer`) resolve their member list and
+//!    either forward verbatim (all members on one shard — byte-identical
+//!    to a direct backend hit) or scatter per-shard subsets concurrently
+//!    and merge (see [`super::scatter`]).
+//! 4. Everything else forwards deterministically by hashing the path, so
+//!    repeated control-plane reads land on the same replica.
+
+use super::health::{sanitize, BackendHealth, BackendState};
+use super::ring::{route_key, Ring};
+use super::scatter;
+use crate::config::GatewayConfig;
+use crate::coordinator::{ApiError, Metrics};
+use crate::http::{client::parse_retry_after, Client, Request, Response};
+use crate::json::{self, Value};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One configured backend replica.
+pub struct BackendSlot {
+    pub id: String,
+    pub addr: SocketAddr,
+    pub health: Arc<BackendHealth>,
+    /// Metric-safe id, precomputed (hot path formats series names).
+    sid: String,
+    /// Concurrent proxied requests currently against this backend.
+    inflight: AtomicUsize,
+    /// Keep-alive connection pool (checked out per request).
+    pool: Mutex<Vec<Client>>,
+}
+
+/// Decrements the in-flight count when a proxied request finishes,
+/// however it finishes.
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+pub struct Gateway {
+    pub cfg: GatewayConfig,
+    pub backends: Vec<BackendSlot>,
+    pub ring: Ring,
+    pub metrics: Arc<Metrics>,
+    started: Instant,
+    req_seq: AtomicU64,
+}
+
+impl Gateway {
+    pub fn new(cfg: GatewayConfig) -> anyhow::Result<Gateway> {
+        let mut backends = Vec::with_capacity(cfg.backends.len());
+        for (id, addr) in &cfg.backends {
+            let addr: SocketAddr = addr
+                .parse()
+                .map_err(|e| anyhow::anyhow!("backend '{id}' addr '{addr}': {e}"))?;
+            backends.push(BackendSlot {
+                id: id.clone(),
+                addr,
+                health: Arc::new(BackendHealth::new()),
+                sid: sanitize(id),
+                inflight: AtomicUsize::new(0),
+                pool: Mutex::new(Vec::new()),
+            });
+        }
+        let ids: Vec<String> = backends.iter().map(|b| b.id.clone()).collect();
+        let ring = Ring::new(&ids, cfg.vnodes);
+        Ok(Gateway {
+            cfg,
+            backends,
+            ring,
+            metrics: Arc::new(Metrics::new()),
+            started: Instant::now(),
+            req_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// The fleet's active-ensemble member list, as reported by the
+    /// healthiest backend's readiness doc (manifest-ordered there).
+    pub fn fleet_models(&self) -> Vec<String> {
+        for want in [BackendState::Up, BackendState::Degraded] {
+            for b in &self.backends {
+                if b.health.state() == want {
+                    let models = b.health.active_models();
+                    if !models.is_empty() {
+                        return models;
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Backend candidates for `key` in failover order: the ring
+    /// preference walk, Up replicas first, Degraded after, Down ejected.
+    fn candidates(&self, key: &str) -> Vec<usize> {
+        let pref = self.ring.preference(key);
+        let mut up: Vec<usize> = Vec::with_capacity(pref.len());
+        let mut degraded: Vec<usize> = Vec::new();
+        for idx in pref {
+            match self.backends[idx].health.state() {
+                BackendState::Up => up.push(idx),
+                BackendState::Degraded => degraded.push(idx),
+                BackendState::Down => {}
+            }
+        }
+        up.extend(degraded);
+        up
+    }
+
+    /// Owner of `key` for scatter grouping: first routable candidate.
+    fn healthy_owner(&self, key: &str) -> Option<usize> {
+        self.candidates(key).into_iter().next()
+    }
+
+    // ---- request entry ---------------------------------------------------
+
+    pub fn handle(&self, req: &Request) -> Response {
+        self.metrics.inc("gw_requests_total");
+        let rid = self.request_id(req);
+        let sw = Instant::now();
+        let mut resp = self.route(req, &rid);
+        if resp.header("x-request-id").is_none() {
+            resp.headers.push(("x-request-id".into(), rid.clone()));
+        }
+        self.metrics
+            .observe_micros("gw_us", sw.elapsed().as_micros() as u64);
+        if self.cfg.access_log {
+            eprintln!(
+                "gateway {} {} -> {} ({}us) rid={rid}",
+                req.method,
+                req.path,
+                resp.status,
+                sw.elapsed().as_micros()
+            );
+        }
+        resp
+    }
+
+    /// The id a request travels under across tiers: the caller's
+    /// `x-request-id` if present, else a gateway-minted `gw-<seq>`.
+    fn request_id(&self, req: &Request) -> String {
+        match req.header("x-request-id") {
+            Some(rid) => rid.to_string(),
+            None => format!("gw-{:06x}", self.req_seq.fetch_add(1, Ordering::Relaxed)),
+        }
+    }
+
+    fn route(&self, req: &Request, rid: &str) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/livez") | ("GET", "/v1/livez") => Response::json(
+                200,
+                &json::obj([
+                    ("status", Value::from("alive")),
+                    ("tier", Value::from("gateway")),
+                    ("uptime_s", Value::from(self.started.elapsed().as_secs())),
+                ]),
+            ),
+            ("GET", "/healthz") | ("GET", "/v1/healthz") => self.health_response(),
+            ("GET", "/metrics") | ("GET", "/v1/metrics") => self.metrics_response(req),
+            ("GET", "/gateway") | ("GET", "/v1/gateway") => self.gateway_state_response(),
+            ("POST", "/predict") | ("POST", "/v1/predict") => {
+                self.metrics.inc("gw_predict_total");
+                self.handle_v1_predict(req, rid)
+            }
+            _ => {
+                if req.method == "POST" && req.path == "/v2/models/_ensemble/infer" {
+                    self.metrics.inc("gw_predict_total");
+                    return self.handle_v2_infer(req, rid);
+                }
+                // Model-keyed routes stick to the model's shard; anything
+                // else forwards deterministically by path.
+                let key = match path_model(&req.path) {
+                    Some(model) => route_key(model, req.query_param("version")),
+                    None => format!("path:{}", req.path),
+                };
+                self.metrics.inc("gw_proxy_total");
+                self.forward_failover(req, &key, rid)
+            }
+        }
+    }
+
+    // ---- gateway-local routes --------------------------------------------
+
+    fn health_response(&self) -> Response {
+        let mut states: Vec<(String, Value)> = Vec::with_capacity(self.backends.len());
+        let mut up = 0usize;
+        let mut routable = 0usize;
+        for b in &self.backends {
+            let st = b.health.state();
+            if st == BackendState::Up {
+                up += 1;
+            }
+            if st != BackendState::Down {
+                routable += 1;
+            }
+            states.push((b.id.clone(), Value::from(st.as_str())));
+        }
+        let ready = routable > 0;
+        let status = if up == self.backends.len() {
+            "ok"
+        } else if ready {
+            "degraded"
+        } else {
+            "down"
+        };
+        let mut doc = vec![
+            ("status".to_string(), Value::from(status)),
+            ("ready".to_string(), Value::from(ready)),
+            ("tier".to_string(), Value::from("gateway")),
+            ("backends_up".to_string(), Value::from(up)),
+            (
+                "backends".to_string(),
+                Value::from(self.backends.len()),
+            ),
+            ("backend_states".to_string(), Value::Obj(states)),
+            (
+                "uptime_s".to_string(),
+                Value::from(self.started.elapsed().as_secs()),
+            ),
+        ];
+        if ready {
+            Response::json(200, &Value::Obj(doc))
+        } else {
+            doc.push((
+                "error".to_string(),
+                json::obj([
+                    ("code", Value::from("gateway.no_backend")),
+                    ("message", Value::from("no routable backend")),
+                ]),
+            ));
+            Response::json(503, &Value::Obj(doc))
+        }
+    }
+
+    fn metrics_response(&self, req: &Request) -> Response {
+        let prometheus = || {
+            let mut resp = Response::new(200);
+            resp.headers.push((
+                "content-type".into(),
+                "text/plain; version=0.0.4; charset=utf-8".into(),
+            ));
+            resp.body = self.metrics.render_prometheus().into_bytes();
+            resp
+        };
+        match req.query_param("format") {
+            Some("json") => Response::json(200, &self.metrics.render_json()),
+            Some("prometheus") => prometheus(),
+            Some(_) => Response::text(200, &self.metrics.render_text()),
+            None => {
+                if req
+                    .header("accept")
+                    .is_some_and(|a| a.contains("text/plain"))
+                {
+                    prometheus()
+                } else {
+                    Response::text(200, &self.metrics.render_text())
+                }
+            }
+        }
+    }
+
+    /// `GET /v1/gateway`: ring + membership state for operators and the
+    /// bench harness.
+    fn gateway_state_response(&self) -> Response {
+        let backends: Vec<Value> = self
+            .backends
+            .iter()
+            .map(|b| {
+                let mut doc = vec![
+                    ("id".to_string(), Value::from(b.id.as_str())),
+                    ("addr".to_string(), Value::from(b.addr.to_string())),
+                    (
+                        "state".to_string(),
+                        Value::from(b.health.state().as_str()),
+                    ),
+                    (
+                        "inflight".to_string(),
+                        Value::from(b.inflight.load(Ordering::SeqCst)),
+                    ),
+                    (
+                        "queue_depth".to_string(),
+                        Value::from(b.health.queue_depth.load(Ordering::Relaxed)),
+                    ),
+                    (
+                        "probes".to_string(),
+                        Value::from(b.health.probes_total.load(Ordering::Relaxed)),
+                    ),
+                    (
+                        "probe_failures".to_string(),
+                        Value::from(b.health.probe_failures.load(Ordering::Relaxed)),
+                    ),
+                    (
+                        "active".to_string(),
+                        Value::Arr(
+                            b.health
+                                .active_models()
+                                .into_iter()
+                                .map(Value::Str)
+                                .collect(),
+                        ),
+                    ),
+                ];
+                if let Some(e) = b.health.last_error() {
+                    doc.push(("last_error".to_string(), Value::from(e)));
+                }
+                Value::Obj(doc)
+            })
+            .collect();
+        let assignments: Vec<(String, Value)> = self
+            .fleet_models()
+            .into_iter()
+            .map(|m| {
+                let owner = self
+                    .healthy_owner(&route_key(&m, None))
+                    .map(|idx| Value::from(self.backends[idx].id.as_str()))
+                    .unwrap_or(Value::Null);
+                (m, owner)
+            })
+            .collect();
+        Response::json(
+            200,
+            &json::obj([
+                ("tier", Value::from("gateway")),
+                (
+                    "ring",
+                    json::obj([
+                        ("backends", Value::from(self.ring.backends())),
+                        ("vnodes", Value::from(self.cfg.vnodes)),
+                    ]),
+                ),
+                ("backends", Value::Arr(backends)),
+                ("assignments", Value::Obj(assignments)),
+                ("uptime_s", Value::from(self.started.elapsed().as_secs())),
+            ]),
+        )
+    }
+
+    // ---- forwarding ------------------------------------------------------
+
+    /// Forward `req` to the candidates for `key` with bounded failover:
+    /// transport errors and 429/503 answers move to the next replica; at
+    /// most `retry_budget` extra attempts overall; a replica at its
+    /// in-flight cap is skipped without consuming budget. When every
+    /// candidate has answered backpressure, the last such answer is
+    /// returned (its `Retry-After` intact) — the gateway degrades to the
+    /// backend's own story rather than inventing one.
+    fn forward_failover(&self, req: &Request, key: &str, rid: &str) -> Response {
+        let candidates = self.candidates(key);
+        if candidates.is_empty() {
+            self.metrics.inc("gw_no_backend_total");
+            return ApiError::no_backend(format!("no routable backend for '{key}'"))
+                .to_response();
+        }
+        let max_attempts = self.cfg.retry_budget as usize + 1;
+        let mut attempts = 0usize;
+        let mut last_backpressure: Option<Response> = None;
+        'rounds: for round in 0..max_attempts {
+            if round > 0 {
+                // Wrapping around to already-tried replicas: honor the
+                // backpressure hint before hammering them again.
+                let wait = last_backpressure
+                    .as_ref()
+                    .and_then(parse_retry_after)
+                    .unwrap_or(Duration::from_millis(50))
+                    .min(Duration::from_secs(1));
+                std::thread::sleep(wait);
+            }
+            for &idx in &candidates {
+                if attempts >= max_attempts {
+                    break 'rounds;
+                }
+                let b = &self.backends[idx];
+                if self.cfg.inflight_cap > 0
+                    && b.inflight.load(Ordering::SeqCst) >= self.cfg.inflight_cap
+                {
+                    // Skipping a saturated replica costs no budget; it is
+                    // routing, not retrying.
+                    self.metrics.inc(&format!("gw_backend_{}_shed_total", b.sid));
+                    continue;
+                }
+                attempts += 1;
+                if attempts > 1 {
+                    self.metrics.inc("gw_retries_total");
+                }
+                match self.send_to(idx, req, rid) {
+                    Err(_) => continue, // transport error: next replica
+                    Ok(resp) if matches!(resp.status, 429 | 503) => {
+                        last_backpressure = Some(resp);
+                        continue;
+                    }
+                    Ok(resp) => return resp,
+                }
+            }
+            if last_backpressure.is_none() && attempts == 0 {
+                // Every candidate was at its cap: answer overloaded rather
+                // than spinning.
+                break;
+            }
+        }
+        match last_backpressure {
+            Some(resp) => resp,
+            None => {
+                self.metrics.inc("gw_no_backend_total");
+                ApiError::no_backend(format!(
+                    "all replicas for '{key}' failed or are saturated"
+                ))
+                .to_response()
+            }
+        }
+    }
+
+    /// One attempt against one backend over a pooled keep-alive
+    /// connection. Success returns the response tagged with the serving
+    /// backend; the connection returns to the pool only after a clean
+    /// exchange.
+    fn send_to(&self, idx: usize, req: &Request, rid: &str) -> anyhow::Result<Response> {
+        let b = &self.backends[idx];
+        b.inflight.fetch_add(1, Ordering::SeqCst);
+        let _guard = InflightGuard(&b.inflight);
+        self.metrics
+            .inc(&format!("gw_backend_{}_requests_total", b.sid));
+        self.metrics.set_gauge(
+            &format!("gw_backend_{}_inflight", b.sid),
+            b.inflight.load(Ordering::SeqCst) as u64,
+        );
+
+        let mut client = match self.checkout(idx) {
+            Ok(c) => c,
+            Err(e) => {
+                self.metrics
+                    .inc(&format!("gw_backend_{}_errors_total", b.sid));
+                return Err(e);
+            }
+        };
+        let fwd = forwarded_request(req, rid);
+        let sw = Instant::now();
+        let result = client.request(&fwd);
+        self.metrics.observe_micros(
+            &format!("gw_backend_{}_us", b.sid),
+            sw.elapsed().as_micros() as u64,
+        );
+        match result {
+            Ok(mut resp) => {
+                // Clean exchange: the connection is reusable.
+                self.checkin(idx, client);
+                if resp.status >= 500 {
+                    self.metrics
+                        .inc(&format!("gw_backend_{}_errors_total", b.sid));
+                }
+                resp.headers
+                    .push(("x-flexserve-backend".into(), b.id.clone()));
+                Ok(resp)
+            }
+            Err(e) => {
+                // Broken socket: drop the client (its stream is toast).
+                self.metrics
+                    .inc(&format!("gw_backend_{}_errors_total", b.sid));
+                Err(e)
+            }
+        }
+    }
+
+    fn checkout(&self, idx: usize) -> anyhow::Result<Client> {
+        let b = &self.backends[idx];
+        if let Some(c) = b.pool.lock().unwrap_or_else(|p| p.into_inner()).pop() {
+            return Ok(c);
+        }
+        Client::connect_with_timeout(b.addr, Duration::from_secs(30))
+    }
+
+    fn checkin(&self, idx: usize, client: Client) {
+        let b = &self.backends[idx];
+        let mut pool = b.pool.lock().unwrap_or_else(|p| p.into_inner());
+        // Bound the pool to the inflight cap (or a small default) so a
+        // burst doesn't pin file descriptors forever.
+        let cap = if self.cfg.inflight_cap > 0 { self.cfg.inflight_cap } else { 16 };
+        if pool.len() < cap {
+            pool.push(client);
+        }
+    }
+
+    // ---- scatter-gather --------------------------------------------------
+
+    fn handle_v1_predict(&self, req: &Request, rid: &str) -> Response {
+        let params = match scatter::v1_params(req) {
+            Ok(p) => p,
+            // Unparsable body: a backend renders the canonical 400.
+            Err(()) => return self.forward_failover(req, "_ensemble", rid),
+        };
+        let members = params
+            .members
+            .clone()
+            .unwrap_or_else(|| self.fleet_models());
+        if members.is_empty() {
+            // No member list and no fleet knowledge yet: a single backend
+            // serves its own active ensemble (or the canonical error).
+            return self.forward_failover(req, "_ensemble", rid);
+        }
+        let groups = scatter::group_by_owner(&members, |m| self.healthy_owner(&route_key(m, None)));
+        if groups.iter().any(|(idx, _)| *idx == usize::MAX) {
+            self.metrics.inc("gw_no_backend_total");
+            return ApiError::no_backend("no routable backend for ensemble members")
+                .to_response();
+        }
+        if groups.len() == 1 {
+            // Single shard: forward verbatim — byte-identical to a direct
+            // backend hit by construction.
+            let key = route_key(&members[0], None);
+            return self.forward_failover(req, &key, rid);
+        }
+        self.metrics.inc("gw_scatter_total");
+        let subsets = match self.fetch_subsets(&groups, rid, |group| {
+            scatter::v1_subset_request(req, group)
+        }) {
+            Ok(s) => s,
+            Err(resp) => return resp,
+        };
+        match scatter::merge_v1(&members, &subsets, &params) {
+            Ok(body) => Response::json(200, &body),
+            Err(e) => e.to_response(),
+        }
+    }
+
+    fn handle_v2_infer(&self, req: &Request, rid: &str) -> Response {
+        let body = match req.json_body() {
+            Ok(b) => b,
+            Err(_) => return self.forward_failover(req, "_ensemble", rid),
+        };
+        let params = scatter::v2_params(&body);
+        let members = params
+            .members
+            .clone()
+            .unwrap_or_else(|| self.fleet_models());
+        if members.is_empty() {
+            return self.forward_failover(req, "_ensemble", rid);
+        }
+        let groups = scatter::group_by_owner(&members, |m| self.healthy_owner(&route_key(m, None)));
+        if groups.iter().any(|(idx, _)| *idx == usize::MAX) {
+            self.metrics.inc("gw_no_backend_total");
+            return ApiError::no_backend("no routable backend for ensemble members")
+                .to_response();
+        }
+        if groups.len() == 1 {
+            let key = route_key(&members[0], None);
+            return self.forward_failover(req, &key, rid);
+        }
+        self.metrics.inc("gw_scatter_total");
+        let subsets = match self.fetch_subsets(&groups, rid, |group| {
+            scatter::v2_subset_request(req, &body, group)
+        }) {
+            Ok(s) => s,
+            Err(resp) => return resp,
+        };
+        match scatter::merge_v2(&members, &subsets, &params) {
+            Ok(merged) => Response::json(200, &merged),
+            Err(e) => e.to_response(),
+        }
+    }
+
+    /// Fan the per-group subset requests out concurrently (scoped threads
+    /// over the keep-alive pools), each with its own failover walk.
+    /// `Err(response)` relays the first non-200 subset answer untouched —
+    /// the backend's typed error is the canonical one.
+    fn fetch_subsets(
+        &self,
+        groups: &[(usize, Vec<String>)],
+        rid: &str,
+        build: impl Fn(&[String]) -> Request + Sync,
+    ) -> Result<Vec<(Vec<String>, Value)>, Response> {
+        let responses: Vec<(usize, Response)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .iter()
+                .enumerate()
+                .map(|(gi, (_, group))| {
+                    let build = &build;
+                    scope.spawn(move || {
+                        let sub = build(group);
+                        let key = route_key(&group[0], None);
+                        (gi, self.forward_failover(&sub, &key, rid))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut ordered: Vec<(usize, Response)> = responses;
+        ordered.sort_by_key(|(gi, _)| *gi);
+        let mut subsets = Vec::with_capacity(groups.len());
+        for ((_, group), (_, resp)) in groups.iter().zip(ordered) {
+            if resp.status != 200 {
+                return Err(resp);
+            }
+            match resp.json_body() {
+                Ok(v) => subsets.push((group.clone(), v)),
+                Err(e) => {
+                    return Err(ApiError::internal(format!(
+                        "subset response was not JSON: {e}"
+                    ))
+                    .to_response())
+                }
+            }
+        }
+        Ok(subsets)
+    }
+}
+
+/// Extract the `:name` segment of a model-keyed path (`/v1/models/:name`,
+/// `/models/:name/...`, `/v2/models/:name/...`).
+fn path_model(path: &str) -> Option<&str> {
+    for prefix in ["/v1/models/", "/v2/models/", "/models/"] {
+        if let Some(rest) = path.strip_prefix(prefix) {
+            let name = rest.split('/').next().unwrap_or("");
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// The request actually sent upstream: hop-by-hop and client-framing
+/// headers stripped (`Client` writes its own `host`/`content-length`),
+/// the cross-tier request id attached.
+fn forwarded_request(req: &Request, rid: &str) -> Request {
+    let mut fwd = req.clone();
+    fwd.headers.retain(|(k, _)| {
+        !matches!(
+            k.as_str(),
+            "host" | "content-length" | "connection" | "x-request-id"
+        )
+    });
+    fwd.headers.push(("x-request-id".into(), rid.to_string()));
+    fwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_model_extraction() {
+        assert_eq!(path_model("/v1/models/cnn_s/load"), Some("cnn_s"));
+        assert_eq!(path_model("/v1/models/mlp"), Some("mlp"));
+        assert_eq!(path_model("/v2/models/_ensemble/infer"), Some("_ensemble"));
+        assert_eq!(path_model("/models/cnn_m/predict"), Some("cnn_m"));
+        assert_eq!(path_model("/v1/models"), None);
+        assert_eq!(path_model("/v1/predict"), None);
+        assert_eq!(path_model("/v1/models/"), None);
+    }
+
+    #[test]
+    fn forwarded_request_strips_hop_headers() {
+        let mut req = Request::new("POST", "/v1/predict", b"{}".to_vec());
+        req.headers.push(("host".into(), "a:1".into()));
+        req.headers.push(("content-length".into(), "2".into()));
+        req.headers.push(("connection".into(), "close".into()));
+        req.headers.push(("x-request-id".into(), "old".into()));
+        req.headers.push(("content-type".into(), "application/json".into()));
+        let fwd = forwarded_request(&req, "gw-1");
+        assert_eq!(fwd.header("host"), None);
+        assert_eq!(fwd.header("content-length"), None);
+        assert_eq!(fwd.header("connection"), None);
+        assert_eq!(fwd.header("x-request-id"), Some("gw-1"));
+        assert_eq!(fwd.header("content-type"), Some("application/json"));
+    }
+
+    #[test]
+    fn gateway_requires_parsable_backend_addrs() {
+        let mut cfg = GatewayConfig::default();
+        cfg.backends = vec![("bad".to_string(), "not-an-addr".to_string())];
+        assert!(Gateway::new(cfg).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Consistent-hash ring with virtual nodes.
+//!
+//! Pure and device-free: placement is a function of the backend id set and
+//! the key string alone, so the ring is property-testable without sockets.
+//! Each backend contributes `vnodes` points on a 64-bit ring (FNV-1a of
+//! `"{id}#{i}"`); a key is owned by the first vnode clockwise from its own
+//! hash. Virtual nodes smooth the load split; consistent hashing bounds
+//! key movement on membership change to the keys owned by the backend that
+//! joined or left.
+
+/// FNV-1a 64-bit. Stable across platforms and releases — placement must be
+/// deterministic so tests and operators can predict shard assignment.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A consistent-hash ring over backend indices `0..n`.
+///
+/// The ring stores indices, not ids: callers keep a parallel `Vec` of
+/// backend descriptors and use the returned index to reach it. Membership
+/// is static for the life of the ring (health gates routing separately, via
+/// the preference walk) — this is what makes the bounded-movement property
+/// hold: ejection does not reshuffle placement, it only skips forward.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// Sorted (point, backend index) pairs.
+    points: Vec<(u64, usize)>,
+    backends: usize,
+}
+
+impl Ring {
+    /// Build a ring from backend ids. `vnodes` points per backend
+    /// (typically 64–128; more vnodes → smoother split, slower build).
+    pub fn new(ids: &[String], vnodes: usize) -> Ring {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(ids.len() * vnodes);
+        for (idx, id) in ids.iter().enumerate() {
+            for i in 0..vnodes {
+                let label = format!("{id}#{i}");
+                points.push((fnv1a64(label.as_bytes()), idx));
+            }
+        }
+        // Sort by point; break hash collisions by backend index so the
+        // ring order is fully deterministic regardless of input order.
+        points.sort_unstable();
+        Ring {
+            points,
+            backends: ids.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn backends(&self) -> usize {
+        self.backends
+    }
+
+    /// Index of the backend owning `key`, or `None` on an empty ring.
+    pub fn owner(&self, key: &str) -> Option<usize> {
+        self.walk_from(key).next()
+    }
+
+    /// All backends in preference order for `key`: the owner first, then
+    /// each distinct backend met walking clockwise. Failover tries these
+    /// in order; the ordering is deterministic per key.
+    pub fn preference(&self, key: &str) -> Vec<usize> {
+        let mut seen = vec![false; self.backends];
+        let mut out = Vec::new();
+        for idx in self.walk_from(key) {
+            if !seen[idx] {
+                seen[idx] = true;
+                out.push(idx);
+                if out.len() == self.backends {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Clockwise walk over ring points starting at the key's hash,
+    /// yielding backend indices (with repeats; wraps exactly once per
+    /// vnode). Internal building block for `owner`/`preference`.
+    fn walk_from<'a>(&'a self, key: &str) -> impl Iterator<Item = usize> + 'a {
+        let h = fnv1a64(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let n = self.points.len();
+        (0..n).map(move |i| self.points[(start + i) % n].1)
+    }
+}
+
+/// Routing key for a model reference: `model` alone, or `model@version`
+/// when the caller pinned a version. Version pins route like a distinct
+/// key so a pinned canary can land on a different shard than the stable
+/// line without moving the unpinned traffic.
+pub fn route_key(model: &str, version: Option<&str>) -> String {
+    match version {
+        Some(v) if !v.is_empty() => format!("{model}@{v}"),
+        _ => model.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn ids(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("backend-{i}")).collect()
+    }
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let r = Ring::new(&[], 64);
+        assert!(r.is_empty());
+        assert_eq!(r.owner("cnn_s"), None);
+        assert!(r.preference("cnn_s").is_empty());
+    }
+
+    #[test]
+    fn single_backend_owns_everything() {
+        let r = Ring::new(&ids(1), 64);
+        for key in ["cnn_s", "cnn_m", "mlp", "x@3"] {
+            assert_eq!(r.owner(key), Some(0));
+            assert_eq!(r.preference(key), vec![0]);
+        }
+    }
+
+    #[test]
+    fn route_key_formats() {
+        assert_eq!(route_key("cnn_s", None), "cnn_s");
+        assert_eq!(route_key("cnn_s", Some("")), "cnn_s");
+        assert_eq!(route_key("cnn_s", Some("3")), "cnn_s@3");
+    }
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_97c3_2cef_fc9e);
+    }
+
+    #[test]
+    fn prop_deterministic_placement() {
+        check("ring_deterministic", 200, |g: &mut Gen| {
+            let n = g.int(1, 8);
+            let key = g.string(12);
+            let a = Ring::new(&ids(n), 64);
+            let b = Ring::new(&ids(n), 64);
+            assert_eq!(a.owner(&key), b.owner(&key), "same inputs, same owner");
+            assert_eq!(a.preference(&key), b.preference(&key));
+        });
+    }
+
+    #[test]
+    fn prop_preference_is_permutation() {
+        check("ring_preference_permutation", 200, |g: &mut Gen| {
+            let n = g.int(1, 8);
+            let key = g.string(12);
+            let r = Ring::new(&ids(n), 64);
+            let mut pref = r.preference(&key);
+            assert_eq!(pref.len(), n, "preference covers every backend");
+            pref.sort_unstable();
+            pref.dedup();
+            assert_eq!(pref.len(), n, "preference has no duplicates");
+        });
+    }
+
+    #[test]
+    fn prop_bounded_movement_on_removal() {
+        // Removing one backend moves only the keys it owned; every other
+        // key keeps its owner. This is the consistent-hashing contract.
+        check("ring_bounded_movement", 100, |g: &mut Gen| {
+            let n = g.int(2, 8);
+            let all = ids(n);
+            let victim = g.int(0, n - 1);
+            let survivors: Vec<String> = all
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != victim)
+                .map(|(_, s)| s.clone())
+                .collect();
+            let before = Ring::new(&all, 64);
+            let after = Ring::new(&survivors, 64);
+            for k in 0..32 {
+                let key = format!("key-{}-{}", k, g.int(0, 1_000_000));
+                let old = before.owner(&key).unwrap();
+                let new = after.owner(&key).unwrap();
+                if old != victim {
+                    // Map survivor index back to the original id space.
+                    assert_eq!(
+                        survivors[new], all[old],
+                        "key {key} moved although its owner survived"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_vnodes_spread_load() {
+        // With 64 vnodes per backend no backend should own everything
+        // (statistical, but deterministic given fixed ids/keys).
+        let n = 4;
+        let r = Ring::new(&ids(n), 64);
+        let mut counts = vec![0usize; n];
+        for k in 0..1000 {
+            counts[r.owner(&format!("key-{k}")).unwrap()] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 0, "backend {i} owns zero of 1000 keys");
+            assert!(*c < 1000, "backend {i} owns all keys");
+        }
+    }
+}

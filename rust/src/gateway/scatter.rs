@@ -1,0 +1,637 @@
+//! Scatter-gather: split an ensemble request across shards, merge the
+//! subset responses back into the single-process wire format.
+//!
+//! Everything here is pure (request/Value in, request/Value out) so the
+//! split and merge logic is unit-testable without sockets. The proxy owns
+//! the concurrency (one failover-capable fetch per group) and hands the
+//! parsed subset bodies back in.
+//!
+//! Merge fidelity rules:
+//! * member arrays (`model_<m>` / `<m>.classes`) pass through verbatim in
+//!   the caller's full member order;
+//! * subset-level `ensemble`/`detections` fusion blocks are **dropped**
+//!   and recomputed over the full member set through
+//!   [`crate::coordinator::infer::fuse_named_votes`] — fusion over a
+//!   subset is simply wrong, and recomputation keeps gateway fusion on
+//!   the same code path as a backend's;
+//! * per-shard timing diagnostics (`stages`, `batching`) are dropped from
+//!   merged `detail` (summing queue waits across shards would fabricate a
+//!   timeline no process observed).
+
+use crate::coordinator::infer::fuse_named_votes;
+use crate::coordinator::{ApiError, Policy};
+use crate::http::Request;
+use crate::json::{self, Value};
+
+/// Group members by ring owner, preserving member order inside each group
+/// and ordering groups by first appearance. `owner` is the ring lookup
+/// (already health-gated by the caller if desired).
+pub fn group_by_owner(
+    members: &[String],
+    owner: impl Fn(&str) -> Option<usize>,
+) -> Vec<(usize, Vec<String>)> {
+    let mut groups: Vec<(usize, Vec<String>)> = Vec::new();
+    for m in members {
+        // Unroutable members (empty ring) collapse into group usize::MAX;
+        // the caller turns that into gateway.no_backend.
+        let idx = owner(m).unwrap_or(usize::MAX);
+        match groups.iter_mut().find(|(g, _)| *g == idx) {
+            Some((_, v)) => v.push(m.clone()),
+            None => groups.push((idx, vec![m.clone()])),
+        }
+    }
+    groups
+}
+
+/// Uniform /v1 flag precedence (non-empty query wins over body) for the
+/// three knobs the merge needs. Mirrors `PredictRequest::parse_general`
+/// exactly — the gateway must agree with the backend about which policy
+/// it is recomputing.
+pub struct V1Params {
+    pub members: Option<Vec<String>>,
+    pub policy: Option<String>,
+    pub target: Option<String>,
+    pub detail: bool,
+}
+
+fn query_override<'r>(req: &'r Request, name: &str) -> Option<&'r str> {
+    req.query_param(name).filter(|v| !v.is_empty())
+}
+
+/// Extract the scatter-relevant /v1 params. `Err` means the body is not
+/// JSON — the caller should forward verbatim and let a backend render the
+/// canonical 400.
+pub fn v1_params(req: &Request) -> Result<V1Params, ()> {
+    let body = if req.body.is_empty() {
+        Value::Null
+    } else {
+        req.json_body().map_err(|_| ())?
+    };
+    let members = match query_override(req, "models") {
+        Some(csv) => Some(
+            csv.split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect::<Vec<_>>(),
+        ),
+        None => body.get("models").and_then(|v| v.as_arr()).map(|arr| {
+            arr.iter()
+                .filter_map(|m| m.as_str().map(str::to_string))
+                .collect()
+        }),
+    };
+    let policy = query_override(req, "policy")
+        .or_else(|| body.get("policy").and_then(Value::as_str))
+        .map(str::to_string);
+    let target = query_override(req, "target")
+        .or_else(|| body.get("target").and_then(Value::as_str))
+        .map(str::to_string);
+    let detail = match query_override(req, "detail") {
+        Some(v) => v == "1" || v == "true",
+        None => body.get("detail").and_then(Value::as_bool).unwrap_or(false),
+    };
+    Ok(V1Params {
+        members: members.filter(|m: &Vec<String>| !m.is_empty()),
+        policy,
+        target,
+        detail,
+    })
+}
+
+/// Build the /v1 subset request for one group: same body, query rewritten
+/// so `models=<subset csv>` overrides any body/query member list (query
+/// wins under the uniform precedence rule, so the body can ride along
+/// unmodified — no body reserialization on the v1 path).
+pub fn v1_subset_request(req: &Request, subset: &[String]) -> Request {
+    let mut sub = req.clone();
+    sub.query.retain(|(k, _)| k != "models");
+    sub.query.push(("models".to_string(), subset.join(",")));
+    sub
+}
+
+/// Merge /v1 subset bodies back into the paper wire format. `subsets`
+/// pairs each group's member list with its parsed 200 body.
+pub fn merge_v1(
+    member_order: &[String],
+    subsets: &[(Vec<String>, Value)],
+    params: &V1Params,
+) -> Result<Value, ApiError> {
+    let mut members: Vec<(String, Value)> = Vec::with_capacity(member_order.len() + 2);
+    let mut named_rows: Vec<(String, Vec<String>)> = Vec::with_capacity(member_order.len());
+    for m in member_order {
+        let key = format!("model_{m}");
+        let val = subsets
+            .iter()
+            .find(|(group, _)| group.iter().any(|g| g == m))
+            .and_then(|(_, body)| body.get(&key))
+            .ok_or_else(|| {
+                ApiError::internal(format!("scatter merge: no subset returned '{key}'"))
+            })?;
+        if params.policy.is_some() && params.target.is_some() {
+            let rows = val
+                .as_arr()
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect::<Vec<_>>()
+                })
+                .ok_or_else(|| {
+                    ApiError::internal(format!("scatter merge: '{key}' is not a class array"))
+                })?;
+            named_rows.push((m.clone(), rows));
+        }
+        members.push((key, val.clone()));
+    }
+
+    if let (Some(policy_str), Some(target)) = (&params.policy, &params.target) {
+        let policy = Policy::parse(policy_str).map_err(ApiError::bad_policy)?;
+        let detections: Vec<Value> = fuse_named_votes(&named_rows, &policy, target)?
+            .into_iter()
+            .map(Value::Bool)
+            .collect();
+        members.push((
+            "ensemble".to_string(),
+            json::obj([
+                ("policy", Value::from(policy.to_string())),
+                ("target", Value::from(target.as_str())),
+                ("detections", Value::Arr(detections)),
+            ]),
+        ));
+    }
+
+    if params.detail {
+        // Merge the per-model diagnostics in member order; per-shard
+        // stage/batching timelines are dropped (see module docs).
+        let mut per_model: Vec<(String, Value)> = Vec::with_capacity(member_order.len());
+        for m in member_order {
+            let doc = subsets
+                .iter()
+                .find(|(group, _)| group.iter().any(|g| g == m))
+                .and_then(|(_, body)| body.path(&["detail", "models", m.as_str()]));
+            if let Some(doc) = doc {
+                per_model.push((m.clone(), doc.clone()));
+            }
+        }
+        let batch = subsets
+            .first()
+            .and_then(|(_, body)| body.path(&["detail", "batch"]))
+            .cloned()
+            .unwrap_or(Value::Null);
+        members.push((
+            "detail".to_string(),
+            json::obj([
+                ("batch", batch),
+                ("models", Value::Obj(per_model)),
+                (
+                    "gateway",
+                    json::obj([("shards", Value::from(subsets.len()))]),
+                ),
+            ]),
+        ));
+    }
+
+    Ok(Value::Obj(members))
+}
+
+/// The scatter-relevant /v2 request facts (parsed once by the proxy).
+pub struct V2Params {
+    pub members: Option<Vec<String>>,
+    pub policy: Option<String>,
+    pub target: Option<String>,
+    pub detail: bool,
+    pub id: Option<String>,
+    pub outputs: Option<Vec<String>>,
+}
+
+/// Extract scatter params from a parsed /v2 infer body (`_ensemble`
+/// route). OIP carries everything in `parameters`; `models` is a CSV
+/// string there.
+pub fn v2_params(body: &Value) -> V2Params {
+    let p = |k: &str| body.path(&["parameters", k]);
+    let members = p("models").and_then(Value::as_str).map(|csv| {
+        csv.split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect::<Vec<String>>()
+    });
+    V2Params {
+        members: members.filter(|m| !m.is_empty()),
+        policy: p("policy").and_then(Value::as_str).map(str::to_string),
+        target: p("target").and_then(Value::as_str).map(str::to_string),
+        detail: p("detail").and_then(Value::as_bool).unwrap_or(false),
+        id: body.get("id").and_then(Value::as_str).map(str::to_string),
+        outputs: body.get("outputs").and_then(|v| v.as_arr()).map(|arr| {
+            arr.iter()
+                .filter_map(|o| o.get("name").and_then(Value::as_str).map(str::to_string))
+                .collect()
+        }),
+    }
+}
+
+/// Build the /v2 subset request for one group: body reparsed with
+/// `parameters.models` set to the subset CSV and any explicit `outputs`
+/// selection stripped (subsets return their default catalog; the merge
+/// applies the caller's selection afterwards). Safe to reserialize: the
+/// JSON layer round-trips numbers via shortest-representation `Display`.
+pub fn v2_subset_request(req: &Request, body: &Value, subset: &[String]) -> Request {
+    let csv = Value::from(subset.join(","));
+    let mut top: Vec<(String, Value)> = body.as_obj().map(<[_]>::to_vec).unwrap_or_default();
+    top.retain(|(k, _)| k != "outputs");
+    let mut params: Vec<(String, Value)> = top
+        .iter()
+        .find(|(k, _)| k == "parameters")
+        .and_then(|(_, v)| v.as_obj())
+        .map(<[_]>::to_vec)
+        .unwrap_or_default();
+    match params.iter_mut().find(|(k, _)| k == "models") {
+        Some((_, v)) => *v = csv,
+        None => params.push(("models".to_string(), csv)),
+    }
+    match top.iter_mut().find(|(k, _)| k == "parameters") {
+        Some((_, v)) => *v = Value::Obj(params),
+        None => top.push(("parameters".to_string(), Value::Obj(params))),
+    }
+    let mut sub = req.clone();
+    sub.body = json::to_string(&Value::Obj(top)).into_bytes();
+    sub
+}
+
+/// Merge /v2 subset bodies into one Open-Inference-Protocol response for
+/// the `_ensemble` route.
+pub fn merge_v2(
+    member_order: &[String],
+    subsets: &[(Vec<String>, Value)],
+    params: &V2Params,
+) -> Result<Value, ApiError> {
+    let find_tensor = |name: &str| -> Option<&Value> {
+        subsets.iter().find_map(|(_, body)| {
+            body.get("outputs")?
+                .as_arr()?
+                .iter()
+                .find(|t| t.get("name").and_then(Value::as_str) == Some(name))
+        })
+    };
+
+    // Collect the merged default catalog in member order.
+    let mut outputs: Vec<Value> = Vec::with_capacity(member_order.len() * 2 + 1);
+    let mut named_rows: Vec<(String, Vec<String>)> = Vec::with_capacity(member_order.len());
+    for m in member_order {
+        let classes_name = format!("{m}.classes");
+        let classes = find_tensor(&classes_name).ok_or_else(|| {
+            ApiError::internal(format!("scatter merge: no subset returned '{classes_name}'"))
+        })?;
+        let rows: Vec<String> = classes
+            .get("data")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        named_rows.push((m.clone(), rows));
+        outputs.push(classes.clone());
+        if params.detail {
+            if let Some(probs) = find_tensor(&format!("{m}.probs")) {
+                outputs.push(probs.clone());
+            }
+        }
+    }
+
+    let fusion = params.policy.is_some() && params.target.is_some();
+    if fusion {
+        let policy_str = params.policy.as_deref().unwrap();
+        let target = params.target.as_deref().unwrap();
+        let policy = Policy::parse(policy_str).map_err(ApiError::bad_policy)?;
+        let batch = named_rows.first().map(|(_, r)| r.len()).unwrap_or(0);
+        let detections: Vec<Value> = fuse_named_votes(&named_rows, &policy, target)?
+            .into_iter()
+            .map(Value::Bool)
+            .collect();
+        outputs.push(json::obj([
+            ("name", Value::from("detections")),
+            ("datatype", Value::from("BOOL")),
+            ("shape", Value::Arr(vec![Value::from(batch)])),
+            ("data", Value::Arr(detections)),
+        ]));
+    }
+
+    // Apply any explicit outputs selection to the merged catalog (the
+    // subsets served their defaults — see `v2_subset_request`).
+    if let Some(wanted) = &params.outputs {
+        let mut selected = Vec::with_capacity(wanted.len());
+        for want in wanted {
+            let t = outputs
+                .iter()
+                .find(|t| t.get("name").and_then(Value::as_str) == Some(want.as_str()))
+                .ok_or_else(|| ApiError::bad_value(format!("unknown output '{want}'")))?;
+            selected.push(t.clone());
+        }
+        outputs = selected;
+    }
+
+    // served_versions merged in member order from the subsets' provenance.
+    let mut served: Vec<String> = Vec::with_capacity(member_order.len());
+    for m in member_order {
+        let entry = subsets
+            .iter()
+            .find(|(group, _)| group.iter().any(|g| g == m))
+            .and_then(|(_, body)| body.path(&["parameters", "served_versions"]))
+            .and_then(Value::as_str)
+            .and_then(|csv| csv.split(',').find(|e| e.split(':').next() == Some(m)))
+            .map(str::to_string);
+        if let Some(e) = entry {
+            served.push(e);
+        }
+    }
+
+    let mut members: Vec<(String, Value)> = vec![
+        ("model_name".to_string(), Value::from("_ensemble")),
+        ("model_version".to_string(), Value::from("1")),
+    ];
+    if let Some(id) = &params.id {
+        members.push(("id".to_string(), Value::from(id.as_str())));
+    }
+    if !served.is_empty() {
+        members.push((
+            "parameters".to_string(),
+            json::obj([("served_versions", Value::from(served.join(",")))]),
+        ));
+    }
+    members.push(("outputs".to_string(), Value::Arr(outputs)));
+    Ok(Value::Obj(members))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(method: &str, target: &str, body: &str) -> Request {
+        Request::new(method, target, body.as_bytes().to_vec())
+    }
+
+    #[test]
+    fn grouping_preserves_member_order() {
+        let members: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        // a,c → shard 1; b,d → shard 0: groups ordered by first appearance.
+        let groups = group_by_owner(&members, |m| Some(if m == "a" || m == "c" { 1 } else { 0 }));
+        assert_eq!(
+            groups,
+            vec![
+                (1, vec!["a".to_string(), "c".to_string()]),
+                (0, vec!["b".to_string(), "d".to_string()]),
+            ]
+        );
+    }
+
+    #[test]
+    fn grouping_unroutable_collapses() {
+        let members = vec!["a".to_string()];
+        let groups = group_by_owner(&members, |_| None);
+        assert_eq!(groups, vec![(usize::MAX, vec!["a".to_string()])]);
+    }
+
+    #[test]
+    fn v1_params_precedence_query_over_body() {
+        let r = req(
+            "POST",
+            "/v1/predict?models=q1,q2&detail=1",
+            r#"{"models": ["b1"], "policy": "majority", "target": "cross"}"#,
+        );
+        let p = v1_params(&r).unwrap();
+        assert_eq!(p.members, Some(vec!["q1".to_string(), "q2".to_string()]));
+        assert_eq!(p.policy.as_deref(), Some("majority"));
+        assert_eq!(p.target.as_deref(), Some("cross"));
+        assert!(p.detail);
+    }
+
+    #[test]
+    fn v1_params_unparsable_body_is_err() {
+        assert!(v1_params(&req("POST", "/v1/predict", "{not json")).is_err());
+    }
+
+    #[test]
+    fn v1_subset_rewrites_query_only() {
+        let r = req("POST", "/v1/predict?models=a,b,c&detail=1", r#"{"pgm": "x"}"#);
+        let sub = v1_subset_request(&r, &["b".to_string()]);
+        assert_eq!(sub.query_param("models"), Some("b"));
+        assert_eq!(sub.query_param("detail"), Some("1"));
+        assert_eq!(sub.body, r.body, "v1 body must pass through untouched");
+    }
+
+    fn v1_subset_body(models: &[(&str, &[&str])]) -> Value {
+        Value::Obj(
+            models
+                .iter()
+                .map(|(m, rows)| {
+                    (
+                        format!("model_{m}"),
+                        Value::Arr(rows.iter().map(|r| Value::from(*r)).collect()),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn merge_v1_orders_members_and_refuses_missing() {
+        let order: Vec<String> = ["m1", "m2", "m3"].iter().map(|s| s.to_string()).collect();
+        let subsets = vec![
+            (
+                vec!["m2".to_string()],
+                v1_subset_body(&[("m2", &["cross", "blank"])]),
+            ),
+            (
+                vec!["m1".to_string(), "m3".to_string()],
+                v1_subset_body(&[("m1", &["cross", "cross"]), ("m3", &["blank", "blank"])]),
+            ),
+        ];
+        let p = V1Params {
+            members: None,
+            policy: None,
+            target: None,
+            detail: false,
+        };
+        let merged = merge_v1(&order, &subsets, &p).unwrap();
+        let keys: Vec<&str> = merged
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .collect();
+        assert_eq!(keys, vec!["model_m1", "model_m2", "model_m3"]);
+
+        let missing = merge_v1(&["m9".to_string()], &subsets, &p);
+        assert!(missing.is_err(), "member no subset served must error");
+    }
+
+    #[test]
+    fn merge_v1_recomputes_fusion_over_all_members() {
+        let order: Vec<String> = ["m1", "m2", "m3"].iter().map(|s| s.to_string()).collect();
+        // Subset fusion would see m1 alone vote cross on row 0; the full
+        // majority over three members must win instead.
+        let subsets = vec![
+            (
+                vec!["m1".to_string()],
+                v1_subset_body(&[("m1", &["cross", "blank"])]),
+            ),
+            (
+                vec!["m2".to_string(), "m3".to_string()],
+                v1_subset_body(&[("m2", &["blank", "blank"]), ("m3", &["cross", "cross"])]),
+            ),
+        ];
+        let p = V1Params {
+            members: None,
+            policy: Some("majority".to_string()),
+            target: Some("cross".to_string()),
+            detail: false,
+        };
+        let merged = merge_v1(&order, &subsets, &p).unwrap();
+        let ens = merged.get("ensemble").unwrap();
+        assert_eq!(ens.get("policy").unwrap().as_str(), Some("majority"));
+        assert_eq!(ens.get("target").unwrap().as_str(), Some("cross"));
+        let det: Vec<bool> = ens
+            .get("detections")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_bool().unwrap())
+            .collect();
+        // Row 0: cross votes m1+m3 = 2/3 → majority true. Row 1: only m3 → false.
+        assert_eq!(det, vec![true, false]);
+    }
+
+    #[test]
+    fn v2_params_and_subset_rewrite() {
+        let r = req(
+            "POST",
+            "/v2/models/_ensemble/infer",
+            r#"{"id":"rq-1","inputs":[{"name":"input","datatype":"FP32","shape":[1,4],"data":[0.25,0,1,0.5]}],"parameters":{"models":"m1,m2","policy":"any","target":"cross"}}"#,
+        );
+        let body = r.json_body().unwrap();
+        let p = v2_params(&body);
+        assert_eq!(p.members, Some(vec!["m1".to_string(), "m2".to_string()]));
+        assert_eq!(p.id.as_deref(), Some("rq-1"));
+        assert_eq!(p.policy.as_deref(), Some("any"));
+
+        let sub = v2_subset_request(&r, &body, &["m2".to_string()]);
+        let sub_body = sub.json_body().unwrap();
+        assert_eq!(
+            sub_body.path(&["parameters", "models"]).unwrap().as_str(),
+            Some("m2")
+        );
+        // Untouched fields survive the rewrite byte-faithfully enough to
+        // reparse identically (numbers round-trip by value).
+        assert_eq!(sub_body.get("id").unwrap().as_str(), Some("rq-1"));
+        assert_eq!(
+            sub_body.path(&["inputs"]).unwrap().as_arr().unwrap()[0]
+                .get("data")
+                .unwrap()
+                .as_f64_vec()
+                .unwrap(),
+            vec![0.25, 0.0, 1.0, 0.5]
+        );
+    }
+
+    fn v2_subset_body(models: &[(&str, &[&str])], served: &str) -> Value {
+        let outputs: Vec<Value> = models
+            .iter()
+            .map(|(m, rows)| {
+                json::obj([
+                    ("name", Value::from(format!("{m}.classes"))),
+                    ("datatype", Value::from("BYTES")),
+                    ("shape", Value::Arr(vec![Value::from(rows.len())])),
+                    (
+                        "data",
+                        Value::Arr(rows.iter().map(|r| Value::from(*r)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj([
+            ("model_name", Value::from("_ensemble")),
+            ("model_version", Value::from("1")),
+            (
+                "parameters",
+                json::obj([("served_versions", Value::from(served))]),
+            ),
+            ("outputs", Value::Arr(outputs)),
+        ])
+    }
+
+    #[test]
+    fn merge_v2_concatenates_outputs_and_versions() {
+        let order: Vec<String> = ["m1", "m2"].iter().map(|s| s.to_string()).collect();
+        let subsets = vec![
+            (
+                vec!["m2".to_string()],
+                v2_subset_body(&[("m2", &["blank"])], "m2:3"),
+            ),
+            (
+                vec!["m1".to_string()],
+                v2_subset_body(&[("m1", &["cross"])], "m1:1"),
+            ),
+        ];
+        let p = V2Params {
+            members: None,
+            policy: Some("any".to_string()),
+            target: Some("cross".to_string()),
+            detail: false,
+            id: Some("rq-9".to_string()),
+            outputs: None,
+        };
+        let merged = merge_v2(&order, &subsets, &p).unwrap();
+        assert_eq!(merged.get("model_name").unwrap().as_str(), Some("_ensemble"));
+        assert_eq!(merged.get("id").unwrap().as_str(), Some("rq-9"));
+        assert_eq!(
+            merged.path(&["parameters", "served_versions"]).unwrap().as_str(),
+            Some("m1:1,m2:3"),
+            "served_versions reassembled in member order"
+        );
+        let outs = merged.get("outputs").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = outs
+            .iter()
+            .map(|t| t.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["m1.classes", "m2.classes", "detections"]);
+        // any-policy: m1 voted cross → row 0 true.
+        assert_eq!(
+            outs[2].get("data").unwrap().as_arr().unwrap()[0].as_bool(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn merge_v2_applies_output_selection() {
+        let order: Vec<String> = ["m1", "m2"].iter().map(|s| s.to_string()).collect();
+        let subsets = vec![
+            (
+                vec!["m1".to_string()],
+                v2_subset_body(&[("m1", &["cross"])], "m1:1"),
+            ),
+            (
+                vec!["m2".to_string()],
+                v2_subset_body(&[("m2", &["blank"])], "m2:1"),
+            ),
+        ];
+        let p = V2Params {
+            members: None,
+            policy: None,
+            target: None,
+            detail: false,
+            id: None,
+            outputs: Some(vec!["m2.classes".to_string()]),
+        };
+        let merged = merge_v2(&order, &subsets, &p).unwrap();
+        let outs = merged.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].get("name").unwrap().as_str(), Some("m2.classes"));
+
+        let bad = V2Params {
+            outputs: Some(vec!["nope".to_string()]),
+            ..p
+        };
+        assert!(merge_v2(&order, &subsets, &bad).is_err());
+    }
+}

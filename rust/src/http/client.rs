@@ -13,6 +13,14 @@ pub struct Client {
     stream: Option<BufReader<TcpStream>>,
     reconnects: usize,
     timeout: Duration,
+    /// Extra attempts allowed on a 429/503 answer (0 = return the
+    /// backpressure response to the caller unchanged — the default, so
+    /// load tests still observe shedding).
+    retry_budget: u32,
+    /// Upper bound on a single `Retry-After` sleep; servers advertise
+    /// seconds, and an honest client must not nap unboundedly.
+    retry_after_cap: Duration,
+    retries: usize,
 }
 
 impl Client {
@@ -22,15 +30,47 @@ impl Client {
             stream: None,
             reconnects: 0,
             timeout: Duration::from_secs(30),
+            retry_budget: 0,
+            retry_after_cap: Duration::from_secs(2),
+            retries: 0,
         };
         c.ensure_connected()?;
         c.reconnects = 0; // initial connect doesn't count
         Ok(c)
     }
 
+    /// Connect with a caller-chosen connect/read timeout (health probes
+    /// need sub-second failure detection, not the default 30 s).
+    pub fn connect_with_timeout(addr: SocketAddr, timeout: Duration) -> Result<Client> {
+        let mut c = Client {
+            addr,
+            stream: None,
+            reconnects: 0,
+            timeout,
+            retry_budget: 0,
+            retry_after_cap: Duration::from_secs(2),
+            retries: 0,
+        };
+        c.ensure_connected()?;
+        c.reconnects = 0;
+        Ok(c)
+    }
+
+    /// Opt in to bounded retries of 429/503 responses, honoring the
+    /// server's `Retry-After` (capped). Budget is per-request.
+    pub fn with_retry_budget(mut self, budget: u32) -> Client {
+        self.retry_budget = budget;
+        self
+    }
+
     /// Times a client reconnected due to a dropped keep-alive connection.
     pub fn reconnects(&self) -> usize {
         self.reconnects
+    }
+
+    /// Times a 429/503 response was retried under the retry budget.
+    pub fn retries(&self) -> usize {
+        self.retries
     }
 
     pub fn get(&mut self, path: &str) -> Result<Response> {
@@ -212,8 +252,28 @@ impl Client {
         bail!("{code} (HTTP {}): {message}", resp.status)
     }
 
-    /// Send a request, retrying once on a broken keep-alive connection.
+    /// Send a request, retrying once on a broken keep-alive connection,
+    /// and (when a retry budget is set) retrying 429/503 backpressure
+    /// answers after honoring the server's `Retry-After`.
     pub fn request(&mut self, req: &Request) -> Result<Response> {
+        let mut budget = self.retry_budget;
+        loop {
+            let resp = self.request_once(req)?;
+            if budget == 0 || !matches!(resp.status, 429 | 503) {
+                return Ok(resp);
+            }
+            budget -= 1;
+            self.retries += 1;
+            let wait = parse_retry_after(&resp)
+                .unwrap_or(Duration::from_millis(50))
+                .min(self.retry_after_cap);
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+    }
+
+    fn request_once(&mut self, req: &Request) -> Result<Response> {
         match self.try_request(req) {
             Ok(resp) => Ok(resp),
             Err(_) => {
@@ -292,6 +352,15 @@ pub fn v2_infer_body(shape: &[usize], data: &[f32]) -> Value {
     )])
 }
 
+/// Parse a `Retry-After` header (delay-seconds form only; HTTP-date is
+/// never emitted by flexserve backends). Shared by the typed client and
+/// the gateway proxy so both tiers honor backpressure the same way.
+pub fn parse_retry_after(resp: &Response) -> Option<Duration> {
+    resp.header("retry-after")
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
 /// Parse a response off the wire.
 pub fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
     let mut line = String::new();
@@ -344,5 +413,85 @@ pub fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
 
 #[cfg(test)]
 mod tests {
-    // Exercised end-to-end in server.rs tests and rust/tests/.
+    // The happy path is exercised end-to-end in server.rs tests and
+    // rust/tests/. Here: the Retry-After budget against a canned server
+    // whose handler scripts its own status sequence.
+
+    use super::*;
+    use crate::http::{Request, Server};
+    use crate::json;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Server answering 429 + `retry-after: 0` for the first `shed` hits,
+    /// then 200 with the hit count in the body.
+    fn shedding_server(shed: usize) -> (crate::http::ServerHandle, Arc<AtomicUsize>) {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let handle = Server::spawn(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |_req: &Request| {
+                let n = h.fetch_add(1, Ordering::SeqCst);
+                if n < shed {
+                    let mut r = Response::json(
+                        429,
+                        &json::obj([("error", json::Value::from("shedding"))]),
+                    );
+                    r.headers.push(("retry-after".into(), "0".into()));
+                    r
+                } else {
+                    Response::json(200, &json::obj([("hits", json::Value::from(n as u64 + 1))]))
+                }
+            }),
+        )
+        .unwrap();
+        (handle, hits)
+    }
+
+    #[test]
+    fn parse_retry_after_forms() {
+        let mut r = Response::new(429);
+        assert_eq!(parse_retry_after(&r), None);
+        r.headers.push(("retry-after".into(), "1".into()));
+        assert_eq!(parse_retry_after(&r), Some(Duration::from_secs(1)));
+        let mut bad = Response::new(429);
+        bad.headers.push(("retry-after".into(), "soon".into()));
+        assert_eq!(parse_retry_after(&bad), None);
+    }
+
+    #[test]
+    fn zero_budget_returns_backpressure_unchanged() {
+        let (handle, hits) = shedding_server(1);
+        let mut c = Client::connect(handle.addr).unwrap();
+        let resp = c.get("/x").unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("0"));
+        assert_eq!(c.retries(), 0);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn budget_retries_through_shedding() {
+        let (handle, hits) = shedding_server(2);
+        let mut c = Client::connect(handle.addr).unwrap().with_retry_budget(3);
+        let resp = c.get("/x").unwrap();
+        assert_eq!(resp.status, 200, "retries should reach the 200");
+        assert_eq!(resp.json_body().unwrap().get("hits").unwrap().as_u64(), Some(3));
+        assert_eq!(c.retries(), 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        handle.stop();
+    }
+
+    #[test]
+    fn budget_exhaustion_surfaces_last_response() {
+        let (handle, hits) = shedding_server(10);
+        let mut c = Client::connect(handle.addr).unwrap().with_retry_budget(2);
+        let resp = c.get("/x").unwrap();
+        assert_eq!(resp.status, 429, "budget spent → caller sees the 429");
+        assert_eq!(c.retries(), 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "1 initial + 2 retries");
+        handle.stop();
+    }
 }

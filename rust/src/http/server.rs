@@ -286,4 +286,78 @@ mod tests {
         // After stop, new connections eventually fail or get no service;
         // mainly we assert stop() returns promptly (no hang).
     }
+
+    #[test]
+    fn oversized_header_block_rejected() {
+        let h = echo_server();
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"GET /x HTTP/1.1\r\n").unwrap();
+        // Send just past MAX_HEADER so the server consumes every line it
+        // gets before bailing (no unread bytes → no RST racing the 400).
+        let filler = format!("x-filler: {}\r\n", "a".repeat(1000));
+        let lines = MAX_HEADER / filler.len() + 1;
+        for _ in 0..lines {
+            if s.write_all(filler.as_bytes()).is_err() {
+                break; // server already rejected and closed — also a pass
+            }
+        }
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        assert!(text.contains("bad_input.malformed_request"), "{text}");
+        h.stop();
+    }
+
+    #[test]
+    fn invalid_content_length_rejected() {
+        let h = echo_server();
+        for bad in ["banana", "-1", "1e3"] {
+            let mut s = TcpStream::connect(h.addr).unwrap();
+            let head = format!("POST /x HTTP/1.1\r\ncontent-length: {bad}\r\n\r\n");
+            s.write_all(head.as_bytes()).unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            assert!(buf.starts_with("HTTP/1.1 400"), "content-length {bad}: {buf}");
+            assert!(buf.contains("bad_input.malformed_request"), "{buf}");
+        }
+        h.stop();
+    }
+
+    #[test]
+    fn missing_content_length_means_empty_body() {
+        let h = echo_server();
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"POST /x HTTP/1.1\r\nconnection: close\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+        let body = buf.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+        let doc = json::parse(body).unwrap();
+        assert_eq!(doc.get("body_len").and_then(Value::as_u64), Some(0));
+        h.stop();
+    }
+
+    #[test]
+    fn premature_disconnect_mid_body_is_survived() {
+        let h = echo_server();
+        {
+            // Promise 100 bytes, send 7, hang up: the body read hits EOF
+            // and the connection dies with the uniform 400 envelope.
+            let mut s = TcpStream::connect(h.addr).unwrap();
+            s.write_all(b"POST /x HTTP/1.1\r\ncontent-length: 100\r\n\r\npartial")
+                .unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut buf = Vec::new();
+            let _ = s.read_to_end(&mut buf);
+            let text = String::from_utf8_lossy(&buf);
+            assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        }
+        // The worker pool survives the dead connection: a fresh client
+        // gets normal service.
+        let mut c = Client::connect(h.addr).unwrap();
+        assert_eq!(c.get("/alive").unwrap().status, 200);
+        h.stop();
+    }
 }

@@ -30,6 +30,7 @@ pub mod baseline;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
+pub mod gateway;
 pub mod http;
 pub mod imagepipe;
 pub mod json;

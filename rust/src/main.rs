@@ -16,6 +16,8 @@
 //! flexserve rollback MODEL   roll back to the stable/previous version
 //! flexserve audit            print the registry's audit trail
 //! flexserve rollout-smoke    device-free canary→rollback→promote cycle
+//! flexserve gateway          front N replicas with consistent-hash routing
+//! flexserve gateway-smoke    device-free gateway routing/ejection cycle
 //! ```
 //!
 //! Flags after the subcommand: see `config::ServeConfig::apply_cli`.
@@ -62,6 +64,8 @@ fn run(args: &[String]) -> Result<()> {
         "rollback" => cmd_promote_rollback(rest, "rollback"),
         "audit" => cmd_audit(rest),
         "rollout-smoke" => cmd_rollout_smoke(rest),
+        "gateway" => cmd_gateway(rest),
+        "gateway-smoke" => cmd_gateway_smoke(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -98,6 +102,11 @@ fn print_usage() {
            audit            GET /v1/audit (--n N records)\n\
            rollout-smoke    drive a canary→auto-rollback→promote cycle on a\n\
                             device-free in-process registry (CI smoke)\n\
+           gateway          front N `flexserve serve` replicas: consistent-\n\
+                            hash routing, health-driven ejection, failover,\n\
+                            scatter-gather ensembles\n\
+           gateway-smoke    device-free gateway cycle over in-process echo\n\
+                            replicas: stickiness, kill, ejection, rerouting\n\
          \n\
          COMMON FLAGS:\n\
            --artifacts DIR      artifact directory (default: ./artifacts)\n\
@@ -124,7 +133,12 @@ fn print_usage() {
            --out BENCH_serve.json --echo (in-process echo target; no artifacts)\n\
            --echo-queue-cap N --echo-delay-us N (echo admission gate: sheds\n\
            with typed 429s + Retry-After and exposes /v1/metrics, for\n\
-           overload smoke tests without artifacts)"
+           overload smoke tests without artifacts)\n\
+         GATEWAY FLAGS:\n\
+           --backends name=host:port,... (required; bare host:port allowed)\n\
+           --vnodes N --probe-interval-ms N --probe-timeout-ms N\n\
+           --fail-after N --rise-after N --inflight-cap N --retry-budget N\n\
+           --addr HOST:PORT --http-workers N --access-log --config FILE"
     );
 }
 
@@ -494,7 +508,17 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         } else {
             load::fetch_stage_breakdown(step_cfg.addr)
         };
-        records.push(load::report_json(&step_cfg, &report, stages.as_ref()));
+        let gateway = if echo {
+            None
+        } else {
+            load::fetch_gateway_breakdown(step_cfg.addr)
+        };
+        records.push(load::report_json_with_gateway(
+            &step_cfg,
+            &report,
+            stages.as_ref(),
+            gateway.as_ref(),
+        ));
         println!("{}", load::summary(&report));
     }
     // Single runs keep the flat BENCH_serve.json document; a sweep wraps
@@ -940,6 +964,205 @@ fn spawn_registry_echo(
                 };
             }
             Response::coded_error(404, "route.not_found", "no such route")
+        }),
+    )
+}
+
+fn cmd_gateway(args: &[String]) -> Result<()> {
+    let mut config = flexserve::config::GatewayConfig::default();
+    config.apply_cli(args)?;
+    let _handle = flexserve::gateway::spawn(config)?;
+    park_forever();
+}
+
+/// Device-free gateway cycle for CI: three in-process echo replicas behind
+/// a real gateway. Asserts consistent-hash stickiness against the ring's
+/// own `/v1/gateway` assignments, stops one replica, waits for the prober
+/// to eject it, and asserts traffic reroutes to the survivors.
+fn cmd_gateway_smoke(args: &[String]) -> Result<()> {
+    use flexserve::config::GatewayConfig;
+    use std::time::{Duration, Instant};
+    if !args.is_empty() {
+        bail!("gateway-smoke takes no flags");
+    }
+
+    const MODELS: [&str; 3] = ["cnn_s", "cnn_m", "mlp"];
+    let backends: Vec<flexserve::http::ServerHandle> = (0..3)
+        .map(|i| spawn_gateway_echo(&format!("b{i}"), &MODELS))
+        .collect::<Result<_>>()?;
+
+    let mut cfg = GatewayConfig::default();
+    cfg.addr = "127.0.0.1:0".into();
+    cfg.backends = backends
+        .iter()
+        .enumerate()
+        .map(|(i, h)| (format!("b{i}"), h.addr.to_string()))
+        .collect();
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.probe_timeout = Duration::from_millis(250);
+    cfg.fail_after = 2;
+    cfg.rise_after = 1;
+    cfg.retry_budget = 1;
+    let gw = flexserve::gateway::spawn(cfg)?;
+    let mut c = Client::connect(gw.server.addr)?;
+
+    // The prober has to complete a round before the gateway knows the
+    // fleet's model list (and can place every model on the ring).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let assignments: Vec<(String, Value)> = loop {
+        let doc = c.get("/v1/gateway")?.json_body()?;
+        let a = doc
+            .get("assignments")
+            .and_then(Value::as_obj)
+            .unwrap_or(&[])
+            .to_vec();
+        if a.len() == MODELS.len() && a.iter().all(|(_, v)| v.as_str().is_some()) {
+            break a;
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "gateway never learned the fleet models: {doc}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let owner_of = |m: &str| -> Option<String> {
+        assignments
+            .iter()
+            .find(|(k, _)| k == m)
+            .and_then(|(_, v)| v.as_str().map(str::to_string))
+    };
+
+    // Stickiness: every request for a model lands on the replica the ring
+    // assigned it — the consistent-hash promise, checked id by id.
+    for m in MODELS {
+        let expect = owner_of(m).context("model missing from assignments")?;
+        for _ in 0..10 {
+            let req = Request::new("POST", &format!("/v1/predict?models={m}"), b"{}".to_vec());
+            let resp = c.request(&req)?;
+            anyhow::ensure!(resp.status == 200, "predict for {m} failed: {}", resp.status);
+            let served = resp
+                .json_body()?
+                .get("backend")
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string();
+            anyhow::ensure!(
+                served == expect,
+                "{m}: served by {served}, ring assigns {expect}"
+            );
+            anyhow::ensure!(
+                resp.header("x-flexserve-backend") == Some(expect.as_str()),
+                "{m}: response missing backend tag"
+            );
+        }
+        println!("model {m}: 10/10 requests stuck to {expect}");
+    }
+
+    // Kill the replica that owns cnn_s and wait for the prober to eject it.
+    let victim = owner_of("cnn_s").context("cnn_s missing from assignments")?;
+    let vidx: usize = victim.trim_start_matches('b').parse()?;
+    backends[vidx].stop();
+    println!("stopped {victim} (owner of cnn_s)");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let doc = c.get("/v1/gateway")?.json_body()?;
+        let state = doc
+            .get("backends")
+            .and_then(Value::as_arr)
+            .and_then(|arr| {
+                arr.iter()
+                    .find(|b| b.get("id").and_then(Value::as_str) == Some(victim.as_str()))
+            })
+            .and_then(|b| b.get("state").and_then(Value::as_str))
+            .unwrap_or("")
+            .to_string();
+        if state == "down" {
+            break;
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "prober never ejected {victim} (state '{state}')"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    println!("prober ejected {victim}");
+
+    // Rerouting: cnn_s traffic now lands on a survivor, never the corpse.
+    for _ in 0..10 {
+        let req = Request::new("POST", "/v1/predict?models=cnn_s", b"{}".to_vec());
+        let resp = c.request(&req)?;
+        anyhow::ensure!(
+            resp.status == 200,
+            "rerouted predict failed: {}",
+            resp.status
+        );
+        let served = resp
+            .json_body()?
+            .get("backend")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+        anyhow::ensure!(served != victim, "request routed to ejected {victim}");
+    }
+    println!("cnn_s rerouted to survivors after ejection");
+
+    // The gateway itself stays ready (degraded, not down) on 2/3 replicas.
+    let resp = c.get("/v1/healthz")?;
+    anyhow::ensure!(resp.status == 200, "gateway healthz: {}", resp.status);
+    let status = resp
+        .json_body()?
+        .get("status")
+        .and_then(Value::as_str)
+        .unwrap_or("")
+        .to_string();
+    anyhow::ensure!(status == "degraded", "expected degraded, got '{status}'");
+
+    // Evidence for the CI greps: per-backend series + ejection gauges in
+    // the standard Prometheus exposition.
+    let resp = c.get("/v1/metrics?format=prometheus")?;
+    print!("{}", String::from_utf8_lossy(&resp.body));
+    gw.stop();
+    for h in &backends {
+        h.stop();
+    }
+    println!("gateway-smoke OK");
+    Ok(())
+}
+
+/// The device-free replica behind `gateway-smoke`: answers the readiness
+/// probe with a fixed active-model list and echoes its own id from the
+/// predict route, so routing decisions are observable from the outside.
+fn spawn_gateway_echo(id: &str, models: &[&str]) -> Result<flexserve::http::ServerHandle> {
+    let id = id.to_string();
+    let active: Vec<Value> = models.iter().map(|m| Value::from(*m)).collect();
+    Server::spawn(
+        "127.0.0.1:0",
+        2,
+        Arc::new(move |req: &Request| {
+            if req.method == "GET" && (req.path == "/v1/healthz" || req.path == "/healthz") {
+                return Response::json(
+                    200,
+                    &json::obj([
+                        ("status", Value::from("ok")),
+                        ("ready", Value::from(true)),
+                        ("active", Value::Arr(active.clone())),
+                        ("scheduler", json::obj([("queue_depth", Value::from(0u64))])),
+                    ]),
+                );
+            }
+            if req.method == "POST" && (req.path == "/v1/predict" || req.path == "/predict") {
+                return Response::json(
+                    200,
+                    &json::obj([
+                        ("backend", Value::from(id.as_str())),
+                        (
+                            "models",
+                            Value::from(req.query_param("models").unwrap_or("")),
+                        ),
+                    ]),
+                );
+            }
+            Response::coded_error(404, "route.not_found", "echo backend")
         }),
     )
 }

@@ -1,0 +1,630 @@
+//! End-to-end gateway integration.
+//!
+//! Device-free tests (always run) drive a REAL gateway over fake replicas
+//! that speak enough of the /v1 + /v2 wire to check the tier's core
+//! guarantees: single-shard requests proxy byte-identically, ensembles
+//! spanning shards merge to exactly what one process would have said,
+//! killed replicas are survived (rerouted 200s or a typed
+//! `gateway.no_backend` 503 — never a hang), and an empty fleet answers
+//! the typed 503.
+//!
+//! The device-backed differential (artifact-gated, like the other
+//! integration binaries) runs TWO full `serve` stacks behind a gateway
+//! whose backend ids are chosen so the ring splits the three models
+//! across both processes, then asserts gateway responses are
+//! byte-identical to a direct backend hit for both wire formats.
+
+use flexserve::config::{GatewayConfig, ServeConfig};
+use flexserve::coordinator::infer::fuse_named_votes;
+use flexserve::coordinator::{serve, Policy, SchedConfig};
+use flexserve::gateway::ring::{route_key, Ring};
+use flexserve::gateway::{self, scatter};
+use flexserve::http::{Client, Request, Response, Server, ServerHandle};
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn has_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !has_artifacts() {
+            eprintln!("skipping: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Device-free fixtures
+// ---------------------------------------------------------------------------
+
+/// Deterministic fake prediction, identical on every replica — the merge
+/// differential depends on subsets and full sets agreeing row by row.
+fn fake_class(model: &str, row: usize) -> &'static str {
+    let sum: usize = model.bytes().map(|b| b as usize).sum();
+    if (sum + row) % 3 == 0 {
+        "cross"
+    } else {
+        "blank"
+    }
+}
+
+/// A device-free replica speaking the subset of the real wire the gateway
+/// exercises: the readiness probe, `/v1/predict`, and the `/v2` ensemble
+/// infer route. Predictions come from [`fake_class`]; fusion reuses the
+/// coordinator's own `fuse_named_votes`, so a direct hit and a gateway
+/// merge disagree only if the gateway is wrong.
+fn fake_backend(models: &'static [&'static str]) -> ServerHandle {
+    Server::spawn(
+        "127.0.0.1:0",
+        4,
+        Arc::new(move |req: &Request| {
+            if req.method == "GET" && req.path == "/v1/healthz" {
+                return Response::json(
+                    200,
+                    &json::obj([
+                        ("status", Value::from("ok")),
+                        ("ready", Value::from(true)),
+                        (
+                            "active",
+                            Value::Arr(models.iter().map(|m| Value::from(*m)).collect()),
+                        ),
+                    ]),
+                );
+            }
+            if req.method == "POST" && (req.path == "/v1/predict" || req.path == "/predict") {
+                return fake_v1_predict(req, models);
+            }
+            if req.method == "POST" && req.path == "/v2/models/_ensemble/infer" {
+                return fake_v2_infer(req, models);
+            }
+            Response::coded_error(404, "route.not_found", "fake backend")
+        }),
+    )
+    .unwrap()
+}
+
+fn fake_v1_predict(req: &Request, active: &[&str]) -> Response {
+    let params = match scatter::v1_params(req) {
+        Ok(p) => p,
+        Err(()) => return Response::coded_error(400, "bad_input.malformed_json", "not json"),
+    };
+    let members = params
+        .members
+        .unwrap_or_else(|| active.iter().map(|m| m.to_string()).collect());
+    let batch = req
+        .json_body()
+        .ok()
+        .and_then(|b| b.get("batch").and_then(Value::as_usize))
+        .unwrap_or(2);
+    let mut named: Vec<(String, Vec<String>)> = Vec::with_capacity(members.len());
+    let mut doc: Vec<(String, Value)> = Vec::with_capacity(members.len() + 1);
+    for m in &members {
+        let rows: Vec<String> = (0..batch).map(|i| fake_class(m, i).to_string()).collect();
+        doc.push((
+            format!("model_{m}"),
+            Value::Arr(rows.iter().map(|r| Value::from(r.as_str())).collect()),
+        ));
+        named.push((m.clone(), rows));
+    }
+    if let (Some(p), Some(t)) = (&params.policy, &params.target) {
+        let policy = Policy::parse(p).unwrap();
+        let detections: Vec<Value> = fuse_named_votes(&named, &policy, t)
+            .unwrap()
+            .into_iter()
+            .map(Value::Bool)
+            .collect();
+        doc.push((
+            "ensemble".to_string(),
+            json::obj([
+                ("policy", Value::from(policy.to_string())),
+                ("target", Value::from(t.as_str())),
+                ("detections", Value::Arr(detections)),
+            ]),
+        ));
+    }
+    Response::json(200, &Value::Obj(doc))
+}
+
+fn fake_v2_infer(req: &Request, active: &[&str]) -> Response {
+    let body = match req.json_body() {
+        Ok(b) => b,
+        Err(_) => return Response::coded_error(400, "bad_input.malformed_json", "not json"),
+    };
+    let params = scatter::v2_params(&body);
+    let members = params
+        .members
+        .unwrap_or_else(|| active.iter().map(|m| m.to_string()).collect());
+    let batch = body
+        .path(&["inputs"])
+        .and_then(|v| v.as_arr())
+        .and_then(|arr| arr.first())
+        .and_then(|t| t.get("shape"))
+        .and_then(|s| s.as_arr())
+        .and_then(|s| s.first())
+        .and_then(Value::as_usize)
+        .unwrap_or(1);
+    let mut named: Vec<(String, Vec<String>)> = Vec::with_capacity(members.len());
+    let mut outputs: Vec<Value> = Vec::with_capacity(members.len() + 1);
+    for m in &members {
+        let rows: Vec<String> = (0..batch).map(|i| fake_class(m, i).to_string()).collect();
+        outputs.push(json::obj([
+            ("name", Value::from(format!("{m}.classes"))),
+            ("datatype", Value::from("BYTES")),
+            ("shape", Value::Arr(vec![Value::from(batch)])),
+            (
+                "data",
+                Value::Arr(rows.iter().map(|r| Value::from(r.as_str())).collect()),
+            ),
+        ]));
+        named.push((m.clone(), rows));
+    }
+    if let (Some(p), Some(t)) = (&params.policy, &params.target) {
+        let policy = Policy::parse(p).unwrap();
+        let detections: Vec<Value> = fuse_named_votes(&named, &policy, t)
+            .unwrap()
+            .into_iter()
+            .map(Value::Bool)
+            .collect();
+        outputs.push(json::obj([
+            ("name", Value::from("detections")),
+            ("datatype", Value::from("BOOL")),
+            ("shape", Value::Arr(vec![Value::from(batch)])),
+            ("data", Value::Arr(detections)),
+        ]));
+    }
+    let served: Vec<String> = members.iter().map(|m| format!("{m}:1")).collect();
+    let mut doc: Vec<(String, Value)> = vec![
+        ("model_name".to_string(), Value::from("_ensemble")),
+        ("model_version".to_string(), Value::from("1")),
+    ];
+    if let Some(id) = &params.id {
+        doc.push(("id".to_string(), Value::from(id.as_str())));
+    }
+    doc.push((
+        "parameters".to_string(),
+        json::obj([("served_versions", Value::from(served.join(",")))]),
+    ));
+    doc.push(("outputs".to_string(), Value::Arr(outputs)));
+    Response::json(200, &Value::Obj(doc))
+}
+
+/// Gateway config over already-running backends, probe cadence tightened
+/// for test latency.
+fn gateway_cfg(ids: &[String], handles: &[&ServerHandle]) -> GatewayConfig {
+    let mut cfg = GatewayConfig::default();
+    cfg.addr = "127.0.0.1:0".into();
+    cfg.backends = ids
+        .iter()
+        .zip(handles)
+        .map(|(id, h)| (id.clone(), h.addr.to_string()))
+        .collect();
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.probe_timeout = Duration::from_millis(250);
+    cfg.fail_after = 2;
+    cfg.rise_after = 1;
+    cfg.retry_budget = 1;
+    cfg
+}
+
+/// Backend ids whose ring placement splits `models` across both of two
+/// backends — found with the same pure `Ring` the gateway uses, so the
+/// test controls sharding without ever guessing hash values.
+fn splitting_ids(models: &[&str], vnodes: usize) -> Vec<String> {
+    for salt in 0..1000 {
+        let ids = vec![format!("a{salt}"), format!("b{salt}")];
+        let ring = Ring::new(&ids, vnodes);
+        let owners: Vec<usize> = models
+            .iter()
+            .map(|m| ring.owner(&route_key(m, None)).unwrap())
+            .collect();
+        if owners.iter().any(|&o| o == 0) && owners.iter().any(|&o| o == 1) {
+            return ids;
+        }
+    }
+    panic!("no splitting id pair found in 1000 salts");
+}
+
+/// Ids that place every one of `models` on backend 0 of two — the
+/// single-shard collapse case.
+fn colocating_ids(models: &[&str], vnodes: usize) -> Vec<String> {
+    for salt in 0..10_000 {
+        let ids = vec![format!("a{salt}"), format!("b{salt}")];
+        let ring = Ring::new(&ids, vnodes);
+        if models
+            .iter()
+            .all(|m| ring.owner(&route_key(m, None)) == Some(0))
+        {
+            return ids;
+        }
+    }
+    panic!("no colocating id pair found in 10000 salts");
+}
+
+fn wait_backend_state(c: &mut Client, id: &str, want: &str) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let doc = c.get("/v1/gateway").unwrap().json_body().unwrap();
+        let state = doc
+            .get("backends")
+            .and_then(Value::as_arr)
+            .and_then(|arr| {
+                arr.iter()
+                    .find(|b| b.get("id").and_then(Value::as_str) == Some(id))
+            })
+            .and_then(|b| b.get("state").and_then(Value::as_str))
+            .unwrap_or("")
+            .to_string();
+        if state == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backend {id} never reached '{want}' (at '{state}')"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Device-free: byte fidelity
+// ---------------------------------------------------------------------------
+
+/// Single-shard requests (here: every member colocated by construction)
+/// forward verbatim — the gateway body is byte-identical to a direct
+/// backend hit, for both wire formats.
+#[test]
+fn single_shard_proxying_is_byte_identical() {
+    const MODELS: [&'static str; 3] = ["m1", "m2", "m3"];
+    let b0 = fake_backend(&MODELS);
+    let b1 = fake_backend(&MODELS);
+    let ids = colocating_ids(&MODELS, 64);
+    let gw = gateway::spawn(gateway_cfg(&ids, &[&b0, &b1])).unwrap();
+    let mut via_gw = Client::connect(gw.server.addr).unwrap();
+    let mut direct = Client::connect(b0.addr).unwrap();
+
+    // /v1: query carries the members, body carries batch + fusion knobs.
+    let path = "/v1/predict?models=m1,m2,m3";
+    let body = br#"{"batch": 4, "policy": "majority", "target": "cross"}"#.to_vec();
+    let g = via_gw
+        .request(&Request::new("POST", path, body.clone()))
+        .unwrap();
+    let d = direct.request(&Request::new("POST", path, body)).unwrap();
+    assert_eq!(g.status, 200, "{}", String::from_utf8_lossy(&g.body));
+    assert_eq!(d.status, 200);
+    assert_eq!(g.body, d.body, "v1 proxy must be byte-identical");
+    assert_eq!(
+        g.header("x-flexserve-backend"),
+        Some(ids[0].as_str()),
+        "response tags the serving replica"
+    );
+
+    // /v2: everything rides in the body.
+    let v2_body = br#"{"id":"rq-1","inputs":[{"name":"input","datatype":"FP32","shape":[3,4],"data":[0,0,0,0,0,0,0,0,0,0,0,0]}],"parameters":{"models":"m1,m2,m3","policy":"any","target":"cross"}}"#.to_vec();
+    let g = via_gw
+        .request(&Request::new(
+            "POST",
+            "/v2/models/_ensemble/infer",
+            v2_body.clone(),
+        ))
+        .unwrap();
+    let d = direct
+        .request(&Request::new("POST", "/v2/models/_ensemble/infer", v2_body))
+        .unwrap();
+    assert_eq!(g.status, 200, "{}", String::from_utf8_lossy(&g.body));
+    assert_eq!(g.body, d.body, "v2 proxy must be byte-identical");
+
+    gw.stop();
+    b0.stop();
+    b1.stop();
+}
+
+/// The scatter-gather differential: an ensemble split across two shards
+/// merges into byte-for-byte the same answer one process gives for the
+/// whole ensemble — member order, recomputed fusion, provenance and all.
+#[test]
+fn scatter_gather_matches_single_process_byte_for_byte() {
+    const MODELS: [&'static str; 3] = ["m1", "m2", "m3"];
+    let b0 = fake_backend(&MODELS);
+    let b1 = fake_backend(&MODELS);
+    let ids = splitting_ids(&MODELS, 64);
+    let gw = gateway::spawn(gateway_cfg(&ids, &[&b0, &b1])).unwrap();
+    let mut via_gw = Client::connect(gw.server.addr).unwrap();
+    let mut direct = Client::connect(b0.addr).unwrap();
+
+    for (policy, target) in [("majority", "cross"), ("atleast:2", "blank"), ("any", "cross")] {
+        let path = format!("/v1/predict?models=m1,m2,m3&policy={policy}&target={target}");
+        let body = br#"{"batch": 5}"#.to_vec();
+        let g = via_gw
+            .request(&Request::new("POST", &path, body.clone()))
+            .unwrap();
+        let d = direct.request(&Request::new("POST", &path, body)).unwrap();
+        assert_eq!(g.status, 200, "{}", String::from_utf8_lossy(&g.body));
+        assert_eq!(
+            g.body, d.body,
+            "{policy}/{target}: scattered v1 ensemble must equal one process"
+        );
+    }
+
+    let v2_body = br#"{"id":"rq-7","inputs":[{"name":"input","datatype":"FP32","shape":[4,2],"data":[0,0,0,0,0,0,0,0]}],"parameters":{"models":"m1,m2,m3","policy":"majority","target":"cross"}}"#.to_vec();
+    let g = via_gw
+        .request(&Request::new(
+            "POST",
+            "/v2/models/_ensemble/infer",
+            v2_body.clone(),
+        ))
+        .unwrap();
+    let d = direct
+        .request(&Request::new("POST", "/v2/models/_ensemble/infer", v2_body))
+        .unwrap();
+    assert_eq!(g.status, 200, "{}", String::from_utf8_lossy(&g.body));
+    assert_eq!(
+        g.body, d.body,
+        "scattered v2 ensemble must equal one process"
+    );
+
+    // The gateway counted the fan-out.
+    assert!(gw.gateway.metrics.counter("gw_scatter_total") >= 4);
+
+    gw.stop();
+    b0.stop();
+    b1.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Device-free: failure handling
+// ---------------------------------------------------------------------------
+
+/// Killing a replica mid-run never hangs a request: every answer is a
+/// rerouted 200 from the survivor or (once the whole fleet is gone and
+/// ejected) the typed `gateway.no_backend` 503.
+#[test]
+fn killed_backend_reroutes_then_types_503() {
+    const MODELS: [&'static str; 1] = ["solo"];
+    let b0 = fake_backend(&MODELS);
+    let b1 = fake_backend(&MODELS);
+    let ids = vec!["r0".to_string(), "r1".to_string()];
+    let gw = gateway::spawn(gateway_cfg(&ids, &[&b0, &b1])).unwrap();
+    let mut c = Client::connect(gw.server.addr).unwrap();
+
+    let owner = Ring::new(&ids, 64)
+        .owner(&route_key("solo", None))
+        .unwrap();
+    let (victim_handle, victim_id) = if owner == 0 {
+        (&b0, &ids[0])
+    } else {
+        (&b1, &ids[1])
+    };
+
+    let predict = |c: &mut Client| {
+        c.request(&Request::new(
+            "POST",
+            "/v1/predict?models=solo",
+            br#"{"batch": 1}"#.to_vec(),
+        ))
+        .unwrap()
+    };
+    for _ in 0..5 {
+        assert_eq!(predict(&mut c).status, 200);
+    }
+
+    // Kill the owner mid-run: every subsequent answer must still be a 200
+    // (failover walks to the survivor on transport error) — and once the
+    // prober ejects the corpse, traffic must tag the survivor.
+    victim_handle.stop();
+    for _ in 0..20 {
+        let resp = predict(&mut c);
+        assert_eq!(
+            resp.status, 200,
+            "mid-kill request failed: {}",
+            String::from_utf8_lossy(&resp.body)
+        );
+    }
+    wait_backend_state(&mut c, victim_id, "down");
+    let resp = predict(&mut c);
+    assert_eq!(resp.status, 200);
+    assert_ne!(
+        resp.header("x-flexserve-backend"),
+        Some(victim_id.as_str()),
+        "ejected replica must not serve"
+    );
+
+    // Kill the survivor too: after ejection the gateway answers the typed
+    // 503 immediately — no hang, no transport error leak.
+    let (survivor_handle, survivor_id) = if owner == 0 {
+        (&b1, &ids[1])
+    } else {
+        (&b0, &ids[0])
+    };
+    survivor_handle.stop();
+    wait_backend_state(&mut c, survivor_id, "down");
+    let resp = predict(&mut c);
+    assert_eq!(resp.status, 503);
+    let err = resp.json_body().unwrap();
+    assert_eq!(
+        err.path(&["error", "code"]).and_then(Value::as_str),
+        Some("gateway.no_backend"),
+        "{err}"
+    );
+    assert!(resp.header("retry-after").is_some(), "hint the caller back");
+
+    // The gateway's own readiness now reports the dead fleet.
+    let resp = c.get("/v1/healthz").unwrap();
+    assert_eq!(resp.status, 503);
+
+    gw.stop();
+}
+
+/// Model-keyed control-plane routes stick to the model's shard and
+/// gateway-local introspection answers without backends.
+#[test]
+fn model_keyed_routes_stick_and_introspection_is_local() {
+    const MODELS: [&'static str; 3] = ["m1", "m2", "m3"];
+    let b0 = fake_backend(&MODELS);
+    let b1 = fake_backend(&MODELS);
+    let ids = vec!["r0".to_string(), "r1".to_string()];
+    let gw = gateway::spawn(gateway_cfg(&ids, &[&b0, &b1])).unwrap();
+    let mut c = Client::connect(gw.server.addr).unwrap();
+
+    // The fake 404s unknown routes; what we assert is WHICH replica the
+    // gateway picked — the ring owner, on every repeat.
+    let owner = Ring::new(&ids, 64).owner(&route_key("m2", None)).unwrap();
+    for _ in 0..5 {
+        let resp = c
+            .request(&Request::new("GET", "/v1/models/m2", Vec::new()))
+            .unwrap();
+        assert_eq!(
+            resp.header("x-flexserve-backend"),
+            Some(ids[owner].as_str()),
+            "model-keyed route must stick to the ring owner"
+        );
+    }
+
+    // /v1/gateway: ring facts + per-backend docs, no backend round-trip.
+    let doc = c.get("/v1/gateway").unwrap().json_body().unwrap();
+    assert_eq!(doc.path(&["ring", "backends"]).and_then(Value::as_u64), Some(2));
+    assert_eq!(doc.path(&["ring", "vnodes"]).and_then(Value::as_u64), Some(64));
+    assert_eq!(
+        doc.get("backends").and_then(Value::as_arr).map(<[Value]>::len),
+        Some(2)
+    );
+
+    // /livez answers even with no backend knowledge at all.
+    let live = c.get("/v1/livez").unwrap();
+    assert_eq!(live.status, 200);
+
+    // Prometheus exposition carries the per-backend series. The state
+    // gauge is first written by the prober, so poll past the first
+    // ~50ms round before asserting.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let text = loop {
+        let text = String::from_utf8(
+            c.get("/v1/metrics?format=prometheus").unwrap().body,
+        )
+        .unwrap();
+        if text.contains("flexserve_gw_backend_r0_state")
+            || Instant::now() >= deadline
+        {
+            break text;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert!(text.contains("flexserve_gw_requests_total"), "{text}");
+    assert!(text.contains("flexserve_gw_backend_r0_state"), "{text}");
+
+    gw.stop();
+    b0.stop();
+    b1.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Device-backed differential
+// ---------------------------------------------------------------------------
+
+/// Two REAL serving stacks behind the gateway, ring forced to split the
+/// three models across them: the gateway must be byte-invisible for both
+/// protocols, scatter-gather included.
+#[test]
+fn gateway_over_real_backends_is_byte_invisible() {
+    require_artifacts!();
+    let spawn_stack = || {
+        let mut config = ServeConfig::default();
+        config.addr = "127.0.0.1:0".into();
+        config.artifacts = artifact_dir();
+        config.http_workers = 4;
+        config.device_workers = 1;
+        config.warmup = false;
+        config.scheduler = Some(SchedConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+            adaptive: false,
+            ..Default::default()
+        });
+        serve(&config).expect("server starts")
+    };
+    let (h0, _s0) = spawn_stack();
+    let (h1, _s1) = spawn_stack();
+
+    let models = ["cnn_m", "cnn_s", "mlp"];
+    let ids = splitting_ids(&models, 64);
+    let gw = gateway::spawn(gateway_cfg(&ids, &[&h0, &h1])).unwrap();
+    let mut via_gw = Client::connect(gw.server.addr).unwrap();
+    let mut direct = Client::connect(h0.addr).unwrap();
+
+    let mut rng = Prng::new(4242);
+    let batch = 3;
+    let (data, _) = workload::make_batch(&mut rng, batch);
+
+    // /v1 with fusion, detail off (detail adds gateway-only diagnostics
+    // by design, so byte-fidelity is asserted on the paper wire format).
+    let path = "/v1/predict?models=cnn_m,cnn_s,mlp&policy=majority&target=cross";
+    let body = json::to_string(&json::obj([
+        ("data", json::f32_array_raw(data.iter().copied())),
+        ("batch", Value::from(batch)),
+    ]))
+    .into_bytes();
+    let g = via_gw
+        .request(&Request::new("POST", path, body.clone()))
+        .unwrap();
+    let d = direct.request(&Request::new("POST", path, body)).unwrap();
+    assert_eq!(g.status, 200, "{}", String::from_utf8_lossy(&g.body));
+    assert_eq!(d.status, 200);
+    assert_eq!(g.body, d.body, "v1: gateway must be byte-invisible");
+
+    // /v2 ensemble infer with fusion.
+    let v2_body = json::to_string(&json::obj([
+        ("id", Value::from("diff-1")),
+        (
+            "inputs",
+            Value::Arr(vec![json::obj([
+                ("name", Value::from("input")),
+                ("datatype", Value::from("FP32")),
+                (
+                    "shape",
+                    Value::Arr(vec![
+                        Value::from(batch),
+                        Value::from(workload::IMG),
+                        Value::from(workload::IMG),
+                        Value::from(1usize),
+                    ]),
+                ),
+                ("data", json::f32_array_raw(data.iter().copied())),
+            ])]),
+        ),
+        (
+            "parameters",
+            json::obj([
+                ("models", Value::from("cnn_m,cnn_s,mlp")),
+                ("policy", Value::from("majority")),
+                ("target", Value::from("cross")),
+            ]),
+        ),
+    ]))
+    .into_bytes();
+    let g = via_gw
+        .request(&Request::new(
+            "POST",
+            "/v2/models/_ensemble/infer",
+            v2_body.clone(),
+        ))
+        .unwrap();
+    let d = direct
+        .request(&Request::new("POST", "/v2/models/_ensemble/infer", v2_body))
+        .unwrap();
+    assert_eq!(g.status, 200, "{}", String::from_utf8_lossy(&g.body));
+    assert_eq!(g.body, d.body, "v2: gateway must be byte-invisible");
+
+    gw.stop();
+    h0.stop();
+    h1.stop();
+}
