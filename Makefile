@@ -10,6 +10,9 @@
 #                    it at a live server with BENCH_FLAGS='--addr ...'
 #   make gateway-smoke  device-free gateway cycle: stickiness, kill,
 #                    ejection, rerouting over in-process echo replicas
+#   make chaos-smoke device-free failure-containment cycle under a seeded
+#                    chaos plane: injected panics + connection drops,
+#                    breaker trip/recover, supervisor respawns
 #   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs
 #                    drift from the README "Protocols" matrix
 #
@@ -22,7 +25,7 @@ ARTIFACTS ?= rust/artifacts
 
 BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
 
-.PHONY: artifacts serve test bench gateway-smoke check-docs fmt clippy
+.PHONY: artifacts serve test bench gateway-smoke chaos-smoke check-docs fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -39,6 +42,9 @@ bench:
 
 gateway-smoke:
 	cd rust && cargo run --release -- gateway-smoke
+
+chaos-smoke:
+	cd rust && cargo run --release -- chaos-smoke
 
 # Every quoted "/v2..." string in v2.rs is a route pattern (the module
 # keeps other /v2 spellings out of string literals); each must appear

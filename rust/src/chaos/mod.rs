@@ -1,0 +1,315 @@
+//! Deterministic fault-injection plane: seeded, named-site chaos for the
+//! failure-containment subsystem.
+//!
+//! A chaos spec is a comma-separated list of `site=rate:kind` rules
+//! (`--chaos 'exec.device=0.2:panic,gateway.connect=0.1:drop'`): `site`
+//! names one of the fixed injection points threaded through the stack,
+//! `rate` is the per-decision injection probability in `(0, 1]`, and
+//! `kind` selects the failure mode:
+//!
+//! * `panic` — the site panics (exercises `catch_unwind` supervision and
+//!   the router's panic→500 middleware);
+//! * `error` — the site returns a synthetic error;
+//! * `drop`  — the site abandons the work (connection dropped / job
+//!   discarded); sites without a natural "drop" semantics degrade it to
+//!   `error`, so a spec never silently no-ops.
+//!
+//! Sites (one constant each, grep for call sites):
+//!
+//! | site              | boundary                                        |
+//! |-------------------|-------------------------------------------------|
+//! | `exec.submit`     | [`ExecutorHandle::infer_async`] channel send    |
+//! | `exec.device`     | device thread, before `execute_job`             |
+//! | `sched.flush`     | scheduler flush, before the target forward      |
+//! | `gateway.connect` | gateway proxy backend connection checkout       |
+//! | `gateway.probe`   | gateway health probe (forces `Unreachable`)     |
+//!
+//! Decisions draw from a per-rule [`Prng`] stream forked from one seed, so
+//! a given spec + seed replays the same injection sequence per site
+//! (modulo thread interleaving across sites). The plane is installed
+//! process-wide at most once ([`install`]); when nothing is installed,
+//! [`decide`] is a single atomic load — the disabled hot path costs
+//! nothing. Every injection bumps a per-site counter; with a metrics sink
+//! registered ([`set_sink`]) it also lands as `chaos_inject_<site>_total`
+//! in all three metric expositions.
+//!
+//! [`ExecutorHandle::infer_async`]: crate::runtime::ExecutorHandle::infer_async
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::Prng;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+pub const EXEC_SUBMIT: &str = "exec.submit";
+pub const EXEC_DEVICE: &str = "exec.device";
+pub const SCHED_FLUSH: &str = "sched.flush";
+pub const GATEWAY_CONNECT: &str = "gateway.connect";
+pub const GATEWAY_PROBE: &str = "gateway.probe";
+
+/// Every named injection site (the spec parser validates against this).
+pub const SITES: &[&str] = &[
+    EXEC_SUBMIT,
+    EXEC_DEVICE,
+    SCHED_FLUSH,
+    GATEWAY_CONNECT,
+    GATEWAY_PROBE,
+];
+
+/// What an armed site does when its rate fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Panic,
+    Error,
+    Drop,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Error => "error",
+            FaultKind::Drop => "drop",
+        }
+    }
+}
+
+struct Rule {
+    site: &'static str,
+    rate: f64,
+    kind: FaultKind,
+    prng: Mutex<Prng>,
+    injected: AtomicU64,
+    /// Pre-rendered counter name (`chaos_inject_exec_device_total`) so the
+    /// injection path never formats.
+    metric: String,
+}
+
+/// A parsed, seeded injector. Usually installed process-wide via
+/// [`install`]; harnesses may also hold one directly.
+pub struct ChaosPlane {
+    rules: Vec<Rule>,
+    armed: AtomicBool,
+    sink: OnceLock<Arc<Metrics>>,
+}
+
+impl ChaosPlane {
+    /// Parse a `site=rate:kind[,site=rate:kind...]` spec.
+    pub fn parse(spec: &str, seed: u64) -> Result<ChaosPlane> {
+        let mut root = Prng::new(seed);
+        let mut rules: Vec<Rule> = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site_s, rest) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("chaos rule '{part}': expected site=rate:kind"))?;
+            let (rate_s, kind_s) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("chaos rule '{part}': expected site=rate:kind"))?;
+            let Some(&site) = SITES.iter().find(|s| **s == site_s.trim()) else {
+                bail!(
+                    "chaos rule '{part}': unknown site '{site_s}' (one of: {})",
+                    SITES.join(", ")
+                );
+            };
+            if rules.iter().any(|r| r.site == site) {
+                bail!("chaos rule '{part}': site '{site}' listed twice");
+            }
+            let rate: f64 = rate_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("chaos rule '{part}': rate '{rate_s}' is not a number"))?;
+            if !(rate > 0.0 && rate <= 1.0) {
+                bail!("chaos rule '{part}': rate must be in (0, 1], got {rate}");
+            }
+            let kind = match kind_s.trim() {
+                "panic" => FaultKind::Panic,
+                "error" => FaultKind::Error,
+                "drop" => FaultKind::Drop,
+                other => bail!("chaos rule '{part}': unknown kind '{other}' (panic, error, drop)"),
+            };
+            rules.push(Rule {
+                site,
+                rate,
+                kind,
+                prng: Mutex::new(root.fork()),
+                injected: AtomicU64::new(0),
+                metric: format!("chaos_inject_{}_total", site.replace('.', "_")),
+            });
+        }
+        if rules.is_empty() {
+            bail!("chaos spec is empty (expected site=rate:kind[,...])");
+        }
+        Ok(ChaosPlane {
+            rules,
+            armed: AtomicBool::new(true),
+            sink: OnceLock::new(),
+        })
+    }
+
+    /// Should `site` fail right now? Draws the site's seeded stream and
+    /// meters the injection. `None` = proceed normally.
+    pub fn decide(&self, site: &str) -> Option<FaultKind> {
+        if !self.armed.load(Ordering::Relaxed) {
+            return None;
+        }
+        let rule = self.rules.iter().find(|r| r.site == site)?;
+        if !rule.prng.lock().unwrap().bool(rule.rate) {
+            return None;
+        }
+        rule.injected.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = self.sink.get() {
+            m.inc(&rule.metric);
+        }
+        Some(rule.kind)
+    }
+
+    /// Injections fired at one site so far.
+    pub fn injected(&self, site: &str) -> u64 {
+        self.rules
+            .iter()
+            .find(|r| r.site == site)
+            .map(|r| r.injected.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Arm/disarm the whole plane (a disarmed plane never injects —
+    /// harnesses use this to run clean recovery phases after a fault
+    /// phase without reinstalling).
+    pub fn set_armed(&self, on: bool) {
+        self.armed.store(on, Ordering::Relaxed);
+    }
+
+    /// Register the metrics registry injections are counted into (first
+    /// call wins). Without a sink the per-plane counters still track.
+    pub fn set_sink(&self, metrics: Arc<Metrics>) {
+        let _ = self.sink.set(metrics);
+    }
+
+    /// One-line human summary for the serve banner.
+    pub fn summary(&self) -> String {
+        self.rules
+            .iter()
+            .map(|r| format!("{}={}:{}", r.site, r.rate, r.kind.as_str()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+static GLOBAL: OnceLock<ChaosPlane> = OnceLock::new();
+
+/// Install the process-wide plane (at most once; a second install fails
+/// rather than silently replacing an active injector).
+pub fn install(plane: ChaosPlane) -> Result<()> {
+    GLOBAL
+        .set(plane)
+        .map_err(|_| anyhow::anyhow!("chaos plane already installed"))
+}
+
+/// The installed plane, if any.
+pub fn global() -> Option<&'static ChaosPlane> {
+    GLOBAL.get()
+}
+
+/// Process-wide injection decision for `site`. With no plane installed
+/// this is one atomic load and `None`.
+pub fn decide(site: &str) -> Option<FaultKind> {
+    GLOBAL.get().and_then(|p| p.decide(site))
+}
+
+/// Arm/disarm the installed plane (no-op when none is installed).
+pub fn set_armed(on: bool) {
+    if let Some(p) = GLOBAL.get() {
+        p.set_armed(on);
+    }
+}
+
+/// Point the installed plane's injection counters at a metrics registry.
+pub fn set_sink(metrics: Arc<Metrics>) {
+    if let Some(p) = GLOBAL.get() {
+        p.set_sink(metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_multi_site_specs() {
+        let p = ChaosPlane::parse("exec.device=0.5:panic, gateway.connect=1.0:drop", 7).unwrap();
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].kind, FaultKind::Panic);
+        assert_eq!(p.rules[1].site, GATEWAY_CONNECT);
+        assert_eq!(
+            p.summary(),
+            "exec.device=0.5:panic,gateway.connect=1:drop"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for (spec, frag) in [
+            ("", "empty"),
+            ("exec.device", "expected site=rate:kind"),
+            ("exec.device=0.5", "expected site=rate:kind"),
+            ("bogus.site=0.5:panic", "unknown site"),
+            ("exec.device=0:panic", "rate must be in"),
+            ("exec.device=1.5:panic", "rate must be in"),
+            ("exec.device=x:panic", "not a number"),
+            ("exec.device=0.5:explode", "unknown kind"),
+            ("exec.device=0.5:panic,exec.device=0.1:error", "listed twice"),
+        ] {
+            let e = ChaosPlane::parse(spec, 1).unwrap_err().to_string();
+            assert!(e.contains(frag), "{spec}: {e}");
+        }
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_counts() {
+        let p = ChaosPlane::parse("sched.flush=1.0:error", 3).unwrap();
+        for _ in 0..10 {
+            assert_eq!(p.decide(SCHED_FLUSH), Some(FaultKind::Error));
+        }
+        assert_eq!(p.injected(SCHED_FLUSH), 10);
+        // Unlisted sites never fire.
+        assert_eq!(p.decide(EXEC_DEVICE), None);
+        assert_eq!(p.injected(EXEC_DEVICE), 0);
+    }
+
+    #[test]
+    fn seeded_decisions_replay() {
+        let a = ChaosPlane::parse("exec.device=0.3:error", 42).unwrap();
+        let b = ChaosPlane::parse("exec.device=0.3:error", 42).unwrap();
+        let da: Vec<bool> = (0..64).map(|_| a.decide(EXEC_DEVICE).is_some()).collect();
+        let db: Vec<bool> = (0..64).map(|_| b.decide(EXEC_DEVICE).is_some()).collect();
+        assert_eq!(da, db);
+        assert!(da.iter().any(|&x| x) && da.iter().any(|&x| !x));
+        // A different seed draws a different sequence.
+        let c = ChaosPlane::parse("exec.device=0.3:error", 43).unwrap();
+        let dc: Vec<bool> = (0..64).map(|_| c.decide(EXEC_DEVICE).is_some()).collect();
+        assert_ne!(da, dc);
+    }
+
+    #[test]
+    fn disarmed_plane_never_fires() {
+        let p = ChaosPlane::parse("sched.flush=1.0:error", 3).unwrap();
+        p.set_armed(false);
+        assert_eq!(p.decide(SCHED_FLUSH), None);
+        assert_eq!(p.injected(SCHED_FLUSH), 0);
+        p.set_armed(true);
+        assert_eq!(p.decide(SCHED_FLUSH), Some(FaultKind::Error));
+    }
+
+    #[test]
+    fn injections_land_in_the_metrics_sink() {
+        let p = ChaosPlane::parse("gateway.probe=1.0:error", 5).unwrap();
+        let m = Arc::new(Metrics::new());
+        p.set_sink(Arc::clone(&m));
+        p.decide(GATEWAY_PROBE);
+        p.decide(GATEWAY_PROBE);
+        assert_eq!(m.counter("chaos_inject_gateway_probe_total"), 2);
+        assert!(m
+            .render_prometheus()
+            .contains("flexserve_chaos_inject_gateway_probe_total"));
+    }
+}

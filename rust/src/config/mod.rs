@@ -1,7 +1,7 @@
 //! Server configuration: JSON config file + CLI-style overrides (clap is
 //! unavailable offline; the flag parser lives here and serves `main.rs`).
 
-use crate::coordinator::SchedConfig;
+use crate::coordinator::{BreakerConfig, SchedConfig};
 use crate::json::{self, Value};
 use crate::registry::RegistryConfig;
 use anyhow::{anyhow, bail, Context, Result};
@@ -32,6 +32,16 @@ pub struct ServeConfig {
     /// The model registry: durable audit trail + auto-rollback guardrail
     /// defaults (`registry` JSON block; `--audit-log`, `--guardrail-*`).
     pub registry: RegistryConfig,
+    /// Per-model-bucket circuit breakers (`breaker` JSON block;
+    /// `--breaker-fail-threshold`, `--breaker-cooldown-ms`).
+    pub breaker: BreakerConfig,
+    /// Seeded fault-injection spec, e.g.
+    /// `"exec.device=0.2:panic,sched.flush=0.1:error"` (None = chaos off;
+    /// disabled sites cost one atomic load).
+    pub chaos: Option<String>,
+    /// Seed for the chaos plane's per-site PRNGs (same spec + same seed =
+    /// same injection sequence).
+    pub chaos_seed: u64,
     /// Emit one access-log line per request on stderr (router middleware).
     pub access_log: bool,
 }
@@ -48,6 +58,9 @@ impl Default for ServeConfig {
             models: None,
             scheduler: Some(SchedConfig::default()),
             registry: RegistryConfig::default(),
+            breaker: BreakerConfig::default(),
+            chaos: None,
+            chaos_seed: 0,
             access_log: false,
         }
     }
@@ -128,6 +141,12 @@ impl ServeConfig {
                             .as_bool()
                             .ok_or_else(|| anyhow!("{key}.adaptive must be a bool"))?;
                     }
+                    if let Some(d) = val.get("drain_timeout_ms") {
+                        let ms = d.as_u64().ok_or_else(|| {
+                            anyhow!("{key}.drain_timeout_ms must be an integer (0 = wait forever)")
+                        })?;
+                        cfg.drain_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+                    }
                     self.scheduler = Some(cfg);
                 }
                 _ => bail!("'{key}' must be bool, null, or object"),
@@ -162,6 +181,36 @@ impl ServeConfig {
                         .ok_or_else(|| anyhow!("registry.min_samples must be >= 1"))?;
                 }
             }
+            "breaker" => {
+                if val.as_obj().is_none() {
+                    bail!("'breaker' must be an object");
+                }
+                if let Some(t) = val.get("fail_threshold") {
+                    self.breaker.fail_threshold = t
+                        .as_usize()
+                        .filter(|&t| t >= 1)
+                        .ok_or_else(|| anyhow!("breaker.fail_threshold must be >= 1"))?
+                        as u32;
+                }
+                if let Some(ms) = val.get("cooldown_ms") {
+                    self.breaker.cooldown = Duration::from_millis(
+                        ms.as_u64()
+                            .filter(|&ms| ms >= 1)
+                            .ok_or_else(|| anyhow!("breaker.cooldown_ms must be >= 1"))?,
+                    );
+                }
+            }
+            "chaos" => {
+                self.chaos = match val {
+                    Value::Null => None,
+                    _ => Some(req_str(key, val)?.to_string()),
+                };
+            }
+            "chaos_seed" => {
+                self.chaos_seed = val
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("'chaos_seed' must be an integer"))?;
+            }
             // A combined cluster config file may carry a `gateway` block
             // (consumed by `GatewayConfig::from_file`); the serve side
             // validates the shape and otherwise ignores it.
@@ -179,8 +228,10 @@ impl ServeConfig {
     /// mirror the JSON config (`--addr`, `--http-workers`,
     /// `--device-workers`, `--artifacts`, `--models a,b`, `--no-batcher`,
     /// `--batch-delay-us N`, `--max-batch N`, `--queue-cap N`,
-    /// `--deadline-ms N`, `--adaptive-window on|off`, `--no-verify`,
-    /// `--no-warmup`, `--access-log`).
+    /// `--deadline-ms N`, `--drain-timeout-ms N`, `--adaptive-window
+    /// on|off`, `--no-verify`, `--no-warmup`, `--access-log`,
+    /// `--breaker-fail-threshold N`, `--breaker-cooldown-ms N`,
+    /// `--chaos SPEC`, `--chaos-seed N`).
     pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
         let mut it = args.iter().peekable();
         while let Some(arg) = it.next() {
@@ -229,6 +280,28 @@ impl ServeConfig {
                     let v = parse_bool_flag("--adaptive-window", &take()?)?;
                     self.scheduler.get_or_insert_with(Default::default).adaptive = v;
                 }
+                "--drain-timeout-ms" => {
+                    let ms = take()?.parse::<u64>()?;
+                    self.scheduler
+                        .get_or_insert_with(Default::default)
+                        .drain_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+                }
+                "--breaker-fail-threshold" => {
+                    let t = take()?.parse::<u32>()?;
+                    if t == 0 {
+                        bail!("--breaker-fail-threshold expects >= 1");
+                    }
+                    self.breaker.fail_threshold = t;
+                }
+                "--breaker-cooldown-ms" => {
+                    let ms = take()?.parse::<u64>()?;
+                    if ms == 0 {
+                        bail!("--breaker-cooldown-ms expects >= 1");
+                    }
+                    self.breaker.cooldown = Duration::from_millis(ms);
+                }
+                "--chaos" => self.chaos = Some(take()?),
+                "--chaos-seed" => self.chaos_seed = take()?.parse::<u64>()?,
                 "--no-verify" => self.verify_sha = false,
                 "--no-warmup" => self.warmup = false,
                 "--access-log" => self.access_log = true,
@@ -273,9 +346,16 @@ pub struct GatewayConfig {
     pub backends: Vec<(String, String)>,
     /// Virtual nodes per backend on the consistent-hash ring.
     pub vnodes: usize,
-    /// Health probe cadence and per-probe connect/read timeout.
+    /// Health probe cadence.
     pub probe_interval: Duration,
+    /// Per-probe TCP connect timeout (an unreachable host fails fast).
+    pub probe_connect_timeout: Duration,
+    /// Per-probe read timeout, distinct from connect: a backend that
+    /// accepts but stalls mid-response still fails the probe.
     pub probe_timeout: Duration,
+    /// Max extra random sleep added per probe round (0 = none) so a fleet
+    /// of gateways doesn't probe every backend in lockstep.
+    pub probe_jitter: Duration,
     /// Consecutive failed probes before a backend goes Down (ejected).
     pub fail_after: u32,
     /// Consecutive healthy probes before a backend (re-)admits as Up.
@@ -297,7 +377,9 @@ impl Default for GatewayConfig {
             backends: Vec::new(),
             vnodes: 64,
             probe_interval: Duration::from_millis(500),
+            probe_connect_timeout: Duration::from_millis(250),
             probe_timeout: Duration::from_millis(500),
+            probe_jitter: Duration::from_millis(25),
             fail_after: 3,
             rise_after: 2,
             inflight_cap: 64,
@@ -345,11 +427,24 @@ impl GatewayConfig {
                             .max(1),
                     )
                 }
+                "probe_connect_timeout_ms" => {
+                    self.probe_connect_timeout = Duration::from_millis(
+                        val.as_u64()
+                            .ok_or_else(|| anyhow!("'{key}' must be an integer"))?
+                            .max(1),
+                    )
+                }
                 "probe_timeout_ms" => {
                     self.probe_timeout = Duration::from_millis(
                         val.as_u64()
                             .ok_or_else(|| anyhow!("'{key}' must be an integer"))?
                             .max(1),
+                    )
+                }
+                "probe_jitter_ms" => {
+                    self.probe_jitter = Duration::from_millis(
+                        val.as_u64()
+                            .ok_or_else(|| anyhow!("'{key}' must be an integer (0 = no jitter)"))?,
                     )
                 }
                 "fail_after" => self.fail_after = req_usize(key, val)?.max(1) as u32,
@@ -391,8 +486,15 @@ impl GatewayConfig {
                 "--probe-interval-ms" => {
                     self.probe_interval = Duration::from_millis(take()?.parse::<u64>()?.max(1))
                 }
+                "--probe-connect-timeout-ms" => {
+                    self.probe_connect_timeout =
+                        Duration::from_millis(take()?.parse::<u64>()?.max(1))
+                }
                 "--probe-timeout-ms" => {
                     self.probe_timeout = Duration::from_millis(take()?.parse::<u64>()?.max(1))
+                }
+                "--probe-jitter-ms" => {
+                    self.probe_jitter = Duration::from_millis(take()?.parse::<u64>()?)
                 }
                 "--fail-after" => self.fail_after = take()?.parse::<u32>()?.max(1),
                 "--rise-after" => self.rise_after = take()?.parse::<u32>()?.max(1),
@@ -456,7 +558,11 @@ mod tests {
         assert_eq!(s.queue_cap, 0, "default admission is unbounded");
         assert!(s.deadline.is_none(), "no default deadline");
         assert!(s.adaptive, "adaptive window is the default");
+        assert!(s.drain_timeout.is_none(), "default drain waits forever");
         assert!(c.verify_sha);
+        assert!(c.chaos.is_none(), "chaos is strictly opt-in");
+        assert_eq!(c.breaker.fail_threshold, 5);
+        assert_eq!(c.breaker.cooldown, Duration::from_secs(5));
     }
 
     #[test]
@@ -509,6 +615,63 @@ mod tests {
         // deadline_ms 0 = no deadline.
         c.apply_json(&json::parse(r#"{"scheduler":{"deadline_ms":0}}"#).unwrap()).unwrap();
         assert!(c.scheduler.unwrap().deadline.is_none());
+    }
+
+    #[test]
+    fn chaos_breaker_and_drain_knobs_parse() {
+        let mut c = ServeConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"chaos":"exec.device=0.2:panic,sched.flush=0.1:error","chaos_seed":7,
+                    "breaker":{"fail_threshold":3,"cooldown_ms":250},
+                    "scheduler":{"drain_timeout_ms":1500}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            c.chaos.as_deref(),
+            Some("exec.device=0.2:panic,sched.flush=0.1:error")
+        );
+        assert_eq!(c.chaos_seed, 7);
+        assert_eq!(c.breaker.fail_threshold, 3);
+        assert_eq!(c.breaker.cooldown, Duration::from_millis(250));
+        assert_eq!(
+            c.scheduler.unwrap().drain_timeout,
+            Some(Duration::from_millis(1500))
+        );
+        // chaos: null switches it back off; drain_timeout_ms 0 = wait forever.
+        c.apply_json(
+            &json::parse(r#"{"chaos":null,"scheduler":{"drain_timeout_ms":0}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(c.chaos.is_none());
+        assert!(c.scheduler.unwrap().drain_timeout.is_none());
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"breaker":{"fail_threshold":0}}"#).unwrap())
+            .is_err());
+
+        let mut c = ServeConfig::default();
+        c.apply_cli(
+            &["--chaos=exec.submit=1:error", "--chaos-seed", "99",
+              "--breaker-fail-threshold=2", "--breaker-cooldown-ms", "100",
+              "--drain-timeout-ms=2000"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert_eq!(c.chaos.as_deref(), Some("exec.submit=1:error"));
+        assert_eq!(c.chaos_seed, 99);
+        assert_eq!(c.breaker.fail_threshold, 2);
+        assert_eq!(c.breaker.cooldown, Duration::from_millis(100));
+        assert_eq!(
+            c.scheduler.unwrap().drain_timeout,
+            Some(Duration::from_millis(2000))
+        );
+        assert!(ServeConfig::default()
+            .apply_cli(&["--breaker-cooldown-ms=0".to_string()])
+            .is_err());
     }
 
     #[test]
@@ -609,6 +772,9 @@ mod tests {
         assert_eq!(s.max_delay, Duration::from_micros(2000));
         assert_eq!(s.queue_cap, 1024);
         assert!(s.adaptive);
+        assert_eq!(s.drain_timeout, Some(Duration::from_millis(5000)));
+        assert!(c.chaos.is_none(), "example ships with chaos off");
+        assert_eq!(c.breaker.fail_threshold, 5);
         assert_eq!(
             c.registry.audit_log.as_deref(),
             Some(std::path::Path::new("flexserve_audit.jsonl"))
@@ -623,6 +789,7 @@ mod tests {
             &json::parse(
                 r#"{"addr":"0.0.0.0:8081","backends":["a=127.0.0.1:9001","127.0.0.1:9002"],
                     "vnodes":128,"probe_interval_ms":250,"probe_timeout_ms":100,
+                    "probe_connect_timeout_ms":50,"probe_jitter_ms":0,
                     "fail_after":2,"rise_after":1,"inflight_cap":32,"retry_budget":3}"#,
             )
             .unwrap(),
@@ -638,6 +805,9 @@ mod tests {
         );
         assert_eq!(g.vnodes, 128);
         assert_eq!(g.probe_interval, Duration::from_millis(250));
+        assert_eq!(g.probe_timeout, Duration::from_millis(100));
+        assert_eq!(g.probe_connect_timeout, Duration::from_millis(50));
+        assert_eq!(g.probe_jitter, Duration::ZERO);
         assert_eq!(g.fail_after, 2);
         assert_eq!(g.rise_after, 1);
         assert_eq!(g.inflight_cap, 32);
@@ -649,7 +819,8 @@ mod tests {
         let mut g = GatewayConfig::default();
         g.apply_cli(
             &["--addr=127.0.0.1:0", "--backends", "b1=127.0.0.1:9001,b2=127.0.0.1:9002",
-              "--retry-budget=2", "--probe-interval-ms", "100"]
+              "--retry-budget=2", "--probe-interval-ms", "100",
+              "--probe-connect-timeout-ms=40", "--probe-jitter-ms=10"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect::<Vec<_>>(),
@@ -659,6 +830,8 @@ mod tests {
         assert_eq!(g.backends[0].0, "b1");
         assert_eq!(g.retry_budget, 2);
         assert_eq!(g.probe_interval, Duration::from_millis(100));
+        assert_eq!(g.probe_connect_timeout, Duration::from_millis(40));
+        assert_eq!(g.probe_jitter, Duration::from_millis(10));
         assert!(GatewayConfig::default()
             .apply_cli(&["--bogus".to_string()])
             .is_err());

@@ -40,6 +40,7 @@
 //! ([`super::infer`]), which also backs the `/v2` Open Inference Protocol
 //! surface ([`super::v2`]) registered alongside these routes.
 
+use super::breaker::{BreakerConfig, Breakers};
 use super::ensemble::Ensemble;
 use super::infer;
 use super::metrics::Metrics;
@@ -49,8 +50,8 @@ use crate::http::router::{Params, RequestInfo, RouteHandler, RouterObserver};
 use crate::http::{Request, Response, Router};
 use crate::imagepipe::Normalizer;
 use crate::json::{self, Value};
-use crate::registry::{Registry, RegistryConfig, Store};
-use crate::runtime::Manifest;
+use crate::registry::Registry;
+use crate::runtime::{slot_name, Manifest};
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::Arc;
@@ -67,6 +68,10 @@ pub struct ServerState {
     pub manifest: Arc<Manifest>,
     pub normalizer: Normalizer,
     pub metrics: Arc<Metrics>,
+    /// Per-(model, bucket) circuit breakers gating dispatch — see
+    /// [`super::breaker`]. Open paths answer a fast typed
+    /// `503 exec.circuit_open` instead of queueing doomed work.
+    pub breakers: Arc<Breakers>,
     pub started: std::time::Instant,
     /// Serializes control-plane lifecycle operations (load/unload/set/
     /// rollout): each is a check-then-act over the pool's loaded set, so
@@ -84,23 +89,24 @@ pub struct ServerState {
 }
 
 impl ServerState {
+    /// The registry and metrics are created by the caller (serve() needs
+    /// both BEFORE the device pool exists, so crash recovery can replay
+    /// rollout state and pick boot slots) — everything records into the
+    /// one metrics registry the handlers expose.
     pub fn new(
         ensemble: Ensemble,
         sched_config: Option<SchedConfig>,
-        store: Store,
-        registry_config: RegistryConfig,
+        registry: Arc<Registry>,
+        metrics: Arc<Metrics>,
+        breaker_config: BreakerConfig,
     ) -> Result<Arc<Self>> {
         let manifest = Arc::clone(ensemble.manifest());
         let normalizer = Normalizer::new(manifest.norm_mean, manifest.norm_std);
-        // The scheduler and the registry record into the same metrics
-        // registry the handlers use, so everything lives in every
-        // exposition.
-        let metrics = Arc::new(Metrics::new());
         let scheduler = match sched_config {
             Some(cfg) => Some(Scheduler::spawn(ensemble.clone(), cfg, Arc::clone(&metrics))?),
             None => None,
         };
-        let registry = Arc::new(Registry::new(store, registry_config, Arc::clone(&metrics))?);
+        let breakers = Arc::new(Breakers::new(breaker_config, Arc::clone(&metrics)));
         Ok(Arc::new(ServerState {
             ensemble,
             scheduler,
@@ -108,6 +114,7 @@ impl ServerState {
             manifest,
             normalizer,
             metrics,
+            breakers,
             started: std::time::Instant::now(),
             lifecycle: std::sync::Mutex::new(()),
             shadow_pool: std::sync::OnceLock::new(),
@@ -544,21 +551,43 @@ fn model_json(s: &ServerState, name: &str) -> Option<Value> {
             ]))
         })
         .collect();
-    Some(json::obj([
-        ("name", Value::from(name)),
-        ("status", Value::from(s.model_status(name))),
-        ("version", Value::from(active_v as u64)),
-        ("param_count", Value::from(m.param_count)),
-        ("test_acc", Value::from(m.test_acc)),
-        ("params_sha256", Value::from(m.params_sha256.as_str())),
-        ("artifact_bytes", Value::from(m.artifact_bytes())),
+    let mut doc = vec![
+        ("name".to_string(), Value::from(name)),
+        ("status".to_string(), Value::from(s.model_status(name))),
+        ("version".to_string(), Value::from(active_v as u64)),
+        ("param_count".to_string(), Value::from(m.param_count)),
+        ("test_acc".to_string(), Value::from(m.test_acc)),
         (
-            "buckets",
+            "params_sha256".to_string(),
+            Value::from(m.params_sha256.as_str()),
+        ),
+        ("artifact_bytes".to_string(), Value::from(m.artifact_bytes())),
+        (
+            "buckets".to_string(),
             Value::Arr(m.buckets.iter().map(|a| Value::from(a.bucket)).collect()),
         ),
-        ("versions", Value::Arr(versions)),
-        ("rollout", s.registry.rollout_doc(name).unwrap_or(Value::Null)),
-    ]))
+        ("versions".to_string(), Value::Arr(versions)),
+        (
+            "rollout".to_string(),
+            s.registry.rollout_doc(name).unwrap_or(Value::Null),
+        ),
+    ];
+    // Failure containment surfacing: any non-quiet circuit breaker on one
+    // of this model's (slot, bucket) execution paths. Healthy models skip
+    // the member entirely, keeping the legacy document byte-stable.
+    let tripped = s.breakers.tripped_for_model(name);
+    if !tripped.is_empty() {
+        doc.push((
+            "breakers".to_string(),
+            Value::Obj(
+                tripped
+                    .into_iter()
+                    .map(|(key, state)| (key, Value::from(state)))
+                    .collect(),
+            ),
+        ));
+    }
+    Some(Value::Obj(doc))
 }
 
 /// Membership snapshot for `GET /v1/ensemble` and lifecycle responses.
@@ -684,6 +713,15 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
             ("exec_us".to_string(), Value::from(m.exec_micros)),
             ("queue_us".to_string(), Value::from(m.queue_micros)),
             ("stages".to_string(), done.stages.to_json()),
+            // The circuit-breaker state of the (slot, bucket) path that
+            // served this request — "closed" when never tripped.
+            (
+                "breaker".to_string(),
+                Value::from(s.breakers.state_of(&Breakers::key(
+                    &slot_name(name, m.version),
+                    infer::breaker_bucket(&s.manifest, &slot_name(name, m.version), done.output.batch),
+                ))),
+            ),
         ];
         // The fast path rides the shared scheduler now, so concurrent
         // same-model requests coalesce too — surface the evidence.

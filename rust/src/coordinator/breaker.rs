@@ -1,0 +1,311 @@
+//! Per-model-bucket circuit breakers: fail fast instead of queueing
+//! doomed work behind a broken (model, bucket) execution path.
+//!
+//! Classic three-state machine, keyed by `model:bN` (the device bucket a
+//! request's batch rounds up to — a poisoned bucket executable must not
+//! open the breaker for its siblings):
+//!
+//! ```text
+//!            N consecutive failures
+//!   CLOSED ───────────────────────────▶ OPEN ── fast 503 exec.circuit_open
+//!      ▲                                 │        (+ Retry-After)
+//!      │ probe succeeds                  │ cooldown elapses
+//!      │                                 ▼
+//!      └───────────────────────────── HALF-OPEN ── admits ONE probe;
+//!                  probe fails ──▶ OPEN            everyone else still 503
+//! ```
+//!
+//! [`Breakers::check`] gates dispatch (the single half-open probe slot is
+//! claimed here); [`Breakers::record`] feeds outcomes back using the same
+//! attribution rules as registry guardrails (`server.*` rejections are
+//! not execution evidence). Transitions land on `breaker_open_total` /
+//! `breaker_half_open_total` / `breaker_close_total` plus a per-key state
+//! gauge (0 = closed, 1 = open, 2 = half-open).
+
+use super::metrics::Metrics;
+use super::wire::ApiError;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip CLOSED → OPEN.
+    pub fail_threshold: u32,
+    /// How long OPEN answers fast before admitting a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            fail_threshold: 5,
+            cooldown: Duration::from_secs(5),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum State {
+    Closed { failures: u32 },
+    Open { since: Instant },
+    HalfOpen { probe: Option<Instant> },
+}
+
+impl State {
+    fn as_str(&self) -> &'static str {
+        match self {
+            State::Closed { .. } => "closed",
+            State::Open { .. } => "open",
+            State::HalfOpen { .. } => "half_open",
+        }
+    }
+
+    fn gauge(&self) -> u64 {
+        match self {
+            State::Closed { .. } => 0,
+            State::Open { .. } => 1,
+            State::HalfOpen { .. } => 2,
+        }
+    }
+}
+
+pub struct Breakers {
+    cfg: BreakerConfig,
+    states: Mutex<HashMap<String, State>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Breakers {
+    pub fn new(cfg: BreakerConfig, metrics: Arc<Metrics>) -> Breakers {
+        Breakers {
+            cfg,
+            states: Mutex::new(HashMap::new()),
+            metrics,
+        }
+    }
+
+    pub fn config(&self) -> BreakerConfig {
+        self.cfg
+    }
+
+    /// Breaker key for one (model, device bucket) execution path.
+    pub fn key(model: &str, bucket: usize) -> String {
+        format!("{model}:b{bucket}")
+    }
+
+    /// Admission gate: `Ok` lets the request through (possibly as THE
+    /// half-open probe); `Err` is the fast typed rejection.
+    pub fn check(&self, key: &str) -> Result<(), ApiError> {
+        let mut states = self.states.lock().unwrap();
+        let Some(state) = states.get_mut(key) else {
+            return Ok(()); // unknown key: implicitly closed, don't allocate
+        };
+        match *state {
+            State::Closed { .. } => Ok(()),
+            State::Open { since } => {
+                let elapsed = since.elapsed();
+                if elapsed >= self.cfg.cooldown {
+                    *state = State::HalfOpen {
+                        probe: Some(Instant::now()),
+                    };
+                    self.note_transition(key, state, "breaker_half_open_total");
+                    Ok(()) // this caller is the probe
+                } else {
+                    let remaining = self.cfg.cooldown - elapsed;
+                    Err(ApiError::circuit_open(key, remaining.as_secs().max(1)))
+                }
+            }
+            State::HalfOpen { probe } => match probe {
+                // A lost probe (caller died without recording) must not
+                // wedge the breaker half-open forever: after a cooldown's
+                // worth of silence the slot re-opens.
+                Some(started) if started.elapsed() < self.cfg.cooldown => {
+                    Err(ApiError::circuit_open(key, 1))
+                }
+                _ => {
+                    *state = State::HalfOpen {
+                        probe: Some(Instant::now()),
+                    };
+                    Ok(())
+                }
+            },
+        }
+    }
+
+    /// Feed one execution outcome back into the key's state machine.
+    pub fn record(&self, key: &str, ok: bool) {
+        let mut states = self.states.lock().unwrap();
+        let state = states
+            .entry(key.to_string())
+            .or_insert(State::Closed { failures: 0 });
+        match *state {
+            State::Closed { failures } => {
+                if ok {
+                    *state = State::Closed { failures: 0 };
+                } else if failures + 1 >= self.cfg.fail_threshold {
+                    *state = State::Open {
+                        since: Instant::now(),
+                    };
+                    self.note_transition(key, state, "breaker_open_total");
+                } else {
+                    *state = State::Closed {
+                        failures: failures + 1,
+                    };
+                }
+            }
+            State::HalfOpen { .. } => {
+                if ok {
+                    *state = State::Closed { failures: 0 };
+                    self.note_transition(key, state, "breaker_close_total");
+                } else {
+                    *state = State::Open {
+                        since: Instant::now(),
+                    };
+                    self.note_transition(key, state, "breaker_open_total");
+                }
+            }
+            // Late outcomes from work admitted before the trip carry no
+            // new evidence about the (already open) path.
+            State::Open { .. } => {}
+        }
+    }
+
+    fn note_transition(&self, key: &str, state: &State, counter: &str) {
+        self.metrics.inc(counter);
+        let safe: String = key
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        self.metrics
+            .set_gauge(&format!("breaker_state_{safe}"), state.gauge());
+    }
+
+    /// Current state name for one key ("closed" when never tripped).
+    pub fn state_of(&self, key: &str) -> &'static str {
+        self.states
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or("closed")
+    }
+
+    /// All non-quiet keys for `model` (the `/v1/models` surfacing: quiet
+    /// models stay quiet). Matches both the bare slot (`model:bN`) and
+    /// versioned slots (`model@V:bN`); sorted.
+    pub fn tripped_for_model(&self, model: &str) -> Vec<(String, &'static str)> {
+        let bare = format!("{model}:b");
+        let slotted = format!("{model}@");
+        let mut out: Vec<(String, &'static str)> = self
+            .states
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, s)| {
+                (k.starts_with(&bare) || k.starts_with(&slotted))
+                    && !matches!(s, State::Closed { failures: 0 })
+            })
+            .map(|(k, s)| (k.clone(), s.as_str()))
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn breakers(threshold: u32, cooldown_ms: u64) -> Breakers {
+        Breakers::new(
+            BreakerConfig {
+                fail_threshold: threshold,
+                cooldown: Duration::from_millis(cooldown_ms),
+            },
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    #[test]
+    fn key_is_model_and_bucket() {
+        assert_eq!(Breakers::key("cnn", 8), "cnn:b8");
+        assert_eq!(Breakers::key("cnn@2", 8), "cnn@2:b8");
+    }
+
+    #[test]
+    fn opens_after_consecutive_failures_only() {
+        let b = breakers(3, 60_000);
+        // Interleaved success resets the streak.
+        b.record("m:b4", false);
+        b.record("m:b4", false);
+        b.record("m:b4", true);
+        b.record("m:b4", false);
+        b.record("m:b4", false);
+        assert_eq!(b.state_of("m:b4"), "closed");
+        assert!(b.check("m:b4").is_ok());
+        b.record("m:b4", false);
+        assert_eq!(b.state_of("m:b4"), "open");
+        let err = b.check("m:b4").unwrap_err();
+        assert_eq!(err.status, 503);
+        assert_eq!(err.code, "exec.circuit_open");
+        assert!(err.retry_after.unwrap_or(0) >= 1);
+        // A sibling bucket of the same model is unaffected.
+        assert!(b.check("m:b8").is_ok());
+        assert_eq!(b.metrics.counter("breaker_open_total"), 1);
+    }
+
+    #[test]
+    fn half_open_admits_one_probe_then_recovers_or_retrips() {
+        let b = breakers(1, 20);
+        b.record("m:b4", false);
+        assert_eq!(b.state_of("m:b4"), "open");
+        thread::sleep(Duration::from_millis(25));
+        // Cooldown elapsed: first check is the probe, second is rejected.
+        assert!(b.check("m:b4").is_ok());
+        assert_eq!(b.state_of("m:b4"), "half_open");
+        assert!(b.check("m:b4").is_err());
+        // Probe succeeds → closed; full recovery.
+        b.record("m:b4", true);
+        assert_eq!(b.state_of("m:b4"), "closed");
+        assert!(b.check("m:b4").is_ok());
+        assert_eq!(b.metrics.counter("breaker_half_open_total"), 1);
+        assert_eq!(b.metrics.counter("breaker_close_total"), 1);
+
+        // And the retrip path: open → half-open → failed probe → open.
+        b.record("m:b4", false);
+        thread::sleep(Duration::from_millis(25));
+        assert!(b.check("m:b4").is_ok());
+        b.record("m:b4", false);
+        assert_eq!(b.state_of("m:b4"), "open");
+    }
+
+    #[test]
+    fn lost_probe_does_not_wedge_half_open() {
+        let b = breakers(1, 10);
+        b.record("m:b4", false);
+        thread::sleep(Duration::from_millis(15));
+        assert!(b.check("m:b4").is_ok()); // probe admitted, never recorded
+        assert!(b.check("m:b4").is_err());
+        thread::sleep(Duration::from_millis(15));
+        // The stale probe slot expires; a new probe is admitted.
+        assert!(b.check("m:b4").is_ok());
+    }
+
+    #[test]
+    fn tripped_for_model_lists_only_non_quiet_buckets() {
+        let b = breakers(1, 60_000);
+        b.record("m:b8", false);
+        b.record("m:b4", true);
+        b.record("other:b4", false);
+        assert_eq!(b.tripped_for_model("m"), vec![("m:b8".into(), "open")]);
+        assert!(b.tripped_for_model("quiet").is_empty());
+        // Versioned slots of the model surface under the bare name too.
+        b.record("m@2:b4", false);
+        assert_eq!(
+            b.tripped_for_model("m"),
+            vec![("m:b8".into(), "open"), ("m@2:b4".into(), "open")]
+        );
+    }
+}

@@ -17,11 +17,12 @@
 //! (paper wire format in `wire.rs`/`api.rs`, OIP JSON in `v2.rs`).
 
 use super::api::ServerState;
+use super::breaker::Breakers;
 use super::ensemble::{EnsembleOutput, ModelOutput};
 use super::policy::Policy;
 use super::sched::{BatchStats, TargetKey};
 use super::wire::{ApiError, StageMicros};
-use crate::runtime::{DType, Manifest, TensorView};
+use crate::runtime::{slot_name, DType, Manifest, TensorView};
 use crate::util::Stopwatch;
 use std::time::Duration;
 
@@ -206,6 +207,16 @@ pub fn execute(
         }
     };
 
+    // Circuit breakers: consult every routed (slot, bucket) execution
+    // path BEFORE any queueing — an open breaker answers a fast typed
+    // `503 exec.circuit_open` (+ Retry-After) instead of letting doomed
+    // work coalesce into a batch that will fail anyway.
+    for (model, version) in &routed {
+        let slot = slot_name(model, *version);
+        s.breakers
+            .check(&Breakers::key(&slot, breaker_bucket(&s.manifest, &slot, batch)))?;
+    }
+
     // Shadow mirrors reuse the request buffer (refcount bump, no copy).
     let mirror_data = (!shadows.is_empty()).then(|| data.clone());
 
@@ -269,6 +280,13 @@ pub fn execute(
         if ok || routed.len() == 1 {
             for (model, version) in &routed {
                 s.registry.record_outcome(model, *version, ok, dispatch_us);
+                // The breakers share the guardrails' attribution rules —
+                // an outcome that can't blame one model feeds no breaker.
+                let slot = slot_name(model, *version);
+                s.breakers.record(
+                    &Breakers::key(&slot, breaker_bucket(&s.manifest, &slot, batch)),
+                    ok,
+                );
             }
         }
     }
@@ -373,6 +391,20 @@ fn spawn_shadow_mirrors(
             // thread per request — shadow traffic scales with load).
             None => s.shadow_pool().execute(job),
         }
+    }
+}
+
+/// The device bucket a request of `batch` rows rounds up to for `slot` —
+/// the bucket dimension of the breaker key (a poisoned b8 executable must
+/// not trip the breaker for b1 traffic). Falls back to the raw batch for
+/// unknown slots (the dispatch path will reject those with its own code).
+pub(crate) fn breaker_bucket(manifest: &Manifest, slot: &str, batch: usize) -> usize {
+    match manifest.model(slot) {
+        Some(m) => m
+            .bucket_for(batch)
+            .map(|a| a.bucket)
+            .unwrap_or_else(|| m.max_bucket()),
+        None => batch,
     }
 }
 

@@ -20,6 +20,7 @@
 //!   examples
 
 pub mod api;
+pub mod breaker;
 pub mod ensemble;
 pub mod infer;
 pub mod metrics;
@@ -29,6 +30,7 @@ pub mod v2;
 pub mod wire;
 
 pub use api::{build_router, ServerState};
+pub use breaker::{BreakerConfig, Breakers};
 pub use ensemble::{Ensemble, EnsembleOutput, ModelOutput};
 pub use infer::{InferParams, InferenceRequest, InferenceResponse, NamedTensor};
 pub use metrics::{Metrics, STAGE_METRICS};
@@ -38,20 +40,31 @@ pub use wire::{ApiError, PredictRequest, StageMicros};
 
 use crate::config::ServeConfig;
 use crate::http::{Server, ServerHandle};
-use crate::registry::Store;
+use crate::registry::{Registry, Store};
 use crate::runtime::executor::ExecutorOptions;
-use crate::runtime::ExecutorPool;
+use crate::runtime::{split_slot, ExecutorPool, PoolEvent, SupervisorOptions};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
-/// Bootstrap the full FlexServe stack from a config: version store →
-/// executor pool → ensemble → (optional) scheduler → registry → HTTP
-/// server.
+/// Bootstrap the full FlexServe stack from a config: chaos plane →
+/// version store → registry (with crash recovery) → executor pool (with
+/// supervision) → ensemble → (optional) scheduler → HTTP server.
 ///
 /// Returns the HTTP handle and the shared state (metrics etc.). The device
 /// pool lives inside the returned state; dropping both shuts everything
 /// down.
 pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
+    // Fault injection installs before anything that hosts an injection
+    // site spawns, and its counters point at the same metrics registry
+    // every handler exposes.
+    let metrics = Arc::new(Metrics::new());
+    if let Some(spec) = &config.chaos {
+        let plane = crate::chaos::ChaosPlane::parse(spec, config.chaos_seed)
+            .context("parsing chaos spec")?;
+        crate::chaos::install(plane).context("installing chaos plane")?;
+    }
+    crate::chaos::set_sink(Arc::clone(&metrics));
+
     // The store discovers every model *version* (the flat layout loads as
     // version 1) and merges them into one pool-facing manifest of slots.
     let store = Store::discover(&config.artifacts).context("discovering artifact store")?;
@@ -69,9 +82,18 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
         // rollout later loads it.
         manifest.verify_all().context("artifact provenance check")?;
     }
-    // Boot compiles the version-1 slots only; later versions compile on
-    // demand through `POST /v1/models/:name/load?version=N`.
-    let boot_models: Vec<String> = store
+    // The registry comes up BEFORE the pool: its crash recovery replays
+    // the audit trail into rollout state, which decides what must compile
+    // at boot (a restart mid-canary resumes serving both versions).
+    let registry = Arc::new(
+        Registry::new(store, config.registry.clone(), Arc::clone(&metrics))
+            .context("building model registry")?,
+    );
+    // Boot compiles the version-1 slots plus whatever recovered rollouts
+    // still serve; other versions compile on demand through
+    // `POST /v1/models/:name/load?version=N`.
+    let mut boot_models: Vec<String> = registry
+        .store()
         .v1_slots()
         .into_iter()
         .filter(|m| match &config.models {
@@ -79,6 +101,15 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
             None => true,
         })
         .collect();
+    for slot in registry.rollout_slots() {
+        let keep = match &config.models {
+            Some(want) => want.iter().any(|w| w == split_slot(&slot).0),
+            None => true,
+        };
+        if keep && !boot_models.contains(&slot) {
+            boot_models.push(slot);
+        }
+    }
     let pool = Arc::new(
         ExecutorPool::spawn(
             Arc::clone(&manifest),
@@ -96,10 +127,34 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
         )
         .context("spawning device executors")?,
     );
+    // Executor supervision: a crashed device worker is detected, counted,
+    // and respawned with backoff; the pool's dispatch skips it meanwhile.
+    {
+        let m = Arc::clone(&metrics);
+        pool.start_supervisor(SupervisorOptions::default(), move |ev| {
+            m.inc(match ev {
+                PoolEvent::Crash => "exec_crashes_total",
+                PoolEvent::Respawn => "exec_respawns_total",
+                PoolEvent::RespawnFailed => "exec_respawn_failures_total",
+            });
+        });
+    }
+    // Recovered rollouts reconcile against what actually compiled: if a
+    // replayed mode points at a version that failed to load, repin to a
+    // resident one rather than serving 409s (conservative recovery).
+    for model in registry.model_names() {
+        registry.repin_if_unserveable(&model, &pool.loaded_versions(&model), "boot");
+    }
     // The ensemble's active set starts as everything the pool loaded and
     // evolves at runtime via the `/v1` control plane.
     let ensemble = Ensemble::new(pool, Arc::clone(&manifest));
-    let state = ServerState::new(ensemble, config.scheduler, store, config.registry.clone())?;
+    let state = ServerState::new(
+        ensemble,
+        config.scheduler,
+        registry,
+        metrics,
+        config.breaker,
+    )?;
     let mut router = build_router(Arc::clone(&state));
     if config.access_log {
         router.observe(Arc::new(crate::http::router::AccessLog));

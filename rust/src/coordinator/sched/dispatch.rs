@@ -1,5 +1,5 @@
-//! Flush dispatch: turn one planned [`Flush`] into one ensemble forward
-//! and fan the results (or the typed failure) back to every requester.
+//! Flush dispatch: turn one planned [`Flush`] into ensemble forwards and
+//! fan the results (or the typed failure) back to every requester.
 //!
 //! Target resolution happens here, at flush time: the `Ensemble` key
 //! re-snapshots the live active set (control-plane changes apply between
@@ -11,21 +11,35 @@
 //! picks the executor with the fewest in-flight rows per model
 //! (`ExecutorPool::least_loaded`), so one slow worker no longer backs up
 //! every Nth batch the way blind round-robin did.
+//!
+//! **Poison-batch isolation**: when a *coalesced* batch fails with an
+//! input-shaped error (not a typed `ApiError` rejection and not a
+//! `WorkerCrashed` — those are systemic and retrying would be wrong or
+//! wasteful), the flush retries by bisection down to [`MAX_BISECT_DEPTH`]
+//! so only the offending request(s) fail with `422 exec.poison_input`
+//! while innocent co-batched requests still succeed. The forward runs
+//! under `catch_unwind`, so a panicking batch (real or injected via the
+//! `sched.flush` chaos site) degrades to a bisectable error instead of
+//! killing the flush worker and hanging every reply channel.
 
-use super::super::ensemble::Ensemble;
+use super::super::ensemble::{Ensemble, EnsembleOutput};
+use super::super::metrics::Metrics;
+use super::super::wire::ApiError;
 use super::queue::{slice_output, Dequeued, Flush, TargetKey};
 use super::BatchStats;
-use crate::runtime::TensorView;
-use anyhow::anyhow;
+use crate::chaos;
+use crate::runtime::{TensorView, WorkerCrashed};
+use anyhow::{anyhow, bail, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Bisection retry budget: a failed batch splits at most this many times
+/// (2^4 = 16 leaves fully isolates any flush of ≤ 16 requests; deeper
+/// groups fail together, still typed).
+pub const MAX_BISECT_DEPTH: usize = 4;
 
 /// Execute one flush against its target and deliver every reply. Never
 /// panics on send failures (a requester may have given up).
-pub fn flush(ensemble: &Ensemble, key: &TargetKey, flush: Flush) {
-    let Flush { mut items, rows } = flush;
-    if items.is_empty() {
-        return;
-    }
-
+pub fn flush(ensemble: &Ensemble, key: &TargetKey, flush: Flush, metrics: &Metrics) {
     // Resolve the target set NOW (not at enqueue): the shared ensemble
     // tracks membership changes, fixed keys validate against the current
     // loaded set.
@@ -36,17 +50,50 @@ pub fn flush(ensemble: &Ensemble, key: &TargetKey, flush: Flush) {
     };
     let target = match target {
         Ok(t) => t,
-        Err(e) => return fail_all(items, &e),
+        Err(e) => return fail_all(flush.items, &e),
     };
+    let forward = move |input: TensorView, rows: usize| -> Result<EnsembleOutput> {
+        if let Some(kind) = chaos::decide(chaos::SCHED_FLUSH) {
+            match kind {
+                chaos::FaultKind::Panic => panic!("chaos: injected panic at sched.flush"),
+                _ => bail!("chaos: injected failure at sched.flush"),
+            }
+        }
+        target.forward(input, rows)
+    };
+    flush_with(flush, &forward, ensemble.manifest().sample_elems(), metrics);
+}
 
+/// The forward-agnostic flush body (tests drive it with fake forwards).
+/// `elems` is the per-row element count used to gather coalesced buffers.
+pub fn flush_with(
+    flush: Flush,
+    forward: &dyn Fn(TensorView, usize) -> Result<EnsembleOutput>,
+    elems: usize,
+    metrics: &Metrics,
+) {
+    let Flush { items, rows } = flush;
+    if items.is_empty() {
+        return;
+    }
+    run_batch(items, rows, forward, elems, metrics, 0);
+}
+
+fn run_batch(
+    mut items: Vec<Dequeued>,
+    rows: usize,
+    forward: &dyn Fn(TensorView, usize) -> Result<EnsembleOutput>,
+    elems: usize,
+    metrics: &Metrics,
+    depth: usize,
+) {
+    let n_req = items.len();
     // A lone request (the common uncoalesced case) rides its own buffer
     // straight through — no gather copy in, no slice copy out. Only
     // genuinely coalesced batches pay one gather into a combined buffer.
-    let n_req = items.len();
     let input: TensorView = if n_req == 1 {
         items[0].data.clone() // refcount bump, not a float copy
     } else {
-        let elems = ensemble.manifest().sample_elems();
         let mut combined = Vec::with_capacity(rows * elems);
         for p in &items {
             combined.extend_from_slice(&p.data);
@@ -54,31 +101,95 @@ pub fn flush(ensemble: &Ensemble, key: &TargetKey, flush: Flush) {
         TensorView::from(combined)
     };
 
-    match target.forward(input, rows) {
-        Ok(output) => {
-            if n_req == 1 {
+    match guarded_forward(forward, input, rows) {
+        Ok(output) => deliver(items, rows, output),
+        Err(e) => {
+            // Typed rejections (queue/validation/breaker) and worker
+            // crashes are systemic: every co-batched request would fail
+            // again, so fan the original error out unchanged.
+            let systemic = e.downcast_ref::<ApiError>().is_some()
+                || e.downcast_ref::<WorkerCrashed>().is_some();
+            if systemic {
+                fail_all(items, &e);
+            } else if n_req == 1 {
+                // Isolated to one request: its input poisons the batch.
+                metrics.inc("sched_poison_requests_total");
                 let p = items.pop().expect("n_req == 1");
-                let stats = BatchStats {
-                    coalesced_rows: rows,
-                    coalesced_requests: 1,
-                    wait_micros: p.wait_us,
-                };
-                let _ = p.reply.send(Ok((output, stats)));
-                return;
-            }
-            let mut offset = 0;
-            for p in items {
-                let slice = slice_output(&output, offset, p.batch);
-                offset += p.batch;
-                let stats = BatchStats {
-                    coalesced_rows: rows,
-                    coalesced_requests: n_req,
-                    wait_micros: p.wait_us,
-                };
-                let _ = p.reply.send(Ok((slice, stats)));
+                let _ = p
+                    .reply
+                    .send(Err(anyhow::Error::new(ApiError::poison_input(format!(
+                        "{e:#}"
+                    )))));
+            } else if depth >= MAX_BISECT_DEPTH {
+                // Bisection budget exhausted: the survivors fail together,
+                // still typed — never an untyped 500.
+                metrics.add("sched_poison_requests_total", n_req as u64);
+                let msg = format!("{e:#}");
+                for p in items {
+                    let _ = p.reply.send(Err(anyhow::Error::new(ApiError::poison_input(
+                        format!("{msg} (bisection depth exhausted)"),
+                    ))));
+                }
+            } else {
+                // Retry each half independently: innocents re-execute and
+                // succeed, the poison pins down toward its leaf.
+                metrics.inc("sched_bisect_flushes_total");
+                let right = items.split_off(n_req / 2);
+                let left = items;
+                let lrows = left.iter().map(|p| p.batch).sum();
+                let rrows = right.iter().map(|p| p.batch).sum();
+                run_batch(left, lrows, forward, elems, metrics, depth + 1);
+                run_batch(right, rrows, forward, elems, metrics, depth + 1);
             }
         }
-        Err(e) => fail_all(items, &e),
+    }
+}
+
+/// Forward under `catch_unwind`: a panicking batch becomes an error the
+/// bisection machinery can retry, not a dead flush worker.
+fn guarded_forward(
+    forward: &dyn Fn(TensorView, usize) -> Result<EnsembleOutput>,
+    input: TensorView,
+    rows: usize,
+) -> Result<EnsembleOutput> {
+    match catch_unwind(AssertUnwindSafe(|| forward(input, rows))) {
+        Ok(r) => r,
+        Err(panic) => {
+            let msg = if let Some(s) = panic.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = panic.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow!("flush panicked: {msg}"))
+        }
+    }
+}
+
+/// Fan one successful output back to its requesters.
+fn deliver(mut items: Vec<Dequeued>, rows: usize, output: EnsembleOutput) {
+    let n_req = items.len();
+    if n_req == 1 {
+        let p = items.pop().expect("n_req == 1");
+        let stats = BatchStats {
+            coalesced_rows: rows,
+            coalesced_requests: 1,
+            wait_micros: p.wait_us,
+        };
+        let _ = p.reply.send(Ok((output, stats)));
+        return;
+    }
+    let mut offset = 0;
+    for p in items {
+        let slice = slice_output(&output, offset, p.batch);
+        offset += p.batch;
+        let stats = BatchStats {
+            coalesced_rows: rows,
+            coalesced_requests: n_req,
+            wait_micros: p.wait_us,
+        };
+        let _ = p.reply.send(Ok((slice, stats)));
     }
 }
 
@@ -87,13 +198,184 @@ pub fn flush(ensemble: &Ensemble, key: &TargetKey, flush: Flush) {
 /// survive the fan-out so the HTTP layer can render their taxonomy code
 /// and status.
 fn fail_all(items: Vec<Dequeued>, e: &anyhow::Error) {
-    let api = e.downcast_ref::<super::super::wire::ApiError>().cloned();
+    let api = e.downcast_ref::<ApiError>().cloned();
+    let worker = e.downcast_ref::<WorkerCrashed>().cloned();
     let msg = format!("{e:#}");
     for p in items {
-        let err = match &api {
-            Some(api) => anyhow::Error::new(api.clone()),
-            None => anyhow!("{msg}"),
+        let err = match (&api, &worker) {
+            (Some(api), _) => anyhow::Error::new(api.clone()),
+            (None, Some(w)) => anyhow::Error::new(w.clone()),
+            (None, None) => anyhow!("{msg}"),
         };
         let _ = p.reply.send(Err(err));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::ensemble::ModelOutput;
+    use super::*;
+    use std::sync::mpsc;
+
+    // Per-row deterministic fake forward: output row j = 2 * input row j
+    // (1 elem/row, 1 class), failing whenever the batch contains the
+    // poison marker. Row-local outputs are exactly what makes bisection
+    // transparent to innocent requests.
+    const POISON: f32 = 666.0;
+
+    fn fake_forward(input: TensorView, rows: usize) -> Result<EnsembleOutput> {
+        if input.iter().any(|&v| v == POISON) {
+            bail!("device rejected NaN-adjacent input");
+        }
+        let logits: Vec<f32> = input.iter().map(|&v| v * 2.0).collect();
+        let preds = (0..rows).map(|_| (0usize, 1.0f32)).collect();
+        Ok(EnsembleOutput {
+            batch: rows,
+            per_model: vec![ModelOutput {
+                model: "m".into(),
+                version: 1,
+                logits,
+                preds,
+                buckets: vec![],
+                exec_micros: 0,
+                queue_micros: 0,
+            }],
+        })
+    }
+
+    fn request(v: f32) -> (Dequeued, mpsc::Receiver<super::super::queue::Reply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Dequeued {
+                data: TensorView::from(vec![v]),
+                batch: 1,
+                wait_us: 0,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn flush_of(items: Vec<Dequeued>) -> Flush {
+        let rows = items.iter().map(|p| p.batch).sum();
+        Flush { items, rows }
+    }
+
+    #[test]
+    fn poison_differential_innocents_match_uninjected_run() {
+        let metrics = Metrics::new();
+        let values = [1.0f32, 2.0, POISON, 4.0];
+
+        // Injected run: 4 coalesced requests, one poisoned.
+        let (items, receivers): (Vec<_>, Vec<_>) = values.iter().map(|&v| request(v)).unzip();
+        flush_with(flush_of(items), &fake_forward, 1, &metrics);
+        let replies: Vec<_> = receivers.iter().map(|rx| rx.recv().unwrap()).collect();
+
+        // Uninjected run: the same innocents, no poison in the batch.
+        let innocents: Vec<f32> = values.iter().copied().filter(|&v| v != POISON).collect();
+        let (clean_items, clean_rx): (Vec<_>, Vec<_>) =
+            innocents.iter().map(|&v| request(v)).unzip();
+        flush_with(flush_of(clean_items), &fake_forward, 1, &metrics);
+
+        let mut clean_iter = clean_rx.iter();
+        for (v, reply) in values.iter().zip(replies) {
+            if *v == POISON {
+                let e = reply.unwrap_err();
+                let api = e.downcast_ref::<ApiError>().expect("typed poison error");
+                assert_eq!(api.status, 422);
+                assert_eq!(api.code, "exec.poison_input");
+            } else {
+                let (out, _) = reply.expect("innocent request succeeds");
+                let (clean_out, _) = clean_iter.next().unwrap().recv().unwrap().unwrap();
+                assert_eq!(
+                    out.per_model[0].logits, clean_out.per_model[0].logits,
+                    "innocent output identical to uninjected run"
+                );
+                assert_eq!(out.per_model[0].preds, clean_out.per_model[0].preds);
+            }
+        }
+        assert_eq!(metrics.counter("sched_poison_requests_total"), 1);
+        assert!(metrics.counter("sched_bisect_flushes_total") >= 1);
+    }
+
+    #[test]
+    fn client_disconnect_mid_queue_does_not_break_the_batch() {
+        // One requester's reply receiver is dropped before the flush runs
+        // (client hung up while queued): delivery to it fails silently and
+        // its co-batched neighbour is still served.
+        let metrics = Metrics::new();
+        let (alive, alive_rx) = request(3.0);
+        let (gone, gone_rx) = request(5.0);
+        drop(gone_rx);
+        flush_with(flush_of(vec![alive, gone]), &fake_forward, 1, &metrics);
+        let (out, stats) = alive_rx.recv().unwrap().unwrap();
+        assert_eq!(out.per_model[0].logits, vec![6.0]);
+        assert_eq!(stats.coalesced_requests, 2);
+    }
+
+    #[test]
+    fn systemic_errors_skip_bisection() {
+        let metrics = Metrics::new();
+        let systemic = |_: TensorView, _: usize| -> Result<EnsembleOutput> {
+            Err(anyhow::Error::new(ApiError::overloaded("queue is full")))
+        };
+        let (items, receivers): (Vec<_>, Vec<_>) =
+            [1.0f32, 2.0, 3.0].iter().map(|&v| request(v)).unzip();
+        flush_with(flush_of(items), &systemic, 1, &metrics);
+        for rx in receivers {
+            let e = rx.recv().unwrap().unwrap_err();
+            assert_eq!(e.downcast_ref::<ApiError>().unwrap().code, "server.overloaded");
+        }
+        assert_eq!(metrics.counter("sched_bisect_flushes_total"), 0);
+
+        // WorkerCrashed is systemic too — retrying a crashed worker's
+        // batch via bisection would just crash it again mid-respawn.
+        let crashed = |_: TensorView, _: usize| -> Result<EnsembleOutput> {
+            Err(anyhow::Error::new(WorkerCrashed::new("boom")))
+        };
+        let (items, receivers): (Vec<_>, Vec<_>) =
+            [1.0f32, 2.0].iter().map(|&v| request(v)).unzip();
+        flush_with(flush_of(items), &crashed, 1, &metrics);
+        for rx in receivers {
+            let e = rx.recv().unwrap().unwrap_err();
+            assert!(e.downcast_ref::<WorkerCrashed>().is_some());
+        }
+        assert_eq!(metrics.counter("sched_bisect_flushes_total"), 0);
+    }
+
+    #[test]
+    fn bisection_depth_is_bounded_and_always_typed() {
+        let metrics = Metrics::new();
+        let always_fail =
+            |_: TensorView, _: usize| -> Result<EnsembleOutput> { bail!("every batch fails") };
+        let n = 40; // > 2^MAX_BISECT_DEPTH leaves
+        let (items, receivers): (Vec<_>, Vec<_>) = (0..n).map(|i| request(i as f32)).unzip();
+        flush_with(flush_of(items), &always_fail, 1, &metrics);
+        for rx in receivers {
+            let e = rx.recv().unwrap().unwrap_err();
+            let api = e.downcast_ref::<ApiError>().expect("typed even when exhausted");
+            assert_eq!(api.code, "exec.poison_input");
+        }
+        assert_eq!(metrics.counter("sched_poison_requests_total"), n as u64);
+        // Bisections are bounded by the depth budget, not the batch size.
+        assert!(metrics.counter("sched_bisect_flushes_total") <= (2 << MAX_BISECT_DEPTH) as u64);
+    }
+
+    #[test]
+    fn panicking_forward_degrades_to_typed_poison() {
+        let metrics = Metrics::new();
+        let panicky = |input: TensorView, rows: usize| -> Result<EnsembleOutput> {
+            if input.iter().any(|&v| v == POISON) {
+                panic!("device worker tripped an assert");
+            }
+            fake_forward(input, rows)
+        };
+        let (items, receivers): (Vec<_>, Vec<_>) =
+            [1.0f32, POISON].iter().map(|&v| request(v)).unzip();
+        flush_with(flush_of(items), &panicky, 1, &metrics);
+        let ok = receivers[0].recv().unwrap();
+        assert_eq!(ok.unwrap().0.per_model[0].logits, vec![2.0]);
+        let e = receivers[1].recv().unwrap().unwrap_err();
+        assert_eq!(e.downcast_ref::<ApiError>().unwrap().code, "exec.poison_input");
     }
 }

@@ -46,7 +46,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Scheduling-plane knobs (`--max-batch --batch-delay-us --queue-cap
 /// --deadline-ms --adaptive-window`, or the config file's `scheduler`
@@ -70,6 +70,11 @@ pub struct SchedConfig {
     /// default); `false` pins every window at `max_delay` (the seed's
     /// fixed-window behaviour).
     pub adaptive: bool,
+    /// Upper bound on the shutdown drain (`--drain-timeout-ms`). `None` =
+    /// drain forever (the seed behaviour); with a bound, requests still
+    /// queued at the deadline fail with `503 server.shutting_down` so a
+    /// wedged device thread can never hang shutdown on queued work.
+    pub drain_timeout: Option<Duration>,
 }
 
 impl Default for SchedConfig {
@@ -80,6 +85,7 @@ impl Default for SchedConfig {
             queue_cap: 0,
             deadline: None,
             adaptive: true,
+            drain_timeout: None,
         }
     }
 }
@@ -108,6 +114,9 @@ struct Shared {
     /// spraying tiny flushes into the executor backlog.
     flush_slots: usize,
     in_flight_flushes: AtomicUsize,
+    /// Wall-clock bound on the drain, armed by [`Scheduler::drain`] when
+    /// `config.drain_timeout` is set.
+    drain_deadline: Mutex<Option<Instant>>,
 }
 
 impl Shared {
@@ -151,6 +160,7 @@ impl Scheduler {
             metrics,
             flush_slots,
             in_flight_flushes: AtomicUsize::new(0),
+            drain_deadline: Mutex::new(None),
         });
         let s2 = Arc::clone(&shared);
         let f2 = Arc::clone(&flushers);
@@ -191,7 +201,9 @@ impl Scheduler {
             // thread's exit condition (shutdown AND empty, same lock): a
             // request admitted here is guaranteed to be drained.
             if self.shared.shutdown.load(Ordering::SeqCst) {
-                return Err(anyhow!("scheduler is shutting down"));
+                return Err(Error::new(ApiError::shutting_down(
+                    "scheduler is shutting down; no new work accepted",
+                )));
             }
             let cap = self.shared.config.queue_cap;
             let q = queues.entry(target).or_default();
@@ -224,6 +236,12 @@ impl Scheduler {
         // re-checks under the queues lock, and the thread only exits once
         // the queues are empty under that same lock.
         let _lock = self.shared.queues.lock().unwrap();
+        if let Some(t) = self.shared.config.drain_timeout {
+            let mut deadline = self.shared.drain_deadline.lock().unwrap();
+            if deadline.is_none() {
+                *deadline = Some(Instant::now() + t);
+            }
+        }
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.arrived.notify_all();
     }
@@ -320,6 +338,37 @@ fn scheduler_thread(ensemble: Ensemble, shared: Arc<Shared>, flushers: Arc<Threa
             queues = shared.arrived.wait(queues).unwrap();
         }
         let draining = shared.shutdown.load(Ordering::SeqCst);
+        let drain_deadline = if draining {
+            *shared.drain_deadline.lock().unwrap()
+        } else {
+            None
+        };
+
+        // Bounded drain: past the deadline every still-queued request
+        // fails typed — shutdown can no longer hang forever behind a
+        // wedged device thread's flush backlog.
+        if let Some(deadline) = drain_deadline {
+            if Instant::now() >= deadline {
+                let mut doomed: Vec<queue::Dequeued> = Vec::new();
+                for q in queues.values_mut() {
+                    while !q.is_empty() {
+                        doomed.extend(q.take(usize::MAX).items);
+                    }
+                }
+                queues.clear();
+                shared.observe_depth(&queues);
+                drop(queues);
+                shared
+                    .metrics
+                    .add("sched_shed_shutdown_total", doomed.len() as u64);
+                for d in doomed {
+                    let _ = d.reply.send(Err(Error::new(ApiError::shutting_down(
+                        "server shut down before this request could run (drain timeout)",
+                    ))));
+                }
+                return;
+            }
+        }
 
         // Phase 2: shed deadline-expired requests (their typed 504s go
         // out immediately — mpsc sends never block, so doing it under the
@@ -343,7 +392,12 @@ fn scheduler_thread(ensemble: Ensemble, shared: Arc<Shared>, flushers: Arc<Threa
         // a completing flush notifies `arrived`. The nap is capped by the
         // soonest pending deadline so 504s stay on time even while the
         // pool is saturated.
-        if shared.in_flight_flushes.load(Ordering::SeqCst) >= shared.flush_slots && !draining {
+        // (During a *bounded* drain the gate stays up: work held in the
+        // scheduler's own queues is still reachable by the deadline shed
+        // above, whereas work pushed into a wedged flush pool is not.)
+        if shared.in_flight_flushes.load(Ordering::SeqCst) >= shared.flush_slots
+            && (!draining || drain_deadline.is_some())
+        {
             let nap = queues
                 .values()
                 .filter_map(TargetQueue::next_deadline_us)
@@ -372,7 +426,7 @@ fn scheduler_thread(ensemble: Ensemble, shared: Arc<Shared>, flushers: Arc<Threa
                 let ens = ensemble.clone();
                 let sh = Arc::clone(&shared);
                 flushers.execute(move || {
-                    dispatch::flush(&ens, &key, flush);
+                    dispatch::flush(&ens, &key, flush, &sh.metrics);
                     sh.in_flight_flushes.fetch_sub(1, Ordering::SeqCst);
                     sh.arrived.notify_all(); // a slot freed — re-plan
                 });

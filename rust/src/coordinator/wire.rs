@@ -26,8 +26,12 @@
 //! | `model.rollout_conflict`    | 409    | lifecycle op vs live rollout    |
 //! | `model.load_failed`         | 500    | runtime compile/load failure    |
 //! | `ensemble.empty`            | 503    | no active models to serve       |
+//! | `exec.circuit_open`         | 503    | breaker open — fail fast + Retry-After |
+//! | `exec.poison_input`         | 422    | request isolated as a poison batch member |
+//! | `exec.worker_crashed`       | 500    | device worker panicked mid-job  |
 //! | `server.overloaded`         | 429    | queue full — shed + Retry-After |
 //! | `server.deadline_exceeded`  | 504    | request expired in queue        |
+//! | `server.shutting_down`      | 503    | drained past the shutdown deadline |
 //! | `route.not_found`           | 404    | no such route                   |
 //! | `route.method_not_allowed`  | 405    | path matched, method didn't     |
 //! | `internal`                  | 500    | unexpected server failure       |
@@ -177,6 +181,52 @@ impl ApiError {
         )
     }
 
+    /// Circuit-breaker fast-fail: the (model, bucket) breaker is open
+    /// after consecutive execution failures — refuse new work instead of
+    /// queueing it into a failing executor. `retry_after` advertises the
+    /// remaining cooldown (at least 1 s) so clients back off until the
+    /// half-open probe window.
+    pub fn circuit_open(key: &str, retry_after: u64) -> ApiError {
+        ApiError {
+            retry_after: Some(retry_after.max(1)),
+            ..Self::new(
+                503,
+                "exec.circuit_open",
+                format!("circuit breaker for '{key}' is open (recent consecutive failures)"),
+            )
+        }
+    }
+
+    /// Poison-batch isolation verdict: bisection retries of a failed
+    /// coalesced flush narrowed the failure down to this request's input.
+    pub fn poison_input(detail: impl fmt::Display) -> ApiError {
+        Self::new(
+            422,
+            "exec.poison_input",
+            format!("request input poisons the device batch: {detail}"),
+        )
+    }
+
+    /// A device worker panicked (or was torn down) while this job was in
+    /// flight — the job fails typed instead of hanging its reply channel;
+    /// the supervisor respawns the worker.
+    pub fn worker_crashed(detail: impl fmt::Display) -> ApiError {
+        Self::new(
+            500,
+            "exec.worker_crashed",
+            format!("device worker crashed: {detail}"),
+        )
+    }
+
+    /// Shutdown shed: the server is draining and either stopped accepting
+    /// new work or hit `--drain-timeout-ms` with this request still queued.
+    pub fn shutting_down(detail: impl Into<String>) -> ApiError {
+        ApiError {
+            retry_after: Some(1),
+            ..Self::new(503, "server.shutting_down", detail)
+        }
+    }
+
     /// Admission-control shed: the target queue is at `queue_cap`. Carries
     /// a `Retry-After` hint so well-behaved clients back off.
     pub fn overloaded(detail: impl Into<String>) -> ApiError {
@@ -207,12 +257,16 @@ impl ApiError {
     }
 
     /// Recover a typed error that travelled through `anyhow` (e.g. across
-    /// the scheduler's fan-out); anything untyped becomes `internal`.
+    /// the scheduler's fan-out); a runtime worker-crash marker becomes its
+    /// taxonomy row, and anything untyped becomes `internal`.
     pub fn from_anyhow(e: anyhow::Error) -> ApiError {
-        match e.downcast_ref::<ApiError>() {
-            Some(api) => api.clone(),
-            None => ApiError::internal(format!("{e:#}")),
+        if let Some(api) = e.downcast_ref::<ApiError>() {
+            return api.clone();
         }
+        if let Some(crash) = e.downcast_ref::<crate::runtime::WorkerCrashed>() {
+            return ApiError::worker_crashed(&crash.detail);
+        }
+        ApiError::internal(format!("{e:#}"))
     }
 
     /// Render the uniform `{"error": {"code", "message"}}` envelope.

@@ -215,11 +215,32 @@ impl BackendHealth {
 /// Probe one backend once over a fresh connection. Classification:
 /// transport failure → Unreachable; HTTP answer with 2xx + `ready != false`
 /// → Healthy; any other answer (503 boot doc, shedding) → Unready.
-pub fn probe_backend(addr: SocketAddr, timeout: Duration) -> (ProbeOutcome, Option<Value>, Option<String>) {
-    let mut client = match Client::connect_with_timeout(addr, timeout) {
+///
+/// The two deadlines are distinct on purpose: `connect_timeout` bounds
+/// unreachable-detection (a dead host should fail in milliseconds), while
+/// `read_timeout` is the response budget once connected — a backend busy
+/// compiling at boot answers slowly without being declared gone.
+pub fn probe_backend(
+    addr: SocketAddr,
+    connect_timeout: Duration,
+    read_timeout: Duration,
+) -> (ProbeOutcome, Option<Value>, Option<String>) {
+    // Chaos `gateway.probe`: an injected fault is indistinguishable from
+    // a dropped probe packet — the round observes Unreachable.
+    if crate::chaos::decide(crate::chaos::GATEWAY_PROBE).is_some() {
+        return (
+            ProbeOutcome::Unreachable,
+            None,
+            Some("chaos: injected probe failure".to_string()),
+        );
+    }
+    let mut client = match Client::connect_with_timeout(addr, connect_timeout) {
         Ok(c) => c,
         Err(e) => return (ProbeOutcome::Unreachable, None, Some(format!("connect: {e:#}"))),
     };
+    if let Err(e) = client.set_timeout(read_timeout) {
+        return (ProbeOutcome::Unreachable, None, Some(format!("probe: {e:#}")));
+    }
     match client.get("/v1/healthz") {
         Err(e) => (ProbeOutcome::Unreachable, None, Some(format!("probe: {e:#}"))),
         Ok(resp) => {
@@ -248,10 +269,17 @@ pub fn probe_backend(addr: SocketAddr, timeout: Duration) -> (ProbeOutcome, Opti
 
 /// Spawn the poller thread over a backend set. Returns the stop flag;
 /// flip it to wind the thread down (it exits within one interval).
+///
+/// `jitter` stretches each round's sleep by a seeded random 0..=jitter —
+/// a fleet of gateways probing the same backends on the same interval
+/// would otherwise hammer `/v1/healthz` in lockstep.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_prober(
     backends: Vec<(String, SocketAddr, Arc<BackendHealth>)>,
     interval: Duration,
+    connect_timeout: Duration,
     timeout: Duration,
+    jitter: Duration,
     fail_after: u32,
     rise_after: u32,
     metrics: Arc<crate::coordinator::Metrics>,
@@ -259,6 +287,14 @@ pub fn spawn_prober(
 ) -> Arc<AtomicBool> {
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
+    // Per-process jitter stream: wall-clock seeded so replicas launched
+    // from the same config still desynchronize.
+    let mut rng = crate::util::Prng::new(
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+            .unwrap_or(0x9e37_79b9),
+    );
     std::thread::Builder::new()
         .name("flexserve-gw-probe".into())
         .spawn(move || {
@@ -267,7 +303,7 @@ pub fn spawn_prober(
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
-                    let (outcome, doc, err) = probe_backend(*addr, timeout);
+                    let (outcome, doc, err) = probe_backend(*addr, connect_timeout, timeout);
                     if let Some(doc) = &doc {
                         health.record_doc(doc);
                     }
@@ -284,7 +320,11 @@ pub fn spawn_prober(
                     .count();
                 metrics.set_gauge("gw_backends_up", up as u64);
                 on_update();
-                std::thread::sleep(interval);
+                let sleep_for = match jitter.as_micros() as usize {
+                    0 => interval,
+                    j => interval + Duration::from_micros(rng.range(0, j + 1) as u64),
+                };
+                std::thread::sleep(sleep_for);
             }
         })
         .expect("spawning gateway probe thread");

@@ -53,7 +53,9 @@ pub fn spawn(cfg: GatewayConfig) -> Result<GatewayHandle> {
     let addr = cfg.addr.clone();
     let http_workers = cfg.http_workers;
     let probe_interval = cfg.probe_interval;
+    let probe_connect_timeout = cfg.probe_connect_timeout;
     let probe_timeout = cfg.probe_timeout;
+    let probe_jitter = cfg.probe_jitter;
     let fail_after = cfg.fail_after;
     let rise_after = cfg.rise_after;
     let gateway = Arc::new(Gateway::new(cfg)?);
@@ -66,7 +68,9 @@ pub fn spawn(cfg: GatewayConfig) -> Result<GatewayHandle> {
     let prober_stop = health::spawn_prober(
         probe_set,
         probe_interval,
+        probe_connect_timeout,
         probe_timeout,
+        probe_jitter,
         fail_after,
         rise_after,
         Arc::clone(&gateway.metrics),

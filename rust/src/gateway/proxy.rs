@@ -474,6 +474,11 @@ impl Gateway {
 
     fn checkout(&self, idx: usize) -> anyhow::Result<Client> {
         let b = &self.backends[idx];
+        // Fault-injection site: any configured kind reads as a transport
+        // failure here, so the failover walk above absorbs it.
+        if crate::chaos::decide(crate::chaos::GATEWAY_CONNECT).is_some() {
+            anyhow::bail!("chaos: injected connect failure to backend '{}'", b.id);
+        }
         if let Some(c) = b.pool.lock().unwrap_or_else(|p| p.into_inner()).pop() {
             return Ok(c);
         }

@@ -56,6 +56,18 @@ impl Client {
         Ok(c)
     }
 
+    /// Change the connect/read timeout after construction; a live
+    /// connection's read timeout adjusts in place. Lets a caller connect
+    /// under one deadline and read under another (the gateway prober
+    /// wants fast unreachable-detection but a roomier response budget).
+    pub fn set_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.timeout = timeout;
+        if let Some(reader) = &self.stream {
+            reader.get_ref().set_read_timeout(Some(timeout))?;
+        }
+        Ok(())
+    }
+
     /// Opt in to bounded retries of 429/503 responses, honoring the
     /// server's `Retry-After` (capped). Budget is per-request.
     pub fn with_retry_budget(mut self, budget: u32) -> Client {

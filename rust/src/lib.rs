@@ -28,6 +28,7 @@
 
 pub mod baseline;
 pub mod benchkit;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod gateway;

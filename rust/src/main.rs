@@ -18,6 +18,8 @@
 //! flexserve rollout-smoke    device-free canary→rollback→promote cycle
 //! flexserve gateway          front N replicas with consistent-hash routing
 //! flexserve gateway-smoke    device-free gateway routing/ejection cycle
+//! flexserve chaos-smoke      device-free fault-injection cycle (breakers,
+//!                            supervision, typed failures)
 //! ```
 //!
 //! Flags after the subcommand: see `config::ServeConfig::apply_cli`.
@@ -66,6 +68,7 @@ fn run(args: &[String]) -> Result<()> {
         "rollout-smoke" => cmd_rollout_smoke(rest),
         "gateway" => cmd_gateway(rest),
         "gateway-smoke" => cmd_gateway_smoke(rest),
+        "chaos-smoke" => cmd_chaos_smoke(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -107,6 +110,9 @@ fn print_usage() {
                             scatter-gather ensembles\n\
            gateway-smoke    device-free gateway cycle over in-process echo\n\
                             replicas: stickiness, kill, ejection, rerouting\n\
+           chaos-smoke      device-free failure-containment cycle under a\n\
+                            seeded chaos plane: injected panics + connection\n\
+                            drops, breaker trip/recover, supervisor respawns\n\
          \n\
          COMMON FLAGS:\n\
            --artifacts DIR      artifact directory (default: ./artifacts)\n\
@@ -114,9 +120,14 @@ fn print_usage() {
          SERVE FLAGS:\n\
            --http-workers N --device-workers N --models a,b\n\
            --no-batcher --max-batch N --batch-delay-us N\n\
-           --queue-cap N --deadline-ms N --adaptive-window on|off\n\
+           --queue-cap N --deadline-ms N --drain-timeout-ms N\n\
+           --adaptive-window on|off\n\
            --audit-log FILE --guardrail-error-rate F --guardrail-p95-ms N\n\
            --guardrail-min-samples N\n\
+           --breaker-fail-threshold N --breaker-cooldown-ms N\n\
+           --chaos site=rate:kind[,...] --chaos-seed N\n\
+             (sites: exec.submit exec.device sched.flush gateway.connect\n\
+              gateway.probe; kinds: panic error drop)\n\
            --no-verify --no-warmup --access-log --config FILE\n\
          SERVE-BASELINE FLAGS:\n\
            --fixed-batch N (default 1)\n\
@@ -137,6 +148,7 @@ fn print_usage() {
          GATEWAY FLAGS:\n\
            --backends name=host:port,... (required; bare host:port allowed)\n\
            --vnodes N --probe-interval-ms N --probe-timeout-ms N\n\
+           --probe-connect-timeout-ms N --probe-jitter-ms N\n\
            --fail-after N --rise-after N --inflight-cap N --retry-budget N\n\
            --addr HOST:PORT --http-workers N --access-log --config FILE"
     );
@@ -1165,6 +1177,270 @@ fn spawn_gateway_echo(id: &str, models: &[&str]) -> Result<flexserve::http::Serv
             Response::coded_error(404, "route.not_found", "echo backend")
         }),
     )
+}
+
+/// The device-free failure-containment smoke (CI): one process, one
+/// seeded chaos plane, real breakers, the real gateway, and the real
+/// supervision loop over toy crashing workers.
+///
+/// Proves, end to end and without a device:
+/// 1. crashed workers are respawned by the supervisor (respawn counters);
+/// 2. under injected device panics every answer is 200 or a *typed* error
+///    (`exec.worker_crashed` / `exec.circuit_open` + `Retry-After`) — no
+///    untyped 500s, no hung connections (the client read timeout is the
+///    hang detector);
+/// 3. injected connection drops at the gateway degrade to typed errors;
+/// 4. disarming the plane lets the breaker recover through half-open.
+fn cmd_chaos_smoke(args: &[String]) -> Result<()> {
+    use flexserve::chaos;
+    use flexserve::config::GatewayConfig;
+    use flexserve::coordinator::{ApiError, BreakerConfig, Breakers, Metrics};
+    use flexserve::runtime::{run_supervisor, SupervisorOptions};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
+
+    if !args.is_empty() {
+        bail!("chaos-smoke takes no flags");
+    }
+    const SPEC: &str = "exec.device=0.35:panic,gateway.connect=0.25:drop";
+    const SEED: u64 = 7;
+
+    let metrics = Arc::new(Metrics::new());
+    let plane = chaos::ChaosPlane::parse(SPEC, SEED)?;
+    println!("chaos plane: {}", plane.summary());
+    chaos::install(plane)?;
+    chaos::set_sink(Arc::clone(&metrics));
+
+    // --- 1. supervision: the pool's exact respawn loop over toy workers.
+    let workers: Arc<Vec<AtomicBool>> = Arc::new((0..4).map(|_| AtomicBool::new(true)).collect());
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sup = {
+        let workers = Arc::clone(&workers);
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || {
+            run_supervisor(
+                SupervisorOptions {
+                    poll: Duration::from_millis(5),
+                    backoff_base: Duration::from_millis(5),
+                    backoff_max: Duration::from_millis(40),
+                    heal_after: Duration::from_millis(50),
+                },
+                &shutdown,
+                workers.len(),
+                |i| workers[i].load(Ordering::Relaxed),
+                |i| {
+                    workers[i].store(true, Ordering::Relaxed);
+                    Ok(())
+                },
+            )
+        })
+    };
+    for round in 0..3usize {
+        let i = round % workers.len();
+        workers[i].store(false, Ordering::Relaxed);
+        metrics.inc("exec_crashes_total");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !workers[i].load(Ordering::Relaxed) {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "supervisor never respawned worker {i}"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    shutdown.store(true, Ordering::Relaxed);
+    let respawned = sup.join().expect("supervisor thread");
+    anyhow::ensure!(respawned >= 3, "expected >= 3 respawns, got {respawned}");
+    metrics.add("exec_respawns_total", respawned);
+    println!("supervisor respawned {respawned} crashed workers with backoff");
+
+    // --- the chaos backend: real breakers in front of a simulated device
+    // whose forward is the `exec.device` injection site.
+    let breakers = Arc::new(Breakers::new(
+        BreakerConfig {
+            fail_threshold: 2,
+            cooldown: Duration::from_millis(300),
+        },
+        Arc::clone(&metrics),
+    ));
+    let key = Breakers::key("echo", 1);
+    let backend = {
+        let metrics = Arc::clone(&metrics);
+        let breakers = Arc::clone(&breakers);
+        let key = key.clone();
+        Server::spawn(
+            "127.0.0.1:0",
+            4,
+            Arc::new(move |req: &Request| {
+                if req.method == "GET" && req.path == "/v1/healthz" {
+                    return Response::json(
+                        200,
+                        &json::obj([
+                            ("status", Value::from("ok")),
+                            ("ready", Value::from(true)),
+                            ("active", Value::Arr(vec![Value::from("echo")])),
+                        ]),
+                    );
+                }
+                if req.method == "GET" && req.path == "/v1/metrics" {
+                    return Response::text(200, &metrics.render_prometheus());
+                }
+                if req.method == "POST" && (req.path == "/v1/predict" || req.path == "/predict") {
+                    if let Err(e) = breakers.check(&key) {
+                        return e.to_response();
+                    }
+                    return match chaos::decide(chaos::EXEC_DEVICE) {
+                        Some(kind) => {
+                            breakers.record(&key, false);
+                            ApiError::worker_crashed(format!(
+                                "chaos: injected device {}",
+                                kind.as_str()
+                            ))
+                            .to_response()
+                        }
+                        None => {
+                            breakers.record(&key, true);
+                            Response::json(
+                                200,
+                                &json::obj([
+                                    ("ok", Value::from(true)),
+                                    ("breaker", Value::from(breakers.state_of(&key))),
+                                ]),
+                            )
+                        }
+                    };
+                }
+                Response::coded_error(404, "route.not_found", "chaos echo backend")
+            }),
+        )?
+    };
+
+    // --- 2. direct traffic under injected panics: typed or 2xx, always.
+    let mut c = Client::connect(backend.addr)?;
+    c.set_timeout(Duration::from_secs(5))?;
+    let typed_code = |resp: &Response, i: usize| -> Result<String> {
+        resp.json_body()
+            .ok()
+            .and_then(|b| b.path(&["error", "code"]).and_then(Value::as_str).map(str::to_string))
+            .with_context(|| format!("request {i}: untyped {} response", resp.status))
+    };
+    let (mut ok, mut crashed, mut open) = (0u32, 0u32, 0u32);
+    for i in 0..300usize {
+        let resp = c
+            .request(&Request::new("POST", "/v1/predict", b"{}".to_vec()))
+            .with_context(|| format!("request {i} hung or died without an answer"))?;
+        if resp.status == 200 {
+            ok += 1;
+            continue;
+        }
+        match typed_code(&resp, i)?.as_str() {
+            "exec.worker_crashed" => crashed += 1,
+            "exec.circuit_open" => {
+                anyhow::ensure!(
+                    resp.header("retry-after").is_some(),
+                    "circuit_open answer without Retry-After"
+                );
+                open += 1;
+            }
+            other => bail!("unexpected error code '{other}' on request {i}"),
+        }
+    }
+    anyhow::ensure!(ok > 0 && crashed > 0, "degenerate run: ok={ok} crashed={crashed}");
+    anyhow::ensure!(
+        metrics.counter("breaker_open_total") >= 1,
+        "breaker never opened under 35% injected device panics"
+    );
+    let injected_device = chaos::global().expect("plane installed").injected(chaos::EXEC_DEVICE);
+    anyhow::ensure!(injected_device > 0, "exec.device site never injected");
+    println!(
+        "direct: 300 requests → {ok} ok, {crashed} typed worker_crashed, {open} typed \
+         circuit_open ({injected_device} injected device panics)"
+    );
+
+    // --- 3. the same story through the real gateway, now with injected
+    // connection drops at the `gateway.connect` site. retry_budget 0 keeps
+    // the walk sleep-free: a drop degrades to a typed gateway.no_backend.
+    let mut gcfg = GatewayConfig::default();
+    gcfg.addr = "127.0.0.1:0".into();
+    gcfg.backends = vec![("b0".to_string(), backend.addr.to_string())];
+    gcfg.probe_interval = Duration::from_millis(50);
+    gcfg.probe_connect_timeout = Duration::from_millis(100);
+    gcfg.probe_timeout = Duration::from_millis(250);
+    gcfg.probe_jitter = Duration::from_millis(10);
+    gcfg.rise_after = 1;
+    gcfg.retry_budget = 0;
+    let gw = flexserve::gateway::spawn(gcfg)?;
+    let mut gc = Client::connect(gw.server.addr)?;
+    gc.set_timeout(Duration::from_secs(5))?;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let doc = gc.get("/v1/gateway")?.json_body()?;
+        let state = doc
+            .get("backends")
+            .and_then(Value::as_arr)
+            .and_then(|arr| arr.first())
+            .and_then(|b| b.get("state").and_then(Value::as_str))
+            .unwrap_or("")
+            .to_string();
+        if state == "up" {
+            break;
+        }
+        anyhow::ensure!(Instant::now() < deadline, "prober never admitted b0 ('{state}')");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let mut dropped = 0u32;
+    for i in 0..60usize {
+        let resp = gc
+            .request(&Request::new("POST", "/v1/predict", b"{}".to_vec()))
+            .with_context(|| format!("gateway request {i} hung or died without an answer"))?;
+        if resp.status == 200 {
+            continue;
+        }
+        match typed_code(&resp, i)?.as_str() {
+            "exec.worker_crashed" | "exec.circuit_open" => {}
+            "gateway.no_backend" => dropped += 1,
+            other => bail!("unexpected gateway error code '{other}' on request {i}"),
+        }
+    }
+    let injected_connect = chaos::global().expect("plane installed").injected(chaos::GATEWAY_CONNECT);
+    anyhow::ensure!(injected_connect > 0, "gateway.connect site never injected");
+    println!(
+        "gateway: 60 requests → {dropped} typed no_backend answers \
+         ({injected_connect} injected connection drops)"
+    );
+
+    // --- 4. recovery: disarm the plane and the breaker must walk
+    // open → half-open probe → closed on real traffic.
+    chaos::set_armed(false);
+    std::thread::sleep(Duration::from_millis(350));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while breakers.state_of(&key) != "closed" {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "breaker never recovered after disarm (state '{}')",
+            breakers.state_of(&key)
+        );
+        let _ = c.request(&Request::new("POST", "/v1/predict", b"{}".to_vec()))?;
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    anyhow::ensure!(
+        metrics.counter("breaker_half_open_total") >= 1
+            && metrics.counter("breaker_close_total") >= 1,
+        "recovery skipped the half-open path"
+    );
+    for _ in 0..20 {
+        let resp = c.request(&Request::new("POST", "/v1/predict", b"{}".to_vec()))?;
+        anyhow::ensure!(resp.status == 200, "post-recovery request failed: {}", resp.status);
+    }
+    println!("breaker recovered through half-open after chaos disarm; 20/20 clean");
+
+    // Evidence for the CI greps: injection, respawn, and breaker-transition
+    // counters in the standard Prometheus exposition.
+    print!("{}", metrics.render_prometheus());
+    gw.stop();
+    backend.stop();
+    println!("chaos-smoke OK");
+    Ok(())
 }
 
 fn park_forever() -> ! {

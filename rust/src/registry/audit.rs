@@ -20,7 +20,8 @@ use std::time::{SystemTime, UNIX_EPOCH};
 /// events that involve a single version (load/unload) use `to` only.
 pub struct Event<'a> {
     /// `load` | `unload` | `pin` | `canary` | `shadow` | `promote` |
-    /// `rollback` | `shed`.
+    /// `rollback` | `shed` | `recover` (boot replayed rollout state from
+    /// this trail).
     pub event: &'a str,
     pub model: &'a str,
     /// Who drove the transition (`x-actor` header, `cli`, `api`, ...).

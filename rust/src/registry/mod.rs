@@ -26,7 +26,7 @@ pub mod rollout;
 pub mod store;
 
 pub use audit::AuditLog;
-pub use rollout::{canary_pick, Guardrails, Mode, WindowStats};
+pub use rollout::{canary_pick, replay_mode, Guardrails, Mode, WindowStats};
 pub use store::Store;
 
 use crate::coordinator::metrics::Metrics;
@@ -119,7 +119,15 @@ impl Registry {
                 ));
             }
         }
-        Ok(Registry {
+        // Crash recovery: replay the durable audit trail (if one exists)
+        // into final per-model rollout modes BEFORE the log reopens for
+        // appending — a restart mid-canary resumes the split instead of
+        // silently reverting every model to pin@1.
+        let recovered = match &config.audit_log {
+            Some(path) if path.exists() => replay_audit_file(path, &store),
+            _ => Vec::new(),
+        };
+        let reg = Registry {
             store,
             state: RwLock::new(HashMap::new()),
             stats: Mutex::new(HashMap::new()),
@@ -127,7 +135,29 @@ impl Registry {
             audit: AuditLog::open(config.audit_log)?,
             metrics,
             default_guardrails: config.guardrails,
-        })
+        };
+        for (model, mode) in recovered {
+            reg.state.write().unwrap().insert(
+                model.clone(),
+                ModelState {
+                    mode,
+                    previous: mode.active(),
+                    guardrails: reg.default_guardrails,
+                },
+            );
+            reg.metrics.inc("registry_recovered_rollouts_total");
+            let sha = reg.sha_of(&model, mode.active());
+            let detail = format!("replayed {} rollout state from the audit trail", mode.kind());
+            reg.audit.record(audit::Event {
+                event: "recover",
+                model: &model,
+                actor: "boot",
+                from: None,
+                to: Some((mode.active(), &sha)),
+                detail: &detail,
+            });
+        }
+        Ok(reg)
     }
 
     pub fn store(&self) -> &Store {
@@ -752,6 +782,28 @@ impl Registry {
         Ok(Value::Obj(members))
     }
 
+    /// Pool slots the current rollout state needs resident to serve:
+    /// every non-default model's active + candidate slots. `serve()`
+    /// unions this with the version-1 boot set so a restart mid-rollout
+    /// compiles what the audit trail says it was serving.
+    pub fn rollout_slots(&self) -> Vec<String> {
+        let state = self.state.read().unwrap();
+        let mut slots: Vec<String> = Vec::new();
+        for (model, st) in state.iter() {
+            let mut versions = vec![st.mode.active()];
+            versions.extend(st.mode.candidate());
+            for v in versions {
+                if let Some(e) = self.store.entry(model, v) {
+                    if !slots.contains(&e.name) {
+                        slots.push(e.name.clone());
+                    }
+                }
+            }
+        }
+        slots.sort();
+        slots
+    }
+
     /// Role of one version in its model's rollout ("" = none).
     pub fn version_role(&self, model: &str, version: u32) -> &'static str {
         let mode = self.mode_of(model);
@@ -767,6 +819,50 @@ impl Registry {
             ""
         }
     }
+}
+
+/// Replay a durable audit JSONL trail into final per-model rollout modes
+/// (via the pure fold [`rollout::replay_mode`]). Tolerant by design: an
+/// unparsable line — e.g. a torn final write from the crash being
+/// recovered from — is skipped, unknown models are dropped, and a mode
+/// whose versions are gone from the catalog degrades to the nearest pin
+/// that still exists (conservative: never resume a split onto a version
+/// the store can't serve). Only non-default modes (≠ pin@1) return.
+fn replay_audit_file(path: &std::path::Path, store: &Store) -> Vec<(String, Mode)> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let mut modes: HashMap<String, Mode> = HashMap::new();
+    for line in text.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        let Ok(v) = json::parse(line) else { continue };
+        let (Some(event), Some(model)) = (
+            v.get("event").and_then(Value::as_str),
+            v.get("model").and_then(Value::as_str),
+        ) else {
+            continue;
+        };
+        let ver =
+            |key: &str| v.get(key).and_then(Value::as_u64).and_then(|n| u32::try_from(n).ok());
+        let detail = v.get("detail").and_then(Value::as_str).unwrap_or("");
+        let prev = modes.get(model).copied().unwrap_or(Mode::Pin { version: 1 });
+        let next = replay_mode(prev, event, ver("from_version"), ver("to_version"), detail);
+        modes.insert(model.to_string(), next);
+    }
+    let mut out: Vec<(String, Mode)> = modes
+        .into_iter()
+        .filter_map(|(model, mode)| {
+            let catalog = store.versions(&model)?;
+            let have = |v: u32| catalog.contains(&v);
+            let mode = match mode {
+                m if have(m.active()) && m.candidate().map_or(true, |c| have(c)) => m,
+                m if have(m.active()) => Mode::Pin { version: m.active() },
+                _ => return None,
+            };
+            (mode != Mode::Pin { version: 1 }).then_some((model, mode))
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
 }
 
 /// `ver_<model>_v<version>_<kind>` — the per-version series name (all
@@ -1050,6 +1146,55 @@ mod tests {
         // Candidate unloads (shed path) and pinned-mode unloads stay legal.
         reg.check_unload("echo", 2).unwrap();
         reg.check_unload("other", 1).unwrap();
+    }
+
+    #[test]
+    fn boot_replays_rollout_state_from_the_audit_trail() {
+        let path = std::env::temp_dir().join("flexserve_replay_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let config = RegistryConfig {
+            audit_log: Some(path.clone()),
+            ..Default::default()
+        };
+        let store = || Store::synthetic(&[("echo", 3), ("other", 1)]);
+        // First life: canary v2 → promote → shadow v3; then crash (drop).
+        {
+            let reg = Registry::new(store(), config.clone(), Arc::new(Metrics::new())).unwrap();
+            put(&reg, "echo", r#"{"mode":"canary","version":2,"percent":30}"#).unwrap();
+            reg.promote("echo", "test").unwrap();
+            put(&reg, "echo", r#"{"mode":"shadow","version":3}"#).unwrap();
+        }
+        // Second life: the replayed registry resumes the shadow rollout.
+        let metrics = Arc::new(Metrics::new());
+        let reg = Registry::new(store(), config.clone(), Arc::clone(&metrics)).unwrap();
+        assert_eq!(reg.mode_of("echo"), Mode::Shadow { stable: 2, candidate: 3 });
+        assert_eq!(reg.mode_of("other"), Mode::Pin { version: 1 });
+        assert_eq!(
+            reg.rollout_slots(),
+            vec!["echo@2".to_string(), "echo@3".to_string()]
+        );
+        assert_eq!(metrics.counter("registry_recovered_rollouts_total"), 1);
+        let tail = reg.audit.tail(1);
+        assert_eq!(tail[0].get("event").unwrap().as_str(), Some("recover"));
+        assert_eq!(tail[0].get("actor").unwrap().as_str(), Some("boot"));
+        drop(reg);
+
+        // Torn trailing line + a transition onto a vanished version: boot
+        // must still come up, conservatively pinned at the last serveable
+        // version — and unknown models are ignored outright.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, r#"{{"event":"shadow","model":"echo","from_version":2,"to_version":9}}"#)
+                .unwrap();
+            writeln!(f, r#"{{"event":"pin","model":"ghost","to_version":2}}"#).unwrap();
+            write!(f, r#"{{"event":"promo"#).unwrap(); // torn mid-crash
+        }
+        let reg = Registry::new(store(), config, Arc::new(Metrics::new())).unwrap();
+        assert_eq!(reg.mode_of("echo"), Mode::Pin { version: 2 });
+        assert_eq!(reg.mode_of("ghost"), Mode::Pin { version: 1 });
+        assert_eq!(reg.rollout_slots(), vec!["echo@2".to_string()]);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

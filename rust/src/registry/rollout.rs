@@ -47,6 +47,43 @@ impl Mode {
     }
 }
 
+/// Fold one audit-trail record into a model's rollout mode — the pure
+/// core of crash recovery ([`super::Registry::new`] replays the JSONL
+/// trail through this at boot, so a restart mid-rollout resumes where the
+/// trail left off instead of silently reverting to pin@1).
+///
+/// `from`/`to` are the record's `from_version`/`to_version`; `detail`
+/// carries the canary's `percent=N`. Events that don't transition rollout
+/// state (`load`, `unload`, `recover`) and malformed records leave the
+/// mode unchanged — replay must never invent a transition the trail
+/// doesn't prove.
+pub fn replay_mode(prev: Mode, event: &str, from: Option<u32>, to: Option<u32>, detail: &str) -> Mode {
+    match event {
+        // All four land on a plain pin of the destination version.
+        "pin" | "promote" | "rollback" | "shed" => match to {
+            Some(v) => Mode::Pin { version: v },
+            None => prev,
+        },
+        "canary" => match (from, to) {
+            (Some(stable), Some(candidate)) => {
+                let percent = detail
+                    .split(',')
+                    .find_map(|kv| kv.trim().strip_prefix("percent="))
+                    .and_then(|p| p.parse::<u8>().ok())
+                    .filter(|p| (1..=99).contains(p))
+                    .unwrap_or(10);
+                Mode::Canary { stable, candidate, percent }
+            }
+            _ => prev,
+        },
+        "shadow" => match (from, to) {
+            (Some(stable), Some(candidate)) => Mode::Shadow { stable, candidate },
+            _ => prev,
+        },
+        _ => prev,
+    }
+}
+
 /// Auto-rollback thresholds over the candidate's sliding window.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Guardrails {
@@ -245,6 +282,39 @@ mod tests {
             w.record(true, 100);
         }
         assert!(breach(&w, &Guardrails::default()).is_none());
+    }
+
+    #[test]
+    fn replay_folds_the_full_lifecycle() {
+        let start = Mode::Pin { version: 1 };
+        // canary → promote → (restart replays to) pin@2.
+        let m = replay_mode(start, "canary", Some(1), Some(2), "percent=25");
+        assert_eq!(m, Mode::Canary { stable: 1, candidate: 2, percent: 25 });
+        let m = replay_mode(m, "promote", Some(1), Some(2), "");
+        assert_eq!(m, Mode::Pin { version: 2 });
+        // rollback / shed / pin all land on the destination pin.
+        assert_eq!(
+            replay_mode(m, "rollback", Some(2), Some(1), "guardrail"),
+            Mode::Pin { version: 1 }
+        );
+        assert_eq!(
+            replay_mode(m, "shed", Some(3), Some(2), "candidate unloaded"),
+            Mode::Pin { version: 2 }
+        );
+        // shadow keeps the stable serving.
+        let m = replay_mode(start, "shadow", Some(1), Some(3), "");
+        assert_eq!(m, Mode::Shadow { stable: 1, candidate: 3 });
+        // Non-transition events and malformed records are no-ops.
+        assert_eq!(replay_mode(m, "load", None, Some(2), ""), m);
+        assert_eq!(replay_mode(m, "unload", Some(2), None, ""), m);
+        assert_eq!(replay_mode(m, "recover", None, Some(1), ""), m);
+        assert_eq!(replay_mode(m, "canary", None, Some(2), ""), m);
+        assert_eq!(replay_mode(m, "promote", None, None, ""), m);
+        // Canary percent defaults to 10 when the detail is absent/mangled.
+        let m = replay_mode(start, "canary", Some(1), Some(2), "");
+        assert_eq!(m, Mode::Canary { stable: 1, candidate: 2, percent: 10 });
+        let m = replay_mode(start, "canary", Some(1), Some(2), "percent=999");
+        assert_eq!(m, Mode::Canary { stable: 1, candidate: 2, percent: 10 });
     }
 
     #[test]

@@ -9,13 +9,41 @@
 
 use super::manifest::Manifest;
 use super::tensor::{self, TensorView};
+use crate::chaos;
 use crate::util::Stopwatch;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
+
+/// Typed marker for a device-worker crash. Travels through `anyhow` so
+/// the coordinator can recover it into the `exec.worker_crashed` taxonomy
+/// row instead of an untyped 500 — the runtime layer itself stays
+/// coordinator-free.
+#[derive(Debug, Clone)]
+pub struct WorkerCrashed {
+    pub detail: String,
+}
+
+impl WorkerCrashed {
+    pub fn new(detail: impl Into<String>) -> WorkerCrashed {
+        WorkerCrashed {
+            detail: detail.into(),
+        }
+    }
+}
+
+impl fmt::Display for WorkerCrashed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "device worker crashed: {}", self.detail)
+    }
+}
+
+impl std::error::Error for WorkerCrashed {}
 
 /// One inference job for a single model.
 #[derive(Debug, Clone)]
@@ -41,10 +69,25 @@ pub struct ExecResponse {
     pub exec_micros: u64,
 }
 
+/// Pairs the submit-side `in_flight_rows` increment on EVERY exit path:
+/// executed, dropped with a crashed worker's queue, or bounced off a
+/// closed channel — the load signal can never leak rows.
+struct RowsGuard {
+    counter: Arc<AtomicUsize>,
+    rows: usize,
+}
+
+impl Drop for RowsGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(self.rows, Ordering::Relaxed);
+    }
+}
+
 struct Job {
     req: ExecRequest,
     enqueued: Stopwatch,
     reply: mpsc::Sender<Result<ExecResponse>>,
+    rows: RowsGuard,
 }
 
 /// Channel protocol to the device thread. An explicit `Shutdown` message
@@ -94,6 +137,9 @@ pub struct ExecutorHandle {
     /// signal behind the pool's least-loaded dispatch. Incremented at
     /// submit, decremented by the device thread when the job finishes.
     in_flight_rows: Arc<AtomicUsize>,
+    /// Cleared by the device thread when it crashes; the pool's dispatch
+    /// skips unhealthy executors and its supervisor respawns them.
+    healthy: Arc<AtomicBool>,
 }
 
 impl ExecutorHandle {
@@ -101,30 +147,50 @@ impl ExecutorHandle {
     pub fn infer(&self, req: ExecRequest) -> Result<ExecResponse> {
         self.infer_async(req)?
             .recv()
-            .map_err(|_| anyhow!("executor dropped the job"))?
+            .map_err(|_| anyhow::Error::new(WorkerCrashed::new("executor dropped the job")))?
     }
 
     /// Submit without waiting; returns the reply receiver. Lets the
     /// ensemble overlap N model submissions before collecting.
     pub fn infer_async(&self, req: ExecRequest) -> Result<mpsc::Receiver<Result<ExecResponse>>> {
+        if let Some(kind) = chaos::decide(chaos::EXEC_SUBMIT) {
+            match kind {
+                chaos::FaultKind::Panic => panic!("chaos: injected panic at exec.submit"),
+                _ => return Err(anyhow!("chaos: injected failure at exec.submit")),
+            }
+        }
         let (reply_tx, reply_rx) = mpsc::channel();
         // Count the rows BEFORE the send so concurrent least-loaded picks
-        // already see this job; the device thread pairs the decrement.
+        // already see this job; the guard travels with the job, so the
+        // decrement pairs on every path (executed, crashed, or bounced).
         let rows = req.batch;
         self.in_flight_rows.fetch_add(rows, Ordering::Relaxed);
+        let guard = RowsGuard {
+            counter: Arc::clone(&self.in_flight_rows),
+            rows,
+        };
         if self
             .tx
             .send(Msg::Job(Job {
                 req,
                 enqueued: Stopwatch::start(),
                 reply: reply_tx,
+                rows: guard,
             }))
             .is_err()
         {
-            self.in_flight_rows.fetch_sub(rows, Ordering::Relaxed);
-            return Err(anyhow!("executor thread is gone"));
+            // The SendError dropped the job (and its guard) for us.
+            return Err(anyhow::Error::new(WorkerCrashed::new(
+                "executor thread is gone",
+            )));
         }
         Ok(reply_rx)
+    }
+
+    /// False once the device thread has crashed (until a respawn replaces
+    /// this executor).
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
     }
 
     /// Rows currently submitted-but-unfinished on this device.
@@ -189,10 +255,11 @@ impl Executor {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let m = Arc::clone(&manifest);
         let in_flight_rows = Arc::new(AtomicUsize::new(0));
-        let in_flight2 = Arc::clone(&in_flight_rows);
+        let healthy = Arc::new(AtomicBool::new(true));
+        let healthy2 = Arc::clone(&healthy);
         let thread = thread::Builder::new()
             .name("flexserve-device".into())
-            .spawn(move || device_thread(m, opts, rx, ready_tx, in_flight2))
+            .spawn(move || device_thread(m, opts, rx, ready_tx, healthy2))
             .context("spawning device executor thread")?;
         ready_rx
             .recv()
@@ -202,6 +269,7 @@ impl Executor {
                 tx,
                 manifest,
                 in_flight_rows,
+                healthy,
             },
             thread: Some(thread),
         })
@@ -214,6 +282,11 @@ impl Executor {
     /// Rows currently submitted-but-unfinished on this device.
     pub fn in_flight_rows(&self) -> usize {
         self.handle.in_flight_rows()
+    }
+
+    /// False once the device thread has crashed.
+    pub fn is_healthy(&self) -> bool {
+        self.handle.is_healthy()
     }
 }
 
@@ -240,7 +313,7 @@ fn device_thread(
     opts: ExecutorOptions,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
-    in_flight_rows: Arc<AtomicUsize>,
+    healthy: Arc<AtomicBool>,
 ) {
     let setup = (|| -> Result<(xla::PjRtClient, ExecutableMap)> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -274,18 +347,51 @@ fn device_thread(
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Job(job) => {
-                let queue_micros = job.enqueued.elapsed_micros();
-                let result = execute_job(&executables, &manifest, &job.req)
-                    .map(|(logits, bucket, exec_micros)| ExecResponse {
-                        logits,
-                        bucket,
-                        queue_micros,
-                        exec_micros,
-                    });
-                // Pair the submit-side increment whether the job succeeded
-                // or not — the rows are no longer ahead of anyone.
-                in_flight_rows.fetch_sub(job.req.batch, Ordering::Relaxed);
-                let _ = job.reply.send(result); // receiver may have timed out; fine
+                let Job {
+                    req,
+                    enqueued,
+                    reply,
+                    rows,
+                } = job;
+                let queue_micros = enqueued.elapsed_micros();
+                // Supervised execution: a panic anywhere under execute_job
+                // (or an injected chaos panic) must not abandon the reply
+                // channel — callers would hang forever on recv().
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(kind) = chaos::decide(chaos::EXEC_DEVICE) {
+                        match kind {
+                            chaos::FaultKind::Panic => {
+                                panic!("chaos: injected panic at exec.device")
+                            }
+                            _ => bail!("chaos: injected failure at exec.device"),
+                        }
+                    }
+                    execute_job(&executables, &manifest, &req)
+                }));
+                // Whatever happened, the rows are no longer ahead of anyone.
+                drop(rows);
+                match outcome {
+                    Ok(result) => {
+                        let result = result.map(|(logits, bucket, exec_micros)| ExecResponse {
+                            logits,
+                            bucket,
+                            queue_micros,
+                            exec_micros,
+                        });
+                        let _ = reply.send(result); // receiver may have timed out; fine
+                    }
+                    Err(panic) => {
+                        // The worker is poisoned: fail this job and every
+                        // queued message with a typed error, flag the
+                        // executor unhealthy (dispatch skips it, the pool
+                        // supervisor respawns it), and exit the thread.
+                        healthy.store(false, Ordering::Relaxed);
+                        let detail = panic_message(&panic);
+                        let _ = reply.send(Err(WorkerCrashed::new(&detail).into()));
+                        fail_queued(&rx, &detail);
+                        return;
+                    }
+                }
             }
             Msg::Load { model, reply } => {
                 let result = (|| -> Result<bool> {
@@ -315,6 +421,38 @@ fn device_thread(
                 let _ = reply.send(Ok(had));
             }
             Msg::Shutdown => break,
+        }
+    }
+}
+
+/// Best-effort panic payload → human detail (panics carry `&str` or
+/// `String` in practice; anything else gets a fixed label).
+fn panic_message(panic: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic in device worker".to_string()
+    }
+}
+
+/// Drain everything already queued behind a crashed worker, replying a
+/// typed error so no caller blocks on a dead thread. Each dropped Job's
+/// RowsGuard retires its in-flight rows.
+fn fail_queued(rx: &mpsc::Receiver<Msg>, detail: &str) {
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            Msg::Job(job) => {
+                let _ = job.reply.send(Err(WorkerCrashed::new(detail).into()));
+            }
+            Msg::Load { reply, .. } => {
+                let _ = reply.send(Err(WorkerCrashed::new(detail).into()));
+            }
+            Msg::Unload { reply, .. } => {
+                let _ = reply.send(Err(WorkerCrashed::new(detail).into()));
+            }
+            Msg::Shutdown => {}
         }
     }
 }
@@ -458,5 +596,55 @@ mod tests {
         assert!(o.models.is_none());
         assert!(o.buckets.is_none());
         assert!(!o.verify_sha);
+    }
+
+    #[test]
+    fn worker_crashed_is_typed_through_anyhow() {
+        let e: anyhow::Error = WorkerCrashed::new("boom").into();
+        assert_eq!(e.downcast_ref::<WorkerCrashed>().unwrap().detail, "boom");
+        assert!(e.to_string().contains("device worker crashed: boom"));
+    }
+
+    #[test]
+    fn fail_queued_replies_typed_and_retires_rows() {
+        let (tx, rx) = mpsc::channel();
+        let counter = Arc::new(AtomicUsize::new(2));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Msg::Job(Job {
+            req: ExecRequest {
+                model: "m".into(),
+                batch: 2,
+                data: vec![0.0; 2],
+            },
+            enqueued: Stopwatch::start(),
+            reply: reply_tx,
+            rows: RowsGuard {
+                counter: Arc::clone(&counter),
+                rows: 2,
+            },
+        }))
+        .unwrap();
+        // A queued Load must also get a reply, not a hang.
+        let (load_tx, load_rx) = mpsc::channel();
+        tx.send(Msg::Load {
+            model: "m".into(),
+            reply: load_tx,
+        })
+        .unwrap();
+        fail_queued(&rx, "boom");
+        let err = reply_rx.recv().unwrap().unwrap_err();
+        assert!(err.downcast_ref::<WorkerCrashed>().is_some());
+        assert!(load_rx.recv().unwrap().is_err());
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn panic_message_extracts_str_and_string() {
+        let a: Box<dyn std::any::Any + Send> = Box::new("static msg");
+        assert_eq!(panic_message(&a), "static msg");
+        let b: Box<dyn std::any::Any + Send> = Box::new(String::from("owned msg"));
+        assert_eq!(panic_message(&b), "owned msg");
+        let c: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(&c), "panic in device worker");
     }
 }

@@ -16,9 +16,11 @@
 pub mod executor;
 pub mod manifest;
 pub mod pool;
+pub mod supervise;
 pub mod tensor;
 
-pub use executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle};
+pub use executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, WorkerCrashed};
 pub use manifest::{slot_name, split_slot, ArtifactRef, Manifest, ModelEntry};
-pub use pool::ExecutorPool;
+pub use pool::{ExecutorPool, PoolEvent};
+pub use supervise::{run_supervisor, Backoff, SupervisorOptions};
 pub use tensor::{DType, TensorView};

@@ -17,17 +17,40 @@
 
 use super::executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, ExecutorOptions};
 use super::manifest::{slot_name, split_slot, Manifest};
+use super::supervise::{run_supervisor, SupervisorOptions};
 use anyhow::{bail, Result};
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+
+/// Supervision events the pool reports to its observer (the coordinator
+/// maps these onto metric counters; the runtime layer stays metrics-free).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// A worker slot was found unhealthy and a respawn is being attempted.
+    Crash,
+    /// A crashed slot was replaced with a fresh executor.
+    Respawn,
+    /// A respawn attempt failed (will retry after backoff).
+    RespawnFailed,
+}
 
 pub struct ExecutorPool {
-    executors: Vec<Executor>,
+    /// Slots, not bare executors: the supervisor swaps a crashed slot's
+    /// executor under its write lock while dispatch reads race past it.
+    executors: Vec<RwLock<Executor>>,
     manifest: Arc<Manifest>,
+    /// Boot options, kept so respawns compile with the same policy knobs
+    /// (the model list is overridden with the *current* resident set).
+    base_opts: ExecutorOptions,
     /// Models currently resident on every worker.
     loaded: RwLock<HashSet<String>>,
     next: AtomicUsize,
+    crashes: AtomicU64,
+    respawns: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    supervisor: Mutex<Option<thread::JoinHandle<u64>>>,
 }
 
 impl ExecutorPool {
@@ -49,38 +72,152 @@ impl ExecutorPool {
             .map(|m| m.name.clone())
             .collect();
         let executors = (0..workers)
-            .map(|_| Executor::spawn(Arc::clone(&manifest), opts.clone()))
+            .map(|_| Executor::spawn(Arc::clone(&manifest), opts.clone()).map(RwLock::new))
             .collect::<Result<Vec<_>>>()?;
         Ok(ExecutorPool {
             executors,
             manifest,
+            base_opts: opts,
             loaded: RwLock::new(loaded),
             next: AtomicUsize::new(0),
+            crashes: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            supervisor: Mutex::new(None),
         })
     }
 
-    /// Round-robin pick of a worker handle.
-    pub fn handle(&self) -> ExecutorHandle {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.executors.len();
-        self.executors[i].handle()
+    /// Start the background supervisor: polls worker health and respawns
+    /// crashed executors with exponential backoff, reporting [`PoolEvent`]s
+    /// to `on_event`. Holds only a `Weak` reference, so the pool can still
+    /// drop; `Drop` joins the thread. Call at most once.
+    pub fn start_supervisor(
+        self: &Arc<Self>,
+        opts: SupervisorOptions,
+        on_event: impl Fn(PoolEvent) + Send + Sync + 'static,
+    ) {
+        let weak = Arc::downgrade(self);
+        let weak2 = Arc::downgrade(self);
+        let shutdown = Arc::clone(&self.shutdown);
+        let n = self.executors.len();
+        let handle = thread::Builder::new()
+            .name("flexserve-supervisor".into())
+            .spawn(move || {
+                run_supervisor(
+                    opts,
+                    &shutdown,
+                    n,
+                    move |i| match weak.upgrade() {
+                        // Report "healthy" once the pool is gone so the
+                        // loop idles until the shutdown flag (also owned
+                        // by the dropped pool's clone) stops it.
+                        None => true,
+                        Some(p) => p.executors[i].read().unwrap().is_healthy(),
+                    },
+                    move |i| {
+                        let Some(p) = weak2.upgrade() else {
+                            return Ok(());
+                        };
+                        p.crashes.fetch_add(1, Ordering::Relaxed);
+                        on_event(PoolEvent::Crash);
+                        match p.respawn_slot(i) {
+                            Ok(()) => {
+                                on_event(PoolEvent::Respawn);
+                                Ok(())
+                            }
+                            Err(e) => {
+                                on_event(PoolEvent::RespawnFailed);
+                                Err(e)
+                            }
+                        }
+                    },
+                )
+            })
+            .expect("spawning pool supervisor thread");
+        *self.supervisor.lock().unwrap() = Some(handle);
     }
 
-    /// Pick the worker with the fewest in-flight rows (ties rotate via the
-    /// round-robin cursor so an idle pool still spreads work).
+    /// Replace slot `i`'s crashed executor with a fresh one compiled with
+    /// the boot policy but the *current* resident model set, so runtime
+    /// loads/unloads survive the crash.
+    fn respawn_slot(&self, i: usize) -> Result<()> {
+        let models: Vec<String> = self.loaded.read().unwrap().iter().cloned().collect();
+        let opts = ExecutorOptions {
+            models: Some(models),
+            ..self.base_opts.clone()
+        };
+        let fresh = Executor::spawn(Arc::clone(&self.manifest), opts)?;
+        // Old executor drops here: its device thread already exited, so
+        // the Shutdown send fails harmlessly and join returns at once.
+        *self.executors[i].write().unwrap() = fresh;
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Crash incidents detected by the supervisor so far.
+    pub fn crashes(&self) -> u64 {
+        self.crashes.load(Ordering::Relaxed)
+    }
+
+    /// Successful respawns so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Per-worker health flags (true = device thread alive).
+    pub fn healthy_workers(&self) -> Vec<bool> {
+        self.executors
+            .iter()
+            .map(|e| e.read().unwrap().is_healthy())
+            .collect()
+    }
+
+    /// Round-robin pick of a worker handle, skipping crashed workers when
+    /// a healthy one exists.
+    pub fn handle(&self) -> ExecutorHandle {
+        let n = self.executors.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        for off in 0..n {
+            let e = self.executors[(start + off) % n].read().unwrap();
+            if e.is_healthy() {
+                return e.handle();
+            }
+        }
+        // Every worker crashed: fail fast through the dead handle's typed
+        // error rather than stalling the caller.
+        self.executors[start].read().unwrap().handle()
+    }
+
+    /// Pick the healthy worker with the fewest in-flight rows (ties rotate
+    /// via the round-robin cursor so an idle pool still spreads work);
+    /// crashed workers are skipped until the supervisor respawns them.
     pub fn least_loaded(&self) -> ExecutorHandle {
-        let loads: Vec<usize> = self.executors.iter().map(Executor::in_flight_rows).collect();
+        let mut loads = Vec::with_capacity(self.executors.len());
+        let mut healthy = Vec::with_capacity(self.executors.len());
+        for e in &self.executors {
+            let e = e.read().unwrap();
+            loads.push(e.in_flight_rows());
+            healthy.push(e.is_healthy());
+        }
         let start = self.next.fetch_add(1, Ordering::Relaxed) % self.executors.len();
-        self.executors[pick_least_loaded(&loads, start)].handle()
+        let pick = pick_least_loaded_healthy(&loads, &healthy, start);
+        self.executors[pick].read().unwrap().handle()
     }
 
     /// Per-worker in-flight row counts (diagnostics / tests).
     pub fn in_flight_rows(&self) -> Vec<usize> {
-        self.executors.iter().map(Executor::in_flight_rows).collect()
+        self.executors
+            .iter()
+            .map(|e| e.read().unwrap().in_flight_rows())
+            .collect()
     }
 
     /// All worker handles (for per-worker dispatch strategies).
     pub fn handles(&self) -> Vec<ExecutorHandle> {
-        self.executors.iter().map(|e| e.handle()).collect()
+        self.executors
+            .iter()
+            .map(|e| e.read().unwrap().handle())
+            .collect()
     }
 
     pub fn workers(&self) -> usize {
@@ -121,7 +258,7 @@ impl ExecutorPool {
         let receivers = self
             .executors
             .iter()
-            .map(|e| e.handle().load_model_async(name))
+            .map(|e| e.read().unwrap().handle().load_model_async(name))
             .collect::<Result<Vec<_>>>()?;
         // …then collect ALL outcomes (never bail mid-collect: rollback
         // must wait until every worker has finished compiling or failing).
@@ -139,7 +276,7 @@ impl ExecutorPool {
         }
         if let Some((i, err)) = failure {
             for e in &self.executors {
-                let _ = e.handle().unload_model(name);
+                let _ = e.read().unwrap().handle().unload_model(name);
             }
             return Err(err.context(format!("loading '{name}' onto worker {i}")));
         }
@@ -152,7 +289,7 @@ impl ExecutorPool {
     pub fn unload_model(&self, name: &str) -> Result<bool> {
         let mut had = false;
         for e in &self.executors {
-            had |= e.handle().unload_model(name)?;
+            had |= e.read().unwrap().handle().unload_model(name)?;
         }
         let tracked = self.loaded.write().unwrap().remove(name);
         Ok(had || tracked)
@@ -204,6 +341,37 @@ impl ExecutorPool {
     }
 }
 
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.supervisor.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Health-masked least-loaded selection: the healthy index with the
+/// minimum load (ties rotate from `start`); if *every* worker is crashed,
+/// fall back to the plain pick so the caller fails fast on a typed error
+/// instead of having nowhere to send.
+pub fn pick_least_loaded_healthy(loads: &[usize], healthy: &[bool], start: usize) -> usize {
+    debug_assert_eq!(loads.len(), healthy.len());
+    let n = loads.len();
+    let mut best: Option<usize> = None;
+    for off in 0..n {
+        let i = (start + off) % n;
+        if !healthy[i] {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) if loads[i] < loads[b] => best = Some(i),
+            _ => {}
+        }
+    }
+    best.unwrap_or_else(|| pick_least_loaded(loads, start))
+}
+
 /// Pure least-loaded selection: the index with the minimum load, scanning
 /// from `start` so equal loads rotate instead of pinning worker 0.
 pub fn pick_least_loaded(loads: &[usize], start: usize) -> usize {
@@ -249,5 +417,35 @@ mod tests {
         for start in 0..8 {
             assert_ne!(pick_least_loaded(&[0, 1000, 0, 0], start), 1);
         }
+    }
+
+    #[test]
+    fn crashed_workers_are_skipped() {
+        // Worker 0 is idle but crashed: the healthy-but-busier worker wins.
+        for start in 0..8 {
+            assert_eq!(
+                pick_least_loaded_healthy(&[0, 7, 9], &[false, true, true], start),
+                1
+            );
+        }
+        // Masked ties still rotate with the cursor.
+        assert_eq!(
+            pick_least_loaded_healthy(&[0, 2, 2], &[false, true, true], 2),
+            2
+        );
+        assert_eq!(
+            pick_least_loaded_healthy(&[0, 2, 2], &[false, true, true], 1),
+            1
+        );
+    }
+
+    #[test]
+    fn all_crashed_falls_back_to_plain_pick() {
+        // Nowhere healthy to send: degrade to the unmasked pick so the
+        // caller gets a fast typed WorkerCrashed instead of a panic here.
+        assert_eq!(
+            pick_least_loaded_healthy(&[3, 1, 2], &[false, false, false], 0),
+            1
+        );
     }
 }

@@ -1,0 +1,224 @@
+//! Generic slot supervision: a polling loop that watches N worker slots'
+//! health flags and respawns crashed ones with exponential backoff.
+//!
+//! The loop is deliberately abstract — `healthy(i)` and `respawn(i)` are
+//! closures — so [`pool::ExecutorPool`](super::pool::ExecutorPool) drives
+//! it over real device executors while the device-free `chaos-smoke`
+//! harness drives the *same* machinery over toy crashing workers and
+//! still exercises the respawn counters end to end.
+//!
+//! Policy: an unhealthy slot is respawned as soon as its backoff window
+//! allows; every attempt (success or failure) widens the window
+//! (base·2ᵏ, capped), and the window resets only after the slot has
+//! stayed healthy for `heal_after` — a crash-looping worker therefore
+//! backs off instead of hot-spinning device setup.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Exponential backoff: `base * 2^attempts`, capped at `max`.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    attempts: u32,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, max: Duration) -> Backoff {
+        Backoff {
+            base,
+            max,
+            attempts: 0,
+        }
+    }
+
+    /// The delay to wait before the *next* attempt; widens each call.
+    pub fn next_delay(&mut self) -> Duration {
+        let factor = 1u32.checked_shl(self.attempts).unwrap_or(u32::MAX);
+        let delay = self
+            .base
+            .checked_mul(factor)
+            .map_or(self.max, |d| d.min(self.max));
+        self.attempts = self.attempts.saturating_add(1);
+        delay
+    }
+
+    /// Back to the base window (the worker proved itself healthy).
+    pub fn reset(&mut self) {
+        self.attempts = 0;
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorOptions {
+    /// Health-poll cadence.
+    pub poll: Duration,
+    /// First-respawn backoff window.
+    pub backoff_base: Duration,
+    /// Backoff cap.
+    pub backoff_max: Duration,
+    /// Continuous healthy time after which a slot's backoff resets.
+    pub heal_after: Duration,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> SupervisorOptions {
+        SupervisorOptions {
+            poll: Duration::from_millis(100),
+            backoff_base: Duration::from_millis(500),
+            backoff_max: Duration::from_secs(30),
+            heal_after: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Poll `n` slots until `shutdown`; respawn unhealthy ones per the backoff
+/// policy above. Returns the number of successful respawns (failed
+/// `respawn` attempts are retried on the next eligible poll).
+pub fn run_supervisor(
+    opts: SupervisorOptions,
+    shutdown: &AtomicBool,
+    n: usize,
+    healthy: impl Fn(usize) -> bool,
+    mut respawn: impl FnMut(usize) -> Result<()>,
+) -> u64 {
+    let mut backoffs: Vec<Backoff> = (0..n)
+        .map(|_| Backoff::new(opts.backoff_base, opts.backoff_max))
+        .collect();
+    let mut not_before: Vec<Option<Instant>> = vec![None; n];
+    let mut healthy_since: Vec<Option<Instant>> = vec![None; n];
+    let mut respawned = 0u64;
+    while !shutdown.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        for i in 0..n {
+            if healthy(i) {
+                match healthy_since[i] {
+                    Some(since) if now.duration_since(since) >= opts.heal_after => {
+                        backoffs[i].reset();
+                    }
+                    Some(_) => {}
+                    None => healthy_since[i] = Some(now),
+                }
+                continue;
+            }
+            healthy_since[i] = None;
+            if let Some(t) = not_before[i] {
+                if now < t {
+                    continue; // still inside the backoff window
+                }
+            }
+            not_before[i] = Some(now + backoffs[i].next_delay());
+            if respawn(i).is_ok() {
+                respawned += 1;
+            }
+        }
+        thread::sleep(opts.poll);
+    }
+    respawned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn backoff_doubles_and_caps_then_resets() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(40));
+        let delays: Vec<u64> = (0..5).map(|_| b.next_delay().as_millis() as u64).collect();
+        assert_eq!(delays, vec![10, 20, 40, 40, 40]);
+        b.reset();
+        assert_eq!(b.next_delay(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn backoff_survives_huge_attempt_counts() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(30));
+        b.attempts = 200; // would overflow a shift without the guards
+        assert_eq!(b.next_delay(), Duration::from_secs(30));
+    }
+
+    #[test]
+    fn supervisor_respawns_crashed_slot_and_stops_on_shutdown() {
+        let opts = SupervisorOptions {
+            poll: Duration::from_millis(2),
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(8),
+            heal_after: Duration::from_millis(50),
+        };
+        let flags: Arc<Vec<AtomicBool>> =
+            Arc::new((0..2).map(|_| AtomicBool::new(true)).collect());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let respawns = Arc::new(AtomicU64::new(0));
+        let t = {
+            let flags = Arc::clone(&flags);
+            let shutdown = Arc::clone(&shutdown);
+            let respawns = Arc::clone(&respawns);
+            thread::spawn(move || {
+                run_supervisor(
+                    opts,
+                    &shutdown,
+                    2,
+                    |i| flags[i].load(Ordering::Relaxed),
+                    |i| {
+                        respawns.fetch_add(1, Ordering::Relaxed);
+                        flags[i].store(true, Ordering::Relaxed);
+                        Ok(())
+                    },
+                )
+            })
+        };
+        flags[1].store(false, Ordering::Relaxed);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !flags[1].load(Ordering::Relaxed) && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        let total = t.join().unwrap();
+        assert!(flags[1].load(Ordering::Relaxed), "slot 1 was respawned");
+        assert_eq!(total, respawns.load(Ordering::Relaxed));
+        assert!(total >= 1, "at least the crashed slot respawned");
+    }
+
+    #[test]
+    fn failing_respawns_back_off() {
+        let opts = SupervisorOptions {
+            poll: Duration::from_millis(1),
+            backoff_base: Duration::from_millis(30),
+            backoff_max: Duration::from_millis(120),
+            heal_after: Duration::from_secs(10),
+        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let attempts: Arc<Mutex<Vec<Instant>>> = Arc::new(Mutex::new(Vec::new()));
+        let t = {
+            let shutdown = Arc::clone(&shutdown);
+            let attempts = Arc::clone(&attempts);
+            thread::spawn(move || {
+                run_supervisor(
+                    opts,
+                    &shutdown,
+                    1,
+                    |_| false, // never heals
+                    |_| {
+                        attempts.lock().unwrap().push(Instant::now());
+                        anyhow::bail!("still broken")
+                    },
+                )
+            })
+        };
+        thread::sleep(Duration::from_millis(120));
+        shutdown.store(true, Ordering::Relaxed);
+        assert_eq!(t.join().unwrap(), 0, "failed respawns are not counted");
+        let ts = attempts.lock().unwrap().clone();
+        assert!(ts.len() >= 2, "kept retrying: {} attempts", ts.len());
+        // Windows widen: the second gap is at least the base window.
+        if ts.len() >= 3 {
+            assert!(ts[2].duration_since(ts[1]) >= Duration::from_millis(30));
+        }
+        assert!(ts[1].duration_since(ts[0]) >= Duration::from_millis(30));
+    }
+}

@@ -1,0 +1,266 @@
+//! Device-free failure-containment integration tests.
+//!
+//! The chaos plane is a process-global singleton (`chaos::install` is
+//! once-only), so every assertion that depends on the installed plane
+//! lives in ONE test (`chaos_containment_end_to_end`); the remaining
+//! tests use instance-level `ChaosPlane`s or no chaos at all.
+
+use flexserve::chaos::{self, ChaosPlane, FaultKind};
+use flexserve::coordinator::{ApiError, BreakerConfig, Breakers, Metrics};
+use flexserve::http::{Client, Request, Response, Router, Server};
+use flexserve::json::{self, Value};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn post_predict(c: &mut Client) -> anyhow::Result<Response> {
+    c.request(&Request::new("POST", "/v1/predict", b"{}".to_vec()))
+}
+
+fn error_code(resp: &Response) -> Option<String> {
+    resp.json_body()
+        .ok()
+        .and_then(|b| b.path(&["error", "code"]).and_then(Value::as_str).map(str::to_string))
+}
+
+/// Same spec + same seed = same injection sequence; disarming stops
+/// injection without losing the counters.
+#[test]
+fn chaos_plane_is_seeded_and_deterministic() {
+    let spec = "exec.device=0.5:panic,sched.flush=0.25:error";
+    let a = ChaosPlane::parse(spec, 123).unwrap();
+    let b = ChaosPlane::parse(spec, 123).unwrap();
+    let seq_a: Vec<Option<FaultKind>> = (0..64).map(|_| a.decide(chaos::EXEC_DEVICE)).collect();
+    let seq_b: Vec<Option<FaultKind>> = (0..64).map(|_| b.decide(chaos::EXEC_DEVICE)).collect();
+    assert_eq!(seq_a, seq_b, "same seed must replay the same faults");
+    assert!(seq_a.iter().any(Option::is_some), "50% rate injects within 64 draws");
+    assert!(seq_a.iter().any(Option::is_none), "50% rate passes within 64 draws");
+    assert_eq!(
+        a.injected(chaos::EXEC_DEVICE),
+        seq_a.iter().filter(|d| d.is_some()).count() as u64
+    );
+    // A different seed diverges somewhere in a window this long.
+    let c = ChaosPlane::parse(spec, 124).unwrap();
+    let seq_c: Vec<Option<FaultKind>> = (0..64).map(|_| c.decide(chaos::EXEC_DEVICE)).collect();
+    assert_ne!(seq_a, seq_c, "different seed, different schedule");
+
+    // Unconfigured sites never fire; disarming silences configured ones.
+    assert_eq!(a.decide(chaos::GATEWAY_CONNECT), None);
+    a.set_armed(false);
+    let before = a.injected(chaos::EXEC_DEVICE);
+    assert!((0..64).all(|_| a.decide(chaos::EXEC_DEVICE).is_none()));
+    assert_eq!(a.injected(chaos::EXEC_DEVICE), before, "disarmed draws don't count");
+}
+
+#[test]
+fn chaos_spec_grammar_rejects_nonsense() {
+    assert!(ChaosPlane::parse("exec.device=0.5:panic", 0).is_ok());
+    assert!(ChaosPlane::parse("bogus.site=0.5:panic", 0).is_err(), "unknown site");
+    assert!(ChaosPlane::parse("exec.device=0:panic", 0).is_err(), "rate 0 is not a rule");
+    assert!(ChaosPlane::parse("exec.device=1.5:panic", 0).is_err(), "rate > 1");
+    assert!(ChaosPlane::parse("exec.device=0.5:frobnicate", 0).is_err(), "unknown kind");
+    assert!(
+        ChaosPlane::parse("exec.device=0.5:panic,exec.device=0.2:drop", 0).is_err(),
+        "duplicate site"
+    );
+    assert!(ChaosPlane::parse("exec.device", 0).is_err(), "missing rate:kind");
+}
+
+/// A panicking handler over a LIVE server (real socket, real worker
+/// thread) answers a typed 500 and the connection worker survives to
+/// serve the next request — the router's panic guard, end to end.
+#[test]
+fn panicking_handler_answers_typed_500_over_live_server() {
+    let mut router = Router::new();
+    router.add("GET", "/boom", |_req, _p| panic!("kaboom"));
+    router.add("GET", "/ok", |_req, _p| {
+        Response::json(200, &json::obj([("ok", Value::from(true))]))
+    });
+    let server = Server::spawn("127.0.0.1:0", 1, router.into_handler()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.set_timeout(Duration::from_secs(5)).unwrap();
+
+    let resp = c.get("/boom").unwrap();
+    assert_eq!(resp.status, 500);
+    assert_eq!(error_code(&resp).as_deref(), Some("internal"));
+
+    // One worker thread: if the panic poisoned it, this request hangs or
+    // dies instead of answering.
+    let resp = c.get("/ok").unwrap();
+    assert_eq!(resp.status, 200);
+    let resp = c.get("/boom").unwrap();
+    assert_eq!(resp.status, 500, "guard holds on repeat panics");
+    server.stop();
+}
+
+/// The acceptance scenario: a seeded spec injecting executor panics and
+/// gateway connection drops, driven over live HTTP. Every request gets a
+/// 2xx or a *typed* error (never an untyped 500, never a hang), the
+/// breaker opens and — once the plane is disarmed — recovers through
+/// half-open, all observable in the shared metrics registry.
+#[test]
+fn chaos_containment_end_to_end() {
+    let metrics = Arc::new(Metrics::new());
+    let plane = ChaosPlane::parse("exec.device=0.4:panic,gateway.connect=0.3:drop", 11).unwrap();
+    chaos::install(plane).unwrap();
+    chaos::set_sink(Arc::clone(&metrics));
+
+    // The backend: real breakers gating a simulated device forward whose
+    // failure source is the exec.device injection site.
+    let breakers = Arc::new(Breakers::new(
+        BreakerConfig {
+            fail_threshold: 2,
+            cooldown: Duration::from_millis(250),
+        },
+        Arc::clone(&metrics),
+    ));
+    let key = Breakers::key("echo", 1);
+    let mut router = Router::new();
+    {
+        let breakers = Arc::clone(&breakers);
+        let key = key.clone();
+        router.add("POST", "/v1/predict", move |_req, _p| {
+            if let Err(e) = breakers.check(&key) {
+                return e.to_response();
+            }
+            match chaos::decide(chaos::EXEC_DEVICE) {
+                Some(kind) => {
+                    breakers.record(&key, false);
+                    ApiError::worker_crashed(format!("chaos: injected {}", kind.as_str()))
+                        .to_response()
+                }
+                None => {
+                    breakers.record(&key, true);
+                    Response::json(200, &json::obj([("ok", Value::from(true))]))
+                }
+            }
+        });
+    }
+    router.add("GET", "/v1/healthz", |_req, _p| {
+        Response::json(
+            200,
+            &json::obj([
+                ("status", Value::from("ok")),
+                ("ready", Value::from(true)),
+                ("active", Value::Arr(vec![Value::from("echo")])),
+            ]),
+        )
+    });
+    let backend = Server::spawn("127.0.0.1:0", 4, router.into_handler()).unwrap();
+    let mut c = Client::connect(backend.addr).unwrap();
+    // The read timeout is the hang detector: a request that never answers
+    // fails the test here instead of wedging it.
+    c.set_timeout(Duration::from_secs(5)).unwrap();
+
+    let (mut ok, mut crashed, mut open) = (0u32, 0u32, 0u32);
+    for i in 0..250 {
+        let resp = post_predict(&mut c).unwrap_or_else(|e| panic!("request {i} hung/died: {e}"));
+        if resp.status == 200 {
+            ok += 1;
+            continue;
+        }
+        let code = error_code(&resp)
+            .unwrap_or_else(|| panic!("request {i}: untyped {} response", resp.status));
+        match code.as_str() {
+            "exec.worker_crashed" => crashed += 1,
+            "exec.circuit_open" => {
+                assert!(
+                    resp.header("retry-after").is_some(),
+                    "circuit_open without Retry-After"
+                );
+                open += 1;
+            }
+            other => panic!("request {i}: unexpected error code '{other}'"),
+        }
+    }
+    assert!(ok > 0, "some requests must succeed");
+    assert!(crashed > 0, "40% panic rate must surface typed worker_crashed errors");
+    assert!(
+        metrics.counter("breaker_open_total") >= 1,
+        "threshold-2 breaker must open under a 40% failure rate (opens seen: {open})"
+    );
+    assert!(metrics.counter("chaos_inject_exec_device_total") > 0);
+
+    // The same backend behind the real gateway: connection drops at the
+    // gateway.connect site degrade to typed errors, not hangs.
+    let mut gcfg = flexserve::config::GatewayConfig::default();
+    gcfg.addr = "127.0.0.1:0".into();
+    gcfg.backends = vec![("b0".to_string(), backend.addr.to_string())];
+    gcfg.probe_interval = Duration::from_millis(50);
+    gcfg.probe_connect_timeout = Duration::from_millis(100);
+    gcfg.probe_timeout = Duration::from_millis(250);
+    gcfg.probe_jitter = Duration::from_millis(10);
+    gcfg.rise_after = 1;
+    gcfg.retry_budget = 0; // single sleep-free attempt per request
+    let gw = flexserve::gateway::spawn(gcfg).unwrap();
+    let mut gc = Client::connect(gw.server.addr).unwrap();
+    gc.set_timeout(Duration::from_secs(5)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let doc = gc.get("/v1/gateway").unwrap().json_body().unwrap();
+        let state = doc
+            .get("backends")
+            .and_then(Value::as_arr)
+            .and_then(|arr| arr.first())
+            .and_then(|b| b.get("state").and_then(Value::as_str))
+            .unwrap_or("")
+            .to_string();
+        if state == "up" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "prober never admitted b0 ('{state}')");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    for i in 0..60 {
+        let resp = post_predict(&mut gc)
+            .unwrap_or_else(|e| panic!("gateway request {i} hung/died: {e}"));
+        if resp.status == 200 {
+            continue;
+        }
+        let code = error_code(&resp)
+            .unwrap_or_else(|| panic!("gateway request {i}: untyped {}", resp.status));
+        assert!(
+            matches!(
+                code.as_str(),
+                "exec.worker_crashed" | "exec.circuit_open" | "gateway.no_backend"
+            ),
+            "gateway request {i}: unexpected error code '{code}'"
+        );
+    }
+    assert!(
+        chaos::global().unwrap().injected(chaos::GATEWAY_CONNECT) > 0,
+        "gateway.connect site never injected over 60 requests at 30%"
+    );
+
+    // Recovery: disarm the plane; the breaker must walk open → half-open
+    // probe → closed on live traffic, and then stay clean.
+    chaos::set_armed(false);
+    std::thread::sleep(Duration::from_millis(300));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while breakers.state_of(&key) != "closed" {
+        assert!(
+            Instant::now() < deadline,
+            "breaker never recovered after disarm (state '{}')",
+            breakers.state_of(&key)
+        );
+        let _ = post_predict(&mut c).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(metrics.counter("breaker_half_open_total") >= 1);
+    assert!(metrics.counter("breaker_close_total") >= 1);
+    for _ in 0..10 {
+        assert_eq!(post_predict(&mut c).unwrap().status, 200);
+    }
+
+    // The counters all live in the one exposition handlers scrape.
+    let prom = metrics.render_prometheus();
+    for series in [
+        "flexserve_chaos_inject_exec_device_total",
+        "flexserve_chaos_inject_gateway_connect_total",
+        "flexserve_breaker_open_total",
+        "flexserve_breaker_close_total",
+    ] {
+        assert!(prom.contains(series), "missing series {series} in:\n{prom}");
+    }
+    gw.stop();
+    backend.stop();
+}

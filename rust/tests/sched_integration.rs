@@ -5,7 +5,7 @@
 //! each one manipulates the global queue state.
 
 use flexserve::config::ServeConfig;
-use flexserve::coordinator::{serve, Metrics, SchedConfig, Scheduler, ServerState, TargetKey};
+use flexserve::coordinator::{serve, ApiError, Metrics, SchedConfig, Scheduler, ServerState, TargetKey};
 use flexserve::http::{Client, ServerHandle};
 use flexserve::json::{self, Value};
 use flexserve::util::Prng;
@@ -59,6 +59,7 @@ fn stack() -> &'static Stack {
             queue_cap: 2,
             deadline: None,
             adaptive: false,
+            ..Default::default()
         });
         let (handle, state) = serve(&config).expect("overload server starts");
         Stack { handle, state }
@@ -271,4 +272,53 @@ fn shutdown_drains_queued_requests() {
     let mut rng = Prng::new(6);
     let (data, _) = workload::make_batch(&mut rng, 1);
     assert!(sched.submit(TargetKey::Ensemble, data, 1, None).is_err());
+}
+
+#[test]
+fn bounded_drain_sheds_queued_requests_typed() {
+    require_artifacts!();
+    let _guard = GUARD.lock().unwrap();
+    let ensemble = stack().state.ensemble.clone();
+    let metrics = Arc::new(Metrics::new());
+    // drain_timeout ZERO: the deadline has provably passed by the time the
+    // planner wakes from drain()'s notify, so the parked request MUST take
+    // the shed path — no timing window in the assertion.
+    let sched = Arc::new(
+        Scheduler::spawn(
+            ensemble,
+            SchedConfig {
+                max_batch: 32,
+                max_delay: Duration::from_secs(5), // parks the request
+                adaptive: false,
+                drain_timeout: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        )
+        .unwrap(),
+    );
+    let s2 = Arc::clone(&sched);
+    let submitter = std::thread::spawn(move || {
+        let mut rng = Prng::new(7);
+        let (data, _) = workload::make_batch(&mut rng, 1);
+        s2.submit(TargetKey::Ensemble, data, 1, None)
+    });
+    for _ in 0..200 {
+        if sched.queue_depth() > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(sched.queue_depth() > 0, "request never enqueued");
+    sched.drain();
+    let err = submitter
+        .join()
+        .unwrap()
+        .expect_err("expired drain must fail the queued request");
+    let api = err
+        .downcast_ref::<ApiError>()
+        .expect("shed is typed, not an anyhow string");
+    assert_eq!(api.status, 503);
+    assert_eq!(api.code, "server.shutting_down");
+    assert_eq!(metrics.counter("sched_shed_shutdown_total"), 1);
 }
