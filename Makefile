@@ -7,14 +7,21 @@
 #   make test        tier-1 verify: release build + tests
 #   make bench       build the bench harness and smoke it against an
 #                    in-process echo target (no artifacts needed); point
-#                    it at a live server with BENCH_FLAGS='--addr ...'
+#                    it at a live server with BENCH_FLAGS='--addr ...'.
+#                    Runs once per wire (v1 HTTP, framed mux) and writes
+#                    both records into BENCH_serve.json
 #   make gateway-smoke  device-free gateway cycle: stickiness, kill,
 #                    ejection, rerouting over in-process echo replicas
 #   make chaos-smoke device-free failure-containment cycle under a seeded
 #                    chaos plane: injected panics + connection drops,
 #                    breaker trip/recover, supervisor respawns
+#   make mux-smoke   device-free streaming cycle: 100 out-of-order
+#                    correlations on one framed /v1/mux connection, a live
+#                    subscription observing an injected rollout, the
+#                    plain-HTTP /v1/events stream
 #   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs
-#                    drift from the README "Protocols" matrix
+#                    or the streaming plane (/v1/mux, /v1/events, mux.*
+#                    error codes) drift from the README
 #
 # `artifacts` needs the python side (jax + the pallas kernels); the Rust
 # targets need only cargo. Device-backed Rust tests self-skip when
@@ -25,7 +32,7 @@ ARTIFACTS ?= rust/artifacts
 
 BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
 
-.PHONY: artifacts serve test bench gateway-smoke chaos-smoke check-docs fmt clippy
+.PHONY: artifacts serve test bench gateway-smoke chaos-smoke mux-smoke check-docs fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -36,9 +43,19 @@ serve:
 test:
 	cd rust && cargo build --release && cargo test -q
 
+# Two records, one file: the v1 request/response baseline and the mux
+# framed-wire baseline (`--protocol mux` appended last wins over any
+# protocol in BENCH_FLAGS). The wrapper is plain JSON so the CI artifact
+# diffs against the committed numbers per wire.
 bench:
-	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --out ../BENCH_serve.json
-	@echo "wrote BENCH_serve.json"
+	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --out /tmp/flexserve_bench_v1.json
+	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --protocol mux --out /tmp/flexserve_bench_mux.json
+	@{ printf '{\n"bench": "flexserve-serve-baselines",\n"v1": '; \
+	   cat /tmp/flexserve_bench_v1.json; \
+	   printf ',\n"mux": '; \
+	   cat /tmp/flexserve_bench_mux.json; \
+	   printf '}\n'; } > BENCH_serve.json
+	@echo "wrote BENCH_serve.json (v1 + mux echo baselines)"
 
 gateway-smoke:
 	cd rust && cargo run --release -- gateway-smoke
@@ -46,15 +63,26 @@ gateway-smoke:
 chaos-smoke:
 	cd rust && cargo run --release -- chaos-smoke
 
+mux-smoke:
+	cd rust && cargo run --release -- mux-smoke
+
 # Every quoted "/v2..." string in v2.rs is a route pattern (the module
 # keeps other /v2 spellings out of string literals); each must appear
-# verbatim in the README's Protocols section.
+# verbatim in the README's Protocols section. The streaming plane's
+# routes, topics and error codes must likewise stay documented.
 check-docs:
 	@ok=1; \
 	for r in $$(grep -oE '"/v2[^"]*"' rust/src/coordinator/v2.rs | tr -d '"' | sort -u); do \
 		grep -qF -- "$$r" README.md || { echo "check-docs: README.md is missing v2 route $$r"; ok=0; }; \
 	done; \
-	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route in v2.rs"
+	for s in '/v1/mux' '/v1/events' 'mux.bad_frame' 'mux.duplicate_id' 'gateway.mux_unrouted' \
+			'?topics=' '?since=' 'lagged'; do \
+		grep -qF -- "$$s" README.md || { echo "check-docs: README.md is missing streaming doc $$s"; ok=0; }; \
+	done; \
+	for t in $$(grep -oE 'TOPIC_[A-Z]+: &str = "[a-z]+"' rust/src/mux/events.rs | grep -oE '"[a-z]+"' | tr -d '"'); do \
+		grep -qE "^\| .$$t." README.md || { echo "check-docs: README.md topic table is missing '$$t'"; ok=0; }; \
+	done; \
+	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route and the streaming plane"
 
 fmt:
 	cd rust && cargo fmt --check

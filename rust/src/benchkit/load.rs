@@ -17,12 +17,12 @@
 //! count — that is what the smoke test and the CI step use; wall-clock
 //! mode (`duration_secs`) is for real measurements.
 
-use crate::http::{Client, Request, Response};
+use crate::http::{Client, MuxClient, MuxMsg, Request, Response};
 use crate::json::{self, ser, Value};
 use crate::util::{Histogram, Prng, Stopwatch};
 use crate::workload;
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::SocketAddr;
 use std::sync::Barrier;
 
@@ -33,6 +33,10 @@ pub enum Protocol {
     V1,
     /// Open-Inference-Protocol `POST /v2/models/_ensemble/infer` bodies.
     V2,
+    /// Framed mux wire: v1 predict payloads multiplexed over one
+    /// persistent `POST /v1/mux` connection with a pipelined in-flight
+    /// window (latency is measured per correlation id, send → reply).
+    Mux,
 }
 
 impl Protocol {
@@ -40,7 +44,8 @@ impl Protocol {
         match s {
             "v1" => Ok(Protocol::V1),
             "v2" => Ok(Protocol::V2),
-            other => bail!("unknown protocol '{other}' (expected v1 or v2)"),
+            "mux" => Ok(Protocol::Mux),
+            other => bail!("unknown protocol '{other}' (expected v1, v2 or mux)"),
         }
     }
 
@@ -48,6 +53,7 @@ impl Protocol {
         match self {
             Protocol::V1 => "v1",
             Protocol::V2 => "v2",
+            Protocol::Mux => "mux",
         }
     }
 
@@ -56,9 +62,15 @@ impl Protocol {
         match self {
             Protocol::V1 => "/v1/predict",
             Protocol::V2 => "/v2/models/_ensemble/infer",
+            Protocol::Mux => "/v1/mux",
         }
     }
 }
+
+/// Concurrent correlation ids each mux connection keeps in flight (stays
+/// under the server's default per-connection cap of 32 so the harness
+/// measures service latency, not self-inflicted shedding).
+const MUX_WINDOW: usize = 8;
 
 /// Pre-rendered body variants per (connection, batch size): enough to
 /// defeat trivial caching anywhere on the path, few enough to stay cheap.
@@ -195,6 +207,12 @@ pub fn error_code_of(resp: &Response) -> Option<String> {
 /// ensemble's `parameters.served_versions` custom field.
 fn count_served_versions(resp: &Response, counts: &mut BTreeMap<String, u64>) {
     let Ok(v) = resp.json_body() else { return };
+    count_served_versions_value(&v, counts);
+}
+
+/// [`count_served_versions`] on an already-parsed body (the mux path gets
+/// response payloads as values, never as HTTP responses).
+fn count_served_versions_value(v: &Value, counts: &mut BTreeMap<String, u64>) {
     if let Some(models) = v.path(&["detail", "models"]).and_then(Value::as_obj) {
         for (name, m) in models {
             if let Some(ver) = m.get("version").and_then(Value::as_u64) {
@@ -253,6 +271,9 @@ fn build_request(path: &str, body: Vec<u8>) -> Request {
 /// it, so throughput is computed over measured traffic only and warmup
 /// never eats into `duration_secs`.
 fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> Result<ConnStats> {
+    if cfg.protocol == Protocol::Mux {
+        return drive_connection_mux(cfg, conn_id, start_line);
+    }
     let salt = 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(conn_id as u64 + 1);
     let mut rng = Prng::new(cfg.seed ^ salt);
     // Distinct batch sizes in the mix, each with a few pre-rendered bodies.
@@ -341,6 +362,118 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
     }
     stats.measured_secs = measure.elapsed_secs();
     stats.reconnects = client.reconnects() as u64;
+    Ok(stats)
+}
+
+/// One mux connection's pipelined loop: keep up to [`MUX_WINDOW`]
+/// correlated `request` frames in flight on one persistent `POST /v1/mux`
+/// session, recording per-id send→reply latency as terminal frames demux
+/// (in whatever order the server completes them). Payloads are the same
+/// pre-rendered v1 predict bodies the HTTP loop fires, parsed once.
+fn drive_connection_mux(
+    cfg: &LoadConfig,
+    conn_id: usize,
+    start_line: &Barrier,
+) -> Result<ConnStats> {
+    let salt = 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(conn_id as u64 + 1);
+    let mut rng = Prng::new(cfg.seed ^ salt);
+    let mut batches: Vec<usize> = cfg.batch_mix.iter().map(|&(b, _)| b).collect();
+    batches.sort_unstable();
+    batches.dedup();
+    let payloads: Vec<(usize, Vec<Value>)> = batches
+        .iter()
+        .map(|&b| {
+            let variants = (0..BODY_VARIANTS)
+                .map(|_| {
+                    let bytes = predict_body(Protocol::V1, &mut rng, b, cfg.record_versions);
+                    json::parse(std::str::from_utf8(&bytes).expect("rendered body is utf-8"))
+                        .expect("rendered body is valid JSON")
+                })
+                .collect();
+            (b, variants)
+        })
+        .collect();
+    let pick = |rng: &mut Prng, n: usize| -> (&Value, usize) {
+        let batch = workload::pick_weighted(rng, &cfg.batch_mix);
+        let (_, variants) = payloads
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .expect("batch came from the mix");
+        (&variants[n % variants.len()], batch)
+    };
+
+    let setup = (|| -> Result<MuxClient> {
+        let mut client = MuxClient::connect(cfg.addr)
+            .with_context(|| format!("mux connection {conn_id} to {}", cfg.addr))?;
+        for w in 0..cfg.warmup {
+            let (payload, _) = pick(&mut rng, w as usize);
+            let payload = payload.clone();
+            client.call(w + 1_000_000_000, &payload)?;
+        }
+        Ok(client)
+    })();
+    start_line.wait();
+    let mut client = setup?;
+
+    let measure = Stopwatch::start();
+    let mut stats = ConnStats {
+        requests: 0,
+        rows: 0,
+        errors: 0,
+        status_counts: BTreeMap::new(),
+        error_codes: BTreeMap::new(),
+        hist: Histogram::new(),
+        reconnects: 0,
+        served_versions: BTreeMap::new(),
+        measured_secs: 0.0,
+    };
+    let mut inflight: HashMap<u64, (Stopwatch, usize)> = HashMap::new();
+    let mut sent = 0u64;
+    let mut next_id = 1u64;
+    loop {
+        let done_sending = match cfg.iters {
+            Some(total) => sent >= total,
+            None => measure.elapsed_secs() >= cfg.duration_secs,
+        };
+        if done_sending && inflight.is_empty() {
+            break;
+        }
+        if !done_sending && inflight.len() < MUX_WINDOW {
+            let (payload, batch) = pick(&mut rng, sent as usize);
+            let payload = payload.clone();
+            client.request(next_id, &payload)?;
+            inflight.insert(next_id, (Stopwatch::start(), batch));
+            next_id += 1;
+            sent += 1;
+            continue;
+        }
+        match client.next()? {
+            MuxMsg::Reply { id, value, .. } => {
+                if let Some((sw, batch)) = inflight.remove(&id) {
+                    stats.hist.record(sw.elapsed_micros());
+                    stats.requests += 1;
+                    stats.rows += batch as u64;
+                    if cfg.record_versions {
+                        count_served_versions_value(&value, &mut stats.served_versions);
+                    }
+                }
+            }
+            MuxMsg::Error { id, status, code, .. } => {
+                if let Some((sw, batch)) = inflight.remove(&id) {
+                    stats.hist.record(sw.elapsed_micros());
+                    stats.requests += 1;
+                    stats.rows += batch as u64;
+                    stats.errors += 1;
+                    *stats.status_counts.entry(status).or_insert(0) += 1;
+                    *stats.error_codes.entry(code).or_insert(0) += 1;
+                }
+            }
+            // Events/pings never arrive here (the bench subscribes to
+            // nothing; client pongs are answered internally).
+            _ => {}
+        }
+    }
+    stats.measured_secs = measure.elapsed_secs();
     Ok(stats)
 }
 
@@ -780,6 +913,49 @@ mod tests {
             doc.path(&["served_versions", "mlp@2"]).unwrap().as_u64(),
             Some(5)
         );
+    }
+
+    /// The mux protocol drives the same closed loop over one framed
+    /// connection per thread: every pipelined correlation id completes,
+    /// latency is recorded per id, and the report records `"mux"`.
+    #[test]
+    fn mux_protocol_closed_loop_against_echo() {
+        let metrics = Arc::new(crate::coordinator::Metrics::new());
+        let exec: crate::mux::ExecFn = Arc::new(|p: &Value| Ok(p.clone()));
+        let svc =
+            crate::mux::MuxService::new(exec, Arc::clone(&metrics), crate::mux::MuxOptions::default());
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |req: &crate::http::Request| {
+                if req.path == "/v1/mux" {
+                    svc.takeover_response()
+                } else {
+                    Response::error(404, "not found")
+                }
+            }),
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 2,
+            iters: Some(6),
+            warmup: 1,
+            batch_mix: vec![(1, 0.5), (4, 0.5)],
+            protocol: Protocol::Mux,
+            seed: 11,
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests, 12); // 2 connections x 6 measured ids
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.hist.count(), 12);
+        assert!(report.rows >= 12);
+        let doc = report_json(&cfg, &report, None);
+        assert_eq!(doc.path(&["config", "protocol"]).unwrap().as_str(), Some("mux"));
+        assert_eq!(doc.path(&["config", "path"]).unwrap().as_str(), Some("/v1/mux"));
+        assert!(Protocol::parse("mux").is_ok());
+        server.stop();
     }
 
     #[test]

@@ -44,6 +44,23 @@ pub struct ServeConfig {
     pub chaos_seed: u64,
     /// Emit one access-log line per request on stderr (router middleware).
     pub access_log: bool,
+    /// Reap keep-alive connections idle (byte-silent between requests)
+    /// longer than this, in ms (0 = off). Mux/event connections are
+    /// exempt — they keep themselves alive with ping/pong frames.
+    pub idle_timeout_ms: u64,
+    /// Per-mux-connection concurrent in-flight request cap (`mux` block;
+    /// `--mux-max-inflight`). Past it, `request` frames shed with the
+    /// `429 server.overloaded` envelope.
+    pub mux_max_inflight: usize,
+    /// Mux responses larger than this stream as bounded `chunk` frames
+    /// (`--mux-chunk-bytes`; 0 = never chunk).
+    pub mux_chunk_bytes: usize,
+    /// Per-subscriber event queue bound for `/v1/events` and mux
+    /// subscriptions (`events` block; `--events-buffer`).
+    pub events_buffer: usize,
+    /// Period between metrics-snapshot publishes onto the event bus's
+    /// `metrics` topic, in ms (`--events-metrics-ms`; 0 = off).
+    pub events_metrics_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +79,11 @@ impl Default for ServeConfig {
             chaos: None,
             chaos_seed: 0,
             access_log: false,
+            idle_timeout_ms: 0,
+            mux_max_inflight: 32,
+            mux_chunk_bytes: 64 << 10,
+            events_buffer: 256,
+            events_metrics_ms: 5000,
         }
     }
 }
@@ -211,6 +233,43 @@ impl ServeConfig {
                     .as_u64()
                     .ok_or_else(|| anyhow!("'chaos_seed' must be an integer"))?;
             }
+            "idle_timeout_ms" => {
+                self.idle_timeout_ms = val
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("'idle_timeout_ms' must be an integer (0 = off)"))?;
+            }
+            "mux" => {
+                if val.as_obj().is_none() {
+                    bail!("'mux' must be an object");
+                }
+                if let Some(m) = val.get("max_inflight") {
+                    self.mux_max_inflight = m
+                        .as_usize()
+                        .filter(|&m| m >= 1)
+                        .ok_or_else(|| anyhow!("mux.max_inflight must be >= 1"))?;
+                }
+                if let Some(b) = val.get("chunk_bytes") {
+                    self.mux_chunk_bytes = b
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("mux.chunk_bytes must be an integer (0 = never chunk)"))?;
+                }
+            }
+            "events" => {
+                if val.as_obj().is_none() {
+                    bail!("'events' must be an object");
+                }
+                if let Some(b) = val.get("buffer") {
+                    self.events_buffer = b
+                        .as_usize()
+                        .filter(|&b| b >= 1)
+                        .ok_or_else(|| anyhow!("events.buffer must be >= 1"))?;
+                }
+                if let Some(ms) = val.get("metrics_interval_ms") {
+                    self.events_metrics_ms = ms
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("events.metrics_interval_ms must be an integer (0 = off)"))?;
+                }
+            }
             // A combined cluster config file may carry a `gateway` block
             // (consumed by `GatewayConfig::from_file`); the serve side
             // validates the shape and otherwise ignores it.
@@ -231,7 +290,9 @@ impl ServeConfig {
     /// `--deadline-ms N`, `--drain-timeout-ms N`, `--adaptive-window
     /// on|off`, `--no-verify`, `--no-warmup`, `--access-log`,
     /// `--breaker-fail-threshold N`, `--breaker-cooldown-ms N`,
-    /// `--chaos SPEC`, `--chaos-seed N`).
+    /// `--chaos SPEC`, `--chaos-seed N`, `--idle-timeout-ms N`,
+    /// `--mux-max-inflight N`, `--mux-chunk-bytes N`, `--events-buffer N`,
+    /// `--events-metrics-ms N`).
     pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
         let mut it = args.iter().peekable();
         while let Some(arg) = it.next() {
@@ -302,6 +363,23 @@ impl ServeConfig {
                 }
                 "--chaos" => self.chaos = Some(take()?),
                 "--chaos-seed" => self.chaos_seed = take()?.parse::<u64>()?,
+                "--idle-timeout-ms" => self.idle_timeout_ms = take()?.parse::<u64>()?,
+                "--mux-max-inflight" => {
+                    let m = take()?.parse::<usize>()?;
+                    if m == 0 {
+                        bail!("--mux-max-inflight expects >= 1");
+                    }
+                    self.mux_max_inflight = m;
+                }
+                "--mux-chunk-bytes" => self.mux_chunk_bytes = take()?.parse::<usize>()?,
+                "--events-buffer" => {
+                    let b = take()?.parse::<usize>()?;
+                    if b == 0 {
+                        bail!("--events-buffer expects >= 1");
+                    }
+                    self.events_buffer = b;
+                }
+                "--events-metrics-ms" => self.events_metrics_ms = take()?.parse::<u64>()?,
                 "--no-verify" => self.verify_sha = false,
                 "--no-warmup" => self.warmup = false,
                 "--access-log" => self.access_log = true,
@@ -675,6 +753,60 @@ mod tests {
     }
 
     #[test]
+    fn mux_events_and_idle_knobs_parse() {
+        let c = ServeConfig::default();
+        assert_eq!(c.idle_timeout_ms, 0, "idle reaping is opt-in");
+        assert_eq!(c.mux_max_inflight, 32);
+        assert_eq!(c.mux_chunk_bytes, 64 << 10);
+        assert_eq!(c.events_buffer, 256);
+        assert_eq!(c.events_metrics_ms, 5000);
+
+        let mut c = ServeConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"idle_timeout_ms":30000,
+                    "mux":{"max_inflight":8,"chunk_bytes":4096},
+                    "events":{"buffer":64,"metrics_interval_ms":1000}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.idle_timeout_ms, 30000);
+        assert_eq!(c.mux_max_inflight, 8);
+        assert_eq!(c.mux_chunk_bytes, 4096);
+        assert_eq!(c.events_buffer, 64);
+        assert_eq!(c.events_metrics_ms, 1000);
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"mux":{"max_inflight":0}}"#).unwrap())
+            .is_err());
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"events":{"buffer":0}}"#).unwrap())
+            .is_err());
+
+        let mut c = ServeConfig::default();
+        c.apply_cli(
+            &["--idle-timeout-ms=15000", "--mux-max-inflight", "16",
+              "--mux-chunk-bytes=1024", "--events-buffer", "32",
+              "--events-metrics-ms=0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert_eq!(c.idle_timeout_ms, 15000);
+        assert_eq!(c.mux_max_inflight, 16);
+        assert_eq!(c.mux_chunk_bytes, 1024);
+        assert_eq!(c.events_buffer, 32);
+        assert_eq!(c.events_metrics_ms, 0);
+        assert!(ServeConfig::default()
+            .apply_cli(&["--mux-max-inflight=0".to_string()])
+            .is_err());
+        assert!(ServeConfig::default()
+            .apply_cli(&["--events-buffer=0".to_string()])
+            .is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut c = ServeConfig::default();
         assert!(c.apply_json(&json::parse(r#"{"nope":1}"#).unwrap()).is_err());
@@ -780,6 +912,11 @@ mod tests {
             Some(std::path::Path::new("flexserve_audit.jsonl"))
         );
         assert_eq!(c.registry.guardrails.min_samples, 20);
+        assert_eq!(c.idle_timeout_ms, 0);
+        assert_eq!(c.mux_max_inflight, 32);
+        assert_eq!(c.mux_chunk_bytes, 65536);
+        assert_eq!(c.events_buffer, 256);
+        assert_eq!(c.events_metrics_ms, 5000);
     }
 
     #[test]

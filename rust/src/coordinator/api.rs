@@ -172,8 +172,14 @@ impl RouterObserver for MetricsObserver {
 }
 
 /// Build the FlexServe router over shared state: `/v1` routes plus legacy
-/// unversioned aliases sharing the same handlers.
+/// unversioned aliases sharing the same handlers. Default mux knobs; the
+/// server path uses [`build_router_with`] to plumb configured ones.
 pub fn build_router(state: Arc<ServerState>) -> Router {
+    build_router_with(state, crate::mux::MuxOptions::default())
+}
+
+/// [`build_router`] with explicit mux/events tuning (`mux` config block).
+pub fn build_router_with(state: Arc<ServerState>, mux_opts: crate::mux::MuxOptions) -> Router {
     let mut router = Router::new();
     router.observe(Arc::new(MetricsObserver {
         metrics: Arc::clone(&state.metrics),
@@ -329,6 +335,34 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
     );
     let s = Arc::clone(&state);
     router.add("GET", "/v1/audit", move |req, _p| {
+        let log_path = match s.registry.audit().path() {
+            Some(p) => Value::from(p.display().to_string()),
+            None => Value::Null,
+        };
+        // Paged mode: `?since=<seq>` returns records AFTER that sequence
+        // number (bounded by `limit`, default 50) plus the current
+        // high-water `seq` — pollers resume from it instead of re-reading
+        // the whole trail. Without `since`, the legacy `?n=` tail applies.
+        if let Some(since) = req.query_param("since") {
+            let Ok(since) = since.parse::<u64>() else {
+                return ApiError::bad_value("'since' must be an unsigned integer")
+                    .to_response();
+            };
+            let limit = req
+                .query_param("limit")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(50)
+                .clamp(1, 512);
+            let (entries, seq) = s.registry.audit().since(since, limit);
+            return Response::json(
+                200,
+                &json::obj([
+                    ("audit", Value::Arr(entries)),
+                    ("seq", Value::from(seq)),
+                    ("log_path", log_path),
+                ]),
+            );
+        }
         let n = req
             .query_param("n")
             .and_then(|v| v.parse::<usize>().ok())
@@ -336,17 +370,42 @@ pub fn build_router(state: Arc<ServerState>) -> Router {
         let entries = s.registry.audit().tail(n.clamp(1, 512));
         Response::json(
             200,
-            &json::obj([
-                ("audit", Value::Arr(entries)),
-                (
-                    "log_path",
-                    match s.registry.audit().path() {
-                        Some(p) => Value::from(p.display().to_string()),
-                        None => Value::Null,
-                    },
-                ),
-            ]),
+            &json::obj([("audit", Value::Arr(entries)), ("log_path", log_path)]),
         )
+    });
+
+    // ---- streaming plane: mux wire + event subscriptions -----------------
+    // `POST /v1/mux` hands the connection to a mux session whose `request`
+    // frames lower into the same predict pipeline as `POST /v1/predict`;
+    // `GET /v1/events` streams the process event bus as NDJSON.
+    let exec: crate::mux::ExecFn = {
+        let s = Arc::clone(&state);
+        Arc::new(move |payload| {
+            let sw = Stopwatch::start();
+            s.metrics.inc("requests_total");
+            let req = Request::new(
+                "POST",
+                "/v1/predict",
+                json::to_string(payload).into_bytes(),
+            );
+            match infer::predict_json(&s, &req) {
+                Ok(v) => {
+                    s.metrics.observe_micros("predict_us", sw.elapsed_micros());
+                    Ok(v)
+                }
+                Err(e) => {
+                    s.metrics.inc("errors_total");
+                    Err(e)
+                }
+            }
+        })
+    };
+    let svc = crate::mux::MuxService::new(exec, Arc::clone(&state.metrics), mux_opts.clone());
+    router.add("POST", "/v1/mux", move |_req, _p| svc.takeover_response());
+    let m = Arc::clone(&state.metrics);
+    let buffer = mux_opts.event_buffer;
+    router.add("GET", "/v1/events", move |req, _p| {
+        crate::mux::events_response(req, Arc::clone(&m), buffer)
     });
 
     // ---- /v2: Open Inference Protocol over the same core -----------------
@@ -645,24 +704,10 @@ fn version_param(req: &Request) -> Result<Option<u32>, ApiError> {
 }
 
 fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
-    let parse_sw = Stopwatch::start();
-    let input = PredictRequest::parse(&s.manifest, req)?;
-    // Lower into the protocol-agnostic IR and run the shared core; the
-    // paper-format rendering below is the only /v1-specific part left.
-    let done = infer::execute(s, input.into_inference(&s.manifest), None, parse_sw)?;
-
-    let render_sw = Stopwatch::start();
-    let body = wire::render_predict(
-        &s.manifest,
-        &done.params,
-        &done.output,
-        done.stats,
-        Some(done.stages),
-    )?;
-    let resp = Response::json(200, &body);
-    s.metrics
-        .observe_stage("stage_render_us", render_sw.elapsed_micros());
-    Ok(resp)
+    // parse → execute → render all live in the shared entry point the mux
+    // wire also lowers into (mux ≡ v1 by construction).
+    let body = infer::predict_json(s, req)?;
+    Ok(Response::json(200, &body))
 }
 
 /// Single-model fast path: one model, no ensemble fan-out. Routed through

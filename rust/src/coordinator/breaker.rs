@@ -179,6 +179,15 @@ impl Breakers {
             .collect();
         self.metrics
             .set_gauge(&format!("breaker_state_{safe}"), state.gauge());
+        // Surface the transition on the event plane (`breaker` topic) —
+        // a no-op atomic load with no subscribers.
+        crate::mux::events::publish(
+            crate::mux::events::TOPIC_BREAKER,
+            crate::json::obj([
+                ("key", crate::json::Value::from(key)),
+                ("state", crate::json::Value::from(state.as_str())),
+            ]),
+        );
     }
 
     /// Current state name for one key ("closed" when never tripped).

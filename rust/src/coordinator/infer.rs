@@ -21,7 +21,9 @@ use super::breaker::Breakers;
 use super::ensemble::{EnsembleOutput, ModelOutput};
 use super::policy::Policy;
 use super::sched::{BatchStats, TargetKey};
-use super::wire::{ApiError, StageMicros};
+use super::wire::{self, ApiError, PredictRequest, StageMicros};
+use crate::http::Request;
+use crate::json::Value;
 use crate::runtime::{slot_name, DType, Manifest, TensorView};
 use crate::util::Stopwatch;
 use std::time::Duration;
@@ -96,6 +98,30 @@ pub struct InferenceResponse {
 /// `parse_sw` is the stopwatch the handler started before parsing; the
 /// normalization pass counts into the same `stage_parse_us` bucket, so
 /// stage accounting is identical across protocols.
+/// The complete ensemble-predict pipeline — parse the paper-format body,
+/// run [`execute`], render the paper-format response — as one reusable
+/// entry point. `POST /v1/predict` wraps the result in an HTTP response;
+/// the mux wire sends it as a `response` frame payload. Both serialize the
+/// returned [`Value`] with `json::to_string`, which is what makes the
+/// mux ≡ v1 byte-identity hold by construction (pinned by the
+/// differential test).
+pub fn predict_json(s: &ServerState, req: &Request) -> Result<Value, ApiError> {
+    let parse_sw = Stopwatch::start();
+    let input = PredictRequest::parse(&s.manifest, req)?;
+    let done = execute(s, input.into_inference(&s.manifest), None, parse_sw)?;
+    let render_sw = Stopwatch::start();
+    let body = wire::render_predict(
+        &s.manifest,
+        &done.params,
+        &done.output,
+        done.stats,
+        Some(done.stages),
+    )?;
+    s.metrics
+        .observe_stage("stage_render_us", render_sw.elapsed_micros());
+    Ok(body)
+}
+
 pub fn execute(
     s: &ServerState,
     ir: InferenceRequest,

@@ -155,11 +155,33 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
         metrics,
         config.breaker,
     )?;
-    let mut router = build_router(Arc::clone(&state));
+    // Event plane: wire the bus's metric sink and start the periodic
+    // metrics-snapshot publisher (snapshots render only while someone is
+    // subscribed).
+    crate::mux::events::set_sink(Arc::clone(&state.metrics));
+    if config.events_metrics_ms > 0 {
+        crate::mux::start_metrics_ticker(
+            Arc::clone(&state.metrics),
+            std::time::Duration::from_millis(config.events_metrics_ms),
+        );
+    }
+    let mux_opts = crate::mux::MuxOptions {
+        max_inflight: config.mux_max_inflight,
+        chunk_bytes: config.mux_chunk_bytes,
+        event_buffer: config.events_buffer,
+        ..crate::mux::MuxOptions::default()
+    };
+    let mut router = api::build_router_with(Arc::clone(&state), mux_opts);
     if config.access_log {
         router.observe(Arc::new(crate::http::router::AccessLog));
     }
-    let handle = Server::spawn(&config.addr, config.http_workers, router.into_handler())
+    let opts = crate::http::server::ServerOptions {
+        idle_timeout: match config.idle_timeout_ms {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+    };
+    let handle = Server::spawn_with(&config.addr, config.http_workers, router.into_handler(), opts)
         .context("starting HTTP server")?;
     Ok((handle, state))
 }

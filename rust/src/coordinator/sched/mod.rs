@@ -209,6 +209,13 @@ impl Scheduler {
             let q = queues.entry(target).or_default();
             if !queue::admit(q.len(), cap) {
                 self.shared.metrics.inc("sched_shed_overload_total");
+                crate::mux::events::publish(
+                    crate::mux::events::TOPIC_SCHED,
+                    crate::json::obj([
+                        ("shed", crate::json::Value::from("overload")),
+                        ("queue_cap", crate::json::Value::from(cap)),
+                    ]),
+                );
                 return Err(Error::new(ApiError::overloaded(format!(
                     "queue is full ({cap} pending requests); retry later"
                 ))));
@@ -361,6 +368,15 @@ fn scheduler_thread(ensemble: Ensemble, shared: Arc<Shared>, flushers: Arc<Threa
                 shared
                     .metrics
                     .add("sched_shed_shutdown_total", doomed.len() as u64);
+                if !doomed.is_empty() {
+                    crate::mux::events::publish(
+                        crate::mux::events::TOPIC_SCHED,
+                        crate::json::obj([
+                            ("shed", crate::json::Value::from("shutdown")),
+                            ("count", crate::json::Value::from(doomed.len())),
+                        ]),
+                    );
+                }
                 for d in doomed {
                     let _ = d.reply.send(Err(Error::new(ApiError::shutting_down(
                         "server shut down before this request could run (drain timeout)",
@@ -382,6 +398,13 @@ fn scheduler_thread(ensemble: Ensemble, shared: Arc<Shared>, flushers: Arc<Threa
             shared
                 .metrics
                 .add("sched_shed_deadline_total", expired.len() as u64);
+            crate::mux::events::publish(
+                crate::mux::events::TOPIC_SCHED,
+                crate::json::obj([
+                    ("shed", crate::json::Value::from("deadline")),
+                    ("count", crate::json::Value::from(expired.len())),
+                ]),
+            );
             shared.observe_depth(&queues);
             fail_expired(expired);
         }

@@ -34,6 +34,9 @@
 //! | `server.shutting_down`      | 503    | drained past the shutdown deadline |
 //! | `route.not_found`           | 404    | no such route                   |
 //! | `route.method_not_allowed`  | 405    | path matched, method didn't     |
+//! | `mux.bad_frame`             | 400    | unparseable/invalid mux frame   |
+//! | `mux.duplicate_id`          | 400    | correlation id already in flight |
+//! | `gateway.mux_unrouted`      | 501    | mux/events not proxied by the gateway |
 //! | `internal`                  | 500    | unexpected server failure       |
 //!
 //! (*) Legacy unversioned routes flatten every predict-path status to the
@@ -252,6 +255,30 @@ impl ApiError {
         }
     }
 
+    /// Mux wire protocol violation: undecodable framing, a bad kind, or a
+    /// frame kind only the server may send.
+    pub fn bad_frame(detail: impl Into<String>) -> ApiError {
+        Self::new(400, "mux.bad_frame", detail)
+    }
+
+    /// A mux `request`/`subscribe` reusing a correlation id that is still
+    /// in flight (or bound to a live subscription) on this connection.
+    pub fn duplicate_id(id: u64) -> ApiError {
+        Self::new(
+            400,
+            "mux.duplicate_id",
+            format!("correlation id {id} is already in flight on this connection"),
+        )
+    }
+
+    /// The gateway answers `/v1/mux` and `/v1/events` locally: those are
+    /// per-backend planes (topics and correlation state live on each
+    /// backend), so the gateway refuses to proxy rather than pretending
+    /// one backend's stream is the fleet's.
+    pub fn mux_unrouted(detail: impl Into<String>) -> ApiError {
+        Self::new(501, "gateway.mux_unrouted", detail)
+    }
+
     pub fn internal(detail: impl fmt::Display) -> ApiError {
         Self::new(500, "internal", detail.to_string())
     }
@@ -267,6 +294,26 @@ impl ApiError {
             return ApiError::worker_crashed(&crash.detail);
         }
         ApiError::internal(format!("{e:#}"))
+    }
+
+    /// The error envelope as a JSON value — the HTTP body shape plus the
+    /// numeric `status` and the `retry_after` hint, for transports that
+    /// have no status line (mux `error` frames).
+    pub fn envelope(&self) -> Value {
+        let mut top = vec![
+            ("status".to_string(), Value::from(self.status as u64)),
+            (
+                "error".to_string(),
+                json::obj([
+                    ("code", Value::from(self.code)),
+                    ("message", Value::from(self.message.as_str())),
+                ]),
+            ),
+        ];
+        if let Some(secs) = self.retry_after {
+            top.push(("retry_after".to_string(), Value::from(secs)));
+        }
+        Value::Obj(top)
     }
 
     /// Render the uniform `{"error": {"code", "message"}}` envelope.

@@ -174,6 +174,20 @@ impl Gateway {
                 self.metrics.inc("gw_predict_total");
                 self.handle_v1_predict(req, rid)
             }
+            // The streaming plane is per-backend state (correlation ids,
+            // event topics live on each replica) — answered locally with a
+            // typed refusal instead of silently binding the client to
+            // whichever backend the hash picked. Clients subscribe to
+            // backends directly (README: Streaming & events).
+            ("POST", "/mux") | ("POST", "/v1/mux") | ("GET", "/events") | ("GET", "/v1/events") => {
+                self.metrics.inc("gw_mux_unrouted_total");
+                crate::coordinator::ApiError::mux_unrouted(format!(
+                    "{} is not proxied: mux sessions and event subscriptions are \
+                     per-backend — connect to a backend directly",
+                    req.path
+                ))
+                .to_response()
+            }
             _ => {
                 if req.method == "POST" && req.path == "/v2/models/_ensemble/infer" {
                     self.metrics.inc("gw_predict_total");

@@ -423,6 +423,315 @@ pub fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
     Ok(resp)
 }
 
+// ---- mux wire client -----------------------------------------------------
+
+use crate::mux::codec::{Frame, FrameDecoder, FrameKind};
+use std::collections::{HashMap, VecDeque};
+
+/// One demuxed message off a mux session, keyed by correlation id.
+#[derive(Debug, Clone)]
+pub enum MuxMsg {
+    /// A completed `request` (or a subscribe/unsubscribe ack). `raw` is
+    /// the exact serialized response payload — chunked replies reassemble
+    /// to the server's `json::to_string` bytes, which the mux ≡ v1
+    /// differential test compares verbatim.
+    Reply { id: u64, raw: String, value: Value },
+    /// An `error` frame carrying the HTTP error envelope (id 0 =
+    /// frame-level, before any dispatch).
+    Error {
+        id: u64,
+        status: u16,
+        code: String,
+        message: String,
+    },
+    /// A bus event delivered to subscription `id`.
+    Event { id: u64, doc: Value },
+    /// Subscription `id` fell behind and lost `dropped` events.
+    Lagged { id: u64, dropped: u64 },
+    /// Answer to our `ping`.
+    Pong { id: u64 },
+    /// Server liveness probe (already answered with `pong` internally;
+    /// surfaced so callers can observe it).
+    Ping { id: u64 },
+}
+
+impl MuxMsg {
+    /// The correlation id this message belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            MuxMsg::Reply { id, .. }
+            | MuxMsg::Error { id, .. }
+            | MuxMsg::Event { id, .. }
+            | MuxMsg::Lagged { id, .. }
+            | MuxMsg::Pong { id }
+            | MuxMsg::Ping { id } => *id,
+        }
+    }
+
+    /// True for messages that complete a `request` (reply or error).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, MuxMsg::Reply { .. } | MuxMsg::Error { .. })
+    }
+}
+
+/// Typed client for the `POST /v1/mux` wire: one persistent connection,
+/// many in-flight correlation ids, responses demuxed as they interleave
+/// out-of-order. Chunked replies reassemble transparently. Used by the
+/// CLI (`mux-smoke`), the load generator (`--protocol mux`) and the
+/// integration tests.
+pub struct MuxClient {
+    reader: BufReader<TcpStream>,
+    decoder: FrameDecoder,
+    /// Chunk reassembly buffers, one per in-flight chunked reply.
+    partial: HashMap<u64, String>,
+    /// Messages read while waiting for a specific id (delivered FIFO by
+    /// later `next()` calls — nothing is dropped).
+    queued: VecDeque<MuxMsg>,
+}
+
+impl MuxClient {
+    pub fn connect(addr: SocketAddr) -> Result<MuxClient> {
+        Self::connect_with_timeout(addr, Duration::from_secs(30))
+    }
+
+    /// Open the session: send the `POST /v1/mux` upgrade request, consume
+    /// the streaming response head, and bail (with the taxonomy envelope)
+    /// if the endpoint refuses — e.g. the gateway's `gateway.mux_unrouted`.
+    pub fn connect_with_timeout(addr: SocketAddr, timeout: Duration) -> Result<MuxClient> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .with_context(|| format!("connecting {addr} for mux"))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_nodelay(true)?;
+        let mut reader = BufReader::new(stream);
+        {
+            let head =
+                format!("POST /v1/mux HTTP/1.1\r\nhost: {addr}\r\ncontent-length: 0\r\n\r\n");
+            let mut w: &TcpStream = reader.get_ref();
+            w.write_all(head.as_bytes())?;
+            w.flush()?;
+        }
+        // The mux head has no content-length (the body is the frame
+        // stream); a refusal is an ordinary JSON error response.
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed before mux response head");
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad mux status line: {line:?}"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut hline = String::new();
+            if reader.read_line(&mut hline)? == 0 {
+                bail!("eof in mux response head");
+            }
+            let trimmed = hline.trim_end_matches(['\r', '\n']);
+            if trimmed.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = trimmed.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        if status != 200 {
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body)?;
+            let v = crate::json::parse(&String::from_utf8_lossy(&body)).unwrap_or(Value::Null);
+            let code = v
+                .path(&["error", "code"])
+                .and_then(Value::as_str)
+                .unwrap_or("unknown");
+            let message = v
+                .path(&["error", "message"])
+                .and_then(Value::as_str)
+                .unwrap_or("");
+            bail!("mux refused: {code} (HTTP {status}): {message}");
+        }
+        Ok(MuxClient {
+            reader,
+            decoder: FrameDecoder::new(),
+            partial: HashMap::new(),
+            queued: VecDeque::new(),
+        })
+    }
+
+    /// Adjust the blocking-read timeout for `next()`/`wait_for()`.
+    pub fn set_read_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(Some(timeout))?;
+        Ok(())
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode();
+        let mut w: &TcpStream = self.reader.get_ref();
+        w.write_all(&bytes)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Fire one `request` frame (does not wait; pair with `wait_for` or
+    /// `next` to collect the reply whenever it lands).
+    pub fn request(&mut self, id: u64, payload: &Value) -> Result<()> {
+        self.send(&Frame::new(id, FrameKind::Request, payload.clone()))
+    }
+
+    /// Subscribe correlation `id` to bus topics (empty slice = all).
+    /// The ack arrives as a `Reply` for the same id; events follow.
+    pub fn subscribe(&mut self, id: u64, topics: &[&str]) -> Result<()> {
+        let payload = if topics.is_empty() {
+            Value::Obj(Vec::new())
+        } else {
+            crate::json::obj([(
+                "topics",
+                Value::Arr(topics.iter().map(|&t| Value::from(t)).collect()),
+            )])
+        };
+        self.send(&Frame::new(id, FrameKind::Subscribe, payload))
+    }
+
+    pub fn unsubscribe(&mut self, id: u64) -> Result<()> {
+        self.send(&Frame::new(id, FrameKind::Unsubscribe, Value::Null))
+    }
+
+    pub fn ping(&mut self, id: u64) -> Result<()> {
+        self.send(&Frame::new(id, FrameKind::Ping, Value::Null))
+    }
+
+    /// Send a `request` and block until *its* terminal message; frames
+    /// for other ids queue for later `next()` calls.
+    pub fn call(&mut self, id: u64, payload: &Value) -> Result<MuxMsg> {
+        self.request(id, payload)?;
+        self.wait_for(id)
+    }
+
+    /// The next demuxed message, in arrival order (queued first).
+    pub fn next(&mut self) -> Result<MuxMsg> {
+        if let Some(m) = self.queued.pop_front() {
+            return Ok(m);
+        }
+        self.read_msg()
+    }
+
+    /// Block until a terminal message (reply/error) for `id` arrives.
+    pub fn wait_for(&mut self, id: u64) -> Result<MuxMsg> {
+        if let Some(pos) = self
+            .queued
+            .iter()
+            .position(|m| m.is_terminal() && m.id() == id)
+        {
+            return Ok(self.queued.remove(pos).unwrap());
+        }
+        loop {
+            let m = self.read_msg()?;
+            if m.is_terminal() && m.id() == id {
+                return Ok(m);
+            }
+            self.queued.push_back(m);
+        }
+    }
+
+    /// Read frames off the wire until one demuxes into a message (chunk
+    /// frames accumulate silently; server pings are answered inline).
+    fn read_msg(&mut self) -> Result<MuxMsg> {
+        let mut buf = [0u8; 8 << 10];
+        loop {
+            match self.decoder.next_frame() {
+                Ok(Some(frame)) => {
+                    if let Some(m) = self.demux(frame)? {
+                        return Ok(m);
+                    }
+                    continue;
+                }
+                Ok(None) => {}
+                Err(e) => bail!("mux codec error: {e}"),
+            }
+            let n = self.reader.read(&mut buf)?;
+            if n == 0 {
+                bail!("mux connection closed by server");
+            }
+            self.decoder.push(&buf[..n]);
+        }
+    }
+
+    fn demux(&mut self, frame: Frame) -> Result<Option<MuxMsg>> {
+        Ok(match frame.kind {
+            FrameKind::Response => {
+                let raw = crate::json::to_string(&frame.payload);
+                Some(MuxMsg::Reply {
+                    id: frame.id,
+                    raw,
+                    value: frame.payload,
+                })
+            }
+            FrameKind::Chunk => {
+                let data = frame.payload.get("data").and_then(Value::as_str).unwrap_or("");
+                self.partial.entry(frame.id).or_default().push_str(data);
+                None
+            }
+            FrameKind::End => {
+                let raw = self.partial.remove(&frame.id).unwrap_or_default();
+                let value = crate::json::parse(&raw).unwrap_or(Value::Null);
+                Some(MuxMsg::Reply {
+                    id: frame.id,
+                    raw,
+                    value,
+                })
+            }
+            FrameKind::Error => {
+                let status = frame
+                    .payload
+                    .get("status")
+                    .and_then(Value::as_u64)
+                    .unwrap_or(0) as u16;
+                let code = frame
+                    .payload
+                    .path(&["error", "code"])
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown")
+                    .to_string();
+                let message = frame
+                    .payload
+                    .path(&["error", "message"])
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                Some(MuxMsg::Error {
+                    id: frame.id,
+                    status,
+                    code,
+                    message,
+                })
+            }
+            FrameKind::Event => Some(MuxMsg::Event {
+                id: frame.id,
+                doc: frame.payload,
+            }),
+            FrameKind::Lagged => Some(MuxMsg::Lagged {
+                id: frame.id,
+                dropped: frame
+                    .payload
+                    .get("dropped")
+                    .and_then(Value::as_u64)
+                    .unwrap_or(0),
+            }),
+            FrameKind::Pong => Some(MuxMsg::Pong { id: frame.id }),
+            FrameKind::Ping => {
+                // Answer liveness immediately so the session isn't reaped
+                // while the caller is between next() calls.
+                self.send(&Frame::new(frame.id, FrameKind::Pong, Value::Null))?;
+                Some(MuxMsg::Ping { id: frame.id })
+            }
+            // Client-only inbound kinds never arrive from a well-behaved
+            // server; skip rather than poison the stream.
+            FrameKind::Request | FrameKind::Subscribe | FrameKind::Unsubscribe => None,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // The happy path is exercised end-to-end in server.rs tests and

@@ -14,12 +14,13 @@ pub mod client;
 pub mod router;
 pub mod server;
 
-pub use client::Client;
+pub use client::{Client, MuxClient, MuxMsg};
 pub use router::Router;
 pub use server::{Server, ServerHandle};
 
 use crate::json::{self, Value};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Maximum accepted request body (tensor payloads are ~100 KiB at bucket
 /// 32; 16 MiB leaves generous headroom while bounding hostile inputs).
@@ -77,12 +78,44 @@ impl Request {
     }
 }
 
+/// A connection-takeover hook: after the server writes a streaming head
+/// for the response (no `Content-Length`, `connection: close`), it hands
+/// the connection's buffered reader and raw write half to this closure on
+/// the worker thread, which owns the socket until it returns. This is how
+/// long-lived endpoints (`POST /v1/mux`, `GET /v1/events`) escape the
+/// request/response cycle without an async runtime.
+#[derive(Clone)]
+pub struct Takeover(
+    pub Arc<dyn Fn(std::io::BufReader<std::net::TcpStream>, std::net::TcpStream) + Send + Sync>,
+);
+
+impl Takeover {
+    pub fn new<F>(f: F) -> Takeover
+    where
+        F: Fn(std::io::BufReader<std::net::TcpStream>, std::net::TcpStream)
+            + Send
+            + Sync
+            + 'static,
+    {
+        Takeover(Arc::new(f))
+    }
+}
+
+impl std::fmt::Debug for Takeover {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Takeover(..)")
+    }
+}
+
 /// An HTTP response under construction.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// When set, the body is ignored: the server writes a streaming head
+    /// and gives the connection to the closure (see [`Takeover`]).
+    pub takeover: Option<Takeover>,
 }
 
 impl Response {
@@ -91,6 +124,7 @@ impl Response {
             status,
             headers: Vec::new(),
             body: Vec::new(),
+            takeover: None,
         }
     }
 

@@ -15,6 +15,16 @@ const READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
 
+/// Server tuning knobs beyond worker count.
+#[derive(Debug, Clone, Default)]
+pub struct ServerOptions {
+    /// Reap a keep-alive connection that stays byte-silent between
+    /// requests for this long (None = only the hard [`READ_TIMEOUT`]).
+    /// Connections a handler takes over ([`super::Takeover`]) are exempt —
+    /// they manage their own liveness (the mux wire pings).
+    pub idle_timeout: Option<Duration>,
+}
+
 /// A running server; dropping the handle does NOT stop it — call
 /// [`ServerHandle::stop`].
 pub struct Server;
@@ -30,6 +40,16 @@ impl Server {
     /// Bind and serve on a pool of `workers` connection threads.
     /// `addr` may use port 0 to pick a free port (see `handle.addr`).
     pub fn spawn(addr: &str, workers: usize, handler: Handler) -> Result<ServerHandle> {
+        Server::spawn_with(addr, workers, handler, ServerOptions::default())
+    }
+
+    /// [`Server::spawn`] with explicit [`ServerOptions`].
+    pub fn spawn_with(
+        addr: &str,
+        workers: usize,
+        handler: Handler,
+        opts: ServerOptions,
+    ) -> Result<ServerHandle> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -45,8 +65,9 @@ impl Server {
                     match conn {
                         Ok(stream) => {
                             let h = Arc::clone(&handler);
+                            let o = opts.clone();
                             pool.execute(move || {
-                                let _ = handle_connection(stream, h);
+                                let _ = handle_connection(stream, h, o);
                             });
                         }
                         Err(_) => continue,
@@ -73,12 +94,31 @@ impl ServerHandle {
 }
 
 /// Keep-alive loop for one connection.
-fn handle_connection(stream: TcpStream, handler: Handler) -> Result<()> {
+fn handle_connection(stream: TcpStream, handler: Handler, opts: ServerOptions) -> Result<()> {
     stream.set_read_timeout(Some(READ_TIMEOUT))?;
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     loop {
+        // Idle reaping: between requests, wait for the FIRST byte of the
+        // next request under the (shorter) idle deadline; a byte-silent
+        // peer is closed without ceremony. fill_buf consumes nothing, so
+        // request parsing below sees the full request.
+        if let Some(idle) = opts.idle_timeout {
+            reader.get_ref().set_read_timeout(Some(idle))?;
+            match reader.fill_buf() {
+                Ok(buf) if buf.is_empty() => return Ok(()), // clean EOF
+                Ok(_) => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(()); // idle past the deadline: reap
+                }
+                Err(e) => return Err(e.into()),
+            }
+            reader.get_ref().set_read_timeout(Some(READ_TIMEOUT))?;
+        }
         let req = match read_request(&mut reader) {
             Ok(Some(req)) => req,
             Ok(None) => return Ok(()), // clean close
@@ -98,6 +138,14 @@ fn handle_connection(stream: TcpStream, handler: Handler) -> Result<()> {
             .header("connection")
             .is_some_and(|v| v.eq_ignore_ascii_case("close"));
         let resp = handler(&req);
+        if let Some(takeover) = resp.takeover.clone() {
+            // Long-lived endpoint: write a streaming head (no
+            // Content-Length — the connection is the response), then the
+            // closure owns the socket until it returns.
+            write_streaming_head(&mut writer, &resp)?;
+            (takeover.0)(reader, writer);
+            return Ok(());
+        }
         write_response(&mut writer, &resp, !close)?;
         if close {
             return Ok(());
@@ -163,6 +211,27 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>
         req.body = body;
     }
     Ok(Some(req))
+}
+
+/// Head for a taken-over connection: status + handler headers, no
+/// Content-Length (the stream has no fixed length), `connection: close`
+/// (the connection never returns to the request/response loop).
+fn write_streaming_head(w: &mut impl Write, resp: &Response) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nconnection: close\r\n",
+        resp.status,
+        Response::status_name(resp.status),
+    );
+    for (k, v) in &resp.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.flush()?;
+    Ok(())
 }
 
 /// Serialize one response; always emits Content-Length.
@@ -336,6 +405,56 @@ mod tests {
         let body = buf.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
         let doc = json::parse(body).unwrap();
         assert_eq!(doc.get("body_len").and_then(Value::as_u64), Some(0));
+        h.stop();
+    }
+
+    #[test]
+    fn idle_connection_is_reaped() {
+        let h = Server::spawn_with(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|_req: &Request| Response::text(200, "ok")),
+            ServerOptions {
+                idle_timeout: Some(Duration::from_millis(100)),
+            },
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        // Send nothing: the server must hang up (EOF), not 400.
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        assert!(buf.is_empty(), "{}", String::from_utf8_lossy(&buf));
+        // A live client inside the deadline still gets full service.
+        let mut c = Client::connect(h.addr).unwrap();
+        assert_eq!(c.get("/x").unwrap().status, 200);
+        h.stop();
+    }
+
+    #[test]
+    fn takeover_streams_past_the_response_cycle() {
+        use super::super::Takeover;
+        let h = Server::spawn(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|_req: &Request| {
+                let mut resp = Response::text(200, "");
+                resp.takeover = Some(Takeover::new(|_reader, mut writer| {
+                    for i in 0..3 {
+                        writeln!(writer, "line-{i}").unwrap();
+                    }
+                }));
+                resp
+            }),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"GET /stream HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap(); // EOF when takeover returns
+        assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+        assert!(!buf.contains("content-length"), "streaming head: {buf}");
+        assert!(buf.contains("connection: close"), "{buf}");
+        assert!(buf.ends_with("line-0\nline-1\nline-2\n"), "{buf}");
         h.stop();
     }
 

@@ -35,6 +35,7 @@ pub mod gateway;
 pub mod http;
 pub mod imagepipe;
 pub mod json;
+pub mod mux;
 pub mod registry;
 pub mod runtime;
 pub mod util;

@@ -1,0 +1,442 @@
+//! Length-delimited NDJSON frame codec for the mux wire.
+//!
+//! Wire grammar (one frame):
+//!
+//! ```text
+//! <len>\n<json>\n
+//! ```
+//!
+//! where `<len>` is the decimal byte length of `<json>` (ASCII digits, no
+//! sign, no padding) and `<json>` is exactly `len` bytes of a JSON object
+//! `{"id": <u64>, "kind": "<kind>", "payload": <value>}`. The trailing
+//! newline keeps the stream greppable/`nc`-able — every frame body is one
+//! NDJSON line — while the explicit length prefix lets the decoder slice
+//! payloads without scanning for unescaped newlines.
+//!
+//! The decoder is incremental ([`FrameDecoder::push`] +
+//! [`FrameDecoder::next_frame`]): bytes may arrive fragmented or coalesced
+//! across arbitrary read boundaries and decode identically (pinned by the
+//! property tests below). Hostile inputs are bounded: a declared length
+//! beyond [`MAX_FRAME`] (or a length header that never terminates) is a
+//! typed [`CodecError`], never an unbounded allocation.
+
+use crate::json::{self, Value};
+use std::fmt;
+
+/// Hard ceiling on one frame's JSON body — matches the HTTP layer's
+/// `MAX_BODY` (16 MiB) so the mux wire admits exactly what `POST
+/// /v1/predict` would.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Longest admissible length header: enough digits for `MAX_FRAME`, so a
+/// stream that sends digits forever (or garbage before the first newline)
+/// is rejected after a bounded prefix.
+const MAX_LEN_DIGITS: usize = 10;
+
+/// Frame kinds on the mux wire. Client→server: `request`, `subscribe`,
+/// `unsubscribe`, `ping`, `pong`. Server→client: `response`, `error`,
+/// `chunk`, `end`, `event`, `lagged`, `ping`, `pong`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Request,
+    Response,
+    Error,
+    Chunk,
+    End,
+    Ping,
+    Pong,
+    Subscribe,
+    Unsubscribe,
+    Event,
+    Lagged,
+}
+
+impl FrameKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FrameKind::Request => "request",
+            FrameKind::Response => "response",
+            FrameKind::Error => "error",
+            FrameKind::Chunk => "chunk",
+            FrameKind::End => "end",
+            FrameKind::Ping => "ping",
+            FrameKind::Pong => "pong",
+            FrameKind::Subscribe => "subscribe",
+            FrameKind::Unsubscribe => "unsubscribe",
+            FrameKind::Event => "event",
+            FrameKind::Lagged => "lagged",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FrameKind> {
+        Some(match s {
+            "request" => FrameKind::Request,
+            "response" => FrameKind::Response,
+            "error" => FrameKind::Error,
+            "chunk" => FrameKind::Chunk,
+            "end" => FrameKind::End,
+            "ping" => FrameKind::Ping,
+            "pong" => FrameKind::Pong,
+            "subscribe" => FrameKind::Subscribe,
+            "unsubscribe" => FrameKind::Unsubscribe,
+            "event" => FrameKind::Event,
+            "lagged" => FrameKind::Lagged,
+            _ => return None,
+        })
+    }
+}
+
+/// One mux frame: client-chosen correlation id, kind, opaque payload.
+/// Ids travel as JSON numbers, so they are exact only up to 2^53 — the
+/// decoder rejects anything larger (clients count from small integers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub id: u64,
+    pub kind: FrameKind,
+    pub payload: Value,
+}
+
+impl Frame {
+    pub fn new(id: u64, kind: FrameKind, payload: Value) -> Frame {
+        Frame { id, kind, payload }
+    }
+
+    /// The frame's JSON body (no length prefix).
+    pub fn to_json(&self) -> Value {
+        Value::Obj(vec![
+            ("id".to_string(), Value::from(self.id)),
+            ("kind".to_string(), Value::from(self.kind.as_str())),
+            ("payload".to_string(), self.payload.clone()),
+        ])
+    }
+
+    /// Encode to wire bytes: `<len>\n<json>\n`.
+    pub fn encode(&self) -> Vec<u8> {
+        let body = json::to_string(&self.to_json());
+        let mut out = Vec::with_capacity(body.len() + 16);
+        out.extend_from_slice(format!("{}\n", body.len()).as_bytes());
+        out.extend_from_slice(body.as_bytes());
+        out.push(b'\n');
+        out
+    }
+
+    /// Parse a frame from its JSON body (already length-sliced).
+    pub fn from_json(v: &Value) -> Result<Frame, CodecError> {
+        let id = v
+            .get("id")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| CodecError::Malformed("frame needs a numeric 'id'".into()))?;
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or_else(|| CodecError::Malformed("frame needs a string 'kind'".into()))
+            .and_then(|k| {
+                FrameKind::parse(k)
+                    .ok_or_else(|| CodecError::Malformed(format!("unknown frame kind '{k}'")))
+            })?;
+        let payload = v.get("payload").cloned().unwrap_or(Value::Null);
+        Ok(Frame { id, kind, payload })
+    }
+}
+
+/// Typed decode failures. `Oversize` means the declared length exceeds the
+/// decoder's bound (hostile or corrupt stream — resync is impossible, the
+/// connection must close); `Malformed` covers bad length headers, bad
+/// JSON, and bad frame shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecError {
+    Oversize(usize),
+    Malformed(String),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Oversize(n) => {
+                write!(f, "declared frame length {n} exceeds the {MAX_FRAME}-byte cap")
+            }
+            CodecError::Malformed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Incremental frame decoder over an internal byte buffer. Feed bytes in
+/// with [`push`](Self::push) as they arrive (any fragmentation), drain
+/// complete frames with [`next_frame`](Self::next_frame).
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Bytes already consumed from the front of `buf` (compacted lazily so
+    /// fragmented pushes don't shift the buffer on every frame).
+    start: usize,
+    max_frame: usize,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        Self::with_max(MAX_FRAME)
+    }
+
+    /// A decoder with a custom frame cap (tests use small caps to exercise
+    /// the hostile-length bound without 16 MiB allocations).
+    pub fn with_max(max_frame: usize) -> FrameDecoder {
+        FrameDecoder {
+            buf: Vec::new(),
+            start: 0,
+            max_frame,
+        }
+    }
+
+    pub fn push(&mut self, bytes: &[u8]) {
+        // Compact before growing: everything before `start` is dead.
+        if self.start > 0 && (self.start >= 4096 || self.start == self.buf.len()) {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet decoded.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Decode the next complete frame, `Ok(None)` if more bytes are needed.
+    /// After an `Err` the stream is unsynchronized — callers must close.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, CodecError> {
+        let pending = &self.buf[self.start..];
+        // Length header: decimal digits up to the first '\n'.
+        let Some(nl) = pending
+            .iter()
+            .take(MAX_LEN_DIGITS + 1)
+            .position(|&b| b == b'\n')
+        else {
+            if pending.len() > MAX_LEN_DIGITS {
+                return Err(CodecError::Malformed(
+                    "length header not terminated within its digit bound".into(),
+                ));
+            }
+            return Ok(None);
+        };
+        let header = &pending[..nl];
+        if header.is_empty() || !header.iter().all(u8::is_ascii_digit) {
+            return Err(CodecError::Malformed(format!(
+                "bad length header {:?}",
+                String::from_utf8_lossy(header)
+            )));
+        }
+        let len: usize = std::str::from_utf8(header)
+            .expect("digits are utf8")
+            .parse()
+            .map_err(|_| CodecError::Malformed("unparsable length header".into()))?;
+        if len > self.max_frame {
+            return Err(CodecError::Oversize(len));
+        }
+        // Body + trailing newline.
+        let body_start = nl + 1;
+        if pending.len() < body_start + len + 1 {
+            return Ok(None);
+        }
+        let body = &pending[body_start..body_start + len];
+        if pending[body_start + len] != b'\n' {
+            return Err(CodecError::Malformed(
+                "frame body not terminated by newline (length prefix disagrees)".into(),
+            ));
+        }
+        let text = std::str::from_utf8(body)
+            .map_err(|_| CodecError::Malformed("frame body is not utf8".into()))?;
+        let v = json::parse(text)
+            .map_err(|e| CodecError::Malformed(format!("frame body is not JSON: {e}")))?;
+        let frame = Frame::from_json(&v)?;
+        self.start += body_start + len + 1;
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::util::prop;
+
+    fn roundtrip(frames: &[Frame], split_at: &[usize]) -> Vec<Frame> {
+        let mut wire = Vec::new();
+        for f in frames {
+            wire.extend_from_slice(&f.encode());
+        }
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        let mut cursor = 0;
+        // Feed in the given fragment sizes, then the remainder.
+        for &n in split_at {
+            let end = (cursor + n).min(wire.len());
+            dec.push(&wire[cursor..end]);
+            cursor = end;
+            while let Some(f) = dec.next_frame().expect("valid stream") {
+                out.push(f);
+            }
+        }
+        dec.push(&wire[cursor..]);
+        while let Some(f) = dec.next_frame().expect("valid stream") {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn encode_decode_single() {
+        let f = Frame::new(
+            7,
+            FrameKind::Request,
+            json::obj([("x", Value::from(1u64))]),
+        );
+        let got = roundtrip(&[f.clone()], &[]);
+        assert_eq!(got, vec![f]);
+    }
+
+    #[test]
+    fn wire_form_is_len_json_newline() {
+        let f = Frame::new(1, FrameKind::Ping, Value::Null);
+        let wire = f.encode();
+        let text = String::from_utf8(wire).unwrap();
+        let (len_line, rest) = text.split_once('\n').unwrap();
+        let body = rest.strip_suffix('\n').unwrap();
+        assert_eq!(len_line.parse::<usize>().unwrap(), body.len());
+        let v = json::parse(body).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("ping"));
+    }
+
+    #[test]
+    fn byte_at_a_time_decodes() {
+        let frames = vec![
+            Frame::new(1, FrameKind::Request, json::obj([("a", Value::from(true))])),
+            Frame::new(2, FrameKind::Response, Value::Arr(vec![Value::from(3u64)])),
+            // Ids ride as JSON numbers (f64): exact up to 2^53.
+            Frame::new(1 << 53, FrameKind::End, Value::Null),
+        ];
+        let splits: Vec<usize> = std::iter::repeat(1).take(4096).collect();
+        assert_eq!(roundtrip(&frames, &splits), frames);
+    }
+
+    #[test]
+    fn hostile_length_is_bounded() {
+        let mut dec = FrameDecoder::new();
+        dec.push(format!("{}\n", MAX_FRAME + 1).as_bytes());
+        assert!(matches!(dec.next_frame(), Err(CodecError::Oversize(_))));
+
+        // Digits forever: rejected once the header bound is exceeded,
+        // never buffered unboundedly.
+        let mut dec = FrameDecoder::new();
+        dec.push(b"99999999999999999999999999");
+        assert!(matches!(dec.next_frame(), Err(CodecError::Malformed(_))));
+
+        // Garbage header.
+        let mut dec = FrameDecoder::new();
+        dec.push(b"abc\n{}\n");
+        assert!(dec.next_frame().is_err());
+
+        // Length prefix that disagrees with the body terminator.
+        let mut dec = FrameDecoder::new();
+        dec.push(b"2\n{\"id\":1}\n");
+        assert!(dec.next_frame().is_err());
+    }
+
+    #[test]
+    fn bad_bodies_are_typed_errors() {
+        for body in [
+            "nope",                         // not JSON
+            "{}",                           // no id
+            r#"{"id":1}"#,                  // no kind
+            r#"{"id":1,"kind":"warp"}"#,    // unknown kind
+            r#"{"id":-1,"kind":"ping"}"#,   // negative id
+        ] {
+            let mut dec = FrameDecoder::new();
+            dec.push(format!("{}\n{}\n", body.len(), body).as_bytes());
+            assert!(dec.next_frame().is_err(), "{body}");
+        }
+    }
+
+    #[test]
+    fn missing_payload_defaults_to_null() {
+        let body = r#"{"id":3,"kind":"pong"}"#;
+        let mut dec = FrameDecoder::new();
+        dec.push(format!("{}\n{}\n", body.len(), body).as_bytes());
+        let f = dec.next_frame().unwrap().unwrap();
+        assert_eq!((f.id, f.kind, f.payload), (3, FrameKind::Pong, Value::Null));
+    }
+
+    /// Property: any frame sequence round-trips byte-identically across
+    /// ARBITRARY read fragmentation (the decoder cannot tell one giant
+    /// read from a byte-at-a-time stream).
+    #[test]
+    fn prop_roundtrip_any_fragmentation() {
+        let kinds = [
+            FrameKind::Request,
+            FrameKind::Response,
+            FrameKind::Chunk,
+            FrameKind::End,
+            FrameKind::Event,
+            FrameKind::Subscribe,
+            FrameKind::Ping,
+        ];
+        prop::check("codec_roundtrip_fragmented", 200, |g| {
+            let n = g.int(1, 8);
+            let frames: Vec<Frame> = (0..n)
+                .map(|_| {
+                    let kind = *g.choose(&kinds);
+                    let payload = match g.int(0, 3) {
+                        0 => Value::Null,
+                        1 => Value::from(g.string(32)),
+                        2 => json::obj([
+                            ("k", Value::from(g.string(16))),
+                            ("n", Value::from(g.int(0, 1 << 30) as u64)),
+                        ]),
+                        _ => Value::Arr(
+                            (0..g.int(0, 16))
+                                .map(|_| Value::from(g.f64(-1e9, 1e9)))
+                                .collect(),
+                        ),
+                    };
+                    Frame::new(g.int(0, u32::MAX as usize) as u64, kind, payload)
+                })
+                .collect();
+            let total: usize = frames.iter().map(|f| f.encode().len()).sum();
+            let cuts = g.int(0, 12);
+            let splits: Vec<usize> = (0..cuts).map(|_| g.int(0, total)).collect();
+            let got = roundtrip(&frames, &splits);
+            assert_eq!(got.len(), frames.len());
+            for (a, b) in frames.iter().zip(&got) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.kind, b.kind);
+                // Payload round-trip compares via the canonical serializer
+                // (float formatting is the serializer's identity).
+                assert_eq!(
+                    json::to_string(&a.payload),
+                    json::to_string(&b.payload)
+                );
+            }
+        });
+    }
+
+    /// Property: hostile declared lengths never make the decoder buffer
+    /// more than header + cap, for any junk prefix.
+    #[test]
+    fn prop_hostile_lengths_bounded() {
+        prop::check("codec_hostile_lengths", 100, |g| {
+            let mut dec = FrameDecoder::with_max(1024);
+            let declared = g.int(1025, u32::MAX as usize);
+            dec.push(format!("{declared}\n").as_bytes());
+            match dec.next_frame() {
+                Err(CodecError::Oversize(_)) | Err(CodecError::Malformed(_)) => {}
+                other => panic!("hostile length admitted: {other:?}"),
+            }
+        });
+    }
+}

@@ -1,0 +1,339 @@
+//! Process-global bounded broadcast event bus.
+//!
+//! Publishers (registry audit records, circuit-breaker transitions,
+//! scheduler sheds, the periodic metrics snapshot) call [`publish`] with a
+//! topic and a JSON document; subscribers ([`subscribe`]) each own a
+//! bounded queue the bus fans out into. The hot path never blocks on a
+//! slow consumer: a full subscriber queue drops its OLDEST entry, counts
+//! it (`events_dropped_total` via the metrics sink, plus a per-subscriber
+//! counter), and flags the subscriber as lagged so its next receive
+//! surfaces a `lagged` marker before any newer events.
+//!
+//! With zero subscribers a publish is one atomic load (the same
+//! cheap-when-idle contract as the chaos plane), so instrumented hot paths
+//! (scheduler sheds, breaker transitions) pay nothing in the common case.
+
+use crate::coordinator::Metrics;
+use crate::json::{self, Value};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// The topic catalog. Publishers use these constants; `?topics=` filters
+/// and `subscribe` frames name them.
+pub const TOPIC_REGISTRY: &str = "registry";
+pub const TOPIC_BREAKER: &str = "breaker";
+pub const TOPIC_SCHED: &str = "sched";
+pub const TOPIC_METRICS: &str = "metrics";
+pub const TOPICS: [&str; 4] = [TOPIC_REGISTRY, TOPIC_BREAKER, TOPIC_SCHED, TOPIC_METRICS];
+
+/// Default per-subscriber queue bound (overridable per subscription; the
+/// server's `events.buffer` config plumbs through here).
+pub const DEFAULT_BUFFER: usize = 256;
+
+struct SubQueue {
+    items: VecDeque<Arc<Value>>,
+    /// Events dropped oldest-first since the last `lagged` marker was
+    /// taken (resets when the subscriber observes the lag).
+    dropped_since_lag: u64,
+    dropped_total: u64,
+}
+
+struct SubInner {
+    /// None = all topics.
+    topics: Option<Vec<String>>,
+    cap: usize,
+    q: Mutex<SubQueue>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+/// What one receive returns.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Recv {
+    /// The next event document (shared, not cloned per subscriber).
+    Event(Arc<Value>),
+    /// The subscriber lagged: `n` events were dropped oldest-first since
+    /// it last kept up. Delivered BEFORE any newer buffered events.
+    Lagged(u64),
+    /// Nothing arrived within the timeout.
+    Timeout,
+}
+
+/// One subscription handle. Dropping it detaches from the bus (the
+/// publisher prunes it on its next fan-out).
+pub struct Subscriber {
+    inner: Arc<SubInner>,
+}
+
+impl Subscriber {
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Recv {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if q.dropped_since_lag > 0 {
+                let n = q.dropped_since_lag;
+                q.dropped_since_lag = 0;
+                return Recv::Lagged(n);
+            }
+            if let Some(ev) = q.items.pop_front() {
+                return Recv::Event(ev);
+            }
+            let (guard, result) = self.inner.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+            if result.timed_out() && q.items.is_empty() && q.dropped_since_lag == 0 {
+                return Recv::Timeout;
+            }
+        }
+    }
+
+    /// Total events this subscriber has lost to its queue bound.
+    pub fn dropped(&self) -> u64 {
+        self.inner.q.lock().unwrap().dropped_total
+    }
+
+    /// Detach explicitly (receivers blocked in `recv_timeout` drain
+    /// normally; the publisher stops feeding the queue).
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+        self.inner.cv.notify_all();
+    }
+
+    /// Whether `close` has been called (forwarder loops exit on this).
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for Subscriber {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[derive(Default)]
+struct Bus {
+    subs: Mutex<Vec<Arc<SubInner>>>,
+    /// Fast-path gate: publishers check this before taking any lock.
+    active: AtomicUsize,
+    seq: AtomicU64,
+    sink: OnceLock<Arc<Metrics>>,
+}
+
+fn bus() -> &'static Bus {
+    static BUS: OnceLock<Bus> = OnceLock::new();
+    BUS.get_or_init(Bus::default)
+}
+
+/// Wire the process-wide metrics sink (at most once; later calls no-op).
+/// The bus then maintains `events_published_total`, `events_dropped_total`
+/// and the `events_subscribers` gauge.
+pub fn set_sink(metrics: Arc<Metrics>) {
+    let _ = bus().sink.set(metrics);
+}
+
+/// Current live-subscriber count (used to skip building snapshots nobody
+/// will read).
+pub fn subscriber_count() -> usize {
+    bus().active.load(Ordering::Relaxed)
+}
+
+/// Subscribe to `topics` (None = everything) with a queue bound of `cap`.
+pub fn subscribe(topics: Option<Vec<String>>, cap: usize) -> Subscriber {
+    let b = bus();
+    let inner = Arc::new(SubInner {
+        topics,
+        cap: cap.max(1),
+        q: Mutex::new(SubQueue {
+            items: VecDeque::new(),
+            dropped_since_lag: 0,
+            dropped_total: 0,
+        }),
+        cv: Condvar::new(),
+        closed: AtomicBool::new(false),
+    });
+    let mut subs = b.subs.lock().unwrap();
+    subs.push(Arc::clone(&inner));
+    b.active.store(subs.len(), Ordering::Relaxed);
+    if let Some(m) = b.sink.get() {
+        m.set_gauge("events_subscribers", subs.len() as u64);
+    }
+    Subscriber { inner }
+}
+
+/// Publish one event to every live subscriber whose filter matches
+/// `topic`. Never blocks on consumers: full queues drop oldest-first and
+/// count. The document every subscriber sees is
+/// `{"seq": N, "ts_ms": T, "topic": topic, "data": data}`.
+pub fn publish(topic: &str, data: Value) {
+    let b = bus();
+    if b.active.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    let seq = b.seq.fetch_add(1, Ordering::Relaxed) + 1;
+    let ts_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    let doc = Arc::new(json::obj([
+        ("seq", Value::from(seq)),
+        ("ts_ms", Value::from(ts_ms)),
+        ("topic", Value::from(topic)),
+        ("data", data),
+    ]));
+
+    let mut subs = b.subs.lock().unwrap();
+    let mut dropped_now = 0u64;
+    subs.retain(|s| {
+        if s.closed.load(Ordering::Acquire) {
+            return false;
+        }
+        let wants = match &s.topics {
+            None => true,
+            Some(ts) => ts.iter().any(|t| t == topic),
+        };
+        if wants {
+            let mut q = s.q.lock().unwrap();
+            if q.items.len() >= s.cap {
+                q.items.pop_front();
+                q.dropped_since_lag += 1;
+                q.dropped_total += 1;
+                dropped_now += 1;
+            }
+            q.items.push_back(Arc::clone(&doc));
+            drop(q);
+            s.cv.notify_one();
+        }
+        true
+    });
+    b.active.store(subs.len(), Ordering::Relaxed);
+    let live = subs.len() as u64;
+    drop(subs);
+    if let Some(m) = b.sink.get() {
+        m.inc("events_published_total");
+        if dropped_now > 0 {
+            m.add("events_dropped_total", dropped_now);
+        }
+        m.set_gauge("events_subscribers", live);
+    }
+}
+
+/// Validate a `?topics=` / subscribe-frame topic list against the catalog;
+/// returns the parsed filter (None = all) or the offending name.
+pub fn parse_topics(csv: Option<&str>) -> Result<Option<Vec<String>>, String> {
+    let Some(csv) = csv.filter(|s| !s.is_empty()) else {
+        return Ok(None);
+    };
+    let mut out = Vec::new();
+    for t in csv.split(',').filter(|s| !s.is_empty()) {
+        if !TOPICS.contains(&t) {
+            return Err(t.to_string());
+        }
+        out.push(t.to_string());
+    }
+    Ok(if out.is_empty() { None } else { Some(out) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The bus is process-global; tests serialize on this guard so one
+    // test's publishes never bleed into another's subscriber.
+    pub(crate) fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static G: Mutex<()> = Mutex::new(());
+        G.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn drain(sub: &Subscriber) -> Vec<Recv> {
+        let mut out = Vec::new();
+        loop {
+            match sub.recv_timeout(Duration::from_millis(10)) {
+                Recv::Timeout => return out,
+                r => out.push(r),
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_and_topic_filter() {
+        let _g = guard();
+        let all = subscribe(None, 16);
+        let reg = subscribe(Some(vec!["registry".into()]), 16);
+        publish(TOPIC_REGISTRY, json::obj([("event", Value::from("promote"))]));
+        publish(TOPIC_BREAKER, json::obj([("state", Value::from("open"))]));
+
+        let got = drain(&all);
+        assert_eq!(got.len(), 2);
+        let got = drain(&reg);
+        assert_eq!(got.len(), 1);
+        match &got[0] {
+            Recv::Event(v) => {
+                assert_eq!(v.get("topic").unwrap().as_str(), Some("registry"));
+                assert_eq!(
+                    v.path(&["data", "event"]).unwrap().as_str(),
+                    Some("promote")
+                );
+                assert!(v.get("seq").unwrap().as_u64().is_some());
+            }
+            other => panic!("expected event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slow_subscriber_drops_oldest_and_lags() {
+        let _g = guard();
+        let sub = subscribe(None, 4);
+        for i in 0..10u64 {
+            publish(TOPIC_SCHED, json::obj([("i", Value::from(i))]));
+        }
+        let got = drain(&sub);
+        // First receive surfaces the lag marker, then the 4 newest.
+        assert_eq!(got.len(), 5, "{got:?}");
+        assert_eq!(got[0], Recv::Lagged(6));
+        let kept: Vec<u64> = got[1..]
+            .iter()
+            .map(|r| match r {
+                Recv::Event(v) => v.path(&["data", "i"]).unwrap().as_u64().unwrap(),
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest dropped first");
+        assert_eq!(sub.dropped(), 6);
+    }
+
+    #[test]
+    fn dropped_subscriber_is_pruned() {
+        let _g = guard();
+        let before = subscriber_count();
+        let sub = subscribe(None, 4);
+        assert_eq!(subscriber_count(), before + 1);
+        drop(sub);
+        // Pruned on the next publish.
+        publish(TOPIC_METRICS, Value::Null);
+        assert_eq!(subscriber_count(), before);
+    }
+
+    #[test]
+    fn publish_without_subscribers_is_cheap_noop() {
+        let _g = guard();
+        // Nothing to assert beyond "does not block or panic" — and seq
+        // must not advance (no one saw anything).
+        let b = bus();
+        let seq0 = b.seq.load(Ordering::Relaxed);
+        publish(TOPIC_SCHED, Value::Null);
+        assert_eq!(b.seq.load(Ordering::Relaxed), seq0);
+    }
+
+    #[test]
+    fn topic_parse_validates_catalog() {
+        assert_eq!(parse_topics(None), Ok(None));
+        assert_eq!(parse_topics(Some("")), Ok(None));
+        assert_eq!(
+            parse_topics(Some("registry,breaker")),
+            Ok(Some(vec!["registry".into(), "breaker".into()]))
+        );
+        assert_eq!(parse_topics(Some("bogus")), Err("bogus".to_string()));
+    }
+}

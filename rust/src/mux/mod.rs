@@ -1,0 +1,576 @@
+//! The multiplexed streaming wire + event subscription plane.
+//!
+//! Three parts (ROADMAP open item 2, in the style of Actyx's wsrpc):
+//!
+//! * [`codec`] — the length-delimited NDJSON frame codec. Every frame
+//!   carries a client-chosen correlation id, so one persistent connection
+//!   (`POST /v1/mux`) multiplexes many in-flight requests and responses
+//!   interleave out-of-order as executions complete.
+//! * [`events`] — the process-global bounded broadcast bus that registry
+//!   transitions, breaker state changes, scheduler sheds and periodic
+//!   metric snapshots publish into.
+//! * this module — the session loop that serves both over a taken-over
+//!   HTTP connection: `request` frames lower into the same execution core
+//!   as `POST /v1/predict` (mux ≡ v1 by construction), `subscribe` frames
+//!   attach the event bus, and `GET /v1/events` streams the bus as plain
+//!   NDJSON for `curl`-grade clients.
+//!
+//! The session obeys the server's admission taxonomy: past the
+//! per-connection in-flight cap, `request` frames answer an `error` frame
+//! carrying the `429 server.overloaded` envelope (same shape as HTTP).
+//! Large responses leave as bounded `chunk` frames so one huge batch
+//! response cannot head-of-line-block the other correlations sharing the
+//! wire — frames from other completions interleave between chunks.
+
+pub mod codec;
+pub mod events;
+
+use crate::coordinator::{ApiError, Metrics};
+use crate::http::{Request, Response, Takeover};
+use crate::json::{self, Value};
+use crate::util::ThreadPool;
+use codec::{CodecError, Frame, FrameDecoder, FrameKind};
+use std::collections::{HashMap, HashSet};
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Mux wire knobs (`mux` config block / `--mux-*` flags).
+#[derive(Debug, Clone)]
+pub struct MuxOptions {
+    /// Per-connection concurrent `request` cap; past it, request frames
+    /// shed with the `429 server.overloaded` envelope in an `error` frame.
+    pub max_inflight: usize,
+    /// Serialized responses larger than this stream as `chunk` frames of
+    /// at most this many bytes, then an `end` frame (0 = never chunk).
+    pub chunk_bytes: usize,
+    /// Per-subscriber event queue bound (both the mux `subscribe` path and
+    /// `GET /v1/events`); slow consumers drop oldest-first past it.
+    pub event_buffer: usize,
+    /// Executor threads per mux session (bounds a session's parallelism;
+    /// in-flight beyond this queue on the session pool).
+    pub exec_workers: usize,
+    /// Read-idle interval after which the session pings its peer; a peer
+    /// that stays silent through TWO intervals (no pong, no frames) is
+    /// reaped. This is the mux/event liveness that exempts these
+    /// connections from the HTTP `--idle-timeout-ms` reaper.
+    pub ping_interval: Duration,
+}
+
+impl Default for MuxOptions {
+    fn default() -> Self {
+        MuxOptions {
+            max_inflight: 32,
+            chunk_bytes: 64 << 10,
+            event_buffer: events::DEFAULT_BUFFER,
+            exec_workers: 4,
+            ping_interval: Duration::from_secs(30),
+        }
+    }
+}
+
+/// The execution hook a mux session lowers `request` payloads into. The
+/// production wiring synthesizes a `POST /v1/predict` request and runs the
+/// identical parse → execute → render path (byte-identity with HTTP is
+/// pinned by the differential test); smokes and benches wire an echo.
+pub type ExecFn = Arc<dyn Fn(&Value) -> Result<Value, ApiError> + Send + Sync>;
+
+/// A mux endpoint: one instance per server, one session per connection.
+pub struct MuxService {
+    exec: ExecFn,
+    metrics: Arc<Metrics>,
+    opts: MuxOptions,
+    open: AtomicUsize,
+}
+
+impl MuxService {
+    pub fn new(exec: ExecFn, metrics: Arc<Metrics>, opts: MuxOptions) -> Arc<MuxService> {
+        Arc::new(MuxService {
+            exec,
+            metrics,
+            opts,
+            open: AtomicUsize::new(0),
+        })
+    }
+
+    /// The `POST /v1/mux` handler's answer: a streaming-head response that
+    /// hands the connection to a mux session after the head is written.
+    pub fn takeover_response(self: &Arc<Self>) -> Response {
+        let svc = Arc::clone(self);
+        let mut resp = Response::text(200, "");
+        resp.headers
+            .retain(|(k, _)| !k.eq_ignore_ascii_case("content-type"));
+        resp.headers
+            .push(("content-type".into(), "application/x-ndjson".into()));
+        resp.takeover = Some(Takeover::new(move |reader, writer| {
+            svc.run_session(reader, writer);
+        }));
+        resp
+    }
+
+    /// One connection's session loop (runs on the connection's HTTP worker
+    /// thread — a mux session is just a very long keep-alive request).
+    fn run_session(&self, mut reader: BufReader<TcpStream>, writer: TcpStream) {
+        self.metrics.inc("mux_connections_total");
+        let open = self.open.fetch_add(1, Ordering::Relaxed) + 1;
+        self.metrics.set_gauge("mux_connections_open", open as u64);
+
+        let _ = reader
+            .get_ref()
+            .set_read_timeout(Some(self.opts.ping_interval));
+        let writer = Arc::new(Mutex::new(writer));
+        let done = Arc::new(AtomicBool::new(false));
+        let inflight: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+        let pool = ThreadPool::new(self.opts.exec_workers.max(1), "flexserve-mux");
+        let mut subs: HashMap<u64, (Arc<events::Subscriber>, std::thread::JoinHandle<()>)> =
+            HashMap::new();
+        let mut decoder = FrameDecoder::new();
+        let mut awaiting_pong = false;
+        let mut buf = [0u8; 8 << 10];
+
+        'session: loop {
+            match reader.read(&mut buf) {
+                Ok(0) => break 'session, // peer closed
+                Ok(n) => {
+                    awaiting_pong = false; // any traffic proves liveness
+                    decoder.push(&buf[..n]);
+                    loop {
+                        match decoder.next_frame() {
+                            Ok(Some(frame)) => {
+                                self.metrics.inc("mux_frames_in_total");
+                                if !self.dispatch(
+                                    frame,
+                                    &writer,
+                                    &done,
+                                    &inflight,
+                                    &pool,
+                                    &mut subs,
+                                ) {
+                                    break 'session;
+                                }
+                            }
+                            Ok(None) => break,
+                            Err(e) => {
+                                // Framing is unsynchronized: answer one
+                                // typed error, then close.
+                                self.metrics.inc("mux_errors_total");
+                                let _ = write_frame(
+                                    &writer,
+                                    &self.metrics,
+                                    &error_frame(0, &bad_frame_error(&e)),
+                                );
+                                break 'session;
+                            }
+                        }
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Idle a full interval: ping once; silent through a
+                    // second interval → reap the connection.
+                    if awaiting_pong {
+                        break 'session;
+                    }
+                    self.metrics.inc("mux_pings_total");
+                    if write_frame(
+                        &writer,
+                        &self.metrics,
+                        &Frame::new(0, FrameKind::Ping, Value::Null),
+                    )
+                    .is_err()
+                    {
+                        break 'session;
+                    }
+                    awaiting_pong = true;
+                }
+                Err(_) => break 'session,
+            }
+        }
+
+        // Teardown: unblock every forwarder, sever the socket, drain the
+        // exec pool (in-flight jobs finish; their writes fail harmlessly).
+        done.store(true, Ordering::Release);
+        for (_, (sub, _)) in subs.iter() {
+            sub.close();
+        }
+        {
+            let w = writer.lock().unwrap();
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        for (_, (_, handle)) in subs.drain() {
+            let _ = handle.join();
+        }
+        drop(pool);
+        let open = self.open.fetch_sub(1, Ordering::Relaxed) - 1;
+        self.metrics.set_gauge("mux_connections_open", open as u64);
+    }
+
+    /// Handle one inbound frame; returns false to close the session.
+    fn dispatch(
+        &self,
+        frame: Frame,
+        writer: &Arc<Mutex<TcpStream>>,
+        done: &Arc<AtomicBool>,
+        inflight: &Arc<Mutex<HashSet<u64>>>,
+        pool: &ThreadPool,
+        subs: &mut HashMap<u64, (Arc<events::Subscriber>, std::thread::JoinHandle<()>)>,
+    ) -> bool {
+        match frame.kind {
+            FrameKind::Ping => {
+                self.metrics.inc("mux_pings_total");
+                write_frame(
+                    writer,
+                    &self.metrics,
+                    &Frame::new(frame.id, FrameKind::Pong, frame.payload),
+                )
+                .is_ok()
+            }
+            FrameKind::Pong => true, // liveness noted by the read loop
+            FrameKind::Request => {
+                let id = frame.id;
+                {
+                    let mut set = inflight.lock().unwrap();
+                    if set.contains(&id) || subs.contains_key(&id) {
+                        self.metrics.inc("mux_errors_total");
+                        let e = ApiError::duplicate_id(id);
+                        return write_frame(writer, &self.metrics, &error_frame(id, &e))
+                            .is_ok();
+                    }
+                    if set.len() >= self.opts.max_inflight {
+                        self.metrics.inc("mux_shed_overload_total");
+                        let e = ApiError::overloaded(format!(
+                            "mux connection at its in-flight cap ({}); \
+                             wait for a completion",
+                            self.opts.max_inflight
+                        ));
+                        return write_frame(writer, &self.metrics, &error_frame(id, &e))
+                            .is_ok();
+                    }
+                    set.insert(id);
+                }
+                self.metrics.inc("mux_requests_total");
+                let exec = Arc::clone(&self.exec);
+                let metrics = Arc::clone(&self.metrics);
+                let writer = Arc::clone(writer);
+                let inflight = Arc::clone(inflight);
+                let chunk_bytes = self.opts.chunk_bytes;
+                let payload = frame.payload;
+                pool.execute(move || {
+                    let result = exec(&payload);
+                    let _ = send_result(&writer, &metrics, id, result, chunk_bytes);
+                    inflight.lock().unwrap().remove(&id);
+                });
+                true
+            }
+            FrameKind::Subscribe => {
+                let id = frame.id;
+                if subs.contains_key(&id) || inflight.lock().unwrap().contains(&id) {
+                    self.metrics.inc("mux_errors_total");
+                    let e = ApiError::duplicate_id(id);
+                    return write_frame(writer, &self.metrics, &error_frame(id, &e)).is_ok();
+                }
+                let topics_csv = topics_from_payload(&frame.payload);
+                let filter = match events::parse_topics(topics_csv.as_deref()) {
+                    Ok(f) => f,
+                    Err(bad) => {
+                        self.metrics.inc("mux_errors_total");
+                        let e = ApiError::bad_value(format!(
+                            "unknown topic '{bad}' (catalog: {})",
+                            events::TOPICS.join(", ")
+                        ));
+                        return write_frame(writer, &self.metrics, &error_frame(id, &e))
+                            .is_ok();
+                    }
+                };
+                self.metrics.inc("mux_subscribes_total");
+                let sub = Arc::new(events::subscribe(filter.clone(), self.opts.event_buffer));
+                let ack = Frame::new(
+                    id,
+                    FrameKind::Response,
+                    json::obj([(
+                        "subscribed",
+                        match &filter {
+                            None => Value::from("all"),
+                            Some(ts) => Value::Arr(
+                                ts.iter().map(|t| Value::from(t.as_str())).collect(),
+                            ),
+                        },
+                    )]),
+                );
+                if write_frame(writer, &self.metrics, &ack).is_err() {
+                    return false;
+                }
+                let handle = spawn_forwarder(
+                    id,
+                    Arc::clone(&sub),
+                    Arc::clone(writer),
+                    Arc::clone(&self.metrics),
+                    Arc::clone(done),
+                );
+                subs.insert(id, (sub, handle));
+                true
+            }
+            FrameKind::Unsubscribe => {
+                let id = frame.id;
+                match subs.remove(&id) {
+                    Some((sub, handle)) => {
+                        sub.close();
+                        let _ = handle.join();
+                        write_frame(
+                            writer,
+                            &self.metrics,
+                            &Frame::new(
+                                id,
+                                FrameKind::Response,
+                                json::obj([("unsubscribed", Value::from(true))]),
+                            ),
+                        )
+                        .is_ok()
+                    }
+                    None => {
+                        self.metrics.inc("mux_errors_total");
+                        let e = ApiError::bad_frame(format!(
+                            "unsubscribe for unknown subscription id {id}"
+                        ));
+                        write_frame(writer, &self.metrics, &error_frame(id, &e)).is_ok()
+                    }
+                }
+            }
+            // Server→client kinds arriving inbound are protocol violations.
+            other => {
+                self.metrics.inc("mux_errors_total");
+                let e = ApiError::bad_frame(format!(
+                    "frame kind '{}' is not valid client→server",
+                    other.as_str()
+                ));
+                write_frame(writer, &self.metrics, &error_frame(frame.id, &e)).is_ok()
+            }
+        }
+    }
+}
+
+/// `subscribe` payload shapes: `{"topics": ["registry", ...]}` or
+/// `{"topics": "registry,breaker"}`; absent/null = all topics.
+fn topics_from_payload(payload: &Value) -> Option<String> {
+    match payload.get("topics") {
+        None => None,
+        Some(Value::Null) => None,
+        Some(Value::Arr(items)) => Some(
+            items
+                .iter()
+                .filter_map(Value::as_str)
+                .collect::<Vec<_>>()
+                .join(","),
+        ),
+        Some(v) => v.as_str().map(str::to_string),
+    }
+}
+
+/// The event-forwarder thread behind one mux subscription: drains the
+/// subscriber queue into `event` frames (and `lagged` markers) until the
+/// session ends, the subscription closes, or the peer goes away.
+fn spawn_forwarder(
+    id: u64,
+    sub: Arc<events::Subscriber>,
+    writer: Arc<Mutex<TcpStream>>,
+    metrics: Arc<Metrics>,
+    done: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("flexserve-mux-events".into())
+        .spawn(move || {
+            while !done.load(Ordering::Acquire) {
+                match sub.recv_timeout(Duration::from_millis(250)) {
+                    events::Recv::Event(v) => {
+                        metrics.inc("mux_events_out_total");
+                        if write_frame(
+                            &writer,
+                            &metrics,
+                            &Frame::new(id, FrameKind::Event, (*v).clone()),
+                        )
+                        .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    events::Recv::Lagged(n) => {
+                        if write_frame(
+                            &writer,
+                            &metrics,
+                            &Frame::new(
+                                id,
+                                FrameKind::Lagged,
+                                json::obj([("dropped", Value::from(n))]),
+                            ),
+                        )
+                        .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    events::Recv::Timeout => {
+                        if sub.is_closed() {
+                            break;
+                        }
+                    }
+                }
+            }
+        })
+        .expect("spawn mux event forwarder")
+}
+
+/// Serialize + send one frame under the connection's write lock (frames
+/// from concurrent completions interleave whole, never torn).
+fn write_frame(
+    writer: &Mutex<TcpStream>,
+    metrics: &Metrics,
+    frame: &Frame,
+) -> std::io::Result<()> {
+    let bytes = frame.encode();
+    let mut w = writer.lock().unwrap();
+    w.write_all(&bytes)?;
+    w.flush()?;
+    drop(w);
+    metrics.inc("mux_frames_out_total");
+    Ok(())
+}
+
+/// An `error` frame carrying the HTTP error envelope (same taxonomy, same
+/// shape — `{"status", "error": {"code", "message"}, "retry_after"?}`).
+fn error_frame(id: u64, e: &ApiError) -> Frame {
+    Frame::new(id, FrameKind::Error, e.envelope())
+}
+
+fn bad_frame_error(e: &CodecError) -> ApiError {
+    ApiError::bad_frame(e.to_string())
+}
+
+/// Send one execution result down the wire: a single `response` frame, or
+/// — past `chunk_bytes` — a run of bounded `chunk` frames whose `data`
+/// strings concatenate to the exact serialized response, closed by an
+/// `end` frame. Chunking preserves byte-identity (the differential test
+/// reassembles and compares) while letting other correlations' frames
+/// interleave between chunks.
+fn send_result(
+    writer: &Mutex<TcpStream>,
+    metrics: &Metrics,
+    id: u64,
+    result: Result<Value, ApiError>,
+    chunk_bytes: usize,
+) -> std::io::Result<()> {
+    match result {
+        Err(e) => {
+            metrics.inc("mux_errors_total");
+            write_frame(writer, metrics, &error_frame(id, &e))
+        }
+        Ok(v) => {
+            let body = json::to_string(&v);
+            if chunk_bytes == 0 || body.len() <= chunk_bytes {
+                return write_frame(writer, metrics, &Frame::new(id, FrameKind::Response, v));
+            }
+            let mut seq = 0u64;
+            let mut rest = body.as_str();
+            while !rest.is_empty() {
+                // Split on a char boundary at or below the bound.
+                let mut cut = rest.len().min(chunk_bytes);
+                while !rest.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                let (part, tail) = rest.split_at(cut);
+                metrics.inc("mux_chunks_total");
+                write_frame(
+                    writer,
+                    metrics,
+                    &Frame::new(
+                        id,
+                        FrameKind::Chunk,
+                        json::obj([
+                            ("seq", Value::from(seq)),
+                            ("data", Value::from(part)),
+                        ]),
+                    ),
+                )?;
+                seq += 1;
+                rest = tail;
+            }
+            write_frame(
+                writer,
+                metrics,
+                &Frame::new(
+                    id,
+                    FrameKind::End,
+                    json::obj([
+                        ("chunks", Value::from(seq)),
+                        ("bytes", Value::from(body.len())),
+                    ]),
+                ),
+            )
+        }
+    }
+}
+
+/// The `GET /v1/events` handler: validate `?topics=`, then take over the
+/// connection and stream the bus as NDJSON (one event document per line,
+/// `{"lagged":true,...}` markers on overrun, `{"ping":true}` keepalives on
+/// idle so dead peers are reaped).
+pub fn events_response(req: &Request, metrics: Arc<Metrics>, buffer: usize) -> Response {
+    let filter = match events::parse_topics(req.query_param("topics")) {
+        Ok(f) => f,
+        Err(bad) => {
+            return ApiError::bad_value(format!(
+                "unknown topic '{bad}' (catalog: {})",
+                events::TOPICS.join(", ")
+            ))
+            .to_response()
+        }
+    };
+    let mut resp = Response::text(200, "");
+    resp.headers
+        .retain(|(k, _)| !k.eq_ignore_ascii_case("content-type"));
+    resp.headers
+        .push(("content-type".into(), "application/x-ndjson".into()));
+    resp.takeover = Some(Takeover::new(move |_reader, mut writer| {
+        metrics.inc("events_streams_total");
+        let sub = events::subscribe(filter.clone(), buffer);
+        loop {
+            let line = match sub.recv_timeout(Duration::from_secs(10)) {
+                events::Recv::Event(v) => json::to_string(&v),
+                events::Recv::Lagged(n) => json::to_string(&json::obj([
+                    ("lagged", Value::from(true)),
+                    ("dropped", Value::from(n)),
+                ])),
+                events::Recv::Timeout => json::to_string(&json::obj([(
+                    "ping",
+                    Value::from(true),
+                )])),
+            };
+            if writer
+                .write_all(format!("{line}\n").as_bytes())
+                .and_then(|_| writer.flush())
+                .is_err()
+            {
+                break; // peer gone
+            }
+        }
+    }));
+    resp
+}
+
+/// Periodic metric snapshots onto the bus (`metrics` topic). Detached
+/// thread, started once by `serve()`; snapshots are only rendered while
+/// someone is subscribed.
+pub fn start_metrics_ticker(metrics: Arc<Metrics>, interval: Duration) {
+    std::thread::Builder::new()
+        .name("flexserve-events-metrics".into())
+        .spawn(move || loop {
+            std::thread::sleep(interval);
+            if events::subscriber_count() > 0 {
+                events::publish(events::TOPIC_METRICS, metrics.render_json());
+            }
+        })
+        .expect("spawn events metrics ticker");
+}

@@ -13,6 +13,7 @@ use crate::json::{self, Value};
 use std::collections::VecDeque;
 use std::io::Write;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -39,6 +40,9 @@ pub struct AuditLog {
     ring: Mutex<VecDeque<Value>>,
     file: Option<Mutex<std::fs::File>>,
     path: Option<PathBuf>,
+    /// Monotonic per-process sequence stamped into every record (`seq`),
+    /// so `GET /v1/audit?since=<seq>` pages instead of re-reading.
+    seq: AtomicU64,
 }
 
 impl AuditLog {
@@ -59,6 +63,7 @@ impl AuditLog {
             ring: Mutex::new(VecDeque::with_capacity(64)),
             file,
             path,
+            seq: AtomicU64::new(0),
         })
     }
 
@@ -74,7 +79,9 @@ impl AuditLog {
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_millis() as u64)
             .unwrap_or(0);
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
         let mut members: Vec<(String, Value)> = vec![
+            ("seq".into(), Value::from(seq)),
             ("ts_ms".into(), Value::from(ts_ms)),
             ("event".into(), Value::from(ev.event)),
             ("model".into(), Value::from(ev.model)),
@@ -102,7 +109,12 @@ impl AuditLog {
         if ring.len() >= RING_CAP {
             ring.pop_front();
         }
-        ring.push_back(doc);
+        ring.push_back(doc.clone());
+        drop(ring);
+        // Audit records ARE the registry's transition stream: every
+        // rollout/lifecycle event fans out to `/v1/events` subscribers
+        // (no-op with no subscribers).
+        crate::mux::events::publish(crate::mux::events::TOPIC_REGISTRY, doc);
     }
 
     /// The most recent `n` records, oldest first.
@@ -110,6 +122,20 @@ impl AuditLog {
         let ring = self.ring.lock().unwrap();
         let skip = ring.len().saturating_sub(n);
         ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Records with `seq > since`, oldest first, at most `limit` — the
+    /// `GET /v1/audit?since=&limit=` paging path. Returns the slice plus
+    /// the log's current high-water seq (the caller's next `since`).
+    pub fn since(&self, since: u64, limit: usize) -> (Vec<Value>, u64) {
+        let ring = self.ring.lock().unwrap();
+        let out: Vec<Value> = ring
+            .iter()
+            .filter(|doc| doc.get("seq").and_then(Value::as_u64).unwrap_or(0) > since)
+            .take(limit.max(1))
+            .cloned()
+            .collect();
+        (out, self.seq.load(Ordering::Relaxed))
     }
 
     /// Total records seen this process (ring may have evicted older ones).
@@ -153,6 +179,32 @@ mod tests {
         assert!(tail[1].get("ts_ms").unwrap().as_u64().is_some());
         // tail(1) returns only the newest.
         assert_eq!(log.tail(1)[0].get("event").unwrap().as_str(), Some("promote"));
+    }
+
+    #[test]
+    fn seq_is_monotonic_and_since_pages() {
+        let log = AuditLog::open(None).unwrap();
+        for i in 0..5 {
+            log.record(ev(if i % 2 == 0 { "canary" } else { "promote" }, "m"));
+        }
+        let tail = log.tail(10);
+        let seqs: Vec<u64> = tail
+            .iter()
+            .map(|d| d.get("seq").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4, 5]);
+        // Page from the middle, bounded by limit.
+        let (page, high) = log.since(2, 2);
+        assert_eq!(high, 5);
+        let got: Vec<u64> = page
+            .iter()
+            .map(|d| d.get("seq").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(got, vec![3, 4]);
+        // Caught up: empty page, same high-water mark.
+        let (page, high) = log.since(5, 10);
+        assert!(page.is_empty());
+        assert_eq!(high, 5);
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! Mux wire + event plane integration tests.
+//!
+//! The event bus is process-global, so every test in this binary runs
+//! under one static mutex (`guard()`) — a subscriber in one test must
+//! never observe another test's publishes. Device-free tests drive the
+//! REAL `MuxService` session loop over echo executors; the differential
+//! test (artifact-gated) pins mux ≡ v1 byte-identity against the full
+//! stack.
+
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, BreakerConfig, Breakers, Metrics};
+use flexserve::http::{Client, MuxClient, MuxMsg, Request, Response, Server, ServerHandle};
+use flexserve::json::{self, Value};
+use flexserve::mux::{self, codec, MuxOptions, MuxService};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serialize every test in this binary: the bus is process-global and a
+/// concurrent test's publishes would leak into this test's subscribers.
+fn guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The process-global metric sink binds once; every test shares it.
+fn sink() -> Arc<Metrics> {
+    static SINK: OnceLock<Arc<Metrics>> = OnceLock::new();
+    let m = SINK.get_or_init(|| Arc::new(Metrics::new()));
+    mux::events::set_sink(Arc::clone(m));
+    Arc::clone(m)
+}
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn has_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+/// An echo mux endpoint: replies with the request payload, after an
+/// optional payload-controlled delay (`{"delay_ms": N}`).
+fn spawn_echo_mux(opts: MuxOptions) -> (ServerHandle, Arc<Metrics>) {
+    let metrics = sink();
+    let exec: mux::ExecFn = Arc::new(|p: &Value| {
+        if let Some(ms) = p.get("delay_ms").and_then(Value::as_u64) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        Ok(p.clone())
+    });
+    let svc = MuxService::new(exec, Arc::clone(&metrics), opts);
+    let m2 = Arc::clone(&metrics);
+    let handle = Server::spawn(
+        "127.0.0.1:0",
+        2,
+        Arc::new(move |req: &Request| {
+            if req.method == "POST" && req.path == "/v1/mux" {
+                return svc.takeover_response();
+            }
+            if req.method == "GET" && req.path == "/v1/events" {
+                return mux::events_response(req, Arc::clone(&m2), 8);
+            }
+            Response::coded_error(404, "route.not_found", "mux test server")
+        }),
+    )
+    .unwrap();
+    (handle, metrics)
+}
+
+/// Out-of-order interleaving by correlation id: the first-sent request is
+/// the slowest, so its reply arrives after later-sent ids' replies —
+/// demuxed correctly by id, on one connection.
+#[test]
+fn responses_interleave_out_of_order_by_correlation_id() {
+    let _g = guard();
+    let (handle, _) = spawn_echo_mux(MuxOptions::default());
+    let mut c = MuxClient::connect(handle.addr).unwrap();
+
+    c.request(10, &json::obj([("i", Value::from(10u64)), ("delay_ms", Value::from(250u64))]))
+        .unwrap();
+    c.request(11, &json::obj([("i", Value::from(11u64))])).unwrap();
+    c.request(12, &json::obj([("i", Value::from(12u64))])).unwrap();
+
+    let mut order = Vec::new();
+    while order.len() < 3 {
+        match c.next().unwrap() {
+            MuxMsg::Reply { id, value, .. } => {
+                assert_eq!(
+                    value.get("i").and_then(Value::as_u64),
+                    Some(id),
+                    "payload must round-trip its own correlation id"
+                );
+                order.push(id);
+            }
+            other => panic!("unexpected message: {other:?}"),
+        }
+    }
+    assert_eq!(
+        order.last(),
+        Some(&10),
+        "the slow first-sent id must complete last: {order:?}"
+    );
+    assert_ne!(order, vec![10, 11, 12], "no interleaving observed");
+    handle.stop();
+}
+
+/// A correlation id already in flight is refused with the typed
+/// `mux.duplicate_id` envelope; the original request still completes.
+#[test]
+fn duplicate_in_flight_id_is_refused_typed() {
+    let _g = guard();
+    let (handle, _) = spawn_echo_mux(MuxOptions::default());
+    let mut c = MuxClient::connect(handle.addr).unwrap();
+
+    c.request(7, &json::obj([("i", Value::from(7u64)), ("delay_ms", Value::from(200u64))]))
+        .unwrap();
+    c.request(7, &json::obj([("i", Value::from(7u64))])).unwrap();
+
+    // First terminal answer for id 7 is the duplicate refusal...
+    match c.wait_for(7).unwrap() {
+        MuxMsg::Error { status, code, .. } => {
+            assert_eq!((status, code.as_str()), (400, "mux.duplicate_id"));
+        }
+        other => panic!("expected duplicate_id error, got {other:?}"),
+    }
+    // ...and the original execution still answers.
+    match c.wait_for(7).unwrap() {
+        MuxMsg::Reply { value, .. } => {
+            assert_eq!(value.get("i").and_then(Value::as_u64), Some(7));
+        }
+        other => panic!("expected the original reply, got {other:?}"),
+    }
+    handle.stop();
+}
+
+/// Past the per-connection in-flight cap, request frames shed with the
+/// same `429 server.overloaded` envelope HTTP uses.
+#[test]
+fn in_flight_cap_sheds_with_http_taxonomy() {
+    let _g = guard();
+    let (handle, _) = spawn_echo_mux(MuxOptions {
+        max_inflight: 2,
+        ..MuxOptions::default()
+    });
+    let mut c = MuxClient::connect(handle.addr).unwrap();
+
+    c.request(1, &json::obj([("delay_ms", Value::from(300u64))])).unwrap();
+    c.request(2, &json::obj([("delay_ms", Value::from(300u64))])).unwrap();
+    c.request(3, &json::obj([("i", Value::from(3u64))])).unwrap();
+
+    match c.wait_for(3).unwrap() {
+        MuxMsg::Error { status, code, .. } => {
+            assert_eq!((status, code.as_str()), (429, "server.overloaded"));
+        }
+        other => panic!("expected overload shed, got {other:?}"),
+    }
+    // The two admitted requests still finish.
+    assert!(c.wait_for(1).unwrap().is_terminal());
+    assert!(c.wait_for(2).unwrap().is_terminal());
+    handle.stop();
+}
+
+/// Protocol violations on the raw wire: a server→client kind sent inbound
+/// answers a typed `mux.bad_frame`; an unparseable length header answers
+/// one error frame and closes the session.
+#[test]
+fn protocol_violations_answer_typed_bad_frame() {
+    let _g = guard();
+    let (handle, _) = spawn_echo_mux(MuxOptions::default());
+
+    let read_head = |reader: &mut BufReader<TcpStream>| {
+        loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "head truncated");
+            if line.trim_end_matches(['\r', '\n']).is_empty() {
+                break;
+            }
+        }
+    };
+    let next_frame = |reader: &mut BufReader<TcpStream>,
+                      dec: &mut codec::FrameDecoder|
+     -> Option<codec::Frame> {
+        let mut buf = [0u8; 4096];
+        loop {
+            if let Some(f) = dec.next_frame().unwrap() {
+                return Some(f);
+            }
+            let n = reader.read(&mut buf).unwrap();
+            if n == 0 {
+                return None;
+            }
+            dec.push(&buf[..n]);
+        }
+    };
+
+    // Inbound `event` kind → typed refusal, session stays up.
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(stream);
+    let head = format!(
+        "POST /v1/mux HTTP/1.1\r\nhost: {}\r\ncontent-length: 0\r\n\r\n",
+        handle.addr
+    );
+    {
+        let mut w: &TcpStream = reader.get_ref();
+        w.write_all(head.as_bytes()).unwrap();
+    }
+    read_head(&mut reader);
+    let mut dec = codec::FrameDecoder::new();
+    {
+        let mut w: &TcpStream = reader.get_ref();
+        w.write_all(&codec::Frame::new(3, codec::FrameKind::Event, Value::Null).encode())
+            .unwrap();
+    }
+    let f = next_frame(&mut reader, &mut dec).expect("an error frame");
+    assert_eq!((f.id, f.kind), (3, codec::FrameKind::Error));
+    assert_eq!(
+        f.payload.path(&["error", "code"]).and_then(Value::as_str),
+        Some("mux.bad_frame")
+    );
+    // The session survived the typed refusal: a normal request still works.
+    {
+        let mut w: &TcpStream = reader.get_ref();
+        w.write_all(&codec::Frame::new(4, codec::FrameKind::Request, Value::Null).encode())
+            .unwrap();
+    }
+    let f = next_frame(&mut reader, &mut dec).expect("a reply");
+    assert_eq!((f.id, f.kind), (4, codec::FrameKind::Response));
+
+    // Garbage framing → one error frame (id 0), then the session closes.
+    {
+        let mut w: &TcpStream = reader.get_ref();
+        w.write_all(b"not-a-length\n").unwrap();
+    }
+    let f = next_frame(&mut reader, &mut dec).expect("framing error frame");
+    assert_eq!((f.id, f.kind), (0, codec::FrameKind::Error));
+    assert_eq!(
+        f.payload.path(&["error", "code"]).and_then(Value::as_str),
+        Some("mux.bad_frame")
+    );
+    assert!(
+        next_frame(&mut reader, &mut dec).is_none(),
+        "unsynchronized session must close"
+    );
+    handle.stop();
+}
+
+/// A slow mux subscriber loses oldest-first, sees a `lagged` marker frame
+/// with the dropped count, and the bus's hot path never blocks (the burst
+/// publish completes instantly).
+#[test]
+fn slow_subscriber_sees_lagged_marker_and_dropped_counter() {
+    let _g = guard();
+    let metrics = sink();
+    let (handle, _) = spawn_echo_mux(MuxOptions {
+        event_buffer: 4,
+        ..MuxOptions::default()
+    });
+    let mut c = MuxClient::connect(handle.addr).unwrap();
+    c.subscribe(900, &["sched"]).unwrap();
+    assert!(matches!(c.wait_for(900).unwrap(), MuxMsg::Reply { .. }));
+
+    // Publish far faster than the forwarder can serialize + write: the
+    // cap-4 queue must overrun and drop oldest-first.
+    let dropped_before = metrics.counter("events_dropped_total");
+    for i in 0..200u64 {
+        mux::events::publish(
+            mux::events::TOPIC_SCHED,
+            json::obj([("burst", Value::from(i))]),
+        );
+    }
+    let mut lagged_dropped = 0u64;
+    let mut events_seen = 0u64;
+    let mut last_burst: Option<u64> = None;
+    loop {
+        match c.next().unwrap() {
+            MuxMsg::Lagged { id, dropped } => {
+                assert_eq!(id, 900);
+                lagged_dropped += dropped;
+            }
+            MuxMsg::Event { id, doc } => {
+                assert_eq!(id, 900);
+                let b = doc.path(&["data", "burst"]).and_then(Value::as_u64).unwrap();
+                if let Some(prev) = last_burst {
+                    assert!(b > prev, "events must stay in publish order");
+                }
+                last_burst = Some(b);
+                events_seen += 1;
+                if b == 199 {
+                    break; // the newest event survived the overrun
+                }
+            }
+            other => panic!("unexpected message: {other:?}"),
+        }
+    }
+    assert!(lagged_dropped > 0, "cap-4 queue under a 200-burst must lag");
+    assert_eq!(
+        lagged_dropped + events_seen,
+        200,
+        "dropped + delivered must account for every publish"
+    );
+    assert!(
+        metrics.counter("events_dropped_total") >= dropped_before + lagged_dropped,
+        "per-subscriber drops must land in events_dropped_total"
+    );
+    handle.stop();
+}
+
+/// Open a `GET /v1/events` NDJSON stream and return its buffered reader
+/// with the response head already consumed.
+fn open_event_stream(addr: std::net::SocketAddr, topics: &str) -> BufReader<TcpStream> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    let mut reader = BufReader::new(stream);
+    {
+        let head = format!("GET /v1/events?topics={topics} HTTP/1.1\r\nhost: {addr}\r\n\r\n");
+        let mut w: &TcpStream = reader.get_ref();
+        w.write_all(head.as_bytes()).unwrap();
+    }
+    let mut status = String::new();
+    assert!(reader.read_line(&mut status).unwrap() > 0);
+    assert!(status.contains("200"), "events stream refused: {status}");
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "head truncated");
+        if line.trim_end_matches(['\r', '\n']).is_empty() {
+            break;
+        }
+    }
+    // The subscriber registers inside the takeover just after the head;
+    // give it a beat so the next publish can't race past it.
+    std::thread::sleep(Duration::from_millis(100));
+    reader
+}
+
+/// Read NDJSON lines until a non-ping event document arrives.
+fn next_event(reader: &mut BufReader<TcpStream>) -> Value {
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "stream closed early");
+        let doc = json::parse(line.trim()).unwrap();
+        if doc.get("ping").is_none() {
+            return doc;
+        }
+    }
+}
+
+/// A circuit-breaker trip publishes onto the bus and appears on the plain
+/// `GET /v1/events` stream with topic `breaker`.
+#[test]
+fn breaker_trip_appears_on_event_stream() {
+    let _g = guard();
+    let metrics = sink();
+    let (handle, _) = spawn_echo_mux(MuxOptions::default());
+    let mut reader = open_event_stream(handle.addr, "breaker");
+
+    let breakers = Breakers::new(
+        BreakerConfig {
+            fail_threshold: 2,
+            cooldown: Duration::from_millis(200),
+        },
+        Arc::clone(&metrics),
+    );
+    let key = Breakers::key("echo", 1);
+    breakers.record(&key, false);
+    breakers.record(&key, false); // second failure trips the breaker
+
+    let doc = next_event(&mut reader);
+    assert_eq!(doc.get("topic").and_then(Value::as_str), Some("breaker"));
+    assert_eq!(
+        doc.path(&["data", "state"]).and_then(Value::as_str),
+        Some("open"),
+        "trip event: {doc}"
+    );
+    assert_eq!(
+        doc.path(&["data", "key"]).and_then(Value::as_str),
+        Some(key.as_str())
+    );
+    handle.stop();
+}
+
+/// A registry promote (the real state machine, synthetic store) surfaces
+/// on `GET /v1/events` within one flush, through the audit → bus hook.
+#[test]
+fn registry_promote_surfaces_on_event_stream() {
+    use flexserve::registry::{Guardrails, Registry, RegistryConfig, Store};
+
+    let _g = guard();
+    let metrics = sink();
+    let (handle, _) = spawn_echo_mux(MuxOptions::default());
+    let mut reader = open_event_stream(handle.addr, "registry");
+
+    let registry = Registry::new(
+        Store::synthetic(&[("echo", 2)]),
+        RegistryConfig {
+            audit_log: None,
+            guardrails: Guardrails {
+                max_error_rate: 0.5,
+                max_p95_us: 0,
+                min_samples: 10,
+            },
+        },
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let body = json::obj([
+        ("mode", Value::from("canary")),
+        ("version", Value::from(2u64)),
+        ("percent", Value::from(25u64)),
+    ]);
+    registry.apply_rollout("echo", &body, "test", &|_| true).unwrap();
+    let doc = next_event(&mut reader);
+    assert_eq!(doc.get("topic").and_then(Value::as_str), Some("registry"));
+    assert_eq!(doc.path(&["data", "event"]).and_then(Value::as_str), Some("canary"));
+
+    registry.promote("echo", "test").unwrap();
+    let doc = next_event(&mut reader);
+    assert_eq!(
+        doc.path(&["data", "event"]).and_then(Value::as_str),
+        Some("promote"),
+        "promote must surface within one flush: {doc}"
+    );
+    assert_eq!(doc.path(&["data", "model"]).and_then(Value::as_str), Some("echo"));
+    assert!(doc.get("seq").and_then(Value::as_u64).is_some(), "events carry seq");
+    handle.stop();
+}
+
+/// The differential contract (artifact-gated): the same predict payload
+/// sent as a mux `request` frame and as `POST /v1/predict` yields
+/// BYTE-IDENTICAL response bytes. `mux_chunk_bytes` is forced tiny so the
+/// reply streams as many chunk frames — reassembly must reproduce the
+/// exact bytes HTTP wrote, proving mux ≡ v1 by construction, chunking
+/// included.
+#[test]
+fn mux_request_matches_v1_predict_byte_for_byte() {
+    let _g = guard();
+    if !has_artifacts() {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into();
+    config.artifacts = artifact_dir();
+    config.http_workers = 4;
+    config.device_workers = 1;
+    config.mux_chunk_bytes = 64; // force the chunked path
+    config.events_metrics_ms = 0; // keep the bus quiet for other tests
+    let (handle, _state) = serve(&config).expect("server starts");
+
+    // A deterministic non-detail body: rendering carries no timings, so
+    // repeated executions serialize identically.
+    let mut rng = Prng::new(42);
+    let (data, _) = workload::make_batch(&mut rng, 3);
+    let body = json::obj([
+        (
+            "data",
+            Value::Arr(data.iter().map(|&v| Value::from(v)).collect()),
+        ),
+        ("batch", Value::from(3u64)),
+    ]);
+
+    let mut http = Client::connect(handle.addr).unwrap();
+    let resp = http.post_json("/v1/predict", &body).unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.json_body());
+    let http_bytes = resp.body.clone();
+
+    let mut mc = MuxClient::connect(handle.addr).unwrap();
+    match mc.call(1, &body).unwrap() {
+        MuxMsg::Reply { raw, .. } => {
+            assert!(
+                raw.len() > 64,
+                "response must exceed the chunk bound to exercise reassembly"
+            );
+            assert_eq!(
+                raw.as_bytes(),
+                &http_bytes[..],
+                "mux reply must be byte-identical to POST /v1/predict"
+            );
+        }
+        other => panic!("mux predict failed: {other:?}"),
+    }
+
+    // And the error taxonomy rides the wire unchanged: a malformed
+    // payload answers the same envelope shape HTTP returns.
+    match mc.call(2, &json::obj([("nonsense", Value::from(true))])).unwrap() {
+        MuxMsg::Error { status, code, .. } => {
+            assert_eq!(status, 422, "code {code}");
+        }
+        other => panic!("expected a typed error, got {other:?}"),
+    }
+    handle.stop();
+}
