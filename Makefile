@@ -19,9 +19,19 @@
 #                    correlations on one framed /v1/mux connection, a live
 #                    subscription observing an injected rollout, the
 #                    plain-HTTP /v1/events stream
-#   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs
-#                    or the streaming plane (/v1/mux, /v1/events, mux.*
-#                    error codes) drift from the README
+#   make backend-smoke  device-free full-stack boot on the pure-Rust
+#                    backends (cpu, then quant) over synthetic artifacts:
+#                    v1 + v2 + mux wires, per-backend metrics, a live
+#                    unload/load cycle — no XLA artifacts required
+#   make bench-compare  regression gate: stash the committed
+#                    BENCH_serve.json, regenerate it via `make bench`, and
+#                    fail when p99 or throughput drifts past the tolerance
+#                    (default 15%; BENCH_TOLERANCE=N overrides)
+#   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs,
+#                    the streaming plane (/v1/mux, /v1/events, mux.*
+#                    error codes), or the execution-backend surface
+#                    (--backend flags, model.backend_unsupported) drift
+#                    from the README
 #
 # `artifacts` needs the python side (jax + the pallas kernels); the Rust
 # targets need only cargo. Device-backed Rust tests self-skip when
@@ -31,8 +41,12 @@ PYTHON ?= python3
 ARTIFACTS ?= rust/artifacts
 
 BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
+# The in-process cpu/quant serve stacks do real inference per request, so
+# the baseline run is kept short; they exist to catch relative drift, not
+# to saturate the box.
+BENCH_STACK_FLAGS ?= --connections 2 --duration-secs 2
 
-.PHONY: artifacts serve test bench gateway-smoke chaos-smoke mux-smoke check-docs fmt clippy
+.PHONY: artifacts serve test bench bench-compare backend-smoke gateway-smoke chaos-smoke mux-smoke check-docs fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -43,19 +57,39 @@ serve:
 test:
 	cd rust && cargo build --release && cargo test -q
 
-# Two records, one file: the v1 request/response baseline and the mux
-# framed-wire baseline (`--protocol mux` appended last wins over any
-# protocol in BENCH_FLAGS). The wrapper is plain JSON so the CI artifact
-# diffs against the committed numbers per wire.
+# One record per wire and per available backend, one file: the v1 and mux
+# echo baselines (`--protocol mux` appended last wins over any protocol in
+# BENCH_FLAGS), plus one record each against an in-process serve stack
+# pinned to the cpu and quant backends over synthetic artifacts. The
+# wrapper is plain JSON so the CI artifact diffs against the committed
+# numbers per (wire, backend) key — see `make bench-compare`.
 bench:
 	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --out /tmp/flexserve_bench_v1.json
 	cd rust && cargo run --release -- bench $(BENCH_FLAGS) --protocol mux --out /tmp/flexserve_bench_mux.json
+	cd rust && cargo run --release -- bench --backend-stack cpu $(BENCH_STACK_FLAGS) --out /tmp/flexserve_bench_cpu.json
+	cd rust && cargo run --release -- bench --backend-stack quant $(BENCH_STACK_FLAGS) --out /tmp/flexserve_bench_quant.json
 	@{ printf '{\n"bench": "flexserve-serve-baselines",\n"v1": '; \
 	   cat /tmp/flexserve_bench_v1.json; \
 	   printf ',\n"mux": '; \
 	   cat /tmp/flexserve_bench_mux.json; \
+	   printf ',\n"cpu": '; \
+	   cat /tmp/flexserve_bench_cpu.json; \
+	   printf ',\n"quant": '; \
+	   cat /tmp/flexserve_bench_quant.json; \
 	   printf '}\n'; } > BENCH_serve.json
-	@echo "wrote BENCH_serve.json (v1 + mux echo baselines)"
+	@echo "wrote BENCH_serve.json (v1 + mux echo, cpu + quant stack baselines)"
+
+# Gate: the committed BENCH_serve.json is the baseline; a fresh `make
+# bench` is the candidate. Keys present on only one side (a backend the
+# baseline predates) pass through; shared keys fail the build past the
+# tolerance. BENCH_TOLERANCE=25 loosens the gate on noisy boxes.
+bench-compare:
+	cp BENCH_serve.json /tmp/flexserve_bench_baseline.json
+	$(MAKE) bench
+	cd rust && cargo run --release -- bench-compare /tmp/flexserve_bench_baseline.json ../BENCH_serve.json
+
+backend-smoke:
+	cd rust && cargo run --release -- backend-smoke
 
 gateway-smoke:
 	cd rust && cargo run --release -- gateway-smoke
@@ -82,7 +116,11 @@ check-docs:
 	for t in $$(grep -oE 'TOPIC_[A-Z]+: &str = "[a-z]+"' rust/src/mux/events.rs | grep -oE '"[a-z]+"' | tr -d '"'); do \
 		grep -qE "^\| .$$t." README.md || { echo "check-docs: README.md topic table is missing '$$t'"; ok=0; }; \
 	done; \
-	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route and the streaming plane"
+	for b in 'Execution backends' 'model.backend_unsupported' '--backend' '--backend-override' \
+			'--cpu-workers' '--arena-cap-mb' 'bench-compare' 'backend-smoke'; do \
+		grep -qF -- "$$b" README.md || { echo "check-docs: README.md is missing backend doc $$b"; ok=0; }; \
+	done; \
+	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route, the streaming plane, and the backend surface"
 
 fmt:
 	cd rust && cargo fmt --check

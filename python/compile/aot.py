@@ -7,6 +7,9 @@ serve. It runs once (`make artifacts`) and produces:
       <model>_b<bucket>.hlo.txt   one XLA HLO-text module per (model, batch
                                   bucket); weights baked in as constants
       params_<model>.npz          trained params (training cache + provenance)
+      <model>.weights.f32         flat LE f32 sidecar + manifest layer grammar
+                                  for pure-dense architectures (serveable by
+                                  the Rust cpu/quant backends, no XLA)
       manifest.json               the contract with rust/src/runtime: shapes,
                                   buckets, class names, SHA-256 per artifact,
                                   test accuracy, provenance block
@@ -141,6 +144,49 @@ def _lower_bucket(mdef, params, bucket):
     return to_hlo_text(jax.jit(fn).lower(spec))
 
 
+# Architectures that are pure flatten->linear stacks, in layer order. These
+# additionally export the manifest layer grammar plus a flat little-endian
+# f32 weights sidecar, so the Rust `cpu`/`quant` backends can serve the
+# REAL trained model with no XLA at all (and the artifact-gated
+# cpu-vs-xla differential test gets a trained subject). Conv architectures
+# have no grammar entry — they stay XLA-only.
+DENSE_STACKS = {"mlp": ["fc1", "fc2", "head"]}
+
+
+def _emit_dense_sidecar(name, params, out_dir):
+    """Returns the manifest `layers` + `weights` members, or None."""
+    order = DENSE_STACKS.get(name)
+    if order is None:
+        return None
+    blobs, layers, off = [], [], 0
+    for i, lname in enumerate(order):
+        w = np.ascontiguousarray(params[lname]["w"], np.float32)  # [in][out]
+        b = np.ascontiguousarray(params[lname]["b"], np.float32)
+        layers.append(
+            {
+                "op": "linear",
+                "in": int(w.shape[0]),
+                "out": int(w.shape[1]),
+                "act": "linear" if i + 1 == len(order) else "relu",
+                "w_off": off,
+                "b_off": off + int(w.size),
+            }
+        )
+        off += int(w.size) + int(b.size)
+        blobs.extend([w.reshape(-1), b.reshape(-1)])
+    fname = f"{name}.weights.f32"
+    fpath = os.path.join(out_dir, fname)
+    np.concatenate(blobs).astype("<f4").tofile(fpath)
+    return {
+        "layers": layers,
+        "weights": {
+            "file": fname,
+            "sha256": _sha256(fpath),
+            "bytes": os.path.getsize(fpath),
+        },
+    }
+
+
 def build(out_dir, buckets=None, verbose=False):
     buckets = buckets or BUCKETS
     os.makedirs(out_dir, exist_ok=True)
@@ -171,6 +217,13 @@ def build(out_dir, buckets=None, verbose=False):
             "test_acc": acc,
             "buckets": bucket_entries,
         }
+        dense = _emit_dense_sidecar(name, params, out_dir)
+        if dense:
+            models_entry[name].update(dense)
+            print(
+                f"[aot]   {name}.weights.f32: dense layer grammar "
+                f"({len(dense['layers'])} layers)"
+            )
 
     manifest = {
         "format_version": 1,

@@ -1,0 +1,265 @@
+//! `BENCH_serve.json` regression comparison behind `flexserve
+//! bench-compare`.
+//!
+//! A bench report document comes in three wrapper shapes: a flat record
+//! (single run), `{"sweep": [...]}` (concurrency sweep), and the
+//! `make bench` merge `{"bench": "flexserve-serve-baselines", "v1": ...,
+//! "mux": ..., "cpu": ...}`. [`collect_records`] walks any of them and
+//! pulls out every flat record, keyed `(protocol, backend, connections)`
+//! so per-wire and per-backend baselines diff independently. [`compare`]
+//! then checks p99 latency and successful throughput of every key present
+//! in BOTH documents against a percentage tolerance — new keys (a backend
+//! the baseline predates) pass through without failing the gate, a key
+//! that disappeared is reported but only measured drift fails.
+
+use crate::json::Value;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// The two gated metrics of one bench record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// `protocol/backend/cN` — the comparison identity.
+    pub key: String,
+    /// Client-observed p99 latency, microseconds.
+    pub p99_us: f64,
+    /// Successful-request throughput (the honest number under overload).
+    pub ok_rps: f64,
+}
+
+/// One metric's baseline-vs-current verdict.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub key: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// Percent change in the "worse" direction (positive = regressed
+    /// direction: p99 up, throughput down).
+    pub change_pct: f64,
+    /// True when `change_pct` exceeds the tolerance.
+    pub regressed: bool,
+}
+
+/// Is `v` one flat bench record? (Wrapper objects carry neither member.)
+fn is_record(v: &Value) -> bool {
+    v.get("config").is_some() && v.get("latency_us").is_some()
+}
+
+fn record_of(v: &Value) -> Option<Record> {
+    let cfg = v.get("config")?;
+    let protocol = cfg.get("protocol").and_then(Value::as_str).unwrap_or("?");
+    // Records from before the backend field default to the historical
+    // implicit backend so old committed baselines stay comparable.
+    let backend = cfg.get("backend").and_then(Value::as_str).unwrap_or("xla");
+    let conns = cfg.get("connections").and_then(Value::as_u64).unwrap_or(0);
+    Some(Record {
+        key: format!("{protocol}/{backend}/c{conns}"),
+        p99_us: v.path(&["latency_us", "p99"]).and_then(Value::as_f64)?,
+        ok_rps: v.get("throughput_ok_rps").and_then(Value::as_f64)?,
+    })
+}
+
+fn collect_into(v: &Value, out: &mut Vec<Record>) {
+    if is_record(v) {
+        out.extend(record_of(v));
+        return;
+    }
+    match v {
+        Value::Obj(members) => {
+            for (_, m) in members {
+                collect_into(m, out);
+            }
+        }
+        Value::Arr(items) => {
+            for m in items {
+                collect_into(m, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Every flat bench record in `doc`, whatever the wrapper shape.
+pub fn collect_records(doc: &Value) -> Vec<Record> {
+    let mut out = Vec::new();
+    collect_into(doc, &mut out);
+    out
+}
+
+/// Diff every key present in both documents. `tolerance_pct` is the
+/// allowed regression per metric (p99 may rise, throughput may fall, by
+/// at most this much). Errors when the documents share no keys — that is
+/// a broken comparison, not a clean pass.
+pub fn compare(baseline: &Value, current: &Value, tolerance_pct: f64) -> Result<Vec<Delta>> {
+    let base: BTreeMap<String, Record> = collect_records(baseline)
+        .into_iter()
+        .map(|r| (r.key.clone(), r))
+        .collect();
+    let cur: BTreeMap<String, Record> = collect_records(current)
+        .into_iter()
+        .map(|r| (r.key.clone(), r))
+        .collect();
+    if base.is_empty() {
+        bail!("baseline document contains no bench records");
+    }
+    if cur.is_empty() {
+        bail!("current document contains no bench records");
+    }
+    let shared: Vec<&String> = base.keys().filter(|k| cur.contains_key(*k)).collect();
+    if shared.is_empty() {
+        bail!(
+            "no comparable records: baseline keys {:?} vs current keys {:?}",
+            base.keys().collect::<Vec<_>>(),
+            cur.keys().collect::<Vec<_>>()
+        );
+    }
+    let mut deltas = Vec::new();
+    for key in shared {
+        let b = &base[key];
+        let c = &cur[key];
+        // p99: higher is worse. A zero baseline (degenerate run) gates
+        // nothing — there is no meaningful percentage off zero.
+        if b.p99_us > 0.0 {
+            let change = (c.p99_us - b.p99_us) / b.p99_us * 100.0;
+            deltas.push(Delta {
+                key: key.clone(),
+                metric: "latency_us.p99",
+                baseline: b.p99_us,
+                current: c.p99_us,
+                change_pct: change,
+                regressed: change > tolerance_pct,
+            });
+        }
+        // Throughput: lower is worse.
+        if b.ok_rps > 0.0 {
+            let change = (b.ok_rps - c.ok_rps) / b.ok_rps * 100.0;
+            deltas.push(Delta {
+                key: key.clone(),
+                metric: "throughput_ok_rps",
+                baseline: b.ok_rps,
+                current: c.ok_rps,
+                change_pct: change,
+                regressed: change > tolerance_pct,
+            });
+        }
+    }
+    Ok(deltas)
+}
+
+pub fn has_regression(deltas: &[Delta]) -> bool {
+    deltas.iter().any(|d| d.regressed)
+}
+
+/// Human-readable verdict table, one line per (key, metric).
+pub fn summarize(deltas: &[Delta], tolerance_pct: f64) -> String {
+    let mut out = format!("bench-compare (tolerance {tolerance_pct:.0}%):\n");
+    for d in deltas {
+        out.push_str(&format!(
+            "  {:4} {:<24} {:<18} {:>12.1} -> {:>12.1}  ({:+.1}%)\n",
+            if d.regressed { "FAIL" } else { "ok" },
+            d.key,
+            d.metric,
+            d.baseline,
+            d.current,
+            d.change_pct,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn record(protocol: &str, backend: Option<&str>, conns: u64, p99: f64, rps: f64) -> String {
+        let backend = backend
+            .map(|b| format!("\"backend\":\"{b}\","))
+            .unwrap_or_default();
+        format!(
+            r#"{{"bench":"flexserve-serve",
+                "config":{{"protocol":"{protocol}",{backend}"connections":{conns}}},
+                "throughput_ok_rps":{rps},
+                "latency_us":{{"p99":{p99}}}}}"#
+        )
+    }
+
+    #[test]
+    fn collects_flat_sweep_and_baseline_wrappers() {
+        let flat = json::parse(&record("v1", Some("cpu"), 2, 500.0, 1000.0)).unwrap();
+        let recs = collect_records(&flat);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].key, "v1/cpu/c2");
+        assert_eq!(recs[0].p99_us, 500.0);
+
+        let sweep = json::parse(&format!(
+            r#"{{"bench":"flexserve-serve-sweep","sweep":[{},{}]}}"#,
+            record("v1", Some("cpu"), 1, 100.0, 10.0),
+            record("v1", Some("cpu"), 2, 200.0, 20.0),
+        ))
+        .unwrap();
+        let keys: Vec<String> = collect_records(&sweep).into_iter().map(|r| r.key).collect();
+        assert_eq!(keys, vec!["v1/cpu/c1", "v1/cpu/c2"]);
+
+        // The `make bench` merge; a record WITHOUT a backend field (old
+        // committed baseline) keys as xla.
+        let merged = json::parse(&format!(
+            r#"{{"bench":"flexserve-serve-baselines","v1":{},"mux":{}}}"#,
+            record("v1", None, 4, 300.0, 3000.0),
+            record("mux", Some("quant"), 4, 400.0, 4000.0),
+        ))
+        .unwrap();
+        let keys: Vec<String> = collect_records(&merged).into_iter().map(|r| r.key).collect();
+        assert_eq!(keys, vec!["v1/xla/c4", "mux/quant/c4"]);
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_regressions_fail() {
+        let base = json::parse(&record("v1", Some("cpu"), 2, 1000.0, 100.0)).unwrap();
+        // 10% slower p99, 10% lower throughput: inside a 15% gate.
+        let ok = json::parse(&record("v1", Some("cpu"), 2, 1100.0, 90.0)).unwrap();
+        let deltas = compare(&base, &ok, 15.0).unwrap();
+        assert_eq!(deltas.len(), 2);
+        assert!(!has_regression(&deltas));
+
+        // 30% slower p99 fails the p99 gate only.
+        let slow = json::parse(&record("v1", Some("cpu"), 2, 1300.0, 100.0)).unwrap();
+        let deltas = compare(&base, &slow, 15.0).unwrap();
+        assert!(has_regression(&deltas));
+        let bad: Vec<_> = deltas.iter().filter(|d| d.regressed).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "latency_us.p99");
+        assert!((bad[0].change_pct - 30.0).abs() < 1e-9);
+
+        // A throughput collapse fails that gate; improvements never fail.
+        let starved = json::parse(&record("v1", Some("cpu"), 2, 500.0, 50.0)).unwrap();
+        let deltas = compare(&base, &starved, 15.0).unwrap();
+        let bad: Vec<_> = deltas.iter().filter(|d| d.regressed).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "throughput_ok_rps");
+        let summary = summarize(&deltas, 15.0);
+        assert!(summary.contains("FAIL"), "{summary}");
+        assert!(summary.contains("throughput_ok_rps"), "{summary}");
+    }
+
+    #[test]
+    fn unshared_keys_are_skipped_but_disjoint_sets_error() {
+        // Baseline predates the quant backend: the new key passes through.
+        let base = json::parse(&record("v1", Some("cpu"), 2, 1000.0, 100.0)).unwrap();
+        let cur = json::parse(&format!(
+            r#"{{"sweep":[{},{}]}}"#,
+            record("v1", Some("cpu"), 2, 1000.0, 100.0),
+            record("v1", Some("quant"), 2, 9999.0, 1.0),
+        ))
+        .unwrap();
+        let deltas = compare(&base, &cur, 15.0).unwrap();
+        assert!(!has_regression(&deltas));
+        assert!(deltas.iter().all(|d| d.key == "v1/cpu/c2"));
+
+        // Nothing in common is an error, not a silent pass.
+        let other = json::parse(&record("mux", Some("xla"), 8, 1.0, 1.0)).unwrap();
+        assert!(compare(&base, &other, 15.0).is_err());
+        assert!(compare(&base, &json::parse("{}").unwrap(), 15.0).is_err());
+    }
+}

@@ -99,6 +99,12 @@ pub struct LoadConfig {
     /// served version rides in `detail.models.*.version`), so leave this
     /// off for pure-throughput runs.
     pub record_versions: bool,
+    /// Execution-backend label stamped into `BENCH_serve.json`
+    /// (`config.backend`) so per-backend runs key separately in perf
+    /// trajectories and `bench-compare`. The harness does not switch the
+    /// server's backend — `flexserve serve --backend` does; this records
+    /// which one the target was running.
+    pub backend: String,
     pub seed: u64,
 }
 
@@ -122,6 +128,7 @@ impl Default for LoadConfig {
             protocol: Protocol::V1,
             path: None,
             record_versions: false,
+            backend: "xla".into(),
             seed: 0,
         }
     }
@@ -606,6 +613,7 @@ pub fn report_json_with_gateway(
             json::obj([
                 ("addr", Value::from(cfg.addr.to_string())),
                 ("protocol", Value::from(cfg.protocol.as_str())),
+                ("backend", Value::from(cfg.backend.as_str())),
                 ("path", Value::from(cfg.effective_path())),
                 ("connections", Value::from(cfg.connections)),
                 (
@@ -778,6 +786,11 @@ mod tests {
         assert_eq!(
             doc.path(&["config", "iters_per_connection"]).unwrap().as_u64(),
             Some(5)
+        );
+        assert_eq!(
+            doc.path(&["config", "backend"]).unwrap().as_str(),
+            Some("xla"),
+            "the backend label defaults to the server's default backend"
         );
         // The emitted document is valid JSON end to end.
         assert!(json::parse(&json::to_string_pretty(&doc)).is_ok());

@@ -3,6 +3,7 @@
 //! probes for the shared-device experiment, and the closed-loop HTTP load
 //! generator behind `flexserve bench` ([`load`]).
 
+pub mod compare;
 pub mod load;
 
 use crate::util::{Histogram, Stopwatch};

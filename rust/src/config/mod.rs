@@ -61,6 +61,21 @@ pub struct ServeConfig {
     /// Period between metrics-snapshot publishes onto the event bus's
     /// `metrics` topic, in ms (`--events-metrics-ms`; 0 = off).
     pub events_metrics_ms: u64,
+    /// Default execution backend for every model (`backend.default`;
+    /// `--backend xla|cpu|quant`). None/"auto" defers to each manifest
+    /// entry's own `backend` field, with XLA as the final fallback.
+    pub backend: Option<String>,
+    /// Per-model backend overrides (`backend.models` JSON map). Each pair
+    /// is `(model, backend)`; an override outranks the manifest but not
+    /// the global `--backend` pin.
+    pub backend_overrides: Vec<(String, String)>,
+    /// Intra-op worker threads for the CPU/quant backends
+    /// (`backend.cpu_workers`; `--cpu-workers`; 0 = auto-size to
+    /// physical cores).
+    pub cpu_workers: usize,
+    /// Buffer-arena retention cap per device worker, in MB
+    /// (`backend.arena_cap_mb`; `--arena-cap-mb`; 0 = 64 MB default).
+    pub arena_cap_mb: usize,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +99,10 @@ impl Default for ServeConfig {
             mux_chunk_bytes: 64 << 10,
             events_buffer: 256,
             events_metrics_ms: 5000,
+            backend: None,
+            backend_overrides: Vec::new(),
+            cpu_workers: 0,
+            arena_cap_mb: 0,
         }
     }
 }
@@ -270,6 +289,49 @@ impl ServeConfig {
                         .ok_or_else(|| anyhow!("events.metrics_interval_ms must be an integer (0 = off)"))?;
                 }
             }
+            "backend" => match val {
+                Value::Null => {
+                    self.backend = None;
+                    self.backend_overrides.clear();
+                }
+                // Shorthand: `"backend": "cpu"` pins the default only.
+                Value::Str(s) => self.backend = parse_backend_name("backend", s)?,
+                Value::Obj(_) => {
+                    if let Some(d) = val.get("default") {
+                        self.backend = match d {
+                            Value::Null => None,
+                            _ => parse_backend_name("backend.default", req_str("backend.default", d)?)?,
+                        };
+                    }
+                    if let Some(m) = val.get("models") {
+                        let obj = m
+                            .as_obj()
+                            .ok_or_else(|| anyhow!("'backend.models' must be an object"))?;
+                        self.backend_overrides = obj
+                            .iter()
+                            .map(|(model, b)| {
+                                let name = req_str("backend.models entry", b)?;
+                                parse_backend_name("backend.models entry", name)?
+                                    .ok_or_else(|| {
+                                        anyhow!("backend.models['{model}'] must name a backend, not 'auto'")
+                                    })
+                                    .map(|b| (model.clone(), b))
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                    }
+                    if let Some(w) = val.get("cpu_workers") {
+                        self.cpu_workers = w
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("backend.cpu_workers must be an integer (0 = auto)"))?;
+                    }
+                    if let Some(a) = val.get("arena_cap_mb") {
+                        self.arena_cap_mb = a
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("backend.arena_cap_mb must be an integer (0 = default)"))?;
+                    }
+                }
+                _ => bail!("'backend' must be a string, null, or object"),
+            },
             // A combined cluster config file may carry a `gateway` block
             // (consumed by `GatewayConfig::from_file`); the serve side
             // validates the shape and otherwise ignores it.
@@ -292,7 +354,9 @@ impl ServeConfig {
     /// `--breaker-fail-threshold N`, `--breaker-cooldown-ms N`,
     /// `--chaos SPEC`, `--chaos-seed N`, `--idle-timeout-ms N`,
     /// `--mux-max-inflight N`, `--mux-chunk-bytes N`, `--events-buffer N`,
-    /// `--events-metrics-ms N`).
+    /// `--events-metrics-ms N`, `--backend xla|cpu|quant|auto`,
+    /// `--backend-override model=kind[,model=kind]`, `--cpu-workers N`,
+    /// `--arena-cap-mb N`).
     pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
         let mut it = args.iter().peekable();
         while let Some(arg) = it.next() {
@@ -380,6 +444,23 @@ impl ServeConfig {
                     self.events_buffer = b;
                 }
                 "--events-metrics-ms" => self.events_metrics_ms = take()?.parse::<u64>()?,
+                "--backend" => self.backend = parse_backend_name("--backend", &take()?)?,
+                "--backend-override" => {
+                    for spec in take()?.split(',').filter(|s| !s.is_empty()) {
+                        let (model, kind) = spec.split_once('=').ok_or_else(|| {
+                            anyhow!("--backend-override expects model=kind (got '{spec}')")
+                        })?;
+                        let kind = parse_backend_name("--backend-override", kind)?
+                            .ok_or_else(|| {
+                                anyhow!("--backend-override must name a backend, not 'auto'")
+                            })?;
+                        let model = model.trim().to_string();
+                        self.backend_overrides.retain(|(m, _)| *m != model);
+                        self.backend_overrides.push((model, kind));
+                    }
+                }
+                "--cpu-workers" => self.cpu_workers = take()?.parse::<usize>()?,
+                "--arena-cap-mb" => self.arena_cap_mb = take()?.parse::<usize>()?,
                 "--no-verify" => self.verify_sha = false,
                 "--no-warmup" => self.warmup = false,
                 "--access-log" => self.access_log = true,
@@ -603,6 +684,20 @@ fn parse_backend(spec: &str) -> (String, String) {
     }
 }
 
+/// Validate a backend spelling from config/CLI. `Ok(None)` for ""/"auto"
+/// (defer to each manifest entry); a typed error for unknown names so a
+/// typo fails at argument parse, not at first predict. Canonicalizes
+/// aliases ("u8" → "quant").
+fn parse_backend_name(context: &str, s: &str) -> Result<Option<String>> {
+    if s.is_empty() || s == "auto" {
+        return Ok(None);
+    }
+    match crate::runtime::BackendKind::parse(s) {
+        Some(k) => Ok(Some(k.as_str().to_string())),
+        None => bail!("{context}: unknown backend '{s}' (expected xla|cpu|quant|auto)"),
+    }
+}
+
 fn parse_bool_flag(flag: &str, v: &str) -> Result<bool> {
     match v {
         "1" | "true" | "on" => Ok(true),
@@ -807,6 +902,76 @@ mod tests {
     }
 
     #[test]
+    fn backend_block_and_flags_parse() {
+        let c = ServeConfig::default();
+        assert!(c.backend.is_none(), "default defers to the manifest");
+        assert!(c.backend_overrides.is_empty());
+        assert_eq!(c.cpu_workers, 0, "0 = auto-size");
+        assert_eq!(c.arena_cap_mb, 0, "0 = built-in default cap");
+
+        let mut c = ServeConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"backend":{"default":"cpu","models":{"cnn_s":"u8","mlp":"xla"},
+                    "cpu_workers":4,"arena_cap_mb":128}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.backend.as_deref(), Some("cpu"));
+        assert_eq!(
+            c.backend_overrides,
+            vec![
+                ("cnn_s".to_string(), "quant".to_string()), // "u8" canonicalizes
+                ("mlp".to_string(), "xla".to_string()),
+            ]
+        );
+        assert_eq!(c.cpu_workers, 4);
+        assert_eq!(c.arena_cap_mb, 128);
+        // String shorthand pins the default; "auto" clears it.
+        c.apply_json(&json::parse(r#"{"backend":"quant"}"#).unwrap()).unwrap();
+        assert_eq!(c.backend.as_deref(), Some("quant"));
+        c.apply_json(&json::parse(r#"{"backend":{"default":"auto"}}"#).unwrap()).unwrap();
+        assert!(c.backend.is_none());
+        // Unknown names are a parse error, not a deferred 409.
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"backend":"tpu"}"#).unwrap())
+            .is_err());
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"backend":{"models":{"cnn_s":"auto"}}}"#).unwrap())
+            .is_err());
+
+        let mut c = ServeConfig::default();
+        c.apply_cli(
+            &["--backend=cpu", "--backend-override", "cnn_s=quant,cnn_m=xla",
+              "--cpu-workers", "2", "--arena-cap-mb=32"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert_eq!(c.backend.as_deref(), Some("cpu"));
+        assert_eq!(c.backend_overrides.len(), 2);
+        assert_eq!(c.cpu_workers, 2);
+        assert_eq!(c.arena_cap_mb, 32);
+        // A repeated override for the same model replaces, not duplicates.
+        c.apply_cli(&["--backend-override=cnn_s=xla".to_string()]).unwrap();
+        assert_eq!(
+            c.backend_overrides.iter().filter(|(m, _)| m == "cnn_s").count(),
+            1
+        );
+        assert!(c
+            .backend_overrides
+            .contains(&("cnn_s".to_string(), "xla".to_string())));
+        assert!(ServeConfig::default()
+            .apply_cli(&["--backend=gpu".to_string()])
+            .is_err());
+        assert!(ServeConfig::default()
+            .apply_cli(&["--backend-override=cnn_s".to_string()])
+            .is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut c = ServeConfig::default();
         assert!(c.apply_json(&json::parse(r#"{"nope":1}"#).unwrap()).is_err());
@@ -917,6 +1082,10 @@ mod tests {
         assert_eq!(c.mux_chunk_bytes, 65536);
         assert_eq!(c.events_buffer, 256);
         assert_eq!(c.events_metrics_ms, 5000);
+        assert!(c.backend.is_none(), "example ships with backend auto");
+        assert!(c.backend_overrides.is_empty());
+        assert_eq!(c.cpu_workers, 0);
+        assert_eq!(c.arena_cap_mb, 64);
     }
 
     #[test]

@@ -768,6 +768,9 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
                 ))),
             ),
         ];
+        if !m.backend.is_empty() {
+            detail.push(("backend".to_string(), Value::from(m.backend)));
+        }
         // The fast path rides the shared scheduler now, so concurrent
         // same-model requests coalesce too — surface the evidence.
         if let Some(st) = done.stats {
@@ -813,10 +816,15 @@ fn handle_load(s: &ServerState, name: &str, req: &Request) -> Result<Response, A
             .store()
             .verify_version(name, version)
             .map_err(|e| ApiError::provenance(name, format!("{e:#}")))?;
-        s.ensemble
-            .pool()
-            .load_model(&slot)
-            .map_err(|e| ApiError::load_failed(name, format!("{e:#}")))?;
+        s.ensemble.pool().load_model(&slot).map_err(|e| {
+            // A backend that can't serve this model is a configuration
+            // conflict (409), not a load failure.
+            if let Some(u) = e.downcast_ref::<crate::runtime::BackendUnsupported>() {
+                ApiError::backend_unsupported(&u.model, &u.backend, &u.detail)
+            } else {
+                ApiError::load_failed(name, format!("{e:#}"))
+            }
+        })?;
         s.metrics.inc("lifecycle_loads_total");
         s.registry.note_load(name, version, &ServerState::actor(req));
     }

@@ -42,6 +42,9 @@ pub struct ModelOutput {
     pub exec_micros: u64,
     /// Total device queue-wait micros across chunks.
     pub queue_micros: u64,
+    /// Execution backend that served these rows (`"xla"`, `"cpu"`,
+    /// `"quant"`; `""` when synthesized outside the executor).
+    pub backend: &'static str,
 }
 
 /// Output of one ensemble forward.
@@ -270,6 +273,7 @@ impl Ensemble {
                     buckets: Vec::new(),
                     exec_micros: 0,
                     queue_micros: 0,
+                    backend: "",
                 }
             })
             .collect();
@@ -298,6 +302,7 @@ impl Ensemble {
             out.buckets.push(resp.bucket);
             out.exec_micros += resp.exec_micros;
             out.queue_micros += resp.queue_micros;
+            out.backend = resp.backend;
         }
         if evicted.iter().any(|&e| e) {
             let mut keep = evicted.iter().map(|&e| !e);
@@ -337,6 +342,7 @@ mod tests {
                     buckets: vec![4],
                     exec_micros: 10,
                     queue_micros: 1,
+                    backend: "",
                 },
                 ModelOutput {
                     model: "b".into(),
@@ -346,6 +352,7 @@ mod tests {
                     buckets: vec![4],
                     exec_micros: 12,
                     queue_micros: 0,
+                    backend: "",
                 },
             ],
         }

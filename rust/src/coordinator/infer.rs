@@ -521,34 +521,73 @@ pub fn fuse_named_votes(
                 buckets: Vec::new(),
                 exec_micros: 0,
                 queue_micros: 0,
+                backend: "",
             })
             .collect(),
     };
     fuse_detections(&output, policy, 1)
 }
 
-/// Fold one forward's device timings into the `stage_*` histograms and
-/// return the per-request breakdown for the protocols' diagnostics blocks.
+/// Pure stage accounting for one forward. The historical `stage_exec_us`
+/// conflated two waits with kernel time; the breakdown now separates:
+///
+/// * `queue_us` — scheduler-queue wait (coalescing + admission), zero on
+///   the direct path;
+/// * `submit_us` — submit→device-start: the executor-channel handoff
+///   summed across (model, chunk) jobs (what `ExecResponse::queue_micros`
+///   measures);
+/// * `exec_us` — device-start→done: kernel/literal time only.
+fn stage_breakdown(
+    parse_us: u64,
+    output: &EnsembleOutput,
+    stats: Option<&BatchStats>,
+) -> StageMicros {
+    let mut exec_us = 0;
+    let mut submit_us = 0;
+    for m in &output.per_model {
+        exec_us += m.exec_micros;
+        submit_us += m.queue_micros;
+    }
+    StageMicros {
+        parse_us,
+        queue_us: stats.map(|st| st.wait_micros).unwrap_or(0),
+        submit_us,
+        exec_us,
+    }
+}
+
+/// The per-backend histogram/counter names, static so the hot path never
+/// formats a metric key. Unknown labels (synthetic outputs) record nothing.
+fn backend_metric_names(backend: &str) -> Option<(&'static str, &'static str)> {
+    match backend {
+        "xla" => Some(("exec_xla_us", "backend_xla_requests_total")),
+        "cpu" => Some(("exec_cpu_us", "backend_cpu_requests_total")),
+        "quant" => Some(("exec_quant_us", "backend_quant_requests_total")),
+        _ => None,
+    }
+}
+
+/// Fold one forward's device timings into the `stage_*` histograms (and
+/// the per-backend `exec_<backend>_us` series) and return the per-request
+/// breakdown for the protocols' diagnostics blocks.
 fn observe_output_stages(
     s: &ServerState,
     parse_us: u64,
     output: &EnsembleOutput,
     stats: Option<&BatchStats>,
 ) -> StageMicros {
-    let mut exec_us = 0;
-    let mut queue_us = stats.map(|st| st.wait_micros).unwrap_or(0);
+    let stages = stage_breakdown(parse_us, output, stats);
     for m in &output.per_model {
         s.metrics.observe_micros("device_exec_us", m.exec_micros);
-        exec_us += m.exec_micros;
-        queue_us += m.queue_micros;
+        if let Some((hist, counter)) = backend_metric_names(m.backend) {
+            s.metrics.observe_micros(hist, m.exec_micros);
+            s.metrics.inc(counter);
+        }
     }
-    s.metrics.observe_stage("stage_queue_us", queue_us);
-    s.metrics.observe_stage("stage_exec_us", exec_us);
-    StageMicros {
-        parse_us,
-        queue_us,
-        exec_us,
-    }
+    s.metrics.observe_stage("stage_queue_us", stages.queue_us);
+    s.metrics.observe_stage("stage_submit_us", stages.submit_us);
+    s.metrics.observe_stage("stage_exec_us", stages.exec_us);
+    stages
 }
 
 #[cfg(test)]
@@ -556,5 +595,70 @@ mod tests {
     // `execute` needs a live device; it is exercised end-to-end by both
     // protocol surfaces in rust/tests/server_integration.rs and
     // rust/tests/v2_integration.rs. The IR lowering is covered device-free
-    // by wire.rs unit tests and the v2 differential tests.
+    // by wire.rs unit tests and the v2 differential tests. The stage
+    // accounting is pure and pinned here.
+    use super::*;
+
+    fn out(models: Vec<ModelOutput>, batch: usize) -> EnsembleOutput {
+        EnsembleOutput {
+            batch,
+            per_model: models,
+        }
+    }
+
+    fn model(exec_micros: u64, queue_micros: u64, backend: &'static str) -> ModelOutput {
+        ModelOutput {
+            model: "m".into(),
+            version: 1,
+            logits: Vec::new(),
+            preds: Vec::new(),
+            buckets: Vec::new(),
+            exec_micros,
+            queue_micros,
+            backend,
+        }
+    }
+
+    #[test]
+    fn stage_split_separates_submit_from_exec() {
+        // Two models: kernel time sums into exec_us, channel handoff into
+        // submit_us — neither leaks into the other or into queue_us.
+        let o = out(vec![model(100, 7, "cpu"), model(40, 3, "cpu")], 2);
+        let st = stage_breakdown(11, &o, None);
+        assert_eq!(st.parse_us, 11);
+        assert_eq!(st.queue_us, 0, "no scheduler stats → zero queue wait");
+        assert_eq!(st.submit_us, 10, "channel handoff only");
+        assert_eq!(st.exec_us, 140, "kernel time only");
+    }
+
+    #[test]
+    fn stage_split_takes_queue_wait_from_scheduler_stats() {
+        let o = out(vec![model(50, 5, "xla")], 1);
+        let stats = BatchStats {
+            coalesced_rows: 1,
+            coalesced_requests: 1,
+            wait_micros: 77,
+        };
+        let st = stage_breakdown(0, &o, Some(&stats));
+        assert_eq!(st.queue_us, 77, "scheduler wait is the queue stage");
+        assert_eq!(st.submit_us, 5);
+        assert_eq!(st.exec_us, 50);
+    }
+
+    #[test]
+    fn backend_metric_names_cover_known_backends() {
+        assert_eq!(
+            backend_metric_names("cpu"),
+            Some(("exec_cpu_us", "backend_cpu_requests_total"))
+        );
+        assert_eq!(
+            backend_metric_names("quant"),
+            Some(("exec_quant_us", "backend_quant_requests_total"))
+        );
+        assert_eq!(
+            backend_metric_names("xla"),
+            Some(("exec_xla_us", "backend_xla_requests_total"))
+        );
+        assert_eq!(backend_metric_names(""), None);
+    }
 }

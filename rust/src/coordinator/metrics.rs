@@ -8,12 +8,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// The per-stage data-plane histograms recorded by the predict handlers:
-/// request parse (+normalize), queue wait (scheduler + device), device
-/// execution, and response rendering. This list is the wire contract for
-/// `flexserve bench`'s `server_stages` block in `BENCH_serve.json`.
-pub const STAGE_METRICS: [&str; 4] = [
+/// request parse (+normalize), scheduler-queue wait, executor-channel
+/// submit handoff, device execution, and response rendering. Submit and
+/// exec used to be conflated in `stage_exec_us`; they are now separate so
+/// a slow device and a backed-up executor channel are distinguishable.
+/// This list is the wire contract for `flexserve bench`'s `server_stages`
+/// block in `BENCH_serve.json`.
+pub const STAGE_METRICS: [&str; 5] = [
     "stage_parse_us",
     "stage_queue_us",
+    "stage_submit_us",
     "stage_exec_us",
     "stage_render_us",
 ];

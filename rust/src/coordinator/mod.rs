@@ -122,6 +122,10 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
                 verify_sha: false,
                 verify_on_load: config.verify_sha,
                 warmup: config.warmup,
+                backend: config.backend.clone(),
+                backend_overrides: config.backend_overrides.clone(),
+                cpu_workers: config.cpu_workers,
+                arena_cap_mb: config.arena_cap_mb,
             },
             config.device_workers,
         )

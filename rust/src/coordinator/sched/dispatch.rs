@@ -239,6 +239,7 @@ mod tests {
                 buckets: vec![],
                 exec_micros: 0,
                 queue_micros: 0,
+                backend: "",
             }],
         })
     }

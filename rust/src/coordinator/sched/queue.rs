@@ -284,6 +284,7 @@ pub fn slice_output(output: &EnsembleOutput, offset: usize, len: usize) -> Ensem
                 buckets: m.buckets.clone(),
                 exec_micros: m.exec_micros,
                 queue_micros: m.queue_micros,
+                backend: m.backend,
             }
         })
         .collect();
@@ -348,6 +349,7 @@ mod tests {
                 buckets: vec![4],
                 exec_micros: 5,
                 queue_micros: 0,
+                backend: "cpu",
             }],
         };
         let s = slice_output(&out, 1, 2);
@@ -374,6 +376,7 @@ mod tests {
                     buckets: vec![],
                     exec_micros: 0,
                     queue_micros: 0,
+                    backend: "",
                 }],
             };
             let mut offset = 0;

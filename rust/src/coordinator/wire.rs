@@ -221,6 +221,19 @@ impl ApiError {
         )
     }
 
+    /// The requested execution backend cannot serve this model — an
+    /// unknown backend name, or a `cpu`/`quant` selection for a model
+    /// whose manifest ships no linear/MLP layer grammar. 409 like the
+    /// other model-state conflicts: the request is well-formed, the
+    /// server's configuration for that model is what refuses it.
+    pub fn backend_unsupported(model: &str, backend: &str, detail: impl fmt::Display) -> ApiError {
+        Self::new(
+            409,
+            "model.backend_unsupported",
+            format!("model '{model}': backend '{backend}' unsupported: {detail}"),
+        )
+    }
+
     /// Shutdown shed: the server is draining and either stopped accepting
     /// new work or hit `--drain-timeout-ms` with this request still queued.
     pub fn shutting_down(detail: impl Into<String>) -> ApiError {
@@ -292,6 +305,9 @@ impl ApiError {
         }
         if let Some(crash) = e.downcast_ref::<crate::runtime::WorkerCrashed>() {
             return ApiError::worker_crashed(&crash.detail);
+        }
+        if let Some(u) = e.downcast_ref::<crate::runtime::BackendUnsupported>() {
+            return ApiError::backend_unsupported(&u.model, &u.backend, &u.detail);
         }
         ApiError::internal(format!("{e:#}"))
     }
@@ -741,9 +757,14 @@ fn decode_pgm_frames(manifest: &Manifest, frames: &Value) -> Result<Vec<f32>, Ap
 pub struct StageMicros {
     /// Request parse + input normalization.
     pub parse_us: u64,
-    /// Batcher queue wait plus summed device queue wait across models.
+    /// Scheduler-queue wait (coalescing + admission); zero without a
+    /// scheduler.
     pub queue_us: u64,
-    /// Summed device execution across models and chunks.
+    /// Submit→device-start: executor-channel handoff summed across
+    /// (model, chunk) jobs.
+    pub submit_us: u64,
+    /// Device-start→done: summed device execution across models and
+    /// chunks.
     pub exec_us: u64,
 }
 
@@ -752,6 +773,7 @@ impl StageMicros {
         json::obj([
             ("parse_us", Value::from(self.parse_us)),
             ("queue_us", Value::from(self.queue_us)),
+            ("submit_us", Value::from(self.submit_us)),
             ("exec_us", Value::from(self.exec_us)),
         ])
     }
@@ -800,21 +822,28 @@ pub fn render_predict(
             .per_model
             .iter()
             .map(|m| {
-                (
-                    m.model.clone(),
-                    json::obj([
-                        // The registry version that actually served this
-                        // model's rows (canary splits surface here).
-                        ("version", Value::from(m.version as u64)),
-                        ("probs", json::f32_array_raw(m.preds.iter().map(|(_, p)| *p))),
-                        (
-                            "buckets",
-                            Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
-                        ),
-                        ("exec_us", Value::from(m.exec_micros)),
-                        ("queue_us", Value::from(m.queue_micros)),
-                    ]),
-                )
+                let mut fields = vec![
+                    // The registry version that actually served this
+                    // model's rows (canary splits surface here).
+                    ("version".to_string(), Value::from(m.version as u64)),
+                    (
+                        "probs".to_string(),
+                        json::f32_array_raw(m.preds.iter().map(|(_, p)| *p)),
+                    ),
+                    (
+                        "buckets".to_string(),
+                        Value::Arr(m.buckets.iter().map(|&b| Value::from(b)).collect()),
+                    ),
+                    ("exec_us".to_string(), Value::from(m.exec_micros)),
+                    ("queue_us".to_string(), Value::from(m.queue_micros)),
+                ];
+                // Which execution backend served the rows — absent for
+                // outputs synthesized outside the executor (gateway
+                // merges), so legacy payloads stay byte-identical.
+                if !m.backend.is_empty() {
+                    fields.push(("backend".to_string(), Value::from(m.backend)));
+                }
+                (m.model.clone(), Value::Obj(fields))
             })
             .collect();
         let mut detail = vec![

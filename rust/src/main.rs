@@ -60,6 +60,8 @@ fn run(args: &[String]) -> Result<()> {
         "predict" => cmd_predict(rest),
         "infer" => cmd_infer(rest),
         "bench" => cmd_bench(rest),
+        "bench-compare" => cmd_bench_compare(rest),
+        "backend-smoke" => cmd_backend_smoke(rest),
         "load" => cmd_lifecycle(rest, "load"),
         "unload" => cmd_lifecycle(rest, "unload"),
         "ensemble" => cmd_lifecycle(rest, "ensemble"),
@@ -96,6 +98,12 @@ fn print_usage() {
            infer [MODEL]    send a synthetic batch via the /v2 Open Inference\n\
                             Protocol (default model: _ensemble)\n\
            bench            closed-loop load test a running server (BENCH_serve.json)\n\
+           bench-compare B C  diff two BENCH_serve.json files per (protocol,\n\
+                            backend, connections) key; non-zero exit on >\n\
+                            tolerance p99/throughput regression\n\
+           backend-smoke    device-free serve cycle on the pure-Rust CPU and\n\
+                            quantized backends: synthetic artifacts, v1/v2/mux\n\
+                            wires, per-backend metrics, load/unload\n\
            load MODEL       POST /v1/models/MODEL/load on a running server\n\
                             (--version N loads one registry version)\n\
            unload MODEL     POST /v1/models/MODEL/unload on a running server\n\
@@ -142,6 +150,9 @@ fn print_usage() {
            --idle-timeout-ms N (0 = never reap idle keep-alives)\n\
            --mux-max-inflight N --mux-chunk-bytes N\n\
            --events-buffer N --events-metrics-ms N\n\
+           --backend xla|cpu|quant|auto (execution backend for every model)\n\
+           --backend-override model=kind[,...] (per-model backend pins)\n\
+           --cpu-workers N (0 = auto) --arena-cap-mb N (0 = 64MB default)\n\
          SERVE-BASELINE FLAGS:\n\
            --fixed-batch N (default 1)\n\
          PREDICT FLAGS:\n\
@@ -155,10 +166,15 @@ fn print_usage() {
            --seed N\n\
            --record-versions (served version distribution → BENCH_serve.json)\n\
            --concurrency-sweep 1,2,4,8 (one report record per step)\n\
+           --backend LABEL (stamp the target's backend into the report)\n\
+           --backend-stack cpu|quant (boot an in-process serve stack on that\n\
+           backend over synthetic artifacts and bench it; no device needed)\n\
            --out BENCH_serve.json --echo (in-process echo target; no artifacts)\n\
            --echo-queue-cap N --echo-delay-us N (echo admission gate: sheds\n\
            with typed 429s + Retry-After and exposes /v1/metrics, for\n\
            overload smoke tests without artifacts)\n\
+         BENCH-COMPARE FLAGS:\n\
+           --tolerance-pct F (default 15; env BENCH_TOLERANCE overrides)\n\
          GATEWAY FLAGS:\n\
            --backends name=host:port,... (required; bare host:port allowed)\n\
            --vnodes N --probe-interval-ms N --probe-timeout-ms N\n\
@@ -457,6 +473,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let mut echo_queue_cap = 0usize;
     let mut echo_delay_us = 0u64;
     let mut sweep: Option<Vec<usize>> = None;
+    let mut backend_stack: Option<String> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut take = |flag: &str| -> Result<String> {
@@ -474,6 +491,20 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "--protocol" => cfg.protocol = load::Protocol::parse(&take("--protocol")?)?,
             "--path" => cfg.path = Some(take("--path")?),
             "--record-versions" => cfg.record_versions = true,
+            "--backend" => cfg.backend = take("--backend")?,
+            "--backend-stack" => {
+                let kind = take("--backend-stack")?;
+                match flexserve::runtime::BackendKind::parse(&kind) {
+                    Some(k) if k != flexserve::runtime::BackendKind::Xla => {
+                        backend_stack = Some(k.as_str().to_string());
+                    }
+                    Some(_) => bail!(
+                        "--backend-stack drives the device-free backends (cpu|quant); \
+                         bench XLA by pointing --addr at a `flexserve serve` with artifacts"
+                    ),
+                    None => bail!("--backend-stack expects cpu|quant (got '{kind}')"),
+                }
+            }
             "--seed" => cfg.seed = take("--seed")?.parse()?,
             "--out" => out = take("--out")?,
             "--echo" => echo = true,
@@ -509,6 +540,26 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             .unwrap_or(cfg.connections);
         let handle = spawn_echo_target(max_conns.max(2), echo_queue_cap, echo_delay_us)?;
         addr = handle.addr.to_string();
+        Some(handle)
+    } else {
+        None
+    };
+    // Backend-stack mode: boot the REAL serve stack in-process on the
+    // named pure-Rust backend over synthetic artifacts (or trained ones
+    // when `make artifacts` ran), so per-backend baselines bench with no
+    // device and no echo shortcut.
+    let stack_server = if let Some(kind) = &backend_stack {
+        if echo {
+            bail!("--backend-stack and --echo are mutually exclusive");
+        }
+        let mut sc = ServeConfig::default();
+        sc.addr = "127.0.0.1:0".into();
+        sc.artifacts = flexserve::runtime::synth::ensure_artifacts();
+        sc.backend = Some(kind.clone());
+        let (handle, _state) = serve(&sc).context("booting --backend-stack serve stack")?;
+        eprintln!("bench: in-process {kind} stack on {}", handle.addr);
+        addr = handle.addr.to_string();
+        cfg.backend = kind.clone();
         Some(handle)
     } else {
         None
@@ -572,6 +623,166 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
         h.stop();
     }
+    if let Some(h) = stack_server {
+        h.stop();
+    }
+    Ok(())
+}
+
+/// `flexserve bench-compare BASELINE CURRENT` — diff two bench reports
+/// per (protocol, backend, connections) key and exit non-zero when p99
+/// latency or successful throughput regressed past the tolerance
+/// (`--tolerance-pct`, default 15; the `BENCH_TOLERANCE` env var
+/// overrides — CI loosens the echo-transport gate there without patching
+/// workflows).
+fn cmd_bench_compare(args: &[String]) -> Result<()> {
+    use flexserve::benchkit::compare;
+
+    let mut tolerance_pct = 15.0f64;
+    if let Ok(t) = std::env::var("BENCH_TOLERANCE") {
+        tolerance_pct = t
+            .parse()
+            .with_context(|| format!("bad BENCH_TOLERANCE '{t}'"))?;
+    }
+    let mut files: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tolerance-pct" => {
+                tolerance_pct = it
+                    .next()
+                    .context("--tolerance-pct needs a value")?
+                    .parse()?;
+            }
+            other if other.starts_with("--") => bail!("unknown bench-compare flag '{other}'"),
+            other => files.push(other.to_string()),
+        }
+    }
+    let [baseline_path, current_path] = files.as_slice() else {
+        bail!("usage: flexserve bench-compare BASELINE.json CURRENT.json [--tolerance-pct F]");
+    };
+    let read = |path: &str| -> Result<Value> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let baseline = read(baseline_path)?;
+    let current = read(current_path)?;
+    let deltas = compare::compare(&baseline, &current, tolerance_pct)?;
+    print!("{}", compare::summarize(&deltas, tolerance_pct));
+    if compare::has_regression(&deltas) {
+        bail!("bench regression past {tolerance_pct:.0}% (baseline {baseline_path})");
+    }
+    println!("bench-compare OK ({} checks)", deltas.len());
+    Ok(())
+}
+
+/// `flexserve backend-smoke` — device-free proof that the pure-Rust
+/// execution backends serve the FULL stack: boot `serve()` twice (CPU,
+/// then quantized) over synthetic artifacts, drive the v1, v2 and mux
+/// wires, assert the response detail names the backend, exercise a
+/// load/unload cycle, and grep-friendly-print the per-backend metrics.
+fn cmd_backend_smoke(args: &[String]) -> Result<()> {
+    if !args.is_empty() {
+        bail!("backend-smoke takes no flags");
+    }
+    let dir = flexserve::runtime::synth::ensure_artifacts();
+    println!("backend-smoke: artifacts at {}", dir.display());
+
+    for kind in ["cpu", "quant"] {
+        let mut sc = ServeConfig::default();
+        sc.addr = "127.0.0.1:0".into();
+        sc.artifacts = dir.clone();
+        sc.backend = Some(kind.to_string());
+        let (handle, state) = serve(&sc).with_context(|| format!("booting {kind} stack"))?;
+        println!("{kind}: serving {} models on {}", state.ensemble.models().len(), handle.addr);
+        let mut client = Client::connect(handle.addr)?;
+
+        // v1 ensemble predict with detail: every member must report the
+        // pinned backend.
+        let mut rng = Prng::new(11);
+        let (data, _) = workload::make_batch(&mut rng, 3);
+        let body = Value::Obj(vec![
+            ("data".to_string(), json::f32_array_raw(data.iter().copied())),
+            ("batch".to_string(), Value::from(3usize)),
+            ("detail".to_string(), Value::Bool(true)),
+        ]);
+        let resp = client.post_json("/v1/predict", &body)?;
+        anyhow::ensure!(resp.status == 200, "v1 predict on {kind}: {}", resp.status);
+        let doc = resp.json_body()?;
+        let models = doc
+            .path(&["detail", "models"])
+            .and_then(Value::as_obj)
+            .context("v1 detail carries per-model blocks")?;
+        anyhow::ensure!(!models.is_empty(), "no per-model detail");
+        for (name, m) in models {
+            let served = m.get("backend").and_then(Value::as_str).unwrap_or("");
+            anyhow::ensure!(
+                served == kind,
+                "{name} served by '{served}', expected '{kind}'"
+            );
+        }
+        println!("{kind}: v1 predict OK ({} models, backend verified)", models.len());
+
+        // v2 (OIP) wire over the same slots.
+        let shape = [2usize, workload::IMG, workload::IMG, 1];
+        let (data, _) = workload::make_batch(&mut rng, 2);
+        let v2 = client.v2_infer("_ensemble", &shape, &data)?;
+        anyhow::ensure!(
+            v2.get("outputs").is_some(),
+            "v2 infer on {kind} returned no outputs"
+        );
+        println!("{kind}: v2 infer OK");
+
+        // Framed mux wire: one correlated call, same payload shape as v1.
+        let mut mux = flexserve::http::MuxClient::connect(handle.addr)?;
+        let (data, _) = workload::make_batch(&mut rng, 1);
+        let payload = Value::Obj(vec![
+            ("data".to_string(), json::f32_array_raw(data.iter().copied())),
+            ("batch".to_string(), Value::from(1usize)),
+            ("detail".to_string(), Value::Bool(true)),
+        ]);
+        match mux.call(1, &payload)? {
+            flexserve::http::MuxMsg::Reply { value, .. } => {
+                let served = value
+                    .path(&["detail", "models"])
+                    .and_then(Value::as_obj)
+                    .and_then(|ms| ms.first())
+                    .and_then(|(_, m)| m.get("backend"))
+                    .and_then(Value::as_str)
+                    .unwrap_or("");
+                anyhow::ensure!(
+                    served == kind,
+                    "mux reply served by '{served}', expected '{kind}'"
+                );
+            }
+            other => bail!("mux call on {kind} returned {other:?}"),
+        }
+        println!("{kind}: mux call OK");
+
+        // Load/unload cycle through the control plane.
+        let model = state.ensemble.models()[0].clone();
+        client.unload_model(&model)?;
+        client.load_model(&model)?;
+        println!("{kind}: load/unload cycle OK");
+
+        // Per-backend metrics landed in the exposition.
+        let resp = client.get("/v1/metrics?format=prometheus")?;
+        let text = String::from_utf8_lossy(&resp.body).to_string();
+        for needle in [
+            format!("flexserve_exec_{kind}_us"),
+            format!("flexserve_backend_{kind}_requests_total"),
+            "flexserve_stage_submit_us".to_string(),
+        ] {
+            anyhow::ensure!(
+                text.contains(&needle),
+                "{kind} exposition is missing {needle}"
+            );
+        }
+        print!("{text}");
+        handle.stop();
+    }
+    println!("backend-smoke OK");
     Ok(())
 }
 

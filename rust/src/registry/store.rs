@@ -22,7 +22,7 @@
 //! version is just another pool slot ([`slot_name`]).
 
 use crate::json;
-use crate::runtime::{slot_name, ArtifactRef, Manifest, ModelEntry};
+use crate::runtime::{slot_name, ArtifactRef, Manifest, ModelEntry, WeightsRef};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -146,6 +146,9 @@ impl Store {
                         sha256: "0".into(),
                         bytes: 0,
                     }],
+                    backend: None,
+                    layers: Vec::new(),
+                    weights: None,
                 });
                 found.push(v);
             }
@@ -217,6 +220,14 @@ fn load_version_entry(
                 bytes: a.bytes,
             })
             .collect(),
+        backend: src.backend.clone(),
+        layers: src.layers.clone(),
+        weights: src.weights.as_ref().map(|w| WeightsRef {
+            // Same re-anchoring as the bucket artifacts.
+            file: format!("{model}/{version}/{}", w.file),
+            sha256: w.sha256.clone(),
+            bytes: w.bytes,
+        }),
     })
 }
 

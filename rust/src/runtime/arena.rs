@@ -1,0 +1,216 @@
+//! Size-bucketed buffer arena for the device thread.
+//!
+//! Every flush used to allocate: a padded input literal, the device output
+//! vector, and the truncated logits vector handed to the coordinator. The
+//! arena replaces all of that with recycled storage so a steady-state flush
+//! performs **zero heap allocations** (pinned by `tests/alloc_counting.rs`).
+//!
+//! Two kinds of storage live here:
+//!
+//! - **Shared output buffers** (`Arc<[f32]>`): handed out as [`TensorView`]s
+//!   that travel through the scheduler, the ensemble, and response rendering.
+//!   The arena keeps one clone of each `Arc` on a shelf keyed by length;
+//!   a buffer is reusable exactly when its strong count drops back to 1,
+//!   i.e. when the response that borrowed it has been rendered and dropped.
+//!   No free-list bookkeeping, no cross-thread signalling — the `Arc`
+//!   refcount *is* the occupancy bit.
+//! - **Scratch vectors** (`Vec<f32>`): private intermediates (padded feeds,
+//!   hidden-layer activations) checked out with [`BufferArena::scratch`] and
+//!   returned with [`BufferArena::restore`].
+//!
+//! The arena is owned by a single executor device thread and is deliberately
+//! a plain `&mut self` struct: no atomics, no locks beyond the refcounts
+//! `Arc` already carries.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::tensor::TensorView;
+
+/// Default retention cap when the config leaves `arena_cap_mb` at 0.
+pub const DEFAULT_CAP_MB: usize = 64;
+
+#[derive(Debug)]
+pub struct BufferArena {
+    /// Shared output buffers keyed by length in floats. Entries whose
+    /// strong count is 1 are free; others are still referenced by in-flight
+    /// responses.
+    shelves: HashMap<usize, Vec<Arc<[f32]>>>,
+    /// Returned scratch vectors, reused by any request whose length fits
+    /// the retained capacity.
+    scratch: Vec<Vec<f32>>,
+    cap_bytes: usize,
+    /// Bytes currently retained across shelves + scratch free list.
+    retained_bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl BufferArena {
+    /// `cap_mb = 0` selects [`DEFAULT_CAP_MB`].
+    pub fn new(cap_mb: usize) -> BufferArena {
+        let cap = if cap_mb == 0 { DEFAULT_CAP_MB } else { cap_mb };
+        BufferArena {
+            shelves: HashMap::new(),
+            scratch: Vec::new(),
+            cap_bytes: cap * 1024 * 1024,
+            retained_bytes: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Check out a shared buffer of exactly `len` floats, let `fill` write
+    /// it, and return it as a [`TensorView`]. The arena retains a clone so
+    /// the storage is recycled once every outside reference is dropped.
+    pub fn with_output<F>(&mut self, len: usize, fill: F) -> TensorView
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        let shelf = self.shelves.entry(len).or_default();
+        for arc in shelf.iter_mut() {
+            if Arc::strong_count(arc) == 1 {
+                self.hits += 1;
+                // Sole owner → get_mut cannot fail.
+                fill(Arc::get_mut(arc).expect("strong_count==1"));
+                return TensorView::from(arc.clone());
+            }
+        }
+        self.misses += 1;
+        let mut arc: Arc<[f32]> = vec![0.0f32; len].into();
+        fill(Arc::get_mut(&mut arc).expect("fresh arc"));
+        let view = TensorView::from(arc.clone());
+        let bytes = len * std::mem::size_of::<f32>();
+        if self.retained_bytes + bytes <= self.cap_bytes {
+            self.retained_bytes += bytes;
+            shelf.push(arc);
+        }
+        view
+    }
+
+    /// Check out a zero-filled scratch vector with `len` elements.
+    /// Return it with [`restore`] so the
+    /// capacity is reused; after warm-up, a `scratch`/`restore` pair whose
+    /// length was seen before allocates nothing.
+    ///
+    /// [`restore`]: BufferArena::restore
+    pub fn scratch(&mut self, len: usize) -> Vec<f32> {
+        let pos = self.scratch.iter().position(|v| v.capacity() >= len);
+        let mut v = match pos {
+            Some(i) => {
+                self.hits += 1;
+                let v = self.scratch.swap_remove(i);
+                self.retained_bytes -=
+                    v.capacity() * std::mem::size_of::<f32>();
+                v
+            }
+            None => {
+                self.misses += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a scratch vector to the free list (subject to the byte cap).
+    pub fn restore(&mut self, v: Vec<f32>) {
+        let bytes = v.capacity() * std::mem::size_of::<f32>();
+        if bytes > 0 && self.retained_bytes + bytes <= self.cap_bytes {
+            self.retained_bytes += bytes;
+            self.scratch.push(v);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn retained_bytes(&self) -> usize {
+        self.retained_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_recycles_when_refs_drop() {
+        let mut a = BufferArena::new(1);
+        let v1 = a.with_output(8, |b| b.fill(1.0));
+        assert_eq!(a.misses(), 1);
+        // Still referenced → second checkout must allocate a new buffer.
+        let v2 = a.with_output(8, |b| b.fill(2.0));
+        assert_eq!(a.misses(), 2);
+        assert_eq!(&v1[..2], &[1.0, 1.0]);
+        assert_eq!(&v2[..2], &[2.0, 2.0]);
+        drop(v1);
+        drop(v2);
+        // Both released → next checkout is a hit.
+        let v3 = a.with_output(8, |b| b.fill(3.0));
+        assert_eq!(a.hits(), 1);
+        assert_eq!(&v3[..2], &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn output_does_not_clobber_live_views() {
+        let mut a = BufferArena::new(1);
+        let v1 = a.with_output(4, |b| b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        let v2 = a.with_output(4, |b| b.fill(9.0));
+        assert_eq!(v1.as_slice(), &[1.0, 2.0, 3.0, 4.0], "live view untouched");
+        drop(v2);
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        let mut a = BufferArena::new(1);
+        let s = a.scratch(100);
+        assert_eq!(s.len(), 100);
+        let cap = s.capacity();
+        a.restore(s);
+        let s2 = a.scratch(64);
+        assert_eq!(s2.len(), 64);
+        assert_eq!(s2.capacity(), cap, "smaller request reuses the vector");
+        assert_eq!(a.hits(), 1);
+    }
+
+    #[test]
+    fn scratch_contents_are_zeroed() {
+        let mut a = BufferArena::new(1);
+        let mut s = a.scratch(4);
+        s.fill(7.0);
+        a.restore(s);
+        let s2 = a.scratch(4);
+        assert_eq!(s2, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn cap_bounds_retention() {
+        // 1 MB cap = 262144 floats; a 300k-float scratch is never retained.
+        let mut a = BufferArena::new(1);
+        let s = a.scratch(300_000);
+        a.restore(s);
+        assert_eq!(a.retained_bytes(), 0);
+        let _ = a.scratch(300_000);
+        assert_eq!(a.misses(), 2, "oversized scratch always allocates");
+    }
+
+    #[test]
+    fn distinct_lengths_get_distinct_shelves() {
+        let mut a = BufferArena::new(1);
+        let v1 = a.with_output(4, |b| b.fill(1.0));
+        drop(v1);
+        let v2 = a.with_output(8, |b| b.fill(2.0));
+        assert_eq!(a.misses(), 2);
+        drop(v2);
+        let v3 = a.with_output(4, |b| b.fill(3.0));
+        assert_eq!(a.hits(), 1);
+        assert_eq!(v3.len(), 4);
+    }
+}

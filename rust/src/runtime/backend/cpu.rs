@@ -1,0 +1,471 @@
+//! Pure-Rust SIMD CPU backend: blocked f32 matmul with intra-op
+//! parallelism over a tiny rayon-free worker set.
+//!
+//! The kernel accumulates 8 output columns at a time into a `[f32; 8]`
+//! register block — the exact shape LLVM auto-vectorizes to one AVX/NEON
+//! FMA per step — walking the row-major `[in][out]` weight matrix
+//! sequentially (unit-stride loads, no gather). Large layers split across
+//! [`CpuWorkers`]: persistent threads woken through a Mutex+Condvar epoch
+//! barrier, handed a raw pointer to the caller's stack closure — a scoped
+//! fork/join that performs **zero allocations per dispatch**, which is
+//! what lets the allocation-counting harness pin the whole flush at zero.
+
+use super::{Act, Backend, BackendKind, Layer, ModelGraph};
+use crate::runtime::arena::BufferArena;
+use crate::runtime::tensor::TensorView;
+use anyhow::{ensure, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Below this many multiply-accumulates a layer runs inline — waking the
+/// worker set costs more than the matmul.
+const PAR_MIN_MACS: usize = 32_768;
+
+/// Worker-count heuristic when the config leaves `cpu_workers` at 0:
+/// assume 2-way SMT (physical ≈ logical/2), clamped to [1, 8] so several
+/// device workers can coexist without oversubscribing the box.
+pub fn auto_workers() -> usize {
+    let logical = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (logical / 2).clamp(1, 8)
+}
+
+/// The closure pointer handed to workers. The barrier protocol guarantees
+/// the pointee outlives every dereference: `scope` does not return until
+/// all workers have finished the epoch.
+#[derive(Clone, Copy)]
+struct Task(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for Task {}
+
+struct Ctrl {
+    epoch: u64,
+    remaining: usize,
+    task: Option<Task>,
+    poisoned: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// A fixed set of `n` compute lanes: `n - 1` persistent threads plus the
+/// calling thread. [`scope`](CpuWorkers::scope) runs `f(part)` once for
+/// every `part in 0..n` and returns when all parts are done.
+pub struct CpuWorkers {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    n: usize,
+}
+
+impl CpuWorkers {
+    /// `n = 0` selects [`auto_workers`].
+    pub fn new(n: usize) -> CpuWorkers {
+        let n = if n == 0 { auto_workers() } else { n };
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                epoch: 0,
+                remaining: 0,
+                task: None,
+                poisoned: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for i in 1..n {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("flexserve-cpu-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawning cpu worker"),
+            );
+        }
+        CpuWorkers {
+            shared,
+            handles,
+            n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Fork/join: run `f(part)` for each `part in 0..len()` — part 0 on
+    /// the calling thread — and return once every part completed.
+    /// Panics (poisoning the pool) if any worker's part panicked.
+    pub fn scope(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.n == 1 {
+            f(0);
+            return;
+        }
+        // Erase the stack lifetime; the epoch barrier below re-establishes
+        // it (no worker touches the pointer after `remaining` hits 0).
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        {
+            let mut c = self.shared.ctrl.lock().unwrap();
+            c.task = Some(Task(task));
+            c.epoch += 1;
+            c.remaining = self.n - 1;
+            self.shared.work.notify_all();
+        }
+        f(0);
+        let mut c = self.shared.ctrl.lock().unwrap();
+        while c.remaining > 0 {
+            c = self.shared.done.wait(c).unwrap();
+        }
+        c.task = None;
+        if c.poisoned {
+            c.poisoned = false;
+            drop(c);
+            panic!("cpu worker panicked during a parallel layer");
+        }
+    }
+}
+
+impl Drop for CpuWorkers {
+    fn drop(&mut self) {
+        {
+            let mut c = self.shared.ctrl.lock().unwrap();
+            c.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, part: usize) {
+    let mut seen = 0u64;
+    let mut c = shared.ctrl.lock().unwrap();
+    loop {
+        while !c.shutdown && (c.epoch == seen || c.task.is_none()) {
+            c = shared.work.wait(c).unwrap();
+        }
+        if c.shutdown {
+            return;
+        }
+        seen = c.epoch;
+        let task = c.task.expect("task set with epoch");
+        drop(c);
+        // A panicking part must still reach the decrement or scope() would
+        // hang; the poison flag re-raises it on the calling thread.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (*task.0)(part)
+        }))
+        .is_ok();
+        c = shared.ctrl.lock().unwrap();
+        if !ok {
+            c.poisoned = true;
+        }
+        c.remaining -= 1;
+        if c.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Raw output cursor shared across worker parts. Each (row, col) cell is
+/// written by exactly one part (disjoint row or column ranges), so the
+/// aliasing is write-once and race-free.
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Compute `y[r][j] = act(x[r]·W[:,j] + b[j])` for `r in r0..r1`,
+/// `j in j0..j1`. Weights are row-major `[in_dim][out_dim]`, so the inner
+/// loop streams 8 adjacent columns per step into a `[f32; 8]` accumulator
+/// block (auto-vectorized), with a scalar tail for `out_dim % 8`.
+#[allow(clippy::too_many_arguments)]
+fn dense_block(
+    x: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    act: Act,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    y: &OutPtr,
+) {
+    let main_end = j0 + (j1 - j0) / 8 * 8;
+    for r in r0..r1 {
+        let xr = &x[r * in_dim..(r + 1) * in_dim];
+        let mut jc = j0;
+        while jc < main_end {
+            let mut acc = [0f32; 8];
+            for (k, &xv) in xr.iter().enumerate() {
+                let wr = &w[k * out_dim + jc..k * out_dim + jc + 8];
+                for t in 0..8 {
+                    acc[t] += xv * wr[t];
+                }
+            }
+            for t in 0..8 {
+                let v = act.apply(acc[t] + b[jc + t]);
+                unsafe { *y.0.add(r * out_dim + jc + t) = v };
+            }
+            jc += 8;
+        }
+        for j in main_end..j1 {
+            let mut acc = 0f32;
+            for (k, &xv) in xr.iter().enumerate() {
+                acc += xv * w[k * out_dim + j];
+            }
+            let v = act.apply(acc + b[j]);
+            unsafe { *y.0.add(r * out_dim + j) = v };
+        }
+    }
+}
+
+/// One dense layer over `rows` rows of `x`, into `y` (`rows × out_dim`).
+/// Splits across the worker set by rows (or by columns when the batch is
+/// smaller than the lane count); small layers run inline.
+pub(crate) fn forward_layer(
+    g: &ModelGraph,
+    l: &Layer,
+    x: &[f32],
+    rows: usize,
+    y: &mut [f32],
+    workers: &CpuWorkers,
+) {
+    debug_assert!(x.len() >= rows * l.in_dim);
+    debug_assert_eq!(y.len(), rows * l.out_dim);
+    let w = &g.weights[l.w_off..l.w_off + l.in_dim * l.out_dim];
+    let b = &g.weights[l.b_off..l.b_off + l.out_dim];
+    let yp = OutPtr(y.as_mut_ptr());
+    let n = workers.len();
+    let macs = rows * l.in_dim * l.out_dim;
+    if n == 1 || macs < PAR_MIN_MACS {
+        dense_block(x, l.in_dim, l.out_dim, w, b, l.act, 0, rows, 0, l.out_dim, &yp);
+    } else if rows >= n {
+        workers.scope(&|part| {
+            let r0 = rows * part / n;
+            let r1 = rows * (part + 1) / n;
+            dense_block(x, l.in_dim, l.out_dim, w, b, l.act, r0, r1, 0, l.out_dim, &yp);
+        });
+    } else {
+        workers.scope(&|part| {
+            let j0 = l.out_dim * part / n;
+            let j1 = l.out_dim * (part + 1) / n;
+            dense_block(x, l.in_dim, l.out_dim, w, b, l.act, 0, rows, j0, j1, &yp);
+        });
+    }
+}
+
+/// One (model × bucket) CPU slot. The graph and worker set are shared
+/// across a model's buckets; only the bucket-shaped dimensions differ.
+pub struct CpuBackend {
+    graph: Arc<ModelGraph>,
+    bucket: usize,
+    workers: Arc<CpuWorkers>,
+}
+
+impl CpuBackend {
+    pub fn new(graph: Arc<ModelGraph>, bucket: usize, workers: Arc<CpuWorkers>) -> CpuBackend {
+        CpuBackend {
+            graph,
+            bucket,
+            workers,
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cpu
+    }
+
+    fn run(&mut self, feed: &[f32], arena: &mut BufferArena) -> Result<TensorView> {
+        let g = &self.graph;
+        let rows = self.bucket;
+        ensure!(
+            feed.len() == rows * g.in_dim,
+            "cpu backend: feed {} != bucket {} x in_dim {}",
+            feed.len(),
+            rows,
+            g.in_dim
+        );
+        let nl = g.layers.len();
+        // Ping-pong scratch for hidden activations; the final layer writes
+        // straight into an arena-shared output buffer.
+        let mut cur = arena.scratch(rows * g.max_dim);
+        let mut nxt = arena.scratch(rows * g.max_dim);
+        let mut src: &[f32] = feed;
+        let mut out = None;
+        for (i, l) in g.layers.iter().enumerate() {
+            if i + 1 == nl {
+                out = Some(arena.with_output(rows * l.out_dim, |y| {
+                    forward_layer(g, l, src, rows, y, &self.workers)
+                }));
+            } else {
+                forward_layer(g, l, src, rows, &mut nxt[..rows * l.out_dim], &self.workers);
+                std::mem::swap(&mut cur, &mut nxt);
+                src = &cur[..rows * l.out_dim];
+            }
+        }
+        arena.restore(cur);
+        arena.restore(nxt);
+        Ok(out.expect("graphs have >= 1 layer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn random_graph(prng: &mut Prng, dims: &[usize], act_last: Act) -> ModelGraph {
+        let mut layers = Vec::new();
+        let mut store = Vec::new();
+        for w in dims.windows(2) {
+            let (i, o) = (w[0], w[1]);
+            let w_off = store.len();
+            for _ in 0..i * o {
+                store.push((prng.normal() as f32) / (i as f32).sqrt());
+            }
+            let b_off = store.len();
+            for _ in 0..o {
+                store.push(prng.normal() as f32 * 0.1);
+            }
+            layers.push(Layer {
+                in_dim: i,
+                out_dim: o,
+                act: Act::Relu,
+                w_off,
+                b_off,
+            });
+        }
+        layers.last_mut().unwrap().act = act_last;
+        ModelGraph::new(layers, store.into()).unwrap()
+    }
+
+    #[test]
+    fn workers_run_every_part_once() {
+        let w = CpuWorkers::new(4);
+        let counts: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            w.scope(&|p| {
+                counts[p].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for c in &counts {
+            assert_eq!(c.load(Ordering::Relaxed), 50);
+        }
+    }
+
+    #[test]
+    fn workers_single_lane_runs_inline() {
+        let w = CpuWorkers::new(1);
+        let hit = AtomicUsize::new(0);
+        w.scope(&|p| {
+            assert_eq!(p, 0);
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let w = CpuWorkers::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w.scope(&|p| {
+                if p == 1 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool recovers for the next epoch.
+        let ok = AtomicUsize::new(0);
+        w.scope(&|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn kernel_matches_reference_including_tails() {
+        let mut prng = Prng::new(11);
+        // 10 output cols exercises the % 8 scalar tail; 3 layers exercise
+        // the ping-pong; relu + linear both covered.
+        let g = random_graph(&mut prng, &[12, 10, 9, 5], Act::Linear);
+        let workers = CpuWorkers::new(1);
+        for rows in [1, 2, 7] {
+            let x: Vec<f32> = (0..rows * 12).map(|_| prng.normal() as f32).collect();
+            let want = g.forward_reference(&x, rows);
+            let mut src: Vec<f32> = x.clone();
+            let mut y = Vec::new();
+            for l in &g.layers {
+                y = vec![0.0; rows * l.out_dim];
+                forward_layer(&g, l, &src, rows, &mut y, &workers);
+                src = y.clone();
+            }
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "rows={rows}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_split_equals_serial() {
+        let mut prng = Prng::new(7);
+        // Big enough to clear PAR_MIN_MACS: 8 x 64 x 80 = 40960 MACs.
+        let g = random_graph(&mut prng, &[64, 80], Act::Relu);
+        let x: Vec<f32> = (0..8 * 64).map(|_| prng.normal() as f32).collect();
+        let serial = CpuWorkers::new(1);
+        let par = CpuWorkers::new(3);
+        let l = &g.layers[0];
+        // Row split (rows >= lanes) and column split (rows < lanes).
+        for rows in [8usize, 2] {
+            let mut ys = vec![0.0; rows * 80];
+            let mut yp = vec![0.0; rows * 80];
+            forward_layer(&g, l, &x[..rows * 64], rows, &mut ys, &serial);
+            forward_layer(&g, l, &x[..rows * 64], rows, &mut yp, &par);
+            assert_eq!(ys, yp, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn backend_run_matches_reference_through_arena() {
+        let mut prng = Prng::new(3);
+        let g = Arc::new(random_graph(&mut prng, &[16, 12, 4], Act::Linear));
+        let workers = Arc::new(CpuWorkers::new(2));
+        let mut arena = BufferArena::new(1);
+        let mut be = CpuBackend::new(Arc::clone(&g), 4, workers);
+        let feed: Vec<f32> = (0..4 * 16).map(|_| prng.normal() as f32).collect();
+        let want = g.forward_reference(&feed, 4);
+        let got = be.run(&feed, &mut arena).unwrap();
+        assert_eq!(got.len(), 16);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // Second run recycles: the output shelf hit requires dropping the
+        // first view.
+        drop(got);
+        let before = arena.misses();
+        let got2 = be.run(&feed, &mut arena).unwrap();
+        assert_eq!(arena.misses(), before, "steady-state run allocates no new buffers");
+        assert_eq!(got2.len(), 16);
+    }
+
+    #[test]
+    fn backend_rejects_wrong_feed_len() {
+        let mut prng = Prng::new(5);
+        let g = Arc::new(random_graph(&mut prng, &[4, 2], Act::Linear));
+        let mut be = CpuBackend::new(g, 2, Arc::new(CpuWorkers::new(1)));
+        let mut arena = BufferArena::new(1);
+        assert!(be.run(&[0.0; 7], &mut arena).is_err());
+    }
+}

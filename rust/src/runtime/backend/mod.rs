@@ -1,0 +1,473 @@
+//! Pluggable execution backends.
+//!
+//! The executor used to call XLA directly; now every (model × bucket) slot
+//! holds a boxed [`Backend`] trait object and the device thread dispatches
+//! through it. Three implementations ship:
+//!
+//! | backend | compute                         | needs                     |
+//! |---------|---------------------------------|---------------------------|
+//! | `xla`   | compiled HLO via PJRT           | `*.hlo.txt` artifacts     |
+//! | `cpu`   | blocked f32 matmul, 8-wide, intra-op parallel | manifest layer grammar + f32 weights sidecar |
+//! | `quant` | u8×u8→i32 with per-column scale/zero-point, f32 at the boundary | same as `cpu` |
+//!
+//! Backends are deliberately **not** `Send`: like the XLA handles before
+//! them, each instance is owned by exactly one device thread, which also
+//! owns the [`BufferArena`] their outputs are carved from. Selection
+//! precedence (first hit wins): `--backend` global override → per-model
+//! config override → the manifest entry's `"backend"` → `xla`.
+
+use super::arena::BufferArena;
+use super::manifest::{Manifest, ModelEntry};
+use super::tensor::TensorView;
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+use std::fmt;
+use std::sync::Arc;
+
+pub mod cpu;
+pub mod quant;
+pub mod xla;
+
+pub use cpu::{CpuBackend, CpuWorkers};
+pub use quant::{QuantBackend, QuantModel};
+pub use xla::XlaBackend;
+
+/// Which implementation serves a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Xla,
+    Cpu,
+    Quant,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Cpu => "cpu",
+            BackendKind::Quant => "quant",
+        }
+    }
+
+    /// Parse a config/manifest/CLI spelling. `None` for unknown names —
+    /// callers turn that into [`BackendUnsupported`] with context.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "xla" => Some(BackendKind::Xla),
+            "cpu" => Some(BackendKind::Cpu),
+            "quant" | "u8" => Some(BackendKind::Quant),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Typed marker: a manifest/config requested an execution backend this
+/// server cannot serve for that model (unknown name, or a cpu/quant
+/// request for a model that ships no layer grammar). Travels through
+/// `anyhow` like [`super::WorkerCrashed`] so the coordinator can recover
+/// it into the `model.backend_unsupported` 409 taxonomy row.
+#[derive(Debug, Clone)]
+pub struct BackendUnsupported {
+    pub model: String,
+    pub backend: String,
+    pub detail: String,
+}
+
+impl BackendUnsupported {
+    pub fn new(
+        model: impl Into<String>,
+        backend: impl Into<String>,
+        detail: impl Into<String>,
+    ) -> BackendUnsupported {
+        BackendUnsupported {
+            model: model.into(),
+            backend: backend.into(),
+            detail: detail.into(),
+        }
+    }
+}
+
+impl fmt::Display for BackendUnsupported {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "model '{}': backend '{}' unsupported: {}",
+            self.model, self.backend, self.detail
+        )
+    }
+}
+
+impl std::error::Error for BackendUnsupported {}
+
+/// One executable slot: a model specialized to one batch bucket.
+///
+/// `run` executes a full bucket-shaped forward: `feed` holds
+/// `bucket × sample_elems` normalized inputs (already padded), the return
+/// view holds `bucket × classes` logits carved from the arena (or, for
+/// XLA, wrapped from the device readback). Implementations must not
+/// allocate on the steady-state path — `tests/alloc_counting.rs` pins
+/// this for `cpu` and `quant`.
+pub trait Backend {
+    fn kind(&self) -> BackendKind;
+    fn run(&mut self, feed: &[f32], arena: &mut BufferArena) -> Result<TensorView>;
+}
+
+/// Resolve which backend a slot should use. Precedence: global `--backend`
+/// override, then the per-model config override, then the manifest entry,
+/// then XLA. `"auto"` at any level defers to the next.
+pub fn select_kind(
+    global: Option<&str>,
+    per_model: Option<&str>,
+    entry: Option<&str>,
+    model: &str,
+) -> Result<BackendKind> {
+    for (src, spec) in [
+        ("--backend", global),
+        ("config override", per_model),
+        ("manifest", entry),
+    ] {
+        match spec {
+            None | Some("auto") | Some("") => continue,
+            Some(name) => {
+                return BackendKind::parse(name).ok_or_else(|| {
+                    BackendUnsupported::new(
+                        model,
+                        name,
+                        format!("unknown backend name (from {src}); known: xla, cpu, quant"),
+                    )
+                    .into()
+                })
+            }
+        }
+    }
+    Ok(BackendKind::Xla)
+}
+
+/// Activation in the manifest layer grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Relu,
+}
+
+impl Act {
+    fn parse(s: &str) -> Option<Act> {
+        match s {
+            "" | "none" | "linear" => Some(Act::Linear),
+            "relu" => Some(Act::Relu),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::Linear => v,
+            Act::Relu => v.max(0.0),
+        }
+    }
+}
+
+/// One dense layer resolved against the weights sidecar. Weights are
+/// row-major `[in_dim][out_dim]` at `w_off`; bias is `[out_dim]` at `b_off`
+/// (both offsets in floats).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub act: Act,
+    pub w_off: usize,
+    pub b_off: usize,
+}
+
+/// A model's full linear/MLP grammar plus its flat f32 weights — the
+/// shared substrate the `cpu` and `quant` backends execute. One graph is
+/// loaded per model and shared (`Arc`) across its bucket slots.
+#[derive(Debug)]
+pub struct ModelGraph {
+    pub layers: Vec<Layer>,
+    pub weights: Arc<[f32]>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Widest activation in the chain — sizes per-row scratch.
+    pub max_dim: usize,
+}
+
+impl ModelGraph {
+    /// Validate a layer chain against its weights buffer.
+    pub fn new(layers: Vec<Layer>, weights: Arc<[f32]>) -> Result<ModelGraph> {
+        if layers.is_empty() {
+            bail!("layer grammar is empty");
+        }
+        let mut max_dim = 0;
+        for (i, l) in layers.iter().enumerate() {
+            if l.in_dim == 0 || l.out_dim == 0 {
+                bail!("layer {i}: zero dimension");
+            }
+            if i > 0 && layers[i - 1].out_dim != l.in_dim {
+                bail!(
+                    "layer {i}: in_dim {} != previous out_dim {}",
+                    l.in_dim,
+                    layers[i - 1].out_dim
+                );
+            }
+            let w_end = l.w_off + l.in_dim * l.out_dim;
+            let b_end = l.b_off + l.out_dim;
+            if w_end > weights.len() || b_end > weights.len() {
+                bail!(
+                    "layer {i}: weights [{}..{w_end}) / bias [{}..{b_end}) exceed sidecar len {}",
+                    l.w_off,
+                    l.b_off,
+                    weights.len()
+                );
+            }
+            max_dim = max_dim.max(l.in_dim).max(l.out_dim);
+        }
+        Ok(ModelGraph {
+            in_dim: layers[0].in_dim,
+            out_dim: layers[layers.len() - 1].out_dim,
+            max_dim,
+            layers,
+            weights,
+        })
+    }
+
+    /// Load a model's graph from the manifest entry and its weights
+    /// sidecar. `Err(BackendUnsupported)` when the entry carries no layer
+    /// grammar; plain errors for IO/validation failures.
+    pub fn load(manifest: &Manifest, entry: &ModelEntry, verify_sha: bool) -> Result<ModelGraph> {
+        let kind_name = entry.backend.as_deref().unwrap_or("cpu");
+        if entry.layers.is_empty() {
+            return Err(BackendUnsupported::new(
+                &entry.name,
+                kind_name,
+                "manifest entry has no linear/MLP layer grammar (\"layers\")",
+            )
+            .into());
+        }
+        let wref = entry.weights.as_ref().ok_or_else(|| {
+            anyhow::Error::new(BackendUnsupported::new(
+                &entry.name,
+                kind_name,
+                "manifest entry has no weights sidecar (\"weights\")",
+            ))
+        })?;
+        let path = manifest.dir.join(&wref.file);
+        let data = std::fs::read(&path).with_context(|| format!("reading weights {path:?}"))?;
+        if verify_sha {
+            let digest: String = Sha256::digest(&data)
+                .iter()
+                .map(|b| format!("{b:02x}"))
+                .collect();
+            if digest != wref.sha256 {
+                bail!(
+                    "provenance violation: {} sha256 {digest} != manifest {}",
+                    wref.file,
+                    wref.sha256
+                );
+            }
+        }
+        if data.len() % 4 != 0 {
+            bail!("weights sidecar {} length {} not a multiple of 4", wref.file, data.len());
+        }
+        let mut weights = vec![0f32; data.len() / 4];
+        for (i, c) in data.chunks_exact(4).enumerate() {
+            weights[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        let mut layers = Vec::with_capacity(entry.layers.len());
+        for (i, l) in entry.layers.iter().enumerate() {
+            if l.op != "linear" {
+                return Err(BackendUnsupported::new(
+                    &entry.name,
+                    kind_name,
+                    format!("layer {i}: unsupported op '{}'", l.op),
+                )
+                .into());
+            }
+            let act = Act::parse(&l.act).ok_or_else(|| {
+                anyhow::Error::new(BackendUnsupported::new(
+                    &entry.name,
+                    kind_name,
+                    format!("layer {i}: unsupported activation '{}'", l.act),
+                ))
+            })?;
+            layers.push(Layer {
+                in_dim: l.in_dim,
+                out_dim: l.out_dim,
+                act,
+                w_off: l.w_off,
+                b_off: l.b_off,
+            });
+        }
+        let graph = ModelGraph::new(layers, weights.into())
+            .with_context(|| format!("model {}", entry.name))?;
+        if graph.in_dim != manifest.sample_elems() {
+            bail!(
+                "model {}: first layer in_dim {} != sample elems {}",
+                entry.name,
+                graph.in_dim,
+                manifest.sample_elems()
+            );
+        }
+        if graph.out_dim != manifest.num_classes() {
+            bail!(
+                "model {}: last layer out_dim {} != classes {}",
+                entry.name,
+                graph.out_dim,
+                manifest.num_classes()
+            );
+        }
+        Ok(graph)
+    }
+
+    /// Plain scalar forward — the ground truth the blocked/quantized
+    /// kernels are differentially tested against. Allocates freely; never
+    /// on the serving path.
+    pub fn forward_reference(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        assert_eq!(x.len(), rows * self.in_dim);
+        let mut cur = x.to_vec();
+        for l in &self.layers {
+            let w = &self.weights[l.w_off..l.w_off + l.in_dim * l.out_dim];
+            let b = &self.weights[l.b_off..l.b_off + l.out_dim];
+            let mut next = vec![0f32; rows * l.out_dim];
+            for r in 0..rows {
+                for j in 0..l.out_dim {
+                    let mut acc = b[j];
+                    for k in 0..l.in_dim {
+                        acc += cur[r * l.in_dim + k] * w[k * l.out_dim + j];
+                    }
+                    next[r * l.out_dim + j] = l.act.apply(acc);
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips() {
+        for k in [BackendKind::Xla, BackendKind::Cpu, BackendKind::Quant] {
+            assert_eq!(BackendKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("u8"), Some(BackendKind::Quant));
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn select_precedence() {
+        // Global override beats everything.
+        assert_eq!(
+            select_kind(Some("quant"), Some("cpu"), Some("xla"), "m").unwrap(),
+            BackendKind::Quant
+        );
+        // Per-model config beats the manifest.
+        assert_eq!(
+            select_kind(None, Some("cpu"), Some("xla"), "m").unwrap(),
+            BackendKind::Cpu
+        );
+        // Manifest entry.
+        assert_eq!(
+            select_kind(None, None, Some("cpu"), "m").unwrap(),
+            BackendKind::Cpu
+        );
+        // Default.
+        assert_eq!(select_kind(None, None, None, "m").unwrap(), BackendKind::Xla);
+        // "auto" defers to the next level.
+        assert_eq!(
+            select_kind(Some("auto"), None, Some("quant"), "m").unwrap(),
+            BackendKind::Quant
+        );
+    }
+
+    #[test]
+    fn select_unknown_is_typed_unsupported() {
+        let err = select_kind(Some("tpu"), None, None, "cnn_s").unwrap_err();
+        let u = err.downcast_ref::<BackendUnsupported>().expect("typed");
+        assert_eq!(u.model, "cnn_s");
+        assert_eq!(u.backend, "tpu");
+    }
+
+    fn tiny_graph() -> ModelGraph {
+        // 2 → 2 identity-ish: W = [[1,0],[0,1]], b = [0.5, -0.5].
+        let weights: Arc<[f32]> = vec![1.0, 0.0, 0.0, 1.0, 0.5, -0.5].into();
+        ModelGraph::new(
+            vec![Layer {
+                in_dim: 2,
+                out_dim: 2,
+                act: Act::Linear,
+                w_off: 0,
+                b_off: 4,
+            }],
+            weights,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reference_forward_computes() {
+        let g = tiny_graph();
+        let y = g.forward_reference(&[2.0, 3.0], 1);
+        assert_eq!(y, vec![2.5, 2.5]);
+    }
+
+    #[test]
+    fn graph_rejects_dim_mismatch() {
+        let weights: Arc<[f32]> = vec![0.0; 16].into();
+        let err = ModelGraph::new(
+            vec![
+                Layer {
+                    in_dim: 2,
+                    out_dim: 3,
+                    act: Act::Relu,
+                    w_off: 0,
+                    b_off: 6,
+                },
+                Layer {
+                    in_dim: 4, // != 3
+                    out_dim: 1,
+                    act: Act::Linear,
+                    w_off: 9,
+                    b_off: 13,
+                },
+            ],
+            weights,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("previous out_dim"), "{err}");
+    }
+
+    #[test]
+    fn graph_rejects_out_of_bounds_offsets() {
+        let weights: Arc<[f32]> = vec![0.0; 4].into();
+        let err = ModelGraph::new(
+            vec![Layer {
+                in_dim: 2,
+                out_dim: 2,
+                act: Act::Linear,
+                w_off: 2, // 2+4 > 4
+                b_off: 0,
+            }],
+            weights,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("exceed sidecar"), "{err}");
+    }
+
+    #[test]
+    fn relu_applies() {
+        assert_eq!(Act::Relu.apply(-1.0), 0.0);
+        assert_eq!(Act::Relu.apply(2.0), 2.0);
+        assert_eq!(Act::Linear.apply(-1.0), -1.0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Quantized u8 inference backend.
+//!
+//! Weights are quantized **once at load** to asymmetric u8 with a
+//! per-output-column scale/zero-point (column-wise min/max); inputs are
+//! quantized per row on the fly (dynamic range). The inner product runs
+//! entirely in u8×u8→i32 — 8-column accumulator blocks, the integer twin
+//! of the f32 kernel in [`super::cpu`] — and dequantizes back to f32 only
+//! at the layer boundary:
+//!
+//! ```text
+//! Σ x·w = sx·sj · [ Σ qx·qw − zj·Σqx − zx·Σqw + n·zx·zj ]
+//! ```
+//!
+//! The three correction terms cost one pass per row (`Σqx`) and a
+//! load-time column sum (`Σqw`), so the hot loop is a pure integer dot.
+//! Accuracy: argmax agreement with the f32 path is pinned ≥ threshold by
+//! `tests/backend_differential.rs`.
+
+use super::{Act, Backend, BackendKind, ModelGraph};
+use crate::runtime::arena::BufferArena;
+use crate::runtime::tensor::TensorView;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// One layer with pre-quantized weights.
+struct QLayer {
+    in_dim: usize,
+    out_dim: usize,
+    act: Act,
+    /// Row-major `[in_dim][out_dim]`, same layout as the f32 weights.
+    qw: Vec<u8>,
+    /// Per-output-column dequant scale.
+    wscale: Vec<f32>,
+    /// Per-output-column zero point.
+    wzero: Vec<i32>,
+    /// Per-output-column `Σ_k qw[k][j]` (load-time correction term).
+    col_qsum: Vec<i32>,
+    /// f32 bias, applied after dequantization.
+    bias: Vec<f32>,
+}
+
+/// A model's quantized weights, shared across its bucket slots.
+pub struct QuantModel {
+    layers: Vec<QLayer>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub max_dim: usize,
+}
+
+impl QuantModel {
+    /// Quantize every layer of a loaded f32 graph.
+    pub fn from_graph(g: &ModelGraph) -> QuantModel {
+        let layers = g
+            .layers
+            .iter()
+            .map(|l| {
+                let w = &g.weights[l.w_off..l.w_off + l.in_dim * l.out_dim];
+                let bias = g.weights[l.b_off..l.b_off + l.out_dim].to_vec();
+                let mut wscale = vec![0f32; l.out_dim];
+                let mut wzero = vec![0i32; l.out_dim];
+                for j in 0..l.out_dim {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for k in 0..l.in_dim {
+                        let v = w[k * l.out_dim + j];
+                        lo = lo.min(v);
+                        hi = hi.max(v);
+                    }
+                    // Degenerate column (constant weight) → any scale works.
+                    let scale = ((hi - lo) / 255.0).max(1e-12);
+                    wscale[j] = scale;
+                    wzero[j] = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+                }
+                let mut qw = vec![0u8; l.in_dim * l.out_dim];
+                let mut col_qsum = vec![0i32; l.out_dim];
+                for k in 0..l.in_dim {
+                    for j in 0..l.out_dim {
+                        let q = (w[k * l.out_dim + j] / wscale[j] + wzero[j] as f32)
+                            .round()
+                            .clamp(0.0, 255.0) as u8;
+                        qw[k * l.out_dim + j] = q;
+                        col_qsum[j] += q as i32;
+                    }
+                }
+                QLayer {
+                    in_dim: l.in_dim,
+                    out_dim: l.out_dim,
+                    act: l.act,
+                    qw,
+                    wscale,
+                    wzero,
+                    col_qsum,
+                    bias,
+                }
+            })
+            .collect();
+        QuantModel {
+            layers,
+            in_dim: g.in_dim,
+            out_dim: g.out_dim,
+            max_dim: g.max_dim,
+        }
+    }
+}
+
+/// One (model × bucket) quantized slot. Owns its u8 input scratch
+/// (allocated at construction, sized to the widest layer) so the
+/// steady-state path allocates nothing.
+pub struct QuantBackend {
+    model: Arc<QuantModel>,
+    bucket: usize,
+    /// Quantized row buffer, `max_dim` wide (one row at a time).
+    qx: Vec<u8>,
+}
+
+impl QuantBackend {
+    pub fn new(model: Arc<QuantModel>, bucket: usize) -> QuantBackend {
+        let qx = vec![0u8; model.max_dim];
+        QuantBackend { model, bucket, qx }
+    }
+}
+
+/// Quantize one f32 row to u8 with a dynamic asymmetric range; returns
+/// `(scale, zero_point, Σq)`.
+fn quantize_row(x: &[f32], q: &mut [u8]) -> (f32, i32, i32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = ((hi - lo) / 255.0).max(1e-12);
+    let zero = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+    let mut qsum = 0i32;
+    for (qv, &v) in q.iter_mut().zip(x) {
+        let qq = (v / scale + zero as f32).round().clamp(0.0, 255.0) as u8;
+        *qv = qq;
+        qsum += qq as i32;
+    }
+    (scale, zero, qsum)
+}
+
+/// One quantized layer over one row: integer dot in 8-column blocks,
+/// dequant + bias + activation into `y`.
+fn qlayer_row(l: &QLayer, qx: &[u8], sx: f32, zx: i32, qsum: i32, y: &mut [f32]) {
+    let n = l.in_dim as i32;
+    let out = l.out_dim;
+    let main_end = out / 8 * 8;
+    let mut jc = 0;
+    while jc < main_end {
+        let mut acc = [0i32; 8];
+        for (k, &xq) in qx.iter().enumerate() {
+            let xq = xq as i32;
+            let wr = &l.qw[k * out + jc..k * out + jc + 8];
+            for t in 0..8 {
+                acc[t] += xq * wr[t] as i32;
+            }
+        }
+        for t in 0..8 {
+            let j = jc + t;
+            let corr = acc[t] - l.wzero[j] * qsum - zx * l.col_qsum[j] + n * zx * l.wzero[j];
+            let v = sx * l.wscale[j] * corr as f32 + l.bias[j];
+            y[j] = l.act.apply(v);
+        }
+        jc += 8;
+    }
+    for j in main_end..out {
+        let mut acc = 0i32;
+        for (k, &xq) in qx.iter().enumerate() {
+            acc += xq as i32 * l.qw[k * out + j] as i32;
+        }
+        let corr = acc - l.wzero[j] * qsum - zx * l.col_qsum[j] + n * zx * l.wzero[j];
+        let v = sx * l.wscale[j] * corr as f32 + l.bias[j];
+        y[j] = l.act.apply(v);
+    }
+}
+
+impl Backend for QuantBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Quant
+    }
+
+    fn run(&mut self, feed: &[f32], arena: &mut BufferArena) -> Result<TensorView> {
+        let m = Arc::clone(&self.model);
+        let rows = self.bucket;
+        ensure!(
+            feed.len() == rows * m.in_dim,
+            "quant backend: feed {} != bucket {} x in_dim {}",
+            feed.len(),
+            rows,
+            m.in_dim
+        );
+        let nl = m.layers.len();
+        let mut cur = arena.scratch(rows * m.max_dim);
+        let mut nxt = arena.scratch(rows * m.max_dim);
+        let mut src: &[f32] = feed;
+        let mut out = None;
+        for (i, l) in m.layers.iter().enumerate() {
+            let last = i + 1 == nl;
+            if last {
+                out = Some(arena.with_output(rows * l.out_dim, |y| {
+                    for r in 0..rows {
+                        let xr = &src[r * l.in_dim..(r + 1) * l.in_dim];
+                        let q = &mut self.qx[..l.in_dim];
+                        let (sx, zx, qsum) = quantize_row(xr, q);
+                        qlayer_row(l, q, sx, zx, qsum, &mut y[r * l.out_dim..(r + 1) * l.out_dim]);
+                    }
+                }));
+            } else {
+                for r in 0..rows {
+                    let xr = &src[r * l.in_dim..(r + 1) * l.in_dim];
+                    let q = &mut self.qx[..l.in_dim];
+                    let (sx, zx, qsum) = quantize_row(xr, q);
+                    qlayer_row(l, q, sx, zx, qsum, &mut nxt[r * l.out_dim..(r + 1) * l.out_dim]);
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+                src = &cur[..rows * l.out_dim];
+            }
+        }
+        arena.restore(cur);
+        arena.restore(nxt);
+        Ok(out.expect("graphs have >= 1 layer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::Layer;
+    use crate::util::Prng;
+
+    fn graph(dims: &[usize], seed: u64) -> ModelGraph {
+        let mut prng = Prng::new(seed);
+        let mut layers = Vec::new();
+        let mut store = Vec::new();
+        for w in dims.windows(2) {
+            let (i, o) = (w[0], w[1]);
+            let w_off = store.len();
+            for _ in 0..i * o {
+                store.push((prng.normal() as f32) / (i as f32).sqrt());
+            }
+            let b_off = store.len();
+            for _ in 0..o {
+                store.push(prng.normal() as f32 * 0.1);
+            }
+            layers.push(Layer {
+                in_dim: i,
+                out_dim: o,
+                act: Act::Relu,
+                w_off,
+                b_off,
+            });
+        }
+        layers.last_mut().unwrap().act = Act::Linear;
+        ModelGraph::new(layers, store.into()).unwrap()
+    }
+
+    #[test]
+    fn integer_weights_round_trip_exactly() {
+        // Weights already on a 255-step grid → quantization is lossless,
+        // so the integer path must reproduce f32 almost exactly (only the
+        // dynamic input quantization adds noise; integer inputs kill that
+        // too).
+        let store: Vec<f32> = vec![1.0, 2.0, -1.0, 0.0, 3.0, 1.0, 0.5, -0.5];
+        let g = ModelGraph::new(
+            vec![Layer {
+                in_dim: 3,
+                out_dim: 2,
+                act: Act::Linear,
+                w_off: 0,
+                b_off: 6,
+            }],
+            store.into(),
+        )
+        .unwrap();
+        let m = Arc::new(QuantModel::from_graph(&g));
+        let mut be = QuantBackend::new(m, 1);
+        let mut arena = BufferArena::new(1);
+        let x = [10.0f32, 20.0, 30.0];
+        let want = g.forward_reference(&x, 1);
+        let got = be.run(&x, &mut arena).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b} (want {want:?})");
+        }
+    }
+
+    #[test]
+    fn argmax_agrees_with_f32_reference() {
+        let g = graph(&[32, 24, 4], 99);
+        let m = Arc::new(QuantModel::from_graph(&g));
+        let mut be = QuantBackend::new(m, 1);
+        let mut arena = BufferArena::new(1);
+        let mut prng = Prng::new(123);
+        let mut agree = 0;
+        let trials = 100;
+        for _ in 0..trials {
+            let x: Vec<f32> = (0..32).map(|_| prng.normal() as f32).collect();
+            let want = g.forward_reference(&x, 1);
+            let got = be.run(&x, &mut arena).unwrap();
+            let am = |v: &[f32]| {
+                v.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            if am(&want) == am(&got) {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 90, "argmax agreement {agree}/{trials} < 90%");
+    }
+
+    #[test]
+    fn batched_rows_are_independent() {
+        let g = graph(&[8, 6, 3], 5);
+        let m = Arc::new(QuantModel::from_graph(&g));
+        let mut arena = BufferArena::new(1);
+        let mut prng = Prng::new(6);
+        let x: Vec<f32> = (0..4 * 8).map(|_| prng.normal() as f32).collect();
+        let mut b4 = QuantBackend::new(Arc::clone(&m), 4);
+        let batched = b4.run(&x, &mut arena).unwrap();
+        let mut b1 = QuantBackend::new(m, 1);
+        for r in 0..4 {
+            let single = b1.run(&x[r * 8..(r + 1) * 8], &mut arena).unwrap();
+            for (a, b) in single.iter().zip(&batched[r * 3..(r + 1) * 3]) {
+                assert!((a - b).abs() < 1e-6, "row {r}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,14 +1,26 @@
-//! The device executor: one thread owning one `PjRtClient` and every
-//! compiled (model × bucket) executable — the Rust incarnation of the
-//! paper's `fmodels` shared-memory ensemble (§2.2).
+//! The device executor: one thread owning every (model × bucket) backend
+//! slot — the Rust incarnation of the paper's `fmodels` shared-memory
+//! ensemble (§2.2), now dispatching through the pluggable [`Backend`]
+//! trait instead of calling XLA directly.
 //!
-//! xla handles are `!Send`, so all PJRT work happens on this thread;
-//! request threads hold a cheap [`ExecutorHandle`] (`Clone + Send + Sync`)
-//! and submit [`ExecRequest`]s over a channel. Device work is therefore
-//! serialized exactly like N models sharing one GPU stream.
+//! Backend instances (like the xla handles they may wrap) are `!Send`, so
+//! all device work happens on this thread; request threads hold a cheap
+//! [`ExecutorHandle`] (`Clone + Send + Sync`) and submit [`ExecRequest`]s
+//! over a channel. Device work is therefore serialized exactly like N
+//! models sharing one GPU stream. The thread also owns a [`BufferArena`]:
+//! padded feeds, hidden activations, and output logits all come from
+//! recycled storage, so a steady-state flush on the `cpu`/`quant`
+//! backends performs zero heap allocations (`tests/alloc_counting.rs`).
+//! The XLA client is created lazily — a manifest served entirely by the
+//! CPU backends never touches PJRT.
 
-use super::manifest::Manifest;
-use super::tensor::{self, TensorView};
+use super::arena::BufferArena;
+use super::backend::{
+    self, Backend, BackendKind, CpuBackend, CpuWorkers, ModelGraph, QuantBackend, QuantModel,
+    XlaBackend,
+};
+use super::manifest::{split_slot, Manifest, ModelEntry};
+use super::tensor::TensorView;
 use crate::chaos;
 use crate::util::Stopwatch;
 use anyhow::{anyhow, bail, Context, Result};
@@ -59,13 +71,20 @@ pub struct ExecRequest {
 /// Result of one inference job.
 #[derive(Debug, Clone)]
 pub struct ExecResponse {
-    /// Row-major `(batch, num_classes)` logits, truncated to the true batch.
-    pub logits: Vec<f32>,
+    /// Row-major `(batch, num_classes)` logits, truncated to the true
+    /// batch. A view into arena-recycled storage: the buffer returns to
+    /// the executor's pool when the last reference drops (response
+    /// rendered), closing the zero-alloc loop.
+    pub logits: TensorView,
     /// Bucket the job actually ran on (≥ batch).
     pub bucket: usize,
-    /// Time spent queued behind other device work.
+    /// Which backend executed (`"xla"`, `"cpu"`, `"quant"`).
+    pub backend: &'static str,
+    /// Channel handoff: time between submit and the device thread picking
+    /// the job up (NOT kernel time — the coordinator reports it as
+    /// `stage_submit_us`).
     pub queue_micros: u64,
-    /// Device execution time (pad + literal + execute + readback).
+    /// Device execution time (pad + kernel/literal + readback).
     pub exec_micros: u64,
 }
 
@@ -110,7 +129,8 @@ enum Msg {
 }
 
 /// Which artifacts an executor loads (subset support is what lets the
-/// benches build "one model per device" baselines).
+/// benches build "one model per device" baselines) and how it executes
+/// them (backend selection, worker sizing, arena cap).
 #[derive(Debug, Clone, Default)]
 pub struct ExecutorOptions {
     /// Models to load; `None` = every model in the manifest.
@@ -124,8 +144,18 @@ pub struct ExecutorOptions {
     /// for callers that already verified everything at startup and don't
     /// want boot-time compilation to hash each artifact again.
     pub verify_on_load: bool,
-    /// Run one warmup execution per executable after compiling.
+    /// Run one warmup execution per slot after loading (also pre-warms
+    /// the arena shelves, so the first real flush is already zero-alloc).
     pub warmup: bool,
+    /// Global backend override (`--backend`); beats per-model config and
+    /// the manifest. `None`/`"auto"` defers down the precedence chain.
+    pub backend: Option<String>,
+    /// Per-model config overrides `(bare model name, backend)`.
+    pub backend_overrides: Vec<(String, String)>,
+    /// Intra-op CPU lanes; 0 = physical-core heuristic.
+    pub cpu_workers: usize,
+    /// Arena retention cap in MB; 0 = default (64).
+    pub arena_cap_mb: usize,
 }
 
 /// Cloneable, thread-safe handle to a device executor.
@@ -198,9 +228,9 @@ impl ExecutorHandle {
         self.in_flight_rows.load(Ordering::Relaxed)
     }
 
-    /// Compile `model`'s artifacts into this device at runtime (subject to
+    /// Load `model`'s artifacts into this device at runtime (subject to
     /// the executor's bucket filter and SHA verification options).
-    /// `Ok(true)` = newly compiled, `Ok(false)` = already fully loaded.
+    /// `Ok(true)` = newly loaded, `Ok(false)` = already fully loaded.
     pub fn load_model(&self, model: &str) -> Result<bool> {
         self.load_model_async(model)?
             .recv()
@@ -221,8 +251,8 @@ impl ExecutorHandle {
         Ok(reply_rx)
     }
 
-    /// Evict every executable of `model` from this device, freeing its
-    /// memory. `Ok(true)` = something was evicted.
+    /// Evict every slot of `model` from this device, freeing its memory.
+    /// `Ok(true)` = something was evicted.
     pub fn unload_model(&self, model: &str) -> Result<bool> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
@@ -248,8 +278,8 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Spawn the device thread, compile all selected artifacts, and block
-    /// until the device is ready (or compilation failed).
+    /// Spawn the device thread, load all selected slots, and block until
+    /// the device is ready (or loading failed).
     pub fn spawn(manifest: Arc<Manifest>, opts: ExecutorOptions) -> Result<Executor> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -301,13 +331,37 @@ impl Drop for Executor {
     }
 }
 
-/// Compiled executables, nested `model name → bucket → executable`. The
+/// Loaded backend slots, nested `model name → bucket → backend`. The
 /// inner map is ordered so "smallest loaded bucket that fits" is a range
 /// query, and the outer map is queried with a borrowed `&str` — dispatch
 /// allocates no `(String, bucket)` key per request.
-type ExecutableMap = HashMap<String, BTreeMap<usize, xla::PjRtLoadedExecutable>>;
+type BackendMap = HashMap<String, BTreeMap<usize, Box<dyn Backend>>>;
 
-/// Body of the device thread: compile everything, then serve jobs forever.
+/// Everything the device thread owns: the slot map, the shared-per-model
+/// f32 graphs and quantized models backing the CPU paths, the lazy XLA
+/// client, and the intra-op worker set.
+struct DeviceState {
+    /// Created on first XLA slot; CPU-only manifests never touch PJRT.
+    client: Option<xla::PjRtClient>,
+    slots: BackendMap,
+    graphs: HashMap<String, Arc<ModelGraph>>,
+    qmodels: HashMap<String, Arc<QuantModel>>,
+    workers: Option<Arc<CpuWorkers>>,
+}
+
+impl DeviceState {
+    fn new() -> DeviceState {
+        DeviceState {
+            client: None,
+            slots: BackendMap::new(),
+            graphs: HashMap::new(),
+            qmodels: HashMap::new(),
+            workers: None,
+        }
+    }
+}
+
+/// Body of the device thread: load everything, then serve jobs forever.
 fn device_thread(
     manifest: Arc<Manifest>,
     opts: ExecutorOptions,
@@ -315,33 +369,32 @@ fn device_thread(
     ready: mpsc::Sender<Result<()>>,
     healthy: Arc<AtomicBool>,
 ) {
-    let setup = (|| -> Result<(xla::PjRtClient, ExecutableMap)> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut executables = ExecutableMap::new();
+    let mut arena = BufferArena::new(opts.arena_cap_mb);
+    let mut state = DeviceState::new();
+    let setup = (|| -> Result<()> {
         for model in &manifest.models {
             if let Some(want) = &opts.models {
                 if !want.contains(&model.name) {
                     continue;
                 }
             }
-            compile_model(&client, &manifest, &opts, model, &mut executables)?;
+            load_model_slots(&mut state, &manifest, &opts, model, &mut arena)?;
         }
-        if executables.is_empty() {
-            bail!("executor loaded zero executables (model/bucket filter too strict?)");
+        if state.slots.is_empty() {
+            bail!("executor loaded zero slots (model/bucket filter too strict?)");
         }
-        Ok((client, executables))
+        Ok(())
     })();
 
-    let (client, mut executables) = match setup {
-        Ok(pair) => {
+    match setup {
+        Ok(()) => {
             let _ = ready.send(Ok(()));
-            pair
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
-    };
+    }
 
     // Serve until shutdown (or every handle is dropped).
     while let Ok(msg) = rx.recv() {
@@ -366,18 +419,20 @@ fn device_thread(
                             _ => bail!("chaos: injected failure at exec.device"),
                         }
                     }
-                    execute_job(&executables, &manifest, &req)
+                    execute_job(&mut state, &manifest, &mut arena, &req)
                 }));
                 // Whatever happened, the rows are no longer ahead of anyone.
                 drop(rows);
                 match outcome {
                     Ok(result) => {
-                        let result = result.map(|(logits, bucket, exec_micros)| ExecResponse {
-                            logits,
-                            bucket,
-                            queue_micros,
-                            exec_micros,
-                        });
+                        let result =
+                            result.map(|(logits, bucket, backend, exec_micros)| ExecResponse {
+                                logits,
+                                bucket,
+                                backend,
+                                queue_micros,
+                                exec_micros,
+                            });
                         let _ = reply.send(result); // receiver may have timed out; fine
                     }
                     Err(panic) => {
@@ -406,10 +461,10 @@ fn device_thread(
                         ..opts.clone()
                     };
                     let added =
-                        compile_model(&client, &manifest, &load_opts, entry, &mut executables)?;
+                        load_model_slots(&mut state, &manifest, &load_opts, entry, &mut arena)?;
                     // Inner bucket maps are created only on insert, so
-                    // presence of the key means ≥ 1 executable.
-                    if !executables.contains_key(&model) {
+                    // presence of the key means ≥ 1 slot.
+                    if !state.slots.contains_key(&model) {
                         bail!("bucket filter selects no artifacts for '{model}'");
                     }
                     Ok(added > 0)
@@ -417,7 +472,9 @@ fn device_thread(
                 let _ = reply.send(result);
             }
             Msg::Unload { model, reply } => {
-                let had = executables.remove(&model).is_some();
+                let had = state.slots.remove(&model).is_some();
+                state.graphs.remove(&model);
+                state.qmodels.remove(&model);
                 let _ = reply.send(Ok(had));
             }
             Msg::Shutdown => break,
@@ -457,16 +514,33 @@ fn fail_queued(rx: &mpsc::Receiver<Msg>, detail: &str) {
     }
 }
 
-/// Compile (and optionally warm up) every selected bucket of one model
-/// into `executables`, verifying provenance when the options say so.
-/// Already-compiled buckets are skipped; returns how many were added.
-fn compile_model(
-    client: &xla::PjRtClient,
+/// Resolve the backend kind for one manifest entry under these options.
+fn resolve_kind(opts: &ExecutorOptions, entry: &ModelEntry) -> Result<BackendKind> {
+    let (bare, _) = split_slot(&entry.name);
+    let per_model = opts
+        .backend_overrides
+        .iter()
+        .find(|(m, _)| m == bare)
+        .map(|(_, b)| b.as_str());
+    backend::select_kind(
+        opts.backend.as_deref(),
+        per_model,
+        entry.backend.as_deref(),
+        &entry.name,
+    )
+}
+
+/// Load (and optionally warm up) every selected bucket of one model into
+/// the slot map, verifying provenance when the options say so.
+/// Already-loaded buckets are skipped; returns how many were added.
+fn load_model_slots(
+    state: &mut DeviceState,
     manifest: &Manifest,
     opts: &ExecutorOptions,
-    model: &crate::runtime::ModelEntry,
-    executables: &mut ExecutableMap,
+    model: &ModelEntry,
+    arena: &mut BufferArena,
 ) -> Result<usize> {
+    let kind = resolve_kind(opts, model)?;
     let mut added = 0;
     for art in &model.buckets {
         if let Some(want) = &opts.buckets {
@@ -474,45 +548,96 @@ fn compile_model(
                 continue;
             }
         }
-        if executables
+        if state
+            .slots
             .get(&model.name)
             .is_some_and(|b| b.contains_key(&art.bucket))
         {
             continue;
         }
-        if opts.verify_sha {
-            manifest
-                .verify_artifact(art)
-                .with_context(|| format!("model {}", model.name))?;
-        }
-        let path = manifest.artifact_path(art);
-        // HLO TEXT interchange: see aot.py / DESIGN.md — serialized
-        // protos from jax>=0.5 are rejected by xla_extension 0.5.1.
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", art.file))?;
+        let mut be: Box<dyn Backend> = match kind {
+            BackendKind::Xla => {
+                if opts.verify_sha {
+                    manifest
+                        .verify_artifact(art)
+                        .with_context(|| format!("model {}", model.name))?;
+                }
+                if state.client.is_none() {
+                    state.client =
+                        Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+                }
+                let client = state.client.as_ref().expect("client just ensured");
+                let path = manifest.artifact_path(art);
+                // HLO TEXT interchange: see aot.py / DESIGN.md — serialized
+                // protos from jax>=0.5 are rejected by xla_extension 0.5.1.
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", art.file))?;
+                Box::new(XlaBackend::new(exe, art.bucket, &manifest.input_shape))
+            }
+            BackendKind::Cpu => {
+                let graph = ensure_graph(state, manifest, opts, model)?;
+                let workers = ensure_workers(state, opts);
+                Box::new(CpuBackend::new(graph, art.bucket, workers))
+            }
+            BackendKind::Quant => {
+                if !state.qmodels.contains_key(&model.name) {
+                    let graph = ensure_graph(state, manifest, opts, model)?;
+                    let qm = Arc::new(QuantModel::from_graph(&graph));
+                    state.qmodels.insert(model.name.clone(), qm);
+                }
+                let qm = Arc::clone(state.qmodels.get(&model.name).expect("just ensured"));
+                Box::new(QuantBackend::new(qm, art.bucket))
+            }
+        };
         if opts.warmup {
-            let zeros = vec![0.0f32; art.bucket * manifest.sample_elems()];
-            run_one(&exe, &zeros, art.bucket, manifest)
+            let zeros = arena.scratch(art.bucket * manifest.sample_elems());
+            be.run(&zeros, arena)
                 .with_context(|| format!("warmup {} b{}", model.name, art.bucket))?;
+            arena.restore(zeros);
         }
-        executables
+        state
+            .slots
             .entry(model.name.clone())
             .or_default()
-            .insert(art.bucket, exe);
+            .insert(art.bucket, be);
         added += 1;
     }
     Ok(added)
 }
 
-fn execute_job(
-    executables: &ExecutableMap,
+/// The per-model f32 graph, loaded once and shared across bucket slots
+/// (and with the quantizer).
+fn ensure_graph(
+    state: &mut DeviceState,
     manifest: &Manifest,
+    opts: &ExecutorOptions,
+    model: &ModelEntry,
+) -> Result<Arc<ModelGraph>> {
+    if let Some(g) = state.graphs.get(&model.name) {
+        return Ok(Arc::clone(g));
+    }
+    let g = Arc::new(ModelGraph::load(manifest, model, opts.verify_sha)?);
+    state.graphs.insert(model.name.clone(), Arc::clone(&g));
+    Ok(g)
+}
+
+fn ensure_workers(state: &mut DeviceState, opts: &ExecutorOptions) -> Arc<CpuWorkers> {
+    if state.workers.is_none() {
+        state.workers = Some(Arc::new(CpuWorkers::new(opts.cpu_workers)));
+    }
+    Arc::clone(state.workers.as_ref().expect("just set"))
+}
+
+fn execute_job(
+    state: &mut DeviceState,
+    manifest: &Manifest,
+    arena: &mut BufferArena,
     req: &ExecRequest,
-) -> Result<(Vec<f32>, usize, u64)> {
+) -> Result<(TensorView, usize, &'static str, u64)> {
     let elems = manifest.sample_elems();
     if req.batch == 0 {
         bail!("empty batch");
@@ -529,11 +654,12 @@ fn execute_job(
         .model(&req.model)
         .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
     // Borrowed `&str` lookup: the dispatch loop allocates no key strings.
-    let loaded = executables
-        .get(req.model.as_str())
-        .ok_or_else(|| anyhow!("model '{}' has no loaded executables (unloaded?)", req.model))?;
+    let loaded = state
+        .slots
+        .get_mut(req.model.as_str())
+        .ok_or_else(|| anyhow!("model '{}' has no loaded slots (unloaded?)", req.model))?;
     // Smallest *loaded* bucket that fits (the inner map is bucket-ordered).
-    let (&bucket, exe) = loaded.range(req.batch..).next().ok_or_else(|| {
+    let (&bucket, be) = loaded.range_mut(req.batch..).next().ok_or_else(|| {
         anyhow!(
             "batch {} exceeds largest loaded bucket for '{}' (max {})",
             req.batch,
@@ -543,59 +669,46 @@ fn execute_job(
     })?;
 
     let sw = Stopwatch::start();
-    let padded;
+    // Pad into arena scratch (zero-filled tail rows) when the batch does
+    // not exactly fill the bucket.
+    let mut padded = None;
     let feed: &[f32] = if bucket == req.batch {
         req.data.as_slice()
     } else {
-        padded = tensor::pad_batch(&req.data, req.batch, bucket, elems);
-        &padded
+        let mut s = arena.scratch(bucket * elems);
+        s[..req.batch * elems].copy_from_slice(req.data.as_slice());
+        padded = Some(s);
+        padded.as_deref().expect("just set")
     };
-    let logits_full = run_one(exe, feed, bucket, manifest)?;
+    let full = be.run(feed, arena)?;
+    if let Some(s) = padded.take() {
+        arena.restore(s);
+    }
     let exec_micros = sw.elapsed_micros();
-    let logits = tensor::truncate_batch(logits_full, req.batch, manifest.num_classes());
-    Ok((logits, bucket, exec_micros))
-}
-
-/// Execute one bucket-shaped forward: literal in, tuple1 literal out.
-fn run_one(
-    exe: &xla::PjRtLoadedExecutable,
-    feed: &[f32],
-    bucket: usize,
-    manifest: &Manifest,
-) -> Result<Vec<f32>> {
-    // Single-copy literal creation straight into the batched shape
-    // (§Perf L3#3: vec1+reshape copied the payload twice).
-    let mut dims: Vec<usize> = vec![bucket];
-    dims.extend(&manifest.input_shape);
-    let bytes = unsafe {
-        std::slice::from_raw_parts(feed.as_ptr() as *const u8, std::mem::size_of_val(feed))
-    };
-    let input =
-        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
-            .context("creating input literal")?;
-    let result = exe
-        .execute::<xla::Literal>(&[input])
-        .context("PJRT execute")?[0][0]
-        .to_literal_sync()
-        .context("device→host readback")?;
-    // aot.py lowers with return_tuple=True → 1-tuple of logits.
-    let logits = result.to_tuple1().context("unwrapping output tuple")?;
-    logits.to_vec::<f32>().context("logits to f32 vec")
+    // Zero-copy truncation to the true batch: a sub-view of the same
+    // refcounted buffer.
+    let logits = full.slice(0, req.batch * manifest.num_classes());
+    Ok((logits, bucket, be.kind().as_str(), exec_micros))
 }
 
 #[cfg(test)]
 mod tests {
-    // Executor tests that need real artifacts live in rust/tests/ (they
-    // require `make artifacts` to have run); here we only test the pieces
-    // that don't need a device.
+    // Device-backed (XLA) executor tests live in rust/tests/ and need
+    // `make artifacts`; everything here runs device-free — the CPU-backend
+    // paths boot from synthetic artifacts.
     use super::*;
+    use crate::runtime::synth;
 
     #[test]
-    fn options_default_loads_everything() {
+    fn options_default_loads_everything_on_xla() {
         let o = ExecutorOptions::default();
         assert!(o.models.is_none());
         assert!(o.buckets.is_none());
         assert!(!o.verify_sha);
+        assert!(o.backend.is_none());
+        assert!(o.backend_overrides.is_empty());
+        assert_eq!(o.cpu_workers, 0);
+        assert_eq!(o.arena_cap_mb, 0);
     }
 
     #[test]
@@ -614,7 +727,7 @@ mod tests {
             req: ExecRequest {
                 model: "m".into(),
                 batch: 2,
-                data: vec![0.0; 2],
+                data: vec![0.0; 2].into(),
             },
             enqueued: Stopwatch::start(),
             reply: reply_tx,
@@ -646,5 +759,137 @@ mod tests {
         assert_eq!(panic_message(&b), "owned msg");
         let c: Box<dyn std::any::Any + Send> = Box::new(42u32);
         assert_eq!(panic_message(&c), "panic in device worker");
+    }
+
+    fn synth_manifest() -> Arc<Manifest> {
+        Arc::new(Manifest::load(synth::ensure_synthetic()).unwrap())
+    }
+
+    #[test]
+    fn cpu_backend_serves_every_bucket_device_free() {
+        let manifest = synth_manifest();
+        let exec = Executor::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                verify_sha: true,
+                warmup: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = exec.handle();
+        for batch in [1usize, 3, 17, 32] {
+            let resp = h
+                .infer(ExecRequest {
+                    model: "mlp".into(),
+                    batch,
+                    data: vec![0.25; batch * 256].into(),
+                })
+                .unwrap();
+            assert_eq!(resp.logits.len(), batch * 4, "batch {batch}");
+            assert_eq!(resp.backend, "cpu");
+            assert!(resp.bucket >= batch);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn quant_override_serves_and_reports_backend() {
+        let manifest = synth_manifest();
+        let exec = Executor::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                backend: Some("quant".into()),
+                models: Some(vec!["cnn_s".into()]),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let resp = exec
+            .handle()
+            .infer(ExecRequest {
+                model: "cnn_s".into(),
+                batch: 2,
+                data: vec![0.5; 2 * 256].into(),
+            })
+            .unwrap();
+        assert_eq!(resp.backend, "quant");
+        assert_eq!(resp.logits.len(), 2 * 4);
+    }
+
+    #[test]
+    fn load_unload_cycle_on_cpu_backend() {
+        let manifest = synth_manifest();
+        let exec = Executor::spawn(
+            Arc::clone(&manifest),
+            ExecutorOptions {
+                models: Some(vec!["mlp".into()]),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = exec.handle();
+        // cnn_s not loaded yet → inference fails, load succeeds, then works.
+        assert!(h
+            .infer(ExecRequest {
+                model: "cnn_s".into(),
+                batch: 1,
+                data: vec![0.0; 256].into(),
+            })
+            .is_err());
+        assert!(h.load_model("cnn_s").unwrap());
+        assert!(!h.load_model("cnn_s").unwrap(), "second load is a no-op");
+        assert!(h
+            .infer(ExecRequest {
+                model: "cnn_s".into(),
+                batch: 1,
+                data: vec![0.0; 256].into(),
+            })
+            .is_ok());
+        assert!(h.unload_model("cnn_s").unwrap());
+        assert!(!h.unload_model("cnn_s").unwrap());
+    }
+
+    #[test]
+    fn backend_without_grammar_is_typed_unsupported() {
+        // A legacy HLO-only manifest forced onto the cpu backend must
+        // surface the typed BackendUnsupported (→ 409 at the coordinator).
+        let v = crate::json::parse(
+            r#"{"format_version":1,"input_shape":[4],"classes":["a","b"],
+                "normalize":{"mean":0,"std":1},"buckets":[1],
+                "models":{"legacy":{"param_count":1,"test_acc":0.9,
+                  "params_sha256":"s",
+                  "buckets":{"1":{"file":"legacy.hlo.txt","sha256":"s","bytes":1}}}}}"#,
+        )
+        .unwrap();
+        let manifest =
+            Arc::new(Manifest::from_value(std::path::PathBuf::from("/tmp"), &v).unwrap());
+        let err = Executor::spawn(
+            manifest,
+            ExecutorOptions {
+                backend: Some("cpu".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        let u = err
+            .downcast_ref::<backend::BackendUnsupported>()
+            .expect("expected typed BackendUnsupported");
+        assert_eq!(u.model, "legacy");
+        assert_eq!(u.backend, "cpu");
+    }
+
+    #[test]
+    fn unknown_backend_name_is_typed_unsupported() {
+        let manifest = synth_manifest();
+        let err = Executor::spawn(
+            manifest,
+            ExecutorOptions {
+                backend: Some("tpu".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.downcast_ref::<backend::BackendUnsupported>().is_some());
     }
 }

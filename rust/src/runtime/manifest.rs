@@ -17,6 +17,29 @@ pub struct ArtifactRef {
     pub bytes: u64,
 }
 
+/// One dense layer in the optional linear/MLP grammar (the substrate the
+/// `cpu`/`quant` backends execute). Offsets are in floats into the
+/// weights sidecar: weights row-major `[in][out]` at `w_off`, bias
+/// `[out]` at `b_off`.
+#[derive(Debug, Clone)]
+pub struct LayerRef {
+    pub op: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub act: String,
+    pub w_off: usize,
+    pub b_off: usize,
+}
+
+/// The flat little-endian f32 weights sidecar backing [`LayerRef`]s,
+/// sha-pinned like every other servable byte.
+#[derive(Debug, Clone)]
+pub struct WeightsRef {
+    pub file: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
 /// One servable model *version* (all its batch buckets). `name` is the
 /// pool-facing **slot**: version 1 keeps the bare model name (the legacy
 /// flat layout is byte-compatible), later versions are `"<model>@<v>"`
@@ -32,6 +55,13 @@ pub struct ModelEntry {
     pub params_sha256: String,
     /// Sorted ascending by bucket.
     pub buckets: Vec<ArtifactRef>,
+    /// Requested execution backend (`"xla"`, `"cpu"`, `"quant"`); `None`
+    /// defers to config/CLI selection (default XLA).
+    pub backend: Option<String>,
+    /// Linear/MLP layer grammar; empty for XLA-only models.
+    pub layers: Vec<LayerRef>,
+    /// Weights sidecar backing `layers`.
+    pub weights: Option<WeightsRef>,
 }
 
 impl ModelEntry {
@@ -162,6 +192,44 @@ impl Manifest {
             if bucket_refs.is_empty() {
                 bail!("model {name}: no buckets");
             }
+            let mut layers = Vec::new();
+            if let Some(items) = m.get("layers").and_then(Value::as_arr) {
+                for (i, l) in items.iter().enumerate() {
+                    let dim = |key: &str| -> Result<usize> {
+                        l.get(key).and_then(Value::as_usize).ok_or_else(|| {
+                            anyhow!("model {name}: layer {i}: missing/bad '{key}'")
+                        })
+                    };
+                    layers.push(LayerRef {
+                        op: l
+                            .get("op")
+                            .and_then(Value::as_str)
+                            .unwrap_or("linear")
+                            .to_string(),
+                        in_dim: dim("in")?,
+                        out_dim: dim("out")?,
+                        act: l.get("act").and_then(Value::as_str).unwrap_or("").to_string(),
+                        w_off: dim("w_off")?,
+                        b_off: dim("b_off")?,
+                    });
+                }
+            }
+            let weights = match m.get("weights") {
+                Some(w) => Some(WeightsRef {
+                    file: w
+                        .get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("model {name}: weights missing file"))?
+                        .to_string(),
+                    sha256: w
+                        .get("sha256")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("model {name}: weights missing sha256"))?
+                        .to_string(),
+                    bytes: w.get("bytes").and_then(Value::as_u64).unwrap_or(0),
+                }),
+                None => None,
+            };
             models.push(ModelEntry {
                 name: name.clone(),
                 version: 1,
@@ -173,6 +241,12 @@ impl Manifest {
                     .unwrap_or("")
                     .to_string(),
                 buckets: bucket_refs,
+                backend: m
+                    .get("backend")
+                    .and_then(Value::as_str)
+                    .map(str::to_string),
+                layers,
+                weights,
             });
         }
         if models.is_empty() {
@@ -320,6 +394,39 @@ mod tests {
         assert_eq!(e.bucket_for(4).unwrap().bucket, 4);
         assert!(e.bucket_for(5).is_none());
         assert_eq!(e.max_bucket(), 4);
+    }
+
+    #[test]
+    fn parses_backend_and_layer_grammar() {
+        let v = json::parse(
+            r#"{"format_version":1,"input_shape":[2],"classes":["a","b"],
+                "normalize":{"mean":0,"std":1},"buckets":[1],
+                "models":{"m":{"param_count":8,"test_acc":0.9,
+                  "params_sha256":"s",
+                  "backend":"cpu",
+                  "layers":[{"op":"linear","in":2,"out":2,"act":"relu","w_off":0,"b_off":4}],
+                  "weights":{"file":"m.weights.f32","sha256":"s","bytes":24},
+                  "buckets":{"1":{"file":"m.weights.f32","sha256":"s","bytes":24}}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap();
+        let e = m.model("m").unwrap();
+        assert_eq!(e.backend.as_deref(), Some("cpu"));
+        assert_eq!(e.layers.len(), 1);
+        assert_eq!(e.layers[0].in_dim, 2);
+        assert_eq!(e.layers[0].act, "relu");
+        assert_eq!(e.layers[0].b_off, 4);
+        assert_eq!(e.weights.as_ref().unwrap().file, "m.weights.f32");
+    }
+
+    #[test]
+    fn backend_fields_default_empty() {
+        // The legacy HLO-only manifest parses with no backend grammar.
+        let m = Manifest::from_value(PathBuf::from("/tmp"), &fake_manifest_value()).unwrap();
+        let e = m.model("m1").unwrap();
+        assert!(e.backend.is_none());
+        assert!(e.layers.is_empty());
+        assert!(e.weights.is_none());
     }
 
     #[test]

@@ -1,26 +1,37 @@
 //! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them on XLA PJRT — the only place the `xla` crate is
-//! touched.
+//! (or the synthetic CPU-backend set from [`synth`]) and executes them
+//! through pluggable [`backend`] implementations — XLA PJRT, the blocked
+//! SIMD CPU path, or quantized u8 — behind one [`backend::Backend`] trait.
 //!
-//! Key design point: the xla handle types (`PjRtClient`,
-//! `PjRtLoadedExecutable`, `Literal`) wrap raw pointers and are `!Send`, so
-//! they cannot be shared across request threads. Instead a **device
-//! executor thread** owns one `PjRtClient` plus all compiled executables,
-//! and request threads talk to it over an mpsc channel
-//! ([`executor::ExecutorHandle`] is `Clone + Send + Sync`). This is also the
-//! faithful model of the paper's §2.2: one shared device, all N ensemble
-//! models resident in its memory, forward calls serialized on the device
-//! queue. Horizontal scaling (§2.2 "Gunicorn workers") is
-//! [`pool::ExecutorPool`]: W executor threads, each owning a full client.
+//! Key design point: backend instances (like the xla handle types
+//! `PjRtClient`, `PjRtLoadedExecutable`, `Literal`, which wrap raw
+//! pointers and are `!Send`) cannot be shared across request threads.
+//! Instead a **device executor thread** owns every backend slot plus the
+//! [`arena::BufferArena`] their outputs are carved from, and request
+//! threads talk to it over an mpsc channel ([`executor::ExecutorHandle`]
+//! is `Clone + Send + Sync`). This is also the faithful model of the
+//! paper's §2.2: one shared device, all N ensemble models resident in its
+//! memory, forward calls serialized on the device queue. Horizontal
+//! scaling (§2.2 "Gunicorn workers") is [`pool::ExecutorPool`]: W
+//! executor threads, each owning a full device.
 
+pub mod arena;
+pub mod backend;
 pub mod executor;
 pub mod manifest;
 pub mod pool;
 pub mod supervise;
+pub mod synth;
 pub mod tensor;
 
-pub use executor::{ExecRequest, ExecResponse, Executor, ExecutorHandle, WorkerCrashed};
-pub use manifest::{slot_name, split_slot, ArtifactRef, Manifest, ModelEntry};
+pub use arena::BufferArena;
+pub use backend::{Backend, BackendKind, BackendUnsupported, ModelGraph};
+pub use executor::{
+    ExecRequest, ExecResponse, Executor, ExecutorHandle, ExecutorOptions, WorkerCrashed,
+};
+pub use manifest::{
+    slot_name, split_slot, ArtifactRef, LayerRef, Manifest, ModelEntry, WeightsRef,
+};
 pub use pool::{ExecutorPool, PoolEvent};
 pub use supervise::{run_supervisor, Backoff, SupervisorOptions};
 pub use tensor::{DType, TensorView};

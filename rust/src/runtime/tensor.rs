@@ -146,6 +146,26 @@ impl std::ops::Deref for TensorView {
     }
 }
 
+/// Content equality (the viewed floats), not buffer identity — two views
+/// into different allocations with the same values compare equal.
+impl PartialEq for TensorView {
+    fn eq(&self, other: &TensorView) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for TensorView {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for TensorView {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
 impl From<Vec<f32>> for TensorView {
     /// The one conversion at the parse boundary; everything after it is
     /// refcounted sharing.

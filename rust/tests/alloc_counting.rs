@@ -1,0 +1,130 @@
+//! Steady-state zero-allocation pin for the pure-Rust backends.
+//!
+//! A counting allocator wraps `System`; after one warm-up flush has
+//! populated the arena's shelves and scratch free list, repeated
+//! `Backend::run` calls on the CPU and quant paths must perform **zero**
+//! heap allocations — the property the `BufferArena` exists to provide.
+//!
+//! Single `#[test]` on purpose: the counter is process-global, so a
+//! second test thread allocating during the measured window would
+//! produce false positives.
+
+use flexserve::runtime::backend::{
+    Act, Backend, CpuBackend, CpuWorkers, Layer, ModelGraph, QuantBackend, QuantModel,
+};
+use flexserve::runtime::BufferArena;
+use flexserve::util::Prng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct Counting;
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// A 2-layer MLP big enough that the first layer clears the CPU
+/// backend's inline threshold (8 x 64 x 96 = 49152 MACs), so the
+/// parallel fork/join path is inside the measured window too.
+fn graph() -> Arc<ModelGraph> {
+    let mut prng = Prng::new(0xA110C);
+    let dims = [64usize, 96, 8];
+    let mut layers = Vec::new();
+    let mut store = Vec::new();
+    for w in dims.windows(2) {
+        let (i, o) = (w[0], w[1]);
+        let w_off = store.len();
+        for _ in 0..i * o {
+            store.push((prng.normal() as f32) / (i as f32).sqrt());
+        }
+        let b_off = store.len();
+        for _ in 0..o {
+            store.push(prng.normal() as f32 * 0.1);
+        }
+        layers.push(Layer {
+            in_dim: i,
+            out_dim: o,
+            act: Act::Relu,
+            w_off,
+            b_off,
+        });
+    }
+    layers.last_mut().unwrap().act = Act::Linear;
+    Arc::new(ModelGraph::new(layers, store.into()).unwrap())
+}
+
+fn measure_steady_state(be: &mut dyn Backend, feed: &[f32], arena: &mut BufferArena) -> u64 {
+    // Warm-up: first flushes populate the arena (scratch capacities, the
+    // output shelf) and fault in any lazy thread-local state.
+    for _ in 0..3 {
+        let out = be.run(feed, arena).unwrap();
+        drop(out); // release the shelf buffer before the next checkout
+    }
+    let before = allocs();
+    for _ in 0..10 {
+        let out = be.run(feed, arena).unwrap();
+        drop(out);
+    }
+    allocs() - before
+}
+
+#[test]
+fn steady_state_flush_allocates_nothing() {
+    let g = graph();
+    let bucket = 8usize;
+    let mut prng = Prng::new(7);
+    let feed: Vec<f32> = (0..bucket * g.in_dim).map(|_| prng.normal() as f32).collect();
+
+    // Sanity: the counter sees ordinary allocation traffic.
+    let before = allocs();
+    let probe = vec![0u8; 4096];
+    assert!(allocs() > before, "counting allocator is not installed");
+    drop(probe);
+
+    let mut arena = BufferArena::new(0);
+
+    // CPU path, multi-worker so the epoch-barrier dispatch is measured.
+    let workers = Arc::new(CpuWorkers::new(3));
+    let mut cpu = CpuBackend::new(Arc::clone(&g), bucket, workers);
+    let cpu_allocs = measure_steady_state(&mut cpu, &feed, &mut arena);
+    assert_eq!(
+        cpu_allocs, 0,
+        "cpu backend allocated {cpu_allocs} times across 10 steady-state flushes"
+    );
+
+    // Quant path shares the same arena (as it does on a device thread).
+    let qm = Arc::new(QuantModel::from_graph(&g));
+    let mut quant = QuantBackend::new(qm, bucket);
+    let quant_allocs = measure_steady_state(&mut quant, &feed, &mut arena);
+    assert_eq!(
+        quant_allocs, 0,
+        "quant backend allocated {quant_allocs} times across 10 steady-state flushes"
+    );
+}

@@ -1,0 +1,189 @@
+//! Cross-backend differential tests.
+//!
+//! Always-on half (needs no compiled XLA artifacts): every synthetic-zoo
+//! model, every manifest bucket, seeded inputs —
+//!
+//! - `CpuBackend` must match the scalar `ModelGraph::forward_reference`
+//!   ground truth within 1e-4 per logit;
+//! - `QuantBackend` must agree with the f32 path on argmax for ≥ 90% of
+//!   rows (quantization shifts logits, not usually the winner).
+//!
+//! Artifact-gated half: when real compiled artifacts exist AND an entry
+//! carries the layer grammar + weights sidecar, the CPU path must match
+//! the XLA executable's output within 1e-4 — same weights, two
+//! independent lowering pipelines. Skips silently when artifacts are
+//! absent so CI stays device-free.
+
+use flexserve::runtime::backend::{CpuBackend, CpuWorkers, QuantBackend, QuantModel};
+use flexserve::runtime::{BufferArena, Manifest, ModelGraph};
+use flexserve::runtime::{backend::XlaBackend, synth};
+use flexserve::util::Prng;
+use std::sync::Arc;
+
+/// Seeded feed for one (model, bucket) pair — deterministic across runs
+/// and across the two backends being diffed.
+fn seeded_feed(prng: &mut Prng, rows: usize, elems: usize) -> Vec<f32> {
+    (0..rows * elems).map(|_| prng.normal() as f32).collect()
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+#[test]
+fn cpu_matches_reference_across_zoo_and_buckets() {
+    let dir = synth::ensure_synthetic();
+    let m = Manifest::load(&dir).expect("synthetic manifest loads");
+    let workers = Arc::new(CpuWorkers::new(2));
+    let mut arena = BufferArena::new(0);
+    let elems = m.sample_elems();
+    let mut checked = 0usize;
+    for entry in &m.models {
+        let graph = Arc::new(ModelGraph::load(&m, entry, true).expect("graph loads"));
+        let mut prng = Prng::new(0xD1FF + entry.name.len() as u64);
+        for art in &entry.buckets {
+            let rows = art.bucket;
+            let feed = seeded_feed(&mut prng, rows, elems);
+            let want = graph.forward_reference(&feed, rows);
+            let mut be = CpuBackend::new(Arc::clone(&graph), rows, Arc::clone(&workers));
+            let got = be.run(&feed, &mut arena).expect("cpu run");
+            assert_eq!(got.len(), want.len(), "{} b{rows}", entry.name);
+            for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{} b{rows} logit {i}: cpu {a} vs reference {b}",
+                    entry.name
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 12, "zoo x buckets should yield many slots, got {checked}");
+}
+
+#[test]
+fn quant_argmax_agrees_with_f32_across_zoo_and_buckets() {
+    let dir = synth::ensure_synthetic();
+    let m = Manifest::load(&dir).expect("synthetic manifest loads");
+    let mut arena = BufferArena::new(0);
+    let elems = m.sample_elems();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for entry in &m.models {
+        let graph = Arc::new(ModelGraph::load(&m, entry, true).expect("graph loads"));
+        let qm = Arc::new(QuantModel::from_graph(&graph));
+        let mut prng = Prng::new(0x9_0A17 + entry.name.len() as u64);
+        for art in &entry.buckets {
+            let rows = art.bucket;
+            let feed = seeded_feed(&mut prng, rows, elems);
+            let want = graph.forward_reference(&feed, rows);
+            let mut be = QuantBackend::new(Arc::clone(&qm), rows);
+            let got = be.run(&feed, &mut arena).expect("quant run");
+            let classes = graph.out_dim;
+            for r in 0..rows {
+                total += 1;
+                if argmax(&want[r * classes..(r + 1) * classes])
+                    == argmax(&got[r * classes..(r + 1) * classes])
+                {
+                    agree += 1;
+                }
+            }
+        }
+    }
+    // 3 models x buckets [1,2,4,8,16,32] = 189 rows; u8 quantization must
+    // keep at least 90% of argmax decisions.
+    assert!(total >= 100, "expected a large row population, got {total}");
+    let pct = agree * 100 / total;
+    assert!(pct >= 90, "quant argmax agreement {agree}/{total} ({pct}%) < 90%");
+}
+
+#[test]
+fn quant_run_is_deterministic() {
+    let dir = synth::ensure_synthetic();
+    let m = Manifest::load(&dir).expect("synthetic manifest loads");
+    let entry = &m.models[0];
+    let graph = Arc::new(ModelGraph::load(&m, entry, true).unwrap());
+    let qm = Arc::new(QuantModel::from_graph(&graph));
+    let mut arena = BufferArena::new(0);
+    let mut prng = Prng::new(42);
+    let feed = seeded_feed(&mut prng, 4, m.sample_elems());
+    let mut be = QuantBackend::new(qm, 4);
+    let first = be.run(&feed, &mut arena).unwrap().to_vec();
+    let second = be.run(&feed, &mut arena).unwrap().to_vec();
+    assert_eq!(first, second);
+}
+
+/// CPU ≡ XLA on real artifacts: both paths consume the same checkpoint
+/// (HLO for the device, the f32 sidecar for the CPU grammar), so their
+/// logits must agree to float tolerance. Requires `make artifacts` output
+/// whose manifest entries carry `layers`; skips otherwise.
+#[test]
+fn cpu_matches_xla_on_real_artifacts() {
+    let dir = std::env::var_os("FLEXSERVE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping cpu_matches_xla_on_real_artifacts: no artifacts at {dir:?}");
+        return;
+    }
+    let m = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping cpu_matches_xla_on_real_artifacts: manifest unreadable: {e:#}");
+            return;
+        }
+    };
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping cpu_matches_xla_on_real_artifacts: no PJRT client: {e:?}");
+            return;
+        }
+    };
+    let workers = Arc::new(CpuWorkers::new(2));
+    let mut arena = BufferArena::new(0);
+    let elems = m.sample_elems();
+    let mut diffed = 0usize;
+    for entry in &m.models {
+        if entry.layers.is_empty() || entry.weights.is_none() {
+            continue; // XLA-only checkpoint: nothing to diff against.
+        }
+        let graph = Arc::new(ModelGraph::load(&m, entry, true).expect("sidecar graph loads"));
+        let mut prng = Prng::new(0xA2E4 + entry.name.len() as u64);
+        for art in &entry.buckets {
+            let rows = art.bucket;
+            let path = m.artifact_path(art);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .unwrap_or_else(|e| panic!("parsing HLO {path:?}: {e:?}"));
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .unwrap_or_else(|e| panic!("compiling {}: {e:?}", art.file));
+            let mut dev = XlaBackend::new(exe, rows, &m.input_shape);
+            let mut cpu = CpuBackend::new(Arc::clone(&graph), rows, Arc::clone(&workers));
+            let feed = seeded_feed(&mut prng, rows, elems);
+            let want = dev.run(&feed, &mut arena).expect("xla run");
+            let got = cpu.run(&feed, &mut arena).expect("cpu run");
+            assert_eq!(got.len(), want.len(), "{} b{rows}", entry.name);
+            for i in 0..got.len() {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-4,
+                    "{} b{rows} logit {i}: cpu {} vs xla {}",
+                    entry.name,
+                    got[i],
+                    want[i]
+                );
+            }
+            diffed += 1;
+        }
+    }
+    if diffed == 0 {
+        eprintln!("cpu_matches_xla_on_real_artifacts: no entries carry layers — nothing diffed");
+    } else {
+        eprintln!("cpu_matches_xla_on_real_artifacts: {diffed} (model x bucket) slots agree");
+    }
+}

@@ -8,8 +8,8 @@
 //! `gateway.no_backend` 503 — never a hang), and an empty fleet answers
 //! the typed 503.
 //!
-//! The device-backed differential (artifact-gated, like the other
-//! integration binaries) runs TWO full `serve` stacks behind a gateway
+//! The full-stack differential (always-on: real artifacts when present,
+//! else the synthetic CPU-backend set) runs TWO `serve` stacks behind a gateway
 //! whose backend ids are chosen so the ring splits the three models
 //! across both processes, then asserts gateway responses are
 //! byte-identical to a direct backend hit for both wire formats.
@@ -27,21 +27,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Real artifacts when `make artifacts` produced them, else the seeded
+/// synthetic CPU-backend set — the differential test is always-on either way.
 fn artifact_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn has_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
-}
-
-macro_rules! require_artifacts {
-    () => {
-        if !has_artifacts() {
-            eprintln!("skipping: artifacts missing — run `make artifacts` first");
-            return;
-        }
-    };
+    flexserve::runtime::synth::ensure_artifacts()
 }
 
 // ---------------------------------------------------------------------------
@@ -536,7 +525,6 @@ fn model_keyed_routes_stick_and_introspection_is_local() {
 /// protocols, scatter-gather included.
 #[test]
 fn gateway_over_real_backends_is_byte_invisible() {
-    require_artifacts!();
     let spawn_stack = || {
         let mut config = ServeConfig::default();
         config.addr = "127.0.0.1:0".into();

@@ -4,8 +4,8 @@
 //! under one static mutex (`guard()`) — a subscriber in one test must
 //! never observe another test's publishes. Device-free tests drive the
 //! REAL `MuxService` session loop over echo executors; the differential
-//! test (artifact-gated) pins mux ≡ v1 byte-identity against the full
-//! stack.
+//! test pins mux ≡ v1 byte-identity against the full stack — booting from
+//! real artifacts when present, else the synthetic CPU-backend set.
 
 use flexserve::config::ServeConfig;
 use flexserve::coordinator::{serve, BreakerConfig, Breakers, Metrics};
@@ -35,12 +35,10 @@ fn sink() -> Arc<Metrics> {
     Arc::clone(m)
 }
 
+/// Real artifacts when `make artifacts` produced them, else the seeded
+/// synthetic CPU-backend set — the differential test is always-on either way.
 fn artifact_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn has_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
+    flexserve::runtime::synth::ensure_artifacts()
 }
 
 /// An echo mux endpoint: replies with the request payload, after an
@@ -439,10 +437,6 @@ fn registry_promote_surfaces_on_event_stream() {
 #[test]
 fn mux_request_matches_v1_predict_byte_for_byte() {
     let _g = guard();
-    if !has_artifacts() {
-        eprintln!("skipping: artifacts missing — run `make artifacts` first");
-        return;
-    }
     let mut config = ServeConfig::default();
     config.addr = "127.0.0.1:0".into();
     config.artifacts = artifact_dir();

@@ -1,5 +1,6 @@
 //! Registry integration: the full versioned-rollout lifecycle on a live
-//! server (device + real artifacts). Builds a temp *versioned* artifact
+//! server (always-on: real artifacts when present, else the synthetic
+//! CPU-backend set). Builds a temp *versioned* artifact
 //! layout out of the flat one (`<model>/2/` with its own manifest and a
 //! distinct `params_sha256`), then drives: load v2 alongside v1 → 10%
 //! canary with a deterministic per-request-id hash split → injected
@@ -22,21 +23,10 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
+/// Real artifacts when `make artifacts` produced them, else the seeded
+/// synthetic CPU-backend set — this suite is always-on either way.
 fn artifact_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn has_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
-}
-
-macro_rules! require_artifacts {
-    () => {
-        if !has_artifacts() {
-            eprintln!("skipping: artifacts missing — run `make artifacts` first");
-            return;
-        }
-    };
+    flexserve::runtime::synth::ensure_artifacts()
 }
 
 /// The versioned temp layout: a copy of the flat artifacts plus
@@ -77,6 +67,47 @@ fn write_version(base: &Manifest, dst: &Path, model: &str, version: u32, params_
             ]),
         ));
     }
+    // Propagate the execution-backend grammar when the base entry carries
+    // it (synthetic CPU-backend artifacts): the version store loads each
+    // version from its own manifest, so backend/layers/weights must
+    // travel with it just like the buckets do.
+    let mut model_doc = vec![
+        ("param_count".to_string(), Value::from(entry.param_count)),
+        ("test_acc".to_string(), Value::from(entry.test_acc)),
+        ("params_sha256".to_string(), Value::from(params_sha)),
+    ];
+    if let Some(backend) = &entry.backend {
+        model_doc.push(("backend".to_string(), Value::from(backend.as_str())));
+    }
+    if !entry.layers.is_empty() {
+        let layers: Vec<Value> = entry
+            .layers
+            .iter()
+            .map(|l| {
+                json::obj([
+                    ("op", Value::from(l.op.as_str())),
+                    ("in", Value::from(l.in_dim)),
+                    ("out", Value::from(l.out_dim)),
+                    ("act", Value::from(l.act.as_str())),
+                    ("w_off", Value::from(l.w_off)),
+                    ("b_off", Value::from(l.b_off)),
+                ])
+            })
+            .collect();
+        model_doc.push(("layers".to_string(), Value::Arr(layers)));
+    }
+    if let Some(w) = &entry.weights {
+        std::fs::copy(base.dir.join(&w.file), vdir.join(&w.file)).unwrap();
+        model_doc.push((
+            "weights".to_string(),
+            json::obj([
+                ("file", Value::from(w.file.as_str())),
+                ("sha256", Value::from(w.sha256.as_str())),
+                ("bytes", Value::from(w.bytes)),
+            ]),
+        ));
+    }
+    model_doc.push(("buckets".to_string(), Value::Obj(buckets)));
     let doc = json::obj([
         ("format_version", Value::from(1u64)),
         (
@@ -100,15 +131,7 @@ fn write_version(base: &Manifest, dst: &Path, model: &str, version: u32, params_
         ),
         (
             "models",
-            Value::Obj(vec![(
-                model.to_string(),
-                json::obj([
-                    ("param_count", Value::from(entry.param_count)),
-                    ("test_acc", Value::from(entry.test_acc)),
-                    ("params_sha256", Value::from(params_sha)),
-                    ("buckets", Value::Obj(buckets)),
-                ]),
-            )]),
+            Value::Obj(vec![(model.to_string(), Value::Obj(model_doc))]),
         ),
     ]);
     std::fs::write(vdir.join("manifest.json"), json::to_string_pretty(&doc)).unwrap();
@@ -219,7 +242,6 @@ fn audit_events(c: &mut Client) -> Vec<(String, String)> {
 
 #[test]
 fn full_rollout_lifecycle_canary_autorollback_promote() {
-    require_artifacts!();
     let _g = GUARD.lock().unwrap();
     let st = stack();
     let mut c = client();
@@ -462,7 +484,6 @@ fn full_rollout_lifecycle_canary_autorollback_promote() {
 
 #[test]
 fn corrupted_version_load_is_typed_provenance_error() {
-    require_artifacts!();
     let _g = GUARD.lock().unwrap();
     let st = stack();
     let mut c = client();
@@ -486,9 +507,10 @@ fn corrupted_version_load_is_typed_provenance_error() {
                 .next()
                 .unwrap(),
         );
-    let mut text = std::fs::read_to_string(&victim).unwrap();
-    text.push_str("\n// tampered");
-    std::fs::write(&victim, text).unwrap();
+    // Byte append, not text: the artifact may be a binary weights sidecar.
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes.extend_from_slice(b"\n// tampered");
+    std::fs::write(&victim, bytes).unwrap();
 
     let resp = c.post("/v1/models/cnn_s/load?version=2", Vec::new()).unwrap();
     assert_eq!(

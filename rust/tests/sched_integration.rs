@@ -1,8 +1,9 @@
 //! Overload / backpressure integration: a live server with a TINY queue
 //! cap and a long fixed window, so admission control, deadlines, and
-//! drain-on-shutdown are deterministic. Device-backed (self-skips without
-//! artifacts); tests share one server and serialize on a guard because
-//! each one manipulates the global queue state.
+//! drain-on-shutdown are deterministic. Always-on: boots from real
+//! artifacts when present, else the synthetic CPU-backend set; tests
+//! share one server and serialize on a guard because each one
+//! manipulates the global queue state.
 
 use flexserve::config::ServeConfig;
 use flexserve::coordinator::{serve, ApiError, Metrics, SchedConfig, Scheduler, ServerState, TargetKey};
@@ -14,21 +15,10 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
+/// Real artifacts when `make artifacts` produced them, else the seeded
+/// synthetic CPU-backend set — this suite is always-on either way.
 fn artifact_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn has_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
-}
-
-macro_rules! require_artifacts {
-    () => {
-        if !has_artifacts() {
-            eprintln!("skipping: artifacts missing — run `make artifacts` first");
-            return;
-        }
-    };
+    flexserve::runtime::synth::ensure_artifacts()
 }
 
 struct Stack {
@@ -107,7 +97,6 @@ fn with_full_queue(probe: impl FnOnce()) {
 
 #[test]
 fn full_queue_sheds_429_with_retry_after_on_both_protocols() {
-    require_artifacts!();
     let _guard = GUARD.lock().unwrap();
     let st = stack();
     with_full_queue(|| {
@@ -178,7 +167,6 @@ fn full_queue_sheds_429_with_retry_after_on_both_protocols() {
 
 #[test]
 fn expired_in_queue_request_sheds_504() {
-    require_artifacts!();
     let _guard = GUARD.lock().unwrap();
     let st = stack();
     let addr = st.handle.addr;
@@ -207,7 +195,6 @@ fn expired_in_queue_request_sheds_504() {
 
 #[test]
 fn legacy_alias_flattens_shed_status_but_keeps_code_and_hint() {
-    require_artifacts!();
     let _guard = GUARD.lock().unwrap();
     let st = stack();
     with_full_queue(|| {
@@ -223,7 +210,6 @@ fn legacy_alias_flattens_shed_status_but_keeps_code_and_hint() {
 
 #[test]
 fn shutdown_drains_queued_requests() {
-    require_artifacts!();
     let _guard = GUARD.lock().unwrap();
     // A scheduler of our own (over the same live ensemble) so dropping it
     // doesn't disturb the shared server.
@@ -276,7 +262,6 @@ fn shutdown_drains_queued_requests() {
 
 #[test]
 fn bounded_drain_sheds_queued_requests_typed() {
-    require_artifacts!();
     let _guard = GUARD.lock().unwrap();
     let ensemble = stack().state.ensemble.clone();
     let metrics = Arc::new(Metrics::new());

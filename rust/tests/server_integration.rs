@@ -1,5 +1,8 @@
-//! End-to-end integration: HTTP server + coordinator + runtime + real
-//! artifacts. One shared server per test binary (device compile is ~6 s).
+//! End-to-end integration: HTTP server + coordinator + runtime. One
+//! shared server per test binary (device compile is ~6 s). Always-on:
+//! boots from real artifacts when `make artifacts` produced them, else
+//! the synthetic CPU-backend set; only the trained-numerics accuracy
+//! check still requires the real zoo.
 
 use flexserve::baseline::{serve_baseline, BaselineConfig};
 use flexserve::config::ServeConfig;
@@ -12,24 +15,20 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
+/// Real artifacts when `make artifacts` produced them, else the seeded
+/// synthetic CPU-backend set — the suite is always-on either way.
 fn artifact_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    flexserve::runtime::synth::ensure_artifacts()
 }
 
-fn has_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
-}
-
-/// Device-backed tests skip (rather than fail) when `make artifacts` has
-/// not run — CI without the Python toolchain still exercises every
-/// device-free test.
-macro_rules! require_artifacts {
-    () => {
-        if !has_artifacts() {
-            eprintln!("skipping: artifacts missing — run `make artifacts` first");
-            return;
-        }
-    };
+/// Tests that need TRAINED models (real accuracy) skip rather than fail
+/// when `make artifacts` has not run; the synthetic fallback is random
+/// weights, so its serving accuracy means nothing.
+fn has_trained_artifacts() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("manifest.json")
+        .exists()
 }
 
 struct Stack {
@@ -77,7 +76,6 @@ fn predict_body(batch: usize, seed: u64) -> Value {
 
 #[test]
 fn healthz_and_models() {
-    require_artifacts!();
     let mut c = client();
     let r = c.get("/healthz").unwrap();
     assert_eq!(r.status, 200);
@@ -101,7 +99,6 @@ fn healthz_and_models() {
 
 #[test]
 fn predict_paper_wire_format() {
-    require_artifacts!();
     let mut c = client();
     let r = c.post_json("/predict", &predict_body(4, 1)).unwrap();
     assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
@@ -127,7 +124,6 @@ fn predict_paper_wire_format() {
 #[test]
 fn predict_all_batch_sizes_including_nonbucket() {
     // §2.3 — any batch size works, bucket-aligned or not, even > max bucket.
-    require_artifacts!();
     let mut c = client();
     for batch in [1, 2, 3, 5, 7, 8, 13, 32, 40] {
         let r = c.post_json("/predict", &predict_body(batch, batch as u64)).unwrap();
@@ -143,7 +139,6 @@ fn predict_all_batch_sizes_including_nonbucket() {
 
 #[test]
 fn predict_with_policy_fusion() {
-    require_artifacts!();
     let mut c = client();
     // Build a batch with crisp crosses at rows 0 and 2 (blank row 1).
     let mut rng = Prng::new(33);
@@ -176,7 +171,6 @@ fn predict_with_policy_fusion() {
 
 #[test]
 fn predict_model_subset() {
-    require_artifacts!();
     let mut c = client();
     let mut body = predict_body(2, 9);
     if let Value::Obj(m) = &mut body {
@@ -195,7 +189,6 @@ fn predict_model_subset() {
 
 #[test]
 fn predict_validation_errors() {
-    require_artifacts!();
     let mut c = client();
     let cases: Vec<(&str, Value)> = vec![
         ("no data", json::obj([("batch", Value::from(1usize))])),
@@ -259,7 +252,6 @@ fn predict_validation_errors() {
 fn concurrent_requests_coalesce_in_batcher() {
     // Fire 8 concurrent single-frame requests; the 1 ms batching window
     // should coalesce at least some of them (asserted via metrics).
-    require_artifacts!();
     let addr = stack().handle.addr;
     let before = stack().state.metrics.counter("rows_total");
     let threads: Vec<_> = (0..8)
@@ -306,7 +298,6 @@ fn single_model_requests_coalesce_in_their_own_queue() {
     // The fast path rides the scheduler now: 16 concurrent same-model
     // requests inside a 5 ms fixed window must share device batches —
     // the seed bypassed batching entirely here.
-    require_artifacts!();
     let mut body = predict_body(1, 321);
     if let Value::Obj(m) = &mut body {
         m.push(("detail".into(), Value::Bool(true)));
@@ -317,7 +308,6 @@ fn single_model_requests_coalesce_in_their_own_queue() {
 
 #[test]
 fn subset_requests_coalesce_in_their_own_queue() {
-    require_artifacts!();
     let mut body = predict_body(1, 654);
     if let Value::Obj(m) = &mut body {
         m.push((
@@ -332,7 +322,6 @@ fn subset_requests_coalesce_in_their_own_queue() {
 
 #[test]
 fn metrics_exposed() {
-    require_artifacts!();
     let mut c = client();
     let _ = c.post_json("/predict", &predict_body(1, 77)).unwrap();
     let r = c.get("/metrics").unwrap();
@@ -348,8 +337,13 @@ fn metrics_exposed() {
 fn accuracy_on_labelled_workload_matches_manifest() {
     // Serve 200 labelled frames and check each model's serving accuracy is
     // within tolerance of its recorded test accuracy — the end-to-end
-    // "numbers are right" check through HTTP + JSON + PJRT.
-    require_artifacts!();
+    // "numbers are right" check through HTTP + JSON + PJRT. Trained
+    // weights only — the synthetic fallback is random and classifies
+    // nothing.
+    if !has_trained_artifacts() {
+        eprintln!("skipping: trained artifacts missing — run `make artifacts` first");
+        return;
+    }
     let mut c = client();
     let mut rng = Prng::new(4242);
     let n_total = 200usize;
@@ -388,7 +382,6 @@ fn accuracy_on_labelled_workload_matches_manifest() {
 #[test]
 fn predict_pgm_b64_frames() {
     // §2.3 camera wire format: base64 binary-PGM frames.
-    require_artifacts!();
     let mut c = client();
     let mut rng = Prng::new(55);
     let frames: Vec<Value> = (0..3)
@@ -433,7 +426,6 @@ fn tampered_artifact_fails_provenance_gate() {
     // Copy artifacts, flip one byte in a weight constant, expect the
     // SHA-256 verification to refuse to serve (the paper's provenance
     // argument, enforced).
-    require_artifacts!();
     let src = artifact_dir();
     let dst = std::env::temp_dir().join("flexserve_tampered");
     let _ = std::fs::remove_dir_all(&dst);
@@ -442,13 +434,15 @@ fn tampered_artifact_fails_provenance_gate() {
         let entry = entry.unwrap();
         std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
     }
-    // Tamper: append junk to one artifact.
-    let victim = dst.join("mlp_b1.hlo.txt");
-    let mut text = std::fs::read_to_string(&victim).unwrap();
-    text.push_str("\n// tampered");
-    std::fs::write(&victim, text).unwrap();
-
+    // Tamper: append junk bytes to mlp's first bucket artifact — the
+    // manifest names it, so this works for the HLO layout and the
+    // synthetic weights-sidecar layout alike.
     let manifest = flexserve::runtime::Manifest::load(&dst).unwrap();
+    let victim = dst.join(&manifest.model("mlp").unwrap().buckets[0].file);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes.extend_from_slice(b"\n// tampered");
+    std::fs::write(&victim, bytes).unwrap();
+
     let err = manifest.verify_all().unwrap_err();
     assert!(format!("{err:#}").contains("provenance"), "{err:#}");
 
@@ -473,7 +467,6 @@ fn missing_manifest_is_clear_error() {
 
 #[test]
 fn cli_models_and_verify() {
-    require_artifacts!();
     let bin = env!("CARGO_BIN_EXE_flexserve");
     let out = std::process::Command::new(bin)
         .args(["models", "--artifacts"])
@@ -525,7 +518,6 @@ fn baseline_addr() -> std::net::SocketAddr {
 
 #[test]
 fn baseline_fixed_batch_contract() {
-    require_artifacts!();
     let mut c = Client::connect(baseline_addr()).unwrap();
     let mut rng = Prng::new(8);
     let (data, _) = workload::make_batch(&mut rng, 4);
@@ -573,7 +565,6 @@ fn error_code(r: &flexserve::http::Response) -> String {
 
 #[test]
 fn middleware_request_ids_and_route_metrics() {
-    require_artifacts!();
     let mut c = client();
     // Request-id middleware: generated when absent, echoed when supplied.
     let r = c.get("/healthz").unwrap();
@@ -593,7 +584,6 @@ fn middleware_request_ids_and_route_metrics() {
 
 #[test]
 fn v1_aliases_share_handlers_with_legacy_routes() {
-    require_artifacts!();
     let mut c = client();
     // POST /v1/predict serves the same paper wire format as /predict.
     let v = c
@@ -634,7 +624,6 @@ fn v1_aliases_share_handlers_with_legacy_routes() {
 
 #[test]
 fn single_model_fast_path() {
-    require_artifacts!();
     let mut c = client();
     let r = c.post_json("/v1/models/mlp/predict", &predict_body(3, 21)).unwrap();
     assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
@@ -658,7 +647,6 @@ fn single_model_fast_path() {
 
 #[test]
 fn query_params_override_body_flags() {
-    require_artifacts!();
     let mut c = client();
     let mut body = predict_body(1, 31);
     if let Value::Obj(m) = &mut body {
@@ -727,7 +715,6 @@ fn restore_full_membership(c: &mut Client) {
 
 #[test]
 fn lifecycle_unload_then_predict_then_load() {
-    require_artifacts!();
     let _guard = LIFECYCLE_GUARD.lock().unwrap();
     let st = lifecycle_stack();
     let mut c = Client::connect(st.handle.addr).unwrap();
@@ -785,7 +772,6 @@ fn lifecycle_unload_then_predict_then_load() {
 
 #[test]
 fn put_ensemble_sets_membership_atomically() {
-    require_artifacts!();
     let _guard = LIFECYCLE_GUARD.lock().unwrap();
     let st = lifecycle_stack();
     let mut c = Client::connect(st.handle.addr).unwrap();
@@ -833,7 +819,6 @@ fn put_ensemble_sets_membership_atomically() {
 
 #[test]
 fn error_taxonomy_stable_codes() {
-    require_artifacts!();
     let _guard = LIFECYCLE_GUARD.lock().unwrap();
     let st = lifecycle_stack();
     let mut c = Client::connect(st.handle.addr).unwrap();
