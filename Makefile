@@ -23,15 +23,20 @@
 #                    backends (cpu, then quant) over synthetic artifacts:
 #                    v1 + v2 + mux wires, per-backend metrics, a live
 #                    unload/load cycle — no XLA artifacts required
+#   make tenant-smoke  device-free multi-tenant cycle: keyed auth
+#                    (401/403), token-bucket sheds with Retry-After, a
+#                    weighted-fair goodput split, per-tenant Prometheus
+#                    series, and a PUT /v1/tenants hot reload
 #   make bench-compare  regression gate: stash the committed
 #                    BENCH_serve.json, regenerate it via `make bench`, and
 #                    fail when p99 or throughput drifts past the tolerance
 #                    (default 15%; BENCH_TOLERANCE=N overrides)
 #   make check-docs  fail if the /v2 routes in rust/src/coordinator/v2.rs,
 #                    the streaming plane (/v1/mux, /v1/events, mux.*
-#                    error codes), or the execution-backend surface
-#                    (--backend flags, model.backend_unsupported) drift
-#                    from the README
+#                    error codes), the execution-backend surface
+#                    (--backend flags, model.backend_unsupported), or the
+#                    multi-tenant surface (auth/tenant taxonomy codes,
+#                    /v1/tenants, --tenants-file) drift from the README
 #
 # `artifacts` needs the python side (jax + the pallas kernels); the Rust
 # targets need only cargo. Device-backed Rust tests self-skip when
@@ -46,7 +51,7 @@ BENCH_FLAGS ?= --echo --connections 4 --duration-secs 3
 # to saturate the box.
 BENCH_STACK_FLAGS ?= --connections 2 --duration-secs 2
 
-.PHONY: artifacts serve test bench bench-compare backend-smoke gateway-smoke chaos-smoke mux-smoke check-docs fmt clippy
+.PHONY: artifacts serve test bench bench-compare backend-smoke gateway-smoke chaos-smoke mux-smoke tenant-smoke check-docs fmt clippy
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out ../../$(ARTIFACTS)
@@ -100,6 +105,9 @@ chaos-smoke:
 mux-smoke:
 	cd rust && cargo run --release -- mux-smoke
 
+tenant-smoke:
+	cd rust && cargo run --release -- tenant-smoke
+
 # Every quoted "/v2..." string in v2.rs is a route pattern (the module
 # keeps other /v2 spellings out of string literals); each must appear
 # verbatim in the README's Protocols section. The streaming plane's
@@ -120,7 +128,12 @@ check-docs:
 			'--cpu-workers' '--arena-cap-mb' 'bench-compare' 'backend-smoke'; do \
 		grep -qF -- "$$b" README.md || { echo "check-docs: README.md is missing backend doc $$b"; ok=0; }; \
 	done; \
-	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route, the streaming plane, and the backend surface"
+	for t in 'Multi-tenancy' 'auth.missing_key' 'auth.unknown_key' 'tenant.rate_limited' \
+			'tenant.quota_exceeded' 'events.subscriber_limit' '/v1/tenants' '--tenants-file' \
+			'--events-max-subscribers' '--tenant-mix' '--api-key' 'tenant-smoke'; do \
+		grep -qF -- "$$t" README.md || { echo "check-docs: README.md is missing tenancy doc $$t"; ok=0; }; \
+	done; \
+	[ $$ok -eq 1 ] && echo "check-docs: README covers every v2 route, the streaming plane, the backend surface, and the tenant plane"
 
 fmt:
 	cd rust && cargo fmt --check

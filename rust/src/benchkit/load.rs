@@ -105,6 +105,14 @@ pub struct LoadConfig {
     /// server's backend — `flexserve serve --backend` does; this records
     /// which one the target was running.
     pub backend: String,
+    /// Bearer API key sent with every request (`--api-key`; None = no
+    /// auth header — open mode).
+    pub api_key: Option<String>,
+    /// Weighted tenant split (`--tenant-mix a=3,b=1`): connections are
+    /// apportioned across tenants by weight, each sending
+    /// `x-api-key: <name>` (the tenant smoke keys tenants by their
+    /// literal names), and the report grows a per-tenant breakdown.
+    pub tenant_mix: Vec<(String, f64)>,
     pub seed: u64,
 }
 
@@ -129,9 +137,87 @@ impl Default for LoadConfig {
             path: None,
             record_versions: false,
             backend: "xla".into(),
+            api_key: None,
+            tenant_mix: Vec::new(),
             seed: 0,
         }
     }
+}
+
+/// Parse `--tenant-mix a=3,b=1` (bare `a` means weight 1).
+pub fn parse_tenant_mix(s: &str) -> Result<Vec<(String, f64)>> {
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (name, w) = match part.split_once('=') {
+            Some((n, w)) => (
+                n.trim().to_string(),
+                w.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("bad tenant-mix weight in '{part}'"))?,
+            ),
+            None => (part.trim().to_string(), 1.0),
+        };
+        if name.is_empty() || !w.is_finite() || w <= 0.0 {
+            bail!("bad tenant-mix entry '{part}' (want name=weight, weight > 0)");
+        }
+        out.push((name, w));
+    }
+    if out.is_empty() {
+        bail!("empty tenant mix");
+    }
+    Ok(out)
+}
+
+/// Deterministic largest-remainder apportionment of `connections` across
+/// the tenant mix — `a=3,b=1` over 8 connections yields exactly 6 `a`
+/// lines and 2 `b` lines, so per-tenant offered load matches the weights
+/// instead of sampling noise.
+pub fn tenant_assignment(mix: &[(String, f64)], connections: usize) -> Vec<String> {
+    let total: f64 = mix.iter().map(|(_, w)| w.max(0.0)).sum();
+    let mut counts = vec![0usize; mix.len()];
+    let mut rems: Vec<(usize, f64)> = Vec::with_capacity(mix.len());
+    let mut assigned = 0usize;
+    for (i, (_, w)) in mix.iter().enumerate() {
+        let exact = if total > 0.0 {
+            w.max(0.0) / total * connections as f64
+        } else {
+            0.0
+        };
+        counts[i] = exact.floor() as usize;
+        assigned += counts[i];
+        rems.push((i, exact - exact.floor()));
+    }
+    rems.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    let mut round = 0usize;
+    while assigned < connections && !rems.is_empty() {
+        counts[rems[round % rems.len()].0] += 1;
+        assigned += 1;
+        round += 1;
+    }
+    let mut out = Vec::with_capacity(connections);
+    for (i, n) in counts.iter().enumerate() {
+        for _ in 0..*n {
+            out.push(mix[i].0.clone());
+        }
+    }
+    out
+}
+
+/// Which tenant this connection drives (None without `--tenant-mix`).
+fn conn_tenant(cfg: &LoadConfig, conn_id: usize) -> Option<String> {
+    if cfg.tenant_mix.is_empty() {
+        return None;
+    }
+    tenant_assignment(&cfg.tenant_mix, cfg.connections)
+        .get(conn_id)
+        .cloned()
+}
+
+/// The API key this connection authenticates with: the tenant-mix
+/// assignment's name (the smoke stacks key tenants by their literal
+/// names), else the global `--api-key`.
+fn conn_key(cfg: &LoadConfig, conn_id: usize) -> Option<String> {
+    conn_tenant(cfg, conn_id).or_else(|| cfg.api_key.clone())
 }
 
 /// Merged result of one closed-loop run.
@@ -155,6 +241,31 @@ pub struct LoadReport {
     /// Served version distribution keyed `model@version` (populated only
     /// with `record_versions`; canary splits become visible here).
     pub served_versions: BTreeMap<String, u64>,
+    /// Per-tenant slices (populated only with a tenant mix).
+    pub tenants: BTreeMap<String, TenantSlice>,
+}
+
+/// One tenant's share of a run — its connections' merged stats.
+#[derive(Debug, Default)]
+pub struct TenantSlice {
+    pub requests: u64,
+    pub errors: u64,
+    pub rows: u64,
+    pub hist: Histogram,
+    pub error_codes: BTreeMap<String, u64>,
+    /// Longest measured window among this tenant's connections.
+    pub secs: f64,
+}
+
+impl TenantSlice {
+    pub fn ok_requests(&self) -> u64 {
+        self.requests - self.errors
+    }
+
+    /// Successful (goodput) throughput for this tenant's slice.
+    pub fn throughput_ok_rps(&self) -> f64 {
+        self.ok_requests() as f64 / self.secs.max(1e-9)
+    }
 }
 
 impl LoadReport {
@@ -189,6 +300,25 @@ struct ConnStats {
     /// Wall-clock of this connection's measured loop (excludes connect
     /// and warmup).
     measured_secs: f64,
+    /// Tenant-mix assignment this connection drove (None = untagged).
+    tenant: Option<String>,
+}
+
+impl ConnStats {
+    fn new(tenant: Option<String>) -> ConnStats {
+        ConnStats {
+            requests: 0,
+            rows: 0,
+            errors: 0,
+            status_counts: BTreeMap::new(),
+            error_codes: BTreeMap::new(),
+            hist: Histogram::new(),
+            reconnects: 0,
+            served_versions: BTreeMap::new(),
+            measured_secs: 0.0,
+            tenant,
+        }
+    }
 }
 
 /// Extract the stable machine-readable code from an error response body:
@@ -266,11 +396,27 @@ fn predict_body(protocol: Protocol, rng: &mut Prng, batch: usize, detail: bool) 
     out.into_bytes()
 }
 
-fn build_request(path: &str, body: Vec<u8>) -> Request {
+fn build_request(path: &str, body: Vec<u8>, auth: Option<&(String, String)>) -> Request {
     let mut req = Request::new("POST", path, body);
     req.headers
         .push(("content-type".into(), "application/json".into()));
+    if let Some((name, value)) = auth {
+        req.headers.push((name.clone(), value.clone()));
+    }
     req
+}
+
+/// The auth header one connection stamps on every request: tenant-mix
+/// names go out as `x-api-key` (keys ARE the names in the smoke stacks),
+/// a global `--api-key` as a bearer token.
+fn conn_auth_header(cfg: &LoadConfig, conn_id: usize) -> Option<(String, String)> {
+    match conn_tenant(cfg, conn_id) {
+        Some(name) => Some(("x-api-key".to_string(), name)),
+        None => cfg
+            .api_key
+            .as_ref()
+            .map(|k| ("authorization".to_string(), format!("Bearer {k}"))),
+    }
 }
 
 /// One connection's closed loop. Connect, body pre-rendering and warmup
@@ -287,6 +433,7 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
     let mut batches: Vec<usize> = cfg.batch_mix.iter().map(|&(b, _)| b).collect();
     batches.sort_unstable();
     batches.dedup();
+    let auth = conn_auth_header(cfg, conn_id);
     let requests: Vec<(usize, Vec<Request>)> = batches
         .iter()
         .map(|&b| {
@@ -295,6 +442,7 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
                     build_request(
                         cfg.effective_path(),
                         predict_body(cfg.protocol, &mut rng, b, cfg.record_versions),
+                        auth.as_ref(),
                     )
                 })
                 .collect();
@@ -326,17 +474,7 @@ fn drive_connection(cfg: &LoadConfig, conn_id: usize, start_line: &Barrier) -> R
     let mut client = setup?;
 
     let measure = Stopwatch::start();
-    let mut stats = ConnStats {
-        requests: 0,
-        rows: 0,
-        errors: 0,
-        status_counts: BTreeMap::new(),
-        error_codes: BTreeMap::new(),
-        hist: Histogram::new(),
-        reconnects: 0,
-        served_versions: BTreeMap::new(),
-        measured_secs: 0.0,
-    };
+    let mut stats = ConnStats::new(conn_tenant(cfg, conn_id));
     let mut n = 0u64;
     loop {
         match cfg.iters {
@@ -387,14 +525,22 @@ fn drive_connection_mux(
     let mut batches: Vec<usize> = cfg.batch_mix.iter().map(|&(b, _)| b).collect();
     batches.sort_unstable();
     batches.dedup();
+    // Per-frame identity on the mux wire: the payload's `api_key` member
+    // (the session carries no HTTP headers once the wire takes over).
+    let api_key = conn_key(cfg, conn_id);
     let payloads: Vec<(usize, Vec<Value>)> = batches
         .iter()
         .map(|&b| {
             let variants = (0..BODY_VARIANTS)
                 .map(|_| {
                     let bytes = predict_body(Protocol::V1, &mut rng, b, cfg.record_versions);
-                    json::parse(std::str::from_utf8(&bytes).expect("rendered body is utf-8"))
-                        .expect("rendered body is valid JSON")
+                    let mut payload: Value =
+                        json::parse(std::str::from_utf8(&bytes).expect("rendered body is utf-8"))
+                            .expect("rendered body is valid JSON");
+                    if let (Some(key), Value::Obj(fields)) = (&api_key, &mut payload) {
+                        fields.push(("api_key".to_string(), Value::from(key.as_str())));
+                    }
+                    payload
                 })
                 .collect();
             (b, variants)
@@ -423,17 +569,7 @@ fn drive_connection_mux(
     let mut client = setup?;
 
     let measure = Stopwatch::start();
-    let mut stats = ConnStats {
-        requests: 0,
-        rows: 0,
-        errors: 0,
-        status_counts: BTreeMap::new(),
-        error_codes: BTreeMap::new(),
-        hist: Histogram::new(),
-        reconnects: 0,
-        served_versions: BTreeMap::new(),
-        measured_secs: 0.0,
-    };
+    let mut stats = ConnStats::new(conn_tenant(cfg, conn_id));
     let mut inflight: HashMap<u64, (Stopwatch, usize)> = HashMap::new();
     let mut sent = 0u64;
     let mut next_id = 1u64;
@@ -515,9 +651,21 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         hist: Histogram::new(),
         reconnects: 0,
         served_versions: BTreeMap::new(),
+        tenants: BTreeMap::new(),
     };
     for r in results {
         let st = r?;
+        if let Some(tenant) = &st.tenant {
+            let slice = report.tenants.entry(tenant.clone()).or_default();
+            slice.requests += st.requests;
+            slice.errors += st.errors;
+            slice.rows += st.rows;
+            slice.hist.merge(&st.hist);
+            for (code, n) in &st.error_codes {
+                *slice.error_codes.entry(code.clone()).or_insert(0) += n;
+            }
+            slice.secs = slice.secs.max(st.measured_secs);
+        }
         report.requests += st.requests;
         report.rows += st.rows;
         report.errors += st.errors;
@@ -632,6 +780,21 @@ pub fn report_json_with_gateway(
                 ),
                 ("warmup_per_connection", Value::from(cfg.warmup)),
                 ("batch_mix", mix),
+                (
+                    "tenant_mix",
+                    Value::Arr(
+                        cfg.tenant_mix
+                            .iter()
+                            .map(|(t, w)| {
+                                json::obj([
+                                    ("tenant", Value::from(t.as_str())),
+                                    ("weight", Value::from(*w)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("authenticated", Value::from(cfg.api_key.is_some())),
                 ("seed", Value::from(cfg.seed)),
             ]),
         ),
@@ -671,6 +834,40 @@ pub fn report_json_with_gateway(
                     .served_versions
                     .iter()
                     .map(|(k, n)| (k.clone(), Value::from(*n)))
+                    .collect(),
+            ),
+        ),
+        // Per-tenant goodput + latency (populated only with --tenant-mix)
+        // so weighted-fair shares show up as numbers, not just counters.
+        (
+            "tenants",
+            Value::Obj(
+                report
+                    .tenants
+                    .iter()
+                    .map(|(t, s)| {
+                        (
+                            t.clone(),
+                            json::obj([
+                                ("requests", Value::from(s.requests)),
+                                ("ok_requests", Value::from(s.ok_requests())),
+                                ("errors", Value::from(s.errors)),
+                                ("rows", Value::from(s.rows)),
+                                ("throughput_ok_rps", Value::from(s.throughput_ok_rps())),
+                                ("p50_us", Value::from(s.hist.p50())),
+                                ("p99_us", Value::from(s.hist.p99())),
+                                (
+                                    "error_codes",
+                                    Value::Obj(
+                                        s.error_codes
+                                            .iter()
+                                            .map(|(c, n)| (c.clone(), Value::from(*n)))
+                                            .collect(),
+                                    ),
+                                ),
+                            ]),
+                        )
+                    })
                     .collect(),
             ),
         ),
@@ -731,6 +928,34 @@ pub fn summary(report: &LoadReport) -> String {
         line.push_str(&format!(" [{}]", codes.join(", ")));
     }
     line
+}
+
+/// One summary line per tenant slice (empty without `--tenant-mix`).
+pub fn tenant_summary(report: &LoadReport) -> Vec<String> {
+    use crate::util::hist::fmt_micros;
+    report
+        .tenants
+        .iter()
+        .map(|(t, s)| {
+            let mut line = format!(
+                "tenant {t}: {} reqs ({} ok) — {:.1} ok/s, p50={} p99={}",
+                s.requests,
+                s.ok_requests(),
+                s.throughput_ok_rps(),
+                fmt_micros(s.hist.p50()),
+                fmt_micros(s.hist.p99()),
+            );
+            if !s.error_codes.is_empty() {
+                let codes: Vec<String> = s
+                    .error_codes
+                    .iter()
+                    .map(|(c, n)| format!("{c}x{n}"))
+                    .collect();
+                line.push_str(&format!(" [{}]", codes.join(", ")));
+            }
+            line
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -808,6 +1033,102 @@ mod tests {
             doc.path(&["gateway", "tier"]).unwrap().as_str(),
             Some("gateway")
         );
+        server.stop();
+    }
+
+    /// `--tenant-mix` apportions connections by weight, stamps each one's
+    /// `x-api-key`, and the report grows per-tenant slices.
+    #[test]
+    fn tenant_mix_assignment_headers_and_report() {
+        let mix = parse_tenant_mix("a=3,b=1").unwrap();
+        assert_eq!(mix, vec![("a".to_string(), 3.0), ("b".to_string(), 1.0)]);
+        let lanes = tenant_assignment(&mix, 8);
+        assert_eq!(lanes.iter().filter(|t| *t == "a").count(), 6);
+        assert_eq!(lanes.iter().filter(|t| *t == "b").count(), 2);
+        // Odd counts still assign every connection somewhere.
+        assert_eq!(tenant_assignment(&mix, 5).len(), 5);
+        assert!(parse_tenant_mix("a=0").is_err());
+        assert!(parse_tenant_mix("").is_err());
+        // Bare names default to weight 1.
+        assert_eq!(parse_tenant_mix("a,b").unwrap()[0].1, 1.0);
+
+        // Every request carries the assigned tenant's x-api-key; the
+        // merged report slices per tenant.
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: &crate::http::Request| {
+                match req.header("x-api-key") {
+                    Some("a") | Some("b") => {
+                        Response::json(200, &json::obj([("ok", Value::from(true))]))
+                    }
+                    _ => Response::error(403, "missing tenant key"),
+                }
+            }),
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 4,
+            iters: Some(3),
+            warmup: 1,
+            batch_mix: vec![(1, 1.0)],
+            tenant_mix: mix,
+            seed: 5,
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.errors, 0, "every keyed request passed the gate");
+        let a = report.tenants.get("a").expect("tenant a slice");
+        let b = report.tenants.get("b").expect("tenant b slice");
+        assert_eq!(a.requests, 9, "3 of 4 connections are tenant a");
+        assert_eq!(b.requests, 3);
+        assert_eq!(a.ok_requests(), 9);
+        assert!(a.throughput_ok_rps() > 0.0);
+
+        let doc = report_json(&cfg, &report, None);
+        assert_eq!(
+            doc.path(&["tenants", "a", "ok_requests"]).unwrap().as_u64(),
+            Some(9)
+        );
+        assert_eq!(
+            doc.path(&["config", "tenant_mix"]).unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert_eq!(tenant_summary(&report).len(), 2);
+        server.stop();
+    }
+
+    /// `--api-key` goes out as a bearer token on every connection.
+    #[test]
+    fn global_api_key_sends_bearer_header() {
+        let server = Server::spawn(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|req: &crate::http::Request| {
+                match req.header("authorization") {
+                    Some("Bearer sk-test") => {
+                        Response::json(200, &json::obj([("ok", Value::from(true))]))
+                    }
+                    _ => Response::error(401, "missing bearer"),
+                }
+            }),
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections: 1,
+            iters: Some(2),
+            warmup: 0,
+            batch_mix: vec![(1, 1.0)],
+            api_key: Some("sk-test".to_string()),
+            seed: 1,
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.errors, 0);
+        assert!(report.tenants.is_empty(), "no mix → no per-tenant slices");
         server.stop();
     }
 
@@ -919,6 +1240,7 @@ mod tests {
             hist: Histogram::new(),
             reconnects: 0,
             served_versions: counts,
+            tenants: BTreeMap::new(),
         };
         report.served_versions.insert("mlp@2".into(), 5);
         let doc = report_json(&cfg, &report, None);
@@ -934,7 +1256,8 @@ mod tests {
     #[test]
     fn mux_protocol_closed_loop_against_echo() {
         let metrics = Arc::new(crate::coordinator::Metrics::new());
-        let exec: crate::mux::ExecFn = Arc::new(|p: &Value| Ok(p.clone()));
+        let exec: crate::mux::ExecFn =
+            Arc::new(|p: &Value, _auth: &crate::mux::FrameAuth| Ok(p.clone()));
         let svc =
             crate::mux::MuxService::new(exec, Arc::clone(&metrics), crate::mux::MuxOptions::default());
         let server = Server::spawn(
@@ -942,7 +1265,7 @@ mod tests {
             2,
             Arc::new(move |req: &crate::http::Request| {
                 if req.path == "/v1/mux" {
-                    svc.takeover_response()
+                    svc.takeover_response(crate::mux::FrameAuth::from_request(req))
                 } else {
                     Response::error(404, "not found")
                 }

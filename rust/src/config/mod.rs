@@ -76,6 +76,16 @@ pub struct ServeConfig {
     /// Buffer-arena retention cap per device worker, in MB
     /// (`backend.arena_cap_mb`; `--arena-cap-mb`; 0 = 64 MB default).
     pub arena_cap_mb: usize,
+    /// Per-topic event-bus subscriber cap
+    /// (`events.max_subscribers_per_topic`; `--events-max-subscribers`;
+    /// 0 = unlimited). Past it, new subscriptions shed with the typed
+    /// `429 events.subscriber_limit` envelope.
+    pub events_max_subscribers_per_topic: usize,
+    /// Tenant specs for the multi-tenant serving plane (`tenants` JSON
+    /// array; `--tenants-file`). Empty = open mode: every request runs
+    /// as the implicit `anonymous` tenant with no auth, quota, or
+    /// fairness split.
+    pub tenants: Vec<crate::tenant::TenantSpec>,
 }
 
 impl Default for ServeConfig {
@@ -103,6 +113,8 @@ impl Default for ServeConfig {
             backend_overrides: Vec::new(),
             cpu_workers: 0,
             arena_cap_mb: 0,
+            events_max_subscribers_per_topic: 0,
+            tenants: Vec::new(),
         }
     }
 }
@@ -288,6 +300,17 @@ impl ServeConfig {
                         .as_u64()
                         .ok_or_else(|| anyhow!("events.metrics_interval_ms must be an integer (0 = off)"))?;
                 }
+                if let Some(m) = val.get("max_subscribers_per_topic") {
+                    self.events_max_subscribers_per_topic = m.as_usize().ok_or_else(|| {
+                        anyhow!("events.max_subscribers_per_topic must be an integer (0 = unlimited)")
+                    })?;
+                }
+            }
+            "tenants" => {
+                self.tenants = match val {
+                    Value::Null => Vec::new(),
+                    _ => crate::tenant::parse_tenants(val).map_err(|e| anyhow!("tenants: {e}"))?,
+                };
             }
             "backend" => match val {
                 Value::Null => {
@@ -354,7 +377,8 @@ impl ServeConfig {
     /// `--breaker-fail-threshold N`, `--breaker-cooldown-ms N`,
     /// `--chaos SPEC`, `--chaos-seed N`, `--idle-timeout-ms N`,
     /// `--mux-max-inflight N`, `--mux-chunk-bytes N`, `--events-buffer N`,
-    /// `--events-metrics-ms N`, `--backend xla|cpu|quant|auto`,
+    /// `--events-metrics-ms N`, `--events-max-subscribers N`,
+    /// `--tenants-file PATH`, `--backend xla|cpu|quant|auto`,
     /// `--backend-override model=kind[,model=kind]`, `--cpu-workers N`,
     /// `--arena-cap-mb N`).
     pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
@@ -444,6 +468,19 @@ impl ServeConfig {
                     self.events_buffer = b;
                 }
                 "--events-metrics-ms" => self.events_metrics_ms = take()?.parse::<u64>()?,
+                "--events-max-subscribers" => {
+                    self.events_max_subscribers_per_topic = take()?.parse::<usize>()?;
+                }
+                "--tenants-file" => {
+                    let path = take()?;
+                    let text = std::fs::read_to_string(&path)
+                        .with_context(|| format!("reading {path}"))?;
+                    let v = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+                    // A bare array or a `{"tenants": [...]}` wrapper both
+                    // work, so a combined server config file round-trips.
+                    self.tenants =
+                        crate::tenant::parse_tenants(&v).map_err(|e| anyhow!("{path}: {e}"))?;
+                }
                 "--backend" => self.backend = parse_backend_name("--backend", &take()?)?,
                 "--backend-override" => {
                     for spec in take()?.split(',').filter(|s| !s.is_empty()) {
@@ -902,6 +939,56 @@ mod tests {
     }
 
     #[test]
+    fn tenants_block_and_events_cap_parse() {
+        let c = ServeConfig::default();
+        assert!(c.tenants.is_empty(), "open mode is the default");
+        assert_eq!(c.events_max_subscribers_per_topic, 0, "0 = unlimited");
+
+        let mut c = ServeConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"tenants":{"acme":{"key":"acme-key","weight":3,"rate_rps":50,
+                               "burst":100,"queue_quota":64},
+                       "beta":{"key":"beta-key"}},
+                    "events":{"max_subscribers_per_topic":4}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.tenants.len(), 2);
+        let acme = c.tenants.iter().find(|t| t.id == "acme").unwrap();
+        assert_eq!(acme.weight, 3);
+        assert_eq!(acme.queue_quota, 64);
+        assert_eq!(acme.key_sha256, crate::tenant::hash_key("acme-key"));
+        assert_eq!(c.events_max_subscribers_per_topic, 4);
+        // tenants: null switches back to open mode.
+        c.apply_json(&json::parse(r#"{"tenants":null}"#).unwrap()).unwrap();
+        assert!(c.tenants.is_empty());
+        // The reserved anonymous id is a parse error, not a silent shadow.
+        assert!(ServeConfig::default()
+            .apply_json(&json::parse(r#"{"tenants":{"anonymous":{"key":"k"}}}"#).unwrap())
+            .is_err());
+
+        let dir = std::env::temp_dir().join("flexserve_cfg_tenants_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tenants.json");
+        std::fs::write(&path, r#"{"tenants":{"acme":{"key":"k1","weight":2}}}"#).unwrap();
+        let mut c = ServeConfig::default();
+        c.apply_cli(&[
+            format!("--tenants-file={}", path.display()),
+            "--events-max-subscribers=2".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(c.tenants.len(), 1);
+        assert_eq!(c.tenants[0].id, "acme");
+        assert_eq!(c.tenants[0].weight, 2);
+        assert_eq!(c.events_max_subscribers_per_topic, 2);
+        assert!(ServeConfig::default()
+            .apply_cli(&["--tenants-file=/definitely/not/there.json".to_string()])
+            .is_err());
+    }
+
+    #[test]
     fn backend_block_and_flags_parse() {
         let c = ServeConfig::default();
         assert!(c.backend.is_none(), "default defers to the manifest");
@@ -1082,6 +1169,11 @@ mod tests {
         assert_eq!(c.mux_chunk_bytes, 65536);
         assert_eq!(c.events_buffer, 256);
         assert_eq!(c.events_metrics_ms, 5000);
+        assert_eq!(c.events_max_subscribers_per_topic, 0);
+        assert_eq!(c.tenants.len(), 2, "example ships two keyed tenants");
+        let acme = c.tenants.iter().find(|t| t.id == "acme").unwrap();
+        assert_eq!(acme.weight, 3);
+        assert_eq!(acme.queue_quota, 256);
         assert!(c.backend.is_none(), "example ships with backend auto");
         assert!(c.backend_overrides.is_empty());
         assert_eq!(c.cpu_workers, 0);

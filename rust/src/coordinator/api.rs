@@ -52,6 +52,7 @@ use crate::imagepipe::Normalizer;
 use crate::json::{self, Value};
 use crate::registry::Registry;
 use crate::runtime::{slot_name, Manifest};
+use crate::tenant::{AuthError, Tenant, TenantPlane};
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::Arc;
@@ -72,6 +73,10 @@ pub struct ServerState {
     /// [`super::breaker`]. Open paths answer a fast typed
     /// `503 exec.circuit_open` instead of queueing doomed work.
     pub breakers: Arc<Breakers>,
+    /// The multi-tenant serving plane: API-key identity, per-tenant
+    /// admission state, DRR lane weights. Empty (= open anonymous mode)
+    /// until `serve()` installs the configured specs.
+    pub tenants: Arc<TenantPlane>,
     pub started: std::time::Instant,
     /// Serializes control-plane lifecycle operations (load/unload/set/
     /// rollout): each is a check-then-act over the pool's loaded set, so
@@ -115,6 +120,7 @@ impl ServerState {
             normalizer,
             metrics,
             breakers,
+            tenants: Arc::new(TenantPlane::new(Vec::new())),
             started: std::time::Instant::now(),
             lifecycle: std::sync::Mutex::new(()),
             shadow_pool: std::sync::OnceLock::new(),
@@ -151,10 +157,48 @@ impl ServerState {
         }
     }
 
-    /// The actor string audited for a control-plane request (`x-actor`
-    /// header, default "api").
-    fn actor(req: &Request) -> String {
-        req.header("x-actor").unwrap_or("api").to_string()
+    /// The actor string audited for a control-plane request: the `x-actor`
+    /// header wins, else the request's resolved tenant identity, else
+    /// "api" — so with keys configured the audit trail attributes every
+    /// control transition to the tenant that drove it.
+    fn actor(&self, req: &Request) -> String {
+        if let Some(a) = req.header("x-actor") {
+            return a.to_string();
+        }
+        if let Ok(Some(t)) = self
+            .tenants
+            .resolve(req.header("authorization"), req.header("x-api-key"))
+        {
+            return format!("tenant:{}", t.id());
+        }
+        "api".to_string()
+    }
+
+    /// Resolve the caller's tenant from request credentials. `Ok(None)` =
+    /// open mode (no tenants configured); typed 401/403 otherwise.
+    pub fn resolve_tenant(&self, req: &Request) -> Result<Option<Arc<Tenant>>, ApiError> {
+        self.tenants
+            .resolve(req.header("authorization"), req.header("x-api-key"))
+            .map_err(auth_error)
+    }
+
+    /// [`ServerState::resolve_tenant`] for mux frames, whose credentials
+    /// arrive as a captured [`crate::mux::FrameAuth`] instead of headers.
+    pub fn resolve_frame_tenant(
+        &self,
+        auth: &crate::mux::FrameAuth,
+    ) -> Result<Option<Arc<Tenant>>, ApiError> {
+        self.tenants
+            .resolve(auth.authorization.as_deref(), auth.api_key.as_deref())
+            .map_err(auth_error)
+    }
+}
+
+/// Map a tenant auth failure to its wire taxonomy code.
+fn auth_error(e: AuthError) -> ApiError {
+    match e {
+        AuthError::MissingKey => ApiError::missing_key(),
+        AuthError::UnknownKey => ApiError::unknown_key(),
     }
 }
 
@@ -313,7 +357,7 @@ pub fn build_router_with(state: Arc<ServerState>, mux_opts: crate::mux::MuxOptio
         "/v1/models/:name/promote",
         control_handler(Arc::clone(&state), |s, req, p| {
             let _guard = s.lifecycle_guard();
-            let doc = s.registry.promote(&p["name"], &ServerState::actor(req))?;
+            let doc = s.registry.promote(&p["name"], &s.actor(req))?;
             Ok(Response::json(200, &doc))
         }),
     );
@@ -326,7 +370,7 @@ pub fn build_router_with(state: Arc<ServerState>, mux_opts: crate::mux::MuxOptio
             let loaded = |slot: &str| pool.is_loaded(slot);
             let doc = s.registry.rollback(
                 &p["name"],
-                &ServerState::actor(req),
+                &s.actor(req),
                 "operator request",
                 &loaded,
             )?;
@@ -374,13 +418,24 @@ pub fn build_router_with(state: Arc<ServerState>, mux_opts: crate::mux::MuxOptio
         )
     });
 
+    // ---- tenant plane: identity + quota administration -------------------
+    let s = Arc::clone(&state);
+    router.add("GET", "/v1/tenants", move |_req, _p| {
+        Response::json(200, &s.tenants.describe())
+    });
+    router.add_shared(
+        "PUT",
+        "/v1/tenants",
+        control_handler(Arc::clone(&state), |s, req, _p| handle_put_tenants(s, req)),
+    );
+
     // ---- streaming plane: mux wire + event subscriptions -----------------
     // `POST /v1/mux` hands the connection to a mux session whose `request`
     // frames lower into the same predict pipeline as `POST /v1/predict`;
     // `GET /v1/events` streams the process event bus as NDJSON.
     let exec: crate::mux::ExecFn = {
         let s = Arc::clone(&state);
-        Arc::new(move |payload| {
+        Arc::new(move |payload, auth| {
             let sw = Stopwatch::start();
             s.metrics.inc("requests_total");
             let req = Request::new(
@@ -388,7 +443,12 @@ pub fn build_router_with(state: Arc<ServerState>, mux_opts: crate::mux::MuxOptio
                 "/v1/predict",
                 json::to_string(payload).into_bytes(),
             );
-            match infer::predict_json(&s, &req) {
+            // Tenant identity is honored per-frame: the session's captured
+            // credentials, unless the frame carried its own `api_key`.
+            let result = s
+                .resolve_frame_tenant(auth)
+                .and_then(|tenant| infer::predict_json(&s, &req, tenant));
+            match result {
                 Ok(v) => {
                     s.metrics.observe_micros("predict_us", sw.elapsed_micros());
                     Ok(v)
@@ -401,7 +461,9 @@ pub fn build_router_with(state: Arc<ServerState>, mux_opts: crate::mux::MuxOptio
         })
     };
     let svc = crate::mux::MuxService::new(exec, Arc::clone(&state.metrics), mux_opts.clone());
-    router.add("POST", "/v1/mux", move |_req, _p| svc.takeover_response());
+    router.add("POST", "/v1/mux", move |req, _p| {
+        svc.takeover_response(crate::mux::FrameAuth::from_request(req))
+    });
     let m = Arc::clone(&state.metrics);
     let buffer = mux_opts.event_buffer;
     router.add("GET", "/v1/events", move |req, _p| {
@@ -704,9 +766,12 @@ fn version_param(req: &Request) -> Result<Option<u32>, ApiError> {
 }
 
 fn handle_predict(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
+    // Identity first: with tenants configured, unauthenticated predicts
+    // fail typed before any parsing work.
+    let tenant = s.resolve_tenant(req)?;
     // parse → execute → render all live in the shared entry point the mux
     // wire also lowers into (mux ≡ v1 by construction).
-    let body = infer::predict_json(s, req)?;
+    let body = infer::predict_json(s, req, tenant)?;
     Ok(Response::json(200, &body))
 }
 
@@ -723,9 +788,12 @@ fn handle_model_predict(s: &ServerState, name: &str, req: &Request) -> Result<Re
     if !s.ensemble.pool().any_version_loaded(name) {
         return Err(ApiError::model_not_loaded(name));
     }
+    let tenant = s.resolve_tenant(req)?;
     let parse_sw = Stopwatch::start();
     let input = PredictRequest::parse(&s.manifest, req)?;
-    let done = infer::execute(s, input.into_inference(&s.manifest), Some(name), parse_sw)?;
+    let mut ir = input.into_inference(&s.manifest);
+    ir.params.tenant = tenant;
+    let done = infer::execute(s, ir, Some(name), parse_sw)?;
 
     let render_sw = Stopwatch::start();
     let m = &done.output.per_model[0];
@@ -826,7 +894,7 @@ fn handle_load(s: &ServerState, name: &str, req: &Request) -> Result<Response, A
             }
         })?;
         s.metrics.inc("lifecycle_loads_total");
-        s.registry.note_load(name, version, &ServerState::actor(req));
+        s.registry.note_load(name, version, &s.actor(req));
     }
     s.ensemble.activate(name);
     // A reload after a full unload may find the rollout pinned at a
@@ -835,7 +903,7 @@ fn handle_load(s: &ServerState, name: &str, req: &Request) -> Result<Response, A
     s.registry.repin_if_unserveable(
         name,
         &s.ensemble.pool().loaded_versions(name),
-        &ServerState::actor(req),
+        &s.actor(req),
     );
     Ok(Response::json(
         200,
@@ -858,7 +926,7 @@ fn handle_unload(s: &ServerState, name: &str, req: &Request) -> Result<Response,
         return Err(ApiError::unknown_model(name));
     }
     let version = version_param(req)?;
-    let actor = ServerState::actor(req);
+    let actor = s.actor(req);
     let _guard = s.lifecycle_guard();
     let pool = s.ensemble.pool();
     let (unloaded, sha) = match version {
@@ -920,6 +988,36 @@ fn handle_unload(s: &ServerState, name: &str, req: &Request) -> Result<Response,
     ))
 }
 
+/// `PUT /v1/tenants` — hot-reload the tenant catalog (body: the same
+/// `tenants` map the config file takes). Same-id tenants keep their live
+/// queue accounting across the swap; token buckets restart full at the
+/// new rate. Audited and published on the `tenant` event topic.
+fn handle_put_tenants(s: &ServerState, req: &Request) -> Result<Response, ApiError> {
+    let body = req.json_body().map_err(ApiError::malformed_json)?;
+    let specs = crate::tenant::parse_tenants(&body).map_err(ApiError::bad_value)?;
+    let actor = s.actor(req);
+    let count = specs.len();
+    s.tenants.install(specs);
+    s.metrics.inc("tenant_reloads_total");
+    s.registry.audit().record(crate::registry::audit::Event {
+        event: "tenants",
+        model: "-",
+        actor: &actor,
+        from: None,
+        to: None,
+        detail: &format!("installed {count} tenant specs"),
+    });
+    crate::mux::events::publish(
+        crate::mux::events::TOPIC_TENANT,
+        json::obj([
+            ("event", Value::from("reload")),
+            ("count", Value::from(count)),
+            ("actor", Value::from(actor.as_str())),
+        ]),
+    );
+    Ok(Response::json(200, &s.tenants.describe()))
+}
+
 /// `PUT /v1/models/:name/rollout` — drive the pin/canary/shadow state
 /// machine. Validation, the transition, and the audit record live in the
 /// registry; this glue supplies the pool's loaded-oracle and the actor.
@@ -930,7 +1028,7 @@ fn handle_rollout_put(s: &ServerState, name: &str, req: &Request) -> Result<Resp
     let loaded = |slot: &str| pool.is_loaded(slot);
     let doc = s
         .registry
-        .apply_rollout(name, &body, &ServerState::actor(req), &loaded)?;
+        .apply_rollout(name, &body, &s.actor(req), &loaded)?;
     Ok(Response::json(200, &doc))
 }
 

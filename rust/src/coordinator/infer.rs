@@ -25,7 +25,9 @@ use super::wire::{self, ApiError, PredictRequest, StageMicros};
 use crate::http::Request;
 use crate::json::Value;
 use crate::runtime::{slot_name, DType, Manifest, TensorView};
+use crate::tenant::Tenant;
 use crate::util::Stopwatch;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// One named, typed, shaped input tensor, already converted to the
@@ -62,6 +64,11 @@ pub struct InferParams {
     /// The client's `x-request-id` — the deterministic canary hash-split
     /// key (a given id always lands on the same version).
     pub request_id: Option<String>,
+    /// The resolved tenant (None = open anonymous mode). Set by the wire
+    /// handlers after key resolution, never by the codecs: it drives the
+    /// scheduler's admission (token bucket + queue quota), the DRR lane,
+    /// and the per-tenant metric series.
+    pub tenant: Option<Arc<Tenant>>,
 }
 
 /// The wire-neutral inference request both protocol codecs lower into.
@@ -105,10 +112,16 @@ pub struct InferenceResponse {
 /// returned [`Value`] with `json::to_string`, which is what makes the
 /// mux ≡ v1 byte-identity hold by construction (pinned by the
 /// differential test).
-pub fn predict_json(s: &ServerState, req: &Request) -> Result<Value, ApiError> {
+pub fn predict_json(
+    s: &ServerState,
+    req: &Request,
+    tenant: Option<Arc<Tenant>>,
+) -> Result<Value, ApiError> {
     let parse_sw = Stopwatch::start();
     let input = PredictRequest::parse(&s.manifest, req)?;
-    let done = execute(s, input.into_inference(&s.manifest), None, parse_sw)?;
+    let mut ir = input.into_inference(&s.manifest);
+    ir.params.tenant = tenant;
+    let done = execute(s, ir, None, parse_sw)?;
     let render_sw = Stopwatch::start();
     let body = wire::render_predict(
         &s.manifest,
@@ -267,7 +280,7 @@ pub fn execute(
             match pre {
                 Err(e) => Err(e),
                 Ok(()) => sched
-                    .submit(target, data, batch, params.timeout)
+                    .submit(target, data, batch, params.timeout, params.tenant.as_ref())
                     .map(|(out, st)| {
                         s.metrics
                             .observe_micros("coalesced_rows", st.coalesced_rows as u64);
@@ -297,11 +310,25 @@ pub fn execute(
     // candidate), and a multi-model flush failure may be any member's
     // fault — errors only count when exactly one model was routed.
     let dispatch_us = dispatch_sw.elapsed_micros();
+    // Tenant sheds (`tenant.*`) are the admission plane's verdict on the
+    // CLIENT, not on any model — like `server.*` sheds they must not feed
+    // the guardrail/breaker windows.
     let outcome = match &dispatched {
         Ok(_) => Some(true),
-        Err(e) if e.code.starts_with("server.") => None,
+        Err(e) if e.code.starts_with("server.") || e.code.starts_with("tenant.") => None,
         Err(_) => Some(false),
     };
+    // Per-tenant attribution: every authenticated request counts, and
+    // completed ones feed the tenant's latency series (shed counters live
+    // scheduler-side where the admission verdict is made).
+    if let Some(t) = &params.tenant {
+        let label = t.spec.metric_label();
+        s.metrics.inc(&format!("tenant_{label}_requests_total"));
+        if dispatched.is_ok() {
+            s.metrics
+                .observe_micros(&format!("tenant_{label}_predict_us"), dispatch_us);
+        }
+    }
     if let Some(ok) = outcome {
         if ok || routed.len() == 1 {
             for (model, version) in &routed {

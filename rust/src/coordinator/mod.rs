@@ -159,10 +159,14 @@ pub fn serve(config: &ServeConfig) -> Result<(ServerHandle, Arc<ServerState>)> {
         metrics,
         config.breaker,
     )?;
-    // Event plane: wire the bus's metric sink and start the periodic
-    // metrics-snapshot publisher (snapshots render only while someone is
-    // subscribed).
+    // Multi-tenant plane: install keyed tenants (empty = open mode, the
+    // pre-tenancy wire byte-for-byte) before the server takes traffic.
+    state.tenants.install(config.tenants.clone());
+    // Event plane: wire the bus's metric sink, the per-topic subscriber
+    // cap, and the periodic metrics-snapshot publisher (snapshots render
+    // only while someone is subscribed).
     crate::mux::events::set_sink(Arc::clone(&state.metrics));
+    crate::mux::events::set_subscriber_limit(config.events_max_subscribers_per_topic);
     if config.events_metrics_ms > 0 {
         crate::mux::start_metrics_ticker(
             Arc::clone(&state.metrics),

@@ -39,6 +39,7 @@ use super::ensemble::{Ensemble, EnsembleOutput};
 use super::metrics::Metrics;
 use super::wire::ApiError;
 use crate::runtime::TensorView;
+use crate::tenant::{self, Tenant};
 use crate::util::ThreadPool;
 use anyhow::{anyhow, bail, Error, Result};
 use queue::TargetQueue;
@@ -187,12 +188,17 @@ impl Scheduler {
     ///
     /// `timeout` is the per-request in-queue budget (`timeout_ms` on the
     /// wire); `None` falls back to the configured server-wide deadline.
+    /// `tenant` is the resolved caller identity: its token bucket and
+    /// queue quota are checked BEFORE the global cap, so a noisy tenant's
+    /// overflow sheds with its own typed `tenant.*` verdict rather than
+    /// masquerading as server-wide overload.
     pub fn submit(
         &self,
         target: TargetKey,
         data: impl Into<TensorView>,
         batch: usize,
         timeout: Option<Duration>,
+        tenant: Option<&Arc<Tenant>>,
     ) -> Result<(EnsembleOutput, BatchStats)> {
         let (reply_tx, reply_rx) = mpsc::channel();
         let (depth, n_queues) = {
@@ -205,6 +211,13 @@ impl Scheduler {
                     "scheduler is shutting down; no new work accepted",
                 )));
             }
+            let ticket = match tenant {
+                Some(t) => match t.admit(batch, tenant::clock_us()) {
+                    Ok(ticket) => Some(ticket),
+                    Err(shed) => return Err(Error::new(self.shed_tenant(t, shed))),
+                },
+                None => None,
+            };
             let cap = self.shared.config.queue_cap;
             let q = queues.entry(target).or_default();
             if !queue::admit(q.len(), cap) {
@@ -221,7 +234,7 @@ impl Scheduler {
                 ))));
             }
             let deadline = timeout.or(self.shared.config.deadline);
-            q.push(data.into(), batch, deadline, reply_tx);
+            q.push(data.into(), batch, deadline, tenant, ticket, reply_tx);
             let depth: usize = queues.values().map(TargetQueue::len).sum();
             (depth as u64, queues.len() as u64)
         };
@@ -233,6 +246,32 @@ impl Scheduler {
         reply_rx
             .recv()
             .map_err(|_| anyhow!("scheduler dropped the request"))?
+    }
+
+    /// Record a per-tenant admission shed (counter + `tenant` event) and
+    /// build its typed 429.
+    fn shed_tenant(&self, t: &Tenant, shed: tenant::Shed) -> ApiError {
+        self.shared
+            .metrics
+            .inc(&format!("tenant_{}_shed_total", t.spec.metric_label()));
+        let (kind, err) = match shed {
+            tenant::Shed::RateLimited { retry_after_secs } => (
+                "rate_limited",
+                ApiError::tenant_rate_limited(t.id(), retry_after_secs),
+            ),
+            tenant::Shed::QuotaExceeded { quota, queued } => (
+                "quota_exceeded",
+                ApiError::tenant_quota_exceeded(t.id(), quota, queued),
+            ),
+        };
+        crate::mux::events::publish(
+            crate::mux::events::TOPIC_TENANT,
+            crate::json::obj([
+                ("shed", crate::json::Value::from(kind)),
+                ("tenant", crate::json::Value::from(t.id())),
+            ]),
+        );
+        err
     }
 
     /// Begin shutdown without blocking: new submissions are refused,

@@ -15,9 +15,9 @@
 use super::super::ensemble::{EnsembleOutput, ModelOutput};
 use super::{policy, BatchStats};
 use crate::runtime::TensorView;
+use crate::tenant::{fair::DrrQueue, QueueTicket, Tenant, ANONYMOUS};
 use crate::util::Stopwatch;
-use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// Which resolved model set a request targets. Requests coalesce only
@@ -45,6 +45,10 @@ struct Pending {
     /// In-queue time budget (request `timeout_ms` or the server default);
     /// `None` = wait forever.
     deadline: Option<Duration>,
+    /// The tenant queue-quota reservation. Held while the request is
+    /// pending; dropping the `Pending` (dequeue, deadline shed, drain)
+    /// releases the rows back to the tenant's quota.
+    ticket: Option<QueueTicket>,
     reply: mpsc::Sender<Reply>,
 }
 
@@ -86,9 +90,13 @@ pub fn admit(depth: usize, cap: usize) -> bool {
     cap == 0 || depth < cap
 }
 
-/// One target's FIFO of pending requests plus its arrival-rate estimate.
+/// One target's pending requests plus its arrival-rate estimate. Pending
+/// work lands in per-tenant DRR lanes ([`DrrQueue`]): dequeue serves lanes
+/// weighted-fair, so one tenant's backlog cannot starve another's. With no
+/// tenants configured everything rides the single `anonymous` lane and the
+/// queue degenerates to the plain FIFO it always was.
 pub struct TargetQueue {
-    pending: VecDeque<Pending>,
+    pending: DrrQueue<Pending>,
     /// Running total of pending rows (kept incrementally so the planner's
     /// per-pass `rows()` reads are O(1), not O(pending)).
     rows_total: usize,
@@ -106,7 +114,7 @@ const STALE_AFTER_SECS: f64 = 10.0;
 impl TargetQueue {
     pub fn new() -> TargetQueue {
         TargetQueue {
-            pending: VecDeque::new(),
+            pending: DrrQueue::new(),
             rows_total: 0,
             ewma_gap_us: policy::NO_ESTIMATE,
             last_arrival: None,
@@ -133,9 +141,13 @@ impl TargetQueue {
     /// The batching window is measured against THIS — i.e. it starts at
     /// enqueue time, not when the scheduler thread next observes the
     /// queue, so a flush-in-progress cannot silently extend the next
-    /// batch's wait.
+    /// batch's wait. Lanes are FIFO, so the oldest request overall is
+    /// among the per-lane fronts.
     pub fn oldest_wait_us(&self) -> Option<u64> {
-        self.pending.front().map(|p| p.enqueued.elapsed_micros())
+        self.pending
+            .fronts()
+            .map(|p| p.enqueued.elapsed_micros())
+            .max()
     }
 
     /// Current EWMA inter-arrival estimate (µs).
@@ -168,11 +180,16 @@ impl TargetQueue {
     }
 
     /// Enqueue one admitted request, folding its arrival into the EWMA.
+    /// The request lands in `tenant`'s DRR lane (or the shared `anonymous`
+    /// lane); `ticket` is the tenant's queue-quota reservation, released
+    /// when the request leaves the queue.
     pub fn push(
         &mut self,
         data: TensorView,
         batch: usize,
         deadline: Option<Duration>,
+        tenant: Option<&Arc<Tenant>>,
+        ticket: Option<QueueTicket>,
         reply: mpsc::Sender<Reply>,
     ) {
         if let Some(last) = self.last_arrival {
@@ -180,47 +197,55 @@ impl TargetQueue {
         }
         self.last_arrival = Some(Stopwatch::start());
         self.rows_total += batch;
-        self.pending.push_back(Pending {
-            data,
-            batch,
-            enqueued: Stopwatch::start(),
-            deadline,
-            reply,
-        });
+        let (lane, weight) = match tenant {
+            Some(t) => (t.id(), t.weight()),
+            None => (ANONYMOUS, 1),
+        };
+        self.pending.push(
+            lane,
+            weight,
+            Pending {
+                data,
+                batch,
+                enqueued: Stopwatch::start(),
+                deadline,
+                ticket,
+                reply,
+            },
+        );
     }
 
     /// Remove every deadline-expired request (they get the typed 504).
+    /// Dropping the extracted `Pending`s also releases their tenant
+    /// quota tickets.
     pub fn shed_expired(&mut self) -> Vec<Shed> {
         if !self.pending.iter().any(Pending::expired) {
             return Vec::new();
         }
-        let mut kept = VecDeque::with_capacity(self.pending.len());
-        let mut shed = Vec::new();
-        for p in self.pending.drain(..) {
-            if p.expired() {
+        self.pending
+            .take_matching(Pending::expired)
+            .into_iter()
+            .map(|p| {
                 self.rows_total -= p.batch;
-                shed.push(Shed {
+                Shed {
                     waited_us: p.enqueued.elapsed_micros(),
                     reply: p.reply,
-                });
-            } else {
-                kept.push_back(p);
-            }
-        }
-        self.pending = kept;
-        shed
+                }
+            })
+            .collect()
     }
 
-    /// Dequeue a FIFO prefix totalling ≤ `max_batch` rows (always at least
-    /// one request — an oversized single request chunks downstream). Each
-    /// item's `wait_us` is captured here, at dequeue.
+    /// Dequeue up to `max_batch` rows, serving tenant lanes deficit-
+    /// round-robin by weight (always at least one request when non-empty —
+    /// an oversized single request chunks downstream). With one lane this
+    /// is exactly the FIFO-prefix take ([`plan_take`]) the scheduler
+    /// always had. Each item's `wait_us` is captured here, at dequeue;
+    /// leaving the queue also drops the tenant quota ticket.
     pub fn take(&mut self, max_batch: usize) -> Flush {
-        let sizes: Vec<usize> = self.pending.iter().map(|p| p.batch).collect();
-        let n = plan_take(&sizes, max_batch);
-        let mut items = Vec::with_capacity(n);
+        let taken = self.pending.take(max_batch, |p| p.batch);
+        let mut items = Vec::with_capacity(taken.len());
         let mut rows = 0;
-        for _ in 0..n {
-            let p = self.pending.pop_front().expect("plan_take ≤ queue len");
+        for p in taken {
             rows += p.batch;
             self.rows_total -= p.batch;
             items.push(Dequeued {
@@ -229,6 +254,7 @@ impl TargetQueue {
                 wait_us: p.enqueued.elapsed_micros(),
                 reply: p.reply,
             });
+            // p.ticket drops here → quota rows released.
         }
         Flush { items, rows }
     }
@@ -326,6 +352,52 @@ mod tests {
                 assert!(rows + sizes[taken] > max_batch);
             }
         });
+    }
+
+    #[test]
+    fn target_queue_tenant_lanes_weighted_take_and_ticket_release() {
+        use crate::tenant::TenantSpec;
+        let t = |id: &str, weight| {
+            Arc::new(Tenant::new(TenantSpec {
+                id: id.into(),
+                key_sha256: crate::tenant::hash_key(id),
+                weight,
+                rate_rps: 0.0,
+                burst: 1.0,
+                queue_quota: 64,
+            }))
+        };
+        let (a, b) = (t("a", 3), t("b", 1));
+        let mut q = TargetQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        for _ in 0..16 {
+            for tenant in [&a, &b] {
+                let ticket = tenant.admit(1, 0).expect("within quota");
+                q.push(
+                    vec![0.0f32].into(),
+                    1,
+                    None,
+                    Some(tenant),
+                    Some(ticket),
+                    tx.clone(),
+                );
+            }
+        }
+        assert_eq!(q.len(), 32);
+        assert_eq!(q.rows(), 32);
+        assert_eq!(a.queued_rows(), 16);
+        let flush = q.take(8);
+        assert_eq!(flush.rows, 8);
+        let (qa, qb) = (a.queued_rows(), b.queued_rows());
+        assert_eq!(qa + qb, 24, "dequeued tickets released their rows");
+        assert!(
+            16 - qa > 16 - qb,
+            "weight-3 lane served more rows (a queued {qa}, b queued {qb})"
+        );
+        while !q.is_empty() {
+            q.take(usize::MAX);
+        }
+        assert_eq!(a.queued_rows() + b.queued_rows(), 0, "drain releases all");
     }
 
     #[test]

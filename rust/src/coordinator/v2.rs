@@ -158,8 +158,10 @@ fn handle_infer(s: &ServerState, name: &str, req: &Request) -> Result<Response, 
             return Err(ApiError::model_not_loaded(name));
         }
     }
+    let tenant = s.resolve_tenant(req)?;
     let parse_sw = Stopwatch::start();
-    let (ir, opts) = parse_infer(&s.manifest, req, ensemble_route)?;
+    let (mut ir, opts) = parse_infer(&s.manifest, req, ensemble_route)?;
+    ir.params.tenant = tenant;
     // Fast-fail an unknown `outputs` selection before any device work;
     // render_infer re-resolves against the actual forward output.
     validate_output_names(s, ensemble_route, &ir, &opts)?;
@@ -375,6 +377,7 @@ pub fn parse_infer(
             timeout,
             version,
             request_id: req.header("x-request-id").map(str::to_string),
+            tenant: None,
         },
     };
     Ok((ir, InferOptions { id, outputs }))

@@ -37,6 +37,11 @@
 //! | `mux.bad_frame`             | 400    | unparseable/invalid mux frame   |
 //! | `mux.duplicate_id`          | 400    | correlation id already in flight |
 //! | `gateway.mux_unrouted`      | 501    | mux/events not proxied by the gateway |
+//! | `auth.missing_key`          | 401    | tenants configured, no API key sent |
+//! | `auth.unknown_key`          | 403    | API key matches no configured tenant |
+//! | `tenant.rate_limited`       | 429    | tenant token bucket dry — Retry-After |
+//! | `tenant.quota_exceeded`     | 429    | tenant queue-depth quota reached |
+//! | `events.subscriber_limit`   | 429    | per-topic subscriber cap reached |
 //! | `internal`                  | 500    | unexpected server failure       |
 //!
 //! (*) Legacy unversioned routes flatten every predict-path status to the
@@ -290,6 +295,66 @@ impl ApiError {
     /// one backend's stream is the fleet's.
     pub fn mux_unrouted(detail: impl Into<String>) -> ApiError {
         Self::new(501, "gateway.mux_unrouted", detail)
+    }
+
+    /// Tenants are configured but the request carried no API key (neither
+    /// `Authorization: Bearer` nor `x-api-key`).
+    pub fn missing_key() -> ApiError {
+        Self::new(
+            401,
+            "auth.missing_key",
+            "tenants are configured: send 'Authorization: Bearer <key>' or 'x-api-key: <key>'",
+        )
+    }
+
+    /// The presented API key hashes to no configured tenant.
+    pub fn unknown_key() -> ApiError {
+        Self::new(403, "auth.unknown_key", "API key matches no configured tenant")
+    }
+
+    /// Per-tenant token-bucket shed — distinct from the global
+    /// `server.overloaded` so a rate-limited tenant can tell its own
+    /// back-pressure from the server's. `Retry-After` is computed from
+    /// the bucket refill (when the identical request would be admitted).
+    pub fn tenant_rate_limited(tenant: &str, retry_after: u64) -> ApiError {
+        ApiError {
+            retry_after: Some(retry_after.max(1)),
+            ..Self::new(
+                429,
+                "tenant.rate_limited",
+                format!("tenant '{tenant}' is over its request rate"),
+            )
+        }
+    }
+
+    /// Per-tenant queue-depth quota shed: this tenant already holds its
+    /// configured share of queued rows across targets.
+    pub fn tenant_quota_exceeded(tenant: &str, quota: usize, queued: usize) -> ApiError {
+        ApiError {
+            retry_after: Some(1),
+            ..Self::new(
+                429,
+                "tenant.quota_exceeded",
+                format!(
+                    "tenant '{tenant}' has {queued} rows queued (quota {quota}); \
+                     wait for completions"
+                ),
+            )
+        }
+    }
+
+    /// Events-plane admission: the per-topic subscriber cap
+    /// (`events.max_subscribers_per_topic`) is reached for a requested
+    /// topic.
+    pub fn subscriber_limit(topic: &str, cap: usize) -> ApiError {
+        ApiError {
+            retry_after: Some(1),
+            ..Self::new(
+                429,
+                "events.subscriber_limit",
+                format!("topic '{topic}' is at its subscriber cap ({cap})"),
+            )
+        }
     }
 
     pub fn internal(detail: impl fmt::Display) -> ApiError {
@@ -578,6 +643,7 @@ impl PredictRequest {
                 timeout: self.timeout,
                 version: self.version,
                 request_id: self.request_id,
+                tenant: None,
             },
         }
     }

@@ -316,6 +316,15 @@ impl Gateway {
                         Value::from(b.health.probe_failures.load(Ordering::Relaxed)),
                     ),
                     (
+                        // Requests this backend was skipped for at its
+                        // in-flight cap — the tier's shed story per replica.
+                        "sheds".to_string(),
+                        Value::from(
+                            self.metrics
+                                .counter(&format!("gw_backend_{}_shed_total", b.sid)),
+                        ),
+                    ),
+                    (
                         "active".to_string(),
                         Value::Arr(
                             b.health

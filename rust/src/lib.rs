@@ -38,5 +38,6 @@ pub mod json;
 pub mod mux;
 pub mod registry;
 pub mod runtime;
+pub mod tenant;
 pub mod util;
 pub mod workload;

@@ -22,6 +22,8 @@
 //! flexserve chaos-smoke      device-free fault-injection cycle (breakers,
 //!                            supervision, typed failures)
 //! flexserve mux-smoke        device-free mux wire + event plane cycle
+//! flexserve tenants          inspect / hot-reload a server's tenant plane
+//! flexserve tenant-smoke     device-free multi-tenant auth/quota/fairness cycle
 //! ```
 //!
 //! Flags after the subcommand: see `config::ServeConfig::apply_cli`.
@@ -75,6 +77,8 @@ fn run(args: &[String]) -> Result<()> {
         "gateway-smoke" => cmd_gateway_smoke(rest),
         "chaos-smoke" => cmd_chaos_smoke(rest),
         "mux-smoke" => cmd_mux_smoke(rest),
+        "tenants" => cmd_tenants(rest),
+        "tenant-smoke" => cmd_tenant_smoke(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -131,6 +135,12 @@ fn print_usage() {
            mux-smoke        device-free mux wire + event plane cycle: 100\n\
                             interleaved correlations on one connection,\n\
                             subscriptions over mux and plain NDJSON\n\
+           tenants          GET /v1/tenants on a running server; with\n\
+                            --file SPEC.json, PUT a hot-reloaded tenant set\n\
+           tenant-smoke     device-free multi-tenant cycle on the real serve\n\
+                            stack: keyed auth (401/403), token-bucket sheds\n\
+                            with Retry-After, weighted-fair goodput split,\n\
+                            per-tenant metrics, /v1/tenants hot reload\n\
          \n\
          COMMON FLAGS:\n\
            --artifacts DIR      artifact directory (default: ./artifacts)\n\
@@ -153,6 +163,9 @@ fn print_usage() {
            --backend xla|cpu|quant|auto (execution backend for every model)\n\
            --backend-override model=kind[,...] (per-model backend pins)\n\
            --cpu-workers N (0 = auto) --arena-cap-mb N (0 = 64MB default)\n\
+           --tenants-file SPEC.json (keyed tenants: weight, rate_rps, burst,\n\
+           queue_quota; empty = open/anonymous mode)\n\
+           --events-max-subscribers N (per-topic cap; 0 = unlimited)\n\
          SERVE-BASELINE FLAGS:\n\
            --fixed-batch N (default 1)\n\
          PREDICT FLAGS:\n\
@@ -169,6 +182,9 @@ fn print_usage() {
            --backend LABEL (stamp the target's backend into the report)\n\
            --backend-stack cpu|quant (boot an in-process serve stack on that\n\
            backend over synthetic artifacts and bench it; no device needed)\n\
+           --api-key KEY (bearer token on every request)\n\
+           --tenant-mix a=3,b=1 (weighted x-api-key split across connections;\n\
+           per-tenant goodput/p99 lands in BENCH_serve.json)\n\
            --out BENCH_serve.json --echo (in-process echo target; no artifacts)\n\
            --echo-queue-cap N --echo-delay-us N (echo admission gate: sheds\n\
            with typed 429s + Retry-After and exposes /v1/metrics, for\n\
@@ -505,6 +521,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                     None => bail!("--backend-stack expects cpu|quant (got '{kind}')"),
                 }
             }
+            "--api-key" => cfg.api_key = Some(take("--api-key")?),
+            "--tenant-mix" => cfg.tenant_mix = load::parse_tenant_mix(&take("--tenant-mix")?)?,
             "--seed" => cfg.seed = take("--seed")?.parse()?,
             "--out" => out = take("--out")?,
             "--echo" => echo = true,
@@ -600,6 +618,9 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             gateway.as_ref(),
         ));
         println!("{}", load::summary(&report));
+        for line in load::tenant_summary(&report) {
+            println!("  {line}");
+        }
     }
     // Single runs keep the flat BENCH_serve.json document; a sweep wraps
     // one record per step.
@@ -807,7 +828,7 @@ fn spawn_echo_target(
     // session loop, so the framed wire benches without artifacts.
     let mux_exec: flexserve::mux::ExecFn = {
         let delay = delay_us;
-        Arc::new(move |p: &Value| {
+        Arc::new(move |p: &Value, _auth: &flexserve::mux::FrameAuth| {
             if delay > 0 {
                 std::thread::sleep(std::time::Duration::from_micros(delay));
             }
@@ -824,7 +845,7 @@ fn spawn_echo_target(
         http_workers,
         Arc::new(move |req: &flexserve::http::Request| {
             if req.method == "POST" && req.path == "/v1/mux" {
-                return mux.takeover_response();
+                return mux.takeover_response(flexserve::mux::FrameAuth::from_request(req));
             }
             if req.method == "GET" && req.path == "/v1/events" {
                 return flexserve::mux::events_response(req, Arc::clone(&metrics), 256);
@@ -1807,7 +1828,7 @@ fn cmd_mux_smoke(args: &[String]) -> Result<()> {
 
     // Echo executor with payload-controlled service time, so completion
     // order is under test control.
-    let exec: mux::ExecFn = Arc::new(|p: &Value| {
+    let exec: mux::ExecFn = Arc::new(|p: &Value, _auth: &mux::FrameAuth| {
         if let Some(ms) = p.get("delay_ms").and_then(Value::as_u64) {
             std::thread::sleep(Duration::from_millis(ms));
         }
@@ -1828,7 +1849,7 @@ fn cmd_mux_smoke(args: &[String]) -> Result<()> {
         4,
         Arc::new(move |req: &Request| {
             if req.method == "POST" && req.path == "/v1/mux" {
-                return svc.takeover_response();
+                return svc.takeover_response(mux::FrameAuth::from_request(req));
             }
             if req.method == "GET" && req.path == "/v1/events" {
                 return mux::events_response(req, Arc::clone(&m2), 256);
@@ -1982,6 +2003,217 @@ fn cmd_mux_smoke(args: &[String]) -> Result<()> {
     drop(reader);
     handle.stop();
     println!("mux-smoke OK");
+    Ok(())
+}
+
+/// `flexserve tenants [--addr A] [--file SPEC.json]` — inspect a running
+/// server's tenant plane, or hot-reload it from a spec file (the same
+/// `{"tenants": {id: spec}}` shape the config file carries).
+fn cmd_tenants(args: &[String]) -> Result<()> {
+    let mut addr = "127.0.0.1:8080".to_string();
+    let mut file: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+            "--file" => file = Some(it.next().context("--file needs a value")?.clone()),
+            other => bail!("unknown tenants flag '{other}'"),
+        }
+    }
+    let mut client = Client::connect(addr.parse()?)?;
+    let doc = match file {
+        None => Client::expect_2xx(client.get("/v1/tenants")?)?,
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+            let body = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+            cli_request(&mut client, "PUT", "/v1/tenants", Some(&body))?
+        }
+    };
+    println!("{}", json::to_string_pretty(&doc));
+    Ok(())
+}
+
+/// One keyed v1 predict against a smoke stack (None = no credentials).
+fn keyed_predict(
+    client: &mut Client,
+    key: Option<&str>,
+    batch: usize,
+    rng: &mut Prng,
+) -> Result<Response> {
+    let (data, _) = workload::make_batch(rng, batch);
+    let body = Value::Obj(vec![
+        ("data".to_string(), json::f32_array_raw(data.iter().copied())),
+        ("batch".to_string(), Value::from(batch)),
+    ]);
+    let mut req = Request::new("POST", "/v1/predict", json::to_string(&body).into_bytes());
+    req.headers
+        .push(("content-type".into(), "application/json".into()));
+    if let Some(k) = key {
+        req.headers.push(("x-api-key".into(), k.to_string()));
+    }
+    client.request(&req)
+}
+
+/// `flexserve tenant-smoke` — device-free proof of the multi-tenant
+/// serving plane on the REAL stack (CPU backend over synthetic
+/// artifacts): keyed auth taxonomy (401/403), token-bucket sheds with
+/// Retry-After, a weighted-fair goodput split under a mixed closed loop,
+/// per-tenant metric series, and a `/v1/tenants` hot reload.
+fn cmd_tenant_smoke(args: &[String]) -> Result<()> {
+    if !args.is_empty() {
+        bail!("tenant-smoke takes no flags");
+    }
+    let dir = flexserve::runtime::synth::ensure_artifacts();
+    println!("tenant-smoke: artifacts at {}", dir.display());
+
+    let mut sc = ServeConfig::default();
+    sc.addr = "127.0.0.1:0".into();
+    sc.artifacts = dir;
+    sc.backend = Some("cpu".to_string());
+    // Keys ARE the tenant names, so the bench's --tenant-mix (which sends
+    // `x-api-key: <name>`) authenticates as-is.
+    sc.tenants = flexserve::tenant::parse_tenants(
+        &json::parse(
+            r#"{"noisy":{"key":"noisy","weight":1,"rate_rps":2,"burst":2,"queue_quota":64},
+                "quiet":{"key":"quiet","weight":3}}"#,
+        )
+        .expect("static spec parses"),
+    )
+    .map_err(anyhow::Error::msg)?;
+    let (handle, state) = serve(&sc).context("booting tenant-smoke stack")?;
+    println!(
+        "serving {} models on {} with {} tenants",
+        state.ensemble.models().len(),
+        handle.addr,
+        state.tenants.len()
+    );
+    let mut client = Client::connect(handle.addr)?;
+    let mut rng = Prng::new(17);
+
+    // --- 1. identity: no key → 401, wrong key → 403, right key → 200.
+    let resp = keyed_predict(&mut client, None, 1, &mut rng)?;
+    anyhow::ensure!(
+        resp.status == 401
+            && load::error_code_of(&resp).as_deref() == Some("auth.missing_key"),
+        "unauthenticated predict: {} {:?}",
+        resp.status,
+        load::error_code_of(&resp)
+    );
+    let resp = keyed_predict(&mut client, Some("wrong"), 1, &mut rng)?;
+    anyhow::ensure!(
+        resp.status == 403
+            && load::error_code_of(&resp).as_deref() == Some("auth.unknown_key"),
+        "bad-key predict: {} {:?}",
+        resp.status,
+        load::error_code_of(&resp)
+    );
+    let resp = keyed_predict(&mut client, Some("quiet"), 1, &mut rng)?;
+    anyhow::ensure!(resp.status == 200, "keyed predict failed: {}", resp.status);
+    println!("auth taxonomy OK (401 missing, 403 unknown, 200 keyed)");
+
+    // --- 2. admission: noisy's 2-rps bucket sheds typed 429s that carry
+    // Retry-After, while the first burst still serves.
+    let mut served = 0u32;
+    let mut shed = 0u32;
+    for _ in 0..12 {
+        let resp = keyed_predict(&mut client, Some("noisy"), 1, &mut rng)?;
+        match resp.status {
+            200 => served += 1,
+            429 => {
+                anyhow::ensure!(
+                    load::error_code_of(&resp).as_deref() == Some("tenant.rate_limited"),
+                    "shed code: {:?}",
+                    load::error_code_of(&resp)
+                );
+                anyhow::ensure!(
+                    resp.header("retry-after").is_some(),
+                    "tenant 429 without Retry-After"
+                );
+                shed += 1;
+            }
+            other => bail!("noisy predict: unexpected status {other}"),
+        }
+    }
+    anyhow::ensure!(
+        served >= 1 && shed >= 1,
+        "bucket did not bite: {served} served, {shed} shed"
+    );
+    println!("token bucket OK ({served} served, {shed} shed with Retry-After)");
+
+    // --- 3. weighted-fair goodput under a mixed closed loop: quiet's 3
+    // lanes keep full goodput while the rate-capped noisy lane sheds.
+    let cfg = LoadConfig {
+        addr: handle.addr,
+        connections: 4,
+        iters: Some(25),
+        warmup: 0,
+        batch_mix: vec![(1, 1.0)],
+        tenant_mix: load::parse_tenant_mix("quiet=3,noisy=1")?,
+        seed: 3,
+        ..Default::default()
+    };
+    let report = load::run(&cfg)?;
+    for line in load::tenant_summary(&report) {
+        println!("  {line}");
+    }
+    let quiet = report.tenants.get("quiet").context("quiet slice")?;
+    let noisy = report.tenants.get("noisy").context("noisy slice")?;
+    anyhow::ensure!(quiet.errors == 0, "quiet tenant was shed {} times", quiet.errors);
+    anyhow::ensure!(
+        noisy.error_codes.contains_key("tenant.rate_limited"),
+        "noisy saw no tenant.rate_limited sheds: {:?}",
+        noisy.error_codes
+    );
+    anyhow::ensure!(
+        quiet.ok_requests() > noisy.ok_requests(),
+        "weighted goodput inverted: quiet {} ≤ noisy {}",
+        quiet.ok_requests(),
+        noisy.ok_requests()
+    );
+    println!(
+        "weighted-fair goodput OK (quiet {} ok > noisy {} ok)",
+        quiet.ok_requests(),
+        noisy.ok_requests()
+    );
+
+    // --- 4. per-tenant series in the standard exposition (CI greps these).
+    let resp = client.get("/v1/metrics?format=prometheus")?;
+    let text = String::from_utf8_lossy(&resp.body).to_string();
+    for needle in [
+        "flexserve_tenant_quiet_requests_total",
+        "flexserve_tenant_noisy_requests_total",
+        "flexserve_tenant_noisy_shed_total",
+        "flexserve_tenant_quiet_predict_us",
+    ] {
+        anyhow::ensure!(text.contains(needle), "exposition is missing {needle}");
+    }
+    print!("{text}");
+
+    // --- 5. hot reload over the control plane: a third tenant keys in
+    // with no restart.
+    let spec = json::parse(
+        r#"{"tenants":{"noisy":{"key":"noisy","weight":1},
+            "quiet":{"key":"quiet","weight":3},
+            "extra":{"key":"extra","weight":2}}}"#,
+    )
+    .expect("static reload spec parses");
+    let doc = cli_request(&mut client, "PUT", "/v1/tenants", Some(&spec))?;
+    anyhow::ensure!(
+        doc.get("count").and_then(Value::as_u64) == Some(3),
+        "reload count: {doc}"
+    );
+    let resp = keyed_predict(&mut client, Some("extra"), 1, &mut rng)?;
+    anyhow::ensure!(resp.status == 200, "hot-reloaded tenant shed: {}", resp.status);
+    let listed = Client::expect_2xx(client.get("/v1/tenants")?)?;
+    anyhow::ensure!(
+        listed.path(&["tenants", "extra"]).is_some(),
+        "GET /v1/tenants misses the reloaded tenant: {listed}"
+    );
+    println!("hot reload OK (3 tenants; new key serves immediately)");
+
+    handle.stop();
+    println!("tenant-smoke OK");
     Ok(())
 }
 

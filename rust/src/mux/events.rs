@@ -26,7 +26,14 @@ pub const TOPIC_REGISTRY: &str = "registry";
 pub const TOPIC_BREAKER: &str = "breaker";
 pub const TOPIC_SCHED: &str = "sched";
 pub const TOPIC_METRICS: &str = "metrics";
-pub const TOPICS: [&str; 4] = [TOPIC_REGISTRY, TOPIC_BREAKER, TOPIC_SCHED, TOPIC_METRICS];
+pub const TOPIC_TENANT: &str = "tenant";
+pub const TOPICS: [&str; 5] = [
+    TOPIC_REGISTRY,
+    TOPIC_BREAKER,
+    TOPIC_SCHED,
+    TOPIC_METRICS,
+    TOPIC_TENANT,
+];
 
 /// Default per-subscriber queue bound (overridable per subscription; the
 /// server's `events.buffer` config plumbs through here).
@@ -47,6 +54,17 @@ struct SubInner {
     q: Mutex<SubQueue>,
     cv: Condvar,
     closed: AtomicBool,
+}
+
+impl SubInner {
+    /// Does this subscription's filter cover `topic`? (None = all topics,
+    /// so an unfiltered subscriber counts against every topic's cap.)
+    fn wants(&self, topic: &str) -> bool {
+        match &self.topics {
+            None => true,
+            Some(ts) => ts.iter().any(|t| t == topic),
+        }
+    }
 }
 
 /// What one receive returns.
@@ -119,6 +137,9 @@ struct Bus {
     active: AtomicUsize,
     seq: AtomicU64,
     sink: OnceLock<Arc<Metrics>>,
+    /// Per-topic live-subscriber cap enforced by [`try_subscribe`]
+    /// (`events.max_subscribers_per_topic`); 0 = unlimited.
+    max_per_topic: AtomicUsize,
 }
 
 fn bus() -> &'static Bus {
@@ -139,10 +160,15 @@ pub fn subscriber_count() -> usize {
     bus().active.load(Ordering::Relaxed)
 }
 
-/// Subscribe to `topics` (None = everything) with a queue bound of `cap`.
-pub fn subscribe(topics: Option<Vec<String>>, cap: usize) -> Subscriber {
-    let b = bus();
-    let inner = Arc::new(SubInner {
+/// Set the per-topic live-subscriber cap enforced by [`try_subscribe`]
+/// (0 = unlimited, the default). Plumbed from
+/// `events.max_subscribers_per_topic`.
+pub fn set_subscriber_limit(cap: usize) {
+    bus().max_per_topic.store(cap, Ordering::Relaxed);
+}
+
+fn new_sub(topics: Option<Vec<String>>, cap: usize) -> Arc<SubInner> {
+    Arc::new(SubInner {
         topics,
         cap: cap.max(1),
         q: Mutex::new(SubQueue {
@@ -152,7 +178,15 @@ pub fn subscribe(topics: Option<Vec<String>>, cap: usize) -> Subscriber {
         }),
         cv: Condvar::new(),
         closed: AtomicBool::new(false),
-    });
+    })
+}
+
+/// Subscribe to `topics` (None = everything) with a queue bound of `cap`,
+/// bypassing the per-topic subscriber cap (internal/test use — the wire
+/// paths go through [`try_subscribe`]).
+pub fn subscribe(topics: Option<Vec<String>>, cap: usize) -> Subscriber {
+    let b = bus();
+    let inner = new_sub(topics, cap);
     let mut subs = b.subs.lock().unwrap();
     subs.push(Arc::clone(&inner));
     b.active.store(subs.len(), Ordering::Relaxed);
@@ -160,6 +194,45 @@ pub fn subscribe(topics: Option<Vec<String>>, cap: usize) -> Subscriber {
         m.set_gauge("events_subscribers", subs.len() as u64);
     }
     Subscriber { inner }
+}
+
+/// Subscribe enforcing the per-topic subscriber cap: every topic the new
+/// filter covers must still be under `events.max_subscribers_per_topic`
+/// live subscribers. `Err((topic, cap))` names the first topic at
+/// capacity (the wire maps it to `429 events.subscriber_limit`) and bumps
+/// `events_subscriber_rejected_total`.
+pub fn try_subscribe(
+    topics: Option<Vec<String>>,
+    cap: usize,
+) -> Result<Subscriber, (String, usize)> {
+    let b = bus();
+    let inner = new_sub(topics, cap);
+    let mut subs = b.subs.lock().unwrap();
+    let limit = b.max_per_topic.load(Ordering::Relaxed);
+    if limit > 0 {
+        // Closed-but-unpruned subscribers must not hold seats.
+        subs.retain(|s| !s.closed.load(Ordering::Acquire));
+        let wanted: Vec<&str> = match &inner.topics {
+            None => TOPICS.to_vec(),
+            Some(ts) => ts.iter().map(String::as_str).collect(),
+        };
+        for topic in wanted {
+            if subs.iter().filter(|s| s.wants(topic)).count() >= limit {
+                b.active.store(subs.len(), Ordering::Relaxed);
+                drop(subs);
+                if let Some(m) = b.sink.get() {
+                    m.inc("events_subscriber_rejected_total");
+                }
+                return Err((topic.to_string(), limit));
+            }
+        }
+    }
+    subs.push(Arc::clone(&inner));
+    b.active.store(subs.len(), Ordering::Relaxed);
+    if let Some(m) = b.sink.get() {
+        m.set_gauge("events_subscribers", subs.len() as u64);
+    }
+    Ok(Subscriber { inner })
 }
 
 /// Publish one event to every live subscriber whose filter matches
@@ -189,11 +262,7 @@ pub fn publish(topic: &str, data: Value) {
         if s.closed.load(Ordering::Acquire) {
             return false;
         }
-        let wants = match &s.topics {
-            None => true,
-            Some(ts) => ts.iter().any(|t| t == topic),
-        };
-        if wants {
+        if s.wants(topic) {
             let mut q = s.q.lock().unwrap();
             if q.items.len() >= s.cap {
                 q.items.pop_front();
@@ -324,6 +393,42 @@ mod tests {
         let seq0 = b.seq.load(Ordering::Relaxed);
         publish(TOPIC_SCHED, Value::Null);
         assert_eq!(b.seq.load(Ordering::Relaxed), seq0);
+    }
+
+    #[test]
+    fn per_topic_subscriber_cap_rejects_at_capacity() {
+        let _g = guard();
+        set_subscriber_limit(1);
+        let first = try_subscribe(Some(vec!["sched".into()]), 4).expect("first seat");
+        // Same topic at capacity → typed rejection naming the topic.
+        assert_eq!(
+            try_subscribe(Some(vec!["sched".into()]), 4).err(),
+            Some(("sched".to_string(), 1))
+        );
+        // An unfiltered subscription covers every topic, so it is also
+        // rejected while `sched` is full…
+        assert_eq!(
+            try_subscribe(None, 4).err(),
+            Some(("sched".to_string(), 1))
+        );
+        // …but a disjoint topic still has seats.
+        let other = try_subscribe(Some(vec!["tenant".into()]), 4).expect("disjoint topic");
+        // Releasing the seat frees the topic (closed subs don't count).
+        drop(first);
+        let again = try_subscribe(Some(vec!["sched".into()]), 4).expect("seat freed");
+        drop(other);
+        drop(again);
+        set_subscriber_limit(0);
+    }
+
+    #[test]
+    fn zero_limit_means_unlimited() {
+        let _g = guard();
+        set_subscriber_limit(0);
+        let subs: Vec<_> = (0..8)
+            .map(|_| try_subscribe(None, 2).expect("unlimited"))
+            .collect();
+        assert_eq!(subs.len(), 8);
     }
 
     #[test]

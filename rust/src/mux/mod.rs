@@ -71,11 +71,46 @@ impl Default for MuxOptions {
     }
 }
 
+/// The credentials one mux frame executes under: the auth headers captured
+/// when the connection was taken over, optionally overridden per-frame by
+/// an `api_key` payload field — so one multiplexed connection can carry
+/// several tenants' traffic with per-frame attribution.
+#[derive(Debug, Clone, Default)]
+pub struct FrameAuth {
+    /// The session's `Authorization` header, verbatim.
+    pub authorization: Option<String>,
+    /// The session's `x-api-key` header (or the frame's `api_key` field).
+    pub api_key: Option<String>,
+}
+
+impl FrameAuth {
+    /// Capture the connection-level credentials from the takeover request.
+    pub fn from_request(req: &Request) -> FrameAuth {
+        FrameAuth {
+            authorization: req.header("authorization").map(str::to_string),
+            api_key: req.header("x-api-key").map(str::to_string),
+        }
+    }
+
+    /// The auth this frame runs as: an `api_key` payload field replaces
+    /// the session credentials entirely (no fallback mixing).
+    fn for_frame(&self, payload: &Value) -> FrameAuth {
+        match payload.get("api_key").and_then(Value::as_str) {
+            Some(k) => FrameAuth {
+                authorization: None,
+                api_key: Some(k.to_string()),
+            },
+            None => self.clone(),
+        }
+    }
+}
+
 /// The execution hook a mux session lowers `request` payloads into. The
 /// production wiring synthesizes a `POST /v1/predict` request and runs the
 /// identical parse → execute → render path (byte-identity with HTTP is
-/// pinned by the differential test); smokes and benches wire an echo.
-pub type ExecFn = Arc<dyn Fn(&Value) -> Result<Value, ApiError> + Send + Sync>;
+/// pinned by the differential test); smokes and benches wire an echo. The
+/// [`FrameAuth`] is the frame's resolved credential context.
+pub type ExecFn = Arc<dyn Fn(&Value, &FrameAuth) -> Result<Value, ApiError> + Send + Sync>;
 
 /// A mux endpoint: one instance per server, one session per connection.
 pub struct MuxService {
@@ -97,7 +132,9 @@ impl MuxService {
 
     /// The `POST /v1/mux` handler's answer: a streaming-head response that
     /// hands the connection to a mux session after the head is written.
-    pub fn takeover_response(self: &Arc<Self>) -> Response {
+    /// `auth` is the connection's captured credentials — every frame on the
+    /// session runs under them unless it carries its own `api_key`.
+    pub fn takeover_response(self: &Arc<Self>, auth: FrameAuth) -> Response {
         let svc = Arc::clone(self);
         let mut resp = Response::text(200, "");
         resp.headers
@@ -105,14 +142,14 @@ impl MuxService {
         resp.headers
             .push(("content-type".into(), "application/x-ndjson".into()));
         resp.takeover = Some(Takeover::new(move |reader, writer| {
-            svc.run_session(reader, writer);
+            svc.run_session(reader, writer, &auth);
         }));
         resp
     }
 
     /// One connection's session loop (runs on the connection's HTTP worker
     /// thread — a mux session is just a very long keep-alive request).
-    fn run_session(&self, mut reader: BufReader<TcpStream>, writer: TcpStream) {
+    fn run_session(&self, mut reader: BufReader<TcpStream>, writer: TcpStream, auth: &FrameAuth) {
         self.metrics.inc("mux_connections_total");
         let open = self.open.fetch_add(1, Ordering::Relaxed) + 1;
         self.metrics.set_gauge("mux_connections_open", open as u64);
@@ -142,6 +179,7 @@ impl MuxService {
                                 self.metrics.inc("mux_frames_in_total");
                                 if !self.dispatch(
                                     frame,
+                                    auth,
                                     &writer,
                                     &done,
                                     &inflight,
@@ -210,9 +248,11 @@ impl MuxService {
     }
 
     /// Handle one inbound frame; returns false to close the session.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch(
         &self,
         frame: Frame,
+        auth: &FrameAuth,
         writer: &Arc<Mutex<TcpStream>>,
         done: &Arc<AtomicBool>,
         inflight: &Arc<Mutex<HashSet<u64>>>,
@@ -259,8 +299,9 @@ impl MuxService {
                 let inflight = Arc::clone(inflight);
                 let chunk_bytes = self.opts.chunk_bytes;
                 let payload = frame.payload;
+                let frame_auth = auth.for_frame(&payload);
                 pool.execute(move || {
-                    let result = exec(&payload);
+                    let result = exec(&payload, &frame_auth);
                     let _ = send_result(&writer, &metrics, id, result, chunk_bytes);
                     inflight.lock().unwrap().remove(&id);
                 });
@@ -287,7 +328,15 @@ impl MuxService {
                     }
                 };
                 self.metrics.inc("mux_subscribes_total");
-                let sub = Arc::new(events::subscribe(filter.clone(), self.opts.event_buffer));
+                let sub = match events::try_subscribe(filter.clone(), self.opts.event_buffer) {
+                    Ok(s) => Arc::new(s),
+                    Err((topic, cap)) => {
+                        self.metrics.inc("mux_errors_total");
+                        let e = ApiError::subscriber_limit(&topic, cap);
+                        return write_frame(writer, &self.metrics, &error_frame(id, &e))
+                            .is_ok();
+                    }
+                };
                 let ack = Frame::new(
                     id,
                     FrameKind::Response,
@@ -528,6 +577,13 @@ pub fn events_response(req: &Request, metrics: Arc<Metrics>, buffer: usize) -> R
             .to_response()
         }
     };
+    // The subscriber cap is enforced BEFORE the connection is taken over,
+    // so a rejected stream gets a plain HTTP 429 instead of a hijacked
+    // socket that immediately closes.
+    let sub = match events::try_subscribe(filter, buffer) {
+        Ok(s) => s,
+        Err((topic, cap)) => return ApiError::subscriber_limit(&topic, cap).to_response(),
+    };
     let mut resp = Response::text(200, "");
     resp.headers
         .retain(|(k, _)| !k.eq_ignore_ascii_case("content-type"));
@@ -535,7 +591,6 @@ pub fn events_response(req: &Request, metrics: Arc<Metrics>, buffer: usize) -> R
         .push(("content-type".into(), "application/x-ndjson".into()));
     resp.takeover = Some(Takeover::new(move |_reader, mut writer| {
         metrics.inc("events_streams_total");
-        let sub = events::subscribe(filter.clone(), buffer);
         loop {
             let line = match sub.recv_timeout(Duration::from_secs(10)) {
                 events::Recv::Event(v) => json::to_string(&v),

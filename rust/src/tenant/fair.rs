@@ -1,0 +1,305 @@
+//! Deficit-round-robin weighted-fair queueing — the dequeue core of the
+//! tenant plane.
+//!
+//! [`DrrQueue`] is a generic multi-lane queue: items land FIFO in their
+//! tenant's lane, and [`DrrQueue::take`] serves lanes round-robin with a
+//! per-round deficit credit proportional to lane weight (the classic DRR
+//! of Shreedhar & Varghese, quantum in *batch rows*). A lane offering 10×
+//! its share therefore cannot push another lane below
+//! `weight / Σ weights` of the dequeued rows — the bound the tenant
+//! fairness property pins.
+//!
+//! With a single lane (the `anonymous` open mode) DRR degenerates to
+//! exactly the FIFO-prefix take the scheduler always had, so the no-tenant
+//! configuration is behavior-identical by construction.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+struct Lane<T> {
+    id: Arc<str>,
+    weight: u64,
+    /// Accumulated service credit, in rows. Reset when the lane empties
+    /// (standard DRR: idle lanes bank nothing).
+    deficit: u64,
+    items: VecDeque<T>,
+}
+
+/// A weighted multi-lane FIFO with deficit-round-robin dequeue.
+pub struct DrrQueue<T> {
+    lanes: Vec<Lane<T>>,
+    len: usize,
+}
+
+impl<T> Default for DrrQueue<T> {
+    fn default() -> Self {
+        DrrQueue {
+            lanes: Vec::new(),
+            len: 0,
+        }
+    }
+}
+
+impl<T> DrrQueue<T> {
+    pub fn new() -> DrrQueue<T> {
+        DrrQueue::default()
+    }
+
+    /// Append `item` to `lane`'s FIFO (creating the lane with `weight`
+    /// floored at 1 on first use; an existing lane keeps its weight).
+    pub fn push(&mut self, lane: &str, weight: u64, item: T) {
+        self.len += 1;
+        if let Some(l) = self.lanes.iter_mut().find(|l| &*l.id == lane) {
+            l.items.push_back(item);
+            return;
+        }
+        let mut items = VecDeque::new();
+        items.push_back(item);
+        self.lanes.push(Lane {
+            id: Arc::from(lane),
+            weight: weight.max(1),
+            deficit: 0,
+            items,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Every queued item, lane-major (lane order, FIFO within a lane).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.lanes.iter().flat_map(|l| l.items.iter())
+    }
+
+    /// The oldest item of each lane (the per-lane FIFO front).
+    pub fn fronts(&self) -> impl Iterator<Item = &T> {
+        self.lanes.iter().filter_map(|l| l.items.front())
+    }
+
+    /// Dequeue up to `max_rows` rows (per `rows_of`) across lanes by DRR.
+    /// Always returns at least one item when non-empty — the very first
+    /// item taken ignores the row budget, matching the scheduler's
+    /// "an oversized request still flushes alone" contract.
+    pub fn take(&mut self, max_rows: usize, rows_of: impl Fn(&T) -> usize) -> Vec<T> {
+        let mut out = Vec::new();
+        let mut rows = 0usize;
+        loop {
+            let mut any = false;
+            for lane in self.lanes.iter_mut() {
+                if lane.items.is_empty() {
+                    continue;
+                }
+                lane.deficit = lane.deficit.saturating_add(lane.weight);
+                while let Some(front) = lane.items.front() {
+                    let r = rows_of(front).max(1);
+                    if !out.is_empty() && rows + r > max_rows {
+                        break;
+                    }
+                    if lane.deficit < r as u64 {
+                        break;
+                    }
+                    lane.deficit -= r as u64;
+                    rows += r;
+                    self.len -= 1;
+                    out.push(lane.items.pop_front().expect("front checked"));
+                    any = true;
+                }
+                if lane.items.is_empty() {
+                    lane.deficit = 0;
+                }
+                if rows >= max_rows && !out.is_empty() {
+                    break;
+                }
+            }
+            let drained = self.len == 0;
+            let budget_full = rows >= max_rows && !out.is_empty();
+            // Keep spinning rounds while the budget is open and either
+            // something moved or nothing has been taken yet (deficits are
+            // still accumulating toward the first oversized front).
+            if drained || budget_full || (!any && !out.is_empty()) {
+                break;
+            }
+        }
+        // Rotate so the next take starts its round at a different lane;
+        // with deficits persisted this only varies intra-round order.
+        if !self.lanes.is_empty() {
+            self.lanes.rotate_left(1);
+        }
+        self.lanes.retain(|l| !l.items.is_empty());
+        out
+    }
+
+    /// Remove and return every item matching `pred` (used for deadline
+    /// expiry), preserving FIFO order within lanes.
+    pub fn take_matching(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        for lane in self.lanes.iter_mut() {
+            let mut keep = VecDeque::with_capacity(lane.items.len());
+            for item in lane.items.drain(..) {
+                if pred(&item) {
+                    out.push(item);
+                } else {
+                    keep.push_back(item);
+                }
+            }
+            lane.items = keep;
+        }
+        self.len -= out.len();
+        self.lanes.retain(|l| !l.items.is_empty());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn rows(r: &usize) -> usize {
+        *r
+    }
+
+    #[test]
+    fn single_lane_is_fifo_prefix() {
+        let mut q: DrrQueue<usize> = DrrQueue::new();
+        for r in [2usize, 3, 1, 4] {
+            q.push("anonymous", 1, r);
+        }
+        // Budget 6 → FIFO prefix [2, 3, 1]; order preserved.
+        assert_eq!(q.take(6, rows), vec![2, 3, 1]);
+        assert_eq!(q.take(6, rows), vec![4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn oversized_first_item_still_flushes_alone() {
+        let mut q: DrrQueue<usize> = DrrQueue::new();
+        q.push("a", 1, 10);
+        q.push("a", 1, 1);
+        let got = q.take(4, rows);
+        assert_eq!(got, vec![10], "first item ignores the row budget");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn weighted_share_over_backlogged_lanes() {
+        let mut q: DrrQueue<&'static str> = DrrQueue::new();
+        for _ in 0..400 {
+            q.push("a", 3, "a");
+            q.push("b", 1, "b");
+        }
+        let mut a = 0usize;
+        let mut b = 0usize;
+        // Both lanes stay backlogged for the first ~100 rows served.
+        while a + b < 100 {
+            for item in q.take(8, |_| 1) {
+                match item {
+                    "a" => a += 1,
+                    _ => b += 1,
+                }
+            }
+        }
+        let share_a = a as f64 / (a + b) as f64;
+        assert!(
+            (share_a - 0.75).abs() < 0.1,
+            "weight-3 lane served {share_a} of rows (want ~0.75)"
+        );
+    }
+
+    #[test]
+    fn take_matching_extracts_and_preserves_order() {
+        let mut q: DrrQueue<usize> = DrrQueue::new();
+        for i in 0..6 {
+            q.push(if i % 2 == 0 { "a" } else { "b" }, 1, i);
+        }
+        let evens = q.take_matching(|i| i % 2 == 0);
+        assert_eq!(evens, vec![0, 2, 4]);
+        assert_eq!(q.len(), 3);
+        let rest = q.take(usize::MAX, |_| 1);
+        assert_eq!(rest.len(), 3);
+    }
+
+    #[test]
+    fn prop_conservation_and_termination() {
+        check("drr conserves items", 150, |g| {
+            let mut q: DrrQueue<(usize, usize)> = DrrQueue::new();
+            let lanes = ["a", "b", "c", "d"];
+            let n = g.int(1, 60);
+            for i in 0..n {
+                let lane = *g.choose(&lanes);
+                let weight = g.int(1, 5) as u64;
+                q.push(lane, weight, (i, g.int(1, 6)));
+            }
+            assert_eq!(q.len(), n);
+            let mut seen = Vec::new();
+            while !q.is_empty() {
+                let batch = q.take(g.int(1, 12), |(_, r)| *r);
+                assert!(!batch.is_empty(), "take on non-empty queue progresses");
+                seen.extend(batch.into_iter().map(|(i, _)| i));
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_lane_fifo_order_is_preserved() {
+        check("drr keeps per-lane FIFO", 150, |g| {
+            let mut q: DrrQueue<(u8, usize)> = DrrQueue::new();
+            let mut next = [0usize; 3];
+            for _ in 0..g.int(1, 50) {
+                let lane = g.int(0, 2);
+                q.push(["a", "b", "c"][lane], g.int(1, 4) as u64, (lane as u8, next[lane]));
+                next[lane] += 1;
+            }
+            let mut last = [None::<usize>; 3];
+            while !q.is_empty() {
+                for (lane, seq) in q.take(g.int(1, 8), |_| 1) {
+                    let prev = &mut last[lane as usize];
+                    assert!(prev.map_or(true, |p| seq > p), "lane {lane} reordered");
+                    *prev = Some(seq);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_noisy_lane_cannot_starve_weighted_share() {
+        // The ISSUE's pinned bound: A (weight 3) offering 10× its share
+        // must leave B (weight 1) ≥ 80% of B's weight share of served
+        // rows while B stays backlogged.
+        check("drr weight-share bound under overload", 60, |g| {
+            let wa = g.int(1, 5) as u64;
+            let wb = g.int(1, 5) as u64;
+            let mut q: DrrQueue<u8> = DrrQueue::new();
+            // A offers 10× B's volume; both far exceed what will be served.
+            for _ in 0..1000 {
+                q.push("a", wa, 0);
+            }
+            for _ in 0..100 {
+                q.push("b", wb, 1);
+            }
+            let budget = g.int(1, 16);
+            let mut served = [0usize; 2];
+            // Serve while both lanes are provably still backlogged.
+            while served[0] < 500 && served[1] < 90 {
+                for item in q.take(budget, |_| 1) {
+                    served[item as usize] += 1;
+                }
+            }
+            let total = (served[0] + served[1]) as f64;
+            let b_share = served[1] as f64 / total;
+            let b_weight_share = wb as f64 / (wa + wb) as f64;
+            assert!(
+                b_share >= 0.8 * b_weight_share,
+                "b served {b_share:.3}, want ≥ 80% of weight share {b_weight_share:.3} \
+                 (wa={wa}, wb={wb})"
+            );
+        });
+    }
+}

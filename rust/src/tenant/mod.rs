@@ -1,0 +1,603 @@
+//! The multi-tenant serving plane (ROADMAP open item 3).
+//!
+//! Three pure, device-free cores, each property-tested in isolation and
+//! wired into the existing request path:
+//!
+//! * **identity** (this module) — an API-key store mapping sha256-hashed
+//!   keys to per-tenant specs (`weight`, `rate_rps`, `burst`,
+//!   `queue_quota`), loaded from the `tenants` config block or
+//!   `--tenants-file`, hot-reloadable via `PUT /v1/tenants`. The wires
+//!   (`/v1`, `/v2`, `/v1/mux`) resolve `Authorization: Bearer <key>` or
+//!   `x-api-key: <key>` to a [`Tenant`] handle, answering typed
+//!   `401 auth.missing_key` / `403 auth.unknown_key` when tenants are
+//!   configured.
+//! * [`bucket`] — deterministic token-bucket rate limiting; the scheduler
+//!   checks it before enqueue and sheds `429 tenant.rate_limited` with a
+//!   `Retry-After` computed from the refill.
+//! * [`fair`] — deficit-round-robin weighted-fair dequeue across
+//!   per-tenant lanes inside each target queue, quantum ∝ `weight` in
+//!   batch rows.
+//!
+//! With no tenants configured the plane is **disabled**: resolution
+//! returns `Ok(None)`, every request rides the single `anonymous` lane,
+//! no per-tenant series are emitted, and the server behaves
+//! byte-identically to the pre-tenant build (pinned by the integration
+//! suite's anonymous-mode tests).
+
+pub mod bucket;
+pub mod fair;
+
+use crate::json::{self, Value};
+use sha2::{Digest, Sha256};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+/// The lane every request rides when the plane is disabled (and the
+/// reserved tenant id — a configured tenant may not claim it).
+pub const ANONYMOUS: &str = "anonymous";
+
+/// One tenant's configured identity and limits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant id: `[A-Za-z0-9_-]+`, also the metric-series label (`-`
+    /// renders as `_` in series names).
+    pub id: String,
+    /// Lowercase hex sha256 of the API key. Plaintext keys are hashed at
+    /// parse time and never stored.
+    pub key_sha256: String,
+    /// DRR quantum, in batch rows per round (≥ 1).
+    pub weight: u64,
+    /// Token-bucket refill, rows/second. 0 = unlimited.
+    pub rate_rps: f64,
+    /// Token-bucket capacity, rows. Defaults to `max(rate_rps, 1)`.
+    pub burst: f64,
+    /// Max rows this tenant may hold queued across targets. 0 = unlimited.
+    pub queue_quota: usize,
+}
+
+impl TenantSpec {
+    /// Parse one tenant's spec object. Exactly one of `key` (plaintext,
+    /// hashed here) or `key_sha256` is required.
+    pub fn from_value(id: &str, v: &Value) -> Result<TenantSpec, String> {
+        if id.is_empty() || !id.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!(
+                "tenant id '{id}' must be non-empty [A-Za-z0-9_-]+"
+            ));
+        }
+        if id == ANONYMOUS {
+            return Err(format!("tenant id '{ANONYMOUS}' is reserved"));
+        }
+        if v.as_obj().is_none() {
+            return Err(format!("tenant '{id}': spec must be an object"));
+        }
+        let key = v.get("key").and_then(Value::as_str);
+        let key_sha = v.get("key_sha256").and_then(Value::as_str);
+        let key_sha256 = match (key, key_sha) {
+            (Some(k), None) if !k.is_empty() => hash_key(k),
+            (None, Some(h)) if h.len() == 64 && h.chars().all(|c| c.is_ascii_hexdigit()) => {
+                h.to_ascii_lowercase()
+            }
+            (None, Some(_)) => {
+                return Err(format!(
+                    "tenant '{id}': key_sha256 must be 64 hex characters"
+                ))
+            }
+            (Some(_), Some(_)) => {
+                return Err(format!("tenant '{id}': give key OR key_sha256, not both"))
+            }
+            _ => return Err(format!("tenant '{id}': missing key / key_sha256")),
+        };
+        let weight = match v.get("weight") {
+            None => 1,
+            Some(w) => w
+                .as_u64()
+                .filter(|&w| w >= 1)
+                .ok_or_else(|| format!("tenant '{id}': weight must be an integer ≥ 1"))?,
+        };
+        let rate_rps = match v.get("rate_rps") {
+            None => 0.0,
+            Some(r) => r
+                .as_f64()
+                .filter(|r| r.is_finite() && *r >= 0.0)
+                .ok_or_else(|| format!("tenant '{id}': rate_rps must be a number ≥ 0"))?,
+        };
+        let burst = match v.get("burst") {
+            None => rate_rps.max(1.0),
+            Some(b) => b
+                .as_f64()
+                .filter(|b| b.is_finite() && *b >= 1.0)
+                .ok_or_else(|| format!("tenant '{id}': burst must be a number ≥ 1"))?,
+        };
+        let queue_quota = match v.get("queue_quota") {
+            None => 0,
+            Some(q) => q
+                .as_usize()
+                .ok_or_else(|| format!("tenant '{id}': queue_quota must be a non-negative integer"))?,
+        };
+        Ok(TenantSpec {
+            id: id.to_string(),
+            key_sha256,
+            weight,
+            rate_rps,
+            burst,
+            queue_quota,
+        })
+    }
+
+    /// The spec as the `/v1/tenants` document renders it (hash, never key).
+    pub fn to_value(&self) -> Value {
+        json::obj([
+            ("key_sha256", Value::from(self.key_sha256.as_str())),
+            ("weight", Value::from(self.weight)),
+            ("rate_rps", Value::from(self.rate_rps)),
+            ("burst", Value::from(self.burst)),
+            ("queue_quota", Value::from(self.queue_quota)),
+        ])
+    }
+
+    /// The tenant's metric-series label: the id with `-` folded to `_`
+    /// (`tenant_<label>_requests_total` stays Prometheus-clean).
+    pub fn metric_label(&self) -> String {
+        self.id.replace('-', "_")
+    }
+}
+
+/// Lowercase hex sha256 of an API key.
+pub fn hash_key(key: &str) -> String {
+    let digest = Sha256::digest(key.as_bytes());
+    let mut out = String::with_capacity(64);
+    for b in digest {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Parse a whole `tenants` block / tenants-file document: an object
+/// mapping tenant id → spec object (a top-level `{"tenants": {...}}`
+/// wrapper is also accepted, so a config file and `PUT /v1/tenants` bodies
+/// share one shape).
+pub fn parse_tenants(v: &Value) -> Result<Vec<TenantSpec>, String> {
+    let v = match v.get("tenants") {
+        Some(inner) => inner,
+        None => v,
+    };
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| "tenants must be an object of id → spec".to_string())?;
+    let mut out: Vec<TenantSpec> = Vec::with_capacity(obj.len());
+    for (id, spec) in obj {
+        let spec = TenantSpec::from_value(id, spec)?;
+        if out.iter().any(|t| t.key_sha256 == spec.key_sha256) {
+            return Err(format!("tenant '{id}': duplicate API key"));
+        }
+        out.push(spec);
+    }
+    Ok(out)
+}
+
+/// Why key resolution failed (the wire maps these to the
+/// `401 auth.missing_key` / `403 auth.unknown_key` taxonomy rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuthError {
+    MissingKey,
+    UnknownKey,
+}
+
+/// Admission verdicts from [`Tenant::admit`] (the wire maps these to
+/// `429 tenant.rate_limited` / `429 tenant.quota_exceeded`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    RateLimited { retry_after_secs: u64 },
+    QuotaExceeded { quota: usize, queued: usize },
+}
+
+/// RAII queue-quota ticket: while alive the rows count against the
+/// tenant's `queue_quota`; dropping it (the request left the queue —
+/// dequeued into a flush, shed on deadline, or drained) releases them.
+#[derive(Debug)]
+pub struct QueueTicket {
+    queued: Arc<AtomicUsize>,
+    rows: usize,
+}
+
+impl Drop for QueueTicket {
+    fn drop(&mut self) {
+        self.queued.fetch_sub(self.rows, Ordering::Relaxed);
+    }
+}
+
+/// One resolved tenant: the spec plus its live admission state. Shared
+/// (`Arc`) between the wire (resolution), `InferParams` (threading) and
+/// the scheduler (admission + lane selection).
+#[derive(Debug)]
+pub struct Tenant {
+    pub spec: TenantSpec,
+    lane: Arc<str>,
+    bucket: Mutex<bucket::TokenBucket>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl Tenant {
+    pub fn new(spec: TenantSpec) -> Tenant {
+        let lane = Arc::from(spec.id.as_str());
+        let bucket = Mutex::new(bucket::TokenBucket::new(spec.rate_rps, spec.burst));
+        Tenant {
+            spec,
+            lane,
+            bucket,
+            queued: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.spec.id
+    }
+
+    /// The DRR lane key (shared `Arc<str>` so queue pushes don't allocate).
+    pub fn lane(&self) -> &Arc<str> {
+        &self.lane
+    }
+
+    pub fn weight(&self) -> u64 {
+        self.spec.weight
+    }
+
+    /// Rows currently queued against this tenant's quota.
+    pub fn queued_rows(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Admit `rows` at `now_us`: token bucket first (nothing is reserved
+    /// on a rate shed), then the queue quota. On success the returned
+    /// ticket holds the rows until the request leaves the queue.
+    pub fn admit(&self, rows: usize, now_us: u64) -> Result<QueueTicket, Shed> {
+        if self.spec.rate_rps > 0.0 {
+            let mut b = self.bucket.lock().unwrap();
+            if let Err(retry_after_secs) = b.try_take(now_us, rows as f64) {
+                return Err(Shed::RateLimited { retry_after_secs });
+            }
+        }
+        let quota = self.spec.queue_quota;
+        if quota > 0 {
+            // Optimistic reserve; back out on overshoot (races only ever
+            // shed spuriously at the boundary, never over-admit past
+            // quota + rows).
+            let prev = self.queued.fetch_add(rows, Ordering::Relaxed);
+            if prev + rows > quota {
+                self.queued.fetch_sub(rows, Ordering::Relaxed);
+                return Err(Shed::QuotaExceeded {
+                    quota,
+                    queued: prev,
+                });
+            }
+        } else {
+            self.queued.fetch_add(rows, Ordering::Relaxed);
+        }
+        Ok(QueueTicket {
+            queued: Arc::clone(&self.queued),
+            rows,
+        })
+    }
+}
+
+/// The process clock the scheduler stamps admissions with (microseconds
+/// since first use; monotone). Tests drive [`Tenant::admit`] with explicit
+/// timestamps instead.
+pub fn clock_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+struct PlaneInner {
+    by_key: HashMap<String, Arc<Tenant>>,
+    /// Insertion-ordered ids for stable introspection documents.
+    order: Vec<Arc<Tenant>>,
+}
+
+/// The tenant registry: key → tenant resolution plus hot reload.
+/// Disabled (open anonymous mode) when no tenants are configured.
+pub struct TenantPlane {
+    inner: RwLock<PlaneInner>,
+}
+
+impl Default for TenantPlane {
+    fn default() -> Self {
+        TenantPlane::new(Vec::new())
+    }
+}
+
+impl TenantPlane {
+    pub fn new(specs: Vec<TenantSpec>) -> TenantPlane {
+        let plane = TenantPlane {
+            inner: RwLock::new(PlaneInner {
+                by_key: HashMap::new(),
+                order: Vec::new(),
+            }),
+        };
+        plane.install(specs);
+        plane
+    }
+
+    /// Whether any tenants are configured (enforcement on).
+    pub fn enabled(&self) -> bool {
+        !self.inner.read().unwrap().order.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Replace the tenant set (hot reload). Tenants whose id survives keep
+    /// their live queue accounting (outstanding queue tickets keep
+    /// decrementing the same counter); buckets restart full at the new
+    /// rate.
+    pub fn install(&self, specs: Vec<TenantSpec>) {
+        let mut inner = self.inner.write().unwrap();
+        let mut order: Vec<Arc<Tenant>> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut tenant = Tenant::new(spec);
+            if let Some(old) = inner.order.iter().find(|t| t.id() == tenant.id()) {
+                tenant.queued = Arc::clone(&old.queued);
+            }
+            order.push(Arc::new(tenant));
+        }
+        inner.by_key = order
+            .iter()
+            .map(|t| (t.spec.key_sha256.clone(), Arc::clone(t)))
+            .collect();
+        inner.order = order;
+    }
+
+    /// Resolve a request's credentials. `Ok(None)` = plane disabled (open
+    /// anonymous mode — credentials, if any, are ignored). With tenants
+    /// configured, a missing key is [`AuthError::MissingKey`] and an
+    /// unrecognized one [`AuthError::UnknownKey`].
+    pub fn resolve(
+        &self,
+        authorization: Option<&str>,
+        x_api_key: Option<&str>,
+    ) -> Result<Option<Arc<Tenant>>, AuthError> {
+        let inner = self.inner.read().unwrap();
+        if inner.order.is_empty() {
+            return Ok(None);
+        }
+        let key = bearer_token(authorization).or(x_api_key).map(str::trim);
+        let key = match key.filter(|k| !k.is_empty()) {
+            Some(k) => k,
+            None => return Err(AuthError::MissingKey),
+        };
+        match inner.by_key.get(&hash_key(key)) {
+            Some(t) => Ok(Some(Arc::clone(t))),
+            None => Err(AuthError::UnknownKey),
+        }
+    }
+
+    /// Find a configured tenant by id (introspection / smokes).
+    pub fn by_id(&self, id: &str) -> Option<Arc<Tenant>> {
+        self.inner
+            .read()
+            .unwrap()
+            .order
+            .iter()
+            .find(|t| t.id() == id)
+            .cloned()
+    }
+
+    /// All configured tenants, in config order.
+    pub fn tenants(&self) -> Vec<Arc<Tenant>> {
+        self.inner.read().unwrap().order.clone()
+    }
+
+    /// The `GET /v1/tenants` document: configured specs (hashes only) and
+    /// live queue accounting.
+    pub fn describe(&self) -> Value {
+        let inner = self.inner.read().unwrap();
+        let tenants: Vec<(String, Value)> = inner
+            .order
+            .iter()
+            .map(|t| {
+                let mut doc = match t.spec.to_value() {
+                    Value::Obj(members) => members,
+                    _ => unreachable!("spec doc is an object"),
+                };
+                doc.push(("queued_rows".to_string(), Value::from(t.queued_rows())));
+                (t.id().to_string(), Value::Obj(doc))
+            })
+            .collect();
+        json::obj([
+            ("enabled", Value::Bool(!inner.order.is_empty())),
+            ("count", Value::from(inner.order.len())),
+            ("tenants", Value::Obj(tenants)),
+        ])
+    }
+}
+
+/// Extract the token from an `Authorization: Bearer <token>` header
+/// (scheme case-insensitive; other schemes yield None).
+fn bearer_token(authorization: Option<&str>) -> Option<&str> {
+    let h = authorization?.trim();
+    let (scheme, token) = h.split_once(char::is_whitespace)?;
+    if scheme.eq_ignore_ascii_case("bearer") {
+        Some(token.trim())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn spec(id: &str, key: &str, weight: u64, rate: f64, quota: usize) -> TenantSpec {
+        TenantSpec {
+            id: id.into(),
+            key_sha256: hash_key(key),
+            weight,
+            rate_rps: rate,
+            burst: rate.max(1.0),
+            queue_quota: quota,
+        }
+    }
+
+    #[test]
+    fn sha256_matches_reference_vector() {
+        // sha256("") and sha256("abc") — FIPS 180-2 test vectors.
+        assert_eq!(
+            hash_key(""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hash_key("abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn disabled_plane_is_open() {
+        let p = TenantPlane::default();
+        assert!(!p.enabled());
+        // No credentials, bogus credentials: both ride anonymous.
+        assert_eq!(p.resolve(None, None).unwrap(), None);
+        assert!(p.resolve(Some("Bearer nope"), None).unwrap().is_none());
+    }
+
+    #[test]
+    fn resolution_maps_keys_and_types_failures() {
+        let p = TenantPlane::new(vec![
+            spec("alice", "key-a", 3, 0.0, 0),
+            spec("bob", "key-b", 1, 0.0, 0),
+        ]);
+        assert!(p.enabled());
+        let t = p.resolve(Some("Bearer key-a"), None).unwrap().unwrap();
+        assert_eq!(t.id(), "alice");
+        assert_eq!(t.weight(), 3);
+        // x-api-key works too; Authorization wins when both are present.
+        let t = p.resolve(None, Some("key-b")).unwrap().unwrap();
+        assert_eq!(t.id(), "bob");
+        let t = p.resolve(Some("bearer key-a"), Some("key-b")).unwrap();
+        assert_eq!(t.unwrap().id(), "alice");
+        assert_eq!(p.resolve(None, None), Err(AuthError::MissingKey));
+        assert_eq!(
+            p.resolve(Some("Bearer wrong"), None),
+            Err(AuthError::UnknownKey)
+        );
+        // Non-bearer schemes don't leak into key lookup.
+        assert_eq!(
+            p.resolve(Some("Basic key-a"), None),
+            Err(AuthError::MissingKey)
+        );
+    }
+
+    #[test]
+    fn spec_parse_validates_and_hashes() {
+        let v = crate::json::parse(
+            r#"{"alice": {"key": "secret", "weight": 3, "rate_rps": 10, "queue_quota": 8},
+                "bob": {"key_sha256": "AB0000000000000000000000000000000000000000000000000000000000CDEF"}}"#,
+        )
+        .unwrap();
+        let specs = parse_tenants(&v).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].id, "alice");
+        assert_eq!(specs[0].key_sha256, hash_key("secret"));
+        assert_eq!((specs[0].weight, specs[0].queue_quota), (3, 8));
+        assert_eq!(specs[0].burst, 10.0, "burst defaults to rate_rps");
+        assert_eq!(specs[1].weight, 1, "weight defaults to 1");
+        assert!(specs[1].key_sha256.starts_with("ab00"), "hash lowercased");
+
+        for (bad, needle) in [
+            (r#"{"x y": {"key": "k"}}"#, "A-Za-z0-9_-"),
+            (r#"{"anonymous": {"key": "k"}}"#, "reserved"),
+            (r#"{"a": {}}"#, "missing key"),
+            (r#"{"a": {"key": "k", "key_sha256": "00"}}"#, "not both"),
+            (r#"{"a": {"key_sha256": "zz"}}"#, "64 hex"),
+            (r#"{"a": {"key": "k", "weight": 0}}"#, "weight"),
+            (r#"{"a": {"key": "k", "rate_rps": -1}}"#, "rate_rps"),
+            (r#"{"a": {"key": "k"}, "b": {"key": "k"}}"#, "duplicate"),
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            let e = parse_tenants(&v).unwrap_err();
+            assert!(e.contains(needle), "'{bad}' → '{e}'");
+        }
+    }
+
+    #[test]
+    fn admission_quota_accounts_at_shed_and_release() {
+        let t = Tenant::new(spec("a", "k", 1, 0.0, 4));
+        let t1 = t.admit(3, 0).unwrap();
+        assert_eq!(t.queued_rows(), 3);
+        // 3 + 2 > 4 → shed, and the failed reserve is backed out.
+        match t.admit(2, 0) {
+            Err(Shed::QuotaExceeded { quota: 4, queued: 3 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(t.queued_rows(), 3);
+        let t2 = t.admit(1, 0).unwrap();
+        assert_eq!(t.queued_rows(), 4);
+        drop(t1);
+        assert_eq!(t.queued_rows(), 1, "ticket drop releases its rows");
+        drop(t2);
+        assert_eq!(t.queued_rows(), 0);
+    }
+
+    #[test]
+    fn admission_rate_limit_carries_retry_after() {
+        let t = Tenant::new(spec("a", "k", 1, 2.0, 0));
+        // burst = max(rate, 1) = 2 rows up front.
+        assert!(t.admit(2, 0).is_ok());
+        match t.admit(2, 0) {
+            Err(Shed::RateLimited { retry_after_secs }) => {
+                assert_eq!(retry_after_secs, 1, "2 rows at 2 rps = 1s");
+            }
+            other => panic!("{other:?}"),
+        }
+        // A rate shed reserves nothing against the quota.
+        assert_eq!(t.queued_rows(), 2);
+    }
+
+    #[test]
+    fn reload_preserves_queue_accounting_by_id() {
+        let p = TenantPlane::new(vec![spec("a", "k1", 1, 0.0, 10)]);
+        let t = p.resolve(None, Some("k1")).unwrap().unwrap();
+        let ticket = t.admit(5, 0).unwrap();
+        // Reload with a new key and weight for the same id.
+        p.install(vec![spec("a", "k2", 4, 0.0, 10)]);
+        assert_eq!(p.resolve(None, Some("k1")), Err(AuthError::UnknownKey));
+        let t2 = p.resolve(None, Some("k2")).unwrap().unwrap();
+        assert_eq!(t2.weight(), 4);
+        assert_eq!(t2.queued_rows(), 5, "live accounting survives reload");
+        drop(ticket);
+        assert_eq!(t2.queued_rows(), 0, "old tickets release the new counter");
+    }
+
+    #[test]
+    fn prop_quota_never_over_admits() {
+        check("tenant quota accounting", 100, |g| {
+            let quota = g.int(1, 16);
+            let t = Tenant::new(spec("a", "k", 1, 0.0, quota));
+            let mut tickets = Vec::new();
+            for _ in 0..60 {
+                let rows = g.int(1, 4);
+                match t.admit(rows, 0) {
+                    Ok(ticket) => tickets.push(ticket),
+                    Err(Shed::QuotaExceeded { .. }) => {}
+                    Err(other) => panic!("{other:?}"),
+                }
+                assert!(t.queued_rows() <= quota, "queued past quota");
+                if g.bool(0.3) && !tickets.is_empty() {
+                    let i = g.int(0, tickets.len() - 1);
+                    tickets.swap_remove(i);
+                }
+            }
+            drop(tickets);
+            assert_eq!(t.queued_rows(), 0, "all rows released");
+        });
+    }
+}

@@ -516,6 +516,80 @@ fn model_keyed_routes_stick_and_introspection_is_local() {
     b1.stop();
 }
 
+/// Tenant credentials survive the hop: the gateway forwards
+/// `Authorization` and `x-api-key` verbatim (it strips only hop-by-hop
+/// headers), so a keyed fleet authenticates end-to-end without the
+/// gateway holding any keys. `/v1/gateway` also reports each backend's
+/// `sheds` counter for the tier's per-replica shed story.
+#[test]
+fn auth_headers_pass_through_and_sheds_reported() {
+    let echo = Server::spawn(
+        "127.0.0.1:0",
+        2,
+        Arc::new(|req: &Request| {
+            if req.method == "GET" && req.path == "/v1/healthz" {
+                return Response::json(
+                    200,
+                    &json::obj([
+                        ("status", Value::from("ok")),
+                        ("ready", Value::from(true)),
+                        ("active", Value::Arr(vec![Value::from("m1")])),
+                    ]),
+                );
+            }
+            Response::json(
+                200,
+                &json::obj([
+                    (
+                        "authorization",
+                        Value::from(req.header("authorization").unwrap_or("")),
+                    ),
+                    (
+                        "x_api_key",
+                        Value::from(req.header("x-api-key").unwrap_or("")),
+                    ),
+                ]),
+            )
+        }),
+    )
+    .unwrap();
+    let ids = vec!["r0".to_string()];
+    let gw = gateway::spawn(gateway_cfg(&ids, &[&echo])).unwrap();
+    let mut c = Client::connect(gw.server.addr).unwrap();
+
+    let mut req = Request::new("POST", "/v1/predict?models=m1", br#"{"batch":1}"#.to_vec());
+    req.headers
+        .push(("authorization".into(), "Bearer sk-tenant".into()));
+    req.headers.push(("x-api-key".into(), "acme-key".into()));
+    let resp = c.request(&req).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let doc = resp.json_body().unwrap();
+    assert_eq!(
+        doc.get("authorization").and_then(Value::as_str),
+        Some("Bearer sk-tenant"),
+        "Authorization must reach the backend untouched: {doc}"
+    );
+    assert_eq!(
+        doc.get("x_api_key").and_then(Value::as_str),
+        Some("acme-key"),
+        "x-api-key must reach the backend untouched: {doc}"
+    );
+
+    // Introspection carries the per-backend shed counter (zero here — no
+    // replica was ever skipped at its in-flight cap).
+    let doc = c.get("/v1/gateway").unwrap().json_body().unwrap();
+    let sheds = doc
+        .get("backends")
+        .and_then(Value::as_arr)
+        .and_then(|arr| arr.first())
+        .and_then(|b| b.get("sheds"))
+        .and_then(Value::as_u64);
+    assert_eq!(sheds, Some(0), "{doc}");
+
+    gw.stop();
+    echo.stop();
+}
+
 // ---------------------------------------------------------------------------
 // Device-backed differential
 // ---------------------------------------------------------------------------

@@ -45,7 +45,7 @@ fn artifact_dir() -> PathBuf {
 /// optional payload-controlled delay (`{"delay_ms": N}`).
 fn spawn_echo_mux(opts: MuxOptions) -> (ServerHandle, Arc<Metrics>) {
     let metrics = sink();
-    let exec: mux::ExecFn = Arc::new(|p: &Value| {
+    let exec: mux::ExecFn = Arc::new(|p: &Value, _auth: &mux::FrameAuth| {
         if let Some(ms) = p.get("delay_ms").and_then(Value::as_u64) {
             std::thread::sleep(Duration::from_millis(ms));
         }
@@ -58,7 +58,7 @@ fn spawn_echo_mux(opts: MuxOptions) -> (ServerHandle, Arc<Metrics>) {
         2,
         Arc::new(move |req: &Request| {
             if req.method == "POST" && req.path == "/v1/mux" {
-                return svc.takeover_response();
+                return svc.takeover_response(mux::FrameAuth::from_request(req));
             }
             if req.method == "GET" && req.path == "/v1/events" {
                 return mux::events_response(req, Arc::clone(&m2), 8);

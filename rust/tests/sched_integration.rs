@@ -231,7 +231,7 @@ fn shutdown_drains_queued_requests() {
     let submitter = std::thread::spawn(move || {
         let mut rng = Prng::new(5);
         let (data, _) = workload::make_batch(&mut rng, 1);
-        s2.submit(TargetKey::Ensemble, data, 1, None)
+        s2.submit(TargetKey::Ensemble, data, 1, None, None)
     });
     // Wait until the request is parked inside the 5 s window…
     for _ in 0..200 {
@@ -257,7 +257,7 @@ fn shutdown_drains_queued_requests() {
     // Post-drain submissions are refused, not silently queued forever.
     let mut rng = Prng::new(6);
     let (data, _) = workload::make_batch(&mut rng, 1);
-    assert!(sched.submit(TargetKey::Ensemble, data, 1, None).is_err());
+    assert!(sched.submit(TargetKey::Ensemble, data, 1, None, None).is_err());
 }
 
 #[test]
@@ -286,7 +286,7 @@ fn bounded_drain_sheds_queued_requests_typed() {
     let submitter = std::thread::spawn(move || {
         let mut rng = Prng::new(7);
         let (data, _) = workload::make_batch(&mut rng, 1);
-        s2.submit(TargetKey::Ensemble, data, 1, None)
+        s2.submit(TargetKey::Ensemble, data, 1, None, None)
     });
     for _ in 0..200 {
         if sched.queue_depth() > 0 {

@@ -1,0 +1,426 @@
+//! Multi-tenant serving-plane integration.
+//!
+//! Every test boots the REAL `serve` stack device-free (CPU backend over
+//! the seeded synthetic artifact set) and drives it through the public
+//! wire. Pinned here:
+//!
+//! * anonymous byte-compat — with no tenants configured the wire is
+//!   byte-identical to the keyed stack's answers (tenancy never leaks
+//!   into response bodies);
+//! * the auth taxonomy across all three protocols (v1 + v2 + mux):
+//!   `401 auth.missing_key`, `403 auth.unknown_key`, 200 when keyed;
+//! * typed admission sheds: `429 tenant.rate_limited` with `Retry-After`
+//!   and `429 tenant.quota_exceeded`, both distinct from
+//!   `server.overloaded`;
+//! * per-tenant Prometheus series and tenant-attributed audit records;
+//! * the fairness pin: a quiet tenant keeps its full goodput while a
+//!   noisy tenant offering 10x the load sheds via `tenant.*` only.
+//!
+//! The stacks share the process-global event bus (serve() rebinds its
+//! sink), so every test serializes under one static mutex like the mux
+//! suite does.
+
+use flexserve::benchkit::load::{self, LoadConfig};
+use flexserve::config::ServeConfig;
+use flexserve::coordinator::{serve, SchedConfig};
+use flexserve::http::{Client, MuxClient, MuxMsg, Request};
+use flexserve::json::{self, Value};
+use flexserve::util::Prng;
+use flexserve::workload;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serialize every test in this binary: `serve()` rebinds the
+/// process-global event sink and subscriber cap at boot.
+fn guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Boot a device-free stack (CPU backend over synthetic artifacts),
+/// optionally tenanted, with the scheduler `sched` (None = default).
+fn boot(
+    tenants: Option<&str>,
+    sched: Option<SchedConfig>,
+) -> (flexserve::http::ServerHandle, std::sync::Arc<flexserve::coordinator::ServerState>) {
+    let mut config = ServeConfig::default();
+    config.addr = "127.0.0.1:0".into();
+    config.artifacts = flexserve::runtime::synth::ensure_artifacts();
+    config.http_workers = 4;
+    config.device_workers = 1;
+    config.warmup = false;
+    config.backend = Some("cpu".to_string());
+    config.events_metrics_ms = 0; // keep the global bus quiet
+    if let Some(spec) = tenants {
+        config.tenants =
+            flexserve::tenant::parse_tenants(&json::parse(spec).unwrap()).unwrap();
+    }
+    if let Some(sc) = sched {
+        config.scheduler = Some(sc);
+    }
+    serve(&config).expect("server starts")
+}
+
+/// Two keyed tenants: `alpha` (weight 3, unlimited) and `bravo`
+/// (weight 1, 1 rps / burst 1 — one request then typed sheds).
+const TWO_TENANTS: &str = r#"{
+    "alpha": {"key": "alpha-key", "weight": 3},
+    "bravo": {"key": "bravo-key", "weight": 1, "rate_rps": 1, "burst": 1}
+}"#;
+
+/// A deterministic non-detail v1 predict body (rendering carries no
+/// timings, so repeated executions serialize identically).
+fn v1_body(seed: u64, batch: usize) -> Value {
+    let mut rng = Prng::new(seed);
+    let (data, _) = workload::make_batch(&mut rng, batch);
+    json::obj([
+        ("data", json::f32_array_raw(data.iter().copied())),
+        ("batch", Value::from(batch)),
+    ])
+}
+
+/// POST a v1 predict with optional credentials (header name, value).
+fn predict(
+    c: &mut Client,
+    body: &Value,
+    auth: Option<(&str, &str)>,
+) -> flexserve::http::Response {
+    let mut req = Request::new("POST", "/v1/predict", json::to_string(body).into_bytes());
+    req.headers
+        .push(("content-type".into(), "application/json".into()));
+    if let Some((name, value)) = auth {
+        req.headers.push((name.to_string(), value.to_string()));
+    }
+    c.request(&req).unwrap()
+}
+
+/// With no tenants configured the stack is OPEN: unauthenticated requests
+/// serve, stray credentials are ignored, and the bytes on the wire are
+/// identical to what a keyed stack answers its tenants — tenancy is
+/// invisible in response bodies by construction.
+#[test]
+fn anonymous_mode_is_byte_identical_to_keyed_answers() {
+    let _g = guard();
+    let (open, _so) = boot(None, None);
+    let body = v1_body(42, 3);
+
+    let mut c = Client::connect(open.addr).unwrap();
+    let plain = predict(&mut c, &body, None);
+    assert_eq!(plain.status, 200, "{}", String::from_utf8_lossy(&plain.body));
+    // Open mode ignores stray keys instead of 403ing them.
+    let keyed = predict(&mut c, &body, Some(("x-api-key", "whatever")));
+    assert_eq!(keyed.status, 200);
+    assert_eq!(plain.body, keyed.body, "stray keys must not change the wire");
+    open.stop();
+
+    let (closed, _sc) = boot(Some(TWO_TENANTS), None);
+    let mut c = Client::connect(closed.addr).unwrap();
+    let tenant = predict(&mut c, &body, Some(("authorization", "Bearer alpha-key")));
+    assert_eq!(tenant.status, 200, "{}", String::from_utf8_lossy(&tenant.body));
+    assert_eq!(
+        plain.body, tenant.body,
+        "keyed answers must be byte-identical to the open wire"
+    );
+    closed.stop();
+}
+
+/// The auth taxonomy holds on every protocol: v1, v2 (OIP), and the mux
+/// wire all answer `401 auth.missing_key` without credentials,
+/// `403 auth.unknown_key` for a bad key, and serve both tenants' keys.
+#[test]
+fn auth_taxonomy_across_v1_v2_and_mux() {
+    let _g = guard();
+    let (handle, _state) = boot(Some(TWO_TENANTS), None);
+    let mut c = Client::connect(handle.addr).unwrap();
+    let body = v1_body(7, 2);
+
+    // v1: Bearer and x-api-key are both accepted spellings.
+    let resp = predict(&mut c, &body, None);
+    assert_eq!(resp.status, 401);
+    assert_eq!(load::error_code_of(&resp).as_deref(), Some("auth.missing_key"));
+    let resp = predict(&mut c, &body, Some(("x-api-key", "no-such-key")));
+    assert_eq!(resp.status, 403);
+    assert_eq!(load::error_code_of(&resp).as_deref(), Some("auth.unknown_key"));
+    let resp = predict(&mut c, &body, Some(("authorization", "Bearer alpha-key")));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let resp = predict(&mut c, &body, Some(("x-api-key", "alpha-key")));
+    assert_eq!(resp.status, 200);
+
+    // v2: same taxonomy in the OIP error shape ({"error": "code: msg"}).
+    let mut rng = Prng::new(7);
+    let (data, _) = workload::make_batch(&mut rng, 1);
+    let v2_body = json::obj([
+        (
+            "inputs",
+            Value::Arr(vec![json::obj([
+                ("name", Value::from("input")),
+                ("datatype", Value::from("FP32")),
+                (
+                    "shape",
+                    Value::Arr(vec![
+                        Value::from(1usize),
+                        Value::from(workload::IMG),
+                        Value::from(workload::IMG),
+                        Value::from(1usize),
+                    ]),
+                ),
+                ("data", json::f32_array_raw(data.iter().copied())),
+            ])]),
+        ),
+    ]);
+    let post_v2 = |c: &mut Client, auth: Option<(&str, &str)>| {
+        let mut req = Request::new(
+            "POST",
+            "/v2/models/_ensemble/infer",
+            json::to_string(&v2_body).into_bytes(),
+        );
+        req.headers
+            .push(("content-type".into(), "application/json".into()));
+        if let Some((name, value)) = auth {
+            req.headers.push((name.to_string(), value.to_string()));
+        }
+        c.request(&req).unwrap()
+    };
+    let resp = post_v2(&mut c, None);
+    assert_eq!(resp.status, 401);
+    assert_eq!(load::error_code_of(&resp).as_deref(), Some("auth.missing_key"));
+    let resp = post_v2(&mut c, Some(("authorization", "Bearer nope")));
+    assert_eq!(resp.status, 403);
+    assert_eq!(load::error_code_of(&resp).as_deref(), Some("auth.unknown_key"));
+    let resp = post_v2(&mut c, Some(("x-api-key", "bravo-key")));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+
+    // mux: identity rides per-frame as the payload's `api_key` member —
+    // one session can speak for many tenants, and a frame with no
+    // credentials sheds with the same taxonomy as HTTP.
+    let mut mc = MuxClient::connect(handle.addr).unwrap();
+    match mc.call(1, &body).unwrap() {
+        MuxMsg::Error { status, code, .. } => {
+            assert_eq!((status, code.as_str()), (401, "auth.missing_key"));
+        }
+        other => panic!("anonymous mux frame must shed typed, got {other:?}"),
+    }
+    let mut keyed = body.clone();
+    if let Value::Obj(fields) = &mut keyed {
+        fields.push(("api_key".to_string(), Value::from("alpha-key")));
+    }
+    match mc.call(2, &keyed).unwrap() {
+        MuxMsg::Reply { .. } => {}
+        other => panic!("keyed mux frame must serve, got {other:?}"),
+    }
+    let mut wrong = body.clone();
+    if let Value::Obj(fields) = &mut wrong {
+        fields.push(("api_key".to_string(), Value::from("stolen")));
+    }
+    match mc.call(3, &wrong).unwrap() {
+        MuxMsg::Error { status, code, .. } => {
+            assert_eq!((status, code.as_str()), (403, "auth.unknown_key"));
+        }
+        other => panic!("bad mux key must shed typed, got {other:?}"),
+    }
+    handle.stop();
+}
+
+/// A tenant over its token-bucket rate sheds `429 tenant.rate_limited`
+/// with a `Retry-After` hint — and the shed is its OWN: the other tenant
+/// keeps serving, and the code is never the global `server.overloaded`.
+#[test]
+fn rate_limit_sheds_typed_with_retry_after() {
+    let _g = guard();
+    let (handle, _state) = boot(Some(TWO_TENANTS), None);
+    let mut c = Client::connect(handle.addr).unwrap();
+    let body = v1_body(11, 1);
+
+    // bravo has 1 rps / burst 1: five rapid requests must include both a
+    // served one (the burst token) and typed sheds, even on a slow box
+    // (tokens available over T seconds = 1 + T).
+    let mut served = 0u32;
+    let mut shed = 0u32;
+    for _ in 0..5 {
+        let resp = predict(&mut c, &body, Some(("x-api-key", "bravo-key")));
+        match resp.status {
+            200 => served += 1,
+            429 => {
+                assert_eq!(
+                    load::error_code_of(&resp).as_deref(),
+                    Some("tenant.rate_limited"),
+                    "tenant sheds must never be server.overloaded"
+                );
+                let after: u64 = resp
+                    .header("retry-after")
+                    .expect("tenant 429 must carry Retry-After")
+                    .parse()
+                    .unwrap();
+                assert!(after >= 1, "Retry-After must be at least a second");
+                shed += 1;
+            }
+            other => panic!("unexpected status {other}"),
+        }
+    }
+    assert!(served >= 1, "the burst token must serve");
+    assert!(shed >= 1, "the dry bucket must shed");
+
+    // The noisy neighbor's sheds are invisible to alpha.
+    let resp = predict(&mut c, &body, Some(("authorization", "Bearer alpha-key")));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    handle.stop();
+}
+
+/// A tenant at its queue-depth quota sheds `429 tenant.quota_exceeded`
+/// while its earlier queued work still completes — quota releases ride
+/// the dequeue, not the response.
+#[test]
+fn queue_quota_sheds_typed_while_queued_work_completes() {
+    let _g = guard();
+    // A wide batching window holds the first request in the queue long
+    // enough for the second to observe the occupied quota.
+    let (handle, _state) = boot(
+        Some(r#"{"solo": {"key": "solo-key", "queue_quota": 1}}"#),
+        Some(SchedConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(400),
+            adaptive: false,
+            ..Default::default()
+        }),
+    );
+    let addr = handle.addr;
+    let first = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        predict(&mut c, &v1_body(3, 1), Some(("x-api-key", "solo-key"))).status
+    });
+    // Land inside the first request's batching window.
+    std::thread::sleep(Duration::from_millis(120));
+    let mut c = Client::connect(addr).unwrap();
+    let resp = predict(&mut c, &v1_body(4, 1), Some(("x-api-key", "solo-key")));
+    assert_eq!(resp.status, 429, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(
+        load::error_code_of(&resp).as_deref(),
+        Some("tenant.quota_exceeded")
+    );
+    assert_eq!(first.join().unwrap(), 200, "queued work must still serve");
+    // The quota released at dequeue: the lane admits again.
+    let resp = predict(&mut c, &v1_body(5, 1), Some(("x-api-key", "solo-key")));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    handle.stop();
+}
+
+/// Keyed traffic lands in per-tenant Prometheus series, and control-plane
+/// writes by a keyed caller are audit-attributed `tenant:<id>`.
+#[test]
+fn per_tenant_metrics_and_audit_attribution() {
+    let _g = guard();
+    let (handle, _state) = boot(Some(TWO_TENANTS), None);
+    let mut c = Client::connect(handle.addr).unwrap();
+    let body = v1_body(23, 1);
+
+    for _ in 0..3 {
+        assert_eq!(
+            predict(&mut c, &body, Some(("authorization", "Bearer alpha-key"))).status,
+            200
+        );
+    }
+    // Drain bravo's burst token, then force at least one typed shed.
+    loop {
+        let resp = predict(&mut c, &body, Some(("x-api-key", "bravo-key")));
+        if resp.status == 429 {
+            break;
+        }
+        assert_eq!(resp.status, 200);
+    }
+
+    let text = String::from_utf8(
+        c.get("/v1/metrics?format=prometheus").unwrap().body,
+    )
+    .unwrap();
+    for needle in [
+        "flexserve_tenant_alpha_requests_total",
+        "flexserve_tenant_alpha_predict_us",
+        "flexserve_tenant_bravo_requests_total",
+        "flexserve_tenant_bravo_shed_total",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+
+    // A keyed PUT /v1/tenants audits as the tenant that drove it.
+    let mut req = Request::new(
+        "PUT",
+        "/v1/tenants",
+        json::to_string(&json::parse(TWO_TENANTS).unwrap()).into_bytes(),
+    );
+    req.headers
+        .push(("content-type".into(), "application/json".into()));
+    req.headers
+        .push(("authorization".into(), "Bearer alpha-key".into()));
+    let resp = c.request(&req).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let doc = resp.json_body().unwrap();
+    assert_eq!(doc.get("count").and_then(Value::as_u64), Some(2), "{doc}");
+
+    let audit = c.audit(10).unwrap();
+    let attributed = audit
+        .get("audit")
+        .and_then(Value::as_arr)
+        .map(|entries| {
+            entries.iter().any(|e| {
+                e.get("event").and_then(Value::as_str) == Some("tenants")
+                    && e.get("actor").and_then(Value::as_str) == Some("tenant:alpha")
+            })
+        })
+        .unwrap_or(false);
+    assert!(attributed, "no tenant-attributed audit record in {audit}");
+    handle.stop();
+}
+
+/// The fairness pin: `noiz` (weight 1, hard-capped) offers 10x the
+/// connections `calm` (weight 3, unlimited) does. calm must keep 100% of
+/// its goodput — comfortably over the >=80%-of-weight-share bar — while
+/// every one of noiz's sheds is a typed `tenant.*` verdict, never the
+/// global `server.overloaded`.
+#[test]
+fn quiet_tenant_keeps_goodput_under_noisy_overload() {
+    let _g = guard();
+    let (handle, _state) = boot(
+        Some(
+            r#"{
+                "calm": {"key": "calm", "weight": 3},
+                "noiz": {"key": "noiz", "weight": 1, "rate_rps": 5, "burst": 5}
+            }"#,
+        ),
+        None,
+    );
+    let cfg = LoadConfig {
+        addr: handle.addr,
+        connections: 11,
+        iters: Some(20),
+        warmup: 0,
+        batch_mix: vec![(1, 1.0)],
+        tenant_mix: load::parse_tenant_mix("noiz=10,calm=1").unwrap(),
+        seed: 9,
+        ..Default::default()
+    };
+    let report = load::run(&cfg).unwrap();
+    let calm = report.tenants.get("calm").expect("calm slice");
+    let noiz = report.tenants.get("noiz").expect("noiz slice");
+
+    assert_eq!(
+        calm.errors, 0,
+        "the quiet tenant must never shed under a noisy neighbor: {:?}",
+        calm.error_codes
+    );
+    assert!(
+        calm.ok_requests() as f64 >= 0.8 * 20.0,
+        "calm goodput {} below 80% of its share",
+        calm.ok_requests()
+    );
+    assert!(
+        noiz.error_codes.contains_key("tenant.rate_limited"),
+        "10x offered load over a 5 rps cap must shed: {:?}",
+        noiz.error_codes
+    );
+    assert!(
+        noiz.error_codes.keys().all(|code| code.starts_with("tenant.")),
+        "noisy-tenant sheds must be tenant.* verdicts, got {:?}",
+        noiz.error_codes
+    );
+    handle.stop();
+}
